@@ -1,0 +1,28 @@
+//! The paper's numerical contribution in action: asynchronous update scheme
+//! (img_buff + D-snapshot staleness, G and D on separate PJRT runtimes)
+//! versus the serial baseline, on real training (Fig. 13 shape).
+//!
+//!     cargo run --release --example async_vs_sync -- [--steps 80]
+use paragan::repro::{fig13, Fig13Config};
+use paragan::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let steps = args.get_u64("steps", 80);
+    let cfg = Fig13Config {
+        artifact_dir: args.get_or("artifacts", "artifacts").into(),
+        steps,
+        eval_every: (steps / 4).max(1),
+        ..Default::default()
+    };
+    let (table, results) = fig13(&cfg)?;
+    println!("{}", table.render());
+    for (name, r) in &results {
+        println!(
+            "{name:5}: {:.2} steps/s | FID curve: {}",
+            r.steps_per_sec(),
+            r.fid.points.iter().map(|p| format!("{}:{:.1}", p.step, p.value)).collect::<Vec<_>>().join("  ")
+        );
+    }
+    Ok(())
+}

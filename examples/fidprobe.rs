@@ -1,0 +1,18 @@
+//! FID-proxy sanity probe: a random generator must score far from the real
+//! data; the real data against itself must score ~0.
+fn main() -> anyhow::Result<()> {
+    use paragan::coordinator::trainer::*;
+    use paragan::runtime::*;
+    let dir = std::path::PathBuf::from("artifacts");
+    let m = Manifest::load(&dir)?;
+    let model = m.model("dcgan32")?;
+    let rt = Runtime::new(&dir)?;
+    let pipeline = make_pipeline(model, 8, 1);
+    let ev = Evaluator::fit(&rt, model, &pipeline, 4)?;
+    let mut rng = paragan::util::rng::Rng::new(9);
+    let g = ParamStore::init(&model.params_g, &mut rng);
+    let (fid, cov) = ev.evaluate(&rt, model, &g, &mut rng, 4)?;
+    println!("random-G FID {fid:.4} cov {cov:.3}");
+    pipeline.shutdown();
+    Ok(())
+}

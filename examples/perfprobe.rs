@@ -1,0 +1,81 @@
+//! §Perf probe (EXPERIMENTS.md §Perf): breaks a d_step/g_step invocation
+//! into host->literal staging, PJRT execute, and writeback, to locate the
+//! L3 hot path, and times the generator forward alone to split fwd vs bwd.
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use paragan::runtime::*;
+use paragan::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let m = Manifest::load(&dir)?;
+    let model = m.model("dcgan32")?;
+    let rt = Runtime::new(&dir)?;
+    let mut rng = Rng::new(1);
+
+    let mut d_params = ParamStore::init(&model.params_d, &mut rng);
+    let mut g_params = ParamStore::init(&model.params_g, &mut rng);
+    let opt = &model.optimizers["adam"];
+    let mut d_slots = ParamStore::init_slots(&model.params_d, &d_params, &opt.slot_init);
+    let mut g_slots = ParamStore::init_slots(&model.params_g, &g_params, &opt.slot_init);
+
+    let n = model.batch * 3 * 32 * 32;
+    let mut img = vec![0f32; n];
+    rng.fill_gaussian(&mut img, 0.0, 0.5);
+    let mut data = BTreeMap::new();
+    data.insert("real".into(), HostTensor::new("real", vec![model.batch, 3, 32, 32], img.clone()));
+    data.insert("fake".into(), HostTensor::new("fake", vec![model.batch, 3, 32, 32], img));
+    let mut zdat = vec![0f32; model.batch * model.z_dim];
+    rng.fill_gaussian(&mut zdat, 0.0, 1.0);
+    let mut gdata = BTreeMap::new();
+    gdata.insert("z".into(), HostTensor::new("z", vec![model.batch, model.z_dim], zdat));
+
+    let d_spec = model.artifact("d_step_adam_fp32")?;
+    let g_spec = model.artifact("g_step_adam_fp32")?;
+
+    // Warm-up (compiles).
+    run_step(&rt, d_spec, 1.0, 2e-4, &mut d_params, &mut d_slots, None, &data)?;
+    run_step(&rt, g_spec, 1.0, 2e-4, &mut g_params, &mut g_slots, Some(&d_params), &gdata)?;
+    let stats0 = rt.stats();
+    println!("compile: {} artifacts in {:.2}s", stats0.compiles, stats0.compile_secs);
+
+    let iters = 20;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        run_step(&rt, d_spec, (i + 2) as f32, 2e-4, &mut d_params, &mut d_slots, None, &data)?;
+    }
+    let d_total = t0.elapsed().as_secs_f64() / iters as f64;
+    let t1 = Instant::now();
+    for i in 0..iters {
+        run_step(&rt, g_spec, (i + 2) as f32, 2e-4, &mut g_params, &mut g_slots, Some(&d_params), &gdata)?;
+    }
+    let g_total = t1.elapsed().as_secs_f64() / iters as f64;
+    let stats = rt.stats();
+    let exec_frac = (stats.execute_secs - stats0.execute_secs) / (d_total + g_total) / iters as f64;
+    println!("d_step: {:.1} ms/step   g_step: {:.1} ms/step", d_total * 1e3, g_total * 1e3);
+    println!(
+        "PJRT execute share of step time: {:.1}%  (rest = literal staging + writeback, the L3-owned part)",
+        100.0 * exec_frac
+    );
+    // Literal staging cost in isolation.
+    let t2 = Instant::now();
+    let reps = 200;
+    for _ in 0..reps {
+        for t in d_params.iter().chain(d_slots.iter().flat_map(|s| s.iter())) {
+            let _ = rt.literal(t)?;
+        }
+    }
+    println!(
+        "literal staging (D params+slots): {:.3} ms/step-equivalent",
+        t2.elapsed().as_secs_f64() / reps as f64 * 1e3
+    );
+    // Generator forward alone (generate artifact) to split fwd vs bwd cost.
+    let gen_spec = model.artifact("generate_fp32")?;
+    let t3 = Instant::now();
+    for _ in 0..iters {
+        let _ = run_inference(&rt, gen_spec, &g_params, &gdata)?;
+    }
+    println!("generate (G fwd only): {:.1} ms", t3.elapsed().as_secs_f64() / iters as f64 * 1e3);
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Congestion-aware data pipeline demo (Fig. 11): a REAL prefetch pool races
+//! a trainer-speed consumer over a storage link that keeps slipping into
+//! congestion; watch the tuner grow and release resources.
+//!
+//!     cargo run --release --example pipeline_demo
+use paragan::repro::{fig11, Fig11Config};
+
+fn main() {
+    let cfg = Fig11Config::default();
+    println!(
+        "storage link: median {:.1}us, congested x{:.0} (markov p_enter {}, p_exit {})\n",
+        cfg.congestion.base_median * 1e6,
+        cfg.congestion.congested_factor,
+        cfg.congestion.p_enter,
+        cfg.congestion.p_exit
+    );
+    let (table, res) = fig11(&cfg);
+    println!("{}", table.render());
+    println!(
+        "tuner activity: grew {} times; final prefetch workers: {}",
+        res.tuned_grows, res.tuned_final_workers
+    );
+}

@@ -1,0 +1,30 @@
+//! Quickstart: train a small GAN end-to-end through the three-layer stack
+//! (rust coordinator -> PJRT -> AOT'd JAX/Pallas HLO) in ~a minute.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+use paragan::coordinator::OptimizationPolicy;
+use paragan::gan::{Estimator, UpdateScheme};
+use paragan::metrics::tracker::sparkline;
+
+fn main() -> anyhow::Result<()> {
+    // Listing-1-shaped API: pick a backbone, a policy, train.
+    let result = Estimator::new("dcgan32")
+        .artifact_dir("artifacts")
+        .policy(OptimizationPolicy::paper_asymmetric()) // AdaBelief(G) + Adam(D)
+        .scheme(UpdateScheme::Sync)
+        .steps(40)
+        .eval_every(20)
+        .eval_batches(2)
+        .log_every(10)
+        .train()?;
+
+    let g: Vec<f64> = result.g_loss.downsample(40).iter().map(|p| p.value).collect();
+    let d: Vec<f64> = result.d_loss.downsample(40).iter().map(|p| p.value).collect();
+    println!("\n== quickstart: dcgan32, 40 steps ==");
+    println!("g_loss {}  last {:.4}", sparkline(&g), result.g_loss.last().unwrap());
+    println!("d_loss {}  last {:.4}", sparkline(&d), result.d_loss.last().unwrap());
+    println!("FID-proxy {:.2}  mode coverage {:.2}", result.final_fid(),
+        result.mode_cov.last().unwrap_or(f64::NAN));
+    println!("throughput: {:.2} steps/s, {:.1} img/s", result.steps_per_sec(), result.images_per_sec());
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Pod-scale scaling study on the cluster simulator: reproduces the shapes
+//! of Figs. 1, 8, 9 in seconds on a laptop.
+//!
+//!     cargo run --release --example scaling_sim
+fn main() {
+    let (t1, _) = paragan::repro::fig1(16, 300);
+    println!("{}", t1.render());
+    let (t8, _) = paragan::repro::fig8(300);
+    println!("{}", t8.render());
+    let (t9, _) = paragan::repro::fig9(16, 300);
+    println!("{}", t9.render());
+}

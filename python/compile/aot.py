@@ -1,0 +1,321 @@
+"""AOT compiler: lower every (model, optimizer, precision) training step to
+HLO **text** + a JSON manifest the rust runtime loads.
+
+This is the single point where Python runs — ``make artifacts`` — and it runs
+once.  After that the rust binary is self-contained: it parses
+``artifacts/manifest.json``, loads each ``*.hlo.txt`` through
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client, and owns
+the whole training loop.
+
+HLO *text*, never ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifact interface convention (what the manifest encodes):
+
+  * every argument and result is a f32 tensor (casts live inside the graph),
+  * arguments are FLAT and ordered; each manifest entry carries a ``role``:
+      - ``step``            — 1-based step counter, f32 scalar
+      - ``param:<name>``    — network parameter
+      - ``slot<k>:<name>``  — optimizer state slot k for parameter <name>
+      - ``in:<name>``       — data input (real, fake, z, y_onehot, images)
+      - ``out:<name>``      — extra outputs (loss, logits, images, features)
+  * results are a flat tuple: updated params (spec order), updated slots
+    (slot-major), then the extra outputs.
+
+The rust ``runtime::artifact`` module is the mirror image of this file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (MODELS, ModelDef, make_d_step, make_g_step, make_generate,
+                    make_fid_features, FID_FEAT_DIM)
+from .optimizers import OPTIMIZERS, HParams
+from .precision import PRECISIONS, Precision
+
+DEFAULT_BATCH = 32
+
+# Export sets: which (optimizer, precision) step variants each backbone gets.
+# dcgan32 carries the full optimizer zoo (Fig. 6 sweeps); the heavier
+# backbones carry the pair the paper's asymmetric policy actually uses.
+EXPORT_SETS = {
+    "dcgan32": {
+        "opts": ["adam", "adabelief", "radam", "lookahead", "lars"],
+        "precs": ["fp32", "bf16"],
+        "bf16_opts": ["adam", "adabelief"],
+    },
+    "sngan32": {"opts": ["adam", "adabelief"], "precs": ["fp32"], "bf16_opts": []},
+    "biggan32": {"opts": ["adam", "adabelief"], "precs": ["fp32"], "bf16_opts": []},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides payloads as
+    # "{...}", which the rust-side text parser would silently read back as
+    # zeros — the FID feature net's baked weights live in constants.
+    text = comp.as_hlo_text(True)
+    assert "constant({...})" not in text, "elided constant in HLO text"
+    return text
+
+
+def _sds(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _spec_entries(prefix: str, spec) -> List[dict]:
+    return [{"role": f"{prefix}:{name}", "shape": list(shape), "dtype": "f32"}
+            for name, shape, _ in spec]
+
+
+def _slot_entries(spec, n_slots: int) -> List[dict]:
+    out = []
+    for k in range(n_slots):
+        out += _spec_entries(f"slot{k}", spec)
+    return out
+
+
+def _hp_for(model: ModelDef, prec: Precision) -> HParams:
+    # GAN-customary betas: 0.5 for BCE/DCGAN, 0.0 for hinge (BigGAN/SNGAN).
+    b1 = 0.5 if model.loss == "bce" else 0.0
+    return HParams(lr=2e-4, b1=b1, eps=prec.adam_eps())
+
+
+class Exporter:
+    def __init__(self, out_dir: str, batch: int):
+        self.out_dir = out_dir
+        self.batch = batch
+        self.manifest = {"version": 1, "batch": batch, "models": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _write(self, name: str, lowered, inputs: List[dict], outputs: List[dict]) -> dict:
+        text = to_hlo_text(lowered)
+        # Arity self-check: the ENTRY computation must keep every manifest
+        # input (XLA prunes dead parameters, which would desync the rust
+        # plumbing).  Count parameters only inside the ENTRY computation —
+        # fusion/reduction subcomputations have their own.
+        entry = text[text.index("ENTRY "):]
+        entry = entry[: entry.index("\n}") + 1] if "\n}" in entry else entry
+        n_hlo_params = entry.count("parameter(")
+        if n_hlo_params != len(inputs):
+            raise RuntimeError(
+                f"{name}: ENTRY has {n_hlo_params} parameters, manifest expects "
+                f"{len(inputs)} — a dead input was pruned")
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        print(f"  wrote {fname}  ({len(text) // 1024} KiB, sha {digest})")
+        return {"file": fname, "inputs": inputs, "outputs": outputs, "sha256_16": digest}
+
+    # ------------------------------------------------------------------
+    def export_model(self, model: ModelDef):
+        cfg = EXPORT_SETS[model.name]
+        b = self.batch
+        c, h, w = model.img_shape
+        img_sds = _sds((b, c, h, w))
+        z_sds = _sds((b, model.z_dim))
+        y_sds = _sds((b, model.n_classes)) if model.conditional else None
+
+        mrec = {
+            "z_dim": model.z_dim,
+            "img_shape": list(model.img_shape),
+            "n_classes": model.n_classes,
+            "loss": model.loss,
+            "batch": b,
+            "params_g": [{"name": n, "shape": list(s), "init": i} for n, s, i in model.g_spec],
+            "params_d": [{"name": n, "shape": list(s), "init": i} for n, s, i in model.d_spec],
+            "optimizers": {},
+            "artifacts": {},
+            "fid_feat_dim": FID_FEAT_DIM,
+        }
+
+        for opt in cfg["opts"]:
+            _, _, n_slots = OPTIMIZERS[opt]
+            # Slot init rule: lookahead slot 2 starts as a copy of params.
+            slot_init = ["zeros"] * n_slots
+            if opt == "lookahead":
+                slot_init[2] = "copy_params"
+            mrec["optimizers"][opt] = {"n_slots": n_slots, "slot_init": slot_init}
+
+        for prec_name in cfg["precs"]:
+            prec = PRECISIONS[prec_name]
+            hp = _hp_for(model, prec)
+            opts = cfg["opts"] if prec_name == "fp32" else cfg["bf16_opts"]
+            for opt in opts:
+                self._export_d_step(model, mrec, opt, prec, hp, img_sds, y_sds)
+                self._export_g_step(model, mrec, opt, prec, hp, z_sds, y_sds)
+
+        self._export_generate(model, mrec, PRECISIONS["fp32"], z_sds, y_sds)
+        self._export_fid(model, mrec, img_sds)
+        self.manifest["models"][model.name] = mrec
+
+    # ------------------------------------------------------------------
+    def _export_d_step(self, model, mrec, opt, prec, hp, img_sds, y_sds):
+        name = f"{model.name}_d_step_{opt}_{prec.name}"
+        print(f"lowering {name} ...")
+        _, _, n_slots = OPTIMIZERS[opt]
+        d_step = make_d_step(model, opt, prec, hp)
+        spec = model.d_spec
+        np_ = len(spec)
+
+        def flat(*args):
+            i = 0
+            step = args[i]; i += 1
+            # Tie lr to step so neither scalar is dead (optimizers like LARS
+            # ignore `step`; XLA would prune the parameter and break the
+            # manifest arity).
+            lr = args[i] + 0.0 * step; i += 1
+            params = {spec[j][0]: args[i + j] for j in range(np_)}; i += np_
+            slots = tuple({spec[j][0]: args[i + k * np_ + j] for j in range(np_)}
+                          for k in range(n_slots)); i += n_slots * np_
+            real = args[i]; fake = args[i + 1]; i += 2
+            y = args[i] if y_sds is not None else None
+            new_p, new_s, loss, rl, fl = d_step(step, lr, params, slots, real, fake, y)
+            out = tuple(new_p[n] for n, _, _ in spec)
+            for k in range(n_slots):
+                out += tuple(new_s[k][n] for n, _, _ in spec)
+            return out + (loss, rl, fl)
+
+        inputs = [{"role": "step", "shape": [], "dtype": "f32"},
+                  {"role": "lr", "shape": [], "dtype": "f32"}]
+        inputs += _spec_entries("param", spec)
+        inputs += _slot_entries(spec, n_slots)
+        inputs += [{"role": "in:real", "shape": list(img_sds.shape), "dtype": "f32"},
+                   {"role": "in:fake", "shape": list(img_sds.shape), "dtype": "f32"}]
+        if y_sds is not None:
+            inputs += [{"role": "in:y", "shape": list(y_sds.shape), "dtype": "f32"}]
+        outputs = _spec_entries("param", spec) + _slot_entries(spec, n_slots)
+        outputs += [{"role": "out:loss", "shape": [], "dtype": "f32"},
+                    {"role": "out:real_logits", "shape": [img_sds.shape[0]], "dtype": "f32"},
+                    {"role": "out:fake_logits", "shape": [img_sds.shape[0]], "dtype": "f32"}]
+
+        args = [_sds(e["shape"]) for e in inputs]
+        lowered = jax.jit(flat).lower(*args)
+        mrec["artifacts"][f"d_step_{opt}_{prec.name}"] = self._write(name, lowered, inputs, outputs)
+
+    def _export_g_step(self, model, mrec, opt, prec, hp, z_sds, y_sds):
+        name = f"{model.name}_g_step_{opt}_{prec.name}"
+        print(f"lowering {name} ...")
+        _, _, n_slots = OPTIMIZERS[opt]
+        g_step = make_g_step(model, opt, prec, hp)
+        gspec, dspec = model.g_spec, model.d_spec
+        ng, nd = len(gspec), len(dspec)
+
+        def flat(*args):
+            i = 0
+            step = args[i]; i += 1
+            lr = args[i] + 0.0 * step; i += 1  # keep both scalars alive
+            gp = {gspec[j][0]: args[i + j] for j in range(ng)}; i += ng
+            slots = tuple({gspec[j][0]: args[i + k * ng + j] for j in range(ng)}
+                          for k in range(n_slots)); i += n_slots * ng
+            dp = {dspec[j][0]: args[i + j] for j in range(nd)}; i += nd
+            z = args[i]; i += 1
+            y = args[i] if y_sds is not None else None
+            new_p, new_s, loss, fake = g_step(step, lr, gp, slots, dp, z, y)
+            out = tuple(new_p[n] for n, _, _ in gspec)
+            for k in range(n_slots):
+                out += tuple(new_s[k][n] for n, _, _ in gspec)
+            return out + (loss, fake)
+
+        b = z_sds.shape[0]
+        c, h, w = model.img_shape
+        inputs = [{"role": "step", "shape": [], "dtype": "f32"},
+                  {"role": "lr", "shape": [], "dtype": "f32"}]
+        inputs += _spec_entries("param", gspec)
+        inputs += _slot_entries(gspec, n_slots)
+        inputs += _spec_entries("dparam", dspec)
+        inputs += [{"role": "in:z", "shape": list(z_sds.shape), "dtype": "f32"}]
+        if y_sds is not None:
+            inputs += [{"role": "in:y", "shape": list(y_sds.shape), "dtype": "f32"}]
+        outputs = _spec_entries("param", gspec) + _slot_entries(gspec, n_slots)
+        outputs += [{"role": "out:loss", "shape": [], "dtype": "f32"},
+                    {"role": "out:fake", "shape": [b, c, h, w], "dtype": "f32"}]
+
+        args = [_sds(e["shape"]) for e in inputs]
+        lowered = jax.jit(flat).lower(*args)
+        mrec["artifacts"][f"g_step_{opt}_{prec.name}"] = self._write(name, lowered, inputs, outputs)
+
+    def _export_generate(self, model, mrec, prec, z_sds, y_sds):
+        name = f"{model.name}_generate_{prec.name}"
+        print(f"lowering {name} ...")
+        gen = make_generate(model, prec)
+        gspec = model.g_spec
+        ng = len(gspec)
+
+        def flat(*args):
+            gp = {gspec[j][0]: args[j] for j in range(ng)}
+            z = args[ng]
+            y = args[ng + 1] if y_sds is not None else None
+            return (gen(gp, z, y),)
+
+        b = z_sds.shape[0]
+        c, h, w = model.img_shape
+        inputs = _spec_entries("param", gspec)
+        inputs += [{"role": "in:z", "shape": list(z_sds.shape), "dtype": "f32"}]
+        if y_sds is not None:
+            inputs += [{"role": "in:y", "shape": list(y_sds.shape), "dtype": "f32"}]
+        outputs = [{"role": "out:images", "shape": [b, c, h, w], "dtype": "f32"}]
+        args = [_sds(e["shape"]) for e in inputs]
+        lowered = jax.jit(flat).lower(*args)
+        mrec["artifacts"][f"generate_{prec.name}"] = self._write(name, lowered, inputs, outputs)
+
+    def _export_fid(self, model, mrec, img_sds):
+        name = f"{model.name}_fid_features"
+        print(f"lowering {name} ...")
+        feats = make_fid_features(model.img_shape)
+
+        def flat(images):
+            return (feats(images),)
+
+        b = img_sds.shape[0]
+        inputs = [{"role": "in:images", "shape": list(img_sds.shape), "dtype": "f32"}]
+        outputs = [{"role": "out:features", "shape": [b, FID_FEAT_DIM], "dtype": "f32"}]
+        lowered = jax.jit(flat).lower(_sds(inputs[0]["shape"]))
+        mrec["artifacts"]["fid_features"] = self._write(name, lowered, inputs, outputs)
+
+    # ------------------------------------------------------------------
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path} ({len(self.manifest['models'])} models)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="ParaGAN AOT exporter (L2 -> HLO text)")
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--models", default="dcgan32,sngan32,biggan32",
+                    help="comma-separated subset of models to export")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args(argv)
+
+    ex = Exporter(args.out, args.batch)
+    for mname in args.models.split(","):
+        mname = mname.strip()
+        if not mname:
+            continue
+        print(f"== exporting {mname} ==")
+        ex.export_model(MODELS[mname]())
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1: conv2d / conv2d_transpose built on the layout-aware Pallas matmul.
+
+GAN compute is conv-dominated (paper Fig. 4), and on TPU a convolution is an
+im2col + MXU matmul.  We express that directly: patch extraction is a cheap,
+differentiable data-movement op (``conv_general_dilated_patches``), and ALL
+FLOPs flow through ``layout_matmul`` — so the paper's layout transformation
+applies to every conv in the model, forward and backward.
+
+Transposed conv (the generator's upsampling op) is implemented as
+zero-insertion (lhs dilation) + a stride-1 conv with the spatially-flipped,
+channel-swapped kernel — the classic fractionally-strided-conv identity — so
+it reuses the same Pallas matmul.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .layout_matmul import layout_matmul, layout_matmul_bf16
+
+
+def _mm(compute_dtype: str):
+    return layout_matmul_bf16 if compute_dtype == "bfloat16" else layout_matmul
+
+
+def conv2d(x, w, b=None, stride: int = 1, padding: int = 0, compute_dtype: str = "float32"):
+    """NCHW conv, OIHW weights, symmetric padding; FLOPs via Pallas matmul.
+
+    x: (B, C, H, W); w: (O, I, kh, kw) -> (B, O, OH, OW) in f32.
+    """
+    bsz, cin, h, wdim = x.shape
+    cout, cin2, kh, kw = w.shape
+    assert cin == cin2, (x.shape, w.shape)
+    # (B, C*kh*kw, OH, OW); feature dim ordered C-major then kh, kw — matches
+    # w.reshape(O, I*kh*kw) below.
+    patches = lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    oh, ow = patches.shape[2], patches.shape[3]
+    cols = patches.transpose(0, 2, 3, 1).reshape(bsz * oh * ow, cin * kh * kw)
+    wcols = w.astype(jnp.float32).reshape(cout, cin * kh * kw).T
+    out = _mm(compute_dtype)(cols, wcols)  # (B*OH*OW, O)
+    out = out.reshape(bsz, oh, ow, cout).transpose(0, 3, 1, 2)
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out
+
+
+def conv2d_transpose(x, w, b=None, stride: int = 2, padding: int = 1, compute_dtype: str = "float32"):
+    """Fractionally-strided conv: OIHW ``w`` with O = C_in(x), I = C_out.
+
+    Output spatial size: (H-1)*stride - 2*padding + k.
+    """
+    cin, cout, kh, kw = w.shape[0], w.shape[1], w.shape[2], w.shape[3]
+    assert x.shape[1] == cin, (x.shape, w.shape)
+    bsz, _, h, wdim = x.shape
+    if stride > 1:
+        up_h, up_w = (h - 1) * stride + 1, (wdim - 1) * stride + 1
+        up = jnp.zeros((bsz, cin, up_h, up_w), dtype=x.dtype)
+        up = up.at[:, :, ::stride, ::stride].set(x)
+    else:
+        up = x
+    # Flip spatially, swap channel axes: (I=cout, O=cin) -> OIHW for conv2d.
+    wt = jnp.flip(w, axis=(2, 3)).swapaxes(0, 1)  # (cout, cin, kh, kw)
+    return conv2d(up, wt, b, stride=1, padding=kh - 1 - padding, compute_dtype=compute_dtype)
+
+
+def dense(x, w, b=None, compute_dtype: str = "float32"):
+    """(B, F) x (F, O) dense layer through the Pallas matmul."""
+    out = _mm(compute_dtype)(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.reshape(1, -1)
+    return out

@@ -1,0 +1,239 @@
+"""L1 Pallas kernel: hardware-aware layout-transformed tiled matmul.
+
+This is ParaGAN's "hardware-aware layout transformation" (paper §4.2) pushed
+down to the kernel level.  TPU vector memory is tiled (sublane=8, lane=128):
+an operand whose trailing dims are not multiples of (8, 128) is padded by the
+hardware anyway, silently wasting MXU cycles.  ParaGAN makes the padding
+explicit and *plans* it:
+
+  * operands are padded up-front to (8, 128) multiples (`pad2d`),
+  * the matmul runs as a Pallas grid over (M/bm, N/bn, K/bk) VMEM-resident
+    blocks chosen by `plan_matmul` to fit a VMEM budget,
+  * the MXU is modelled by casting blocks to ``compute_dtype`` (bf16 on real
+    TPU) and accumulating in f32 (``preferred_element_type``),
+  * the result is sliced back to the logical shape.
+
+The kernel is wrapped in a ``jax.custom_vjp`` so the backward pass is *also*
+three Pallas matmuls (dx = g·Wᵀ, dW = xᵀ·g) — the whole GAN fwd+bwd lowers to
+layout-aware kernels.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).  Real-TPU performance is
+estimated from the plan's VMEM footprint and MXU occupancy (`vmem_bytes`,
+`mxu_occupancy`) — never from interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU vector-register tiling (paper §3.3: "multiple of 128 on the lane
+# dimension and 8 on the sublane dimension").
+SUBLANE = 8
+LANE = 128
+
+# Per-core VMEM budget used by the block planner (TPUv3 has 16 MiB/core; we
+# plan against half to leave room for double-buffering).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# MXU systolic array is 128x128.
+MXU_DIM = 128
+
+
+def round_up(n: int, m: int) -> int:
+    """Round ``n`` up to the next multiple of ``m``."""
+    return ((n + m - 1) // m) * m
+
+
+def pad2d(x: jnp.ndarray, row_tile: int = SUBLANE, col_tile: int = LANE):
+    """Zero-pad the trailing 2 dims of ``x`` to (row_tile, col_tile) multiples.
+
+    Returns ``(padded, (orig_rows, orig_cols))``.
+    """
+    r, c = x.shape[-2], x.shape[-1]
+    rp, cp = round_up(r, row_tile), round_up(c, col_tile)
+    if (rp, cp) == (r, c):
+        return x, (r, c)
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, rp - r), (0, cp - c)]
+    return jnp.pad(x, pad), (r, c)
+
+
+def _divisor_block(dim: int, pref: int, tile: int) -> int:
+    """Largest multiple of ``tile`` that divides ``dim`` and is <= ``pref``.
+
+    ``dim`` must itself be a multiple of ``tile`` (post-padding), so ``tile``
+    is always a valid fallback.
+    """
+    assert dim % tile == 0, (dim, tile)
+    best = tile
+    b = tile
+    while b <= min(dim, pref):
+        if dim % b == 0:
+            best = b
+        b += tile
+    return best
+
+
+@dataclass(frozen=True)
+class MatmulPlan:
+    """Block plan for a padded (M, K) x (K, N) matmul."""
+
+    m: int
+    k: int
+    n: int  # logical dims
+    mp: int
+    kp: int
+    np_: int  # padded dims
+    bm: int
+    bk: int
+    bn: int  # block dims
+    compute_dtype: str = "float32"
+
+    @property
+    def grid(self):
+        return (self.mp // self.bm, self.np_ // self.bn, self.kp // self.bk)
+
+    def vmem_bytes(self) -> int:
+        """VMEM residency of one grid step: x-block + w-block + out-block.
+
+        Blocks are held at compute precision except the f32 accumulator.
+        """
+        esz = 2 if self.compute_dtype == "bfloat16" else 4
+        return self.bm * self.bk * esz + self.bk * self.bn * esz + self.bm * self.bn * 4
+
+    def mxu_occupancy(self) -> float:
+        """Fraction of MXU work that is non-padding: real FLOPs / padded FLOPs."""
+        real = 2.0 * self.m * self.k * self.n
+        padded = 2.0 * self.mp * self.kp * self.np_
+        return real / padded
+
+    def padding_waste(self) -> float:
+        return 1.0 - self.mxu_occupancy()
+
+
+def plan_matmul(m: int, k: int, n: int, compute_dtype: str = "float32") -> MatmulPlan:
+    """Choose padded dims and VMEM-budgeted block sizes for an (m,k)x(k,n) matmul."""
+    mp = round_up(m, SUBLANE)
+    kp = round_up(k, LANE)
+    np_ = round_up(n, LANE)
+    # Prefer tall M-blocks (fewer grid trips over the batch*spatial rows —
+    # §Perf iterations 1+3: 256 -> 1024 -> 2048 cut interpret-mode grid trips 8x),
+    # then shrink K-block until the plan fits VMEM.
+    bm = _divisor_block(mp, 2048, SUBLANE)
+    bn = _divisor_block(np_, 256, LANE)
+    pref_k = 2048
+    while True:
+        bk = _divisor_block(kp, pref_k, LANE)
+        plan = MatmulPlan(m, k, n, mp, kp, np_, bm, bk, bn, compute_dtype)
+        if plan.vmem_bytes() <= VMEM_BUDGET_BYTES or bk == LANE:
+            return plan
+        pref_k = bk - LANE
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int, compute_dtype):
+    """Grid point (i, j, kidx): o[i,j] += x[i,kidx] @ w[kidx,j].
+
+    The output block's index_map ignores the k axis, so the same VMEM-resident
+    o-block accumulates across the innermost grid dimension (standard Pallas
+    reduction pattern); f32 accumulation models the MXU datapath.
+    """
+    kidx = pl.program_id(2)
+
+    @pl.when(kidx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...].astype(compute_dtype)
+    wb = w_ref[...].astype(compute_dtype)
+    o_ref[...] += jnp.dot(xb, wb, preferred_element_type=jnp.float32)
+
+
+def _matmul_padded(xp: jnp.ndarray, wp: jnp.ndarray, plan: MatmulPlan) -> jnp.ndarray:
+    """Run the Pallas kernel on pre-padded operands; returns padded (MP, NP) f32."""
+    cdt = jnp.dtype(plan.compute_dtype)
+    gm, gn, gk = plan.grid
+    kernel = functools.partial(_matmul_kernel, nk=gk, compute_dtype=cdt)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((plan.bm, plan.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((plan.bk, plan.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((plan.bm, plan.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((plan.mp, plan.np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp)
+
+
+def _layout_matmul_impl(x: jnp.ndarray, w: jnp.ndarray, compute_dtype: str) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    # §Perf iteration 2 (orientation selection — swap operand roles when the
+    # output is skinny, e.g. the RGB head's n=3 padding to 128) was tried
+    # and REVERTED: it reduces padded FLOPs 16x on that layer but interpret
+    # mode is grid-iteration-bound, and the transposed plan has 4x more grid
+    # trips (g_step 7.4s -> 13.2s measured).  On real TPU hardware the
+    # padded-FLOP metric governs; the planner note in EXPERIMENTS.md §Perf
+    # records both numbers.
+    plan = plan_matmul(m, k, n, compute_dtype)
+    xp, _ = pad2d(x.astype(jnp.float32), SUBLANE, LANE)
+    # w is padded K->sublane-of-x's-lane: K pads to LANE to match x's cols.
+    wp, _ = pad2d(w.astype(jnp.float32), LANE, LANE)
+    # pad2d leaves K at round_up(k, LANE) for both operands.
+    out = _matmul_padded(xp, wp, plan)
+    return out[:m, :n]
+
+
+def make_layout_matmul(compute_dtype: str = "float32"):
+    """Build a differentiable layout-aware matmul with the given MXU precision.
+
+    The returned ``fn(x, w) -> x @ w`` has a custom VJP whose backward pass is
+    two more layout-aware Pallas matmuls.
+    """
+
+    @jax.custom_vjp
+    def layout_matmul(x, w):
+        return _layout_matmul_impl(x, w, compute_dtype)
+
+    def fwd(x, w):
+        return _layout_matmul_impl(x, w, compute_dtype), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        g = g.astype(jnp.float32)
+        dx = _layout_matmul_impl(g, w.T, compute_dtype)
+        dw = _layout_matmul_impl(x.T, g, compute_dtype)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    layout_matmul.defvjp(fwd, bwd)
+    return layout_matmul
+
+
+# Default instances.
+layout_matmul = make_layout_matmul("float32")
+layout_matmul_bf16 = make_layout_matmul("bfloat16")
+
+
+def opportunistic_batch_matmul(xs, w, compute_dtype: str = "float32"):
+    """Paper §4.2: "if two input matrices are to multiply the same weight, we
+    can concatenate the two input matrices before the matrix multiplication".
+
+    Concatenates ``xs`` along rows, runs ONE layout matmul (one kernel launch,
+    better M-padding amortization), and splits the result back.
+    """
+    mm = layout_matmul_bf16 if compute_dtype == "bfloat16" else layout_matmul
+    rows = [x.shape[0] for x in xs]
+    out = mm(jnp.concatenate(xs, axis=0), w)
+    splits = []
+    off = 0
+    for r in rows:
+        splits.append(out[off : off + r])
+        off += r
+    return splits

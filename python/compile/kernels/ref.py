@@ -1,0 +1,52 @@
+"""Pure-jnp/lax oracles for the Pallas kernels (pytest compares against these).
+
+Everything here is the *reference semantics*: plain XLA ops with no layout
+planning, no tiling, no precision games.  The kernels in this package must be
+``allclose`` to these for every shape/dtype the tests sweep.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference (M,K)x(K,N) matmul in f32."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def ref_conv2d(x, w, b=None, stride: int = 1, padding: int = 0):
+    """Reference NCHW/OIHW conv with symmetric padding."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out
+
+
+def ref_conv2d_transpose(x, w, b=None, stride: int = 2, padding: int = 1):
+    """Reference fractionally-strided (transposed) conv.
+
+    ``w`` is OIHW with O = input channels of ``x`` (gradient-of-conv
+    convention): equivalent to conv with lhs_dilation=stride, padding
+    k-1-p, spatially-flipped kernel, and I/O channel axes swapped.
+    """
+    kh, kw = w.shape[2], w.shape[3]
+    wt = jnp.flip(w, axis=(2, 3)).swapaxes(0, 1)  # -> (I_out, O_in, kh, kw)
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        wt.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding=[(kh - 1 - padding, kh - 1 - padding), (kw - 1 - padding, kw - 1 - padding)],
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        out = out + b.reshape(1, -1, 1, 1)
+    return out

@@ -1,0 +1,424 @@
+"""L2: GAN model zoo — generator/discriminator fwd+bwd+optimizer as JAX.
+
+This is ParaGAN's "network backbones" layer (paper §3.1.2).  Three backbones,
+scaled to what one CPU core can train end-to-end (the full-size BigGAN-128
+appears in the rust cluster simulator's analytical workload models instead —
+see DESIGN.md §1):
+
+  * ``dcgan32``  — unconditional DCGAN (Radford et al. 2015), BCE loss.
+  * ``sngan32``  — DCGAN topology with spectrally-normalized discriminator
+                   (Miyato et al. 2018), hinge loss.
+  * ``biggan32`` — class-conditional residual GAN in the BigGAN style (Brock
+                   et al. 2019): FiLM-conditioned G res-blocks, projection
+                   discriminator, spectral norm, hinge loss.
+
+Every FLOP flows through the L1 Pallas kernels (`conv2d`, `conv2d_transpose`,
+`dense`), so the paper's hardware-aware layout transformation applies to the
+whole fwd+bwd.  The training *step* functions (``make_d_step`` /
+``make_g_step``) close over an optimizer from `optimizers.py` and a
+`precision.Precision` policy; `aot.py` lowers each combination to HLO text.
+
+The step signatures are shaped for the paper's ASYNC UPDATE SCHEME (§5.1):
+``d_step`` takes fake images as a *tensor input* (rust's ``img_buff``) rather
+than regenerating them, and ``g_step`` takes a *snapshot* of discriminator
+params (rust's weight snapshot) — so the rust coordinator can run G and D
+steps in parallel on stale buffers, exactly as Fig. 5 (right) describes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.conv2d import conv2d, conv2d_transpose, dense
+from .optimizers import OPTIMIZERS, HParams, clip_by_global_norm
+from .precision import Precision
+
+# ---------------------------------------------------------------------------
+# Param specs and init
+# ---------------------------------------------------------------------------
+
+# (name, shape, init) with init in {"normal:<std>", "zeros", "ones"}.
+ParamSpec = List[Tuple[str, Tuple[int, ...], str]]
+
+
+def init_params(spec: ParamSpec, key) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape, init in spec:
+        if init.startswith("normal:"):
+            std = float(init.split(":")[1])
+            key, sub = jax.random.split(key)
+            params[name] = std * jax.random.normal(sub, shape, dtype=jnp.float32)
+        elif init == "zeros":
+            params[name] = jnp.zeros(shape, dtype=jnp.float32)
+        elif init == "ones":
+            params[name] = jnp.ones(shape, dtype=jnp.float32)
+        else:
+            raise ValueError(init)
+    return params
+
+
+def lrelu(x, slope: float = 0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def spectral_norm(w: jnp.ndarray, iters: int = 3) -> jnp.ndarray:
+    """Stateless spectral normalization (SNGAN): power iteration from a fixed
+    start vector, recomputed per step.  Keeping it stateless avoids threading
+    auxiliary ``u`` buffers through the AOT interface; with 3 iterations the
+    estimate is within a few percent of the true sigma for conv-sized
+    matrices, which is what SNGAN needs (a Lipschitz *bound*, not an exact
+    norm)."""
+    wm = w.reshape(w.shape[0], -1)
+    u = jnp.ones((wm.shape[0],), dtype=jnp.float32) / math.sqrt(wm.shape[0])
+    for _ in range(iters):
+        v = wm.T @ u
+        v = v / (jnp.linalg.norm(v) + 1e-12)
+        u = wm @ v
+        u = u / (jnp.linalg.norm(u) + 1e-12)
+    sigma = u @ (wm @ v)
+    return w / (sigma + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Losses (paper's backbones use BCE for DCGAN, hinge for SNGAN/BigGAN)
+# ---------------------------------------------------------------------------
+
+def bce_d_loss(real_logits, fake_logits):
+    return jnp.mean(jax.nn.softplus(-real_logits)) + jnp.mean(jax.nn.softplus(fake_logits))
+
+
+def bce_g_loss(fake_logits):
+    return jnp.mean(jax.nn.softplus(-fake_logits))
+
+
+def hinge_d_loss(real_logits, fake_logits):
+    return jnp.mean(jax.nn.relu(1.0 - real_logits)) + jnp.mean(jax.nn.relu(1.0 + fake_logits))
+
+
+def hinge_g_loss(fake_logits):
+    return -jnp.mean(fake_logits)
+
+
+LOSSES = {"bce": (bce_d_loss, bce_g_loss), "hinge": (hinge_d_loss, hinge_g_loss)}
+
+
+# ---------------------------------------------------------------------------
+# Model definition container
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelDef:
+    """A GAN backbone: param specs + pure apply functions."""
+
+    name: str
+    z_dim: int
+    img_shape: Tuple[int, int, int]  # (C, H, W)
+    n_classes: int  # 0 = unconditional
+    loss: str
+    g_spec: ParamSpec
+    d_spec: ParamSpec
+    # g_apply(params, z, y_onehot|None, precision) -> images in [-1, 1]
+    g_apply: Callable = None
+    # d_apply(params, x, y_onehot|None, precision) -> logits (B,)
+    d_apply: Callable = None
+
+    @property
+    def conditional(self) -> bool:
+        return self.n_classes > 0
+
+
+# ---------------------------------------------------------------------------
+# DCGAN-32 (also the chassis for SNGAN-32)
+# ---------------------------------------------------------------------------
+
+def _dcgan_specs(gf: int = 32, df: int = 32, z_dim: int = 128) -> Tuple[ParamSpec, ParamSpec]:
+    g_spec = [
+        ("g.dense.w", (z_dim, 4 * 4 * gf * 4), "normal:0.02"),
+        ("g.dense.b", (4 * 4 * gf * 4,), "zeros"),
+        ("g.convt1.w", (gf * 4, gf * 2, 4, 4), "normal:0.02"),
+        ("g.convt1.b", (gf * 2,), "zeros"),
+        ("g.convt2.w", (gf * 2, gf, 4, 4), "normal:0.02"),
+        ("g.convt2.b", (gf,), "zeros"),
+        ("g.convt3.w", (gf, 3, 4, 4), "normal:0.02"),
+        ("g.convt3.b", (3,), "zeros"),
+    ]
+    d_spec = [
+        ("d.conv1.w", (df, 3, 4, 4), "normal:0.02"),
+        ("d.conv1.b", (df,), "zeros"),
+        ("d.conv2.w", (df * 2, df, 4, 4), "normal:0.02"),
+        ("d.conv2.b", (df * 2,), "zeros"),
+        ("d.conv3.w", (df * 4, df * 2, 4, 4), "normal:0.02"),
+        ("d.conv3.b", (df * 4,), "zeros"),
+        ("d.dense.w", (df * 4 * 4 * 4, 1), "normal:0.02"),
+        ("d.dense.b", (1,), "zeros"),
+    ]
+    return g_spec, d_spec
+
+
+def _dcgan_g_apply(gf: int):
+    def g_apply(p, z, y_onehot, prec: Precision):
+        n = 4
+        h = dense(z, p["g.dense.w"], p["g.dense.b"], compute_dtype=prec.compute_dtype(0, n))
+        h = jax.nn.relu(h).reshape(z.shape[0], gf * 4, 4, 4)
+        h = h.astype(prec.act_dtype(1, n))
+        h = jax.nn.relu(
+            conv2d_transpose(h, p["g.convt1.w"], p["g.convt1.b"], 2, 1, prec.compute_dtype(1, n))
+        )
+        h = h.astype(prec.act_dtype(2, n))
+        h = jax.nn.relu(
+            conv2d_transpose(h, p["g.convt2.w"], p["g.convt2.b"], 2, 1, prec.compute_dtype(2, n))
+        )
+        h = h.astype(prec.act_dtype(3, n))
+        h = conv2d_transpose(h, p["g.convt3.w"], p["g.convt3.b"], 2, 1, prec.compute_dtype(3, n))
+        return jnp.tanh(h.astype(jnp.float32))
+
+    return g_apply
+
+
+def _dcgan_d_apply(df: int, sn: bool):
+    def d_apply(p, x, y_onehot, prec: Precision):
+        n = 4
+        norm = spectral_norm if sn else (lambda w: w)
+        h = x.astype(prec.act_dtype(0, n))
+        h = lrelu(conv2d(h, norm(p["d.conv1.w"]), p["d.conv1.b"], 2, 1, prec.compute_dtype(0, n)))
+        h = h.astype(prec.act_dtype(1, n))
+        h = lrelu(conv2d(h, norm(p["d.conv2.w"]), p["d.conv2.b"], 2, 1, prec.compute_dtype(1, n)))
+        h = h.astype(prec.act_dtype(2, n))
+        h = lrelu(conv2d(h, norm(p["d.conv3.w"]), p["d.conv3.b"], 2, 1, prec.compute_dtype(2, n)))
+        h = h.astype(prec.act_dtype(3, n)).reshape(x.shape[0], -1)
+        logits = dense(h, norm(p["d.dense.w"]) if sn else p["d.dense.w"], p["d.dense.b"],
+                       compute_dtype=prec.compute_dtype(3, n))
+        return logits[:, 0]
+
+    return d_apply
+
+
+def dcgan32(gf: int = 32, df: int = 32, z_dim: int = 128) -> ModelDef:
+    g_spec, d_spec = _dcgan_specs(gf, df, z_dim)
+    return ModelDef(
+        name="dcgan32", z_dim=z_dim, img_shape=(3, 32, 32), n_classes=0, loss="bce",
+        g_spec=g_spec, d_spec=d_spec,
+        g_apply=_dcgan_g_apply(gf), d_apply=_dcgan_d_apply(df, sn=False),
+    )
+
+
+def sngan32(gf: int = 32, df: int = 32, z_dim: int = 128) -> ModelDef:
+    g_spec, d_spec = _dcgan_specs(gf, df, z_dim)
+    return ModelDef(
+        name="sngan32", z_dim=z_dim, img_shape=(3, 32, 32), n_classes=0, loss="hinge",
+        g_spec=g_spec, d_spec=d_spec,
+        g_apply=_dcgan_g_apply(gf), d_apply=_dcgan_d_apply(df, sn=True),
+    )
+
+
+# ---------------------------------------------------------------------------
+# BigGAN-lite 32 — conditional residual GAN with projection discriminator.
+# ---------------------------------------------------------------------------
+
+def _biggan_specs(ch: int, z_dim: int, n_classes: int, emb_dim: int) -> Tuple[ParamSpec, ParamSpec]:
+    g_spec = [
+        ("g.embed.w", (n_classes, emb_dim), "normal:0.02"),
+        ("g.dense.w", (z_dim + emb_dim, 4 * 4 * ch * 4), "normal:0.02"),
+        ("g.dense.b", (4 * 4 * ch * 4,), "zeros"),
+    ]
+    # Three up-blocks: 4->8->16->32, channels 4ch -> 2ch -> ch -> ch.
+    blocks = [(ch * 4, ch * 2), (ch * 2, ch), (ch, ch)]
+    for i, (cin, cout) in enumerate(blocks, start=1):
+        g_spec += [
+            # FiLM conditioning from the class embedding.
+            (f"g.b{i}.film.w", (emb_dim, 2 * cin), "normal:0.02"),
+            (f"g.b{i}.film.b", (2 * cin,), "zeros"),
+            (f"g.b{i}.conv1.w", (cout, cin, 3, 3), "normal:0.02"),
+            (f"g.b{i}.conv1.b", (cout,), "zeros"),
+            (f"g.b{i}.conv2.w", (cout, cout, 3, 3), "normal:0.02"),
+            (f"g.b{i}.conv2.b", (cout,), "zeros"),
+            (f"g.b{i}.skip.w", (cout, cin, 1, 1), "normal:0.02"),
+        ]
+    g_spec += [
+        ("g.out.w", (3, ch, 3, 3), "normal:0.02"),
+        ("g.out.b", (3,), "zeros"),
+    ]
+    d_spec = []
+    # Three down-blocks: 32->16->8->4, channels 3 -> ch -> 2ch -> 4ch.
+    dblocks = [(3, ch), (ch, ch * 2), (ch * 2, ch * 4)]
+    for i, (cin, cout) in enumerate(dblocks, start=1):
+        d_spec += [
+            (f"d.b{i}.conv1.w", (cout, cin, 3, 3), "normal:0.02"),
+            (f"d.b{i}.conv1.b", (cout,), "zeros"),
+            (f"d.b{i}.conv2.w", (cout, cout, 3, 3), "normal:0.02"),
+            (f"d.b{i}.conv2.b", (cout,), "zeros"),
+            (f"d.b{i}.skip.w", (cout, cin, 1, 1), "normal:0.02"),
+        ]
+    d_spec += [
+        ("d.dense.w", (ch * 4, 1), "normal:0.02"),
+        ("d.dense.b", (1,), "zeros"),
+        # Projection head (Miyato & Koyama 2018), as used by BigGAN.
+        ("d.proj.w", (n_classes, ch * 4), "normal:0.02"),
+    ]
+    return g_spec, d_spec
+
+
+def _upsample2(x):
+    """Nearest-neighbour 2x upsample, NCHW."""
+    b, c, h, w = x.shape
+    x = x[:, :, :, None, :, None]
+    x = jnp.broadcast_to(x, (b, c, h, 2, w, 2))
+    return x.reshape(b, c, h * 2, w * 2)
+
+
+def _avgpool2(x):
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def _biggan_g_apply(ch: int):
+    def g_apply(p, z, y_onehot, prec: Precision):
+        n = 5  # dense + 3 blocks + out conv
+        emb = y_onehot @ p["g.embed.w"]  # (B, emb)
+        h = dense(jnp.concatenate([z, emb], axis=1), p["g.dense.w"], p["g.dense.b"],
+                  compute_dtype=prec.compute_dtype(0, n))
+        h = h.reshape(z.shape[0], ch * 4, 4, 4)
+        for i in (1, 2, 3):
+            cdt = prec.compute_dtype(i, n)
+            h = h.astype(prec.act_dtype(i, n))
+            film = emb @ p[f"g.b{i}.film.w"] + p[f"g.b{i}.film.b"]
+            gamma, beta = jnp.split(film, 2, axis=1)
+            hc = h * (1.0 + gamma[:, :, None, None]) + beta[:, :, None, None]
+            hc = _upsample2(jax.nn.relu(hc))
+            hc2 = jax.nn.relu(conv2d(hc, p[f"g.b{i}.conv1.w"], p[f"g.b{i}.conv1.b"], 1, 1, cdt))
+            hc2 = conv2d(hc2, p[f"g.b{i}.conv2.w"], p[f"g.b{i}.conv2.b"], 1, 1, cdt)
+            skip = conv2d(hc, p[f"g.b{i}.skip.w"], None, 1, 0, cdt)
+            h = hc2 + skip
+        h = jax.nn.relu(h.astype(jnp.float32))
+        out = conv2d(h, p["g.out.w"], p["g.out.b"], 1, 1, prec.compute_dtype(n - 1, n))
+        return jnp.tanh(out)
+
+    return g_apply
+
+
+def _biggan_d_apply(ch: int):
+    def d_apply(p, x, y_onehot, prec: Precision):
+        n = 4  # 3 blocks + head
+        h = x
+        for i in (1, 2, 3):
+            cdt = prec.compute_dtype(i - 1, n)
+            h = h.astype(prec.act_dtype(i - 1, n))
+            hc = jax.nn.relu(conv2d(h, spectral_norm(p[f"d.b{i}.conv1.w"]), p[f"d.b{i}.conv1.b"], 1, 1, cdt))
+            hc = conv2d(hc, spectral_norm(p[f"d.b{i}.conv2.w"]), p[f"d.b{i}.conv2.b"], 1, 1, cdt)
+            skip = conv2d(h, spectral_norm(p[f"d.b{i}.skip.w"]), None, 1, 0, cdt)
+            h = _avgpool2(jax.nn.relu(hc + skip))
+        feat = h.astype(jnp.float32).sum(axis=(2, 3))  # (B, 4ch) global sum-pool
+        logits = dense(feat, spectral_norm(p["d.dense.w"]), p["d.dense.b"],
+                       compute_dtype=prec.compute_dtype(n - 1, n))[:, 0]
+        proj = jnp.sum((y_onehot @ p["d.proj.w"]) * feat, axis=1)
+        return logits + proj
+
+    return d_apply
+
+
+def biggan32(ch: int = 32, z_dim: int = 120, n_classes: int = 8, emb_dim: int = 32) -> ModelDef:
+    g_spec, d_spec = _biggan_specs(ch, z_dim, n_classes, emb_dim)
+    return ModelDef(
+        name="biggan32", z_dim=z_dim, img_shape=(3, 32, 32), n_classes=n_classes, loss="hinge",
+        g_spec=g_spec, d_spec=d_spec,
+        g_apply=_biggan_g_apply(ch), d_apply=_biggan_d_apply(ch),
+    )
+
+
+MODELS: Dict[str, Callable[[], ModelDef]] = {
+    "dcgan32": dcgan32,
+    "sngan32": sngan32,
+    "biggan32": biggan32,
+}
+
+
+# ---------------------------------------------------------------------------
+# Training step builders — fwd + bwd + optimizer update as ONE jax function.
+# ---------------------------------------------------------------------------
+
+def make_d_step(model: ModelDef, opt_name: str, prec: Precision, hp: HParams,
+                clip_norm: Optional[float] = None):
+    """D update: consumes real AND pre-generated fake images (async img_buff).
+
+    (step, lr, d_params, d_opt_state, real, fake[, y_onehot])
+      -> (new_d_params, new_opt_state, d_loss, real_logits, fake_logits)
+    """
+    d_loss_fn, _ = LOSSES[model.loss]
+    _, update_fn, _ = OPTIMIZERS[opt_name]
+
+    def d_step(step, lr, d_params, d_opt, real, fake, y_onehot=None):
+        def loss_fn(dp):
+            rl = model.d_apply(dp, real, y_onehot, prec)
+            fl = model.d_apply(dp, fake, y_onehot, prec)
+            return d_loss_fn(rl, fl), (rl, fl)
+
+        (loss, (rl, fl)), grads = jax.value_and_grad(loss_fn, has_aux=True)(d_params)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        new_p, new_s = update_fn(grads, d_opt, d_params, step, hp, lr)
+        return new_p, new_s, loss, rl, fl
+
+    return d_step
+
+
+def make_g_step(model: ModelDef, opt_name: str, prec: Precision, hp: HParams,
+                clip_norm: Optional[float] = None):
+    """G update against a (possibly stale) snapshot of D params.
+
+    (step, lr, g_params, g_opt_state, d_params_snapshot, z[, y_onehot])
+      -> (new_g_params, new_opt_state, g_loss, fake_images)
+    """
+    _, g_loss_fn = LOSSES[model.loss]
+    _, update_fn, _ = OPTIMIZERS[opt_name]
+
+    def g_step(step, lr, g_params, g_opt, d_params, z, y_onehot=None):
+        def loss_fn(gp):
+            fake = model.g_apply(gp, z, y_onehot, prec)
+            fl = model.d_apply(d_params, fake, y_onehot, prec)
+            return g_loss_fn(fl), fake
+
+        (loss, fake), grads = jax.value_and_grad(loss_fn, has_aux=True)(g_params)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        new_p, new_s = update_fn(grads, g_opt, g_params, step, hp, lr)
+        return new_p, new_s, loss, fake
+
+    return g_step
+
+
+def make_generate(model: ModelDef, prec: Precision):
+    """(g_params, z[, y_onehot]) -> images — eval/serving path."""
+
+    def generate(g_params, z, y_onehot=None):
+        return model.g_apply(g_params, z, y_onehot, prec)
+
+    return generate
+
+
+# ---------------------------------------------------------------------------
+# FID-proxy feature extractor: fixed random conv net (substitution for
+# Inception-v3, see DESIGN.md §1).  Weights are constants baked into the HLO.
+# ---------------------------------------------------------------------------
+
+FID_FEAT_DIM = 64
+
+
+def make_fid_features(img_shape: Tuple[int, int, int]):
+    rng = np.random.RandomState(42)
+    w1 = jnp.asarray(rng.normal(0, 0.3, size=(32, img_shape[0], 4, 4)), dtype=jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, 0.15, size=(FID_FEAT_DIM, 32, 4, 4)), dtype=jnp.float32)
+
+    def fid_features(images):
+        from .kernels.ref import ref_conv2d  # eval-only path: plain lax conv
+
+        h = lrelu(ref_conv2d(images, w1, None, stride=4, padding=0))
+        h = lrelu(ref_conv2d(h, w2, None, stride=2, padding=1))
+        return h.mean(axis=(2, 3))  # (B, 64)
+
+    return fid_features

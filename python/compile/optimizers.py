@@ -1,0 +1,220 @@
+"""Pure-JAX optimizers for ParaGAN's asymmetric optimization policy (paper §5.2).
+
+The paper: "ParaGAN firstly implements some of the latest work on optimizers
+including Adabelief, rectified Adam (RAdam), Lookahead, and LARS" and then
+pairs *different* optimizers for generator vs discriminator (AdaBelief for G,
+Adam for D is the paper's winning pair, Fig. 6).
+
+Implemented from the original papers (optax is not available offline):
+
+  * Adam       — Kingma & Ba 2015
+  * AdaBelief  — Zhuang et al. 2020 (variance of gradient *prediction error*)
+  * RAdam      — Liu et al. 2020 (variance rectification warmup)
+  * Lookahead  — Zhang et al. 2019 (k-step fast weights, slow-weight sync),
+                 wrapped around an inner Adam
+  * LARS       — You, Gitman & Ginsburg 2017 (layer-wise trust ratio), the
+                 large-batch optimizer of the paper's own third author
+
+Each optimizer is ``(init, update, n_slots)`` over pytrees:
+
+  state = init(params)                         # tuple of n_slots pytrees
+  new_params, new_state = update(grads, state, params, step, hparams)
+
+``step`` is a float scalar (1-based) traced into the HLO so the whole update
+is part of the AOT-compiled training step; the rust coordinator just feeds an
+incrementing scalar.  All state slots are f32 pytrees shaped like params so
+the rust ``ParamStore`` can host them generically.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclass(frozen=True)
+class HParams:
+    """Optimizer hyper-parameters; the scaling manager rewrites ``lr``."""
+
+    lr: float = 2e-4
+    b1: float = 0.5  # GAN-customary beta1 (DCGAN/BigGAN use 0.0-0.5)
+    b2: float = 0.999
+    eps: float = 1e-8  # paper §4.3: bump for bf16 runs
+    weight_decay: float = 0.0
+    # Lookahead
+    la_k: int = 5
+    la_alpha: float = 0.5
+    # LARS
+    lars_trust: float = 1e-3
+    lars_momentum: float = 0.9
+
+
+def _zeros_like(params):
+    return tmap(jnp.zeros_like, params)
+
+
+def _bias_corr(beta, step):
+    return 1.0 - jnp.power(beta, step)
+
+
+# --------------------------------------------------------------------------
+# Adam
+# --------------------------------------------------------------------------
+
+def adam_init(params):
+    return (_zeros_like(params), _zeros_like(params))
+
+
+def adam_update(grads, state, params, step, hp: HParams, lr=None):
+    lr = hp.lr if lr is None else lr
+    m, v = state
+    m = tmap(lambda m_, g: hp.b1 * m_ + (1 - hp.b1) * g, m, grads)
+    v = tmap(lambda v_, g: hp.b2 * v_ + (1 - hp.b2) * g * g, v, grads)
+    mc1, vc1 = _bias_corr(hp.b1, step), _bias_corr(hp.b2, step)
+    new_params = tmap(
+        lambda p, m_, v_: p - lr * (m_ / mc1) / (jnp.sqrt(v_ / vc1) + hp.eps),
+        params, m, v,
+    )
+    return new_params, (m, v)
+
+
+# --------------------------------------------------------------------------
+# AdaBelief — second moment tracks (g - m)^2, the "belief" in the gradient.
+# --------------------------------------------------------------------------
+
+def adabelief_init(params):
+    return (_zeros_like(params), _zeros_like(params))
+
+
+def adabelief_update(grads, state, params, step, hp: HParams, lr=None):
+    lr = hp.lr if lr is None else lr
+    m, s = state
+    m = tmap(lambda m_, g: hp.b1 * m_ + (1 - hp.b1) * g, m, grads)
+    s = tmap(
+        lambda s_, g, m_: hp.b2 * s_ + (1 - hp.b2) * (g - m_) * (g - m_) + hp.eps,
+        s, grads, m,
+    )
+    mc1, sc1 = _bias_corr(hp.b1, step), _bias_corr(hp.b2, step)
+    new_params = tmap(
+        lambda p, m_, s_: p - lr * (m_ / mc1) / (jnp.sqrt(s_ / sc1) + hp.eps),
+        params, m, s,
+    )
+    return new_params, (m, s)
+
+
+# --------------------------------------------------------------------------
+# RAdam — rectify the adaptive LR variance during warmup.
+# --------------------------------------------------------------------------
+
+def radam_init(params):
+    return (_zeros_like(params), _zeros_like(params))
+
+
+def radam_update(grads, state, params, step, hp: HParams, lr=None):
+    lr = hp.lr if lr is None else lr
+    m, v = state
+    m = tmap(lambda m_, g: hp.b1 * m_ + (1 - hp.b1) * g, m, grads)
+    v = tmap(lambda v_, g: hp.b2 * v_ + (1 - hp.b2) * g * g, v, grads)
+    mc1 = _bias_corr(hp.b1, step)
+    rho_inf = 2.0 / (1.0 - hp.b2) - 1.0
+    b2t = jnp.power(hp.b2, step)
+    rho_t = rho_inf - 2.0 * step * b2t / (1.0 - b2t)
+    # Rectification term (defined for rho_t > 4).
+    r_num = (rho_t - 4.0) * (rho_t - 2.0) * rho_inf
+    r_den = (rho_inf - 4.0) * (rho_inf - 2.0) * rho_t
+    rect = jnp.sqrt(jnp.maximum(r_num, 0.0) / r_den)
+    use_adaptive = rho_t > 4.0
+
+    def upd(p, m_, v_):
+        mhat = m_ / mc1
+        vhat = jnp.sqrt(v_ / _bias_corr(hp.b2, step)) + hp.eps
+        adaptive = p - lr * rect * mhat / vhat
+        sgd = p - lr * mhat
+        return jnp.where(use_adaptive, adaptive, sgd)
+
+    return tmap(upd, params, m, v), (m, v)
+
+
+# --------------------------------------------------------------------------
+# Lookahead(Adam) — fast weights take k Adam steps, slow weights interpolate.
+# Branch-free: the sync happens via jnp.where(step % k == 0).
+# --------------------------------------------------------------------------
+
+def lookahead_init(params):
+    m, v = adam_init(params)
+    slow = tmap(jnp.array, params)
+    return (m, v, slow)
+
+
+def lookahead_update(grads, state, params, step, hp: HParams, lr=None):
+    m, v, slow = state
+    fast, (m, v) = adam_update(grads, (m, v), params, step, hp, lr)
+    sync = jnp.equal(jnp.mod(step, float(hp.la_k)), 0.0)
+
+    def blend(s, f):
+        s_new = s + hp.la_alpha * (f - s)
+        return jnp.where(sync, s_new, s), jnp.where(sync, s_new, f)
+
+    pairs = tmap(blend, slow, fast)
+    new_slow = tmap(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_fast = tmap(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_fast, (m, v, new_slow)
+
+
+# --------------------------------------------------------------------------
+# LARS — layer-wise adaptive rate scaling with momentum.
+# --------------------------------------------------------------------------
+
+def lars_init(params):
+    return (_zeros_like(params),)
+
+
+def lars_update(grads, state, params, step, hp: HParams, lr=None):
+    lr = hp.lr if lr is None else lr
+    (mom,) = state
+
+    def upd(p, g, mo):
+        wn = jnp.sqrt(jnp.sum(p * p))
+        gn = jnp.sqrt(jnp.sum(g * g))
+        trust = jnp.where(
+            (wn > 0.0) & (gn > 0.0),
+            hp.lars_trust * wn / (gn + hp.weight_decay * wn + 1e-12),
+            1.0,
+        )
+        local_lr = lr * trust
+        mo_new = hp.lars_momentum * mo + local_lr * (g + hp.weight_decay * p)
+        return p - mo_new, mo_new
+
+    pairs = tmap(upd, params, grads, mom)
+    new_p = tmap(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = tmap(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, (new_m,)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+OPTIMIZERS: Dict[str, Tuple[Callable, Callable, int]] = {
+    "adam": (adam_init, adam_update, 2),
+    "adabelief": (adabelief_init, adabelief_update, 2),
+    "radam": (radam_init, radam_update, 2),
+    "lookahead": (lookahead_init, lookahead_update, 3),
+    "lars": (lars_init, lars_update, 1),
+}
+
+
+def global_grad_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Gradient-norm clipping — part of the paper's per-network policy knobs."""
+    norm = global_grad_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tmap(lambda g: g * scale, grads), norm

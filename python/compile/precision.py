@@ -1,0 +1,52 @@
+"""Mixed-precision policy (paper §4.3).
+
+Findings the paper reports, encoded as a policy object:
+
+  * activations tolerate bf16; weights and gradients are sensitive → master
+    params and the optimizer update stay f32, only *activations* are cast;
+  * "the generator and discriminator's last layer are more sensitive to
+    precision" and shallow layers are less sensitive than deep ones → the
+    first and last layers of each network run f32;
+  * Adam ``eps`` must be bumped when running low precision.
+
+The policy is applied per-layer inside the model functions: each layer asks
+``act_dtype(layer_idx, n_layers)`` what to compute in.  ``compute_dtype``
+selects the MXU input precision inside the Pallas matmul.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Precision:
+    """Per-network numeric policy."""
+
+    name: str = "fp32"
+    bf16_activations: bool = False
+    first_layer_fp32: bool = True
+    last_layer_fp32: bool = True
+
+    def act_dtype(self, layer_idx: int, n_layers: int) -> str:
+        if not self.bf16_activations:
+            return "float32"
+        if self.first_layer_fp32 and layer_idx == 0:
+            return "float32"
+        if self.last_layer_fp32 and layer_idx == n_layers - 1:
+            return "float32"
+        return "bfloat16"
+
+    def compute_dtype(self, layer_idx: int, n_layers: int) -> str:
+        # MXU input precision for the Pallas matmul of this layer.
+        return self.act_dtype(layer_idx, n_layers)
+
+    def adam_eps(self, base: float = 1e-8) -> float:
+        # Paper: "it is necessary to use a slightly larger eps value" for bf16.
+        return 1e-6 if self.bf16_activations else base
+
+
+FP32 = Precision("fp32", bf16_activations=False)
+BF16 = Precision("bf16", bf16_activations=True)
+
+PRECISIONS = {"fp32": FP32, "bf16": BF16}

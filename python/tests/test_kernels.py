@@ -1,0 +1,192 @@
+"""L1 kernel correctness: Pallas layout_matmul / conv2d vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including awkward non-tile-aligned ones — the whole
+point of the layout transformation) and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.layout_matmul import (
+    LANE, SUBLANE, MatmulPlan, VMEM_BUDGET_BYTES, layout_matmul,
+    layout_matmul_bf16, make_layout_matmul, opportunistic_batch_matmul, pad2d,
+    plan_matmul, round_up,
+)
+from compile.kernels.conv2d import conv2d, conv2d_transpose, dense
+from compile.kernels.ref import ref_conv2d, ref_conv2d_transpose, ref_matmul
+
+SETTINGS = dict(deadline=None, max_examples=12, derandomize=True)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# plan_matmul / padding unit tests
+# ---------------------------------------------------------------------------
+
+def test_round_up():
+    assert round_up(1, 8) == 8
+    assert round_up(8, 8) == 8
+    assert round_up(129, 128) == 256
+    assert round_up(0, 128) == 0
+
+
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300))
+@settings(**SETTINGS)
+def test_plan_invariants(m, k, n):
+    p = plan_matmul(m, k, n)
+    # Padded dims are tile multiples and cover the logical dims.
+    assert p.mp % SUBLANE == 0 and p.mp >= m and p.mp - m < SUBLANE
+    assert p.kp % LANE == 0 and p.kp >= k and p.kp - k < LANE
+    assert p.np_ % LANE == 0 and p.np_ >= n and p.np_ - n < LANE
+    # Blocks tile the padded dims exactly.
+    assert p.mp % p.bm == 0 and p.kp % p.bk == 0 and p.np_ % p.bn == 0
+    # VMEM budget respected (bk==LANE is the floor).
+    assert p.vmem_bytes() <= VMEM_BUDGET_BYTES or p.bk == LANE
+    assert 0.0 < p.mxu_occupancy() <= 1.0
+
+
+def test_plan_aligned_shapes_have_full_occupancy():
+    p = plan_matmul(256, 512, 128)
+    assert p.mxu_occupancy() == 1.0
+    assert p.padding_waste() == 0.0
+
+
+def test_plan_tiny_shape_waste_is_large():
+    # The paper's [100,100] example: 39% of a 128x128 MXU wasted.
+    p = plan_matmul(100, 100, 100)
+    assert p.padding_waste() > 0.2
+
+
+def test_pad2d_shapes():
+    x = jnp.ones((5, 70))
+    xp, (r, c) = pad2d(x)
+    assert xp.shape == (8, 128) and (r, c) == (5, 70)
+    assert float(xp[5:].sum()) == 0.0 and float(xp[:, 70:].sum()) == 0.0
+    y = jnp.ones((8, 128))
+    yp, _ = pad2d(y)
+    assert yp is y  # no-op when already aligned
+
+
+# ---------------------------------------------------------------------------
+# layout_matmul vs reference
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 130), k=st.integers(1, 140), n=st.integers(1, 150),
+    seed=st.integers(0, 5),
+)
+@settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(layout_matmul(x, w)), np.asarray(ref_matmul(x, w)),
+        rtol=1e-5, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("shape", [(8, 128, 128), (1, 1, 1), (7, 129, 255), (64, 64, 64)])
+def test_matmul_edge_shapes(shape):
+    m, k, n = shape
+    x, w = _rand(0, (m, k)), _rand(1, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(layout_matmul(x, w)), np.asarray(ref_matmul(x, w)),
+        rtol=1e-5, atol=1e-4,
+    )
+
+
+def test_matmul_grad_matches_ref():
+    x, w = _rand(0, (33, 70)), _rand(1, (70, 17))
+    gx, gw = jax.grad(lambda x, w: (layout_matmul(x, w) ** 2).sum(), argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(lambda x, w: (ref_matmul(x, w) ** 2).sum(), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_bf16_close_to_ref():
+    x, w = _rand(0, (40, 96)), _rand(1, (96, 50))
+    out = np.asarray(layout_matmul_bf16(x, w))
+    ref = np.asarray(ref_matmul(x, w))
+    # bf16 has ~8 bits of mantissa; tolerances scale with |ref|.
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-1)
+
+
+def test_opportunistic_batching_exact():
+    w = _rand(9, (60, 33))
+    xs = [_rand(i, (r, 60)) for i, r in enumerate([5, 17, 8])]
+    outs = opportunistic_batch_matmul(xs, w)
+    for x, o in zip(xs, outs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref_matmul(x, w)),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_make_layout_matmul_dtype_instances_differ():
+    x, w = _rand(0, (16, 128)), _rand(1, (128, 128))
+    f32 = np.asarray(make_layout_matmul("float32")(x, w))
+    bf16 = np.asarray(make_layout_matmul("bfloat16")(x, w))
+    assert not np.allclose(f32, bf16)  # precision policy actually changes math
+
+
+# ---------------------------------------------------------------------------
+# conv2d / conv2d_transpose vs reference
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 3), cin=st.integers(1, 5), cout=st.integers(1, 6),
+    hw=st.sampled_from([5, 8, 12]), k=st.sampled_from([1, 3, 4]),
+    stride=st.sampled_from([1, 2]), seed=st.integers(0, 3),
+)
+@settings(**SETTINGS)
+def test_conv2d_matches_ref(b, cin, cout, hw, k, stride, seed):
+    pad = k // 2
+    x = _rand(seed, (b, cin, hw, hw))
+    w = _rand(seed + 1, (cout, cin, k, k))
+    bias = _rand(seed + 2, (cout,))
+    out = conv2d(x, w, bias, stride, pad)
+    ref = ref_conv2d(x, w, bias, stride, pad)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+@given(
+    b=st.integers(1, 2), cin=st.sampled_from([2, 4]), cout=st.sampled_from([3, 8]),
+    hw=st.sampled_from([4, 8]), seed=st.integers(0, 3),
+)
+@settings(**SETTINGS)
+def test_conv2d_transpose_matches_ref(b, cin, cout, hw, seed):
+    x = _rand(seed, (b, cin, hw, hw))
+    w = _rand(seed + 1, (cin, cout, 4, 4))
+    bias = _rand(seed + 2, (cout,))
+    out = conv2d_transpose(x, w, bias, stride=2, padding=1)
+    ref = ref_conv2d_transpose(x, w, bias, stride=2, padding=1)
+    assert out.shape == (b, cout, hw * 2, hw * 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+def test_conv2d_transpose_stride1():
+    x = _rand(0, (1, 3, 6, 6))
+    w = _rand(1, (3, 5, 3, 3))
+    out = conv2d_transpose(x, w, None, stride=1, padding=1)
+    ref = ref_conv2d_transpose(x, w, None, stride=1, padding=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+def test_conv_grad_flows():
+    x = _rand(0, (2, 3, 8, 8))
+    w = _rand(1, (4, 3, 3, 3))
+    g = jax.grad(lambda w: conv2d(x, w, None, 1, 1).sum())(w)
+    gr = jax.grad(lambda w: ref_conv2d(x, w, None, 1, 1).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-3)
+
+
+def test_dense_matches_matmul():
+    x, w, b = _rand(0, (9, 31)), _rand(1, (31, 7)), _rand(2, (7,))
+    out = dense(x, w, b)
+    ref = ref_matmul(x, w) + b[None, :]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)

@@ -1,0 +1,128 @@
+"""Optimizer correctness: closed-form first steps, convergence, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.optimizers import (HParams, OPTIMIZERS, adam_init, adam_update,
+                                adabelief_init, adabelief_update,
+                                clip_by_global_norm, global_grad_norm,
+                                lars_init, lars_update, lookahead_init,
+                                lookahead_update, radam_init, radam_update)
+
+SETTINGS = dict(deadline=None, max_examples=10, derandomize=True)
+HP = HParams(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8)
+
+
+def _params():
+    return {"w": jnp.array([[1.0, -2.0], [3.0, 0.5]]), "b": jnp.array([0.1, -0.1])}
+
+
+def _grads():
+    return {"w": jnp.array([[0.5, -0.5], [1.0, 0.0]]), "b": jnp.array([-1.0, 2.0])}
+
+
+def test_adam_first_step_closed_form():
+    """After one step from zero state, Adam moves by ~lr*sign(g) for g != 0."""
+    p, g = _params(), _grads()
+    newp, _ = adam_update(g, adam_init(p), p, 1.0, HP)
+    expect = p["w"] - HP.lr * np.sign(np.asarray(g["w"]))
+    mask = np.asarray(g["w"]) != 0
+    np.testing.assert_allclose(np.asarray(newp["w"])[mask], np.asarray(expect)[mask], rtol=1e-3)
+    # zero gradient -> no movement
+    assert float(newp["w"][1, 1]) == pytest.approx(0.5)
+
+
+def test_adam_descends_quadratic():
+    p = {"x": jnp.array([5.0, -3.0])}
+    s = adam_init(p)
+    for t in range(1, 400):
+        g = {"x": 2.0 * p["x"]}  # grad of ||x||^2
+        p, s = adam_update(g, s, p, float(t), HParams(lr=5e-2))
+    assert float(jnp.abs(p["x"]).max()) < 1e-2
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZERS.keys()))
+def test_all_optimizers_descend(name):
+    init, upd, _ = OPTIMIZERS[name]
+    p = {"x": jnp.array([4.0, -4.0]), "y": jnp.array([[2.0]])}
+    s = init(p)
+    loss0 = float(sum(jnp.sum(v ** 2) for v in p.values()))
+    for t in range(1, 300):
+        g = {k: 2.0 * v for k, v in p.items()}
+        p, s = upd(g, s, p, float(t), HParams(lr=3e-2, lars_trust=0.05))
+    loss1 = float(sum(jnp.sum(v ** 2) for v in p.values()))
+    assert loss1 < loss0 * 0.2, (name, loss0, loss1)
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZERS.keys()))
+def test_state_shapes_match_params(name):
+    init, upd, n_slots = OPTIMIZERS[name]
+    p = _params()
+    s = init(p)
+    assert len(s) == n_slots
+    for slot in s:
+        assert set(slot.keys()) == set(p.keys())
+        for k in p:
+            assert slot[k].shape == p[k].shape
+    newp, news = upd(_grads(), s, p, 1.0, HP)
+    assert len(news) == n_slots
+    for k in p:
+        assert newp[k].shape == p[k].shape
+
+
+def test_adabelief_differs_from_adam():
+    p, g = _params(), _grads()
+    pa, _ = adam_update(g, adam_init(p), p, 1.0, HP)
+    pb, _ = adabelief_update(g, adabelief_init(p), p, 1.0, HP)
+    # First-step AdaBelief denominator is (1-b1)^2 g^2-based -> bigger steps.
+    assert not np.allclose(np.asarray(pa["w"]), np.asarray(pb["w"]))
+
+
+def test_radam_warmup_is_sgd_like():
+    """For small t, rho_t <= 4 and RAdam takes unadapted (SGD-with-momentum) steps."""
+    p, g = _params(), _grads()
+    newp, _ = radam_update(g, radam_init(p), p, 1.0, HP)
+    # SGD branch: p - lr * mhat where mhat = g (bias-corrected first moment).
+    expect = np.asarray(p["w"]) - HP.lr * np.asarray(g["w"])
+    np.testing.assert_allclose(np.asarray(newp["w"]), expect, rtol=1e-5)
+
+
+def test_lookahead_syncs_every_k():
+    hp = HParams(lr=1e-2, la_k=5, la_alpha=0.5)
+    p = {"x": jnp.array([1.0])}
+    s = lookahead_init(p)
+    slow0 = float(s[2]["x"][0])
+    for t in range(1, 5):  # steps 1..4: no sync
+        p, s = lookahead_update({"x": jnp.array([1.0])}, s, p, float(t), hp)
+        assert float(s[2]["x"][0]) == pytest.approx(slow0)
+    p, s = lookahead_update({"x": jnp.array([1.0])}, s, p, 5.0, hp)  # sync step
+    assert float(s[2]["x"][0]) != pytest.approx(slow0)
+    # After sync, fast weights equal slow weights.
+    np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(s[2]["x"]), rtol=1e-6)
+
+
+def test_lars_trust_ratio_scales_with_weight_norm():
+    hp = HParams(lr=1.0, lars_trust=1e-3, lars_momentum=0.0)
+    big = {"x": jnp.full((4,), 100.0)}
+    small = {"x": jnp.full((4,), 0.01)}
+    g = {"x": jnp.ones((4,))}
+    pb, _ = lars_update(g, lars_init(big), big, 1.0, hp)
+    ps, _ = lars_update(g, lars_init(small), small, 1.0, hp)
+    step_big = float(jnp.abs(big["x"] - pb["x"]).max())
+    step_small = float(jnp.abs(small["x"] - ps["x"]).max())
+    assert step_big > step_small * 100  # layer-wise scaling
+
+
+@given(max_norm=st.floats(0.1, 10.0), scale=st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_clip_by_global_norm(max_norm, scale):
+    g = {"a": jnp.array([3.0 * scale]), "b": jnp.array([4.0 * scale])}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    assert float(norm) == pytest.approx(5.0 * scale, rel=1e-5)
+    out_norm = float(global_grad_norm(clipped))
+    assert out_norm <= max_norm * (1 + 1e-4)
+    if 5.0 * scale <= max_norm:  # under the cap: untouched
+        np.testing.assert_allclose(np.asarray(clipped["a"]), np.asarray(g["a"]), rtol=1e-6)

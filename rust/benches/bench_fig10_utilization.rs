@@ -1,0 +1,14 @@
+//! cargo bench target regenerating the paper's Fig. 10 — MXU utilization native vs ParaGAN (see repro::fig10).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 10 — MXU utilization native vs ParaGAN");
+    let (table, _) = paragan::repro::fig10(16, 300);
+    rep.table(table);
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("fig10 (simulator sweep)", &cfg, || {
+        let _ = paragan::repro::fig10(16, 60);
+    }));
+    rep.note("paper: ParaGAN holds higher MXU utilization; gap grows with scale");
+    rep.finish();
+}

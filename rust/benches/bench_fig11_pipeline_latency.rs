@@ -1,0 +1,17 @@
+//! cargo bench target regenerating the paper's Fig. 11 (pipeline latency) —
+//! measured on the REAL rust pipeline with injected congestion.
+use paragan::bench::Reporter;
+use paragan::repro::{fig11, Fig11Config};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 11 — data pipeline latency under congestion");
+    let cfg = Fig11Config::default();
+    let (table, res) = fig11(&cfg);
+    rep.table(table);
+    rep.note(format!(
+        "tuner grew {} times, final prefetch workers {}",
+        res.tuned_grows, res.tuned_final_workers
+    ));
+    rep.note("paper: 'our pipeline tuner has a lower variance in latency'");
+    rep.finish();
+}

@@ -1,0 +1,23 @@
+//! cargo bench target regenerating the paper's Fig. 13 (async-update FID) —
+//! REAL sync vs async training through the AOT artifacts.
+use paragan::bench::Reporter;
+use paragan::repro::{fig13, Fig13Config};
+
+fn main() {
+    let steps = std::env::var("PARAGAN_FIG13_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let mut rep = Reporter::new("Fig. 13 — async vs sync update scheme (real training)");
+    let cfg = Fig13Config { steps, eval_every: (steps / 4).max(1), ..Default::default() };
+    match fig13(&cfg) {
+        Ok((table, results)) => {
+            rep.table(table);
+            for (name, r) in &results {
+                let fids: Vec<String> =
+                    r.fid.points.iter().map(|p| format!("{}:{:.1}", p.step, p.value)).collect();
+                rep.note(format!("{name} FID curve: {}", fids.join(" ")));
+            }
+            rep.note("paper: async converges faster early; sync wins at the end on hard tasks");
+        }
+        Err(e) => rep.note(format!("SKIPPED: {e} (run `make artifacts`)")),
+    }
+    rep.finish();
+}

@@ -1,0 +1,14 @@
+//! cargo bench target regenerating the paper's Fig. 1 — weak scaling to 1024 workers (see repro::fig1).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 1 — weak scaling to 1024 workers");
+    let (table, _) = paragan::repro::fig1(16, 300);
+    rep.table(table);
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("fig1 (simulator sweep)", &cfg, || {
+        let _ = paragan::repro::fig1(16, 60);
+    }));
+    rep.note("paper: 91% efficiency at 1024 TPU accelerators");
+    rep.finish();
+}

@@ -1,0 +1,14 @@
+//! cargo bench target regenerating the paper's Fig. 4 — operator usage profile at scale (see repro::fig4).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 4 — operator usage profile at scale");
+    let (table, _) = paragan::repro::fig4(16, 300);
+    rep.table(table);
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("fig4 (simulator sweep)", &cfg, || {
+        let _ = paragan::repro::fig4(16, 60);
+    }));
+    rep.note("paper: idle grows ~13.6% from 8 to 1024 workers; conv still dominates");
+    rep.finish();
+}

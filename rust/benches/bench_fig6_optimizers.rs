@@ -1,0 +1,26 @@
+//! cargo bench target regenerating the paper's Fig. 6 (optimizer policies) —
+//! REAL training through the AOT artifacts.  Horizon is scaled to this
+//! single-CPU testbed; pass more steps via PARAGAN_FIG6_STEPS.
+use paragan::bench::Reporter;
+use paragan::repro::{fig6, Fig6Config};
+
+fn main() {
+    let steps = std::env::var("PARAGAN_FIG6_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let mut rep = Reporter::new("Fig. 6 — asymmetric optimizer policy (real training)");
+    let cfg = Fig6Config { steps, ..Default::default() };
+    match fig6(&cfg) {
+        Ok((table, results)) => {
+            rep.table(table);
+            for (name, r) in &results {
+                rep.note(format!(
+                    "{name}: {:.2} steps/s, collapsed={}",
+                    r.steps_per_sec(),
+                    r.g_loss.collapsed(2.0)
+                ));
+            }
+            rep.note("paper: asymmetric AdaBelief(G)+Adam(D) reaches the best, flattest equilibrium");
+        }
+        Err(e) => rep.note(format!("SKIPPED: {e} (run `make artifacts`)")),
+    }
+    rep.finish();
+}

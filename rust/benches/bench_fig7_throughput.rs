@@ -1,0 +1,14 @@
+//! cargo bench target regenerating the paper's Fig. 7 — framework/hardware throughput (see repro::fig7).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 7 — framework/hardware throughput");
+    let (table, _) = paragan::repro::fig7(16, 300);
+    rep.table(table);
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("fig7 (simulator sweep)", &cfg, || {
+        let _ = paragan::repro::fig7(16, 60);
+    }));
+    rep.note("paper: ParaGAN > StudioGAN > TF on 8xV100; larger gap on TPU");
+    rep.finish();
+}

@@ -1,0 +1,14 @@
+//! cargo bench target regenerating the paper's Fig. 8 (strong scaling).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 8 — strong scaling, total batch 512");
+    let (table, _) = paragan::repro::fig8(300);
+    rep.table(table);
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("fig8 (simulator sweep)", &cfg, || {
+        let _ = paragan::repro::fig8(60);
+    }));
+    rep.note("paper: time-to-solution 30h -> 3h; img/s saturates past 128 workers");
+    rep.finish();
+}

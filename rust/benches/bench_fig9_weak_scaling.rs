@@ -1,0 +1,14 @@
+//! cargo bench target regenerating the paper's Fig. 9 — weak scaling steps/s + img/s (see repro::fig9).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Fig. 9 — weak scaling steps/s + img/s");
+    let (table, _) = paragan::repro::fig9(16, 300);
+    rep.table(table);
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("fig9 (simulator sweep)", &cfg, || {
+        let _ = paragan::repro::fig9(16, 60);
+    }));
+    rep.note("paper: flat steps/s curve to 1024 workers");
+    rep.finish();
+}

@@ -1,0 +1,15 @@
+//! cargo bench target regenerating the paper's Table 2 (system ablation).
+use paragan::bench::{bench, BenchConfig, Reporter};
+
+fn main() {
+    let mut rep = Reporter::new("Table 2 — ablation of system optimizations");
+    let (table, _) = paragan::repro::table2(300);
+    rep.table(table);
+    rep.table(paragan::repro::table1(200));
+    let cfg = BenchConfig { min_iters: 5, max_iters: 20, ..Default::default() };
+    rep.add(bench("table2 (simulator ladder)", &cfg, || {
+        let _ = paragan::repro::table2(60);
+    }));
+    rep.note("paper ladder: 6459 -> 7158 (+10.8%) -> 7412 (+3.9%) -> 8539 (+15.2%) img/s");
+    rep.finish();
+}

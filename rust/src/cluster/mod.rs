@@ -1,0 +1,21 @@
+//! Cluster-scale simulator (the paper's 1024-worker TPU v3 pod substitute —
+//! DESIGN.md §1).
+//!
+//! * `workload` — GAN FLOP/parameter models from Table 1;
+//! * `accel` — TPU v3 / V100 compute model driven by the real layout planner;
+//! * `network` — ring all-reduce + overlap model;
+//! * `framework` — ParaGAN / native-TF / StudioGAN profiles (Fig. 7, Table 2);
+//! * `simulate` — per-step fluid simulation of synchronous data-parallel
+//!   training with the REAL congestion tuner in the loop.
+
+pub mod accel;
+pub mod framework;
+pub mod network;
+pub mod simulate;
+pub mod workload;
+
+pub use accel::AccelModel;
+pub use framework::{FrameworkKind, FrameworkProfile};
+pub use network::Interconnect;
+pub use simulate::{scaling_efficiency, simulate, SimConfig, SimReport};
+pub use workload::{biggan, contragan, progressive_gan, sagan128, sngan128, table1_models, WorkloadModel};

@@ -1,0 +1,100 @@
+//! Interconnect + collective cost models for the cluster simulator.
+//!
+//! Two very different fabrics, per paper §3.2:
+//!   * accelerator<->accelerator: TPU ICI torus / NVLink — fast, dedicated;
+//!     gradients ride a ring all-reduce here;
+//!   * host<->storage: shared Ethernet — slow, multi-tenant, congested;
+//!     training data rides here (modelled by `pipeline::latency`).
+
+/// Accelerator-side fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Effective per-worker all-reduce bandwidth (bytes/s). TPU v3 torus ICI
+    /// sustains ~1.5e11 effective for large reductions; NVLink gen2 ~1.3e11;
+    /// PCIe/IB rings for DDP much less.
+    pub allreduce_bw: f64,
+    /// Per-hop latency (s).
+    pub hop_latency: f64,
+    /// Fraction of the backward pass the all-reduce can overlap with
+    /// (bucketed gradient reduction).
+    pub overlap_fraction: f64,
+}
+
+impl Interconnect {
+    pub fn tpu_v3_pod() -> Self {
+        Interconnect { allreduce_bw: 1.5e11, hop_latency: 0.6e-6, overlap_fraction: 0.85 }
+    }
+    pub fn nvlink_v100() -> Self {
+        Interconnect { allreduce_bw: 1.2e11, hop_latency: 3e-6, overlap_fraction: 0.8 }
+    }
+    /// PyTorch-DDP-over-NCCL flavour with less aggressive bucketing.
+    pub fn nvlink_v100_ddp() -> Self {
+        Interconnect { allreduce_bw: 1.0e11, hop_latency: 3e-6, overlap_fraction: 0.6 }
+    }
+
+    /// Ring all-reduce wall time for `bytes` over `n` workers.
+    ///
+    /// 2(n-1)/n * bytes / bw + 2(n-1) hops of latency — the textbook model.
+    pub fn ring_allreduce_time(&self, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        2.0 * (nf - 1.0) / nf * bytes / self.allreduce_bw + 2.0 * (nf - 1.0) * self.hop_latency
+    }
+
+    /// Portion of the all-reduce NOT hidden behind the backward pass.
+    pub fn exposed_allreduce_time(&self, bytes: f64, n: usize, bwd_compute_time: f64) -> f64 {
+        let t = self.ring_allreduce_time(bytes, n);
+        (t - self.overlap_fraction * bwd_compute_time).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall_cases, gens};
+
+    #[test]
+    fn single_worker_needs_no_allreduce() {
+        let ic = Interconnect::tpu_v3_pod();
+        assert_eq!(ic.ring_allreduce_time(1e9, 1), 0.0);
+    }
+
+    #[test]
+    fn ring_time_approaches_2x_bandwidth_bound() {
+        let ic = Interconnect { allreduce_bw: 1e11, hop_latency: 0.0, overlap_fraction: 0.0 };
+        let bytes = 6.4e8; // BigGAN grads
+        let t2 = ic.ring_allreduce_time(bytes, 2);
+        let t1024 = ic.ring_allreduce_time(bytes, 1024);
+        assert!((t2 - bytes / 1e11).abs() < 1e-9); // 2*(1/2)=1x at n=2
+        assert!((t1024 - 2.0 * bytes / 1e11).abs() / t1024 < 0.01);
+    }
+
+    #[test]
+    fn hop_latency_linear_in_n() {
+        let ic = Interconnect { allreduce_bw: f64::INFINITY, hop_latency: 1e-6, overlap_fraction: 0.0 };
+        assert!((ic.ring_allreduce_time(1.0, 512) - 2.0 * 511.0 * 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_hides_small_reductions_completely() {
+        let ic = Interconnect::tpu_v3_pod();
+        let t = ic.exposed_allreduce_time(1e6, 64, 0.1);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn prop_monotone_in_n_and_bytes() {
+        forall_cases(
+            gens::pair(gens::usize_in(2..2048), gens::f64_in(1e6, 1e10)),
+            128,
+            |&(n, bytes)| {
+                let ic = Interconnect::tpu_v3_pod();
+                ic.ring_allreduce_time(bytes, n) <= ic.ring_allreduce_time(bytes, n * 2) + 1e-12
+                    && ic.ring_allreduce_time(bytes, n)
+                        <= ic.ring_allreduce_time(bytes * 2.0, n) + 1e-12
+            },
+        );
+    }
+}

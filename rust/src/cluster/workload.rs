@@ -1,0 +1,214 @@
+//! GAN workload models: parameter counts, layer shapes, FLOP budgets.
+//!
+//! Table 1 of the paper fixes the parameter counts; layer shapes are
+//! synthesized from each architecture's channel progression so the layout
+//! planner (`layout::cost`) has real matmul shapes to chew on.  Absolute
+//! FLOP budgets are calibrated so that the simulated BigGAN-128 baseline
+//! (fp32, no optimizations, 128 TPU v3 workers, global batch 2048) lands at
+//! the paper's Table 2 baseline of ~6459 img/s — the paper's deltas are then
+//! produced by mechanism, not by scripting (DESIGN.md §5.3).
+
+use crate::layout::cost::LayerShape;
+
+#[derive(Debug, Clone)]
+pub struct WorkloadModel {
+    pub name: &'static str,
+    /// Trainable parameters (G + D), from Table 1 where reported.
+    pub n_params: u64,
+    /// Image resolution.
+    pub resolution: usize,
+    /// im2col layer shapes for ONE of the two networks' passes; a training
+    /// step runs G fwd (for fakes) + D fwd/bwd + G fwd/bwd (repeats encode
+    /// fwd+bwd inside `LayerShape`).
+    pub layers: Vec<LayerShape>,
+    /// Bytes of one decoded input record (C*H*W * 4 + label).
+    pub record_bytes: usize,
+    /// Paper-reported reference training time on 8xV100 (hours), Table 1.
+    pub reference_v100_hours: Option<f64>,
+    /// Calibration multiplier on the pyramid FLOP estimate: the synthesized
+    /// pyramid under-counts real architectures (attention blocks, BN,
+    /// BigGAN-deep's extra blocks); chosen once so the simulated Table 2
+    /// baseline lands at the paper's 6459 img/s, then held fixed for every
+    /// experiment (see DESIGN.md §1).
+    pub flops_scale: f64,
+    /// Cross-replica BatchNorm layers (BigGAN syncs BN statistics across all
+    /// replicas): each costs a small latency-bound all-reduce per step, on
+    /// the critical path.  This is what makes tiny per-worker batches
+    /// communication-dominated (Fig. 8's saturation).
+    pub bn_sync_layers: usize,
+}
+
+impl WorkloadModel {
+    /// Useful FLOPs for one sample's full training step (G+D fwd+bwd).
+    pub fn flops_per_sample(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_per_sample()).sum::<f64>() * self.flops_scale
+    }
+
+    /// Gradient bytes all-reduced per step (fp32 grads).
+    pub fn grad_bytes(&self) -> f64 {
+        self.n_params as f64 * 4.0
+    }
+}
+
+/// Synthesize conv-stack layer shapes for a GAN at `resolution` with base
+/// channel width `ch`: mirrored generator/discriminator pyramids, 3x3
+/// kernels, feature maps halving in spatial size as channels double.
+fn gan_pyramid(resolution: usize, ch: usize, depth_scale: usize) -> Vec<LayerShape> {
+    let mut layers = Vec::new();
+    let mut side = resolution;
+    let mut cin = 3;
+    let mut cout = ch;
+    let mut stage = 0;
+    // Discriminator-side pyramid (G's is the mirror image: fold both into
+    // doubled repeats below).
+    while side >= 8 {
+        for r in 0..depth_scale {
+            layers.push(LayerShape {
+                name: format!("s{stage}r{r}_{side}x{side}x{cout}"),
+                m_per_sample: (side / 2) * (side / 2),
+                k: cin * 9,
+                n: cout,
+                // fwd + dgrad + wgrad, for BOTH networks (G mirror) => 6.
+                repeats: 6,
+            });
+            cin = cout;
+        }
+        side /= 2;
+        cout = (cout * 2).min(ch * 16);
+        stage += 1;
+    }
+    // Heads: D logit after global pooling + G latent dense to the 4x4 seed.
+    layers.push(LayerShape::dense("d_head", cin, 1));
+    layers.push(LayerShape::dense("g_latent", 128, cin * 16));
+    layers
+}
+
+/// Default calibration for the BigGAN family (see `WorkloadModel::flops_scale`).
+pub const BIGGAN_FLOP_SCALE: f64 = 20.0;
+
+pub fn biggan(resolution: usize) -> WorkloadModel {
+    let (ch, depth) = match resolution {
+        128 => (96, 2),
+        256 => (96, 2),
+        512 => (64, 2),
+        1024 => (32, 2),
+        _ => (96, 2),
+    };
+    WorkloadModel {
+        name: match resolution {
+            128 => "biggan128",
+            512 => "biggan512",
+            1024 => "biggan1024",
+            _ => "biggan",
+        },
+        n_params: 158_420_000,
+        resolution,
+        layers: gan_pyramid(resolution, ch, depth),
+        record_bytes: 3 * resolution * resolution * 4 + 4,
+        reference_v100_hours: if resolution == 128 { Some(15.0 * 24.0) } else { None },
+        flops_scale: BIGGAN_FLOP_SCALE,
+        bn_sync_layers: gan_pyramid(resolution, ch, depth).len() - 2,
+    }
+}
+
+pub fn sngan128() -> WorkloadModel {
+    WorkloadModel {
+        name: "sngan128",
+        n_params: 81_440_000,
+        resolution: 128,
+        layers: gan_pyramid(128, 64, 1),
+        record_bytes: 3 * 128 * 128 * 4 + 4,
+        reference_v100_hours: Some(3.0 * 24.0 + 13.6),
+        flops_scale: BIGGAN_FLOP_SCALE,
+        bn_sync_layers: gan_pyramid(128, 64, 1).len() - 2,
+    }
+}
+
+pub fn sagan128() -> WorkloadModel {
+    WorkloadModel {
+        name: "sagan128",
+        n_params: 81_470_000,
+        resolution: 128,
+        layers: gan_pyramid(128, 64, 1),
+        record_bytes: 3 * 128 * 128 * 4 + 4,
+        reference_v100_hours: Some(10.0 * 24.0 + 18.7),
+        flops_scale: BIGGAN_FLOP_SCALE,
+        bn_sync_layers: gan_pyramid(128, 64, 1).len() - 2,
+    }
+}
+
+pub fn progressive_gan() -> WorkloadModel {
+    WorkloadModel {
+        name: "progressivegan",
+        n_params: 43_200_000,
+        resolution: 128,
+        layers: gan_pyramid(128, 48, 1),
+        record_bytes: 3 * 128 * 128 * 4 + 4,
+        reference_v100_hours: Some(4.0 * 24.0),
+        flops_scale: BIGGAN_FLOP_SCALE,
+        bn_sync_layers: gan_pyramid(128, 48, 1).len() - 2,
+    }
+}
+
+pub fn contragan() -> WorkloadModel {
+    WorkloadModel {
+        name: "contragan",
+        n_params: 160_780_000,
+        resolution: 128,
+        layers: gan_pyramid(128, 96, 2),
+        record_bytes: 3 * 128 * 128 * 4 + 4,
+        reference_v100_hours: Some(5.0 * 24.0 + 3.5),
+        flops_scale: BIGGAN_FLOP_SCALE,
+        bn_sync_layers: gan_pyramid(128, 96, 2).len() - 2,
+    }
+}
+
+/// Table 1's model zoo.
+pub fn table1_models() -> Vec<WorkloadModel> {
+    vec![sngan128(), progressive_gan(), contragan(), sagan128(), biggan(128)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn biggan128_flops_in_plausible_range() {
+        let w = biggan(128);
+        let f = w.flops_per_sample();
+        // Full G+D fwd+bwd for BigGAN-128 is tens of GFLOP/sample.
+        assert!(f > 1e10 && f < 1e12, "{f:e}");
+    }
+
+    #[test]
+    fn higher_resolution_is_more_expensive() {
+        assert!(biggan(512).flops_per_sample() > biggan(128).flops_per_sample());
+        assert!(biggan(1024).flops_per_sample() > biggan(512).flops_per_sample());
+    }
+
+    #[test]
+    fn grad_bytes_match_param_counts() {
+        assert_eq!(biggan(128).grad_bytes(), 158_420_000.0 * 4.0);
+        assert_eq!(sngan128().grad_bytes(), 81_440_000.0 * 4.0);
+    }
+
+    #[test]
+    fn table1_reports_all_five_models() {
+        let models = table1_models();
+        assert_eq!(models.len(), 5);
+        assert!(models.iter().all(|m| m.reference_v100_hours.is_some()));
+        // BigGAN is the most expensive per Table 1's time column.
+        let bg = models.iter().find(|m| m.name == "biggan128").unwrap();
+        assert!(models
+            .iter()
+            .all(|m| m.reference_v100_hours.unwrap() <= bg.reference_v100_hours.unwrap()));
+    }
+
+    #[test]
+    fn pyramid_layers_have_sane_shapes() {
+        for l in biggan(128).layers {
+            assert!(l.k > 0 && l.n > 0 && l.m_per_sample > 0);
+            assert!(l.n <= 96 * 16 * 16); // dense heads map to 4x4 feature grids
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Asynchronous update scheme (paper §5.1, Fig. 5 right).
+//!
+//! "Instead of waiting on the other component, the generator/discriminator
+//! can write their intermediate output to the buffer and proceed to update
+//! using the *current* state of the network."
+//!
+//! Topology here mirrors the paper's "run both generator and discriminator
+//! in parallel on different nodes": the discriminator lives on its OWN
+//! thread with its OWN PJRT runtime (PJRT handles are not Send); the two
+//! sides exchange only host tensors:
+//!
+//!   G thread ──fake batches──▶ `ImgBuff`  ──▶ D thread
+//!   G thread ◀─D-param snapshots── `SnapshotCell` ◀── D thread
+//!
+//! * G never waits for D's update: it reads the latest published D snapshot
+//!   (possibly one or more D steps stale) and keeps generating.
+//! * D never waits for G: it consumes buffered fakes (possibly produced by
+//!   an older G) together with fresh real batches.
+//! * `img_buff_cap` bounds the staleness: once G is `cap` batches ahead it
+//!   blocks — bounded-staleness async, not runaway HOGWILD.
+//! * The G:D ratio is a policy knob (`d_steps_per_g`), possible "thanks to
+//!   the decoupled design".
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
+use super::trainer::{batch_to_tensors, make_pipeline, sample_y, sample_z, Evaluator, Prologue, TrainConfig, TrainResult};
+use crate::metrics::tracker::Series;
+use crate::runtime::{run_step, ParamStore, Runtime};
+use crate::util::rng::Rng;
+
+/// Messages D sends back for bookkeeping.
+struct DReport {
+    step: u64,
+    loss: f64,
+    staleness: u64,
+}
+
+pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
+    let pro = Prologue::new(cfg)?;
+    let model = pro.manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+
+    let (mut g_params, mut g_slots) =
+        pro.init_net(cfg, &model.params_g, &cfg.policy.generator.optimizer, 0x61)?;
+    let (d_params, d_slots) =
+        pro.init_net(cfg, &model.params_d, &cfg.policy.discriminator.optimizer, 0xd1)?;
+
+    let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
+    let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
+
+    // Exchange buffers.
+    let img_buff = ImgBuff::new(cfg.img_buff_cap);
+    let d_snapshot = SnapshotCell::new(d_params.snapshot());
+    let (report_tx, report_rx) = mpsc::channel::<DReport>();
+    // G's progress counter, for D-side staleness accounting.
+    let g_step_now = Arc::new(AtomicU64::new(0));
+
+    // Eval side (G thread owns it: FID needs generate + features).
+    let eval_pipeline = make_pipeline(model, cfg.n_modes, cfg.seed ^ 0xE7A1);
+    let evaluator = Evaluator::fit(&rt, model, &eval_pipeline, cfg.eval_batches)?;
+    eval_pipeline.shutdown();
+
+    // ---------------- D thread ----------------
+    let d_cfg = cfg.clone();
+    let d_buff = img_buff.clone();
+    let d_cell = d_snapshot.clone();
+    let d_scaling = pro.scaling.clone();
+    let d_model_batch = model.batch;
+    let d_img_shape = model.img_shape.clone();
+    let d_n_classes = model.n_classes;
+    let d_g_step_now = g_step_now.clone();
+    let d_thread = std::thread::spawn(move || -> Result<(ParamStore, u64)> {
+        // D owns its own PJRT client ("different node").
+        let rt = Runtime::new(&d_cfg.artifact_dir)?;
+        let manifest = crate::runtime::Manifest::load(&d_cfg.artifact_dir)?;
+        let model = manifest.model(&d_cfg.model)?;
+        let d_spec = model.artifact(&d_cfg.policy.d_step_key())?.clone();
+        let mut d_params = {
+            // Same init as the published snapshot (deterministic seed).
+            let pro = Prologue::new(&d_cfg)?;
+            pro.init_net(&d_cfg, &model.params_d, &d_cfg.policy.discriminator.optimizer, 0xd1)?
+        };
+        let (ref mut params, ref mut slots) = d_params;
+        let pipeline = make_pipeline(model, d_cfg.n_modes, d_cfg.seed ^ 0xDA7A);
+        let mut step: u64 = 0;
+        let mut images = 0u64;
+        loop {
+            // Consume a (possibly stale) fake batch; None = G finished.
+            let g_now = d_g_step_now.load(Ordering::SeqCst);
+            let Some((fake, staleness)) = d_buff.pop(g_now) else { break };
+            for _ in 0..d_cfg.policy.d_steps_per_g {
+                step += 1;
+                let real = pipeline.next_batch().context("real batch (D)")?;
+                let (real_t, y_t) = batch_to_tensors(&real, &d_img_shape, d_n_classes);
+                let mut d_in = BTreeMap::new();
+                d_in.insert("real".to_string(), real_t);
+                d_in.insert("fake".to_string(), fake.images.clone());
+                if d_n_classes > 0 {
+                    // Use the labels the fakes were generated with.
+                    let y = fake.labels.clone().or(y_t).context("labels")?;
+                    d_in.insert("y".to_string(), y);
+                }
+                let lr = d_scaling.lr_at(step) * d_cfg.policy.discriminator.lr_mult;
+                let outs = run_step(
+                    &rt, &d_spec, step as f32, lr as f32, params, slots, None, &d_in,
+                )?;
+                images += d_model_batch as u64;
+                let _ = report_tx.send(DReport {
+                    step,
+                    loss: outs["loss"].data[0] as f64,
+                    staleness,
+                });
+                // Publish the new D state for G ("current state").
+                d_cell.publish(params.snapshot(), step);
+            }
+        }
+        let _ = images;
+        Ok((params.snapshot(), step))
+    });
+
+    // ---------------- G side (this thread) ----------------
+    let mut z_rng = Rng::new(cfg.seed ^ 0x22);
+    let mut eval_rng = Rng::new(cfg.seed ^ 0xEE);
+    let mut g_loss = Series::new("g_loss", 0.05);
+    let mut d_loss = Series::new("d_loss", 0.05);
+    let mut fid = Series::new("fid", 1.0);
+    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    let mut staleness_sum = 0u64;
+    let mut staleness_n = 0u64;
+    let mut images_seen = 0u64;
+
+    let t0 = Instant::now();
+    for step in 1..=cfg.steps {
+        g_step_now.store(step, Ordering::SeqCst);
+        let lr = pro.scaling.lr_at(step) * cfg.policy.generator.lr_mult;
+        // Use the CURRENT published D state — no waiting on D's in-flight
+        // update (the asynchrony).
+        let (d_snap, _d_step) = d_snapshot.latest();
+
+        let mut g_in = BTreeMap::new();
+        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        let y = (model.n_classes > 0)
+            .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
+        if let Some(y) = &y {
+            g_in.insert("y".to_string(), y.clone());
+        }
+        let mut outs = run_step(
+            &rt,
+            &g_spec,
+            step as f32,
+            lr as f32,
+            &mut g_params,
+            &mut g_slots,
+            Some(&d_snap),
+            &g_in,
+        )?;
+        g_loss.push(step, outs["loss"].data[0] as f64);
+        images_seen += model.batch as u64;
+
+        // Ship the generated batch to D through img_buff.
+        let fake = outs.remove("fake").context("g_step fake output")?;
+        if !img_buff.push(TaggedBatch { images: fake, labels: y, produced_at: step }) {
+            break; // D side died
+        }
+
+        // Drain D reports.
+        while let Ok(r) = report_rx.try_recv() {
+            d_loss.push(r.step, r.loss);
+            staleness_sum += r.staleness;
+            staleness_n += 1;
+        }
+
+        if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+            let (f, c) =
+                evaluator.evaluate(&rt, model, &g_params, &mut eval_rng, cfg.eval_batches)?;
+            fid.push(step, f);
+            mode_cov.push(step, c);
+        }
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            log::info!(
+                "async step {step}: g_loss {:.4} d_loss {:.4} buff {}",
+                g_loss.last().unwrap_or(f64::NAN),
+                d_loss.last().unwrap_or(f64::NAN),
+                img_buff.len()
+            );
+        }
+    }
+    img_buff.close();
+    let (final_d, d_steps) = d_thread.join().expect("D thread panicked")?;
+    while let Ok(r) = report_rx.try_recv() {
+        d_loss.push(r.step, r.loss);
+        staleness_sum += r.staleness;
+        staleness_n += 1;
+    }
+    images_seen += d_steps * model.batch as u64;
+
+    let (f, c) = evaluator.evaluate(&rt, model, &g_params, &mut eval_rng, cfg.eval_batches)?;
+    fid.push(cfg.steps, f);
+    mode_cov.push(cfg.steps, c);
+
+    anyhow::ensure!(g_params.all_finite() && final_d.all_finite(), "non-finite parameters");
+    Ok(TrainResult {
+        g_loss,
+        d_loss,
+        fid,
+        mode_cov,
+        steps: cfg.steps,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        images_seen,
+        mean_staleness: staleness_sum as f64 / staleness_n.max(1) as f64,
+    })
+}

@@ -1,0 +1,229 @@
+//! The async update scheme's exchange buffers (paper Fig. 5 right).
+//!
+//! * `ImgBuff` — generator -> discriminator: batches of generated images,
+//!   tagged with the G step that produced them.  Bounded: the capacity IS
+//!   the staleness bound (G blocks once it is `cap` batches ahead).
+//! * `SnapshotCell` — discriminator -> generator: latest-wins snapshot of
+//!   D's parameters (and predictions, pred_buff-style).  G always reads the
+//!   *current* state without waiting for D's in-flight update.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::runtime::params::HostTensor;
+
+/// A produced fake batch with provenance for staleness accounting.
+#[derive(Debug, Clone)]
+pub struct TaggedBatch {
+    pub images: HostTensor,
+    pub labels: Option<HostTensor>,
+    /// G step that generated this batch.
+    pub produced_at: u64,
+}
+
+struct ImgBuffState {
+    q: std::collections::VecDeque<TaggedBatch>,
+    cap: usize,
+    closed: bool,
+    pushed: u64,
+    popped: u64,
+}
+
+/// Bounded FIFO of generated batches (img_buff).
+pub struct ImgBuff {
+    st: Mutex<ImgBuffState>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl ImgBuff {
+    pub fn new(cap: usize) -> Arc<ImgBuff> {
+        Arc::new(ImgBuff {
+            st: Mutex::new(ImgBuffState {
+                q: std::collections::VecDeque::new(),
+                cap: cap.max(1),
+                closed: false,
+                pushed: 0,
+                popped: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        })
+    }
+
+    /// Blocking push; returns false if the buffer was closed.
+    pub fn push(&self, b: TaggedBatch) -> bool {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.q.len() < st.cap {
+                st.q.push_back(b);
+                st.pushed += 1;
+                drop(st);
+                self.not_empty.notify_one();
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; returns the batch and its staleness relative to
+    /// `current_g_step` (how many G steps old the images are).
+    pub fn pop(&self, current_g_step: u64) -> Option<(TaggedBatch, u64)> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if let Some(b) = st.q.pop_front() {
+                st.popped += 1;
+                drop(st);
+                self.not_full.notify_one();
+                let staleness = current_g_step.saturating_sub(b.produced_at);
+                return Some((b, staleness));
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn try_pop(&self, current_g_step: u64) -> Option<(TaggedBatch, u64)> {
+        let mut st = self.st.lock().unwrap();
+        let b = st.q.pop_front()?;
+        st.popped += 1;
+        drop(st);
+        self.not_full.notify_one();
+        let staleness = current_g_step.saturating_sub(b.produced_at);
+        Some((b, staleness))
+    }
+
+    pub fn close(&self) {
+        self.st.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.st.lock().unwrap().q.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn stats(&self) -> (u64, u64) {
+        let st = self.st.lock().unwrap();
+        (st.pushed, st.popped)
+    }
+}
+
+/// Latest-wins published snapshot (pred_buff / D-params snapshot).
+pub struct SnapshotCell<T> {
+    cell: Mutex<(Arc<T>, u64)>,
+}
+
+impl<T> SnapshotCell<T> {
+    pub fn new(initial: T) -> Arc<SnapshotCell<T>> {
+        Arc::new(SnapshotCell { cell: Mutex::new((Arc::new(initial), 0)) })
+    }
+
+    /// Publish a new snapshot tagged with the producer's step.
+    pub fn publish(&self, value: T, step: u64) {
+        let mut c = self.cell.lock().unwrap();
+        *c = (Arc::new(value), step);
+    }
+
+    /// Read the current snapshot without blocking the publisher.
+    pub fn latest(&self) -> (Arc<T>, u64) {
+        let c = self.cell.lock().unwrap();
+        (c.0.clone(), c.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall_cases, gens};
+
+    fn batch(step: u64) -> TaggedBatch {
+        TaggedBatch {
+            images: HostTensor::new("fake", vec![1, 1], vec![step as f32]),
+            labels: None,
+            produced_at: step,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_staleness() {
+        let b = ImgBuff::new(4);
+        b.push(batch(1));
+        b.push(batch(2));
+        let (first, stale) = b.pop(5).unwrap();
+        assert_eq!(first.produced_at, 1);
+        assert_eq!(stale, 4);
+        let (_, stale2) = b.pop(5).unwrap();
+        assert_eq!(stale2, 3);
+    }
+
+    #[test]
+    fn capacity_bounds_staleness_via_backpressure() {
+        let b = ImgBuff::new(2);
+        assert!(b.push(batch(1)));
+        assert!(b.push(batch(2)));
+        // Third push blocks; do it from a thread, then pop to release.
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.push(batch(3)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(b.len(), 2); // still blocked
+        let _ = b.pop(3).unwrap();
+        assert!(t.join().unwrap());
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_consumers() {
+        let b = ImgBuff::new(2);
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.pop(0));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.close();
+        assert!(t.join().unwrap().is_none());
+        assert!(!b.push(batch(1))); // closed
+    }
+
+    #[test]
+    fn snapshot_latest_wins() {
+        let cell = SnapshotCell::new(10u32);
+        assert_eq!(*cell.latest().0, 10);
+        cell.publish(20, 3);
+        cell.publish(30, 7);
+        let (v, step) = cell.latest();
+        assert_eq!((*v, step), (30, 7));
+    }
+
+    #[test]
+    fn snapshot_readers_keep_old_arc_alive() {
+        let cell = SnapshotCell::new(vec![1, 2, 3]);
+        let (old, _) = cell.latest();
+        cell.publish(vec![9], 1);
+        assert_eq!(*old, vec![1, 2, 3]); // reader unaffected by publish
+        assert_eq!(*cell.latest().0, vec![9]);
+    }
+
+    #[test]
+    fn prop_pushes_equal_pops_plus_len() {
+        forall_cases(gens::vec(gens::u64_below(3), 0..40), 64, |ops| {
+            let b = ImgBuff::new(64);
+            let mut pushed = 0u64;
+            let mut popped = 0u64;
+            for &op in ops {
+                if op < 2 {
+                    b.push(batch(pushed));
+                    pushed += 1;
+                } else if b.try_pop(pushed).is_some() {
+                    popped += 1;
+                }
+            }
+            let (p, q) = b.stats();
+            p == pushed && q == popped && b.len() == (pushed - popped) as usize
+        });
+    }
+}

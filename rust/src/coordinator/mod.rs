@@ -1,0 +1,24 @@
+//! The ParaGAN coordinator — the paper's L3 contribution.
+//!
+//! * `scaling` — scaling manager (§3.1.1): lr/batch rules, warmup, decay;
+//!   `step`/`lr` are inputs of every AOT artifact, so this drives the REAL
+//!   training path.
+//! * `policy` — asymmetric optimization policy (§5.2): per-network
+//!   optimizer (selects step executables), lr multipliers, precision,
+//!   G:D ratio.
+//! * `buffers` — the async scheme's img_buff / snapshot exchange (§5.1).
+//! * `sync_trainer` / `async_trainer` — the two update schemes of Fig. 5.
+
+pub mod async_trainer;
+pub mod buffers;
+pub mod policy;
+pub mod scaling;
+pub mod sync_trainer;
+pub mod trainer;
+
+pub use async_trainer::train_async;
+pub use buffers::{ImgBuff, SnapshotCell, TaggedBatch};
+pub use policy::{NetPolicy, OptimizationPolicy};
+pub use scaling::{LrScaling, ScalingConfig, ScalingManager};
+pub use sync_trainer::train_sync;
+pub use trainer::{Evaluator, TrainConfig, TrainResult};

@@ -1,0 +1,128 @@
+//! Asymmetric optimization policy (paper §5.2).
+//!
+//! "In ParaGAN, users can set the optimization policy for the generator and
+//! discriminator respectively, which currently includes optimizers,
+//! learning rate schedulers, warmup epochs, and gradient norms."
+//!
+//! A policy names, per network, the optimizer (selects which AOT step
+//! executable runs), a learning-rate multiplier over the ScalingManager's
+//! schedule, and the precision variant.  The paper's winning pair (Fig. 6)
+//! is AdaBelief for G + Adam for D.
+
+use anyhow::Result;
+
+use crate::runtime::ModelManifest;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetPolicy {
+    pub optimizer: String,
+    /// Multiplier on the scaling manager's lr (TTUR-style per-net rates).
+    pub lr_mult: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizationPolicy {
+    pub generator: NetPolicy,
+    pub discriminator: NetPolicy,
+    /// Precision variant of the step artifacts ("fp32" | "bf16").
+    pub precision: String,
+    /// D updates per G update (adjustable thanks to the decoupled design).
+    pub d_steps_per_g: usize,
+}
+
+impl OptimizationPolicy {
+    /// The paper's best pair: "Adabelief for the generator and Adam for the
+    /// discriminator ... can converge to a better equilibrium point".
+    pub fn paper_asymmetric() -> Self {
+        OptimizationPolicy {
+            generator: NetPolicy { optimizer: "adabelief".into(), lr_mult: 1.0 },
+            discriminator: NetPolicy { optimizer: "adam".into(), lr_mult: 1.0 },
+            precision: "fp32".into(),
+            d_steps_per_g: 1,
+        }
+    }
+
+    /// Symmetric baseline with one optimizer for both nets (Fig. 6 rows).
+    pub fn symmetric(opt: &str) -> Self {
+        OptimizationPolicy {
+            generator: NetPolicy { optimizer: opt.into(), lr_mult: 1.0 },
+            discriminator: NetPolicy { optimizer: opt.into(), lr_mult: 1.0 },
+            precision: "fp32".into(),
+            d_steps_per_g: 1,
+        }
+    }
+
+    pub fn with_precision(mut self, prec: &str) -> Self {
+        self.precision = prec.to_string();
+        self
+    }
+
+    pub fn with_d_ratio(mut self, d_steps_per_g: usize) -> Self {
+        self.d_steps_per_g = d_steps_per_g.max(1);
+        self
+    }
+
+    pub fn g_step_key(&self) -> String {
+        ModelManifest::g_step_key(&self.generator.optimizer, &self.precision)
+    }
+
+    pub fn d_step_key(&self) -> String {
+        ModelManifest::d_step_key(&self.discriminator.optimizer, &self.precision)
+    }
+
+    /// Check the manifest exports everything this policy needs.
+    pub fn validate(&self, model: &ModelManifest) -> Result<()> {
+        model.artifact(&self.g_step_key())?;
+        model.artifact(&self.d_step_key())?;
+        anyhow::ensure!(
+            model.optimizers.contains_key(&self.generator.optimizer),
+            "manifest lacks optimizer '{}'",
+            self.generator.optimizer
+        );
+        anyhow::ensure!(
+            model.optimizers.contains_key(&self.discriminator.optimizer),
+            "manifest lacks optimizer '{}'",
+            self.discriminator.optimizer
+        );
+        anyhow::ensure!(self.d_steps_per_g >= 1, "d_steps_per_g must be >= 1");
+        Ok(())
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "G={}(x{:.2}) D={}(x{:.2}) prec={} d:g={}:1",
+            self.generator.optimizer,
+            self.generator.lr_mult,
+            self.discriminator.optimizer,
+            self.discriminator.lr_mult,
+            self.precision,
+            self.d_steps_per_g
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_pair_keys() {
+        let p = OptimizationPolicy::paper_asymmetric();
+        assert_eq!(p.g_step_key(), "g_step_adabelief_fp32");
+        assert_eq!(p.d_step_key(), "d_step_adam_fp32");
+    }
+
+    #[test]
+    fn symmetric_and_modifiers() {
+        let p = OptimizationPolicy::symmetric("adam").with_precision("bf16").with_d_ratio(2);
+        assert_eq!(p.g_step_key(), "g_step_adam_bf16");
+        assert_eq!(p.d_step_key(), "d_step_adam_bf16");
+        assert_eq!(p.d_steps_per_g, 2);
+        assert!(p.describe().contains("d:g=2:1"));
+    }
+
+    #[test]
+    fn ratio_floor_is_one() {
+        assert_eq!(OptimizationPolicy::symmetric("adam").with_d_ratio(0).d_steps_per_g, 1);
+    }
+}

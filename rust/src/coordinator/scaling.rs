@@ -1,0 +1,167 @@
+//! Scaling manager (paper §3.1.1).
+//!
+//! "The scaling manager is in charge of hyper-parameters that need to be
+//! tuned when scaling, including learning rate, optimizer, and local batch
+//! size. Users can use the best hyper-parameters from a single worker as a
+//! starting point, and ParaGAN will scale them based on the number of
+//! workers and learning rate schedules."
+//!
+//! Because `step`/`lr` are traced scalar *inputs* of every AOT step
+//! artifact, this manager controls the real training path, not just the
+//! simulator.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrScaling {
+    /// lr' = lr * (B'/B) — Goyal et al., the default for SGD-family.
+    Linear,
+    /// lr' = lr * sqrt(B'/B) — customary for Adam-family at large batch.
+    Sqrt,
+    /// Keep the single-worker lr.
+    None,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScalingConfig {
+    /// Tuned single-worker hyper-parameters (the "starting point").
+    pub base_lr: f64,
+    pub base_batch: usize,
+    /// Deployment.
+    pub num_workers: usize,
+    pub per_worker_batch: usize,
+    pub rule: LrScaling,
+    /// Linear warmup steps from 0 to the scaled lr (stabilizes large batch).
+    pub warmup_steps: u64,
+    /// Optional cosine decay horizon (0 = constant after warmup).
+    pub decay_steps: u64,
+    /// Floor as a fraction of the scaled lr.
+    pub min_lr_frac: f64,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        ScalingConfig {
+            base_lr: 2e-4,
+            base_batch: 32,
+            num_workers: 1,
+            per_worker_batch: 32,
+            rule: LrScaling::Sqrt,
+            warmup_steps: 0,
+            decay_steps: 0,
+            min_lr_frac: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScalingManager {
+    cfg: ScalingConfig,
+}
+
+impl ScalingManager {
+    pub fn new(cfg: ScalingConfig) -> ScalingManager {
+        assert!(cfg.base_batch > 0 && cfg.per_worker_batch > 0 && cfg.num_workers > 0);
+        ScalingManager { cfg }
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.cfg.num_workers * self.cfg.per_worker_batch
+    }
+
+    /// The scaled peak learning rate.
+    pub fn scaled_lr(&self) -> f64 {
+        let ratio = self.global_batch() as f64 / self.cfg.base_batch as f64;
+        match self.cfg.rule {
+            LrScaling::Linear => self.cfg.base_lr * ratio,
+            LrScaling::Sqrt => self.cfg.base_lr * ratio.sqrt(),
+            LrScaling::None => self.cfg.base_lr,
+        }
+    }
+
+    /// Learning rate at a (1-based) step: warmup then (optional) cosine.
+    pub fn lr_at(&self, step: u64) -> f64 {
+        let peak = self.scaled_lr();
+        let floor = peak * self.cfg.min_lr_frac;
+        if self.cfg.warmup_steps > 0 && step <= self.cfg.warmup_steps {
+            return peak * step as f64 / self.cfg.warmup_steps as f64;
+        }
+        if self.cfg.decay_steps == 0 {
+            return peak;
+        }
+        let t = (step.saturating_sub(self.cfg.warmup_steps)) as f64
+            / self.cfg.decay_steps.max(1) as f64;
+        if t >= 1.0 {
+            return floor.max(peak * self.cfg.min_lr_frac);
+        }
+        floor + (peak - floor) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+
+    pub fn config(&self) -> &ScalingConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall_cases, gens};
+
+    fn mgr(workers: usize, rule: LrScaling, warmup: u64, decay: u64) -> ScalingManager {
+        ScalingManager::new(ScalingConfig {
+            base_lr: 1e-3,
+            base_batch: 32,
+            num_workers: workers,
+            per_worker_batch: 32,
+            rule,
+            warmup_steps: warmup,
+            decay_steps: decay,
+            min_lr_frac: 0.01,
+        })
+    }
+
+    #[test]
+    fn linear_and_sqrt_rules() {
+        assert!((mgr(16, LrScaling::Linear, 0, 0).scaled_lr() - 1.6e-2).abs() < 1e-12);
+        assert!((mgr(16, LrScaling::Sqrt, 0, 0).scaled_lr() - 4e-3).abs() < 1e-12);
+        assert!((mgr(16, LrScaling::None, 0, 0).scaled_lr() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let m = mgr(4, LrScaling::Linear, 100, 0);
+        let peak = m.scaled_lr();
+        assert!((m.lr_at(1) - peak / 100.0).abs() < 1e-12);
+        assert!((m.lr_at(50) - peak / 2.0).abs() < 1e-12);
+        assert!((m.lr_at(100) - peak).abs() < 1e-12);
+        assert!((m.lr_at(5000) - peak).abs() < 1e-12); // constant after
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let m = mgr(1, LrScaling::None, 10, 1000);
+        let peak = m.scaled_lr();
+        assert!(m.lr_at(11) > m.lr_at(500));
+        assert!(m.lr_at(500) > m.lr_at(1000));
+        assert!(m.lr_at(5000) <= peak * 0.01 + 1e-15);
+    }
+
+    #[test]
+    fn prop_lr_positive_and_bounded_by_peak() {
+        forall_cases(
+            gens::pair(gens::usize_in(1..2048), gens::u64_below(20_000)),
+            128,
+            |&(workers, step)| {
+                let m = mgr(workers, LrScaling::Sqrt, 100, 5000);
+                let lr = m.lr_at(step + 1);
+                lr > 0.0 && lr <= m.scaled_lr() + 1e-15
+            },
+        );
+    }
+
+    #[test]
+    fn prop_warmup_monotone() {
+        forall_cases(gens::u64_below(99), 64, |&s| {
+            let m = mgr(8, LrScaling::Linear, 100, 0);
+            m.lr_at(s + 1) < m.lr_at(s + 2) + 1e-18
+        });
+    }
+}

@@ -1,0 +1,151 @@
+//! Synchronous (serial) G/D training — the paper's Fig. 5 (left) baseline.
+//!
+//! Per step: G generates fakes from its CURRENT weights, D updates on
+//! (real, fake), then G updates against the NEW D.  Strict data dependency,
+//! zero staleness — the reference point for the async scheme's comparison
+//! (Fig. 13) and the default engine for stable long runs.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::trainer::{batch_to_tensors, sample_z, make_pipeline, Evaluator, Prologue, TrainConfig, TrainResult};
+use crate::metrics::tracker::Series;
+use crate::pipeline::checkpoint::{AsyncCheckpointWriter, Checkpoint, TensorSnapshot};
+use crate::runtime::{run_inference, run_step, Runtime};
+
+pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
+    let pro = Prologue::new(cfg)?;
+    let model = pro.manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+
+    let (mut g_params, mut g_slots) =
+        pro.init_net(cfg, &model.params_g, &cfg.policy.generator.optimizer, 0x61)?;
+    let (mut d_params, mut d_slots) =
+        pro.init_net(cfg, &model.params_d, &cfg.policy.discriminator.optimizer, 0xd1)?;
+
+    let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
+    let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
+    let gen_spec = model.artifact("generate_fp32")?.clone();
+
+    let pipeline = make_pipeline(model, cfg.n_modes, cfg.seed ^ 0xDA7A);
+    let evaluator = Evaluator::fit(&rt, model, &pipeline, cfg.eval_batches)?;
+    let ckpt = cfg.checkpoint_dir.as_ref().map(|_| AsyncCheckpointWriter::new(2));
+
+    let mut z_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x22);
+    let mut eval_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xEE);
+    let mut g_loss = Series::new("g_loss", 0.05);
+    let mut d_loss = Series::new("d_loss", 0.05);
+    let mut fid = Series::new("fid", 1.0);
+    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    let mut images_seen = 0u64;
+
+    let t0 = Instant::now();
+    for step in 1..=cfg.steps {
+        let lr = pro.scaling.lr_at(step);
+
+        // --- D update(s): fakes from the CURRENT generator ---
+        for _ in 0..cfg.policy.d_steps_per_g {
+            let real = pipeline.next_batch().context("real batch")?;
+            let (real_t, y_t) = batch_to_tensors(&real, &model.img_shape, model.n_classes);
+            let mut gen_in = BTreeMap::new();
+            gen_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+            if let Some(y) = &y_t {
+                gen_in.insert("y".to_string(), y.clone());
+            }
+            let fake = run_inference(&rt, &gen_spec, &g_params, &gen_in)?
+                .remove("images")
+                .context("generate")?;
+            let mut d_in = BTreeMap::new();
+            d_in.insert("real".to_string(), real_t);
+            d_in.insert("fake".to_string(), fake);
+            if let Some(y) = y_t {
+                d_in.insert("y".to_string(), y);
+            }
+            let outs = run_step(
+                &rt,
+                &d_spec,
+                step as f32,
+                (lr * cfg.policy.discriminator.lr_mult) as f32,
+                &mut d_params,
+                &mut d_slots,
+                None,
+                &d_in,
+            )?;
+            d_loss.push(step, outs["loss"].data[0] as f64);
+            images_seen += model.batch as u64;
+        }
+
+        // --- G update against the freshly updated D ---
+        let mut g_in = BTreeMap::new();
+        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        if model.n_classes > 0 {
+            g_in.insert(
+                "y".to_string(),
+                super::trainer::sample_y(&mut z_rng, model.batch, model.n_classes),
+            );
+        }
+        let outs = run_step(
+            &rt,
+            &g_spec,
+            step as f32,
+            (lr * cfg.policy.generator.lr_mult) as f32,
+            &mut g_params,
+            &mut g_slots,
+            Some(&d_params),
+            &g_in,
+        )?;
+        g_loss.push(step, outs["loss"].data[0] as f64);
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            log::info!(
+                "step {step}: g_loss {:.4} d_loss {:.4} lr {:.2e}",
+                g_loss.last().unwrap_or(f64::NAN),
+                d_loss.last().unwrap_or(f64::NAN),
+                lr
+            );
+        }
+        if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+            let (f, c) =
+                evaluator.evaluate(&rt, model, &g_params, &mut eval_rng, cfg.eval_batches)?;
+            fid.push(step, f);
+            mode_cov.push(step, c);
+        }
+        if let (Some(w), Some(dir)) = (&ckpt, &cfg.checkpoint_dir) {
+            if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == 0 {
+                let tensors: Vec<TensorSnapshot> = g_params
+                    .iter()
+                    .chain(d_params.iter())
+                    .map(|t| TensorSnapshot {
+                        name: t.name.clone(),
+                        shape: t.shape.clone(),
+                        data: t.data.clone(),
+                    })
+                    .collect();
+                w.save(dir.join(format!("step-{step}.ckpt")), Checkpoint { step, tensors })?;
+            }
+        }
+    }
+
+    // Final eval.
+    let (f, c) = evaluator.evaluate(&rt, model, &g_params, &mut eval_rng, cfg.eval_batches)?;
+    fid.push(cfg.steps, f);
+    mode_cov.push(cfg.steps, c);
+    if let Some(w) = &ckpt {
+        w.flush();
+    }
+    pipeline.shutdown();
+
+    anyhow::ensure!(g_params.all_finite() && d_params.all_finite(), "non-finite parameters");
+    Ok(TrainResult {
+        g_loss,
+        d_loss,
+        fid,
+        mode_cov,
+        steps: cfg.steps,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        images_seen,
+        mean_staleness: 0.0,
+    })
+}

@@ -1,0 +1,264 @@
+//! Shared trainer plumbing: configuration, per-run result, data/eval
+//! helpers used by both the synchronous and asynchronous engines.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::policy::OptimizationPolicy;
+use super::scaling::{ScalingConfig, ScalingManager};
+use crate::metrics::fid::{frechet_distance, mode_coverage, FeatureStats};
+use crate::metrics::tracker::Series;
+use crate::pipeline::{Batch, DataPipeline, PipelineConfig, StorageNode, SynthImages};
+use crate::runtime::{run_inference, HostTensor, Manifest, ModelManifest, ParamStore, Runtime};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifact_dir: PathBuf,
+    pub model: String,
+    pub policy: OptimizationPolicy,
+    pub scaling: ScalingConfig,
+    pub steps: u64,
+    pub seed: u64,
+    /// Synthetic dataset modes (class count for conditional models).
+    pub n_modes: u32,
+    /// Evaluate FID-proxy every N steps (0 = only at the end).
+    pub eval_every: u64,
+    /// Real/generated feature-set size for FID, in batches.
+    pub eval_batches: usize,
+    /// Checkpoint every N steps (0 = never); async writer.
+    pub checkpoint_every: u64,
+    pub checkpoint_dir: Option<PathBuf>,
+    pub log_every: u64,
+    /// img_buff capacity == staleness bound for the async scheme.
+    pub img_buff_cap: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact_dir: PathBuf::from("artifacts"),
+            model: "dcgan32".into(),
+            policy: OptimizationPolicy::paper_asymmetric(),
+            scaling: ScalingConfig::default(),
+            steps: 200,
+            seed: 42,
+            n_modes: 8,
+            eval_every: 0,
+            eval_batches: 8,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            log_every: 25,
+            img_buff_cap: 2,
+        }
+    }
+}
+
+/// Outcome of a training run — the Fig. 6 / Fig. 13 raw material.
+#[derive(Debug)]
+pub struct TrainResult {
+    pub g_loss: Series,
+    pub d_loss: Series,
+    pub fid: Series,
+    pub mode_cov: Series,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub images_seen: u64,
+    /// Mean staleness of fake batches consumed by D (0 for sync).
+    pub mean_staleness: f64,
+}
+
+impl TrainResult {
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.wall_secs.max(1e-9)
+    }
+    pub fn images_per_sec(&self) -> f64 {
+        self.images_seen as f64 / self.wall_secs.max(1e-9)
+    }
+    pub fn final_fid(&self) -> f64 {
+        self.fid.last().unwrap_or(f64::NAN)
+    }
+}
+
+/// Convert a pipeline batch to the step inputs (images + one-hot labels).
+pub fn batch_to_tensors(b: &Batch, img_shape: &[usize], n_classes: usize) -> (HostTensor, Option<HostTensor>) {
+    let mut shape = vec![b.batch_size];
+    shape.extend_from_slice(img_shape);
+    let images = HostTensor::new("real", shape, b.data.clone());
+    let labels = (n_classes > 0).then(|| {
+        let mut y = vec![0f32; b.batch_size * n_classes];
+        for (i, &l) in b.labels.iter().enumerate() {
+            y[i * n_classes + (l as usize % n_classes)] = 1.0;
+        }
+        HostTensor::new("y", vec![b.batch_size, n_classes], y)
+    });
+    (images, labels)
+}
+
+/// Gaussian latent batch.
+pub fn sample_z(rng: &mut Rng, batch: usize, z_dim: usize) -> HostTensor {
+    let mut v = vec![0f32; batch * z_dim];
+    rng.fill_gaussian(&mut v, 0.0, 1.0);
+    HostTensor::new("z", vec![batch, z_dim], v)
+}
+
+/// Random one-hot labels for generation.
+pub fn sample_y(rng: &mut Rng, batch: usize, n_classes: usize) -> HostTensor {
+    let mut y = vec![0f32; batch * n_classes];
+    for i in 0..batch {
+        y[i * n_classes + rng.usize_below(n_classes)] = 1.0;
+    }
+    HostTensor::new("y", vec![batch, n_classes], y)
+}
+
+/// Build the real-data pipeline used by the trainers.
+pub fn make_pipeline(model: &ModelManifest, n_modes: u32, seed: u64) -> Arc<DataPipeline> {
+    let node = Arc::new(StorageNode::new(
+        Box::new(SynthImages {
+            c: model.img_shape[0],
+            h: model.img_shape[1],
+            w: model.img_shape[2],
+            n_modes,
+            seed,
+        }),
+        // The end-to-end driver is compute-bound; keep storage fast but real.
+        Box::new(crate::pipeline::Constant(20e-6)),
+        true,
+    ));
+    DataPipeline::start(
+        node,
+        PipelineConfig {
+            batch_size: model.batch,
+            initial_workers: 2,
+            initial_buffer: 4,
+            tuner: Some(Default::default()),
+        },
+    )
+}
+
+/// FID-proxy evaluator: real-feature statistics fitted once, then generated
+/// features compared against them each eval.
+pub struct Evaluator {
+    pub real_stats: FeatureStats,
+    pub mode_centers: Vec<Vec<f64>>,
+    pub feat_dim: usize,
+    /// Dims actually used for the Frechet fit: with small eval sets
+    /// (n ~ 100 samples) a 64-dim covariance is rank-deficient and the
+    /// Frechet estimate degenerates; truncating to 16 dims keeps n >> d.
+    pub fid_dim: usize,
+}
+
+/// Truncate row-major (n, d) features to their first `fd` dims.
+fn truncate_feats(feats: &[f32], d: usize, fd: usize) -> Vec<f32> {
+    feats.chunks_exact(d).flat_map(|row| row[..fd].iter().copied()).collect()
+}
+
+impl Evaluator {
+    pub fn fit(
+        rt: &Runtime,
+        model: &ModelManifest,
+        pipeline: &DataPipeline,
+        eval_batches: usize,
+    ) -> Result<Evaluator> {
+        let spec = model.artifact("fid_features")?;
+        let feat_dim = model.fid_feat_dim;
+        let mut feats: Vec<f32> = Vec::new();
+        let mut by_mode: BTreeMap<u32, (Vec<f64>, usize)> = BTreeMap::new();
+        for _ in 0..eval_batches.max(2) {
+            let b = pipeline.next_batch().context("real batch for eval")?;
+            let (images, _) = batch_to_tensors(&b, &model.img_shape, 0);
+            let mut data = BTreeMap::new();
+            data.insert("images".to_string(), images);
+            let out = run_inference(rt, spec, &ParamStore::new(), &data)?;
+            let f = &out["features"];
+            feats.extend_from_slice(&f.data);
+            for (i, &label) in b.labels.iter().enumerate() {
+                let e = by_mode.entry(label).or_insert((vec![0.0; feat_dim], 0));
+                for j in 0..feat_dim {
+                    e.0[j] += f.data[i * feat_dim + j] as f64;
+                }
+                e.1 += 1;
+            }
+        }
+        let fid_dim = feat_dim.min(16);
+        let real_stats = FeatureStats::fit(&truncate_feats(&feats, feat_dim, fid_dim), fid_dim);
+        let mode_centers = by_mode
+            .into_values()
+            .map(|(sum, n)| sum.into_iter().map(|x| x / n.max(1) as f64).collect())
+            .collect();
+        Ok(Evaluator { real_stats, mode_centers, feat_dim, fid_dim })
+    }
+
+    /// FID-proxy + mode coverage of generated images.
+    pub fn evaluate(
+        &self,
+        rt: &Runtime,
+        model: &ModelManifest,
+        g_params: &ParamStore,
+        rng: &mut Rng,
+        eval_batches: usize,
+    ) -> Result<(f64, f64)> {
+        let gen_spec = model.artifact("generate_fp32")?;
+        let fid_spec = model.artifact("fid_features")?;
+        let mut feats: Vec<f32> = Vec::new();
+        for _ in 0..eval_batches.max(2) {
+            let mut data = BTreeMap::new();
+            data.insert("z".to_string(), sample_z(rng, model.batch, model.z_dim));
+            if model.n_classes > 0 {
+                data.insert("y".to_string(), sample_y(rng, model.batch, model.n_classes));
+            }
+            let images = run_inference(rt, gen_spec, g_params, &data)?
+                .remove("images")
+                .context("generate output")?;
+            let mut fdata = BTreeMap::new();
+            fdata.insert("images".to_string(), images);
+            let out = run_inference(rt, fid_spec, &ParamStore::new(), &fdata)?;
+            feats.extend_from_slice(&out["features"].data);
+        }
+        let gen_stats = FeatureStats::fit(
+            &truncate_feats(&feats, self.feat_dim, self.fid_dim),
+            self.fid_dim,
+        );
+        let fid = frechet_distance(&self.real_stats, &gen_stats);
+        let cov = mode_coverage(&feats, self.feat_dim, &self.mode_centers);
+        Ok((fid, cov))
+    }
+}
+
+/// Load manifest + validate policy + init stores — common trainer prologue.
+pub struct Prologue {
+    pub manifest: Manifest,
+    pub scaling: ScalingManager,
+}
+
+impl Prologue {
+    pub fn new(cfg: &TrainConfig) -> Result<Prologue> {
+        let manifest = Manifest::load(&cfg.artifact_dir)?;
+        {
+            let model = manifest.model(&cfg.model)?;
+            cfg.policy.validate(model)?;
+        }
+        Ok(Prologue { manifest, scaling: ScalingManager::new(cfg.scaling.clone()) })
+    }
+
+    pub fn init_net(
+        &self,
+        cfg: &TrainConfig,
+        params_def: &[crate::runtime::ParamDef],
+        optimizer: &str,
+        seed_salt: u64,
+    ) -> Result<(ParamStore, Vec<ParamStore>)> {
+        let model = self.manifest.model(&cfg.model)?;
+        let mut rng = Rng::new(cfg.seed ^ seed_salt);
+        let params = ParamStore::init(params_def, &mut rng);
+        let opt = model
+            .optimizers
+            .get(optimizer)
+            .with_context(|| format!("optimizer '{optimizer}' not in manifest"))?;
+        let slots = ParamStore::init_slots(params_def, &params, &opt.slot_init);
+        Ok((params, slots))
+    }
+}

@@ -1,0 +1,464 @@
+//! Execution substrate: thread pool + bounded channels (tokio substitute).
+//!
+//! The coordinator's event loop, the data-pipeline prefetch workers, the
+//! async G/D trainers and the async checkpoint writer all run on this.  It is
+//! a deliberately small, std-only runtime: OS threads, `std::sync::mpsc`
+//! channels, and a condvar-based bounded queue for backpressure.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// Bounded MPMC channel with blocking send (backpressure) and recv.
+// ---------------------------------------------------------------------------
+
+struct BoundedInner<T> {
+    q: Mutex<BoundedState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct BoundedState<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    senders: usize,
+}
+
+/// Sending half of a bounded channel; clone for multiple producers.
+pub struct Sender<T> {
+    inner: Arc<BoundedInner<T>>,
+}
+
+/// Receiving half; clone for multiple consumers.
+pub struct Receiver<T> {
+    inner: Arc<BoundedInner<T>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError {
+    Closed,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// Channel closed and drained.
+    Closed,
+    /// try_recv only: nothing available right now.
+    Empty,
+}
+
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap > 0);
+    let inner = Arc::new(BoundedInner {
+        q: Mutex::new(BoundedState { items: VecDeque::new(), cap, closed: false, senders: 1 }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.q.lock().unwrap().senders += 1;
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; returns Err if the channel was closed.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed);
+            }
+            if st.items.len() < st.cap {
+                st.items.push_back(item);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the item back if full.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.items.len() >= st.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel explicitly (receivers drain then get Closed).
+    pub fn close(&self) {
+        self.inner.q.lock().unwrap().closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; Err(Closed) once the channel is closed AND drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(RecvError::Closed);
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.q.lock().unwrap();
+        if let Some(item) = st.items.pop_front() {
+            drop(st);
+            self.inner.not_full.notify_one();
+            return Ok(item);
+        }
+        if st.closed {
+            Err(RecvError::Closed)
+        } else {
+            Err(RecvError::Empty)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread pool with dynamic resizing (the congestion tuner grows/shrinks it).
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum PoolMsg {
+    Run(Job),
+    /// Ask exactly one worker to exit (used by shrink()).
+    Retire,
+}
+
+/// A dynamically-resizable thread pool.
+///
+/// `resize()` is what the congestion-aware tuner calls: growing spawns new
+/// workers immediately; shrinking retires workers as they finish their
+/// current job.
+pub struct ThreadPool {
+    tx: mpsc::Sender<PoolMsg>,
+    rx: Arc<Mutex<mpsc::Receiver<PoolMsg>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    target: AtomicUsize,
+    live: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Arc<Self> {
+        let (tx, rx) = mpsc::channel::<PoolMsg>();
+        let pool = Arc::new(ThreadPool {
+            tx,
+            rx: Arc::new(Mutex::new(rx)),
+            workers: Mutex::new(Vec::new()),
+            target: AtomicUsize::new(0),
+            live: Arc::new(AtomicUsize::new(0)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        });
+        pool.resize(n.max(1));
+        pool
+    }
+
+    fn spawn_worker(self: &Arc<Self>) {
+        let rx = self.rx.clone();
+        let live = self.live.clone();
+        let shutdown = self.shutdown.clone();
+        live.fetch_add(1, Ordering::SeqCst);
+        let h = std::thread::spawn(move || loop {
+            let msg = {
+                let guard = rx.lock().unwrap();
+                guard.recv()
+            };
+            match msg {
+                Ok(PoolMsg::Run(job)) => {
+                    job();
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Ok(PoolMsg::Retire) | Err(_) => break,
+            }
+        });
+        self.workers.lock().unwrap().push(h);
+    }
+
+    /// Current worker count target.
+    pub fn size(&self) -> usize {
+        self.target.load(Ordering::SeqCst)
+    }
+
+    /// Live (not yet retired) workers.
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Grow or shrink toward `n` workers.
+    pub fn resize(self: &Arc<Self>, n: usize) {
+        let n = n.max(1);
+        let cur = self.target.swap(n, Ordering::SeqCst);
+        if n > cur {
+            for _ in cur..n {
+                self.spawn_worker();
+            }
+        } else {
+            for _ in n..cur {
+                let live = self.live.clone();
+                // Retire messages interleave with jobs; the worker that picks
+                // one up exits after its current job.
+                let _ = self.tx.send(PoolMsg::Retire);
+                // live count is decremented lazily on join; approximate here.
+                let _ = live;
+            }
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let _ = self.tx.send(PoolMsg::Run(Box::new(f)));
+    }
+
+    /// Submit a job and get a handle to its result.
+    pub fn submit<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(
+        &self,
+        f: F,
+    ) -> TaskHandle<T> {
+        let (tx, rx) = mpsc::channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        TaskHandle { rx }
+    }
+
+    /// Drain: stop accepting semantics are cooperative — callers should stop
+    /// submitting; this waits for queued jobs to finish by joining workers.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let workers = {
+            let mut w = self.workers.lock().unwrap();
+            std::mem::take(&mut *w)
+        };
+        for _ in 0..workers.len() {
+            let _ = self.tx.send(PoolMsg::Retire);
+        }
+        for h in workers {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Future-like handle for a pool job result.
+pub struct TaskHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> TaskHandle<T> {
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("worker panicked or pool shut down")
+    }
+    pub fn try_wait(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Run closures on N scoped threads and collect results in order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n_threads = n_threads.max(1);
+    let items: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..n_threads.min(items.len().max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= items.len() {
+                    break;
+                }
+                let item = items[i].lock().unwrap().take().unwrap();
+                *results[i].lock().unwrap() = Some(f(item));
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+    use std::time::Duration;
+
+    #[test]
+    fn bounded_channel_fifo() {
+        let (tx, rx) = bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(tx.try_send(99), Err(99)); // full
+        for i in 0..4 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+        assert_eq!(rx.try_recv(), Err(RecvError::Empty));
+    }
+
+    #[test]
+    fn channel_close_drains_then_errors() {
+        let (tx, rx) = bounded(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_sender() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until recv
+            true
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv().unwrap(), 0);
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn mpmc_many_producers_consumers() {
+        let (tx, rx) = bounded(16);
+        let total = Arc::new(AtomicU32::new(0));
+        let mut handles = Vec::new();
+        for p in 0..4u32 {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u32 {
+                    tx.send(p * 100 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        for _ in 0..4 {
+            let rx = rx.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(v) = rx.recv() {
+                    total.fetch_add(v, Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let want: u32 = (0..400u32).map(|i| (i / 100) * 100 + i % 100).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU32::new(0));
+        let handles: Vec<_> = (0..20)
+            .map(|i| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i * 2
+                })
+            })
+            .collect();
+        let sum: u32 = handles.into_iter().map(|h| h.wait()).sum();
+        assert_eq!(sum, (0..20).map(|i| i * 2).sum());
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_resize_grows_and_shrinks() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.size(), 1);
+        pool.resize(4);
+        assert_eq!(pool.size(), 4);
+        // All four can run concurrently: gate on a barrier.
+        let gate = Arc::new(std::sync::Barrier::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let g = gate.clone();
+                pool.submit(move || {
+                    g.wait();
+                    1u32
+                })
+            })
+            .collect();
+        let sum: u32 = handles.into_iter().map(|h| h.wait()).sum();
+        assert_eq!(sum, 4);
+        pool.resize(1);
+        assert_eq!(pool.size(), 1);
+        // Pool still works after shrink.
+        assert_eq!(pool.submit(|| 7u32).wait(), 7);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..50).collect::<Vec<i32>>(), 4, |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<i32>>());
+    }
+}

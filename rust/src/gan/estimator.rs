@@ -1,0 +1,122 @@
+//! `Estimator` — the Listing-1-shaped public API.
+//!
+//! ```ignore
+//! let est = Estimator::new("dcgan32")
+//!     .policy(OptimizationPolicy::paper_asymmetric())
+//!     .scheme(UpdateScheme::Async)
+//!     .steps(500);
+//! let result = est.train()?;
+//! println!("FID-proxy: {}", result.final_fid());
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{train_async, train_sync, OptimizationPolicy, ScalingConfig, TrainConfig, TrainResult};
+
+/// Which of the paper's two update schemes (Fig. 5) to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateScheme {
+    /// Serial G/D updates — strict dependency, zero staleness.
+    Sync,
+    /// Decoupled G/D with img_buff + snapshots (paper §5.1).
+    Async,
+}
+
+/// Builder-style front end over the trainers.
+#[derive(Debug, Clone)]
+pub struct Estimator {
+    cfg: TrainConfig,
+    scheme: UpdateScheme,
+}
+
+impl Estimator {
+    pub fn new(model: &str) -> Estimator {
+        Estimator {
+            cfg: TrainConfig { model: model.to_string(), ..Default::default() },
+            scheme: UpdateScheme::Sync,
+        }
+    }
+
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifact_dir = dir.into();
+        self
+    }
+    pub fn policy(mut self, p: OptimizationPolicy) -> Self {
+        self.cfg.policy = p;
+        self
+    }
+    pub fn scaling(mut self, s: ScalingConfig) -> Self {
+        self.cfg.scaling = s;
+        self
+    }
+    pub fn scheme(mut self, s: UpdateScheme) -> Self {
+        self.scheme = s;
+        self
+    }
+    pub fn steps(mut self, n: u64) -> Self {
+        self.cfg.steps = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.cfg.eval_every = n;
+        self
+    }
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.cfg.eval_batches = n;
+        self
+    }
+    pub fn checkpoint(mut self, dir: impl Into<PathBuf>, every: u64) -> Self {
+        self.cfg.checkpoint_dir = Some(dir.into());
+        self.cfg.checkpoint_every = every;
+        self
+    }
+    pub fn img_buff_cap(mut self, n: usize) -> Self {
+        self.cfg.img_buff_cap = n;
+        self
+    }
+    pub fn n_modes(mut self, n: u32) -> Self {
+        self.cfg.n_modes = n;
+        self
+    }
+    pub fn log_every(mut self, n: u64) -> Self {
+        self.cfg.log_every = n;
+        self
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Run training end-to-end through the AOT artifacts.
+    pub fn train(&self) -> Result<TrainResult> {
+        match self.scheme {
+            UpdateScheme::Sync => train_sync(&self.cfg),
+            UpdateScheme::Async => train_async(&self.cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_composes() {
+        let e = Estimator::new("sngan32")
+            .steps(10)
+            .seed(7)
+            .scheme(UpdateScheme::Async)
+            .policy(OptimizationPolicy::symmetric("adam"))
+            .img_buff_cap(4);
+        assert_eq!(e.config().model, "sngan32");
+        assert_eq!(e.config().steps, 10);
+        assert_eq!(e.config().img_buff_cap, 4);
+        assert_eq!(e.scheme, UpdateScheme::Async);
+    }
+}

@@ -1,0 +1,6 @@
+//! Public high-level API (paper §3.1, Listing 1): build an `Estimator`
+//! over a backbone + policy, train, evaluate.
+
+pub mod estimator;
+
+pub use estimator::{Estimator, UpdateScheme};

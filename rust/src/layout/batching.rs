@@ -1,0 +1,156 @@
+//! Opportunistic batching (paper §4.2).
+//!
+//! "On top of the batch dimensions, ParaGAN also seeks opportunities to
+//! batch intermediate results to be a multiple of optimal layout dimensions.
+//! Such opportunities can be found at reshape and matmul operators. For
+//! instance, if two input matrices are to multiply the same weight, we can
+//! concatenate the two input matrices before the matrix multiplication
+//! operation to save kernel launch overhead."
+//!
+//! Given a stream of pending matmuls (each: M rows against a named weight),
+//! the planner groups same-weight matmuls and decides which groups to fuse:
+//! fusing is profitable when it reduces padded FLOPs (shared row padding)
+//! or when the saved kernel-launch overhead exceeds the concat cost.
+
+use std::collections::BTreeMap;
+
+use super::plan::{round_up, Accelerator, MatmulPlan};
+
+/// One pending matmul: `rows x k` times weight `k x n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PendingMatmul {
+    pub weight: String,
+    pub rows: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// A planned fusion group.
+#[derive(Debug, Clone)]
+pub struct BatchOpportunity {
+    pub weight: String,
+    /// Indices into the input list, in input order.
+    pub members: Vec<usize>,
+    pub fused_rows: usize,
+    /// Padded-FLOP saving vs running members separately (>= 0 when fused).
+    pub flops_saved: f64,
+    /// Kernel launches eliminated.
+    pub launches_saved: usize,
+}
+
+/// Group same-weight matmuls and fuse every group where fusing does not
+/// increase padded FLOPs (it never does for same-k/n: row padding is
+/// amortized), reporting the savings.
+pub fn plan_opportunistic_batches(
+    acc: Accelerator,
+    elem_bytes: usize,
+    pending: &[PendingMatmul],
+) -> Vec<BatchOpportunity> {
+    let mut groups: BTreeMap<(String, usize, usize), Vec<usize>> = BTreeMap::new();
+    for (i, p) in pending.iter().enumerate() {
+        groups.entry((p.weight.clone(), p.k, p.n)).or_default().push(i);
+    }
+    let mut out = Vec::new();
+    let rule = acc.tile_rule(elem_bytes);
+    for ((weight, k, n), members) in groups {
+        if members.len() < 2 {
+            continue;
+        }
+        let fused_rows: usize = members.iter().map(|&i| pending[i].rows).sum();
+        let sep_padded: f64 = members
+            .iter()
+            .map(|&i| MatmulPlan::for_accel(acc, pending[i].rows, k, n, elem_bytes).padded_flops())
+            .sum();
+        let fused_padded =
+            MatmulPlan::for_accel(acc, fused_rows, k, n, elem_bytes).padded_flops();
+        let flops_saved = sep_padded - fused_padded;
+        // Same-k/n fusion can only reduce row padding; fuse whenever it does
+        // not hurt (flops_saved >= 0 always holds, asserted in tests).
+        out.push(BatchOpportunity {
+            weight,
+            members: members.clone(),
+            fused_rows: round_up(fused_rows, rule.row),
+            flops_saved,
+            launches_saved: members.len() - 1,
+        });
+    }
+    out
+}
+
+/// Total padded-FLOP fraction saved by the plan over the naive execution.
+pub fn fused_savings_fraction(
+    acc: Accelerator,
+    elem_bytes: usize,
+    pending: &[PendingMatmul],
+) -> f64 {
+    let naive: f64 = pending
+        .iter()
+        .map(|p| MatmulPlan::for_accel(acc, p.rows, p.k, p.n, elem_bytes).padded_flops())
+        .sum();
+    if naive == 0.0 {
+        return 0.0;
+    }
+    let saved: f64 = plan_opportunistic_batches(acc, elem_bytes, pending)
+        .iter()
+        .map(|b| b.flops_saved)
+        .sum();
+    saved / naive
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall_cases, gens};
+
+    fn mm(weight: &str, rows: usize) -> PendingMatmul {
+        PendingMatmul { weight: weight.into(), rows, k: 256, n: 128 }
+    }
+
+    #[test]
+    fn fuses_same_weight_only() {
+        let pending = vec![mm("w1", 10), mm("w2", 20), mm("w1", 30)];
+        let plan = plan_opportunistic_batches(Accelerator::TpuV3, 4, &pending);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].weight, "w1");
+        assert_eq!(plan[0].members, vec![0, 2]);
+        assert_eq!(plan[0].launches_saved, 1);
+    }
+
+    #[test]
+    fn paper_example_two_small_inputs_save_padding() {
+        // Two 4-row inputs each pad to 8 rows separately; fused 8 rows pad to 8.
+        let pending = vec![mm("w", 4), mm("w", 4)];
+        let plan = plan_opportunistic_batches(Accelerator::TpuV3, 4, &pending);
+        assert_eq!(plan.len(), 1);
+        assert!(plan[0].flops_saved > 0.0);
+        assert_eq!(plan[0].fused_rows, 8);
+    }
+
+    #[test]
+    fn different_k_or_n_never_fused() {
+        let pending = vec![
+            PendingMatmul { weight: "w".into(), rows: 4, k: 256, n: 128 },
+            PendingMatmul { weight: "w".into(), rows: 4, k: 512, n: 128 },
+        ];
+        let plan = plan_opportunistic_batches(Accelerator::TpuV3, 4, &pending);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn prop_fusion_never_increases_padded_flops() {
+        forall_cases(gens::vec(gens::usize_in(1..100), 2..12), 128, |rows| {
+            let pending: Vec<PendingMatmul> = rows.iter().map(|&r| mm("w", r)).collect();
+            let plan = plan_opportunistic_batches(Accelerator::TpuV3, 4, &pending);
+            plan.iter().all(|b| b.flops_saved >= -1e-6)
+        });
+    }
+
+    #[test]
+    fn prop_savings_fraction_bounded() {
+        forall_cases(gens::vec(gens::usize_in(1..64), 0..10), 128, |rows| {
+            let pending: Vec<PendingMatmul> = rows.iter().map(|&r| mm("w", r)).collect();
+            let f = fused_savings_fraction(Accelerator::TpuV3, 4, &pending);
+            (0.0..=1.0).contains(&f)
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Hardware-aware layout transformation (paper §4.2) — the rust-side planner.
+//!
+//! Mirrors `python/compile/kernels/layout_matmul.py`: the same (sublane,
+//! lane) tiling rules, padding plans, VMEM budgeting and MXU-occupancy
+//! accounting, extended with
+//!
+//!   * per-accelerator tile rules (TPU v3, V100, A100 — paper §3.3),
+//!   * opportunistic batching of same-weight matmuls (paper: "if two input
+//!     matrices are to multiply the same weight, we can concatenate"),
+//!   * whole-model utilization estimates the cluster simulator and the
+//!     Fig. 10 experiment consume.
+
+pub mod batching;
+pub mod cost;
+pub mod plan;
+
+pub use batching::{plan_opportunistic_batches, BatchOpportunity};
+pub use cost::{model_mxu_utilization, LayerShape, UtilizationReport};
+pub use plan::{Accelerator, MatmulPlan, TileRule};

@@ -1,0 +1,243 @@
+//! Padding/tiling plans per accelerator.
+//!
+//! Paper §3.3: "Nvidia A100 GPUs prefer half-precision data in multiples of
+//! 64, and single-precision data in multiples of 32, while previous
+//! generations prefer multiples of 8. For TPU, the preferred data layout
+//! should have a multiple of 128 on the lane dimension and 8 on the sublane
+//! dimension."
+
+/// TPU v3 per-core VMEM is 16 MiB; plan against half for double-buffering
+/// (matches the python planner).
+pub const VMEM_BUDGET_BYTES: usize = 8 * 1024 * 1024;
+
+/// MXU systolic array dimension (TPU v2/v3: 128x128).
+pub const MXU_DIM: usize = 128;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accelerator {
+    /// TPU v2/v3: (sublane=8, lane=128).
+    TpuV3,
+    /// V100: tensor-core era, multiples of 8.
+    V100,
+    /// A100: fp16 multiples of 64, fp32 multiples of 32.
+    A100,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileRule {
+    /// Required multiple on the second-minor (row/sublane) dimension.
+    pub row: usize,
+    /// Required multiple on the minor (column/lane) dimension.
+    pub col: usize,
+}
+
+impl Accelerator {
+    /// Preferred tile multiples for the given element width (bytes).
+    pub fn tile_rule(&self, elem_bytes: usize) -> TileRule {
+        match self {
+            Accelerator::TpuV3 => TileRule { row: 8, col: 128 },
+            Accelerator::V100 => TileRule { row: 8, col: 8 },
+            Accelerator::A100 => {
+                if elem_bytes <= 2 {
+                    TileRule { row: 64, col: 64 }
+                } else {
+                    TileRule { row: 32, col: 32 }
+                }
+            }
+        }
+    }
+
+    /// Peak matmul throughput in FLOP/s (dense, mixed precision).
+    /// TPU v3: 123 TFLOP/s bf16 per chip => 61.5 per core ("worker").
+    /// V100: 125 TFLOP/s fp16 tensor core. A100: 312 TFLOP/s.
+    pub fn peak_flops(&self) -> f64 {
+        match self {
+            Accelerator::TpuV3 => 61.5e12,
+            Accelerator::V100 => 125.0e12 / 8.0 * 8.0, // per-GPU
+            Accelerator::A100 => 312.0e12,
+        }
+    }
+}
+
+pub fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// A planned (M,K)x(K,N) matmul on a tiled accelerator — mirror of the
+/// python `MatmulPlan`.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub mp: usize,
+    pub kp: usize,
+    pub np: usize,
+    pub bm: usize,
+    pub bk: usize,
+    pub bn: usize,
+    pub elem_bytes: usize,
+}
+
+impl MatmulPlan {
+    /// Plan on TPU v3 rules with VMEM-budgeted blocks (python parity).
+    pub fn tpu(m: usize, k: usize, n: usize, elem_bytes: usize) -> MatmulPlan {
+        Self::for_accel(Accelerator::TpuV3, m, k, n, elem_bytes)
+    }
+
+    pub fn for_accel(acc: Accelerator, m: usize, k: usize, n: usize, elem_bytes: usize) -> MatmulPlan {
+        let rule = acc.tile_rule(elem_bytes);
+        let (sublane, lane) = (rule.row, rule.col);
+        let mp = round_up(m.max(1), sublane);
+        let kp = round_up(k.max(1), lane);
+        let np = round_up(n.max(1), lane);
+        // Mirror of the python planner (§Perf iteration 1: tall M-blocks).
+        let bm = divisor_block(mp, 1024, sublane);
+        let bn = divisor_block(np, 256, lane);
+        let mut pref_k = 2048;
+        loop {
+            let bk = divisor_block(kp, pref_k, lane);
+            let plan = MatmulPlan { m, k, n, mp, kp, np, bm, bk, bn, elem_bytes };
+            if plan.vmem_bytes() <= VMEM_BUDGET_BYTES || bk == lane {
+                return plan;
+            }
+            pref_k = bk - lane;
+        }
+    }
+
+    pub fn grid(&self) -> (usize, usize, usize) {
+        (self.mp / self.bm, self.np / self.bn, self.kp / self.bk)
+    }
+
+    /// VMEM residency of one grid step (x block + w block + f32 acc block).
+    pub fn vmem_bytes(&self) -> usize {
+        self.bm * self.bk * self.elem_bytes + self.bk * self.bn * self.elem_bytes
+            + self.bm * self.bn * 4
+    }
+
+    pub fn real_flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+
+    pub fn padded_flops(&self) -> f64 {
+        2.0 * self.mp as f64 * self.kp as f64 * self.np as f64
+    }
+
+    /// Fraction of MXU work that is useful — Fig. 10's utilization driver.
+    pub fn mxu_occupancy(&self) -> f64 {
+        self.real_flops() / self.padded_flops()
+    }
+
+    /// Systolic-array fill factor: a matmul with fewer than MXU_DIM rows
+    /// cannot keep the 128-deep systolic pipeline full, so throughput drops
+    /// ~proportionally.  This is the "per-worker batch of 1 under-utilizes
+    /// the TPU" effect behind Fig. 8's strong-scaling saturation.
+    pub fn systolic_fill(&self) -> f64 {
+        let row_fill = (self.mp as f64 / MXU_DIM as f64).min(1.0);
+        // Pipeline fill/drain (~MXU_DIM cycles) amortized over the K stream.
+        let k_amort = self.kp as f64 / (self.kp as f64 + MXU_DIM as f64);
+        row_fill * k_amort
+    }
+
+    /// Wall-clock MXU cost in FLOP-equivalents: padded work slowed by
+    /// pipeline under-fill.
+    pub fn mxu_cost_flops(&self) -> f64 {
+        self.padded_flops() / self.systolic_fill()
+    }
+
+    pub fn padding_waste(&self) -> f64 {
+        1.0 - self.mxu_occupancy()
+    }
+
+    /// Bytes moved HBM->VMEM assuming each padded operand + result is
+    /// streamed once (lower bound; double-buffering hides latency, not
+    /// volume).
+    pub fn hbm_bytes(&self) -> f64 {
+        (self.mp * self.kp + self.kp * self.np) as f64 * self.elem_bytes as f64
+            + (self.mp * self.np) as f64 * 4.0
+    }
+}
+
+/// Largest multiple of `tile` that divides `dim` and is <= pref.
+fn divisor_block(dim: usize, pref: usize, tile: usize) -> usize {
+    debug_assert_eq!(dim % tile, 0);
+    let mut best = tile;
+    let mut b = tile;
+    while b <= dim.min(pref) {
+        if dim % b == 0 {
+            best = b;
+        }
+        b += tile;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, gens};
+
+    #[test]
+    fn paper_example_100x100_wastes_39pct() {
+        // Paper §4.2: "a matrix of shape [100, 100] will need 6384 zeros
+        // padded to run on a 128x128 matrix unit, which wastes 39%".
+        let padded = round_up(100, 128) * round_up(100, 128) - 100 * 100;
+        assert_eq!(padded, 6384);
+        let waste = padded as f64 / (128.0 * 128.0);
+        assert!((waste - 0.39).abs() < 0.01, "{waste}");
+    }
+
+    #[test]
+    fn aligned_shapes_full_occupancy() {
+        let p = MatmulPlan::tpu(256, 512, 128, 4);
+        assert_eq!(p.mxu_occupancy(), 1.0);
+        assert_eq!(p.grid().0 * p.bm, 256);
+    }
+
+    #[test]
+    fn plan_respects_vmem_budget() {
+        let p = MatmulPlan::tpu(4096, 65536, 4096, 4);
+        assert!(p.vmem_bytes() <= VMEM_BUDGET_BYTES || p.bk == 128);
+    }
+
+    #[test]
+    fn accelerator_tile_rules() {
+        assert_eq!(Accelerator::TpuV3.tile_rule(4), TileRule { row: 8, col: 128 });
+        assert_eq!(Accelerator::A100.tile_rule(2), TileRule { row: 64, col: 64 });
+        assert_eq!(Accelerator::A100.tile_rule(4), TileRule { row: 32, col: 32 });
+        assert_eq!(Accelerator::V100.tile_rule(2), TileRule { row: 8, col: 8 });
+    }
+
+    #[test]
+    fn prop_plan_invariants() {
+        forall(
+            gens::vec(gens::usize_in(1..2000), 3..4),
+            |dims| {
+                let (m, k, n) = (dims[0], dims[1], dims[2]);
+                let p = MatmulPlan::tpu(m, k, n, 4);
+                p.mp % 8 == 0
+                    && p.kp % 128 == 0
+                    && p.np % 128 == 0
+                    && p.mp >= m
+                    && p.kp >= k
+                    && p.np >= n
+                    && p.mp % p.bm == 0
+                    && p.kp % p.bk == 0
+                    && p.np % p.bn == 0
+                    && p.mxu_occupancy() > 0.0
+                    && p.mxu_occupancy() <= 1.0
+                    && (p.vmem_bytes() <= VMEM_BUDGET_BYTES || p.bk == 128)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_occupancy_monotone_in_alignment() {
+        // Aligning a dim can only improve (or keep) occupancy.
+        forall(gens::usize_in(1..512), |&m| {
+            let unaligned = MatmulPlan::tpu(m, 300, 300, 4);
+            let aligned = MatmulPlan::tpu(round_up(m, 8), 300, 300, 4);
+            aligned.mxu_occupancy() >= unaligned.mxu_occupancy() - 1e-12
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! # ParaGAN — scalable distributed GAN training (SoCC '24 reproduction)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — coordinator: async G/D update scheme, asymmetric
+//!   optimization policy, congestion-aware data pipeline, hardware-aware
+//!   layout planning, scaling manager, cluster-scale simulator.
+//! * **L2** — JAX GAN models (python/compile/model.py), AOT-lowered once to
+//!   HLO text.
+//! * **L1** — Pallas layout-aware kernels (python/compile/kernels/).
+//!
+//! Python never runs on the training path: `runtime` loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and this crate owns the
+//! whole loop.
+
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod exec;
+pub mod gan;
+pub mod layout;
+pub mod metrics;
+pub mod pipeline;
+pub mod repro;
+pub mod runtime;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,220 @@
+//! `paragan` — leader entrypoint / CLI.
+//!
+//! ```text
+//! paragan train    --model dcgan32 --steps 300 --scheme async --g-opt adabelief --d-opt adam
+//! paragan repro    <table1|table2|fig1|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig13|all>
+//! paragan simulate --workers 1024 --per-worker-batch 16 [--framework native_tf]
+//! paragan info     [--artifacts artifacts]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use paragan::cluster::{biggan, simulate, FrameworkProfile, SimConfig};
+use paragan::coordinator::{LrScaling, OptimizationPolicy, ScalingConfig};
+use paragan::gan::{Estimator, UpdateScheme};
+use paragan::metrics::tracker::sparkline;
+use paragan::repro;
+use paragan::util::cli::Args;
+use paragan::util::table::{f2, pct, si, Table};
+
+fn main() {
+    let args = Args::from_env(&["help", "verbose"]);
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:?}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(args),
+        Some("repro") => cmd_repro(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("info") => cmd_info(args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "paragan — scalable distributed GAN training (SoCC'24 reproduction)\n\n\
+         USAGE:\n\
+         \x20 paragan train    --model <dcgan32|sngan32|biggan32> --steps N [--scheme sync|async]\n\
+         \x20                  [--g-opt OPT] [--d-opt OPT] [--precision fp32|bf16] [--d-ratio N]\n\
+         \x20                  [--eval-every N] [--checkpoint-dir DIR] [--artifacts DIR] [--seed N]\n\
+         \x20 paragan repro    <table1|table2|fig1|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig13|all>\n\
+         \x20 paragan simulate --workers N [--per-worker-batch N] [--framework paragan|native_tf|studiogan]\n\
+         \x20 paragan info     [--artifacts DIR]"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dcgan32");
+    let steps = args.get_u64("steps", 200);
+    let scheme = match args.get_or("scheme", "sync").as_str() {
+        "async" => UpdateScheme::Async,
+        "sync" => UpdateScheme::Sync,
+        other => bail!("unknown scheme '{other}'"),
+    };
+    let policy = OptimizationPolicy {
+        generator: paragan::coordinator::NetPolicy {
+            optimizer: args.get_or("g-opt", "adabelief"),
+            lr_mult: args.get_f64("g-lr-mult", 1.0),
+        },
+        discriminator: paragan::coordinator::NetPolicy {
+            optimizer: args.get_or("d-opt", "adam"),
+            lr_mult: args.get_f64("d-lr-mult", 1.0),
+        },
+        precision: args.get_or("precision", "fp32"),
+        d_steps_per_g: args.get_usize("d-ratio", 1),
+    };
+    let scaling = ScalingConfig {
+        base_lr: args.get_f64("lr", 2e-4),
+        warmup_steps: args.get_u64("warmup", 0),
+        rule: match args.get_or("lr-scaling", "sqrt").as_str() {
+            "linear" => LrScaling::Linear,
+            "none" => LrScaling::None,
+            _ => LrScaling::Sqrt,
+        },
+        ..Default::default()
+    };
+
+    println!("training {model} for {steps} steps [{scheme:?}] policy: {}", policy.describe());
+    let mut est = Estimator::new(&model)
+        .artifact_dir(artifacts_dir(args))
+        .policy(policy)
+        .scaling(scaling)
+        .scheme(scheme)
+        .steps(steps)
+        .seed(args.get_u64("seed", 42))
+        .eval_every(args.get_u64("eval-every", 0))
+        .log_every(args.get_u64("log-every", 25));
+    if let Some(dir) = args.get("checkpoint-dir") {
+        est = est.checkpoint(dir, args.get_u64("checkpoint-every", 100));
+    }
+    let res = est.train()?;
+
+    println!(
+        "\ndone in {:.1}s — {:.2} steps/s, {:.1} img/s",
+        res.wall_secs,
+        res.steps_per_sec(),
+        res.images_per_sec()
+    );
+    let g: Vec<f64> = res.g_loss.downsample(60).iter().map(|p| p.value).collect();
+    let d: Vec<f64> = res.d_loss.downsample(60).iter().map(|p| p.value).collect();
+    println!("g_loss {}  (last {:.4})", sparkline(&g), res.g_loss.last().unwrap_or(f64::NAN));
+    println!("d_loss {}  (last {:.4})", sparkline(&d), res.d_loss.last().unwrap_or(f64::NAN));
+    println!(
+        "FID-proxy: {:.2}   mode coverage: {:.2}   mean staleness: {:.2}",
+        res.final_fid(),
+        res.mode_cov.last().unwrap_or(f64::NAN),
+        res.mean_staleness
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let dir = artifacts_dir(args);
+    let steps = args.get_usize("sim-steps", 200);
+    let train_steps = args.get_u64("train-steps", 60);
+    let run = |name: &str| -> Result<()> {
+        match name {
+            "table1" => println!("{}", repro::table1(steps).render()),
+            "table2" => println!("{}", repro::table2(steps).0.render()),
+            "fig1" => println!("{}", repro::fig1(16, steps).0.render()),
+            "fig4" => println!("{}", repro::fig4(16, steps).0.render()),
+            "fig7" => println!("{}", repro::fig7(16, steps).0.render()),
+            "fig8" => println!("{}", repro::fig8(steps).0.render()),
+            "fig9" => println!("{}", repro::fig9(16, steps).0.render()),
+            "fig10" => println!("{}", repro::fig10(16, steps).0.render()),
+            "fig11" => println!("{}", repro::fig11(&Default::default()).0.render()),
+            "fig6" => {
+                let cfg = repro::Fig6Config {
+                    artifact_dir: dir.clone(),
+                    steps: train_steps,
+                    ..Default::default()
+                };
+                println!("{}", repro::fig6(&cfg)?.0.render());
+            }
+            "fig13" => {
+                let cfg = repro::Fig13Config {
+                    artifact_dir: dir.clone(),
+                    steps: train_steps,
+                    eval_every: (train_steps / 4).max(1),
+                    ..Default::default()
+                };
+                println!("{}", repro::fig13(&cfg)?.0.render());
+            }
+            other => bail!("unknown experiment '{other}'"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in
+            ["table1", "fig1", "fig4", "fig7", "fig8", "fig9", "fig10", "table2", "fig11", "fig6", "fig13"]
+        {
+            run(name)?;
+        }
+    } else {
+        run(which)?;
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let n = args.get_usize("workers", 128);
+    let pwb = args.get_usize("per-worker-batch", 16);
+    let mut cfg = SimConfig::tpu_default(biggan(128), n, n * pwb);
+    cfg.framework = match args.get_or("framework", "paragan").as_str() {
+        "native_tf" => FrameworkProfile::native_tf(),
+        "studiogan" => FrameworkProfile::studiogan(),
+        _ => FrameworkProfile::paragan(),
+    };
+    cfg.steps = args.get_usize("sim-steps", 300);
+    let r = simulate(&cfg);
+    let mut t = Table::new(
+        &format!("simulation: {} workers, {} ({})", n, cfg.workload.name, cfg.framework.name),
+        &["metric", "value"],
+    );
+    t.row(vec!["img/s".into(), si(r.img_per_sec)]);
+    t.row(vec!["steps/s".into(), f2(r.steps_per_sec)]);
+    t.row(vec!["step time (ms)".into(), f2(r.mean_step_time * 1e3)]);
+    t.row(vec!["MXU utilization".into(), pct(r.mxu_utilization)]);
+    t.row(vec!["MXU occupancy (layout)".into(), pct(r.mxu_occupancy)]);
+    t.row(vec!["infeed idle".into(), pct(r.frac_infeed)]);
+    t.row(vec!["comm exposed".into(), pct(r.frac_comm)]);
+    t.row(vec!["straggler".into(), pct(r.frac_straggler)]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = paragan::runtime::Manifest::load(&dir)?;
+    let mut t = Table::new(
+        &format!("artifacts in {dir:?} (batch {})", m.batch),
+        &["model", "G params", "D params", "loss", "classes", "artifacts"],
+    );
+    for (name, model) in &m.models {
+        t.row(vec![
+            name.clone(),
+            si(model.n_params_g() as f64),
+            si(model.n_params_d() as f64),
+            model.loss.clone(),
+            model.n_classes.to_string(),
+            model.artifacts.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

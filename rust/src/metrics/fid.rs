@@ -1,0 +1,357 @@
+//! Frechet distance between Gaussian feature distributions (FID-proxy).
+//!
+//! FID(N(m1,C1), N(m2,C2)) = |m1-m2|^2 + tr(C1 + C2 - 2 (C1 C2)^{1/2}).
+//!
+//! The feature extractor is the fixed random conv net exported as the
+//! `fid_features` HLO artifact (Inception-v3 substitution — DESIGN.md §1);
+//! this module does the statistics.  The matrix square root uses
+//! Newton–Schulz iteration on the symmetrized product
+//! tr sqrt(C1 C2) = tr sqrt(C2^{1/2} C1 C2^{1/2}), which is PSD — all pure
+//! matmuls, no eigensolver dependency.
+
+/// Column-major-free tiny dense matrix (row-major `d x d`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub d: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(d: usize) -> Mat {
+        Mat { d, a: vec![0.0; d * d] }
+    }
+    pub fn eye(d: usize) -> Mat {
+        let mut m = Mat::zeros(d);
+        for i in 0..d {
+            m.a[i * d + i] = 1.0;
+        }
+        m
+    }
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.d + j]
+    }
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.a[i * self.d + j]
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.d, other.d);
+        let d = self.d;
+        let mut out = Mat::zeros(d);
+        for i in 0..d {
+            for k in 0..d {
+                let aik = self.at(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let row = &other.a[k * d..(k + 1) * d];
+                let orow = &mut out.a[i * d..(i + 1) * d];
+                for j in 0..d {
+                    orow[j] += aik * row[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        for (o, x) in out.a.iter_mut().zip(&other.a) {
+            *o += x;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for o in out.a.iter_mut() {
+            *o *= s;
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.d).map(|i| self.at(i, i)).sum()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.a.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Newton–Schulz iteration for the principal square root of a PSD
+    /// matrix.  Converges when the spectrum is scaled into (0, 2); we add a
+    /// small ridge for rank-deficient sample covariances.
+    pub fn psd_sqrt(&self, iters: usize) -> Mat {
+        let d = self.d;
+        let ridge = 1e-8 * (self.trace() / d as f64).max(1e-12);
+        let mut m = self.clone();
+        for i in 0..d {
+            *m.at_mut(i, i) += ridge;
+        }
+        let norm = m.frobenius().max(1e-30);
+        let mut y = m.scale(1.0 / norm);
+        let mut z = Mat::eye(d);
+        for _ in 0..iters {
+            // Y <- Y (3I - Z Y)/2 ; Z <- (3I - Z Y)/2 Z
+            let zy = z.matmul(&y);
+            let mut t = zy.scale(-1.0);
+            for i in 0..d {
+                *t.at_mut(i, i) += 3.0;
+            }
+            let t = t.scale(0.5);
+            y = y.matmul(&t);
+            z = t.matmul(&z);
+        }
+        y.scale(norm.sqrt())
+    }
+}
+
+/// Gaussian statistics of a feature set: mean + covariance.
+#[derive(Debug, Clone)]
+pub struct FeatureStats {
+    pub mean: Vec<f64>,
+    pub cov: Mat,
+    pub n: usize,
+}
+
+impl FeatureStats {
+    /// `features`: row-major (n, d).
+    pub fn fit(features: &[f32], d: usize) -> FeatureStats {
+        assert!(d > 0 && features.len() % d == 0);
+        let n = features.len() / d;
+        assert!(n > 1, "need >= 2 samples for covariance");
+        let mut mean = vec![0.0f64; d];
+        for row in features.chunks_exact(d) {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut cov = Mat::zeros(d);
+        for row in features.chunks_exact(d) {
+            for i in 0..d {
+                let di = row[i] as f64 - mean[i];
+                for j in i..d {
+                    let dj = row[j] as f64 - mean[j];
+                    *cov.at_mut(i, j) += di * dj;
+                }
+            }
+        }
+        // Mirror the upper triangle, unbiased estimator.
+        for i in 0..d {
+            for j in i..d {
+                let v = cov.at(i, j) / (n - 1) as f64;
+                *cov.at_mut(i, j) = v;
+                *cov.at_mut(j, i) = v;
+            }
+        }
+        FeatureStats { mean, cov, n }
+    }
+}
+
+/// Frechet distance between two fitted feature distributions.
+pub fn frechet_distance(a: &FeatureStats, b: &FeatureStats) -> f64 {
+    assert_eq!(a.mean.len(), b.mean.len());
+    let mean_term: f64 =
+        a.mean.iter().zip(&b.mean).map(|(x, y)| (x - y) * (x - y)).sum();
+    // tr sqrt(C1 C2) via the PSD symmetrization.
+    let s = a.cov.psd_sqrt(24);
+    let inner = s.matmul(&b.cov).matmul(&s);
+    let tr_sqrt = inner.psd_sqrt(24).trace();
+    (mean_term + a.cov.trace() + b.cov.trace() - 2.0 * tr_sqrt).max(0.0)
+}
+
+/// Inception-Score proxy: exp(mean KL(p(y|x) || p(y))) over mode-assignment
+/// softmax distributions derived from feature-to-mode-center distances.
+pub fn inception_score_proxy(features: &[f32], d: usize, centers: &[Vec<f64>]) -> f64 {
+    let n = features.len() / d;
+    let k = centers.len();
+    if n == 0 || k == 0 {
+        return 1.0;
+    }
+    let mut cond = vec![vec![0.0f64; k]; n];
+    for (i, row) in features.chunks_exact(d).enumerate() {
+        let mut logits: Vec<f64> = centers
+            .iter()
+            .map(|c| {
+                let d2: f64 =
+                    row.iter().zip(c).map(|(&x, &y)| (x as f64 - y) * (x as f64 - y)).sum();
+                -d2
+            })
+            .collect();
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for l in logits.iter_mut() {
+            *l = (*l - mx).exp();
+            z += *l;
+        }
+        for (j, l) in logits.iter().enumerate() {
+            cond[i][j] = l / z;
+        }
+    }
+    let mut marginal = vec![0.0f64; k];
+    for c in &cond {
+        for (m, p) in marginal.iter_mut().zip(c) {
+            *m += p / n as f64;
+        }
+    }
+    let mut kl = 0.0;
+    for c in &cond {
+        for (p, q) in c.iter().zip(&marginal) {
+            if *p > 1e-12 {
+                kl += p * (p / q.max(1e-12)).ln() / n as f64;
+            }
+        }
+    }
+    kl.exp()
+}
+
+/// Mode coverage: fraction of `centers` that at least one feature row is
+/// nearest to — the mode-collapse detector for the Fig. 13 experiments.
+pub fn mode_coverage(features: &[f32], d: usize, centers: &[Vec<f64>]) -> f64 {
+    let k = centers.len();
+    if k == 0 {
+        return 0.0;
+    }
+    let mut hit = vec![false; k];
+    for row in features.chunks_exact(d) {
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for (j, c) in centers.iter().enumerate() {
+            let d2: f64 =
+                row.iter().zip(c).map(|(&x, &y)| (x as f64 - y) * (x as f64 - y)).sum();
+            if d2 < best_d {
+                best_d = d2;
+                best = j;
+            }
+        }
+        hit[best] = true;
+    }
+    hit.iter().filter(|h| **h).count() as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_features(rng: &mut Rng, n: usize, d: usize, mean: f32, std: f32) -> Vec<f32> {
+        let mut v = vec![0f32; n * d];
+        rng.fill_gaussian(&mut v, mean, std);
+        v
+    }
+
+    #[test]
+    fn psd_sqrt_of_diagonal() {
+        let mut m = Mat::zeros(3);
+        for (i, v) in [4.0, 9.0, 16.0].iter().enumerate() {
+            *m.at_mut(i, i) = *v;
+        }
+        let s = m.psd_sqrt(30);
+        for (i, v) in [2.0, 3.0, 4.0].iter().enumerate() {
+            assert!((s.at(i, i) - v).abs() < 1e-4, "{:?}", s);
+        }
+    }
+
+    #[test]
+    fn psd_sqrt_squares_back() {
+        let mut rng = Rng::new(3);
+        let d = 8;
+        // Random PSD: A A^T.
+        let mut a = Mat::zeros(d);
+        for v in a.a.iter_mut() {
+            *v = rng.gaussian();
+        }
+        let mut at = Mat::zeros(d);
+        for i in 0..d {
+            for j in 0..d {
+                *at.at_mut(i, j) = a.at(j, i);
+            }
+        }
+        let psd = a.matmul(&at);
+        let s = psd.psd_sqrt(40);
+        let back = s.matmul(&s);
+        let err = back.add(&psd.scale(-1.0)).frobenius() / psd.frobenius();
+        assert!(err < 1e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn fid_zero_for_identical_distributions() {
+        let mut rng = Rng::new(1);
+        let f = gaussian_features(&mut rng, 4000, 8, 0.0, 1.0);
+        let a = FeatureStats::fit(&f, 8);
+        let fid = frechet_distance(&a, &a);
+        assert!(fid < 1e-3, "{fid}");
+    }
+
+    #[test]
+    fn fid_detects_mean_shift_quadratically() {
+        let mut rng = Rng::new(2);
+        let a = FeatureStats::fit(&gaussian_features(&mut rng, 6000, 6, 0.0, 1.0), 6);
+        let b1 = FeatureStats::fit(&gaussian_features(&mut rng, 6000, 6, 1.0, 1.0), 6);
+        let b2 = FeatureStats::fit(&gaussian_features(&mut rng, 6000, 6, 2.0, 1.0), 6);
+        let f1 = frechet_distance(&a, &b1);
+        let f2 = frechet_distance(&a, &b2);
+        // |dm|^2 = d * shift^2: 6 and 24.
+        assert!((f1 - 6.0).abs() < 1.0, "{f1}");
+        assert!((f2 - 24.0).abs() < 3.0, "{f2}");
+    }
+
+    #[test]
+    fn fid_detects_variance_collapse() {
+        // Mode collapse shrinks the generator's feature covariance.
+        let mut rng = Rng::new(4);
+        let real = FeatureStats::fit(&gaussian_features(&mut rng, 6000, 6, 0.0, 1.0), 6);
+        let collapsed = FeatureStats::fit(&gaussian_features(&mut rng, 6000, 6, 0.0, 0.1), 6);
+        let fid = frechet_distance(&real, &collapsed);
+        // tr(C1) + tr(C2) - 2 tr sqrt(C1C2) = 6(1 + .01 - 2*.1) = 4.86.
+        assert!((fid - 4.86).abs() < 0.6, "{fid}");
+        assert!(fid > frechet_distance(&real, &real) + 1.0);
+    }
+
+    #[test]
+    fn fid_symmetric() {
+        let mut rng = Rng::new(5);
+        let a = FeatureStats::fit(&gaussian_features(&mut rng, 3000, 5, 0.0, 1.0), 5);
+        let b = FeatureStats::fit(&gaussian_features(&mut rng, 3000, 5, 0.7, 1.4), 5);
+        let ab = frechet_distance(&a, &b);
+        let ba = frechet_distance(&b, &a);
+        assert!((ab - ba).abs() / ab < 0.02, "{ab} vs {ba}");
+    }
+
+    #[test]
+    fn is_proxy_higher_for_diverse_samples() {
+        let centers: Vec<Vec<f64>> =
+            (0..4).map(|k| (0..3).map(|j| if j == k % 3 { 5.0 } else { 0.0 }).collect()).collect();
+        // Diverse: rows near all 4 centers.
+        let mut diverse = Vec::new();
+        for k in 0..4 {
+            for _ in 0..25 {
+                for j in 0..3 {
+                    diverse.push(if j == k % 3 { 5.0 } else { 0.0 });
+                }
+            }
+        }
+        // Collapsed: all rows near center 0.
+        let collapsed: Vec<f32> =
+            (0..100).flat_map(|_| vec![5.0f32, 0.0, 0.0]).collect();
+        let is_d = inception_score_proxy(&diverse, 3, &centers);
+        let is_c = inception_score_proxy(&collapsed, 3, &centers);
+        assert!(is_d > is_c, "diverse {is_d} collapsed {is_c}");
+    }
+
+    #[test]
+    fn mode_coverage_detects_collapse() {
+        let centers: Vec<Vec<f64>> = (0..8)
+            .map(|k| (0..4).map(|j| if j == k % 4 { k as f64 + 1.0 } else { 0.0 }).collect())
+            .collect();
+        let all: Vec<f32> = centers.iter().flat_map(|c| c.iter().map(|&x| x as f32)).collect();
+        assert_eq!(mode_coverage(&all, 4, &centers), 1.0);
+        let one: Vec<f32> = centers[0].iter().map(|&x| x as f32).collect();
+        assert_eq!(mode_coverage(&one, 4, &centers), 1.0 / 8.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation metrics (paper §3.1.3): FID-proxy, IS-proxy, mode coverage,
+//! loss tracking.  The feature extractor is the `fid_features` AOT artifact;
+//! this module owns the statistics and reporting.
+
+pub mod fid;
+pub mod tracker;
+
+pub use fid::{frechet_distance, inception_score_proxy, mode_coverage, FeatureStats, Mat};
+pub use tracker::{sparkline, Series, SeriesPoint};

@@ -1,0 +1,180 @@
+//! Loss/metric tracking over a training run: per-step series, EMA smoothing,
+//! collapse detection, CSV/markdown export for the Fig. 6 / Fig. 13 curves.
+
+use crate::util::stats::Ema;
+
+#[derive(Debug, Clone)]
+pub struct SeriesPoint {
+    pub step: u64,
+    pub value: f64,
+}
+
+#[derive(Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<SeriesPoint>,
+    ema: Ema,
+    pub smoothed: Vec<SeriesPoint>,
+}
+
+impl Series {
+    pub fn new(name: &str, ema_alpha: f64) -> Self {
+        Series {
+            name: name.to_string(),
+            points: Vec::new(),
+            ema: Ema::new(ema_alpha),
+            smoothed: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push(SeriesPoint { step, value });
+        let s = self.ema.push(value);
+        self.smoothed.push(SeriesPoint { step, value: s });
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.value)
+    }
+
+    pub fn last_smoothed(&self) -> Option<f64> {
+        self.smoothed.last().map(|p| p.value)
+    }
+
+    /// Mean of the final `frac` of the series (end-of-training level).
+    pub fn tail_mean(&self, frac: f64) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let start = ((1.0 - frac.clamp(0.0, 1.0)) * self.points.len() as f64) as usize;
+        let tail = &self.points[start.min(self.points.len() - 1)..];
+        tail.iter().map(|p| p.value).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Std-dev of the final `frac` — the paper's "flatter loss curve"
+    /// stability criterion (Fig. 6).
+    pub fn tail_std(&self, frac: f64) -> f64 {
+        if self.points.len() < 2 {
+            return 0.0;
+        }
+        let start = ((1.0 - frac.clamp(0.0, 1.0)) * self.points.len() as f64) as usize;
+        let tail = &self.points[start.min(self.points.len() - 2)..];
+        let m = tail.iter().map(|p| p.value).sum::<f64>() / tail.len() as f64;
+        (tail.iter().map(|p| (p.value - m) * (p.value - m)).sum::<f64>()
+            / (tail.len() - 1).max(1) as f64)
+            .sqrt()
+    }
+
+    /// Detect a late-training blow-up: tail level much worse than the best
+    /// smoothed level (the Fig. 6 "Adam collapses after 100K steps" shape).
+    pub fn collapsed(&self, factor: f64) -> bool {
+        let best =
+            self.smoothed.iter().map(|p| p.value).fold(f64::INFINITY, f64::min);
+        match self.last_smoothed() {
+            Some(last) => best.is_finite() && last > best * factor + 1e-9 && last > best + 0.5,
+            None => false,
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("step,{}\n", self.name);
+        for p in &self.points {
+            s.push_str(&format!("{},{}\n", p.step, p.value));
+        }
+        s
+    }
+
+    /// Downsample to ~`n` points for terminal plotting.
+    pub fn downsample(&self, n: usize) -> Vec<SeriesPoint> {
+        if self.points.len() <= n || n == 0 {
+            return self.points.clone();
+        }
+        let stride = self.points.len() as f64 / n as f64;
+        (0..n)
+            .map(|i| self.points[(i as f64 * stride) as usize].clone())
+            .collect()
+    }
+}
+
+/// ASCII sparkline for terminal loss curves.
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return String::new();
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_and_smooths() {
+        let mut s = Series::new("loss", 0.5);
+        for i in 0..10 {
+            s.push(i, 10.0 - i as f64);
+        }
+        assert_eq!(s.points.len(), 10);
+        assert_eq!(s.last(), Some(1.0));
+        assert!(s.last_smoothed().unwrap() > 1.0); // EMA lags
+    }
+
+    #[test]
+    fn tail_statistics() {
+        let mut s = Series::new("x", 0.1);
+        for i in 0..100 {
+            s.push(i, if i < 80 { 5.0 } else { 1.0 });
+        }
+        assert!((s.tail_mean(0.2) - 1.0).abs() < 1e-9);
+        assert!(s.tail_std(0.2) < 1e-9);
+    }
+
+    #[test]
+    fn collapse_detection() {
+        let mut stable = Series::new("stable", 0.2);
+        let mut collapsing = Series::new("collapse", 0.2);
+        for i in 0..200 {
+            stable.push(i, 1.0 + 0.01 * (i as f64).sin());
+            // Collapses late: loss explodes after step 150.
+            collapsing.push(i, if i < 150 { 1.0 } else { 1.0 + (i - 150) as f64 * 0.4 });
+        }
+        assert!(!stable.collapsed(2.0));
+        assert!(collapsing.collapsed(2.0));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut s = Series::new("g_loss", 0.1);
+        s.push(1, 0.5);
+        s.push(2, 0.25);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("step,g_loss\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let sl = sparkline(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(sl.chars().count(), 4);
+        assert!(sl.starts_with('▁') && sl.ends_with('█'));
+    }
+
+    #[test]
+    fn downsample_preserves_endpoints_roughly() {
+        let mut s = Series::new("x", 0.1);
+        for i in 0..1000 {
+            s.push(i, i as f64);
+        }
+        let d = s.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0].step, 0);
+        assert!(d[9].step >= 900);
+    }
+}

@@ -1,0 +1,177 @@
+//! Storage/network latency processes (the environment the pipeline tunes
+//! against).
+//!
+//! Paper §4.1: "due to traffic congestion within the data center, the
+//! latency between the storage node and the accelerator node is not always
+//! stable during peak hours".  We model that as a Markov-modulated process:
+//! a two-state (Normal / Congested) chain whose dwell times are geometric,
+//! with log-normal per-fetch latency in each state plus burst jitter.  The
+//! same process drives both the REAL pipeline (as injected sleeps, Fig. 11)
+//! and the cluster simulator (as virtual time).
+
+use crate::util::rng::Rng;
+
+/// A latency source: per-fetch latency in seconds.
+pub trait LatencySource: Send {
+    fn next_latency(&mut self) -> f64;
+}
+
+/// Fixed latency (unit tests, ideal-network baselines).
+pub struct Constant(pub f64);
+
+impl LatencySource for Constant {
+    fn next_latency(&mut self) -> f64 {
+        self.0
+    }
+}
+
+/// Log-normal latency with no regime switching (a well-behaved network).
+pub struct LogNormal {
+    pub median: f64,
+    pub sigma: f64,
+    pub rng: Rng,
+}
+
+impl LatencySource for LogNormal {
+    fn next_latency(&mut self) -> f64 {
+        self.rng.lognormal(self.median.ln(), self.sigma)
+    }
+}
+
+/// Two-state Markov-modulated congestion process.
+#[derive(Debug, Clone)]
+pub struct CongestionModel {
+    /// Median fetch latency in the Normal state (seconds).
+    pub base_median: f64,
+    /// Log-normal sigma in the Normal state.
+    pub base_sigma: f64,
+    /// Latency multiplier while Congested.
+    pub congested_factor: f64,
+    /// Log-normal sigma while Congested (jitter grows under congestion).
+    pub congested_sigma: f64,
+    /// P(Normal -> Congested) per fetch.
+    pub p_enter: f64,
+    /// P(Congested -> Normal) per fetch.
+    pub p_exit: f64,
+}
+
+impl Default for CongestionModel {
+    fn default() -> Self {
+        // Calibrated to the paper's setting: storage<->compute over shared
+        // Ethernet; congestion episodes of ~100s of fetches raising latency
+        // ~4x with heavy jitter.
+        CongestionModel {
+            base_median: 2e-3,
+            base_sigma: 0.25,
+            congested_factor: 4.2,
+            congested_sigma: 0.6,
+            p_enter: 0.0019,
+            p_exit: 0.035,
+        }
+    }
+}
+
+pub struct MarkovCongestion {
+    pub model: CongestionModel,
+    pub congested: bool,
+    pub rng: Rng,
+    transitions: u64,
+}
+
+impl MarkovCongestion {
+    pub fn new(model: CongestionModel, seed: u64) -> Self {
+        MarkovCongestion { model, congested: false, rng: Rng::new(seed), transitions: 0 }
+    }
+
+    pub fn is_congested(&self) -> bool {
+        self.congested
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+}
+
+impl LatencySource for MarkovCongestion {
+    fn next_latency(&mut self) -> f64 {
+        let m = &self.model;
+        let flip = if self.congested { self.rng.bool(m.p_exit) } else { self.rng.bool(m.p_enter) };
+        if flip {
+            self.congested = !self.congested;
+            self.transitions += 1;
+        }
+        if self.congested {
+            self.rng.lognormal((m.base_median * m.congested_factor).ln(), m.congested_sigma)
+        } else {
+            self.rng.lognormal(m.base_median.ln(), m.base_sigma)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let mut c = Constant(0.5);
+        assert_eq!(c.next_latency(), 0.5);
+        assert_eq!(c.next_latency(), 0.5);
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut l = LogNormal { median: 10e-3, sigma: 0.3, rng: Rng::new(1) };
+        let mut xs: Vec<f64> = (0..20_000).map(|_| l.next_latency()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        assert!((med / 10e-3 - 1.0).abs() < 0.05, "{med}");
+    }
+
+    #[test]
+    fn markov_visits_both_states_and_congestion_is_slower() {
+        let mut m = MarkovCongestion::new(CongestionModel::default(), 7);
+        let mut normal = Vec::new();
+        let mut congested = Vec::new();
+        for _ in 0..60_000 {
+            let was = m.is_congested();
+            let lat = m.next_latency();
+            if was || m.is_congested() {
+                congested.push(lat);
+            } else {
+                normal.push(lat);
+            }
+        }
+        assert!(m.transitions() >= 10, "transitions {}", m.transitions());
+        assert!(!normal.is_empty() && !congested.is_empty());
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&congested) > 2.0 * mean(&normal),
+            "congested {} normal {}",
+            mean(&congested),
+            mean(&normal)
+        );
+    }
+
+    #[test]
+    fn markov_dwell_times_geometric() {
+        // Expected dwell in congested state = 1/p_exit fetches.
+        let model = CongestionModel { p_enter: 0.01, p_exit: 0.05, ..Default::default() };
+        let mut m = MarkovCongestion::new(model, 3);
+        let mut dwell = Vec::new();
+        let mut cur = 0u64;
+        for _ in 0..200_000 {
+            let before = m.is_congested();
+            m.next_latency();
+            if before {
+                cur += 1;
+                if !m.is_congested() {
+                    dwell.push(cur as f64);
+                    cur = 0;
+                }
+            }
+        }
+        let mean = dwell.iter().sum::<f64>() / dwell.len() as f64;
+        assert!((mean - 20.0).abs() < 4.0, "mean dwell {mean}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Congestion-aware data pipeline (paper §4.1).
+//!
+//! Storage node with an injectable network-latency process, prefetch worker
+//! pool, bounded batch buffer, the sliding-window congestion tuner, and the
+//! asynchronous checkpoint writer.  The tuner is a pure state machine shared
+//! verbatim with the cluster simulator (DESIGN.md §5.3), so ablation deltas
+//! in Table 2 are produced by the same code that runs on the real path.
+
+pub mod checkpoint;
+pub mod latency;
+pub mod prefetcher;
+pub mod source;
+pub mod tuner;
+
+pub use checkpoint::{AsyncCheckpointWriter, Checkpoint, TensorSnapshot};
+pub use latency::{CongestionModel, Constant, LatencySource, LogNormal, MarkovCongestion};
+pub use prefetcher::{Batch, DataPipeline, PipelineConfig};
+pub use source::{Record, RecordProducer, StorageNode, SynthImages};
+pub use tuner::{CongestionTuner, TunerAction, TunerConfig};

@@ -1,0 +1,304 @@
+//! The data pipeline itself: prefetch workers -> bounded batch buffer ->
+//! trainer, with the congestion tuner in the loop.
+//!
+//! Two modes, matching the Fig. 11 comparison:
+//!   * `static_pipeline` — fixed worker count + buffer (tf.data baseline);
+//!   * `tuned_pipeline`  — ParaGAN's congestion-aware tuner resizes the
+//!     worker pool and buffer live.
+//!
+//! Workers fetch records from the `StorageNode` (which injects network
+//! latency), assemble batches, and push into a bounded channel; `next_batch`
+//! pops.  Batch-extraction latency — the metric the paper plots — is the
+//! wall-clock time `next_batch` waits.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::source::StorageNode;
+use super::tuner::{CongestionTuner, TunerAction, TunerConfig};
+use crate::exec::{bounded, Receiver, Sender};
+use crate::util::stats::Sample;
+
+/// A training batch (flat NCHW pixels + labels).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub data: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub batch_size: usize,
+    pub initial_workers: usize,
+    pub initial_buffer: usize,
+    /// None => static pipeline (baseline).
+    pub tuner: Option<TunerConfig>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            batch_size: 32,
+            initial_workers: 2,
+            initial_buffer: 8,
+            tuner: Some(TunerConfig::default()),
+        }
+    }
+}
+
+pub struct DataPipeline {
+    rx: Receiver<Batch>,
+    node: Arc<StorageNode>,
+    stop: Arc<AtomicBool>,
+    desired_workers: Arc<AtomicUsize>,
+    live_workers: Arc<AtomicUsize>,
+    tuner: Option<std::sync::Mutex<CongestionTuner>>,
+    /// Batch-extraction latency samples (seconds) — the Fig. 11 metric.
+    extract_latency: std::sync::Mutex<Sample>,
+    handles: std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>,
+    tx_template: Sender<Batch>,
+    batch_size: usize,
+}
+
+impl DataPipeline {
+    pub fn start(node: Arc<StorageNode>, cfg: PipelineConfig) -> Arc<Self> {
+        let buffer = cfg
+            .tuner
+            .as_ref()
+            .map(|t| t.max_buffer)
+            .unwrap_or(cfg.initial_buffer)
+            .max(cfg.initial_buffer);
+        // The channel is allocated at max capacity; the *effective* buffer
+        // bound is enforced by the tuner via desired buffer accounting.
+        let (tx, rx) = bounded::<Batch>(buffer);
+        let pipeline = Arc::new(DataPipeline {
+            rx,
+            node,
+            stop: Arc::new(AtomicBool::new(false)),
+            desired_workers: Arc::new(AtomicUsize::new(cfg.initial_workers)),
+            live_workers: Arc::new(AtomicUsize::new(0)),
+            tuner: cfg.tuner.clone().map(|t| std::sync::Mutex::new(CongestionTuner::new(t))),
+            extract_latency: std::sync::Mutex::new(Sample::new()),
+            handles: std::sync::Mutex::new(Vec::new()),
+            tx_template: tx,
+            batch_size: cfg.batch_size,
+        });
+        for id in 0..cfg.initial_workers {
+            pipeline.spawn_worker(id);
+        }
+        pipeline
+    }
+
+    fn spawn_worker(self: &Arc<Self>, id: usize) {
+        let me = self.clone();
+        let tx = self.tx_template.clone();
+        self.live_workers.fetch_add(1, Ordering::SeqCst);
+        let h = std::thread::spawn(move || {
+            loop {
+                if me.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Worker retires itself if above the desired count (the
+                // tuner "releases the resources").
+                if id >= me.desired_workers.load(Ordering::SeqCst) {
+                    break;
+                }
+                let mut data = Vec::with_capacity(me.batch_size * 3 * 32 * 32);
+                let mut labels = Vec::with_capacity(me.batch_size);
+                for _ in 0..me.batch_size {
+                    let (rec, lat) = me.node.fetch();
+                    // Feed the tuner every record-fetch latency.
+                    if let Some(tuner) = &me.tuner {
+                        let action = tuner.lock().unwrap().observe(lat);
+                        if let TunerAction::Scale { workers, .. } = action {
+                            me.apply_worker_target(workers);
+                        }
+                    }
+                    data.extend_from_slice(&rec.pixels);
+                    labels.push(rec.label);
+                }
+                let batch = Batch { data, labels, batch_size: me.batch_size };
+                if tx.send(batch).is_err() {
+                    break;
+                }
+            }
+            me.live_workers.fetch_sub(1, Ordering::SeqCst);
+        });
+        self.handles.lock().unwrap().push(h);
+    }
+
+    fn apply_worker_target(self: &Arc<Self>, target: usize) {
+        let cur = self.desired_workers.swap(target, Ordering::SeqCst);
+        if target > cur {
+            for id in cur..target {
+                self.spawn_worker(id);
+            }
+        }
+        // Shrink is cooperative: workers with id >= target exit on their
+        // next loop iteration.
+    }
+
+    /// Pop the next batch, recording the extraction latency.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let t0 = Instant::now();
+        let b = self.rx.recv().ok();
+        self.extract_latency.lock().unwrap().push(t0.elapsed().as_secs_f64());
+        b
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.live_workers.load(Ordering::SeqCst)
+    }
+
+    pub fn desired_workers(&self) -> usize {
+        self.desired_workers.load(Ordering::SeqCst)
+    }
+
+    pub fn tuner_stats(&self) -> Option<(u64, u64, usize)> {
+        self.tuner
+            .as_ref()
+            .map(|t| {
+                let t = t.lock().unwrap();
+                (t.grows(), t.shrinks(), t.workers())
+            })
+    }
+
+    /// Drain the recorded batch-extraction latencies (Fig. 11 series).
+    pub fn take_extract_latencies(&self) -> Sample {
+        std::mem::take(&mut *self.extract_latency.lock().unwrap())
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx_template.close();
+        // Drain anything the workers are blocked pushing.
+        while self.rx.try_recv().is_ok() {}
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::latency::{Constant, CongestionModel, MarkovCongestion};
+    use crate::pipeline::source::SynthImages;
+
+    fn node(lat_s: f64) -> Arc<StorageNode> {
+        Arc::new(StorageNode::new(
+            Box::new(SynthImages::new32(8, 1)),
+            Box::new(Constant(lat_s)),
+            true,
+        ))
+    }
+
+    #[test]
+    fn produces_well_formed_batches() {
+        let p = DataPipeline::start(
+            node(0.0),
+            PipelineConfig { batch_size: 4, initial_workers: 1, initial_buffer: 2, tuner: None },
+        );
+        let b = p.next_batch().unwrap();
+        assert_eq!(b.batch_size, 4);
+        assert_eq!(b.data.len(), 4 * 3 * 32 * 32);
+        assert_eq!(b.labels.len(), 4);
+        p.shutdown();
+    }
+
+    #[test]
+    fn static_pipeline_keeps_worker_count() {
+        let p = DataPipeline::start(
+            node(1e-4),
+            PipelineConfig { batch_size: 2, initial_workers: 2, initial_buffer: 4, tuner: None },
+        );
+        for _ in 0..10 {
+            p.next_batch().unwrap();
+        }
+        assert_eq!(p.desired_workers(), 2);
+        p.shutdown();
+    }
+
+    #[test]
+    fn tuned_pipeline_grows_under_congestion() {
+        // Heavy congestion from the start; baseline learned low then spikes.
+        struct Spike {
+            n: u64,
+        }
+        impl crate::pipeline::latency::LatencySource for Spike {
+            fn next_latency(&mut self) -> f64 {
+                self.n += 1;
+                if self.n <= 40 {
+                    2e-4
+                } else {
+                    3e-3
+                }
+            }
+        }
+        let node = Arc::new(StorageNode::new(
+            Box::new(SynthImages::new32(8, 1)),
+            Box::new(Spike { n: 0 }),
+            true,
+        ));
+        let cfg = PipelineConfig {
+            batch_size: 4,
+            initial_workers: 1,
+            initial_buffer: 4,
+            tuner: Some(TunerConfig { window: 16, cooldown: 8, ..Default::default() }),
+        };
+        let p = DataPipeline::start(node, cfg);
+        for _ in 0..60 {
+            p.next_batch().unwrap();
+        }
+        let (grows, _, workers) = p.tuner_stats().unwrap();
+        assert!(grows >= 1, "tuner never grew (workers={workers})");
+        assert!(p.desired_workers() > 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn extraction_latency_recorded() {
+        let p = DataPipeline::start(
+            node(0.0),
+            PipelineConfig { batch_size: 2, initial_workers: 1, initial_buffer: 2, tuner: None },
+        );
+        for _ in 0..5 {
+            p.next_batch().unwrap();
+        }
+        let sample = p.take_extract_latencies();
+        assert_eq!(sample.len(), 5);
+        p.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_and_idempotent() {
+        let p = DataPipeline::start(node(1e-4), PipelineConfig::default());
+        p.next_batch().unwrap();
+        p.shutdown();
+        p.shutdown();
+        assert_eq!(p.live_workers(), 0);
+    }
+
+    #[test]
+    fn markov_source_composes_with_pipeline() {
+        let node = Arc::new(StorageNode::new(
+            Box::new(SynthImages::new32(8, 3)),
+            Box::new(MarkovCongestion::new(
+                CongestionModel { base_median: 1e-4, ..Default::default() },
+                11,
+            )),
+            true,
+        ));
+        let p = DataPipeline::start(
+            node,
+            PipelineConfig { batch_size: 2, initial_workers: 2, initial_buffer: 4, tuner: Some(TunerConfig::default()) },
+        );
+        for _ in 0..20 {
+            assert!(p.next_batch().is_some());
+        }
+        p.shutdown();
+    }
+}

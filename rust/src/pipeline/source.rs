@@ -1,0 +1,205 @@
+//! Storage-node data source: record fetch with injected network latency.
+//!
+//! Stands in for the paper's cloud storage (GCS/NFS) holding ImageNet: a
+//! `DataSource` produces raw records deterministically from its seed, and a
+//! `LatencySource` injects the storage<->compute network behaviour.  The
+//! REAL pipeline sleeps the sampled latency (so Fig. 11 measures actual
+//! wall-clock behaviour of the tuner); the cluster simulator uses the same
+//! latency process in virtual time.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::latency::LatencySource;
+use crate::util::rng::Rng;
+
+/// A raw record: one sample's worth of bytes (decoded image + label).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub seq: u64,
+    pub label: u32,
+    pub pixels: Vec<f32>,
+}
+
+/// Generic record producer ("dataset on the storage node").
+pub trait RecordProducer: Send {
+    fn produce(&mut self, seq: u64) -> Record;
+    /// Per-record payload bytes (for bandwidth accounting).
+    fn record_bytes(&self) -> usize;
+}
+
+/// Synthetic structured dataset: K Gaussian-blob modes rendered as CxHxW
+/// images (see DESIGN.md §1 — ImageNet substitution).  Deterministic in
+/// (seed, seq): every fetch of record `seq` yields identical pixels, like a
+/// real dataset.
+pub struct SynthImages {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub n_modes: u32,
+    pub seed: u64,
+}
+
+impl SynthImages {
+    pub fn new32(n_modes: u32, seed: u64) -> Self {
+        SynthImages { c: 3, h: 32, w: 32, n_modes, seed }
+    }
+
+    /// Mode k's blob center/color, deterministic in (seed, k).
+    fn mode_params(&self, k: u32) -> (f32, f32, [f32; 3], f32) {
+        let mut r = Rng::new(self.seed ^ 0x5EED ^ (k as u64) << 32);
+        let cx = 0.2 + 0.6 * r.f32();
+        let cy = 0.2 + 0.6 * r.f32();
+        let color = [
+            -0.8 + 1.6 * r.f32(),
+            -0.8 + 1.6 * r.f32(),
+            -0.8 + 1.6 * r.f32(),
+        ];
+        let radius = 0.08 + 0.12 * r.f32();
+        (cx, cy, color, radius)
+    }
+}
+
+impl RecordProducer for SynthImages {
+    fn produce(&mut self, seq: u64) -> Record {
+        let mut r = Rng::new(self.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ seq);
+        let label = (seq % self.n_modes as u64) as u32;
+        let (cx, cy, color, radius) = self.mode_params(label);
+        // Jitter the blob slightly per record (intra-mode variety).
+        let jx = cx + 0.03 * r.gaussian() as f32;
+        let jy = cy + 0.03 * r.gaussian() as f32;
+        let mut pixels = vec![0f32; self.c * self.h * self.w];
+        for ch in 0..self.c {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let fx = x as f32 / self.w as f32;
+                    let fy = y as f32 / self.h as f32;
+                    let d2 = (fx - jx).powi(2) + (fy - jy).powi(2);
+                    let v = color[ch % 3] * (-d2 / (2.0 * radius * radius)).exp();
+                    let noise = 0.02 * r.gaussian() as f32;
+                    pixels[(ch * self.h + y) * self.w + x] = (v + noise).clamp(-1.0, 1.0);
+                }
+            }
+        }
+        Record { seq, label, pixels }
+    }
+
+    fn record_bytes(&self) -> usize {
+        self.c * self.h * self.w * 4 + 4
+    }
+}
+
+/// The storage node: producer + latency process + fetch counter.
+/// Thread-safe; prefetch workers share one instance.
+pub struct StorageNode {
+    inner: Mutex<StorageInner>,
+    /// If true, actually sleep the sampled latency (real pipeline); if
+    /// false, only record it (unit tests).
+    pub real_sleep: bool,
+}
+
+struct StorageInner {
+    producer: Box<dyn RecordProducer>,
+    latency: Box<dyn LatencySource>,
+    next_seq: u64,
+    fetches: u64,
+    bytes: u64,
+}
+
+impl StorageNode {
+    pub fn new(
+        producer: Box<dyn RecordProducer>,
+        latency: Box<dyn LatencySource>,
+        real_sleep: bool,
+    ) -> Self {
+        StorageNode {
+            inner: Mutex::new(StorageInner {
+                producer,
+                latency,
+                next_seq: 0,
+                fetches: 0,
+                bytes: 0,
+            }),
+            real_sleep,
+        }
+    }
+
+    /// Fetch the next record; returns (record, latency_seconds).
+    pub fn fetch(&self) -> (Record, f64) {
+        // Sample latency + produce under the lock, sleep outside it so
+        // multiple prefetch workers genuinely overlap fetches.
+        let (rec, lat) = {
+            let mut st = self.inner.lock().unwrap();
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            let lat = st.latency.next_latency();
+            let rec = st.producer.produce(seq);
+            st.fetches += 1;
+            st.bytes += st.producer.record_bytes() as u64;
+            (rec, lat)
+        };
+        if self.real_sleep {
+            std::thread::sleep(Duration::from_secs_f64(lat));
+        }
+        (rec, lat)
+    }
+
+    pub fn fetches(&self) -> u64 {
+        self.inner.lock().unwrap().fetches
+    }
+
+    pub fn bytes_served(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::latency::Constant;
+
+    #[test]
+    fn synth_is_deterministic_per_seq() {
+        let mut a = SynthImages::new32(8, 42);
+        let mut b = SynthImages::new32(8, 42);
+        let r1 = a.produce(17);
+        let r2 = b.produce(17);
+        assert_eq!(r1, r2);
+        assert_eq!(r1.label, 17 % 8);
+        assert_eq!(r1.pixels.len(), 3 * 32 * 32);
+        assert!(r1.pixels.iter().all(|p| (-1.0..=1.0).contains(p)));
+    }
+
+    #[test]
+    fn synth_modes_are_distinct() {
+        let mut s = SynthImages::new32(8, 42);
+        let a = s.produce(0); // mode 0
+        let b = s.produce(1); // mode 1
+        let diff: f32 =
+            a.pixels.iter().zip(&b.pixels).map(|(x, y)| (x - y).abs()).sum::<f32>()
+                / a.pixels.len() as f32;
+        assert!(diff > 0.01, "modes too similar: {diff}");
+    }
+
+    #[test]
+    fn different_seeds_different_datasets() {
+        let a = SynthImages::new32(8, 1).produce(0);
+        let b = SynthImages::new32(8, 2).produce(0);
+        assert_ne!(a.pixels, b.pixels);
+    }
+
+    #[test]
+    fn storage_node_counts_and_sequences() {
+        let node = StorageNode::new(
+            Box::new(SynthImages::new32(4, 9)),
+            Box::new(Constant(0.0)),
+            false,
+        );
+        let (r0, _) = node.fetch();
+        let (r1, _) = node.fetch();
+        assert_eq!(r0.seq, 0);
+        assert_eq!(r1.seq, 1);
+        assert_eq!(node.fetches(), 2);
+        assert_eq!(node.bytes_served() as usize, 2 * (3 * 32 * 32 * 4 + 4));
+    }
+}

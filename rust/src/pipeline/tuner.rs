@@ -1,0 +1,230 @@
+//! Congestion-aware pipeline tuner (paper §4.1) — the decision logic.
+//!
+//! "ParaGAN dynamically adjusts the number of processes and size of the
+//! pre-processing buffer in response to the high-variance network. It is
+//! implemented by maintaining a sliding window for network latency during
+//! runtime. If the current latency over the window exceeds the threshold,
+//! ParaGAN will increase the number of threads and buffer for pre-fetching
+//! and pre-processing; once the latency falls below the threshold, it
+//! releases the resources for pre-processing."
+//!
+//! Pure state machine: observations in, `TunerAction`s out — so invariants
+//! are property-testable without threads.  The prefetcher applies actions to
+//! the real `exec::ThreadPool` and buffer; the cluster simulator applies
+//! them to its virtual pipeline.  Same struct both places (DESIGN.md §5.3).
+
+use crate::util::window::SlidingWindow;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunerAction {
+    /// No change.
+    Hold,
+    /// Grow to (workers, buffer).
+    Scale { workers: usize, buffer: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    pub window: usize,
+    /// Congestion threshold: window mean > factor * baseline median.
+    pub high_factor: f64,
+    /// Release threshold (hysteresis): window mean < factor * baseline.
+    pub low_factor: f64,
+    pub min_workers: usize,
+    pub max_workers: usize,
+    pub min_buffer: usize,
+    pub max_buffer: usize,
+    /// Observations to wait between actions (anti-thrash).
+    pub cooldown: usize,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            window: 32,
+            high_factor: 1.5,
+            low_factor: 1.1,
+            min_workers: 1,
+            max_workers: 16,
+            min_buffer: 4,
+            max_buffer: 256,
+            cooldown: 16,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CongestionTuner {
+    cfg: TunerConfig,
+    window: SlidingWindow,
+    /// Baseline median latency learned from the first full window.
+    baseline: Option<f64>,
+    workers: usize,
+    buffer: usize,
+    since_action: usize,
+    grows: u64,
+    shrinks: u64,
+}
+
+impl CongestionTuner {
+    pub fn new(cfg: TunerConfig) -> Self {
+        let workers = cfg.min_workers;
+        let buffer = cfg.min_buffer;
+        CongestionTuner {
+            window: SlidingWindow::new(cfg.window),
+            cfg,
+            baseline: None,
+            workers,
+            buffer,
+            since_action: 0,
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+    pub fn buffer(&self) -> usize {
+        self.buffer
+    }
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline
+    }
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+
+    /// Feed one fetch-latency observation (seconds); get a resize decision.
+    pub fn observe(&mut self, latency: f64) -> TunerAction {
+        self.window.push(latency);
+        self.since_action += 1;
+        if self.baseline.is_none() {
+            if self.window.is_full() {
+                self.baseline = Some(self.window.quantile(0.5));
+            }
+            return TunerAction::Hold;
+        }
+        let baseline = self.baseline.unwrap();
+        if self.since_action < self.cfg.cooldown {
+            return TunerAction::Hold;
+        }
+        let mean = self.window.mean();
+        if mean > self.cfg.high_factor * baseline && self.workers < self.cfg.max_workers {
+            // Congested: double resources (clamped).
+            self.workers = (self.workers * 2).min(self.cfg.max_workers);
+            self.buffer = (self.buffer * 2).min(self.cfg.max_buffer);
+            self.since_action = 0;
+            self.grows += 1;
+            TunerAction::Scale { workers: self.workers, buffer: self.buffer }
+        } else if mean < self.cfg.low_factor * baseline && self.workers > self.cfg.min_workers {
+            // Recovered: halve resources (clamped) — "releases the resources".
+            self.workers = (self.workers / 2).max(self.cfg.min_workers);
+            self.buffer = (self.buffer / 2).max(self.cfg.min_buffer);
+            self.since_action = 0;
+            self.shrinks += 1;
+            TunerAction::Scale { workers: self.workers, buffer: self.buffer }
+        } else {
+            TunerAction::Hold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall_cases, gens};
+    use crate::util::rng::Rng;
+
+    fn drive(tuner: &mut CongestionTuner, latency: f64, n: usize) -> Vec<TunerAction> {
+        (0..n).map(|_| tuner.observe(latency)).collect()
+    }
+
+    #[test]
+    fn learns_baseline_then_holds_on_stable_latency() {
+        let mut t = CongestionTuner::new(TunerConfig::default());
+        let actions = drive(&mut t, 2e-3, 200);
+        assert!(actions.iter().all(|a| *a == TunerAction::Hold));
+        assert!((t.baseline().unwrap() - 2e-3).abs() < 1e-9);
+        assert_eq!(t.workers(), 1);
+    }
+
+    #[test]
+    fn grows_under_congestion_and_releases_after() {
+        let mut t = CongestionTuner::new(TunerConfig::default());
+        drive(&mut t, 2e-3, 64); // learn baseline
+        let w0 = t.workers();
+        drive(&mut t, 10e-3, 200); // congestion
+        assert!(t.workers() > w0, "should have grown: {}", t.workers());
+        assert!(t.buffer() > TunerConfig::default().min_buffer);
+        let w_peak = t.workers();
+        drive(&mut t, 2e-3, 400); // recovery
+        assert!(t.workers() < w_peak, "should have released: {}", t.workers());
+        assert!(t.grows() >= 1 && t.shrinks() >= 1);
+    }
+
+    #[test]
+    fn cooldown_prevents_thrash() {
+        let cfg = TunerConfig { cooldown: 50, ..Default::default() };
+        let mut t = CongestionTuner::new(cfg);
+        drive(&mut t, 2e-3, 32);
+        let actions = drive(&mut t, 20e-3, 60);
+        let scales = actions.iter().filter(|a| **a != TunerAction::Hold).count();
+        assert!(scales <= 2, "{scales} scale actions in 60 obs with cooldown 50");
+    }
+
+    #[test]
+    fn prop_worker_and_buffer_bounds_always_hold() {
+        let cfg = TunerConfig::default();
+        forall_cases(gens::vec(gens::f64_in(1e-4, 0.1), 1..400), 64, |lats| {
+            let mut t = CongestionTuner::new(cfg.clone());
+            for &l in lats {
+                t.observe(l);
+                if !(t.workers() >= cfg.min_workers
+                    && t.workers() <= cfg.max_workers
+                    && t.buffer() >= cfg.min_buffer
+                    && t.buffer() <= cfg.max_buffer)
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_stable_latency_converges_to_min_resources() {
+        // Whatever chaos happened before, a long stable period returns the
+        // tuner to minimum footprint ("releases the resources").
+        forall_cases(gens::vec(gens::f64_in(1e-4, 0.05), 32..200), 32, |prefix| {
+            let mut t = CongestionTuner::new(TunerConfig::default());
+            for &l in prefix {
+                t.observe(l);
+            }
+            let base = match t.baseline() {
+                Some(b) => b,
+                None => return true,
+            };
+            for _ in 0..2000 {
+                t.observe(base * 0.9);
+            }
+            t.workers() == TunerConfig::default().min_workers
+        });
+    }
+
+    #[test]
+    fn noisy_congestion_still_detected() {
+        let mut rng = Rng::new(5);
+        let mut t = CongestionTuner::new(TunerConfig::default());
+        for _ in 0..64 {
+            t.observe(rng.lognormal((2e-3f64).ln(), 0.25));
+        }
+        for _ in 0..300 {
+            t.observe(rng.lognormal((8e-3f64).ln(), 0.6));
+        }
+        assert!(t.workers() > 1);
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig. 1: "ParaGAN scales to 1024 TPU accelerators at 91% scaling
+//! efficiency" — weak scaling of BigGAN-128, constant per-worker batch.
+
+use crate::cluster::{biggan, scaling_efficiency, simulate, SimConfig, SimReport};
+use crate::util::table::{f2, pct, si, Table};
+
+pub const PAPER_EFFICIENCY_1024: f64 = 0.91;
+
+pub fn fig1(per_worker_batch: usize, steps: usize) -> (Table, Vec<SimReport>) {
+    let mut t = Table::new(
+        "Fig. 1 — weak scaling efficiency (BigGAN-128, TPU v3)",
+        &["workers", "img/s", "img/s/worker", "efficiency", "step (ms)"],
+    );
+    let mut reports = Vec::new();
+    let mut base: Option<SimReport> = None;
+    for n in [8usize, 16, 32, 64, 128, 256, 512, 1024] {
+        let mut cfg = SimConfig::tpu_default(biggan(128), n, n * per_worker_batch);
+        cfg.steps = steps;
+        let r = simulate(&cfg);
+        let eff = match &base {
+            None => 1.0,
+            Some(b) => scaling_efficiency(b, &r),
+        };
+        if base.is_none() {
+            base = Some(r.clone());
+        }
+        t.row(vec![
+            n.to_string(),
+            si(r.img_per_sec),
+            f2(r.img_per_sec / n as f64),
+            pct(eff),
+            f2(r.mean_step_time * 1e3),
+        ]);
+        reports.push(r);
+    }
+    (t, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::scaling_efficiency;
+
+    #[test]
+    fn efficiency_at_1024_close_to_paper() {
+        let (_, reports) = fig1(16, 150);
+        let base = &reports[0];
+        let last = reports.last().unwrap();
+        assert_eq!(last.n_workers, 1024);
+        let eff = scaling_efficiency(base, last);
+        // Paper: 91%. Accept the band around it.
+        assert!((eff - PAPER_EFFICIENCY_1024).abs() < 0.06, "eff {eff}");
+    }
+
+    #[test]
+    fn efficiency_monotonically_degrades() {
+        let (_, reports) = fig1(16, 100);
+        let base = &reports[0];
+        let effs: Vec<f64> =
+            reports.iter().map(|r| scaling_efficiency(base, r)).collect();
+        for w in effs.windows(2) {
+            assert!(w[1] <= w[0] + 0.02, "{effs:?}");
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig. 4: operator usage profile when training at scale — how step time
+//! splits between convolution (MXU), vector ops, infeed idle, communication
+//! idle, straggling and host overhead as the cluster grows 8 -> 1024.
+//! Profiled on the NATIVE framework like the paper ("we profile BigGAN
+//! training on native TensorFlow").
+
+use crate::cluster::{biggan, simulate, FrameworkProfile, SimConfig, SimReport};
+use crate::util::table::{pct, Table};
+
+pub fn fig4(per_worker_batch: usize, steps: usize) -> (Table, Vec<SimReport>) {
+    let mut t = Table::new(
+        "Fig. 4 — operator/idle profile vs cluster size (native framework, BigGAN-128)",
+        &["workers", "conv (MXU)", "vector", "idle: infeed", "idle: comm", "idle: straggler", "overhead"],
+    );
+    let mut reports = Vec::new();
+    for n in [8usize, 64, 128, 256, 512, 1024] {
+        let mut cfg = SimConfig::tpu_default(biggan(128), n, n * per_worker_batch);
+        cfg.framework = FrameworkProfile::native_tf();
+        cfg.steps = steps;
+        let r = simulate(&cfg);
+        t.row(vec![
+            n.to_string(),
+            pct(r.frac_mxu),
+            pct(r.frac_vpu),
+            pct(r.frac_infeed),
+            pct(r.frac_comm),
+            pct(r.frac_straggler),
+            pct(r.frac_overhead),
+        ]);
+        reports.push(r);
+    }
+    (t, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_grows_with_scale_but_conv_dominates() {
+        // Paper: "idle time significantly increases due to increased
+        // communication, but convolution operation still makes up most of
+        // the time" (8 -> 1024 spends 13.6% more on idling).
+        let (_, reports) = fig4(16, 150);
+        let small = &reports[0];
+        let large = reports.last().unwrap();
+        let idle = |r: &SimReport| r.frac_infeed + r.frac_comm + r.frac_straggler;
+        assert!(idle(large) > idle(small) + 0.03, "{} vs {}", idle(large), idle(small));
+        assert!(large.frac_mxu > idle(large), "conv should still dominate");
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig. 8: strong scaling — total batch fixed at 512, 150k-step target
+//! workload; time-to-solution (a) and img/s (b) as workers grow 16 -> 512.
+//! The img/s curve saturates when the per-worker batch hits 1 ("the time
+//! spent on communication overweights the computation").
+
+use crate::cluster::{biggan, simulate, SimConfig, SimReport};
+use crate::util::table::{f1, f2, si, Table};
+
+pub const PAPER_TOTAL_BATCH: usize = 512;
+pub const PAPER_TARGET_STEPS: usize = 150_000;
+
+pub fn fig8(steps: usize) -> (Table, Vec<SimReport>) {
+    let mut t = Table::new(
+        "Fig. 8 — strong scaling (BigGAN-128, total batch 512, 150k steps)",
+        &["workers", "batch/worker", "time-to-solution (h)", "img/s", "step (ms)"],
+    );
+    let mut reports = Vec::new();
+    for n in [16usize, 32, 64, 128, 256, 512] {
+        let mut cfg = SimConfig::tpu_default(biggan(128), n, PAPER_TOTAL_BATCH);
+        cfg.steps = steps;
+        let r = simulate(&cfg);
+        t.row(vec![
+            n.to_string(),
+            (PAPER_TOTAL_BATCH / n).max(1).to_string(),
+            f1(r.time_to_steps(PAPER_TARGET_STEPS) / 3600.0),
+            si(r.img_per_sec),
+            f2(r.mean_step_time * 1e3),
+        ]);
+        reports.push(r);
+    }
+    (t, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_to_solution_drops_an_order_of_magnitude() {
+        // Paper: "time to solution decreases from over 30 hours to 3 hours".
+        let (_, reports) = fig8(120);
+        let first = reports[0].time_to_steps(PAPER_TARGET_STEPS);
+        let last = reports.last().unwrap().time_to_steps(PAPER_TARGET_STEPS);
+        assert!(first / last > 8.0, "speedup {}", first / last);
+        assert!(first / 3600.0 > 10.0, "16 workers should take many hours");
+    }
+
+    #[test]
+    fn img_per_sec_saturates_at_small_per_worker_batch() {
+        // Paper: "image per second barely improves" past 128 workers.
+        let (_, reports) = fig8(120);
+        let r128 = reports.iter().find(|r| r.n_workers == 128).unwrap();
+        let r512 = reports.iter().find(|r| r.n_workers == 512).unwrap();
+        let gain = r512.img_per_sec / r128.img_per_sec;
+        assert!(gain < 2.0, "4x workers should give <2x img/s, got {gain:.2}x");
+    }
+}

@@ -1,0 +1,52 @@
+//! Fig. 9: weak scaling — per-worker batch fixed at the largest that fits,
+//! steps/s (a) and img/s (b) as workers grow to 1024.  "A relatively flat
+//! [steps/s] curve indicates that the data pipeline optimization in ParaGAN
+//! is effective in case of congestion."
+
+use crate::cluster::{biggan, simulate, SimConfig, SimReport};
+use crate::util::table::{f2, si, Table};
+
+pub fn fig9(per_worker_batch: usize, steps: usize) -> (Table, Vec<SimReport>) {
+    let mut t = Table::new(
+        "Fig. 9 — weak scaling (BigGAN-128, fixed per-worker batch)",
+        &["workers", "global batch", "steps/s", "img/s", "step-time cv"],
+    );
+    let mut reports = Vec::new();
+    for n in [8usize, 16, 32, 64, 128, 256, 512, 1024] {
+        let mut cfg = SimConfig::tpu_default(biggan(128), n, n * per_worker_batch);
+        cfg.steps = steps;
+        let r = simulate(&cfg);
+        t.row(vec![
+            n.to_string(),
+            (n * per_worker_batch).to_string(),
+            f2(r.steps_per_sec),
+            si(r.img_per_sec),
+            f2(r.step_time_std / r.mean_step_time),
+        ]);
+        reports.push(r);
+    }
+    (t, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_per_sec_stays_relatively_flat() {
+        let (_, reports) = fig9(16, 150);
+        let first = reports[0].steps_per_sec;
+        let last = reports.last().unwrap().steps_per_sec;
+        // Paper: "the trend in step-per-second is relatively steady even
+        // when using 1024 workers" — allow the ~10% efficiency loss.
+        assert!(last > 0.85 * first, "steps/s {first} -> {last}");
+    }
+
+    #[test]
+    fn img_per_sec_scales_linearly() {
+        let (_, reports) = fig9(16, 150);
+        let per8 = reports[0].img_per_sec / 8.0;
+        let per1024 = reports.last().unwrap().img_per_sec / 1024.0;
+        assert!(per1024 > 0.85 * per8);
+    }
+}

@@ -1,0 +1,33 @@
+//! Experiment reproduction harness: one module per table/figure of the
+//! paper's evaluation (§6).  Each returns paper-shaped rows as
+//! `util::table::Table`s; the bench targets and the `paragan repro` CLI
+//! subcommand are thin wrappers over these.
+//!
+//! Scaling experiments (Figs 1, 4, 7-10, Tables 1-2) run on the cluster
+//! simulator (DESIGN.md §1 substitution); numerical experiments (Figs 6,
+//! 13) run REAL training through the AOT artifacts; Fig. 11 measures the
+//! REAL rust data pipeline under an injected congestion process.
+
+pub mod fig1_weak_scaling;
+pub mod fig4_op_profile;
+pub mod fig6_optimizers;
+pub mod fig7_throughput;
+pub mod fig8_strong_scaling;
+pub mod fig9_weak_scaling;
+pub mod fig10_utilization;
+pub mod fig11_pipeline;
+pub mod fig13_async;
+pub mod table1_models;
+pub mod table2_ablation;
+
+pub use fig1_weak_scaling::fig1;
+pub use fig4_op_profile::fig4;
+pub use fig6_optimizers::{fig6, Fig6Config};
+pub use fig7_throughput::fig7;
+pub use fig8_strong_scaling::fig8;
+pub use fig9_weak_scaling::fig9;
+pub use fig10_utilization::fig10;
+pub use fig11_pipeline::{fig11, Fig11Config};
+pub use fig13_async::{fig13, Fig13Config};
+pub use table1_models::table1;
+pub use table2_ablation::table2;

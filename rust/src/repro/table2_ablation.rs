@@ -1,0 +1,72 @@
+//! Table 2: ablation of the system optimizations — BigGAN-128 on 128 TPU v3
+//! accelerators, global batch 2048.  Paper ladder:
+//!
+//!   baseline 6459 -> +pipeline 7158 (+10.8%) -> +layout 7412 (+3.9%)
+//!   -> +bf16 8539 (+15.2%).
+
+use crate::cluster::{biggan, simulate, FrameworkProfile, SimConfig, SimReport};
+use crate::util::table::{pct, si, Table};
+
+pub const PAPER_ROWS: [(&str, f64); 4] = [
+    ("baseline", 6459.0),
+    ("+ data pipelining", 7158.0),
+    ("+ layout transformation", 7412.0),
+    ("+ mixed precision", 8539.0),
+];
+
+pub fn table2(steps: usize) -> (Table, Vec<SimReport>) {
+    let mut t = Table::new(
+        "Table 2 — ablation of system optimizations (BigGAN-128, 128 TPUv3, batch 2048)",
+        &["configuration", "img/s (ours)", "delta (ours)", "img/s (paper)", "delta (paper)"],
+    );
+    let toggles = [
+        (false, false, false),
+        (true, false, false),
+        (true, true, false),
+        (true, true, true),
+    ];
+    let mut reports = Vec::new();
+    let mut prev = 0.0;
+    let mut prev_paper = 0.0;
+    for ((tuner, layout, bf16), (label, paper_ips)) in toggles.iter().zip(PAPER_ROWS) {
+        let mut cfg = SimConfig::tpu_default(biggan(128), 128, 2048);
+        cfg.framework = FrameworkProfile::paragan_ablation(*tuner, *layout, *bf16);
+        cfg.steps = steps;
+        let r = simulate(&cfg);
+        let delta = if prev > 0.0 { r.img_per_sec / prev - 1.0 } else { 0.0 };
+        let paper_delta = if prev_paper > 0.0 { paper_ips / prev_paper - 1.0 } else { 0.0 };
+        t.row(vec![
+            label.to_string(),
+            si(r.img_per_sec),
+            if prev > 0.0 { format!("+{}", pct(delta)) } else { "-".into() },
+            si(paper_ips),
+            if prev_paper > 0.0 { format!("+{}", pct(paper_delta)) } else { "-".into() },
+        ]);
+        prev = r.img_per_sec;
+        prev_paper = paper_ips;
+        reports.push(r);
+    }
+    (t, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_matches_paper_shape() {
+        let (_, reports) = table2(200);
+        let ips: Vec<f64> = reports.iter().map(|r| r.img_per_sec).collect();
+        // Strictly increasing ladder.
+        for w in ips.windows(2) {
+            assert!(w[1] > w[0], "{ips:?}");
+        }
+        // Baseline within 10% of the paper's 6459 (the calibration target).
+        assert!((ips[0] / 6459.0 - 1.0).abs() < 0.10, "baseline {}", ips[0]);
+        // Full stack within 10% of 8539.
+        assert!((ips[3] / 8539.0 - 1.0).abs() < 0.10, "full {}", ips[3]);
+        // bf16 delta in the paper's 14-17% band.
+        let bf16_delta = ips[3] / ips[2] - 1.0;
+        assert!(bf16_delta > 0.10 && bf16_delta < 0.22, "{bf16_delta}");
+    }
+}

@@ -1,0 +1,356 @@
+//! AOT artifact manifest — the mirror image of `python/compile/aot.py`.
+//!
+//! `manifest.json` describes every HLO artifact's flat argument list via
+//! `role` strings; this module parses it into typed specs the step plumbing
+//! (`runtime::step`) walks to assemble PJRT inputs and scatter outputs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Parsed form of a `role` string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Role {
+    /// 1-based step counter scalar.
+    Step,
+    /// Learning-rate scalar (the ScalingManager writes this).
+    Lr,
+    /// Network parameter being trained.
+    Param(String),
+    /// Optimizer state slot k for a parameter.
+    Slot(usize, String),
+    /// Frozen discriminator snapshot fed to g_step.
+    DParam(String),
+    /// Data input (real / fake / z / y / images).
+    In(String),
+    /// Extra output (loss / logits / fake / features).
+    Out(String),
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role> {
+        if s == "step" {
+            return Ok(Role::Step);
+        }
+        if s == "lr" {
+            return Ok(Role::Lr);
+        }
+        if let Some((kind, name)) = s.split_once(':') {
+            return match kind {
+                "param" => Ok(Role::Param(name.to_string())),
+                "dparam" => Ok(Role::DParam(name.to_string())),
+                "in" => Ok(Role::In(name.to_string())),
+                "out" => Ok(Role::Out(name.to_string())),
+                k if k.starts_with("slot") => {
+                    let idx: usize = k[4..].parse().context("slot index")?;
+                    Ok(Role::Slot(idx, name.to_string()))
+                }
+                _ => bail!("unknown role kind '{kind}'"),
+            };
+        }
+        bail!("unparseable role '{s}'")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub role: Role,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parameter initialization rule (mirrors python's init strings).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+impl Init {
+    pub fn parse(s: &str) -> Result<Init> {
+        if let Some(std) = s.strip_prefix("normal:") {
+            return Ok(Init::Normal(std.parse()?));
+        }
+        match s {
+            "zeros" => Ok(Init::Zeros),
+            "ones" => Ok(Init::Ones),
+            _ => bail!("unknown init '{s}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamDef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlotInit {
+    Zeros,
+    CopyParams,
+}
+
+#[derive(Debug, Clone)]
+pub struct OptimizerDef {
+    pub n_slots: usize,
+    pub slot_init: Vec<SlotInit>,
+}
+
+#[derive(Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub z_dim: usize,
+    pub img_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub loss: String,
+    pub batch: usize,
+    pub params_g: Vec<ParamDef>,
+    pub params_d: Vec<ParamDef>,
+    pub optimizers: BTreeMap<String, OptimizerDef>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub fid_feat_dim: usize,
+}
+
+impl ModelManifest {
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("model '{}' has no artifact '{key}'", self.name))
+    }
+
+    /// d_step/g_step artifact keys for a policy choice.
+    pub fn d_step_key(opt: &str, prec: &str) -> String {
+        format!("d_step_{opt}_{prec}")
+    }
+    pub fn g_step_key(opt: &str, prec: &str) -> String {
+        format!("g_step_{opt}_{prec}")
+    }
+
+    pub fn n_params_g(&self) -> usize {
+        self.params_g.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+    pub fn n_params_d(&self) -> usize {
+        self.params_d.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn parse_params(v: &Json) -> Result<Vec<ParamDef>> {
+    let mut out = Vec::new();
+    for p in v.as_arr().unwrap_or(&[]) {
+        out.push(ParamDef {
+            name: p.get("name").as_str().context("param name")?.to_string(),
+            shape: p
+                .get("shape")
+                .as_arr()
+                .context("param shape")?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect(),
+            init: Init::parse(p.get("init").as_str().context("param init")?)?,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for e in v.as_arr().unwrap_or(&[]) {
+        out.push(TensorSpec {
+            role: Role::parse(e.get("role").as_str().context("role")?)?,
+            shape: e
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect(),
+        });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).context("manifest.json")?;
+        let batch = root.get("batch").as_usize().context("batch")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models").as_obj().context("models")?.iter() {
+            let mut artifacts = BTreeMap::new();
+            for (key, a) in m.get("artifacts").as_obj().context("artifacts")?.iter() {
+                artifacts.insert(
+                    key.clone(),
+                    ArtifactSpec {
+                        key: key.clone(),
+                        file: a.get("file").as_str().context("file")?.to_string(),
+                        inputs: parse_tensor_specs(a.get("inputs"))?,
+                        outputs: parse_tensor_specs(a.get("outputs"))?,
+                    },
+                );
+            }
+            let mut optimizers = BTreeMap::new();
+            if let Some(opts) = m.get("optimizers").as_obj() {
+                for (oname, o) in opts {
+                    let slot_init = o
+                        .get("slot_init")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|s| match s.as_str() {
+                            Some("copy_params") => SlotInit::CopyParams,
+                            _ => SlotInit::Zeros,
+                        })
+                        .collect::<Vec<_>>();
+                    optimizers.insert(
+                        oname.clone(),
+                        OptimizerDef {
+                            n_slots: o.get("n_slots").as_usize().context("n_slots")?,
+                            slot_init,
+                        },
+                    );
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    z_dim: m.get("z_dim").as_usize().context("z_dim")?,
+                    img_shape: m
+                        .get("img_shape")
+                        .as_arr()
+                        .context("img_shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    n_classes: m.get("n_classes").as_usize().unwrap_or(0),
+                    loss: m.get("loss").as_str().unwrap_or("bce").to_string(),
+                    batch: m.get("batch").as_usize().unwrap_or(batch),
+                    params_g: parse_params(m.get("params_g"))?,
+                    params_d: parse_params(m.get("params_d"))?,
+                    optimizers,
+                    artifacts,
+                    fid_feat_dim: m.get("fid_feat_dim").as_usize().unwrap_or(64),
+                },
+            );
+        }
+        Ok(Manifest { dir, batch, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "no model '{name}' in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "batch": 4,
+      "models": {
+        "dcgan32": {
+          "z_dim": 128, "img_shape": [3,32,32], "n_classes": 0, "loss": "bce",
+          "batch": 4, "fid_feat_dim": 64,
+          "params_g": [{"name":"g.w","shape":[2,3],"init":"normal:0.02"}],
+          "params_d": [{"name":"d.w","shape":[3],"init":"zeros"}],
+          "optimizers": {"adam": {"n_slots": 2, "slot_init": ["zeros","zeros"]},
+                         "lookahead": {"n_slots": 3, "slot_init": ["zeros","zeros","copy_params"]}},
+          "artifacts": {
+            "d_step_adam_fp32": {
+              "file": "dcgan32_d_step_adam_fp32.hlo.txt",
+              "inputs": [{"role":"step","shape":[],"dtype":"f32"},
+                         {"role":"lr","shape":[],"dtype":"f32"},
+                         {"role":"param:d.w","shape":[3],"dtype":"f32"},
+                         {"role":"slot0:d.w","shape":[3],"dtype":"f32"},
+                         {"role":"slot1:d.w","shape":[3],"dtype":"f32"},
+                         {"role":"in:real","shape":[4,3,32,32],"dtype":"f32"},
+                         {"role":"in:fake","shape":[4,3,32,32],"dtype":"f32"}],
+              "outputs": [{"role":"param:d.w","shape":[3],"dtype":"f32"},
+                          {"role":"slot0:d.w","shape":[3],"dtype":"f32"},
+                          {"role":"slot1:d.w","shape":[3],"dtype":"f32"},
+                          {"role":"out:loss","shape":[],"dtype":"f32"}]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let model = m.model("dcgan32").unwrap();
+        assert_eq!(model.z_dim, 128);
+        assert_eq!(model.params_g[0].init, Init::Normal(0.02));
+        assert_eq!(model.params_d[0].init, Init::Zeros);
+        assert_eq!(model.optimizers["lookahead"].slot_init[2], SlotInit::CopyParams);
+        let a = model.artifact("d_step_adam_fp32").unwrap();
+        assert_eq!(a.inputs.len(), 7);
+        assert_eq!(a.inputs[0].role, Role::Step);
+        assert_eq!(a.inputs[1].role, Role::Lr);
+        assert_eq!(a.inputs[2].role, Role::Param("d.w".into()));
+        assert_eq!(a.inputs[3].role, Role::Slot(0, "d.w".into()));
+        assert_eq!(a.outputs[3].role, Role::Out("loss".into()));
+        assert_eq!(a.inputs[5].numel(), 4 * 3 * 32 * 32);
+    }
+
+    #[test]
+    fn role_parsing_errors() {
+        assert!(Role::parse("bogus").is_err());
+        assert!(Role::parse("wat:x").is_err());
+        assert_eq!(Role::parse("slot12:p.w").unwrap(), Role::Slot(12, "p.w".into()));
+        assert_eq!(Role::parse("dparam:d.w").unwrap(), Role::DParam("d.w".into()));
+    }
+
+    #[test]
+    fn missing_model_is_helpful() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("dcgan32"), "{err}");
+    }
+
+    #[test]
+    fn param_counts() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let model = m.model("dcgan32").unwrap();
+        assert_eq!(model.n_params_g(), 6);
+        assert_eq!(model.n_params_d(), 3);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: artifact manifest, host tensor stores, executable cache,
+//! and the generic step plumbing that walks the AOT calling convention.
+//!
+//! Start-to-finish path: `Manifest::load` -> `Runtime::new` ->
+//! `step::run_step` per training step.  Python is never involved.
+
+pub mod artifact;
+pub mod client;
+pub mod params;
+pub mod step;
+
+pub use artifact::{ArtifactSpec, Init, Manifest, ModelManifest, OptimizerDef, ParamDef, Role, SlotInit, TensorSpec};
+pub use client::{Runtime, RuntimeStats};
+pub use params::{HostTensor, ParamStore};
+pub use step::{run_inference, run_step, StepOutputs};

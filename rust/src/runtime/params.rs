@@ -1,0 +1,241 @@
+//! Host-side tensor store: named f32 buffers for parameters, optimizer
+//! slots, and activations crossing the coordinator.
+//!
+//! PJRT handles (`xla::Literal`) are not `Send`, so everything that crosses
+//! coordinator threads lives here as plain `Vec<f32>`; the single runtime
+//! thread converts to/from Literals at the PJRT boundary (DESIGN.md §5.2).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{Init, ParamDef, SlotInit};
+use crate::util::rng::Rng;
+
+/// A named host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(name: &str, shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+        HostTensor { name: name.to_string(), shape, data }
+    }
+
+    pub fn zeros(name: &str, shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor { name: name.to_string(), shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+/// Ordered name -> tensor map (order = manifest spec order).
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    tensors: Vec<HostTensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new() -> ParamStore {
+        ParamStore::default()
+    }
+
+    /// Initialize parameters from manifest defs (DCGAN-style init).
+    pub fn init(defs: &[ParamDef], rng: &mut Rng) -> ParamStore {
+        let mut store = ParamStore::new();
+        for def in defs {
+            let n = def.shape.iter().product::<usize>().max(1);
+            let data = match def.init {
+                Init::Zeros => vec![0.0; n],
+                Init::Ones => vec![1.0; n],
+                Init::Normal(std) => {
+                    let mut v = vec![0.0f32; n];
+                    rng.fill_gaussian(&mut v, 0.0, std);
+                    v
+                }
+            };
+            store.insert(HostTensor::new(&def.name, def.shape.clone(), data));
+        }
+        store
+    }
+
+    /// Optimizer slot stores for `defs` under the given init rules.
+    pub fn init_slots(
+        defs: &[ParamDef],
+        params: &ParamStore,
+        slot_init: &[SlotInit],
+    ) -> Vec<ParamStore> {
+        slot_init
+            .iter()
+            .map(|si| {
+                let mut s = ParamStore::new();
+                for def in defs {
+                    match si {
+                        SlotInit::Zeros => s.insert(HostTensor::zeros(&def.name, def.shape.clone())),
+                        SlotInit::CopyParams => {
+                            s.insert(params.get(&def.name).expect("param for slot").clone())
+                        }
+                    }
+                }
+                s
+            })
+            .collect()
+    }
+
+    pub fn insert(&mut self, t: HostTensor) {
+        if let Some(&i) = self.index.get(&t.name) {
+            self.tensors[i] = t;
+        } else {
+            self.index.insert(t.name.clone(), self.tensors.len());
+            self.tensors.push(t);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("no tensor '{name}' in store"))
+    }
+
+    pub fn set_data(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        let i = *self.index.get(name).ok_or_else(|| anyhow!("no tensor '{name}'"))?;
+        anyhow::ensure!(
+            data.len() == self.tensors[i].data.len(),
+            "size mismatch for '{name}': {} vs {}",
+            data.len(),
+            self.tensors[i].data.len()
+        );
+        self.tensors[i].data = data;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = &HostTensor> {
+        self.tensors.iter()
+    }
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Cheap deep snapshot (the async scheme's D-params snapshot).
+    pub fn snapshot(&self) -> ParamStore {
+        self.clone()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.tensors.iter().all(|t| t.is_finite())
+    }
+
+    /// Global L2 distance to another store (same layout) — used by tests and
+    /// divergence monitors.
+    pub fn l2_distance(&self, other: &ParamStore) -> f64 {
+        self.tensors
+            .iter()
+            .zip(other.tensors.iter())
+            .map(|(a, b)| {
+                a.data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defs() -> Vec<ParamDef> {
+        vec![
+            ParamDef { name: "w".into(), shape: vec![4, 2], init: Init::Normal(0.5) },
+            ParamDef { name: "b".into(), shape: vec![2], init: Init::Zeros },
+            ParamDef { name: "g".into(), shape: vec![3], init: Init::Ones },
+        ]
+    }
+
+    #[test]
+    fn init_respects_rules() {
+        let mut rng = Rng::new(1);
+        let s = ParamStore::init(&defs(), &mut rng);
+        assert_eq!(s.get("b").unwrap().data, vec![0.0, 0.0]);
+        assert_eq!(s.get("g").unwrap().data, vec![1.0, 1.0, 1.0]);
+        let w = s.get("w").unwrap();
+        assert_eq!(w.numel(), 8);
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        assert!(w.l2_norm() < 0.5 * 8.0); // std 0.5 gaussian, loose bound
+    }
+
+    #[test]
+    fn init_deterministic_in_seed() {
+        let a = ParamStore::init(&defs(), &mut Rng::new(7));
+        let b = ParamStore::init(&defs(), &mut Rng::new(7));
+        assert_eq!(a.get("w").unwrap().data, b.get("w").unwrap().data);
+        let c = ParamStore::init(&defs(), &mut Rng::new(8));
+        assert_ne!(a.get("w").unwrap().data, c.get("w").unwrap().data);
+    }
+
+    #[test]
+    fn slots_zero_and_copy() {
+        let mut rng = Rng::new(1);
+        let params = ParamStore::init(&defs(), &mut rng);
+        let slots = ParamStore::init_slots(
+            &defs(),
+            &params,
+            &[SlotInit::Zeros, SlotInit::CopyParams],
+        );
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots[0].get("w").unwrap().data, vec![0.0; 8]);
+        assert_eq!(slots[1].get("w").unwrap().data, params.get("w").unwrap().data);
+    }
+
+    #[test]
+    fn set_data_checks_size() {
+        let mut rng = Rng::new(1);
+        let mut s = ParamStore::init(&defs(), &mut rng);
+        assert!(s.set_data("b", vec![1.0, 2.0]).is_ok());
+        assert!(s.set_data("b", vec![1.0]).is_err());
+        assert!(s.set_data("missing", vec![]).is_err());
+        assert_eq!(s.get("b").unwrap().data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn snapshot_is_independent() {
+        let mut rng = Rng::new(1);
+        let mut s = ParamStore::init(&defs(), &mut rng);
+        let snap = s.snapshot();
+        s.set_data("b", vec![9.0, 9.0]).unwrap();
+        assert_eq!(snap.get("b").unwrap().data, vec![0.0, 0.0]);
+        assert!(s.l2_distance(&snap) > 0.0);
+    }
+
+    #[test]
+    fn total_params() {
+        let s = ParamStore::init(&defs(), &mut Rng::new(2));
+        assert_eq!(s.total_params(), 8 + 2 + 3);
+    }
+}

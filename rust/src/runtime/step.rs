@@ -1,0 +1,113 @@
+//! Generic step plumbing: walk an artifact's role list to assemble PJRT
+//! inputs from host stores, execute, and scatter outputs back.
+//!
+//! This is the only code that needs to understand the AOT calling
+//! convention; trainers above it deal in `ParamStore`s and named tensors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactSpec, Role};
+use super::client::Runtime;
+use super::params::{HostTensor, ParamStore};
+
+/// Extra outputs of a step (loss, logits, generated images, features).
+pub type StepOutputs = BTreeMap<String, HostTensor>;
+
+/// Execute one artifact.
+///
+/// * `params`/`slots` are read for `param:`/`slot:` inputs and OVERWRITTEN
+///   by the matching outputs (the optimizer update round-trips through us);
+/// * `dparams` serves `dparam:` inputs (frozen snapshot, never written);
+/// * `data` serves `in:` inputs by name.
+pub fn run_step(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    step: f32,
+    lr: f32,
+    params: &mut ParamStore,
+    slots: &mut [ParamStore],
+    dparams: Option<&ParamStore>,
+    data: &BTreeMap<String, HostTensor>,
+) -> Result<StepOutputs> {
+    let exe = rt.load_artifact(spec)?;
+
+    let mut inputs: Vec<xla::Literal> = Vec::with_capacity(spec.inputs.len());
+    for tin in &spec.inputs {
+        let lit = match &tin.role {
+            Role::Step => rt.scalar(step),
+            Role::Lr => rt.scalar(lr),
+            Role::Param(name) => rt.literal(params.get(name)?)?,
+            Role::Slot(k, name) => rt.literal(
+                slots
+                    .get(*k)
+                    .ok_or_else(|| anyhow!("artifact wants slot {k}, have {}", slots.len()))?
+                    .get(name)?,
+            )?,
+            Role::DParam(name) => rt.literal(
+                dparams
+                    .ok_or_else(|| anyhow!("artifact wants dparams but none supplied"))?
+                    .get(name)?,
+            )?,
+            Role::In(name) => {
+                let t = data
+                    .get(name)
+                    .ok_or_else(|| anyhow!("missing data input '{name}'"))?;
+                anyhow::ensure!(
+                    t.numel() == tin.numel(),
+                    "input '{name}' numel {} != spec {} (shape {:?})",
+                    t.numel(),
+                    tin.numel(),
+                    tin.shape
+                );
+                rt.literal(t)?
+            }
+            Role::Out(_) => anyhow::bail!("out role in input list"),
+        };
+        inputs.push(lit);
+    }
+
+    let outs = rt.execute(&exe, &inputs)?;
+    anyhow::ensure!(
+        outs.len() == spec.outputs.len(),
+        "artifact '{}' returned {} outputs, manifest says {}",
+        spec.key,
+        outs.len(),
+        spec.outputs.len()
+    );
+
+    let mut extra = StepOutputs::new();
+    for (tout, lit) in spec.outputs.iter().zip(outs.iter()) {
+        match &tout.role {
+            Role::Param(name) => {
+                params.set_data(name, rt.to_host(lit)?).context("write back param")?
+            }
+            Role::Slot(k, name) => slots
+                .get_mut(*k)
+                .ok_or_else(|| anyhow!("output slot {k} out of range"))?
+                .set_data(name, rt.to_host(lit)?)?,
+            Role::Out(name) => {
+                extra.insert(
+                    name.clone(),
+                    HostTensor::new(name, tout.shape.clone(), rt.to_host(lit)?),
+                );
+            }
+            other => anyhow::bail!("unexpected output role {other:?}"),
+        }
+    }
+    Ok(extra)
+}
+
+/// Convenience for inference-only artifacts (generate / fid_features):
+/// all `param:` inputs read from `params`, `in:` from `data`, nothing
+/// written back.
+pub fn run_inference(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    params: &ParamStore,
+    data: &BTreeMap<String, HostTensor>,
+) -> Result<StepOutputs> {
+    let mut p = params.clone();
+    run_step(rt, spec, 0.0, 0.0, &mut p, &mut [], None, data)
+}

@@ -1,0 +1,220 @@
+//! Property-testing mini-framework (proptest is not in the offline vendor
+//! set — see DESIGN.md §1).
+//!
+//! Deterministic generators driven by `util::rng`, a `forall` runner, and
+//! greedy shrinking for integer/vec cases.  Coordinator invariants (routing,
+//! batching, buffer ordering, tuner bounds, layout plans) are tested with
+//! this throughout the crate.
+//!
+//! ```ignore
+//! forall(gens::vec(gens::u64_below(100), 0..50), |xs| {
+//!     let mut s = xs.clone(); s.sort(); s.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator produces a value from entropy and knows how to shrink it.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values, in decreasing priority. Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `DEFAULT_CASES` generated cases; panic with the smallest
+/// found counterexample.
+pub fn forall<G: Gen>(gen: G, prop: impl Fn(&G::Value) -> bool) {
+    forall_cases(gen, DEFAULT_CASES, prop)
+}
+
+pub fn forall_cases<G: Gen>(gen: G, cases: usize, prop: impl Fn(&G::Value) -> bool) {
+    // Fixed seed: reproducible CI. Vary per case index.
+    for case in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let min = shrink_to_min(&gen, v, &prop);
+            panic!("property failed (case {case}); minimal counterexample: {min:?}");
+        }
+    }
+}
+
+fn shrink_to_min<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy: repeatedly take the first shrink candidate that still fails.
+    'outer: for _ in 0..10_000 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+pub mod gens {
+    use super::Gen;
+    use crate::util::rng::Rng;
+
+    pub struct U64Below(pub u64);
+    impl Gen for U64Below {
+        type Value = u64;
+        fn generate(&self, rng: &mut Rng) -> u64 {
+            rng.below(self.0.max(1))
+        }
+        fn shrink(&self, v: &u64) -> Vec<u64> {
+            let mut out = Vec::new();
+            if *v > 0 {
+                out.push(0);
+                out.push(v / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+    pub fn u64_below(n: u64) -> U64Below {
+        U64Below(n)
+    }
+
+    pub struct UsizeIn(pub std::ops::Range<usize>);
+    impl Gen for UsizeIn {
+        type Value = usize;
+        fn generate(&self, rng: &mut Rng) -> usize {
+            self.0.start + rng.usize_below((self.0.end - self.0.start).max(1))
+        }
+        fn shrink(&self, v: &usize) -> Vec<usize> {
+            let lo = self.0.start;
+            let mut out = Vec::new();
+            if *v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+    pub fn usize_in(r: std::ops::Range<usize>) -> UsizeIn {
+        UsizeIn(r)
+    }
+
+    pub struct F64In(pub f64, pub f64);
+    impl Gen for F64In {
+        type Value = f64;
+        fn generate(&self, rng: &mut Rng) -> f64 {
+            rng.range_f64(self.0, self.1)
+        }
+        fn shrink(&self, v: &f64) -> Vec<f64> {
+            if *v != self.0 {
+                vec![self.0, self.0 + (v - self.0) / 2.0]
+            } else {
+                vec![]
+            }
+        }
+    }
+    pub fn f64_in(lo: f64, hi: f64) -> F64In {
+        F64In(lo, hi)
+    }
+
+    pub struct VecOf<G>(pub G, pub std::ops::Range<usize>);
+    impl<G: Gen> Gen for VecOf<G> {
+        type Value = Vec<G::Value>;
+        fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+            let n = self.1.start + rng.usize_below((self.1.end - self.1.start).max(1));
+            (0..n).map(|_| self.0.generate(rng)).collect()
+        }
+        fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+            let mut out = Vec::new();
+            if v.len() > self.1.start {
+                // Halve, drop-front, drop-back — never below the min length.
+                let half = (v.len() / 2).max(self.1.start);
+                out.push(v[..half].to_vec());
+                out.push(v[1..].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            // Shrink one element.
+            for (i, x) in v.iter().enumerate().take(8) {
+                for cand in self.0.shrink(x) {
+                    let mut copy = v.clone();
+                    copy[i] = cand;
+                    out.push(copy);
+                }
+            }
+            out
+        }
+    }
+    pub fn vec<G: Gen>(g: G, len: std::ops::Range<usize>) -> VecOf<G> {
+        VecOf(g, len)
+    }
+
+    pub struct Pair<A, B>(pub A, pub B);
+    impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> =
+                self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+            out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+            out
+        }
+    }
+    pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> Pair<A, B> {
+        Pair(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gens::*;
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(vec(u64_below(100), 0..20), |xs| xs.iter().all(|&x| x < 100));
+    }
+
+    #[test]
+    fn finds_and_shrinks_counterexample() {
+        let res = std::panic::catch_unwind(|| {
+            forall(u64_below(1000), |&x| x < 500);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land exactly on the boundary 500.
+        assert!(msg.contains("500"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let g = vec(u64_below(10), 0..30);
+        let v: Vec<u64> = (0..10).collect();
+        let shrunk = g.shrink(&v);
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        let g = u64_below(1_000_000);
+        for case in 0..5 {
+            let mut rng =
+                Rng::new(0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            first.push(g.generate(&mut rng));
+        }
+        let mut second = Vec::new();
+        for case in 0..5 {
+            let mut rng =
+                Rng::new(0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            second.push(g.generate(&mut rng));
+        }
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,103 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "fast"])
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("train --model dcgan32 --steps=200 out.json");
+        assert_eq!(a.positional, vec!["train", "out.json"]);
+        assert_eq!(a.get("model"), Some("dcgan32"));
+        assert_eq!(a.get_usize("steps", 0), 200);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("repro --verbose --model x --unknownflag");
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("unknownflag")); // trailing unknown treated as flag
+        assert_eq!(a.get("model"), Some("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("mode", "sync"), "sync");
+        assert_eq!(a.get_f64("lr", 2e-4), 2e-4);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("--fast --workers 8");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_usize("workers", 0), 8);
+    }
+}

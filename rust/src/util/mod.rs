@@ -1,0 +1,11 @@
+//! Utility substrates: JSON, PRNG, statistics, sliding windows, CLI, tables.
+//!
+//! These exist because the offline vendor set has no serde/rand/clap; they
+//! are deliberately small, fully tested, and shared by every other module.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod window;

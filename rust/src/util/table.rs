@@ -1,0 +1,119 @@
+//! Markdown/console table rendering for experiment reports.
+
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch in '{}'", self.title);
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                s.push_str(&format!(" {:<width$} |", c, width = width));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &w));
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&format!("{:-<w$}|", "", w = width + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+        }
+        out
+    }
+}
+
+/// Format helpers for report cells.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+pub fn si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        assert!(s.contains("| name   | value |"));
+        assert!(s.contains("| longer | 2.5   |"));
+        // Markdown separator present.
+        assert!(s.lines().nth(2).unwrap().starts_with("|--"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.915), "91.5%");
+        assert_eq!(si(6459.0), "6.46k");
+        assert_eq!(si(2.5e7), "25.00M");
+        assert_eq!(f2(3.14159), "3.14");
+    }
+}

@@ -1,0 +1,134 @@
+//! Sliding-window latency monitor (paper §4.1).
+//!
+//! "It is implemented by maintaining a sliding window for network latency
+//! during runtime. If the current latency over the window exceeds the
+//! threshold, ParaGAN will increase the number of threads and buffer for
+//! pre-fetching and pre-processing; once the latency falls below the
+//! threshold, it releases the resources."
+//!
+//! The window keeps the last N observations in a ring and answers mean /
+//! max / quantile queries in O(N) (N is small — tens of samples).
+
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize,
+    len: usize,
+}
+
+impl SlidingWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        SlidingWindow { buf: vec![0.0; cap], cap, head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = f64> + '_ {
+        (0..self.len).map(move |i| {
+            // Oldest-first iteration.
+            let idx = (self.head + self.cap - self.len + i) % self.cap;
+            self.buf[idx]
+        })
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.iter().sum::<f64>() / self.len as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.iter().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.iter().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.len == 0 {
+            return f64::NAN;
+        }
+        let mut v: Vec<f64> = self.iter().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+        let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] * (1.0 - (pos - lo as f64)) + v[hi] * (pos - lo as f64)
+        }
+    }
+
+    /// Most recent observation.
+    pub fn last(&self) -> Option<f64> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.buf[(self.head + self.cap - 1) % self.cap])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_last_cap_items() {
+        let mut w = SlidingWindow::new(3);
+        for x in 1..=5 {
+            w.push(x as f64);
+        }
+        let v: Vec<f64> = w.iter().collect();
+        assert_eq!(v, vec![3.0, 4.0, 5.0]);
+        assert!(w.is_full());
+        assert_eq!(w.last(), Some(5.0));
+    }
+
+    #[test]
+    fn mean_max_on_partial_window() {
+        let mut w = SlidingWindow::new(10);
+        w.push(2.0);
+        w.push(4.0);
+        assert_eq!(w.len(), 2);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(w.max(), 4.0);
+        assert_eq!(w.min(), 2.0);
+    }
+
+    #[test]
+    fn quantile_on_window() {
+        let mut w = SlidingWindow::new(5);
+        for x in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            w.push(x);
+        }
+        assert!((w.quantile(0.5) - 3.0).abs() < 1e-12);
+        assert!((w.quantile(1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_window() {
+        let w = SlidingWindow::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.mean(), 0.0);
+        assert!(w.last().is_none());
+    }
+}
