@@ -1,0 +1,54 @@
+"""Guard the cross-language golden file (rust/tests/golden/ref_kernels.json).
+
+The Rust RefCpuBackend parity test regenerates the same inputs from the
+shared LCG and checks its matmul against these numbers; this test closes the
+loop from the Python side by recomputing the goldens with the ref.py oracle
+and diffing against the checked-in file.  If either side's kernel math (or
+the LCG) drifts, one of the two tests fails.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from tools.gen_golden import MATMUL_CASES, Lcg, golden  # noqa: E402
+
+GOLDEN_PATH = os.path.normpath(
+    os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "golden", "ref_kernels.json"
+    )
+)
+
+
+def test_lcg_reference_values():
+    # Pinned in rust/tests/backend_parity.rs as well — keep all three in sync.
+    lcg = Lcg(1)
+    got = [lcg.next_f32() for _ in range(4)]
+    np.testing.assert_allclose(
+        got, [-0.15358174, 0.018814802, 0.29671872, -0.23427331], rtol=0, atol=1e-7
+    )
+
+
+def test_checked_in_golden_matches_ref_kernels():
+    with open(GOLDEN_PATH) as f:
+        stored = json.load(f)
+    assert stored["format"] == "paragan-golden"
+    fresh = golden()
+    assert [c["seed"] for c in stored["matmul"]] == [c[0] for c in MATMUL_CASES]
+    for s_case, f_case in zip(stored["matmul"], fresh["matmul"]):
+        assert (s_case["m"], s_case["k"], s_case["n"]) == (
+            f_case["m"],
+            f_case["k"],
+            f_case["n"],
+        )
+        np.testing.assert_allclose(
+            np.array(s_case["y"], dtype=np.float32),
+            np.array(f_case["y"], dtype=np.float32),
+            rtol=1e-5,
+            atol=1e-6,
+            err_msg=f"seed {s_case['seed']}",
+        )

@@ -1,0 +1,77 @@
+"""Generate golden outputs for the Rust RefCpuBackend parity test.
+
+The inputs are produced by a 64-bit LCG that both this script and
+``rust/tests/backend_parity.rs`` implement bit-for-bit, so the two sides
+agree on the exact f32 input tensors without sharing binary files.  The
+outputs are computed by the *reference* kernels in
+``python/compile/kernels/ref.py`` — the same oracles the Pallas kernels are
+tested against — which makes this file the cross-language contract: Pallas
+kernels, XLA, and the Rust reference backend must all match these numbers.
+
+Run from ``python/``:
+
+    python -m tools.gen_golden          # rewrites rust/tests/golden/ref_kernels.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+LCG_MUL = 6364136223846793005
+LCG_INC = 1442695040888963407
+
+
+class Lcg:
+    """Deterministic f32 stream in [-1, 1); mirrored in Rust."""
+
+    def __init__(self, seed: int):
+        self.s = seed & MASK
+
+    def next_f32(self) -> np.float32:
+        self.s = (self.s * LCG_MUL + LCG_INC) & MASK
+        return np.float32(((self.s >> 40) / float(1 << 24)) * 2.0 - 1.0)
+
+    def fill(self, n: int) -> np.ndarray:
+        return np.array([self.next_f32() for _ in range(n)], dtype=np.float32)
+
+
+# (seed, M, K, N) matmul cases — includes skinny/fat and vector shapes.
+MATMUL_CASES = [(1, 5, 7, 3), (2, 8, 16, 4), (3, 1, 32, 1), (4, 16, 8, 8)]
+
+
+def golden():
+    from compile.kernels.ref import ref_matmul
+
+    cases = []
+    for seed, m, k, n in MATMUL_CASES:
+        lcg = Lcg(seed)
+        x = lcg.fill(m * k).reshape(m, k)
+        w = lcg.fill(k * n).reshape(k, n)
+        y = np.asarray(ref_matmul(x, w), dtype=np.float32)
+        cases.append(
+            {
+                "seed": seed,
+                "m": m,
+                "k": k,
+                "n": n,
+                "y": [float(v) for v in y.reshape(-1)],
+            }
+        )
+    return {"format": "paragan-golden", "version": 1, "matmul": cases}
+
+
+def main():
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden", "ref_kernels.json")
+    out = os.path.normpath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(golden(), f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,25 @@
-//! Quickstart: train a small GAN end-to-end through the three-layer stack
-//! (rust coordinator -> PJRT -> AOT'd JAX/Pallas HLO) in ~a minute.
+//! Quickstart: train a small GAN end-to-end through the coordinator and the
+//! pluggable execution backend.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! Runs out of the box on a clean checkout: with no artifacts dir it
+//! generates reference artifacts and trains the MLP backbone through the
+//! pure-Rust `RefCpuBackend`.  After `make artifacts` and a build with
+//! `--features pjrt` (uncomment the `xla` dependency in rust/Cargo.toml
+//! first) the same code trains the real DCGAN through PJRT.
 use paragan::coordinator::OptimizationPolicy;
 use paragan::gan::{Estimator, UpdateScheme};
 use paragan::metrics::tracker::sparkline;
 
 fn main() -> anyhow::Result<()> {
+    // Real artifacts (needs the pjrt backend + `make artifacts`) when the
+    // build can execute them, else the generated reference set.
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32", "refmlp");
+
     // Listing-1-shaped API: pick a backbone, a policy, train.
-    let result = Estimator::new("dcgan32")
-        .artifact_dir("artifacts")
+    let result = Estimator::new(&model)
+        .artifact_dir(&dir)
         .policy(OptimizationPolicy::paper_asymmetric()) // AdaBelief(G) + Adam(D)
         .scheme(UpdateScheme::Sync)
         .steps(40)
@@ -20,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     let g: Vec<f64> = result.g_loss.downsample(40).iter().map(|p| p.value).collect();
     let d: Vec<f64> = result.d_loss.downsample(40).iter().map(|p| p.value).collect();
-    println!("\n== quickstart: dcgan32, 40 steps ==");
+    println!("\n== quickstart: {model}, 40 steps ==");
     println!("g_loss {}  last {:.4}", sparkline(&g), result.g_loss.last().unwrap());
     println!("d_loss {}  last {:.4}", sparkline(&d), result.d_loss.last().unwrap());
     println!("FID-proxy {:.2}  mode coverage {:.2}", result.final_fid(),

@@ -53,6 +53,8 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
 
     let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
     let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
+    // Warm G's executable cache (D's thread warms its own runtime below).
+    rt.prepare(&g_spec)?;
 
     // Exchange buffers.
     let img_buff = ImgBuff::new(cfg.img_buff_cap);
@@ -71,16 +73,16 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
     let d_buff = img_buff.clone();
     let d_cell = d_snapshot.clone();
     let d_scaling = pro.scaling.clone();
-    let d_model_batch = model.batch;
     let d_img_shape = model.img_shape.clone();
     let d_n_classes = model.n_classes;
     let d_g_step_now = g_step_now.clone();
     let d_thread = std::thread::spawn(move || -> Result<(ParamStore, u64)> {
-        // D owns its own PJRT client ("different node").
+        // D owns its own runtime/backend ("different node").
         let rt = Runtime::new(&d_cfg.artifact_dir)?;
         let manifest = crate::runtime::Manifest::load(&d_cfg.artifact_dir)?;
         let model = manifest.model(&d_cfg.model)?;
         let d_spec = model.artifact(&d_cfg.policy.d_step_key())?.clone();
+        rt.prepare(&d_spec)?;
         let mut d_params = {
             // Same init as the published snapshot (deterministic seed).
             let pro = Prologue::new(&d_cfg)?;
@@ -89,11 +91,14 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
         let (ref mut params, ref mut slots) = d_params;
         let pipeline = make_pipeline(model, d_cfg.n_modes, d_cfg.seed ^ 0xDA7A);
         let mut step: u64 = 0;
-        let mut images = 0u64;
         loop {
             // Consume a (possibly stale) fake batch; None = G finished.
+            // Read G's counter AFTER the blocking pop: while we wait, G
+            // keeps advancing, and a pre-pop read would understate how old
+            // the batch really is.
+            let Some(fake) = d_buff.pop_batch() else { break };
             let g_now = d_g_step_now.load(Ordering::SeqCst);
-            let Some((fake, staleness)) = d_buff.pop(g_now) else { break };
+            let staleness = g_now.saturating_sub(fake.produced_at);
             for _ in 0..d_cfg.policy.d_steps_per_g {
                 step += 1;
                 let real = pipeline.next_batch().context("real batch (D)")?;
@@ -110,7 +115,6 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
                 let outs = run_step(
                     &rt, &d_spec, step as f32, lr as f32, params, slots, None, &d_in,
                 )?;
-                images += d_model_batch as u64;
                 let _ = report_tx.send(DReport {
                     step,
                     loss: outs["loss"].data[0] as f64,
@@ -120,7 +124,6 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
                 d_cell.publish(params.snapshot(), step);
             }
         }
-        let _ = images;
         Ok((params.snapshot(), step))
     });
 

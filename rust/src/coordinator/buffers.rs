@@ -68,17 +68,20 @@ impl ImgBuff {
         }
     }
 
-    /// Blocking pop; returns the batch and its staleness relative to
-    /// `current_g_step` (how many G steps old the images are).
-    pub fn pop(&self, current_g_step: u64) -> Option<(TaggedBatch, u64)> {
+    /// Blocking pop; None once the buffer is closed AND drained.
+    ///
+    /// Staleness accounting belongs to the caller: read the producer's step
+    /// counter AFTER this returns.  A counter sampled before blocking here
+    /// goes stale while we wait, which is why no blocking-pop-with-staleness
+    /// variant exists (the old `pop(g_step)` invited exactly that bug).
+    pub fn pop_batch(&self) -> Option<TaggedBatch> {
         let mut st = self.st.lock().unwrap();
         loop {
             if let Some(b) = st.q.pop_front() {
                 st.popped += 1;
                 drop(st);
                 self.not_full.notify_one();
-                let staleness = current_g_step.saturating_sub(b.produced_at);
-                return Some((b, staleness));
+                return Some(b);
             }
             if st.closed {
                 return None;
@@ -87,6 +90,11 @@ impl ImgBuff {
         }
     }
 
+    /// Non-blocking pop; staleness is computed against the supplied
+    /// counter, which is fresh by construction (no blocking in between).
+    /// Test-only until a production consumer exists — keeps the public
+    /// surface free of pop-with-staleness variants.
+    #[cfg(test)]
     pub fn try_pop(&self, current_g_step: u64) -> Option<(TaggedBatch, u64)> {
         let mut st = self.st.lock().unwrap();
         let b = st.q.pop_front()?;
@@ -156,11 +164,12 @@ mod tests {
         let b = ImgBuff::new(4);
         b.push(batch(1));
         b.push(batch(2));
-        let (first, stale) = b.pop(5).unwrap();
+        let (first, stale) = b.try_pop(5).unwrap();
         assert_eq!(first.produced_at, 1);
         assert_eq!(stale, 4);
-        let (_, stale2) = b.pop(5).unwrap();
-        assert_eq!(stale2, 3);
+        // The blocking pop leaves staleness to the caller (post-pop read).
+        let second = b.pop_batch().unwrap();
+        assert_eq!(5u64.saturating_sub(second.produced_at), 3);
     }
 
     #[test]
@@ -173,7 +182,7 @@ mod tests {
         let t = std::thread::spawn(move || b2.push(batch(3)));
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert_eq!(b.len(), 2); // still blocked
-        let _ = b.pop(3).unwrap();
+        let _ = b.pop_batch().unwrap();
         assert!(t.join().unwrap());
         assert_eq!(b.len(), 2);
     }
@@ -182,7 +191,7 @@ mod tests {
     fn close_unblocks_consumers() {
         let b = ImgBuff::new(2);
         let b2 = b.clone();
-        let t = std::thread::spawn(move || b2.pop(0));
+        let t = std::thread::spawn(move || b2.pop_batch());
         std::thread::sleep(std::time::Duration::from_millis(20));
         b.close();
         assert!(t.join().unwrap().is_none());

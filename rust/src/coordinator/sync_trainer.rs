@@ -28,6 +28,10 @@ pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
     let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
     let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
     let gen_spec = model.artifact("generate_fp32")?.clone();
+    // Warm the executable cache so compile time never lands in step 1.
+    for spec in [&g_spec, &d_spec, &gen_spec] {
+        rt.prepare(spec)?;
+    }
 
     let pipeline = make_pipeline(model, cfg.n_modes, cfg.seed ^ 0xDA7A);
     let evaluator = Evaluator::fit(&rt, model, &pipeline, cfg.eval_batches)?;

@@ -54,6 +54,14 @@ pub struct DataPipeline {
     stop: Arc<AtomicBool>,
     desired_workers: Arc<AtomicUsize>,
     live_workers: Arc<AtomicUsize>,
+    /// Monotonic worker-id source.  Ids are NEVER reused: a positional
+    /// (0..n) scheme let a shrink->grow cycle respawn an id still owned by
+    /// a live retiring worker, leaving two workers sharing an id and
+    /// `live_workers` permanently over desired.
+    next_worker_id: AtomicUsize,
+    /// Outstanding shrink requests; workers claim one unit cooperatively
+    /// and exit.  Growth cancels unclaimed units before spawning.
+    retire_budget: AtomicUsize,
     tuner: Option<std::sync::Mutex<CongestionTuner>>,
     /// Batch-extraction latency samples (seconds) — the Fig. 11 metric.
     extract_latency: std::sync::Mutex<Sample>,
@@ -79,30 +87,41 @@ impl DataPipeline {
             stop: Arc::new(AtomicBool::new(false)),
             desired_workers: Arc::new(AtomicUsize::new(cfg.initial_workers)),
             live_workers: Arc::new(AtomicUsize::new(0)),
+            next_worker_id: AtomicUsize::new(0),
+            retire_budget: AtomicUsize::new(0),
             tuner: cfg.tuner.clone().map(|t| std::sync::Mutex::new(CongestionTuner::new(t))),
             extract_latency: std::sync::Mutex::new(Sample::new()),
             handles: std::sync::Mutex::new(Vec::new()),
             tx_template: tx,
             batch_size: cfg.batch_size,
         });
-        for id in 0..cfg.initial_workers {
-            pipeline.spawn_worker(id);
+        for _ in 0..cfg.initial_workers {
+            pipeline.spawn_worker();
         }
         pipeline
     }
 
-    fn spawn_worker(self: &Arc<Self>, id: usize) {
+    /// Claim one unit of the shrink budget; the claiming worker retires.
+    fn claim_retire(&self) -> bool {
+        self.retire_budget
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok()
+    }
+
+    fn spawn_worker(self: &Arc<Self>) {
         let me = self.clone();
         let tx = self.tx_template.clone();
+        let id = self.next_worker_id.fetch_add(1, Ordering::SeqCst);
         self.live_workers.fetch_add(1, Ordering::SeqCst);
         let h = std::thread::spawn(move || {
+            log::trace!("pipeline worker {id} up");
             loop {
                 if me.stop.load(Ordering::SeqCst) {
                     break;
                 }
-                // Worker retires itself if above the desired count (the
-                // tuner "releases the resources").
-                if id >= me.desired_workers.load(Ordering::SeqCst) {
+                // Cooperative shrink (the tuner "releases the resources"):
+                // whichever worker reaches this first claims the retirement.
+                if me.claim_retire() {
                     break;
                 }
                 let mut data = Vec::with_capacity(me.batch_size * 3 * 32 * 32);
@@ -124,20 +143,30 @@ impl DataPipeline {
                     break;
                 }
             }
+            log::trace!("pipeline worker {id} down");
             me.live_workers.fetch_sub(1, Ordering::SeqCst);
         });
         self.handles.lock().unwrap().push(h);
     }
 
     fn apply_worker_target(self: &Arc<Self>, target: usize) {
+        let target = target.max(1);
         let cur = self.desired_workers.swap(target, Ordering::SeqCst);
         if target > cur {
-            for id in cur..target {
-                self.spawn_worker(id);
+            // Growth first cancels outstanding retirements (those workers
+            // stay), then spawns the remainder under FRESH ids.
+            let mut need = target - cur;
+            while need > 0 && self.claim_retire() {
+                need -= 1;
             }
+            for _ in 0..need {
+                self.spawn_worker();
+            }
+        } else if target < cur {
+            // Shrink is cooperative: `cur - target` workers will claim a
+            // unit each and exit at their next loop iteration.
+            self.retire_budget.fetch_add(cur - target, Ordering::SeqCst);
         }
-        // Shrink is cooperative: workers with id >= target exit on their
-        // next loop iteration.
     }
 
     /// Pop the next batch, recording the extraction latency.
@@ -154,6 +183,11 @@ impl DataPipeline {
 
     pub fn desired_workers(&self) -> usize {
         self.desired_workers.load(Ordering::SeqCst)
+    }
+
+    /// Total workers ever spawned (ids are monotonic, never reused).
+    pub fn spawned_workers(&self) -> usize {
+        self.next_worker_id.load(Ordering::SeqCst)
     }
 
     pub fn tuner_stats(&self) -> Option<(u64, u64, usize)> {
@@ -270,6 +304,43 @@ mod tests {
         }
         let sample = p.take_extract_latencies();
         assert_eq!(sample.len(), 5);
+        p.shutdown();
+    }
+
+    #[test]
+    fn shrink_grow_cycle_does_not_overcount_workers() {
+        // Regression: the old positional-id scheme respawned ids still
+        // owned by live retiring workers after a shrink->grow cycle, so
+        // two workers shared an id and `live_workers` stayed permanently
+        // above `desired_workers`.  Monotonic ids + a retire budget keep
+        // the invariant live <= desired after quiescing.
+        let p = DataPipeline::start(
+            node(1e-5),
+            PipelineConfig { batch_size: 2, initial_workers: 4, initial_buffer: 2, tuner: None },
+        );
+        for _ in 0..4 {
+            p.next_batch().unwrap();
+        }
+        p.apply_worker_target(1);
+        p.apply_worker_target(4); // immediate regrow: the racy window
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            // Keep draining so retiring workers blocked on a full buffer
+            // can finish their send and exit.
+            let _ = p.next_batch();
+            if p.live_workers() <= p.desired_workers() {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "live {} never settled to desired {}",
+                p.live_workers(),
+                p.desired_workers()
+            );
+        }
+        assert!(p.live_workers() <= p.desired_workers());
+        assert_eq!(p.desired_workers(), 4);
+        assert!(p.spawned_workers() >= 4, "monotonic id counter");
         p.shutdown();
     }
 

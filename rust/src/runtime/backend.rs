@@ -1,0 +1,51 @@
+//! The pluggable execution backend behind `Runtime`.
+//!
+//! Everything above this line (trainers, evaluator, step plumbing) deals in
+//! `HostTensor`s and `ArtifactSpec`s; a `Backend` turns one artifact
+//! execution request into output tensors.  Two implementations exist:
+//!
+//! * `RefCpuBackend` (default, pure Rust) — interprets the reference
+//!   artifact descriptors written by `runtime::refgen`, executing the small
+//!   op set the G/D step artifacts need (matmul, bias, activations,
+//!   elementwise grad/optimizer updates).  Zero native dependencies; this
+//!   is what `cargo test` runs on a clean checkout.
+//! * `PjrtBackend` (`--features pjrt`) — compiles the real AOT HLO-text
+//!   artifacts through the PJRT C API (`xla` crate), exactly the seed
+//!   behaviour.
+//!
+//! Backends live on ONE thread (PJRT handles are not `Send`), mirroring the
+//! coordinator's one-runtime-per-thread design; everything crossing threads
+//! stays `HostTensor`.
+
+use anyhow::Result;
+
+use super::artifact::ArtifactSpec;
+use super::params::HostTensor;
+
+/// Compile/execute counters for perf accounting (shared by all backends).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// One execution engine.  `inputs` is aligned 1:1 with `spec.inputs` (the
+/// step plumbing resolves roles into borrowed tensors — no copies on the
+/// step hot path); the returned vector must align 1:1 with `spec.outputs`.
+pub trait Backend {
+    /// Human-readable platform name ("ref-cpu", "cpu", "tpu", ...).
+    fn platform(&self) -> String;
+
+    /// Compile/load counters.
+    fn stats(&self) -> RuntimeStats;
+
+    /// Load + compile an artifact ahead of execution (cached); executing an
+    /// unprepared artifact must prepare it implicitly.  Trainers call this
+    /// at startup so compile time never lands in step-1 latency.
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()>;
+
+    /// Execute one artifact.
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}

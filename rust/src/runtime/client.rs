@@ -1,120 +1,103 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute.
+//! `Runtime` — the facade trainers talk to, over a pluggable `Backend`.
 //!
-//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.  HLO
-//! *text* is the interchange format (xla_extension 0.5.1 rejects jax>=0.5's
-//! 64-bit-id protos; the text parser reassigns ids).
+//! `Runtime::new` picks the default backend for the build: the pure-Rust
+//! `RefCpuBackend` unless the crate was compiled with `--features pjrt`, in
+//! which case the native PJRT backend is used for HLO artifact dirs.
+//! Routing is by artifact *format*: a dir of `.ref.json` descriptors runs
+//! on the reference backend even in a pjrt build (and
+//! `PARAGAN_BACKEND=ref` forces it unconditionally).
+//! `Runtime::with_backend` injects any other `Backend` implementation.
 //!
-//! PJRT handles are not `Send`: one `Runtime` lives on one thread (the
-//! coordinator's runtime thread) and everything crossing threads is
-//! `HostTensor` (see `runtime::params`).
+//! Runtimes are per-thread: PJRT handles are not `Send`, so one `Runtime`
+//! lives on one thread (the coordinator's runtime thread) and everything
+//! crossing threads is `HostTensor` (see `runtime::params`).
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::rc::Rc;
-use std::time::Instant;
+use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::artifact::ArtifactSpec;
+use super::backend::{Backend, RuntimeStats};
 use super::params::HostTensor;
 
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// (loads, executions) counters for perf accounting.
-    stats: RefCell<RuntimeStats>,
-}
-
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub compiles: u64,
-    pub executions: u64,
-    pub compile_secs: f64,
-    pub execute_secs: f64,
 }
 
 impl Runtime {
+    /// Open the artifact dir with the build's default backend.
     pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            dir: artifact_dir.into(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
-        })
+        let dir = artifact_dir.into();
+        let backend = default_backend(&dir)?;
+        Ok(Runtime { backend, dir })
+    }
+
+    /// Open with an explicit backend (tests, custom engines).
+    pub fn with_backend(artifact_dir: impl Into<PathBuf>, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend, dir: artifact_dir.into() }
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.backend.stats()
     }
 
-    /// Load + compile an artifact file (cached).
-    pub fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(file) {
-            return Ok(exe.clone());
-        }
-        let path = self.dir.join(file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
-        );
-        {
-            let mut st = self.stats.borrow_mut();
-            st.compiles += 1;
-            st.compile_secs += t0.elapsed().as_secs_f64();
-        }
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
-        Ok(exe)
+    /// Warm the backend's executable cache for an artifact.
+    pub fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        self.backend.prepare(spec)
     }
 
-    pub fn load_artifact(&self, spec: &ArtifactSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        self.load(&spec.file)
-    }
-
-    /// Host tensor -> f32 Literal (zero reshaping: create directly shaped).
-    pub fn literal(&self, t: &HostTensor) -> Result<xla::Literal> {
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-        };
-        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
-            .with_context(|| format!("literal for '{}' shape {:?}", t.name, t.shape))
-    }
-
-    pub fn scalar(&self, v: f32) -> xla::Literal {
-        xla::Literal::scalar(v)
-    }
-
-    /// Execute; artifacts are lowered with return_tuple=True, so the single
-    /// result untuples into the flat output list.
-    pub fn execute(
+    /// Execute one artifact; `inputs` aligned with `spec.inputs`, result
+    /// aligned with `spec.outputs`.
+    pub fn execute_artifact(
         &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(inputs).context("pjrt execute")?;
-        let tuple = result[0][0].to_literal_sync().context("fetch result")?;
-        let outs = tuple.to_tuple().context("untuple outputs")?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
-        }
-        Ok(outs)
+        spec: &ArtifactSpec,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.backend.execute(spec, inputs)
     }
+}
 
-    /// Literal -> host vec.
-    pub fn to_host(&self, lit: &xla::Literal) -> Result<Vec<f32>> {
-        lit.to_vec::<f32>().context("literal to host")
+/// Does `dir` hold reference descriptors (vs. native HLO text)?  Routing by
+/// artifact format keeps a pjrt build able to run ref artifacts (tests,
+/// quickstart) without env-var gymnastics.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+fn dir_has_ref_artifacts(dir: &Path) -> bool {
+    std::fs::read_to_string(dir.join("manifest.json"))
+        .map(|text| text.contains(".ref.json"))
+        .unwrap_or(false)
+}
+
+fn default_backend(dir: &Path) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        let force_ref = std::env::var("PARAGAN_BACKEND").map(|v| v == "ref").unwrap_or(false);
+        if !force_ref && !dir_has_ref_artifacts(dir) {
+            return Ok(Box::new(super::pjrt::PjrtBackend::new(dir)?));
+        }
+    }
+    Ok(Box::new(super::ref_cpu::RefCpuBackend::new(dir)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_is_ref_cpu_without_pjrt_feature() {
+        if cfg!(feature = "pjrt") {
+            return; // platform depends on the native client
+        }
+        let rt = Runtime::new(std::env::temp_dir()).unwrap();
+        assert_eq!(rt.platform(), "ref-cpu");
+        assert_eq!(rt.stats().executions, 0);
     }
 }

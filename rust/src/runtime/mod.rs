@@ -1,15 +1,28 @@
-//! PJRT runtime: artifact manifest, host tensor stores, executable cache,
-//! and the generic step plumbing that walks the AOT calling convention.
+//! Runtime: artifact manifest, host tensor stores, the pluggable execution
+//! backend, and the generic step plumbing that walks the AOT calling
+//! convention.
 //!
 //! Start-to-finish path: `Manifest::load` -> `Runtime::new` ->
-//! `step::run_step` per training step.  Python is never involved.
+//! `step::run_step` per training step.  `Runtime` delegates to a `Backend`:
+//! the pure-Rust `RefCpuBackend` by default (reference MLP artifacts from
+//! `refgen`, zero native deps), or the PJRT/XLA engine for the real AOT
+//! HLO artifacts when built with `--features pjrt`.  Python is never
+//! involved on the training path.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod params;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod ref_cpu;
+pub mod refgen;
 pub mod step;
 
 pub use artifact::{ArtifactSpec, Init, Manifest, ModelManifest, OptimizerDef, ParamDef, Role, SlotInit, TensorSpec};
-pub use client::{Runtime, RuntimeStats};
+pub use backend::{Backend, RuntimeStats};
+pub use client::Runtime;
 pub use params::{HostTensor, ParamStore};
+pub use ref_cpu::RefCpuBackend;
+pub use refgen::{write_ref_artifacts, write_ref_artifacts_for, RefModelSpec};
 pub use step::{run_inference, run_step, StepOutputs};

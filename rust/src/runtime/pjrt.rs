@@ -1,0 +1,122 @@
+//! Native PJRT backend (`--features pjrt`): load AOT HLO-text artifacts,
+//! compile once, execute.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.  HLO
+//! *text* is the interchange format (xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id protos; the text parser reassigns ids).
+//!
+//! Requires the `xla` crate (not in the offline vendor set) — see the
+//! commented dependency in Cargo.toml.  PJRT handles are not `Send`: one
+//! backend lives on one thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::ArtifactSpec;
+use super::backend::{Backend, RuntimeStats};
+use super::params::HostTensor;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Load + compile an artifact file (cached).
+    fn load(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
+        );
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Host tensor -> f32 Literal (zero reshaping: create directly shaped).
+    fn literal(&self, t: &HostTensor) -> Result<xla::Literal> {
+        if t.shape.is_empty() {
+            return Ok(xla::Literal::scalar(t.data[0]));
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
+            .with_context(|| format!("literal for '{}' shape {:?}", t.name, t.shape))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        self.load(&spec.file).map(|_| ())
+    }
+
+    /// Execute; artifacts are lowered with return_tuple=True, so the single
+    /// result untuples into the flat output list.
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(&spec.file)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| self.literal(t)).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&lits).context("pjrt execute")?;
+        let tuple = result[0][0].to_literal_sync().context("fetch result")?;
+        let outs = tuple.to_tuple().context("untuple outputs")?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        anyhow::ensure!(
+            outs.len() == spec.outputs.len(),
+            "artifact '{}' returned {} outputs, manifest says {}",
+            spec.key,
+            outs.len(),
+            spec.outputs.len()
+        );
+        spec.outputs
+            .iter()
+            .zip(outs.iter())
+            .map(|(tout, lit)| {
+                let data = lit.to_vec::<f32>().context("literal to host")?;
+                Ok(HostTensor::new("out", tout.shape.clone(), data))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,1187 @@
+//! `RefCpuBackend` — the default, dependency-free execution backend.
+//!
+//! Executes the *reference artifact* format written by `runtime::refgen`:
+//! each `.ref.json` descriptor names a program kind (`d_step`, `g_step`,
+//! `generate`, `fid_features`), a loss, an optimizer and a precision; the
+//! network topology itself is recovered from the artifact's `param:` roles,
+//! which form a chain of dense `(w, b)` layers.  The op set is exactly what
+//! the MLP G/D step artifacts need — matmul (plus its two transposed
+//! variants for backprop), bias add, relu/lrelu/tanh and their gradients,
+//! and elementwise optimizer updates — mirroring the semantics of
+//! `python/compile/kernels/ref.py` and `python/compile/optimizers.py`.
+//!
+//! Precision: `bf16` quantizes the operands of *forward* matmuls (round to
+//! nearest even, like XLA's bf16); parameters, gradients and optimizer
+//! state stay f32, matching the paper's mixed-precision finding that
+//! weights/grads are sensitive while activations tolerate bf16.
+//!
+//! Native HLO-text artifacts are NOT handled here — build with
+//! `--features pjrt` for those.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, Role};
+use super::backend::{Backend, RuntimeStats};
+use super::params::HostTensor;
+use crate::util::json;
+
+/// The reference op set, public so parity tests (vs. the Python oracles in
+/// `python/compile/kernels/ref.py`) can drive the kernels directly.
+pub mod ops {
+    /// (M,K) x (K,N) -> (M,N), f32 accumulate, row-major.
+    pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// aT x b with a:(M,K), b:(M,N) -> (K,N).  Backprop: dW = xT @ dA.
+    pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        let mut out = vec![0f32; k * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// a x bT with a:(M,K), b:(N,K) -> (M,N).  Backprop: dX = dA @ WT.
+    pub fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// h[r, :] += b for every row r.
+    pub fn add_bias(h: &mut [f32], rows: usize, b: &[f32]) {
+        debug_assert_eq!(h.len(), rows * b.len());
+        let n = b.len();
+        for r in 0..rows {
+            let row = &mut h[r * n..(r + 1) * n];
+            for j in 0..n {
+                row[j] += b[j];
+            }
+        }
+    }
+
+    /// Column sums of d:(rows, cols) — the bias gradient.
+    pub fn bias_grad(d: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        debug_assert_eq!(d.len(), rows * cols);
+        let mut out = vec![0f32; cols];
+        for r in 0..rows {
+            let row = &d[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                out[j] += row[j];
+            }
+        }
+        out
+    }
+
+    pub fn tanh_vec(a: &[f32]) -> Vec<f32> {
+        a.iter().map(|&x| x.tanh()).collect()
+    }
+
+    /// Numerically stable log(1 + e^x).
+    pub fn softplus(x: f32) -> f32 {
+        x.max(0.0) + (-x.abs()).exp().ln_1p()
+    }
+
+    pub fn sigmoid(x: f32) -> f32 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    /// f32 -> bf16 -> f32, round to nearest even (XLA semantics).
+    pub fn bf16_round(x: f32) -> f32 {
+        if !x.is_finite() {
+            return x;
+        }
+        let bits = x.to_bits();
+        let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+        f32::from_bits(rounded & 0xFFFF_0000)
+    }
+
+    pub fn quantize_bf16(v: &[f32]) -> Vec<f32> {
+        v.iter().map(|&x| bf16_round(x)).collect()
+    }
+}
+
+use ops::{sigmoid, softplus};
+
+/// Hidden-layer activation of a dense chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    LRelu,
+}
+
+const LRELU_SLOPE: f32 = 0.2;
+
+fn act_apply(a: &[f32], act: Act) -> Vec<f32> {
+    match act {
+        Act::Relu => a.iter().map(|&x| x.max(0.0)).collect(),
+        Act::LRelu => a.iter().map(|&x| if x >= 0.0 { x } else { LRELU_SLOPE * x }).collect(),
+    }
+}
+
+/// grad *= act'(pre), elementwise.
+fn act_grad_mul(grad: &mut [f32], pre: &[f32], act: Act) {
+    debug_assert_eq!(grad.len(), pre.len());
+    match act {
+        Act::Relu => {
+            for (g, &p) in grad.iter_mut().zip(pre) {
+                if p < 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        Act::LRelu => {
+            for (g, &p) in grad.iter_mut().zip(pre) {
+                if p < 0.0 {
+                    *g *= LRELU_SLOPE;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Descriptor (the `.ref.json` program format)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    DStep,
+    GStep,
+    Generate,
+    FidFeatures,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Loss {
+    Bce,
+    Hinge,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Opt {
+    Adam,
+    AdaBelief,
+    RAdam,
+    Lookahead,
+    Lars,
+}
+
+impl Opt {
+    fn parse(s: &str) -> Result<Opt> {
+        Ok(match s {
+            "adam" => Opt::Adam,
+            "adabelief" => Opt::AdaBelief,
+            "radam" => Opt::RAdam,
+            "lookahead" => Opt::Lookahead,
+            "lars" => Opt::Lars,
+            other => bail!("unknown optimizer '{other}'"),
+        })
+    }
+
+    fn n_slots(self) -> usize {
+        match self {
+            Opt::Adam | Opt::AdaBelief | Opt::RAdam => 2,
+            Opt::Lookahead => 3,
+            Opt::Lars => 1,
+        }
+    }
+}
+
+/// Slot count of a named optimizer — the single source of truth `refgen`
+/// derives manifest slot banks from (keeps exporter and executor in
+/// lockstep by construction).
+pub fn optimizer_n_slots(opt: &str) -> Result<usize> {
+    Ok(Opt::parse(opt)?.n_slots())
+}
+
+/// Mirrors `python/compile/optimizers.py::HParams` (lr arrives per call).
+#[derive(Debug, Clone)]
+struct HParams {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    weight_decay: f32,
+    la_k: f32,
+    la_alpha: f32,
+    lars_trust: f32,
+    lars_momentum: f32,
+}
+
+struct RefProgram {
+    kind: Kind,
+    loss: Loss,
+    opt: Option<Opt>,
+    bf16: bool,
+    hp: HParams,
+}
+
+impl RefProgram {
+    fn parse(text: &str) -> Result<RefProgram> {
+        let v = json::parse(text).context("ref descriptor json")?;
+        anyhow::ensure!(
+            v.get("format").as_str() == Some("paragan-ref"),
+            "not a paragan-ref descriptor (format field missing/unknown)"
+        );
+        let kind = match v.get("kind").as_str() {
+            Some("d_step") => Kind::DStep,
+            Some("g_step") => Kind::GStep,
+            Some("generate") => Kind::Generate,
+            Some("fid_features") => Kind::FidFeatures,
+            other => bail!("unknown ref program kind {other:?}"),
+        };
+        let loss = match v.get("loss").as_str() {
+            Some("hinge") => Loss::Hinge,
+            _ => Loss::Bce,
+        };
+        let opt = match v.get("optimizer").as_str() {
+            Some(s) => Some(Opt::parse(s)?),
+            None => None,
+        };
+        let bf16 = v.get("precision").as_str() == Some("bf16");
+        let h = v.get("hparams");
+        let f = |key: &str, default: f64| h.get(key).as_f64().unwrap_or(default) as f32;
+        let hp = HParams {
+            b1: f("b1", 0.5),
+            b2: f("b2", 0.999),
+            eps: f("eps", 1e-8),
+            weight_decay: f("weight_decay", 0.0),
+            la_k: f("la_k", 5.0),
+            la_alpha: f("la_alpha", 0.5),
+            lars_trust: f("lars_trust", 1e-3),
+            lars_momentum: f("lars_momentum", 0.9),
+        };
+        Ok(RefProgram { kind, loss, opt, bf16, hp })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense-chain forward/backward
+// ---------------------------------------------------------------------------
+
+type LayerRef<'a> = (&'a HostTensor, &'a HostTensor);
+
+/// Pair the ordered `param:` tensors into a chain of dense (w, b) layers.
+fn dense_chain<'a>(params: &[&'a HostTensor]) -> Result<Vec<LayerRef<'a>>> {
+    anyhow::ensure!(
+        !params.is_empty() && params.len() % 2 == 0,
+        "ref backend expects (w, b) dense pairs, got {} param tensors",
+        params.len()
+    );
+    let mut out: Vec<LayerRef<'a>> = Vec::with_capacity(params.len() / 2);
+    for pair in params.chunks(2) {
+        let (w, b) = (pair[0], pair[1]);
+        anyhow::ensure!(
+            w.shape.len() == 2,
+            "expected rank-2 weight '{}', got shape {:?}",
+            w.name,
+            w.shape
+        );
+        anyhow::ensure!(
+            b.shape.len() == 1 && b.shape[0] == w.shape[1],
+            "bias '{}' (shape {:?}) does not match weight '{}' (shape {:?})",
+            b.name,
+            b.shape,
+            w.name,
+            w.shape
+        );
+        if let Some(&(pw, _)) = out.last() {
+            anyhow::ensure!(
+                pw.shape[1] == w.shape[0],
+                "dense chain breaks at '{}': previous out {} != in {}",
+                w.name,
+                pw.shape[1],
+                w.shape[0]
+            );
+        }
+        out.push((w, b));
+    }
+    Ok(out)
+}
+
+/// Forward pass cache: per layer, the input `xs[i]` and pre-activation
+/// `pre[i]`.  The chain's final pre-activation is `pre.last()` — D's logits
+/// (nout 1) or G's pre-tanh image.
+struct Forward {
+    xs: Vec<Vec<f32>>,
+    pre: Vec<Vec<f32>>,
+    batch: usize,
+}
+
+fn mlp_forward(
+    layers: &[LayerRef],
+    x0: Vec<f32>,
+    batch: usize,
+    hidden: Act,
+    bf16: bool,
+) -> Result<Forward> {
+    let mut xs = Vec::with_capacity(layers.len());
+    let mut pre = Vec::with_capacity(layers.len());
+    let mut x = x0;
+    for (li, (w, b)) in layers.iter().copied().enumerate() {
+        let nin = w.shape[0];
+        let nout = w.shape[1];
+        anyhow::ensure!(
+            x.len() == batch * nin,
+            "layer '{}': input has {} values, expected {}x{}",
+            w.name,
+            x.len(),
+            batch,
+            nin
+        );
+        let mut a = if bf16 {
+            let xq = ops::quantize_bf16(&x);
+            let wq = ops::quantize_bf16(&w.data);
+            ops::matmul(&xq, batch, nin, &wq, nout)
+        } else {
+            ops::matmul(&x, batch, nin, &w.data, nout)
+        };
+        ops::add_bias(&mut a, batch, &b.data);
+        let next = if li + 1 < layers.len() { act_apply(&a, hidden) } else { Vec::new() };
+        xs.push(x);
+        pre.push(a);
+        x = next;
+    }
+    Ok(Forward { xs, pre, batch })
+}
+
+/// Backprop `dout` (gradient w.r.t. the final pre-activation) through the
+/// chain.  Returns per-layer `(dw, db)` (chain order) and, when `want_dx`,
+/// the gradient w.r.t. the chain's input.  Gradients stay f32 regardless of
+/// the forward precision (the paper's mixed-precision rule).
+fn mlp_backward(
+    layers: &[LayerRef],
+    f: &Forward,
+    dout: Vec<f32>,
+    hidden: Act,
+    want_dx: bool,
+) -> (Vec<(Vec<f32>, Vec<f32>)>, Option<Vec<f32>>) {
+    let n = layers.len();
+    let mut grads: Vec<(Vec<f32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); n];
+    let mut dx_out = None;
+    let mut grad = dout; // dL/d(pre) of layer li
+    for li in (0..n).rev() {
+        let (w, _b) = layers[li];
+        let nin = w.shape[0];
+        let nout = w.shape[1];
+        let dw = ops::matmul_tn(&f.xs[li], f.batch, nin, &grad, nout);
+        let db = ops::bias_grad(&grad, f.batch, nout);
+        let need_dx = li > 0 || want_dx;
+        let dx = if need_dx {
+            Some(ops::matmul_nt(&grad, f.batch, nout, &w.data, nin))
+        } else {
+            None
+        };
+        grads[li] = (dw, db);
+        if li == 0 {
+            dx_out = dx;
+        } else {
+            let mut g = dx.expect("dx computed for inner layer");
+            act_grad_mul(&mut g, &f.pre[li - 1], hidden);
+            grad = g;
+        }
+    }
+    (grads, dx_out)
+}
+
+// ---------------------------------------------------------------------------
+// Losses (mirror python/compile/model.py LOSSES)
+// ---------------------------------------------------------------------------
+
+fn d_loss_and_grads(loss: Loss, rl: &[f32], fl: &[f32]) -> (f32, Vec<f32>, Vec<f32>) {
+    let b = rl.len() as f32;
+    match loss {
+        Loss::Bce => {
+            let l = rl.iter().map(|&x| softplus(-x)).sum::<f32>() / b
+                + fl.iter().map(|&x| softplus(x)).sum::<f32>() / b;
+            let drl = rl.iter().map(|&x| -sigmoid(-x) / b).collect();
+            let dfl = fl.iter().map(|&x| sigmoid(x) / b).collect();
+            (l, drl, dfl)
+        }
+        Loss::Hinge => {
+            let l = rl.iter().map(|&x| (1.0 - x).max(0.0)).sum::<f32>() / b
+                + fl.iter().map(|&x| (1.0 + x).max(0.0)).sum::<f32>() / b;
+            let drl = rl.iter().map(|&x| if x < 1.0 { -1.0 / b } else { 0.0 }).collect();
+            let dfl = fl.iter().map(|&x| if x > -1.0 { 1.0 / b } else { 0.0 }).collect();
+            (l, drl, dfl)
+        }
+    }
+}
+
+fn g_loss_and_grad(loss: Loss, fl: &[f32]) -> (f32, Vec<f32>) {
+    let b = fl.len() as f32;
+    match loss {
+        Loss::Bce => {
+            let l = fl.iter().map(|&x| softplus(-x)).sum::<f32>() / b;
+            let dfl = fl.iter().map(|&x| -sigmoid(-x) / b).collect();
+            (l, dfl)
+        }
+        Loss::Hinge => {
+            let l = -fl.iter().sum::<f32>() / b;
+            (l, vec![-1.0 / b; fl.len()])
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Optimizers (mirror python/compile/optimizers.py)
+// ---------------------------------------------------------------------------
+
+fn l2_norm(v: &[f32]) -> f32 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+fn apply_opt(
+    opt: Opt,
+    hp: &HParams,
+    step: f32,
+    lr: f32,
+    p: &mut [f32],
+    grad: &[f32],
+    slots: &mut [&mut Vec<f32>],
+) {
+    debug_assert_eq!(slots.len(), opt.n_slots());
+    match opt {
+        Opt::Adam => {
+            let (ma, rest) = slots.split_at_mut(1);
+            let (m, v) = (&mut *ma[0], &mut *rest[0]);
+            let mc = 1.0 - hp.b1.powf(step);
+            let vc = 1.0 - hp.b2.powf(step);
+            for i in 0..p.len() {
+                let g = grad[i];
+                m[i] = hp.b1 * m[i] + (1.0 - hp.b1) * g;
+                v[i] = hp.b2 * v[i] + (1.0 - hp.b2) * g * g;
+                p[i] -= lr * (m[i] / mc) / ((v[i] / vc).sqrt() + hp.eps);
+            }
+        }
+        Opt::AdaBelief => {
+            let (ma, rest) = slots.split_at_mut(1);
+            let (m, s) = (&mut *ma[0], &mut *rest[0]);
+            let mc = 1.0 - hp.b1.powf(step);
+            let sc = 1.0 - hp.b2.powf(step);
+            for i in 0..p.len() {
+                let g = grad[i];
+                m[i] = hp.b1 * m[i] + (1.0 - hp.b1) * g;
+                let d = g - m[i];
+                s[i] = hp.b2 * s[i] + (1.0 - hp.b2) * d * d + hp.eps;
+                p[i] -= lr * (m[i] / mc) / ((s[i] / sc).sqrt() + hp.eps);
+            }
+        }
+        Opt::RAdam => {
+            let (ma, rest) = slots.split_at_mut(1);
+            let (m, v) = (&mut *ma[0], &mut *rest[0]);
+            let mc = 1.0 - hp.b1.powf(step);
+            let vc = 1.0 - hp.b2.powf(step);
+            let rho_inf = 2.0 / (1.0 - hp.b2) - 1.0;
+            let b2t = hp.b2.powf(step);
+            let rho_t = rho_inf - 2.0 * step * b2t / (1.0 - b2t);
+            let r_num = (rho_t - 4.0) * (rho_t - 2.0) * rho_inf;
+            let r_den = (rho_inf - 4.0) * (rho_inf - 2.0) * rho_t;
+            let rect = (r_num.max(0.0) / r_den).sqrt();
+            let use_adaptive = rho_t > 4.0;
+            for i in 0..p.len() {
+                let g = grad[i];
+                m[i] = hp.b1 * m[i] + (1.0 - hp.b1) * g;
+                v[i] = hp.b2 * v[i] + (1.0 - hp.b2) * g * g;
+                let mhat = m[i] / mc;
+                if use_adaptive {
+                    let vhat = (v[i] / vc).sqrt() + hp.eps;
+                    p[i] -= lr * rect * mhat / vhat;
+                } else {
+                    p[i] -= lr * mhat;
+                }
+            }
+        }
+        Opt::Lookahead => {
+            // Fast weights take an Adam step; slow weights interpolate when
+            // step % k == 0 (branch-free jnp.where in the Python original).
+            let (ma, rest) = slots.split_at_mut(1);
+            let (va, sl) = rest.split_at_mut(1);
+            let (m, v, slow) = (&mut *ma[0], &mut *va[0], &mut *sl[0]);
+            let mc = 1.0 - hp.b1.powf(step);
+            let vc = 1.0 - hp.b2.powf(step);
+            let sync = (step % hp.la_k) == 0.0;
+            for i in 0..p.len() {
+                let g = grad[i];
+                m[i] = hp.b1 * m[i] + (1.0 - hp.b1) * g;
+                v[i] = hp.b2 * v[i] + (1.0 - hp.b2) * g * g;
+                let fast = p[i] - lr * (m[i] / mc) / ((v[i] / vc).sqrt() + hp.eps);
+                if sync {
+                    let s_new = slow[i] + hp.la_alpha * (fast - slow[i]);
+                    slow[i] = s_new;
+                    p[i] = s_new;
+                } else {
+                    p[i] = fast;
+                }
+            }
+        }
+        Opt::Lars => {
+            let mo = &mut *slots[0];
+            let wn = l2_norm(p);
+            let gn = l2_norm(grad);
+            let trust = if wn > 0.0 && gn > 0.0 {
+                hp.lars_trust * wn / (gn + hp.weight_decay * wn + 1e-12)
+            } else {
+                1.0
+            };
+            let local_lr = lr * trust;
+            for i in 0..p.len() {
+                let mo_new = hp.lars_momentum * mo[i] + local_lr * (grad[i] + hp.weight_decay * p[i]);
+                p[i] -= mo_new;
+                mo[i] = mo_new;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Inputs of one execution, partitioned by role (aligned with spec.inputs).
+struct Gathered<'a> {
+    step: f32,
+    lr: f32,
+    params: Vec<&'a HostTensor>,
+    slots: Vec<Vec<&'a HostTensor>>,
+    dparams: Vec<&'a HostTensor>,
+    data: BTreeMap<&'a str, &'a HostTensor>,
+}
+
+fn gather<'a>(spec: &'a ArtifactSpec, inputs: &[&'a HostTensor]) -> Result<Gathered<'a>> {
+    anyhow::ensure!(
+        inputs.len() == spec.inputs.len(),
+        "artifact '{}' got {} inputs, spec lists {}",
+        spec.key,
+        inputs.len(),
+        spec.inputs.len()
+    );
+    let mut g = Gathered {
+        step: 0.0,
+        lr: 0.0,
+        params: Vec::new(),
+        slots: Vec::new(),
+        dparams: Vec::new(),
+        data: BTreeMap::new(),
+    };
+    for (tin, &t) in spec.inputs.iter().zip(inputs) {
+        match &tin.role {
+            Role::Step => g.step = t.data[0],
+            Role::Lr => g.lr = t.data[0],
+            Role::Param(_) => g.params.push(t),
+            Role::Slot(k, _) => {
+                while g.slots.len() <= *k {
+                    g.slots.push(Vec::new());
+                }
+                g.slots[*k].push(t);
+            }
+            Role::DParam(_) => g.dparams.push(t),
+            Role::In(name) => {
+                g.data.insert(name.as_str(), t);
+            }
+            Role::Out(_) => bail!("out role in input list"),
+        }
+    }
+    Ok(g)
+}
+
+/// Move a named tensor out of an updated (name, data) list.  Each output
+/// role appears once, so the emptied slot is never read again (and the
+/// numel check in `emit` would catch a double-take).
+fn take_named(list: &mut [(String, Vec<f32>)], name: &str) -> Result<Vec<f32>> {
+    let i = list
+        .iter()
+        .position(|(n, _)| n == name)
+        .ok_or_else(|| anyhow!("ref backend produced no tensor named '{name}'"))?;
+    Ok(std::mem::take(&mut list[i].1))
+}
+
+pub struct RefCpuBackend {
+    dir: PathBuf,
+    programs: RefCell<HashMap<String, Rc<RefProgram>>>,
+    /// (d_in, feat_dim) -> fixed random projection (the FID feature net).
+    fid_weights: RefCell<HashMap<(usize, usize), Rc<Vec<f32>>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl RefCpuBackend {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> RefCpuBackend {
+        RefCpuBackend {
+            dir: artifact_dir.into(),
+            programs: RefCell::new(HashMap::new()),
+            fid_weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        }
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn program(&self, spec: &ArtifactSpec) -> Result<Rc<RefProgram>> {
+        if let Some(p) = self.programs.borrow().get(&spec.key) {
+            return Ok(p.clone());
+        }
+        let t0 = Instant::now();
+        let path = self.dir.join(&spec.file);
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading ref artifact {path:?} — the ref-cpu backend executes \
+                 `.ref.json` descriptors (runtime::refgen); native HLO-text \
+                 artifacts need a build with `--features pjrt`"
+            )
+        })?;
+        let prog = Rc::new(RefProgram::parse(&text).with_context(|| format!("parsing {path:?}"))?);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.programs.borrow_mut().insert(spec.key.clone(), prog.clone());
+        Ok(prog)
+    }
+
+    fn fid_projection(&self, d_in: usize, feat: usize) -> Rc<Vec<f32>> {
+        if let Some(w) = self.fid_weights.borrow().get(&(d_in, feat)) {
+            return w.clone();
+        }
+        // Fixed seed: every Runtime instance (G thread, D thread, eval)
+        // computes identical features, like the baked-in HLO constants.
+        let mut rng = crate::util::rng::Rng::new(
+            0xF1D0_5EED ^ (d_in as u64) ^ ((feat as u64) << 32),
+        );
+        let mut v = vec![0f32; d_in * feat];
+        rng.fill_gaussian(&mut v, 0.0, 1.0 / (d_in as f32).sqrt());
+        let w = Rc::new(v);
+        self.fid_weights.borrow_mut().insert((d_in, feat), w.clone());
+        w
+    }
+
+    /// Run the optimizer over every (param, grads) pair, returning updated
+    /// (name, data) lists for params and each slot bank.
+    #[allow(clippy::type_complexity)]
+    fn optimize(
+        &self,
+        prog: &RefProgram,
+        g: &Gathered,
+        grads: &[Vec<f32>],
+    ) -> Result<(Vec<(String, Vec<f32>)>, Vec<Vec<(String, Vec<f32>)>>)> {
+        let opt = prog.opt.context("step artifact descriptor lacks an optimizer")?;
+        anyhow::ensure!(
+            g.slots.len() == opt.n_slots(),
+            "optimizer {opt:?} wants {} slots, artifact supplied {}",
+            opt.n_slots(),
+            g.slots.len()
+        );
+        anyhow::ensure!(grads.len() == g.params.len(), "grad/param count mismatch");
+        for (k, sv) in g.slots.iter().enumerate() {
+            anyhow::ensure!(
+                sv.len() == g.params.len(),
+                "slot bank {k} has {} tensors, expected {}",
+                sv.len(),
+                g.params.len()
+            );
+        }
+        let mut params: Vec<(String, Vec<f32>)> =
+            g.params.iter().map(|t| (t.name.clone(), t.data.clone())).collect();
+        let mut slots: Vec<Vec<(String, Vec<f32>)>> = g
+            .slots
+            .iter()
+            .map(|sv| sv.iter().map(|t| (t.name.clone(), t.data.clone())).collect())
+            .collect();
+        for j in 0..params.len() {
+            anyhow::ensure!(
+                grads[j].len() == params[j].1.len(),
+                "grad size mismatch for '{}'",
+                params[j].0
+            );
+            let mut srefs: Vec<&mut Vec<f32>> =
+                slots.iter_mut().map(|sv| &mut sv[j].1).collect();
+            apply_opt(opt, &prog.hp, g.step, g.lr, &mut params[j].1, &grads[j], &mut srefs);
+        }
+        Ok((params, slots))
+    }
+
+    /// Assemble the output list in spec order from updated params/slots and
+    /// the extra (`out:`) tensors.  Consumes the updated state — tensors
+    /// are moved, not copied, into the outputs.
+    fn emit(
+        &self,
+        spec: &ArtifactSpec,
+        mut params: Vec<(String, Vec<f32>)>,
+        mut slots: Vec<Vec<(String, Vec<f32>)>>,
+        extra: Vec<(&str, Vec<f32>)>,
+    ) -> Result<Vec<HostTensor>> {
+        let mut extra: BTreeMap<&str, Vec<f32>> = extra.into_iter().collect();
+        let mut out = Vec::with_capacity(spec.outputs.len());
+        for tout in &spec.outputs {
+            let (name, data) = match &tout.role {
+                Role::Param(n) => (n.clone(), take_named(&mut params, n)?),
+                Role::Slot(k, n) => {
+                    let bank = slots
+                        .get_mut(*k)
+                        .ok_or_else(|| anyhow!("output slot {k} out of range"))?;
+                    (n.clone(), take_named(bank, n)?)
+                }
+                Role::Out(n) => {
+                    let d = extra
+                        .remove(n.as_str())
+                        .ok_or_else(|| anyhow!("ref backend did not produce output '{n}'"))?;
+                    (n.clone(), d)
+                }
+                other => bail!("unexpected output role {other:?}"),
+            };
+            anyhow::ensure!(
+                data.len() == tout.numel(),
+                "output '{name}' has {} values, spec shape {:?} wants {}",
+                data.len(),
+                tout.shape,
+                tout.numel()
+            );
+            out.push(HostTensor::new(&name, tout.shape.clone(), data));
+        }
+        Ok(out)
+    }
+
+    fn run_d_step(
+        &self,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        g: &Gathered,
+    ) -> Result<Vec<HostTensor>> {
+        let chain = dense_chain(&g.params)?;
+        let real = *g.data.get("real").ok_or_else(|| anyhow!("d_step needs in:real"))?;
+        let fake = *g.data.get("fake").ok_or_else(|| anyhow!("d_step needs in:fake"))?;
+        let batch = *real.shape.first().context("real batch dim")?;
+        let d_in = chain[0].0.shape[0];
+        anyhow::ensure!(
+            real.numel() == batch * d_in && fake.numel() == real.numel(),
+            "image batch {}x{:?} does not flatten to D input {d_in}",
+            batch,
+            &real.shape[1..]
+        );
+        let nout_last = chain.last().unwrap().0.shape[1];
+        anyhow::ensure!(nout_last == 1, "D chain must end in 1 logit, got {nout_last}");
+
+        let f_r = mlp_forward(&chain, real.data.clone(), batch, Act::LRelu, prog.bf16)?;
+        let f_f = mlp_forward(&chain, fake.data.clone(), batch, Act::LRelu, prog.bf16)?;
+        let rl = f_r.pre.last().unwrap().clone();
+        let fl = f_f.pre.last().unwrap().clone();
+        let (loss, drl, dfl) = d_loss_and_grads(prog.loss, &rl, &fl);
+        let (gr, _) = mlp_backward(&chain, &f_r, drl, Act::LRelu, false);
+        let (gf, _) = mlp_backward(&chain, &f_f, dfl, Act::LRelu, false);
+
+        // Total grad = real-pass grad + fake-pass grad, flattened to the
+        // param order (w0, b0, w1, b1, ...).
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(g.params.len());
+        for ((mut dwr, mut dbr), (dwf, dbf)) in gr.into_iter().zip(gf) {
+            for (a, b) in dwr.iter_mut().zip(&dwf) {
+                *a += b;
+            }
+            for (a, b) in dbr.iter_mut().zip(&dbf) {
+                *a += b;
+            }
+            grads.push(dwr);
+            grads.push(dbr);
+        }
+
+        let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
+        self.emit(
+            spec,
+            new_params,
+            new_slots,
+            vec![("loss", vec![loss]), ("real_logits", rl), ("fake_logits", fl)],
+        )
+    }
+
+    fn run_g_step(
+        &self,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        g: &Gathered,
+    ) -> Result<Vec<HostTensor>> {
+        let g_chain = dense_chain(&g.params)?;
+        let d_chain = dense_chain(&g.dparams).context("g_step dparams")?;
+        let z = *g.data.get("z").ok_or_else(|| anyhow!("g_step needs in:z"))?;
+        let batch = *z.shape.first().context("z batch dim")?;
+
+        let gf = mlp_forward(&g_chain, z.data.clone(), batch, Act::Relu, prog.bf16)?;
+        let images = ops::tanh_vec(gf.pre.last().unwrap());
+        let df = mlp_forward(&d_chain, images.clone(), batch, Act::LRelu, prog.bf16)?;
+        let fl = df.pre.last().unwrap().clone();
+        let (loss, dfl) = g_loss_and_grad(prog.loss, &fl);
+
+        // Back through D (grads discarded — D is a frozen snapshot here),
+        // then through tanh into the G chain.
+        let (_dgrads, dimg) = mlp_backward(&d_chain, &df, dfl, Act::LRelu, true);
+        let dimg = dimg.expect("dx requested");
+        let dpre: Vec<f32> =
+            dimg.iter().zip(&images).map(|(&d, &y)| d * (1.0 - y * y)).collect();
+        let (gg, _) = mlp_backward(&g_chain, &gf, dpre, Act::Relu, false);
+
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(g.params.len());
+        for (dw, db) in gg {
+            grads.push(dw);
+            grads.push(db);
+        }
+        let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
+        self.emit(
+            spec,
+            new_params,
+            new_slots,
+            vec![("loss", vec![loss]), ("fake", images)],
+        )
+    }
+
+    fn run_generate(&self, spec: &ArtifactSpec, g: &Gathered) -> Result<Vec<HostTensor>> {
+        let chain = dense_chain(&g.params)?;
+        let z = *g.data.get("z").ok_or_else(|| anyhow!("generate needs in:z"))?;
+        let batch = *z.shape.first().context("z batch dim")?;
+        let f = mlp_forward(&chain, z.data.clone(), batch, Act::Relu, false)?;
+        let images = ops::tanh_vec(f.pre.last().unwrap());
+        self.emit(spec, Vec::new(), Vec::new(), vec![("images", images)])
+    }
+
+    fn run_fid(&self, spec: &ArtifactSpec, g: &Gathered) -> Result<Vec<HostTensor>> {
+        let images = *g.data.get("images").ok_or_else(|| anyhow!("fid needs in:images"))?;
+        let batch = *images.shape.first().context("images batch dim")?;
+        anyhow::ensure!(batch > 0 && images.numel() % batch == 0, "bad image batch");
+        let d_in = images.numel() / batch;
+        let feat = spec
+            .outputs
+            .first()
+            .and_then(|t| t.shape.get(1))
+            .copied()
+            .unwrap_or(64);
+        let w = self.fid_projection(d_in, feat);
+        let mut f = ops::matmul(&images.data, batch, d_in, &w, feat);
+        for v in f.iter_mut() {
+            *v = v.tanh();
+        }
+        self.emit(spec, Vec::new(), Vec::new(), vec![("features", f)])
+    }
+}
+
+impl Backend for RefCpuBackend {
+    fn platform(&self) -> String {
+        "ref-cpu".to_string()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        self.program(spec).map(|_| ())
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let prog = self.program(spec)?;
+        let t0 = Instant::now();
+        let g = gather(spec, inputs)?;
+        let out = match prog.kind {
+            Kind::DStep => self.run_d_step(&prog, spec, &g),
+            Kind::GStep => self.run_g_step(&prog, spec, &g),
+            Kind::Generate => self.run_generate(spec, &g),
+            Kind::FidFeatures => self.run_fid(spec, &g),
+        }?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_known_case() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let y = ops::matmul(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[5.0, 6.0, 7.0, 8.0], 2);
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transposed_matmuls_agree_with_plain() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (4, 5, 3);
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; m * n];
+        rng.fill_gaussian(&mut a, 0.0, 1.0);
+        rng.fill_gaussian(&mut b, 0.0, 1.0);
+        // aT b via explicit transpose + plain matmul.
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let want = ops::matmul(&at, k, m, &b, n);
+        let got = ops::matmul_tn(&a, m, k, &b, n);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() < 1e-5, "{w} vs {g}");
+        }
+        // a bT via explicit transpose.
+        let mut c = vec![0f32; n * k];
+        rng.fill_gaussian(&mut c, 0.0, 1.0);
+        let mut ct = vec![0f32; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                ct[j * n + i] = c[i * k + j];
+            }
+        }
+        let want = ops::matmul(&a, m, k, &ct, n);
+        let got = ops::matmul_nt(&a, m, k, &c, n);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() < 1e-5, "{w} vs {g}");
+        }
+    }
+
+    #[test]
+    fn bf16_round_properties() {
+        assert_eq!(ops::bf16_round(1.0), 1.0);
+        assert_eq!(ops::bf16_round(0.0), 0.0);
+        assert_eq!(ops::bf16_round(-2.5), -2.5);
+        for &x in &[0.1f32, 3.14159, -123.456, 1e-8, 7e9] {
+            let q = ops::bf16_round(x);
+            assert_eq!(ops::bf16_round(q), q, "idempotent at {x}");
+            assert!((q - x).abs() <= x.abs() * 0.01, "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn softplus_sigmoid_stable() {
+        assert!((softplus(0.0) - 0.693147).abs() < 1e-5);
+        assert!(softplus(100.0).is_finite() && (softplus(100.0) - 100.0).abs() < 1e-3);
+        assert!(softplus(-100.0).is_finite() && softplus(-100.0) < 1e-3);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    fn tensor(name: &str, shape: Vec<usize>, rng: &mut Rng, std: f32) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut v = vec![0f32; n];
+        rng.fill_gaussian(&mut v, 0.0, std);
+        HostTensor::new(name, shape, v)
+    }
+
+    /// Finite-difference check of the dense-chain backward pass: D loss on
+    /// a tiny 3 -> 4 -> 1 chain, every weight/bias grad vs. central diff.
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let w0 = tensor("w0", vec![3, 4], &mut rng, 0.6);
+        let b0 = tensor("b0", vec![4], &mut rng, 0.3);
+        let w1 = tensor("w1", vec![4, 1], &mut rng, 0.6);
+        let b1 = tensor("b1", vec![1], &mut rng, 0.3);
+        let batch = 5;
+        let mut x = vec![0f32; batch * 3];
+        rng.fill_gaussian(&mut x, 0.0, 1.0);
+
+        let loss_of = |params: &[HostTensor]| -> f32 {
+            let refs: Vec<&HostTensor> = params.iter().collect();
+            let chain = dense_chain(&refs).unwrap();
+            let f = mlp_forward(&chain, x.clone(), batch, Act::LRelu, false).unwrap();
+            let logits = f.pre.last().unwrap();
+            logits.iter().map(|&l| softplus(-l)).sum::<f32>() / batch as f32
+        };
+
+        let params = vec![w0, b0, w1, b1];
+        let refs: Vec<&HostTensor> = params.iter().collect();
+        let chain = dense_chain(&refs).unwrap();
+        let f = mlp_forward(&chain, x.clone(), batch, Act::LRelu, false).unwrap();
+        let logits = f.pre.last().unwrap().clone();
+        let dout: Vec<f32> =
+            logits.iter().map(|&l| -sigmoid(-l) / batch as f32).collect();
+        let (grads, _) = mlp_backward(&chain, &f, dout, Act::LRelu, false);
+
+        let eps = 3e-3f32;
+        for (li, layer_grads) in grads.iter().enumerate() {
+            let (dw, db) = (&layer_grads.0, &layer_grads.1);
+            for (which, g) in [(0usize, dw), (1usize, db)] {
+                let pi = 2 * li + which;
+                for idx in 0..g.len() {
+                    let mut plus = params.clone();
+                    plus[pi].data[idx] += eps;
+                    let mut minus = params.clone();
+                    minus[pi].data[idx] -= eps;
+                    let fd = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
+                    let an = g[idx];
+                    assert!(
+                        (fd - an).abs() < 5e-2 * (1.0 + fd.abs().max(an.abs())),
+                        "param {pi} idx {idx}: fd {fd} vs analytic {an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adam_single_step_matches_hand_computation() {
+        let hp = HParams {
+            b1: 0.5,
+            b2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            la_k: 5.0,
+            la_alpha: 0.5,
+            lars_trust: 1e-3,
+            lars_momentum: 0.9,
+        };
+        let mut p = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        {
+            let mut slots: Vec<&mut Vec<f32>> = vec![&mut m, &mut v];
+            apply_opt(Opt::Adam, &hp, 1.0, 0.1, &mut p, &[2.0], &mut slots);
+        }
+        // m=1.0, v=0.004; mhat=1.0/0.5=2... mc=0.5 -> m/mc=2; vc=0.001 ->
+        // v/vc=4 -> sqrt=2; p -= 0.1 * 2/(2+eps) ~= 0.1.
+        assert!((p[0] - 0.9).abs() < 1e-4, "{}", p[0]);
+        assert!((m[0] - 1.0).abs() < 1e-6);
+        assert!((v[0] - 0.004).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lookahead_syncs_on_k_boundary() {
+        let hp = HParams {
+            b1: 0.0,
+            b2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            la_k: 5.0,
+            la_alpha: 0.5,
+            lars_trust: 1e-3,
+            lars_momentum: 0.9,
+        };
+        let mut p = vec![1.0f32];
+        let (mut m, mut v, mut slow) = (vec![0.0f32], vec![0.0f32], vec![1.0f32]);
+        // Steps 1..4: fast-only; slow untouched.
+        for step in 1..=4 {
+            let mut slots: Vec<&mut Vec<f32>> = vec![&mut m, &mut v, &mut slow];
+            apply_opt(Opt::Lookahead, &hp, step as f32, 0.1, &mut p, &[1.0], &mut slots);
+            assert_eq!(slow[0], 1.0, "slow moved early at step {step}");
+        }
+        let fast_before = p[0];
+        {
+            let mut slots: Vec<&mut Vec<f32>> = vec![&mut m, &mut v, &mut slow];
+            apply_opt(Opt::Lookahead, &hp, 5.0, 0.1, &mut p, &[1.0], &mut slots);
+        }
+        // At the sync step, p == slow == old_slow + 0.5*(fast - old_slow).
+        assert_eq!(p[0], slow[0]);
+        assert!(p[0] < 1.0 && p[0] > fast_before - 0.2);
+    }
+
+    #[test]
+    fn lars_trust_ratio_scales_update() {
+        let hp = HParams {
+            b1: 0.5,
+            b2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            la_k: 5.0,
+            la_alpha: 0.5,
+            lars_trust: 1e-3,
+            lars_momentum: 0.9,
+        };
+        let mut p = vec![3.0f32, 4.0]; // ||p|| = 5
+        let mut mo = vec![0.0f32, 0.0];
+        {
+            let mut slots: Vec<&mut Vec<f32>> = vec![&mut mo];
+            apply_opt(Opt::Lars, &hp, 1.0, 1.0, &mut p, &[0.6, 0.8], &mut slots);
+        }
+        // trust = 1e-3 * 5 / 1 = 5e-3; update = lr*trust*g.
+        assert!((p[0] - (3.0 - 5e-3 * 0.6)).abs() < 1e-6, "{}", p[0]);
+        assert!((p[1] - (4.0 - 5e-3 * 0.8)).abs() < 1e-6, "{}", p[1]);
+    }
+
+    #[test]
+    fn d_loss_grads_match_finite_difference() {
+        for loss in [Loss::Bce, Loss::Hinge] {
+            let rl = vec![0.3f32, -0.7, 1.4];
+            let fl = vec![-0.2f32, 0.9, -1.6];
+            let (_, drl, dfl) = d_loss_and_grads(loss, &rl, &fl);
+            let eps = 1e-3f32;
+            for i in 0..rl.len() {
+                let mut rp = rl.clone();
+                rp[i] += eps;
+                let mut rm = rl.clone();
+                rm[i] -= eps;
+                let fd = (d_loss_and_grads(loss, &rp, &fl).0
+                    - d_loss_and_grads(loss, &rm, &fl).0)
+                    / (2.0 * eps);
+                assert!((fd - drl[i]).abs() < 2e-3, "{loss:?} drl[{i}]: {fd} vs {}", drl[i]);
+                let mut fp = fl.clone();
+                fp[i] += eps;
+                let mut fm = fl.clone();
+                fm[i] -= eps;
+                let fd = (d_loss_and_grads(loss, &rl, &fp).0
+                    - d_loss_and_grads(loss, &rl, &fm).0)
+                    / (2.0 * eps);
+                assert!((fd - dfl[i]).abs() < 2e-3, "{loss:?} dfl[{i}]: {fd} vs {}", dfl[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn descriptor_parses() {
+        let p = RefProgram::parse(
+            r#"{"format":"paragan-ref","version":1,"kind":"d_step","loss":"hinge",
+                "optimizer":"lookahead","precision":"bf16",
+                "hparams":{"b1":0.0,"b2":0.999,"eps":1e-6}}"#,
+        )
+        .unwrap();
+        assert_eq!(p.kind, Kind::DStep);
+        assert_eq!(p.loss, Loss::Hinge);
+        assert_eq!(p.opt, Some(Opt::Lookahead));
+        assert!(p.bf16);
+        assert_eq!(p.hp.b1, 0.0);
+        assert!((p.hp.eps - 1e-6).abs() < 1e-12);
+        assert!(RefProgram::parse(r#"{"kind":"d_step"}"#).is_err());
+    }
+}

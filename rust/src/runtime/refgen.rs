@@ -1,0 +1,362 @@
+//! Reference artifact exporter — the Rust mirror of `python/compile/aot.py`
+//! for the `RefCpuBackend`.
+//!
+//! Writes a `manifest.json` (same schema `runtime::artifact` parses) plus a
+//! `.ref.json` descriptor per artifact, describing MLP GAN backbones whose
+//! step programs the reference backend can execute natively: a dense G
+//! (relu hidden, tanh out) against a dense D (lrelu hidden, 1 logit).  The
+//! artifact set mirrors the real exporter's: `d_step_<opt>_<prec>` /
+//! `g_step_<opt>_<prec>` per exported optimizer, `generate_fp32`, and
+//! `fid_features` — so every trainer, the evaluator, and the policy
+//! validation run unchanged against either artifact family.
+//!
+//! Two backbones are exported:
+//!
+//! * `refmlp`   — BCE loss, the full optimizer zoo + bf16 variants (the
+//!   `dcgan32` stand-in for Fig. 6-style sweeps);
+//! * `refhinge` — hinge loss, adam/adabelief (the `sngan32` stand-in).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, write_json, Json};
+
+/// One exportable MLP GAN backbone.
+#[derive(Debug, Clone)]
+pub struct RefModelSpec {
+    pub name: &'static str,
+    pub loss: &'static str,
+    pub z_dim: usize,
+    pub img_shape: [usize; 3],
+    pub g_hidden: usize,
+    pub d_hidden: usize,
+    pub opts: Vec<&'static str>,
+    pub bf16_opts: Vec<&'static str>,
+}
+
+impl RefModelSpec {
+    fn img_numel(&self) -> usize {
+        self.img_shape.iter().product()
+    }
+
+    /// GAN-customary beta1: 0.5 for BCE, 0.0 for hinge (mirrors aot.py).
+    fn b1(&self) -> f64 {
+        if self.loss == "bce" {
+            0.5
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The default export set (see module docs).
+pub fn default_models() -> Vec<RefModelSpec> {
+    vec![
+        RefModelSpec {
+            name: "refmlp",
+            loss: "bce",
+            z_dim: 32,
+            img_shape: [3, 8, 8],
+            g_hidden: 64,
+            d_hidden: 64,
+            opts: vec!["adam", "adabelief", "radam", "lookahead", "lars"],
+            bf16_opts: vec!["adam", "adabelief"],
+        },
+        RefModelSpec {
+            name: "refhinge",
+            loss: "hinge",
+            z_dim: 32,
+            img_shape: [3, 8, 8],
+            g_hidden: 64,
+            d_hidden: 64,
+            opts: vec!["adam", "adabelief"],
+            bf16_opts: vec![],
+        },
+    ]
+}
+
+pub const REF_BATCH: usize = 8;
+pub const REF_FID_FEAT_DIM: usize = 64;
+
+fn n_slots(opt: &str) -> usize {
+    // Derived from the executor so exporter and backend cannot diverge.
+    super::ref_cpu::optimizer_n_slots(opt).expect("optimizer known to the ref backend")
+}
+
+fn shape_json(shape: &[usize]) -> Json {
+    arr(shape.iter().map(|&d| num(d as f64)).collect())
+}
+
+fn tensor_entry(role: &str, shape: &[usize]) -> Json {
+    obj(vec![("role", s(role)), ("shape", shape_json(shape)), ("dtype", s("f32"))])
+}
+
+fn param_entry(name: &str, shape: &[usize], init: &str) -> Json {
+    obj(vec![("name", s(name)), ("shape", shape_json(shape)), ("init", s(init))])
+}
+
+/// (name, shape, init) param specs for the G network.
+fn g_params(m: &RefModelSpec) -> Vec<(String, Vec<usize>, &'static str)> {
+    vec![
+        ("g.fc1.w".into(), vec![m.z_dim, m.g_hidden], "normal:0.05"),
+        ("g.fc1.b".into(), vec![m.g_hidden], "zeros"),
+        ("g.fc2.w".into(), vec![m.g_hidden, m.img_numel()], "normal:0.05"),
+        ("g.fc2.b".into(), vec![m.img_numel()], "zeros"),
+    ]
+}
+
+fn d_params(m: &RefModelSpec) -> Vec<(String, Vec<usize>, &'static str)> {
+    vec![
+        ("d.fc1.w".into(), vec![m.img_numel(), m.d_hidden], "normal:0.05"),
+        ("d.fc1.b".into(), vec![m.d_hidden], "zeros"),
+        ("d.fc2.w".into(), vec![m.d_hidden, 1], "normal:0.05"),
+        ("d.fc2.b".into(), vec![1], "zeros"),
+    ]
+}
+
+fn spec_entries(prefix: &str, params: &[(String, Vec<usize>, &'static str)]) -> Vec<Json> {
+    params
+        .iter()
+        .map(|(name, shape, _)| tensor_entry(&format!("{prefix}:{name}"), shape))
+        .collect()
+}
+
+fn slot_entries(params: &[(String, Vec<usize>, &'static str)], slots: usize) -> Vec<Json> {
+    let mut out = Vec::new();
+    for k in 0..slots {
+        out.extend(spec_entries(&format!("slot{k}"), params));
+    }
+    out
+}
+
+/// Write one `.ref.json` descriptor; returns the artifact manifest record.
+fn write_descriptor(
+    dir: &Path,
+    file: &str,
+    kind: &str,
+    m: &RefModelSpec,
+    opt: Option<&str>,
+    prec: &str,
+    inputs: Vec<Json>,
+    outputs: Vec<Json>,
+) -> Result<Json> {
+    // bf16 runs bump adam eps (paper §4.3 / precision.py adam_eps).
+    let eps = if prec == "bf16" { 1e-6 } else { 1e-8 };
+    let mut fields = vec![
+        ("format", s("paragan-ref")),
+        ("version", num(1.0)),
+        ("kind", s(kind)),
+        ("model", s(m.name)),
+        ("loss", s(m.loss)),
+        ("precision", s(prec)),
+        (
+            "hparams",
+            obj(vec![
+                ("b1", num(m.b1())),
+                ("b2", num(0.999)),
+                ("eps", num(eps)),
+                ("la_k", num(5.0)),
+                ("la_alpha", num(0.5)),
+                ("lars_trust", num(1e-3)),
+                ("lars_momentum", num(0.9)),
+            ]),
+        ),
+    ];
+    if let Some(o) = opt {
+        fields.push(("optimizer", s(o)));
+    }
+    let mut text = String::new();
+    write_json(&obj(fields), &mut text);
+    let path = dir.join(file);
+    std::fs::write(&path, &text).with_context(|| format!("writing {path:?}"))?;
+    Ok(obj(vec![
+        ("file", s(file)),
+        ("inputs", Json::Arr(inputs)),
+        ("outputs", Json::Arr(outputs)),
+    ]))
+}
+
+fn export_model(dir: &Path, m: &RefModelSpec, batch: usize) -> Result<Json> {
+    let gp = g_params(m);
+    let dp = d_params(m);
+    let img = {
+        let mut v = vec![batch];
+        v.extend_from_slice(&m.img_shape);
+        v
+    };
+    let z_shape = vec![batch, m.z_dim];
+
+    let mut artifacts: Vec<(String, Json)> = Vec::new();
+    let mut optimizers: Vec<(String, Json)> = Vec::new();
+
+    for &opt in &m.opts {
+        let ns = n_slots(opt);
+        let mut slot_init: Vec<Json> = vec![s("zeros"); ns];
+        if opt == "lookahead" {
+            slot_init[2] = s("copy_params");
+        }
+        optimizers.push((
+            opt.to_string(),
+            obj(vec![("n_slots", num(ns as f64)), ("slot_init", Json::Arr(slot_init))]),
+        ));
+    }
+
+    for prec in ["fp32", "bf16"] {
+        let opts: &[&str] = if prec == "fp32" { &m.opts } else { &m.bf16_opts };
+        for &opt in opts {
+            let ns = n_slots(opt);
+
+            // ---- d_step ----
+            let mut inputs = vec![tensor_entry("step", &[]), tensor_entry("lr", &[])];
+            inputs.extend(spec_entries("param", &dp));
+            inputs.extend(slot_entries(&dp, ns));
+            inputs.push(tensor_entry("in:real", &img));
+            inputs.push(tensor_entry("in:fake", &img));
+            let mut outputs = spec_entries("param", &dp);
+            outputs.extend(slot_entries(&dp, ns));
+            outputs.push(tensor_entry("out:loss", &[]));
+            outputs.push(tensor_entry("out:real_logits", &[batch]));
+            outputs.push(tensor_entry("out:fake_logits", &[batch]));
+            let key = format!("d_step_{opt}_{prec}");
+            let file = format!("{}_{key}.ref.json", m.name);
+            artifacts.push((
+                key,
+                write_descriptor(dir, &file, "d_step", m, Some(opt), prec, inputs, outputs)?,
+            ));
+
+            // ---- g_step ----
+            let mut inputs = vec![tensor_entry("step", &[]), tensor_entry("lr", &[])];
+            inputs.extend(spec_entries("param", &gp));
+            inputs.extend(slot_entries(&gp, ns));
+            inputs.extend(spec_entries("dparam", &dp));
+            inputs.push(tensor_entry("in:z", &z_shape));
+            let mut outputs = spec_entries("param", &gp);
+            outputs.extend(slot_entries(&gp, ns));
+            outputs.push(tensor_entry("out:loss", &[]));
+            outputs.push(tensor_entry("out:fake", &img));
+            let key = format!("g_step_{opt}_{prec}");
+            let file = format!("{}_{key}.ref.json", m.name);
+            artifacts.push((
+                key,
+                write_descriptor(dir, &file, "g_step", m, Some(opt), prec, inputs, outputs)?,
+            ));
+        }
+    }
+
+    // ---- generate_fp32 ----
+    let mut inputs = spec_entries("param", &gp);
+    inputs.push(tensor_entry("in:z", &z_shape));
+    let outputs = vec![tensor_entry("out:images", &img)];
+    let file = format!("{}_generate_fp32.ref.json", m.name);
+    artifacts.push((
+        "generate_fp32".to_string(),
+        write_descriptor(dir, &file, "generate", m, None, "fp32", inputs, outputs)?,
+    ));
+
+    // ---- fid_features ----
+    let inputs = vec![tensor_entry("in:images", &img)];
+    let outputs = vec![tensor_entry("out:features", &[batch, REF_FID_FEAT_DIM])];
+    let file = format!("{}_fid_features.ref.json", m.name);
+    artifacts.push((
+        "fid_features".to_string(),
+        write_descriptor(dir, &file, "fid_features", m, None, "fp32", inputs, outputs)?,
+    ));
+
+    Ok(obj(vec![
+        ("z_dim", num(m.z_dim as f64)),
+        ("img_shape", shape_json(&m.img_shape)),
+        ("n_classes", num(0.0)),
+        ("loss", s(m.loss)),
+        ("batch", num(batch as f64)),
+        ("fid_feat_dim", num(REF_FID_FEAT_DIM as f64)),
+        (
+            "params_g",
+            Json::Arr(gp.iter().map(|(n, sh, i)| param_entry(n, sh, i)).collect()),
+        ),
+        (
+            "params_d",
+            Json::Arr(dp.iter().map(|(n, sh, i)| param_entry(n, sh, i)).collect()),
+        ),
+        (
+            "optimizers",
+            Json::Obj(optimizers.into_iter().collect()),
+        ),
+        (
+            "artifacts",
+            Json::Obj(artifacts.into_iter().collect()),
+        ),
+    ]))
+}
+
+/// Export `models` into `dir` (manifest.json + per-artifact descriptors).
+pub fn write_ref_artifacts_for(
+    dir: impl AsRef<Path>,
+    models: &[RefModelSpec],
+    batch: usize,
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let mut model_objs: Vec<(String, Json)> = Vec::new();
+    for m in models {
+        model_objs.push((m.name.to_string(), export_model(dir, m, batch)?));
+    }
+    let manifest = obj(vec![
+        ("version", num(1.0)),
+        ("batch", num(batch as f64)),
+        ("models", Json::Obj(model_objs.into_iter().collect())),
+    ]);
+    let mut text = String::new();
+    write_json(&manifest, &mut text);
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, &text).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+/// Export the default backbone set with the default batch size.
+pub fn write_ref_artifacts(dir: impl AsRef<Path>) -> Result<()> {
+    write_ref_artifacts_for(dir, &default_models(), REF_BATCH)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, Role};
+
+    #[test]
+    fn exported_manifest_round_trips_through_the_parser() {
+        let dir = std::env::temp_dir().join(format!("paragan-refgen-test-{}", std::process::id()));
+        write_ref_artifacts(&dir).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, REF_BATCH);
+        let model = m.model("refmlp").unwrap();
+        assert_eq!(model.z_dim, 32);
+        assert_eq!(model.img_shape, vec![3, 8, 8]);
+        assert_eq!(model.loss, "bce");
+        assert_eq!(model.params_g.len(), 4);
+        assert!(model.n_params_g() > 10_000);
+        for opt in ["adam", "adabelief", "radam", "lookahead", "lars"] {
+            assert!(model.artifacts.contains_key(&format!("d_step_{opt}_fp32")), "{opt}");
+            assert!(model.artifacts.contains_key(&format!("g_step_{opt}_fp32")), "{opt}");
+            assert!(model.optimizers.contains_key(opt), "{opt}");
+        }
+        assert!(model.artifacts.contains_key("d_step_adam_bf16"));
+        assert!(model.artifacts.contains_key("generate_fp32"));
+        assert!(model.artifacts.contains_key("fid_features"));
+        assert_eq!(model.optimizers["lookahead"].n_slots, 3);
+
+        // Input ordering matches the AOT calling convention.
+        let d = model.artifact("d_step_adam_fp32").unwrap();
+        assert_eq!(d.inputs[0].role, Role::Step);
+        assert_eq!(d.inputs[1].role, Role::Lr);
+        assert_eq!(d.inputs[2].role, Role::Param("d.fc1.w".into()));
+        assert_eq!(d.inputs.len(), 2 + 4 + 2 * 4 + 2);
+        assert_eq!(d.outputs.len(), 4 + 2 * 4 + 3);
+
+        let hinge = m.model("refhinge").unwrap();
+        assert_eq!(hinge.loss, "hinge");
+        assert!(hinge.artifacts.contains_key("g_step_adabelief_fp32"));
+        assert!(!hinge.artifacts.contains_key("d_step_adam_bf16"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

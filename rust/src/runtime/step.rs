@@ -1,8 +1,9 @@
-//! Generic step plumbing: walk an artifact's role list to assemble PJRT
+//! Generic step plumbing: walk an artifact's role list to assemble backend
 //! inputs from host stores, execute, and scatter outputs back.
 //!
 //! This is the only code that needs to understand the AOT calling
-//! convention; trainers above it deal in `ParamStore`s and named tensors.
+//! convention; trainers above it deal in `ParamStore`s and named tensors,
+//! and backends below it deal in flat `HostTensor` lists.
 
 use std::collections::BTreeMap;
 
@@ -31,25 +32,23 @@ pub fn run_step(
     dparams: Option<&ParamStore>,
     data: &BTreeMap<String, HostTensor>,
 ) -> Result<StepOutputs> {
-    let exe = rt.load_artifact(spec)?;
-
-    let mut inputs: Vec<xla::Literal> = Vec::with_capacity(spec.inputs.len());
+    // Inputs are staged by reference — no tensor copies on the step hot
+    // path; only the two scalars are materialized here.
+    let step_t = HostTensor::new("step", vec![], vec![step]);
+    let lr_t = HostTensor::new("lr", vec![], vec![lr]);
+    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(spec.inputs.len());
     for tin in &spec.inputs {
-        let lit = match &tin.role {
-            Role::Step => rt.scalar(step),
-            Role::Lr => rt.scalar(lr),
-            Role::Param(name) => rt.literal(params.get(name)?)?,
-            Role::Slot(k, name) => rt.literal(
-                slots
-                    .get(*k)
-                    .ok_or_else(|| anyhow!("artifact wants slot {k}, have {}", slots.len()))?
-                    .get(name)?,
-            )?,
-            Role::DParam(name) => rt.literal(
-                dparams
-                    .ok_or_else(|| anyhow!("artifact wants dparams but none supplied"))?
-                    .get(name)?,
-            )?,
+        let t: &HostTensor = match &tin.role {
+            Role::Step => &step_t,
+            Role::Lr => &lr_t,
+            Role::Param(name) => params.get(name)?,
+            Role::Slot(k, name) => slots
+                .get(*k)
+                .ok_or_else(|| anyhow!("artifact wants slot {k}, have {}", slots.len()))?
+                .get(name)?,
+            Role::DParam(name) => dparams
+                .ok_or_else(|| anyhow!("artifact wants dparams but none supplied"))?
+                .get(name)?,
             Role::In(name) => {
                 let t = data
                     .get(name)
@@ -61,14 +60,15 @@ pub fn run_step(
                     tin.numel(),
                     tin.shape
                 );
-                rt.literal(t)?
+                t
             }
             Role::Out(_) => anyhow::bail!("out role in input list"),
         };
-        inputs.push(lit);
+        inputs.push(t);
     }
 
-    let outs = rt.execute(&exe, &inputs)?;
+    let outs = rt.execute_artifact(spec, &inputs)?;
+    drop(inputs);
     anyhow::ensure!(
         outs.len() == spec.outputs.len(),
         "artifact '{}' returned {} outputs, manifest says {}",
@@ -78,19 +78,19 @@ pub fn run_step(
     );
 
     let mut extra = StepOutputs::new();
-    for (tout, lit) in spec.outputs.iter().zip(outs.iter()) {
+    for (tout, t) in spec.outputs.iter().zip(outs.into_iter()) {
         match &tout.role {
             Role::Param(name) => {
-                params.set_data(name, rt.to_host(lit)?).context("write back param")?
+                params.set_data(name, t.data).context("write back param")?
             }
             Role::Slot(k, name) => slots
                 .get_mut(*k)
                 .ok_or_else(|| anyhow!("output slot {k} out of range"))?
-                .set_data(name, rt.to_host(lit)?)?,
+                .set_data(name, t.data)?,
             Role::Out(name) => {
                 extra.insert(
                     name.clone(),
-                    HostTensor::new(name, tout.shape.clone(), rt.to_host(lit)?),
+                    HostTensor::new(name, tout.shape.clone(), t.data),
                 );
             }
             other => anyhow::bail!("unexpected output role {other:?}"),

@@ -16,6 +16,54 @@ use crate::util::rng::Rng;
 
 pub const DEFAULT_CASES: usize = 256;
 
+/// Reference artifacts for tests/examples: a loadable `manifest.json` +
+/// `.ref.json` descriptors with no Python, no `make artifacts`, and no
+/// native XLA — see `runtime::refgen`.
+///
+/// Published under ONE stable temp path (content is deterministic, so any
+/// complete copy is as good as any other).  Writers stage into a
+/// pid-suffixed dir and atomically rename it into place; losing the
+/// publish race just means adopting the winner's copy, so parallel
+/// `cargo test` binaries neither race nor accumulate per-pid directories.
+pub fn ref_artifact_dir() -> std::path::PathBuf {
+    use std::sync::OnceLock;
+    static DIR: OnceLock<std::path::PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let base = std::env::temp_dir().join("paragan-ref-artifacts-v1");
+        if base.join("manifest.json").exists() {
+            return base;
+        }
+        let staging = std::env::temp_dir()
+            .join(format!("paragan-ref-artifacts-v1.{}", std::process::id()));
+        crate::runtime::refgen::write_ref_artifacts(&staging)
+            .expect("writing reference artifacts");
+        match std::fs::rename(&staging, &base) {
+            Ok(()) => base,
+            // Rename fails when another process already published `base`
+            // (or a stale dir occupies it): adopt theirs if complete,
+            // otherwise keep serving our staging copy.
+            Err(_) if base.join("manifest.json").exists() => {
+                let _ = std::fs::remove_dir_all(&staging);
+                base
+            }
+            Err(_) => staging,
+        }
+    })
+    .clone()
+}
+
+/// Pick real AOT artifacts when this build can execute them (pjrt feature
+/// compiled in AND `make artifacts` has run), else the generated reference
+/// set — the shared fallback branch of the repro tests and examples.
+pub fn artifacts_for(real_model: &str, ref_model: &str) -> (std::path::PathBuf, String) {
+    let real = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if cfg!(feature = "pjrt") && real.join("manifest.json").exists() {
+        (real, real_model.to_string())
+    } else {
+        (ref_artifact_dir(), ref_model.to_string())
+    }
+}
+
 /// A generator produces a value from entropy and knows how to shrink it.
 pub trait Gen {
     type Value: Clone + std::fmt::Debug;
