@@ -30,6 +30,29 @@ def ref_conv2d(x, w, b=None, stride: int = 1, padding: int = 0):
     return out
 
 
+def ref_batchnorm(x, gamma, beta, mean=None, var=None, eps: float = 1e-5):
+    """Reference NCHW BatchNorm.
+
+    Train mode (``mean``/``var`` None): per-channel batch statistics over
+    the (N, H, W) axes with *biased* variance.  Inference mode: normalize
+    with the given fixed statistics.  Matches the Rust
+    ``ref_conv::bn_stats``/``bn_apply`` pair.
+    """
+    x = x.astype(jnp.float32)
+    if mean is None:
+        mean = x.mean(axis=(0, 2, 3))
+        var = x.var(axis=(0, 2, 3))
+    mean = jnp.asarray(mean, jnp.float32).reshape(1, -1, 1, 1)
+    var = jnp.asarray(var, jnp.float32).reshape(1, -1, 1, 1)
+    xhat = (x - mean) / jnp.sqrt(var + eps)
+    return xhat * gamma.reshape(1, -1, 1, 1) + beta.reshape(1, -1, 1, 1)
+
+
+def ref_upsample_nearest(x, factor: int = 2):
+    """Reference NCHW nearest-neighbour upsampling."""
+    return jnp.repeat(jnp.repeat(x, factor, axis=2), factor, axis=3)
+
+
 def ref_conv2d_transpose(x, w, b=None, stride: int = 2, padding: int = 1):
     """Reference fractionally-strided (transposed) conv.
 

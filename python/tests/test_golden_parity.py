@@ -15,13 +15,29 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
-from tools.gen_golden import MATMUL_CASES, Lcg, golden  # noqa: E402
+from tools.gen_golden import (  # noqa: E402
+    BATCHNORM_CASES,
+    CONV2D_CASES,
+    CONVT2D_CASES,
+    MATMUL_CASES,
+    UPSAMPLE_CASES,
+    Lcg,
+    golden,
+)
 
 GOLDEN_PATH = os.path.normpath(
     os.path.join(
         os.path.dirname(__file__), "..", "..", "rust", "tests", "golden", "ref_kernels.json"
     )
 )
+
+SECTIONS = {
+    "matmul": MATMUL_CASES,
+    "conv2d": CONV2D_CASES,
+    "conv2d_transpose": CONVT2D_CASES,
+    "batchnorm": BATCHNORM_CASES,
+    "upsample": UPSAMPLE_CASES,
+}
 
 
 def test_lcg_reference_values():
@@ -38,17 +54,17 @@ def test_checked_in_golden_matches_ref_kernels():
         stored = json.load(f)
     assert stored["format"] == "paragan-golden"
     fresh = golden()
-    assert [c["seed"] for c in stored["matmul"]] == [c[0] for c in MATMUL_CASES]
-    for s_case, f_case in zip(stored["matmul"], fresh["matmul"]):
-        assert (s_case["m"], s_case["k"], s_case["n"]) == (
-            f_case["m"],
-            f_case["k"],
-            f_case["n"],
-        )
-        np.testing.assert_allclose(
-            np.array(s_case["y"], dtype=np.float32),
-            np.array(f_case["y"], dtype=np.float32),
-            rtol=1e-5,
-            atol=1e-6,
-            err_msg=f"seed {s_case['seed']}",
-        )
+    for section, case_list in SECTIONS.items():
+        assert section in stored, f"golden file missing section '{section}'"
+        assert [c["seed"] for c in stored[section]] == [c[0] for c in case_list], section
+        for s_case, f_case in zip(stored[section], fresh[section]):
+            assert {k: v for k, v in s_case.items() if k != "y"} == {
+                k: v for k, v in f_case.items() if k != "y"
+            }, f"{section} seed {s_case['seed']} config drifted"
+            np.testing.assert_allclose(
+                np.array(s_case["y"], dtype=np.float32),
+                np.array(f_case["y"], dtype=np.float32),
+                rtol=1e-5,
+                atol=1e-6,
+                err_msg=f"{section} seed {s_case['seed']}",
+            )

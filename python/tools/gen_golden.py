@@ -42,26 +42,120 @@ class Lcg:
 # (seed, M, K, N) matmul cases — includes skinny/fat and vector shapes.
 MATMUL_CASES = [(1, 5, 7, 3), (2, 8, 16, 4), (3, 1, 32, 1), (4, 16, 8, 8)]
 
+# (seed, B, Cin, IH, IW, Cout, K, stride, pad) — dcgan-ish 4x4/s2 shapes,
+# a 3x3/s1 'same' conv, and a rectangular input.  Draw order: x, w, b.
+CONV2D_CASES = [
+    (11, 2, 3, 8, 8, 4, 4, 2, 1),
+    (12, 1, 2, 5, 7, 3, 3, 1, 1),
+    (13, 2, 4, 4, 4, 2, 3, 2, 1),
+]
+
+# (seed, B, Cin, IH, IW, Cout, K, stride, pad) transposed-conv cases; the
+# weight is drawn as (Cin, Cout, K, K) — O = input channels (ref.py
+# convention).  Draw order: x, w, b.
+CONVT2D_CASES = [
+    (21, 2, 4, 4, 4, 3, 4, 2, 1),
+    (22, 1, 2, 3, 3, 2, 4, 2, 1),
+    (23, 2, 3, 2, 2, 4, 3, 1, 1),
+]
+
+# (seed, B, C, H, W, mode) batchnorm cases; mode "train" uses batch stats,
+# "inference" draws fixed stats too (var = |draw| + 0.5, mirrored in Rust).
+# Draw order: x, gamma, beta[, mean, var_raw].
+BATCHNORM_CASES = [
+    (31, 4, 3, 4, 4, "train"),
+    (32, 2, 2, 3, 5, "train"),
+    (33, 2, 3, 4, 4, "inference"),
+]
+
+# (seed, B, C, H, W, factor) nearest-upsample cases.  Draw order: x.
+UPSAMPLE_CASES = [(41, 2, 3, 3, 3, 2), (42, 1, 2, 2, 4, 3)]
+
 
 def golden():
-    from compile.kernels.ref import ref_matmul
+    from compile.kernels.ref import (
+        ref_batchnorm,
+        ref_conv2d,
+        ref_conv2d_transpose,
+        ref_matmul,
+        ref_upsample_nearest,
+    )
 
-    cases = []
+    def emit(case, y):
+        case["y"] = [float(v) for v in np.asarray(y, dtype=np.float32).reshape(-1)]
+        return case
+
+    matmul = []
     for seed, m, k, n in MATMUL_CASES:
         lcg = Lcg(seed)
         x = lcg.fill(m * k).reshape(m, k)
         w = lcg.fill(k * n).reshape(k, n)
-        y = np.asarray(ref_matmul(x, w), dtype=np.float32)
-        cases.append(
-            {
-                "seed": seed,
-                "m": m,
-                "k": k,
-                "n": n,
-                "y": [float(v) for v in y.reshape(-1)],
-            }
+        matmul.append(emit({"seed": seed, "m": m, "k": k, "n": n}, ref_matmul(x, w)))
+
+    conv2d = []
+    for seed, b, cin, ih, iw, cout, k, stride, pad in CONV2D_CASES:
+        lcg = Lcg(seed)
+        x = lcg.fill(b * cin * ih * iw).reshape(b, cin, ih, iw)
+        w = lcg.fill(cout * cin * k * k).reshape(cout, cin, k, k)
+        bias = lcg.fill(cout)
+        y = ref_conv2d(x, w, bias, stride=stride, padding=pad)
+        conv2d.append(
+            emit(
+                {"seed": seed, "b": b, "cin": cin, "ih": ih, "iw": iw,
+                 "cout": cout, "k": k, "stride": stride, "pad": pad},
+                y,
+            )
         )
-    return {"format": "paragan-golden", "version": 1, "matmul": cases}
+
+    convt2d = []
+    for seed, b, cin, ih, iw, cout, k, stride, pad in CONVT2D_CASES:
+        lcg = Lcg(seed)
+        x = lcg.fill(b * cin * ih * iw).reshape(b, cin, ih, iw)
+        w = lcg.fill(cin * cout * k * k).reshape(cin, cout, k, k)
+        bias = lcg.fill(cout)
+        y = ref_conv2d_transpose(x, w, bias, stride=stride, padding=pad)
+        convt2d.append(
+            emit(
+                {"seed": seed, "b": b, "cin": cin, "ih": ih, "iw": iw,
+                 "cout": cout, "k": k, "stride": stride, "pad": pad},
+                y,
+            )
+        )
+
+    batchnorm = []
+    for seed, b, c, h, w, mode in BATCHNORM_CASES:
+        lcg = Lcg(seed)
+        x = lcg.fill(b * c * h * w).reshape(b, c, h, w)
+        gamma = lcg.fill(c)
+        beta = lcg.fill(c)
+        if mode == "inference":
+            mean = lcg.fill(c)
+            var = np.abs(lcg.fill(c)) + np.float32(0.5)
+            y = ref_batchnorm(x, gamma, beta, mean=mean, var=var)
+        else:
+            y = ref_batchnorm(x, gamma, beta)
+        batchnorm.append(
+            emit({"seed": seed, "b": b, "c": c, "h": h, "w": w, "mode": mode}, y)
+        )
+
+    upsample = []
+    for seed, b, c, h, w, factor in UPSAMPLE_CASES:
+        lcg = Lcg(seed)
+        x = lcg.fill(b * c * h * w).reshape(b, c, h, w)
+        y = ref_upsample_nearest(x, factor)
+        upsample.append(
+            emit({"seed": seed, "b": b, "c": c, "h": h, "w": w, "factor": factor}, y)
+        )
+
+    return {
+        "format": "paragan-golden",
+        "version": 2,
+        "matmul": matmul,
+        "conv2d": conv2d,
+        "conv2d_transpose": convt2d,
+        "batchnorm": batchnorm,
+        "upsample": upsample,
+    }
 
 
 def main():

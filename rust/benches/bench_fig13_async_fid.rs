@@ -6,7 +6,23 @@ use paragan::repro::{fig13, Fig13Config};
 fn main() {
     let steps = std::env::var("PARAGAN_FIG13_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
     let mut rep = Reporter::new("Fig. 13 — async vs sync update scheme (real training)");
-    let cfg = Fig13Config { steps, eval_every: (steps / 4).max(1), ..Default::default() };
+    // Resolve sngan32 in the executable artifact set (ref conv artifacts on
+    // a clean checkout) — unknown models are a hard error, not a skip.
+    let (dir, model) = match paragan::testkit::artifacts_for("sngan32") {
+        Ok(found) => found,
+        Err(e) => {
+            rep.note(format!("SKIPPED: {e}"));
+            rep.finish();
+            return;
+        }
+    };
+    let cfg = Fig13Config {
+        steps,
+        eval_every: (steps / 4).max(1),
+        artifact_dir: dir,
+        model,
+        ..Default::default()
+    };
     match fig13(&cfg) {
         Ok((table, results)) => {
             rep.table(table);

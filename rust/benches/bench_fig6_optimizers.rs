@@ -7,7 +7,17 @@ use paragan::repro::{fig6, Fig6Config};
 fn main() {
     let steps = std::env::var("PARAGAN_FIG6_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
     let mut rep = Reporter::new("Fig. 6 — asymmetric optimizer policy (real training)");
-    let cfg = Fig6Config { steps, ..Default::default() };
+    // Resolve dcgan32 in the executable artifact set (ref conv artifacts on
+    // a clean checkout) — unknown models are a hard error, not a skip.
+    let (dir, model) = match paragan::testkit::artifacts_for("dcgan32") {
+        Ok(found) => found,
+        Err(e) => {
+            rep.note(format!("SKIPPED: {e}"));
+            rep.finish();
+            return;
+        }
+    };
+    let cfg = Fig6Config { steps, artifact_dir: dir, model, ..Default::default() };
     match fig6(&cfg) {
         Ok((table, results)) => {
             rep.table(table);

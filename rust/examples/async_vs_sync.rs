@@ -9,8 +9,15 @@ use paragan::util::cli::Args;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
     let steps = args.get_u64("steps", 80);
+    // --artifacts overrides; otherwise run the conv sngan32 from the
+    // executable reference set (hard error on unknown models).
+    let (dir, model) = match args.get("artifacts") {
+        Some(d) => (std::path::PathBuf::from(d), "sngan32".to_string()),
+        None => paragan::testkit::artifacts_for("sngan32")?,
+    };
     let cfg = Fig13Config {
-        artifact_dir: args.get_or("artifacts", "artifacts").into(),
+        artifact_dir: dir,
+        model,
         steps,
         eval_every: (steps / 4).max(1),
         ..Default::default()

@@ -1,11 +1,12 @@
 //! FID-proxy sanity probe: a random generator must score far from the real
-//! data; the real data against itself must score ~0.
+//! data; the real data against itself must score ~0.  Runs dcgan32 — conv
+//! features from the fixed random conv net on the reference backend.
 fn main() -> anyhow::Result<()> {
     use paragan::coordinator::trainer::*;
     use paragan::runtime::*;
-    let dir = std::path::PathBuf::from("artifacts");
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32")?;
     let m = Manifest::load(&dir)?;
-    let model = m.model("dcgan32")?;
+    let model = m.model(&model)?;
     let rt = Runtime::new(&dir)?;
     let pipeline = make_pipeline(model, 8, 1);
     let ev = Evaluator::fit(&rt, model, &pipeline, 4)?;

@@ -8,9 +8,9 @@ use paragan::runtime::*;
 use paragan::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32")?;
     let m = Manifest::load(&dir)?;
-    let model = m.model("dcgan32")?;
+    let model = m.model(&model)?;
     let rt = Runtime::new(&dir)?;
     let mut rng = Rng::new(1);
 

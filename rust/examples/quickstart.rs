@@ -4,18 +4,20 @@
 //!     cargo run --release --example quickstart
 //!
 //! Runs out of the box on a clean checkout: with no artifacts dir it
-//! generates reference artifacts and trains the MLP backbone through the
-//! pure-Rust `RefCpuBackend`.  After `make artifacts` and a build with
-//! `--features pjrt` (uncomment the `xla` dependency in rust/Cargo.toml
-//! first) the same code trains the real DCGAN through PJRT.
+//! generates reference artifacts and trains the dcgan32 conv backbone
+//! natively through the pure-Rust `RefCpuBackend` (im2col conv, transposed
+//! conv, BatchNorm — see `runtime::ref_conv`).  After `make artifacts` and
+//! a build with `--features pjrt` (uncomment the `xla` dependency in
+//! rust/Cargo.toml first) the same code trains the real DCGAN through PJRT.
 use paragan::coordinator::OptimizationPolicy;
 use paragan::gan::{Estimator, UpdateScheme};
 use paragan::metrics::tracker::sparkline;
 
 fn main() -> anyhow::Result<()> {
     // Real artifacts (needs the pjrt backend + `make artifacts`) when the
-    // build can execute them, else the generated reference set.
-    let (dir, model) = paragan::testkit::artifacts_for("dcgan32", "refmlp");
+    // build can execute them, else the generated reference set — dcgan32
+    // exists in both, and an unknown model would be a hard error.
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32")?;
 
     // Listing-1-shaped API: pick a backbone, a policy, train.
     let result = Estimator::new(&model)

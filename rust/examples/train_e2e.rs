@@ -17,9 +17,16 @@ fn main() -> anyhow::Result<()> {
     let model = args.get_or("model", "dcgan32");
     let ckpt_dir = std::env::temp_dir().join("paragan-e2e-ckpt");
 
+    // --artifacts overrides; otherwise resolve the model in the executable
+    // artifact set (hard error if it isn't there — no silent substitution).
+    let (dir, model) = match args.get("artifacts") {
+        Some(d) => (std::path::PathBuf::from(d), model),
+        None => paragan::testkit::artifacts_for(&model)?,
+    };
+
     println!("== end-to-end: {model}, {steps} steps, asymmetric policy, sync scheme ==");
     let result = Estimator::new(&model)
-        .artifact_dir(args.get_or("artifacts", "artifacts"))
+        .artifact_dir(dir)
         .policy(OptimizationPolicy::paper_asymmetric())
         .scaling(ScalingConfig {
             base_lr: 2e-4,

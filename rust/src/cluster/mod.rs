@@ -18,4 +18,4 @@ pub use accel::AccelModel;
 pub use framework::{FrameworkKind, FrameworkProfile};
 pub use network::Interconnect;
 pub use simulate::{scaling_efficiency, simulate, SimConfig, SimReport};
-pub use workload::{biggan, contragan, progressive_gan, sagan128, sngan128, table1_models, WorkloadModel};
+pub use workload::{biggan, contragan, dcgan32, progressive_gan, sagan128, sngan128, table1_models, WorkloadModel};

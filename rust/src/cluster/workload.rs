@@ -9,6 +9,8 @@
 //! produced by mechanism, not by scripting (DESIGN.md §5.3).
 
 use crate::layout::cost::LayerShape;
+use crate::runtime::refgen::{arch_layer_shapes, dcgan32_d_net, dcgan32_g_net, DCGAN32_Z_DIM};
+use crate::runtime::LayerOp;
 
 #[derive(Debug, Clone)]
 pub struct WorkloadModel {
@@ -81,6 +83,36 @@ fn gan_pyramid(resolution: usize, ch: usize, depth_scale: usize) -> Vec<LayerSha
     layers.push(LayerShape::dense("d_head", cin, 1));
     layers.push(LayerShape::dense("g_latent", 128, cin * 16));
     layers
+}
+
+/// The dcgan32 workload, derived from the SAME generated descriptors the
+/// `RefCpuBackend` executes (`runtime::refgen::dcgan32_*_net`) — the
+/// utilization model and the executable model are one definition, not two.
+/// G and D layer shapes both appear (each with fwd + dgrad + wgrad
+/// repeats); parameter counts come from the arch's own accounting.
+pub fn dcgan32() -> WorkloadModel {
+    let g = dcgan32_g_net(DCGAN32_Z_DIM);
+    let d = dcgan32_d_net();
+    let mut layers = arch_layer_shapes(&g, "g", 3);
+    layers.extend(arch_layer_shapes(&d, "d", 3));
+    let bn_layers = g
+        .layers
+        .iter()
+        .chain(&d.layers)
+        .filter(|l| matches!(l.op, LayerOp::BatchNorm { .. }))
+        .count();
+    WorkloadModel {
+        name: "dcgan32",
+        n_params: (g.param_numel() + d.param_numel()) as u64,
+        resolution: 32,
+        layers,
+        record_bytes: 3 * 32 * 32 * 4 + 4,
+        reference_v100_hours: None,
+        // The executable model is exactly the synthesized pyramid here — no
+        // under-count to calibrate away.
+        flops_scale: 1.0,
+        bn_sync_layers: bn_layers,
+    }
 }
 
 /// Default calibration for the BigGAN family (see `WorkloadModel::flops_scale`).
@@ -202,6 +234,24 @@ mod tests {
         assert!(models
             .iter()
             .all(|m| m.reference_v100_hours.unwrap() <= bg.reference_v100_hours.unwrap()));
+    }
+
+    #[test]
+    fn dcgan32_workload_matches_the_executable_arch() {
+        let w = dcgan32();
+        // 4 matmul-bearing G layers + 4 D layers (bn/upsample carry none).
+        assert_eq!(w.layers.len(), 8);
+        // Parameter count equals the manifest/executor accounting.
+        assert_eq!(
+            w.n_params,
+            (dcgan32_g_net(DCGAN32_Z_DIM).param_numel() + dcgan32_d_net().param_numel()) as u64
+        );
+        // 4x4 kernels from the descriptors cost through the rect path.
+        let d_conv = w.layers.iter().find(|l| l.name == "d.conv0").unwrap();
+        assert_eq!(d_conv.k, 3 * 4 * 4);
+        assert_eq!(d_conv.m_per_sample, 16 * 16);
+        assert!(w.flops_per_sample() > 1e6, "{}", w.flops_per_sample());
+        assert_eq!(w.bn_sync_layers, 5);
     }
 
     #[test]

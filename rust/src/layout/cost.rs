@@ -32,14 +32,29 @@ pub struct LayerShape {
 }
 
 impl LayerShape {
-    pub fn conv(name: &str, cin: usize, cout: usize, kh: usize, oh: usize) -> LayerShape {
+    /// General conv layer: `(kh, kw)` kernel producing an `(oh, ow)` output
+    /// map — non-square kernels and non-square intermediates (e.g. the
+    /// dcgan32-derived 4x4-kernel shapes, or padded rectangles) cost
+    /// correctly through the same im2col accounting.
+    pub fn conv_rect(
+        name: &str,
+        cin: usize,
+        cout: usize,
+        (kh, kw): (usize, usize),
+        (oh, ow): (usize, usize),
+    ) -> LayerShape {
         LayerShape {
             name: name.to_string(),
-            m_per_sample: oh * oh,
-            k: cin * kh * kh,
+            m_per_sample: oh * ow,
+            k: cin * kh * kw,
             n: cout,
             repeats: 3, // fwd + dgrad + wgrad
         }
+    }
+
+    /// Square-kernel, square-output shorthand for `conv_rect`.
+    pub fn conv(name: &str, cin: usize, cout: usize, kh: usize, oh: usize) -> LayerShape {
+        LayerShape::conv_rect(name, cin, cout, (kh, kh), (oh, oh))
     }
 
     pub fn dense(name: &str, fin: usize, fout: usize) -> LayerShape {
@@ -147,6 +162,18 @@ mod tests {
                 && r.mxu_occupancy <= 1.0
                 && r2.mxu_occupancy >= r.mxu_occupancy - 0.05 // folding more batch never hurts much
         });
+    }
+
+    #[test]
+    fn conv_rect_accepts_nonsquare_kernels_and_outputs() {
+        let r = LayerShape::conv_rect("r", 16, 32, (4, 3), (8, 5));
+        assert_eq!(r.m_per_sample, 40);
+        assert_eq!(r.k, 16 * 12);
+        assert_eq!(r.n, 32);
+        // The square shorthand is exactly the rect special case.
+        let sq = LayerShape::conv("s", 16, 32, 4, 8);
+        let rq = LayerShape::conv_rect("s", 16, 32, (4, 4), (8, 8));
+        assert_eq!((sq.m_per_sample, sq.k, sq.n, sq.repeats), (rq.m_per_sample, rq.k, rq.n, rq.repeats));
     }
 
     #[test]

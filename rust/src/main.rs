@@ -57,8 +57,18 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
+/// `--artifacts DIR` wins; otherwise resolve `model` in the executable
+/// artifact set (generated reference artifacts on a clean checkout).
+/// Unknown models are a hard error, never a silent substitution.
+fn resolve_artifacts(args: &Args, model: &str) -> Result<(PathBuf, String)> {
+    match args.get("artifacts") {
+        Some(d) => Ok((PathBuf::from(d), model.to_string())),
+        None => paragan::testkit::artifacts_for(model),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "dcgan32");
+    let (dir, model) = resolve_artifacts(args, &args.get_or("model", "dcgan32"))?;
     let steps = args.get_u64("steps", 200);
     let scheme = match args.get_or("scheme", "sync").as_str() {
         "async" => UpdateScheme::Async,
@@ -90,7 +100,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     println!("training {model} for {steps} steps [{scheme:?}] policy: {}", policy.describe());
     let mut est = Estimator::new(&model)
-        .artifact_dir(artifacts_dir(args))
+        .artifact_dir(dir)
         .policy(policy)
         .scaling(scaling)
         .scheme(scheme)
@@ -124,7 +134,6 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_repro(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-    let dir = artifacts_dir(args);
     let steps = args.get_usize("sim-steps", 200);
     let train_steps = args.get_u64("train-steps", 60);
     let run = |name: &str| -> Result<()> {
@@ -139,16 +148,20 @@ fn cmd_repro(args: &Args) -> Result<()> {
             "fig10" => println!("{}", repro::fig10(16, steps).0.render()),
             "fig11" => println!("{}", repro::fig11(&Default::default()).0.render()),
             "fig6" => {
+                let (adir, model) = resolve_artifacts(args, "dcgan32")?;
                 let cfg = repro::Fig6Config {
-                    artifact_dir: dir.clone(),
+                    artifact_dir: adir,
+                    model,
                     steps: train_steps,
                     ..Default::default()
                 };
                 println!("{}", repro::fig6(&cfg)?.0.render());
             }
             "fig13" => {
+                let (adir, model) = resolve_artifacts(args, "sngan32")?;
                 let cfg = repro::Fig13Config {
-                    artifact_dir: dir.clone(),
+                    artifact_dir: adir,
+                    model,
                     steps: train_steps,
                     eval_every: (train_steps / 4).max(1),
                     ..Default::default()

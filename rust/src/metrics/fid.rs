@@ -82,7 +82,12 @@ impl Mat {
 
     /// Newton–Schulz iteration for the principal square root of a PSD
     /// matrix.  Converges when the spectrum is scaled into (0, 2); we add a
-    /// small ridge for rank-deficient sample covariances.
+    /// small ridge for rank-deficient sample covariances (e.g. conv
+    /// features fitted from fewer samples than dimensions), and a
+    /// convergence guard watches the residual `||ZY - I||_F`: the loop
+    /// stops early once converged, and if the iteration starts diverging
+    /// (near-singular spectra push eigenvalues of ZY outside the basin) the
+    /// last stable iterate is returned instead of amplifying the blow-up.
     pub fn psd_sqrt(&self, iters: usize) -> Mat {
         let d = self.d;
         let ridge = 1e-8 * (self.trace() / d as f64).max(1e-12);
@@ -93,9 +98,32 @@ impl Mat {
         let norm = m.frobenius().max(1e-30);
         let mut y = m.scale(1.0 / norm);
         let mut z = Mat::eye(d);
+        // In the convergence basin the residual decreases monotonically, so
+        // ANY increase (or a non-finite value) means the last update left
+        // the basin: revert to the iterate from BEFORE that update — the
+        // current y is the one the bad update produced.
+        let mut prev_y = y.clone();
+        let mut prev_res = f64::INFINITY;
         for _ in 0..iters {
             // Y <- Y (3I - Z Y)/2 ; Z <- (3I - Z Y)/2 Z
             let zy = z.matmul(&y);
+            let mut res = 0.0;
+            for i in 0..d {
+                for j in 0..d {
+                    let e = zy.at(i, j) - if i == j { 1.0 } else { 0.0 };
+                    res += e * e;
+                }
+            }
+            let res = res.sqrt();
+            if !res.is_finite() || res > prev_res {
+                y = prev_y; // diverging — return the last stable iterate
+                break;
+            }
+            if res < 1e-12 {
+                break; // converged
+            }
+            prev_res = res;
+            prev_y = y.clone();
             let mut t = zy.scale(-1.0);
             for i in 0..d {
                 *t.at_mut(i, i) += 3.0;
@@ -277,6 +305,29 @@ mod tests {
         let back = s.matmul(&s);
         let err = back.add(&psd.scale(-1.0)).frobenius() / psd.frobenius();
         assert!(err < 1e-3, "relative err {err}");
+    }
+
+    #[test]
+    fn psd_sqrt_survives_near_singular_covariance() {
+        // Rank-1 covariance (all samples on a line): the un-guarded
+        // iteration wanders once the tiny ridge eigenvalues leave the
+        // convergence basin; the guard must return a finite square root
+        // that still squares back to the matrix within a loose tolerance.
+        let d = 8;
+        let mut v = Mat::zeros(d);
+        for i in 0..d {
+            for j in 0..d {
+                *v.at_mut(i, j) = ((i + 1) * (j + 1)) as f64 / d as f64;
+            }
+        }
+        let s = v.psd_sqrt(60);
+        assert!(s.a.iter().all(|x| x.is_finite()));
+        let back = s.matmul(&s);
+        let err = back.add(&v.scale(-1.0)).frobenius() / v.frobenius().max(1e-12);
+        assert!(err < 0.05, "relative err {err}");
+        // And a fully singular (zero) matrix is a no-op, not a NaN.
+        let z = Mat::zeros(4).psd_sqrt(30);
+        assert!(z.a.iter().all(|x| x.is_finite()));
     }
 
     #[test]

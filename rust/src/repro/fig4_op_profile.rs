@@ -48,4 +48,24 @@ mod tests {
         assert!(idle(large) > idle(small) + 0.03, "{} vs {}", idle(large), idle(small));
         assert!(large.frac_mxu > idle(large), "conv should still dominate");
     }
+
+    #[test]
+    fn profile_runs_on_descriptor_derived_dcgan32_shapes() {
+        // The op profile also runs on the workload derived from the SAME
+        // dcgan32 arch the RefCpuBackend executes — the utilization model
+        // and the executable model are one definition.
+        let mut cfg =
+            crate::cluster::SimConfig::tpu_default(crate::cluster::dcgan32(), 8, 8 * 16);
+        cfg.framework = crate::cluster::FrameworkProfile::native_tf();
+        cfg.steps = 100;
+        let r = crate::cluster::simulate(&cfg);
+        assert!(r.frac_mxu > 0.0 && r.frac_mxu <= 1.0, "{}", r.frac_mxu);
+        let total = r.frac_mxu
+            + r.frac_vpu
+            + r.frac_infeed
+            + r.frac_comm
+            + r.frac_straggler
+            + r.frac_overhead;
+        assert!((total - 1.0).abs() < 0.05, "fractions sum to {total}");
+    }
 }

@@ -15,6 +15,7 @@ pub mod client;
 pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod ref_conv;
 pub mod ref_cpu;
 pub mod refgen;
 pub mod step;
@@ -23,6 +24,7 @@ pub use artifact::{ArtifactSpec, Init, Manifest, ModelManifest, OptimizerDef, Pa
 pub use backend::{Backend, RuntimeStats};
 pub use client::Runtime;
 pub use params::{HostTensor, ParamStore};
+pub use ref_conv::{Act, ConvNet, Layer, LayerOp};
 pub use ref_cpu::RefCpuBackend;
-pub use refgen::{write_ref_artifacts, write_ref_artifacts_for, RefModelSpec};
+pub use refgen::{write_ref_artifacts, write_ref_artifacts_for, RefBackbone, RefModelSpec};
 pub use step::{run_inference, run_step, StepOutputs};

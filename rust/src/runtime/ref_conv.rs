@@ -1,0 +1,1656 @@
+//! Conv-capable reference kernels + the layered network executor.
+//!
+//! Everything the `RefCpuBackend` needs to run dcgan32-shaped artifacts
+//! natively: im2col Conv2d, fractionally-strided (transposed) Conv2d,
+//! BatchNorm (train-mode batch statistics and inference-mode fixed
+//! statistics), and nearest-neighbour upsampling — forward and backward —
+//! plus `ConvNet`, the layer-list executor that replaces the old dense-only
+//! chain walker.  Semantics mirror the Python oracles in
+//! `python/compile/kernels/ref.py` (NCHW activations, OIHW conv weights,
+//! transposed-conv weights stored `[cin, cout, kh, kw]`, i.e. O = the input
+//! channel axis, gradient-of-conv convention); goldens are pinned in
+//! `rust/tests/golden/ref_kernels.json`.
+//!
+//! Precision follows the dense path's rule: `bf16` quantizes the operands
+//! of forward matmuls (im2col columns and weight matrices) while biases,
+//! BatchNorm, gradients and optimizer state stay f32.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::params::HostTensor;
+use super::ref_cpu::ops;
+use crate::util::json::{arr, num, obj, s as js, Json};
+
+pub const LRELU_SLOPE: f32 = 0.2;
+/// BatchNorm variance epsilon (matches `ref.py::ref_batchnorm`).
+pub const BN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// Activations
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    LRelu,
+    Tanh,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Result<Act> {
+        Ok(match s {
+            "none" => Act::None,
+            "relu" => Act::Relu,
+            "lrelu" => Act::LRelu,
+            "tanh" => Act::Tanh,
+            other => bail!("unknown activation '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::None => "none",
+            Act::Relu => "relu",
+            Act::LRelu => "lrelu",
+            Act::Tanh => "tanh",
+        }
+    }
+
+    pub fn apply(self, a: &[f32]) -> Vec<f32> {
+        match self {
+            Act::None => a.to_vec(),
+            Act::Relu => a.iter().map(|&x| x.max(0.0)).collect(),
+            Act::LRelu => a.iter().map(|&x| if x >= 0.0 { x } else { LRELU_SLOPE * x }).collect(),
+            Act::Tanh => a.iter().map(|&x| x.tanh()).collect(),
+        }
+    }
+
+    /// grad *= act'(pre), elementwise; tanh uses the cached post-activation
+    /// (`1 - y^2`), relu/lrelu the pre-activation sign.
+    pub fn grad_mul(self, grad: &mut [f32], pre: &[f32], post: &[f32]) {
+        debug_assert_eq!(grad.len(), pre.len());
+        match self {
+            Act::None => {}
+            Act::Relu => {
+                for (g, &p) in grad.iter_mut().zip(pre) {
+                    if p < 0.0 {
+                        *g = 0.0;
+                    }
+                }
+            }
+            Act::LRelu => {
+                for (g, &p) in grad.iter_mut().zip(pre) {
+                    if p < 0.0 {
+                        *g *= LRELU_SLOPE;
+                    }
+                }
+            }
+            Act::Tanh => {
+                for (g, &y) in grad.iter_mut().zip(post) {
+                    *g *= 1.0 - y * y;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv2d (im2col) — NCHW x OIHW
+// ---------------------------------------------------------------------------
+
+/// Shape bundle of one Conv2d call.  Padding is per axis: symmetric convs
+/// set `pad_h == pad_w`, but the transposed conv's equivalent stride-1
+/// conv needs `kh-1-p` / `kw-1-p`, which differ for non-square kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dShape {
+    pub batch: usize,
+    pub cin: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+}
+
+impl Conv2dShape {
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.ih + 2 * self.pad_h - self.kh) / self.stride + 1,
+            (self.iw + 2 * self.pad_w - self.kw) / self.stride + 1,
+        )
+    }
+    /// im2col K dimension.
+    pub fn k(&self) -> usize {
+        self.cin * self.kh * self.kw
+    }
+}
+
+/// x:[B,Cin,IH,IW] -> columns [B*OH*OW, Cin*kh*kw] (zero-padded borders).
+pub fn im2col(x: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let mut cols = vec![0f32; s.batch * oh * ow * kk];
+    for n in 0..s.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((n * oh + oy) * ow + ox) * kk;
+                for ci in 0..s.cin {
+                    let xbase = (n * s.cin + ci) * s.ih * s.iw;
+                    for r in 0..s.kh {
+                        let iy = (oy * s.stride + r) as isize - s.pad_h as isize;
+                        if iy < 0 || iy >= s.ih as isize {
+                            continue;
+                        }
+                        let xrow = xbase + iy as usize * s.iw;
+                        let crow = row + (ci * s.kh + r) * s.kw;
+                        for c in 0..s.kw {
+                            let ix = (ox * s.stride + c) as isize - s.pad_w as isize;
+                            if ix < 0 || ix >= s.iw as isize {
+                                continue;
+                            }
+                            cols[crow + c] = x[xrow + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Scatter-add columns back to x-shape — the adjoint of `im2col`.
+pub fn col2im(cols: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    debug_assert_eq!(cols.len(), s.batch * oh * ow * kk);
+    let mut x = vec![0f32; s.batch * s.cin * s.ih * s.iw];
+    for n in 0..s.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((n * oh + oy) * ow + ox) * kk;
+                for ci in 0..s.cin {
+                    let xbase = (n * s.cin + ci) * s.ih * s.iw;
+                    for r in 0..s.kh {
+                        let iy = (oy * s.stride + r) as isize - s.pad_h as isize;
+                        if iy < 0 || iy >= s.ih as isize {
+                            continue;
+                        }
+                        let xrow = xbase + iy as usize * s.iw;
+                        let crow = row + (ci * s.kh + r) * s.kw;
+                        for c in 0..s.kw {
+                            let ix = (ox * s.stride + c) as isize - s.pad_w as isize;
+                            if ix < 0 || ix >= s.iw as isize {
+                                continue;
+                            }
+                            x[xrow + ix as usize] += cols[crow + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    x
+}
+
+/// OIHW weights -> matmul operand [Cin*kh*kw, Cout].
+fn conv_w_mat(w: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    let kk = s.k();
+    debug_assert_eq!(w.len(), s.cout * kk);
+    let mut wm = vec![0f32; kk * s.cout];
+    for co in 0..s.cout {
+        for ki in 0..kk {
+            wm[ki * s.cout + co] = w[co * kk + ki];
+        }
+    }
+    wm
+}
+
+/// Forward conv: out [B,Cout,OH,OW] = x * w (+ bias per channel).
+pub fn conv2d(s: &Conv2dShape, x: &[f32], w: &[f32], bias: Option<&[f32]>, bf16: bool) -> Vec<f32> {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    let cols = im2col(x, s);
+    let wm = conv_w_mat(w, s);
+    let out_mat = if bf16 {
+        ops::matmul(&ops::quantize_bf16(&cols), m, kk, &ops::quantize_bf16(&wm), s.cout)
+    } else {
+        ops::matmul(&cols, m, kk, &wm, s.cout)
+    };
+    // [B*OH*OW, Cout] -> NCHW + bias.
+    let mut out = vec![0f32; s.batch * s.cout * oh * ow];
+    for n in 0..s.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((n * oh + oy) * ow + ox) * s.cout;
+                for co in 0..s.cout {
+                    let b = bias.map(|b| b[co]).unwrap_or(0.0);
+                    out[((n * s.cout + co) * oh + oy) * ow + ox] = out_mat[row + co] + b;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Backward conv: `dout` is NCHW-shaped like the forward output.  Returns
+/// (dx if requested, dw in OIHW, db).  Gradients are f32 regardless of the
+/// forward precision.
+pub fn conv2d_bwd(
+    s: &Conv2dShape,
+    x: &[f32],
+    w: &[f32],
+    dout: &[f32],
+    want_dx: bool,
+) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    debug_assert_eq!(dout.len(), s.batch * s.cout * oh * ow);
+
+    // NCHW -> [B*OH*OW, Cout], plus the channel sums (db).
+    let mut dout_mat = vec![0f32; m * s.cout];
+    let mut db = vec![0f32; s.cout];
+    for n in 0..s.batch {
+        for co in 0..s.cout {
+            let dbase = ((n * s.cout + co) * oh) * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let d = dout[dbase + oy * ow + ox];
+                    dout_mat[((n * oh + oy) * ow + ox) * s.cout + co] = d;
+                    db[co] += d;
+                }
+            }
+        }
+    }
+
+    // dW = colsT @ dout, [K, Cout] -> OIHW.
+    let cols = im2col(x, s);
+    let dwm = ops::matmul_tn(&cols, m, kk, &dout_mat, s.cout);
+    let mut dw = vec![0f32; s.cout * kk];
+    for co in 0..s.cout {
+        for ki in 0..kk {
+            dw[co * kk + ki] = dwm[ki * s.cout + co];
+        }
+    }
+
+    let dx = if want_dx {
+        let wm = conv_w_mat(w, s);
+        let dcols = ops::matmul_nt(&dout_mat, m, s.cout, &wm, kk);
+        Some(col2im(&dcols, s))
+    } else {
+        None
+    };
+    (dx, dw, db)
+}
+
+// ---------------------------------------------------------------------------
+// ConvTranspose2d — via input dilation + a stride-1 conv (ref.py semantics)
+// ---------------------------------------------------------------------------
+
+/// Shape bundle of one transposed-conv call; weights are `[cin, cout, kh,
+/// kw]` (O = the input channel axis, like `lax.conv_transpose` gradients).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvT2dShape {
+    pub batch: usize,
+    pub cin: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvT2dShape {
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.ih - 1) * self.stride + self.kh - 2 * self.pad,
+            (self.iw - 1) * self.stride + self.kw - 2 * self.pad,
+        )
+    }
+
+    fn dilated_hw(&self) -> (usize, usize) {
+        ((self.ih - 1) * self.stride + 1, (self.iw - 1) * self.stride + 1)
+    }
+
+    /// The equivalent stride-1 conv over the zero-dilated input.
+    fn eq_conv(&self) -> Conv2dShape {
+        let (dh, dw) = self.dilated_hw();
+        Conv2dShape {
+            batch: self.batch,
+            cin: self.cin,
+            ih: dh,
+            iw: dw,
+            cout: self.cout,
+            kh: self.kh,
+            kw: self.kw,
+            stride: 1,
+            pad_h: self.kh - 1 - self.pad,
+            pad_w: self.kw - 1 - self.pad,
+        }
+    }
+}
+
+/// Insert stride-1 zeros between input pixels.
+fn dilate(x: &[f32], s: &ConvT2dShape) -> Vec<f32> {
+    let (dh, dw) = s.dilated_hw();
+    let mut out = vec![0f32; s.batch * s.cin * dh * dw];
+    for n in 0..s.batch {
+        for ci in 0..s.cin {
+            let src = (n * s.cin + ci) * s.ih * s.iw;
+            let dst = (n * s.cin + ci) * dh * dw;
+            for y in 0..s.ih {
+                for xx in 0..s.iw {
+                    out[dst + (y * s.stride) * dw + xx * s.stride] = x[src + y * s.iw + xx];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `[cin, cout, kh, kw]` -> spatially flipped, channel-swapped OIHW.
+fn flip_swap_w(w: &[f32], s: &ConvT2dShape) -> Vec<f32> {
+    let (kh, kw) = (s.kh, s.kw);
+    let mut out = vec![0f32; s.cout * s.cin * kh * kw];
+    for ci in 0..s.cin {
+        for co in 0..s.cout {
+            for r in 0..kh {
+                for c in 0..kw {
+                    out[((co * s.cin + ci) * kh + (kh - 1 - r)) * kw + (kw - 1 - c)] =
+                        w[((ci * s.cout + co) * kh + r) * kw + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Forward transposed conv: out [B,Cout,(IH-1)*s+kh-2p, ...].
+pub fn conv_transpose2d(
+    s: &ConvT2dShape,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    bf16: bool,
+) -> Vec<f32> {
+    debug_assert!(s.pad < s.kh && s.pad < s.kw, "conv_t needs pad <= k-1");
+    let xd = dilate(x, s);
+    let weq = flip_swap_w(w, s);
+    conv2d(&s.eq_conv(), &xd, &weq, bias, bf16)
+}
+
+/// Backward transposed conv.  `dx` is computed directly as a strided conv
+/// of `dout` with the stored weights (which are already OIHW from the
+/// gradient's point of view); `dw`/`db` come from the equivalent dilated
+/// conv's backward, un-flipped back into `[cin, cout, kh, kw]`.
+pub fn conv_transpose2d_bwd(
+    s: &ConvT2dShape,
+    x: &[f32],
+    w: &[f32],
+    dout: &[f32],
+    want_dx: bool,
+) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+    let (oh, ow) = s.out_hw();
+    let eq = s.eq_conv();
+    let xd = dilate(x, s);
+    let weq = flip_swap_w(w, s);
+    let (_, dweq, db) = conv2d_bwd(&eq, &xd, &weq, dout, false);
+    // dw_eq is OIHW [cout, cin, kh, kw]; un-flip into [cin, cout, kh, kw].
+    let mut dw = vec![0f32; s.cin * s.cout * s.kh * s.kw];
+    for ci in 0..s.cin {
+        for co in 0..s.cout {
+            for r in 0..s.kh {
+                for c in 0..s.kw {
+                    dw[((ci * s.cout + co) * s.kh + r) * s.kw + c] =
+                        dweq[((co * s.cin + ci) * s.kh + (s.kh - 1 - r)) * s.kw + (s.kw - 1 - c)];
+                }
+            }
+        }
+    }
+    let dx = if want_dx {
+        let dxs = Conv2dShape {
+            batch: s.batch,
+            cin: s.cout,
+            ih: oh,
+            iw: ow,
+            cout: s.cin,
+            kh: s.kh,
+            kw: s.kw,
+            stride: s.stride,
+            pad_h: s.pad,
+            pad_w: s.pad,
+        };
+        Some(conv2d(&dxs, dout, w, None, false))
+    } else {
+        None
+    };
+    (dx, dw, db)
+}
+
+// ---------------------------------------------------------------------------
+// BatchNorm (per channel over batch + spatial)
+// ---------------------------------------------------------------------------
+
+/// Batch statistics of x:[B,C,HW]: per-channel mean and biased variance.
+pub fn bn_stats(x: &[f32], batch: usize, c: usize, hw: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), batch * c * hw);
+    let n = (batch * hw) as f64;
+    let mut mean = vec![0f32; c];
+    let mut var = vec![0f32; c];
+    for ch in 0..c {
+        let mut sum = 0f64;
+        let mut sq = 0f64;
+        for b in 0..batch {
+            let base = (b * c + ch) * hw;
+            for &v in &x[base..base + hw] {
+                sum += v as f64;
+                sq += (v as f64) * (v as f64);
+            }
+        }
+        let m = sum / n;
+        mean[ch] = m as f32;
+        var[ch] = ((sq / n) - m * m).max(0.0) as f32;
+    }
+    (mean, var)
+}
+
+/// Normalize with the GIVEN statistics — train mode passes the batch stats,
+/// inference mode passes fixed (running/baked) stats.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_apply(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * c * hw);
+    let mut y = vec![0f32; x.len()];
+    for ch in 0..c {
+        let inv = 1.0 / (var[ch] + eps).sqrt();
+        let (g, bt, m) = (gamma[ch], beta[ch], mean[ch]);
+        for b in 0..batch {
+            let base = (b * c + ch) * hw;
+            for i in 0..hw {
+                y[base + i] = (x[base + i] - m) * inv * g + bt;
+            }
+        }
+    }
+    y
+}
+
+/// Train-mode BatchNorm backward (through the batch statistics).
+#[allow(clippy::too_many_arguments)]
+pub fn bn_bwd(
+    x: &[f32],
+    dout: &[f32],
+    gamma: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), dout.len());
+    let n = (batch * hw) as f32;
+    let mut dx = vec![0f32; x.len()];
+    let mut dgamma = vec![0f32; c];
+    let mut dbeta = vec![0f32; c];
+    for ch in 0..c {
+        let inv = 1.0 / (var[ch] + eps).sqrt();
+        let m = mean[ch];
+        let mut sum_d = 0f64;
+        let mut sum_dx = 0f64;
+        for b in 0..batch {
+            let base = (b * c + ch) * hw;
+            for i in 0..hw {
+                let d = dout[base + i];
+                let xh = (x[base + i] - m) * inv;
+                sum_d += d as f64;
+                sum_dx += (d * xh) as f64;
+            }
+        }
+        dbeta[ch] = sum_d as f32;
+        dgamma[ch] = sum_dx as f32;
+        let k = gamma[ch] * inv;
+        let mean_d = sum_d as f32 / n;
+        let mean_dxh = sum_dx as f32 / n;
+        for b in 0..batch {
+            let base = (b * c + ch) * hw;
+            for i in 0..hw {
+                let xh = (x[base + i] - m) * inv;
+                dx[base + i] = k * (dout[base + i] - mean_d - xh * mean_dxh);
+            }
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+// ---------------------------------------------------------------------------
+// Nearest-neighbour upsampling
+// ---------------------------------------------------------------------------
+
+pub fn upsample_nearest(x: &[f32], batch: usize, c: usize, ih: usize, iw: usize, f: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * c * ih * iw);
+    let (oh, ow) = (ih * f, iw * f);
+    let mut y = vec![0f32; batch * c * oh * ow];
+    for bc in 0..batch * c {
+        let src = bc * ih * iw;
+        let dst = bc * oh * ow;
+        for oy in 0..oh {
+            let srow = src + (oy / f) * iw;
+            let drow = dst + oy * ow;
+            for ox in 0..ow {
+                y[drow + ox] = x[srow + ox / f];
+            }
+        }
+    }
+    y
+}
+
+/// Adjoint of nearest upsampling: sum each f x f block of `dout`.
+pub fn upsample_nearest_bwd(
+    dout: &[f32],
+    batch: usize,
+    c: usize,
+    ih: usize,
+    iw: usize,
+    f: usize,
+) -> Vec<f32> {
+    let (oh, ow) = (ih * f, iw * f);
+    debug_assert_eq!(dout.len(), batch * c * oh * ow);
+    let mut dx = vec![0f32; batch * c * ih * iw];
+    for bc in 0..batch * c {
+        let src = bc * oh * ow;
+        let dst = bc * ih * iw;
+        for oy in 0..oh {
+            let srow = src + oy * ow;
+            let drow = dst + (oy / f) * iw;
+            for ox in 0..ow {
+                dx[drow + ox / f] += dout[srow + ox];
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// ConvNet — the layered executor
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerOp {
+    /// (nin, nout) matmul + bias; flattens whatever spatial shape precedes.
+    Dense { nin: usize, nout: usize },
+    Conv { cin: usize, cout: usize, kh: usize, kw: usize, stride: usize, pad: usize },
+    ConvT { cin: usize, cout: usize, kh: usize, kw: usize, stride: usize, pad: usize },
+    BatchNorm { c: usize },
+    Upsample { c: usize, factor: usize },
+}
+
+/// One layer: an op, the activation applied after it, and the spatial input
+/// size ((0,0) for dense inputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub op: LayerOp,
+    pub act: Act,
+    pub in_hw: (usize, usize),
+}
+
+impl Layer {
+    pub fn op_name(&self) -> &'static str {
+        match self.op {
+            LayerOp::Dense { .. } => "dense",
+            LayerOp::Conv { .. } => "conv",
+            LayerOp::ConvT { .. } => "conv_t",
+            LayerOp::BatchNorm { .. } => "bn",
+            LayerOp::Upsample { .. } => "upsample",
+        }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        let (h, w) = self.in_hw;
+        match self.op {
+            LayerOp::Dense { .. } => (0, 0),
+            LayerOp::Conv { kh, kw, stride, pad, .. } => (
+                (h + 2 * pad - kh) / stride + 1,
+                (w + 2 * pad - kw) / stride + 1,
+            ),
+            LayerOp::ConvT { kh, kw, stride, pad, .. } => (
+                (h - 1) * stride + kh - 2 * pad,
+                (w - 1) * stride + kw - 2 * pad,
+            ),
+            LayerOp::BatchNorm { .. } => (h, w),
+            LayerOp::Upsample { factor, .. } => (h * factor, w * factor),
+        }
+    }
+
+    pub fn in_numel(&self) -> usize {
+        let (h, w) = self.in_hw;
+        match self.op {
+            LayerOp::Dense { nin, .. } => nin,
+            LayerOp::Conv { cin, .. } | LayerOp::ConvT { cin, .. } => cin * h * w,
+            LayerOp::BatchNorm { c } | LayerOp::Upsample { c, .. } => c * h * w,
+        }
+    }
+
+    pub fn out_numel(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        match self.op {
+            LayerOp::Dense { nout, .. } => nout,
+            LayerOp::Conv { cout, .. } | LayerOp::ConvT { cout, .. } => cout * oh * ow,
+            LayerOp::BatchNorm { c } | LayerOp::Upsample { c, .. } => c * oh * ow,
+        }
+    }
+
+    /// How many param tensors this layer consumes (in order).
+    pub fn n_params(&self) -> usize {
+        match self.op {
+            LayerOp::Upsample { .. } => 0,
+            _ => 2,
+        }
+    }
+
+    /// Total trainable scalars.
+    pub fn param_numel(&self) -> usize {
+        match self.op {
+            LayerOp::Dense { nin, nout } => nin * nout + nout,
+            LayerOp::Conv { cin, cout, kh, kw, .. } | LayerOp::ConvT { cin, cout, kh, kw, .. } => {
+                cin * cout * kh * kw + cout
+            }
+            LayerOp::BatchNorm { c } => 2 * c,
+            LayerOp::Upsample { .. } => 0,
+        }
+    }
+
+    fn conv_shape(&self, batch: usize) -> Conv2dShape {
+        let (h, w) = self.in_hw;
+        match self.op {
+            LayerOp::Conv { cin, cout, kh, kw, stride, pad } => {
+                Conv2dShape { batch, cin, ih: h, iw: w, cout, kh, kw, stride, pad_h: pad, pad_w: pad }
+            }
+            _ => unreachable!("conv_shape on non-conv layer"),
+        }
+    }
+
+    fn convt_shape(&self, batch: usize) -> ConvT2dShape {
+        let (h, w) = self.in_hw;
+        match self.op {
+            LayerOp::ConvT { cin, cout, kh, kw, stride, pad } => {
+                ConvT2dShape { batch, cin, ih: h, iw: w, cout, kh, kw, stride, pad }
+            }
+            _ => unreachable!("convt_shape on non-conv_t layer"),
+        }
+    }
+}
+
+/// Forward cache of one `ConvNet` execution: per-layer pre-activation and
+/// post-activation buffers plus BatchNorm batch statistics.  `Act::None`
+/// layers leave `post` empty rather than materializing a copy identical to
+/// `pre` — read through [`ConvForward::post_of`].
+pub struct ConvForward {
+    pub x0: Vec<f32>,
+    pub pre: Vec<Vec<f32>>,
+    pub post: Vec<Vec<f32>>,
+    pub bn: Vec<Option<(Vec<f32>, Vec<f32>)>>,
+    pub batch: usize,
+}
+
+impl ConvForward {
+    /// Post-activation of layer `li` (the pre buffer when the layer has no
+    /// activation — activations never legitimately produce zero values, so
+    /// an empty `post` always means `Act::None`).
+    pub fn post_of(&self, li: usize) -> &[f32] {
+        if self.post[li].is_empty() { &self.pre[li] } else { &self.post[li] }
+    }
+
+    /// The network output (post-activation of the last layer).
+    pub fn output(&self) -> &[f32] {
+        if self.pre.is_empty() { &self.x0 } else { self.post_of(self.pre.len() - 1) }
+    }
+}
+
+/// An executable layer list.  Built from a `.ref.json` `arch` section (conv
+/// artifacts) or synthesized from dense `(w, b)` param pairs (the MLP
+/// artifacts, which carry no explicit arch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvNet {
+    pub layers: Vec<Layer>,
+}
+
+impl ConvNet {
+    pub fn new(layers: Vec<Layer>) -> Result<ConvNet> {
+        anyhow::ensure!(!layers.is_empty(), "empty layer list");
+        for (i, l) in layers.iter().enumerate() {
+            if !matches!(l.op, LayerOp::Dense { .. }) {
+                anyhow::ensure!(
+                    l.in_hw.0 > 0 && l.in_hw.1 > 0,
+                    "layer {i} ({}): spatial op needs a positive in_hw, got {:?}",
+                    l.op_name(),
+                    l.in_hw
+                );
+            }
+            match l.op {
+                LayerOp::Conv { kh, kw, stride, pad, cin, cout } => {
+                    anyhow::ensure!(
+                        cin > 0 && cout > 0 && kh > 0 && kw > 0 && stride > 0,
+                        "layer {i} (conv): degenerate dims"
+                    );
+                    anyhow::ensure!(
+                        l.in_hw.0 + 2 * pad >= kh && l.in_hw.1 + 2 * pad >= kw,
+                        "layer {i} (conv): kernel {kh}x{kw} larger than padded input {:?}",
+                        l.in_hw
+                    );
+                }
+                LayerOp::ConvT { kh, kw, stride, pad, cin, cout } => {
+                    anyhow::ensure!(
+                        cin > 0 && cout > 0 && kh > 0 && kw > 0 && stride > 0,
+                        "layer {i} (conv_t): degenerate dims"
+                    );
+                    anyhow::ensure!(
+                        pad < kh && pad < kw,
+                        "layer {i} (conv_t): pad {pad} must be < kernel {kh}x{kw}"
+                    );
+                    anyhow::ensure!(
+                        (l.in_hw.0 - 1) * stride + kh > 2 * pad
+                            && (l.in_hw.1 - 1) * stride + kw > 2 * pad,
+                        "layer {i} (conv_t): output collapses to zero"
+                    );
+                }
+                LayerOp::Upsample { factor, .. } => {
+                    anyhow::ensure!(factor > 0, "layer {i} (upsample): factor 0");
+                }
+                _ => {}
+            }
+            if i + 1 < layers.len() {
+                anyhow::ensure!(
+                    l.out_numel() == layers[i + 1].in_numel(),
+                    "layer {i} ({}) outputs {} values but layer {} ({}) expects {}",
+                    l.op_name(),
+                    l.out_numel(),
+                    i + 1,
+                    layers[i + 1].op_name(),
+                    layers[i + 1].in_numel()
+                );
+            }
+        }
+        Ok(ConvNet { layers })
+    }
+
+    pub fn in_numel(&self) -> usize {
+        self.layers[0].in_numel()
+    }
+    pub fn out_numel(&self) -> usize {
+        self.layers.last().expect("non-empty net").out_numel()
+    }
+    pub fn n_param_tensors(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+    pub fn param_numel(&self) -> usize {
+        self.layers.iter().map(|l| l.param_numel()).sum()
+    }
+
+    /// Parse the `.ref.json` `arch` array (see `runtime::refgen` docs for
+    /// the schema).
+    pub fn from_json(v: &Json) -> Result<ConvNet> {
+        let items = v.as_arr().ok_or_else(|| anyhow!("arch must be an array of layers"))?;
+        let mut layers = Vec::with_capacity(items.len());
+        for (i, l) in items.iter().enumerate() {
+            let get = |key: &str| {
+                l.get(key)
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("arch layer {i}: missing/non-numeric '{key}'"))
+            };
+            let kpair = |i: usize, l: &Json| -> Result<(usize, usize)> {
+                let k = l.get("k").as_arr().ok_or_else(|| anyhow!("arch layer {i}: missing 'k'"))?;
+                Ok((
+                    k.first().and_then(|v| v.as_usize()).unwrap_or(0),
+                    k.get(1).and_then(|v| v.as_usize()).unwrap_or(0),
+                ))
+            };
+            let op = match l.get("op").as_str() {
+                Some("dense") => LayerOp::Dense { nin: get("nin")?, nout: get("nout")? },
+                Some("conv") => {
+                    let (kh, kw) = kpair(i, l)?;
+                    LayerOp::Conv {
+                        cin: get("cin")?,
+                        cout: get("cout")?,
+                        kh,
+                        kw,
+                        stride: get("stride")?,
+                        pad: get("pad")?,
+                    }
+                }
+                Some("conv_t") => {
+                    let (kh, kw) = kpair(i, l)?;
+                    LayerOp::ConvT {
+                        cin: get("cin")?,
+                        cout: get("cout")?,
+                        kh,
+                        kw,
+                        stride: get("stride")?,
+                        pad: get("pad")?,
+                    }
+                }
+                Some("bn") => LayerOp::BatchNorm { c: get("c")? },
+                Some("upsample") => LayerOp::Upsample { c: get("c")?, factor: get("factor")? },
+                other => bail!("arch layer {i}: unknown op {other:?}"),
+            };
+            let act = Act::parse(l.get("act").as_str().unwrap_or("none"))
+                .map_err(|e| anyhow!("arch layer {i}: {e}"))?;
+            let hw = l.get("in_hw");
+            let in_hw = (
+                hw.idx(0).as_usize().unwrap_or(0),
+                hw.idx(1).as_usize().unwrap_or(0),
+            );
+            layers.push(Layer { op, act, in_hw });
+        }
+        ConvNet::new(layers)
+    }
+
+    pub fn to_json(&self) -> Json {
+        arr(self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut fields = vec![("op", js(l.op_name()))];
+                match l.op {
+                    LayerOp::Dense { nin, nout } => {
+                        fields.push(("nin", num(nin as f64)));
+                        fields.push(("nout", num(nout as f64)));
+                    }
+                    LayerOp::Conv { cin, cout, kh, kw, stride, pad }
+                    | LayerOp::ConvT { cin, cout, kh, kw, stride, pad } => {
+                        fields.push(("cin", num(cin as f64)));
+                        fields.push(("cout", num(cout as f64)));
+                        fields.push(("k", arr(vec![num(kh as f64), num(kw as f64)])));
+                        fields.push(("stride", num(stride as f64)));
+                        fields.push(("pad", num(pad as f64)));
+                    }
+                    LayerOp::BatchNorm { c } => fields.push(("c", num(c as f64))),
+                    LayerOp::Upsample { c, factor } => {
+                        fields.push(("c", num(c as f64)));
+                        fields.push(("factor", num(factor as f64)));
+                    }
+                }
+                fields.push(("act", js(l.act.name())));
+                fields.push((
+                    "in_hw",
+                    arr(vec![num(l.in_hw.0 as f64), num(l.in_hw.1 as f64)]),
+                ));
+                obj(fields)
+            })
+            .collect())
+    }
+
+    /// (name, shape, init) param specs, in consumption order — what
+    /// `refgen` writes into the manifest.  Weight tensors init gaussian,
+    /// biases/BN-beta zeros, BN-gamma ones.
+    pub fn param_defs(&self, prefix: &str) -> Vec<(String, Vec<usize>, &'static str)> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            let tag = format!("{prefix}.{}{i}", l.op_name().replace('_', ""));
+            match l.op {
+                LayerOp::Dense { nin, nout } => {
+                    out.push((format!("{tag}.w"), vec![nin, nout], "normal:0.05"));
+                    out.push((format!("{tag}.b"), vec![nout], "zeros"));
+                }
+                LayerOp::Conv { cin, cout, kh, kw, .. } => {
+                    out.push((format!("{tag}.w"), vec![cout, cin, kh, kw], "normal:0.05"));
+                    out.push((format!("{tag}.b"), vec![cout], "zeros"));
+                }
+                LayerOp::ConvT { cin, cout, kh, kw, .. } => {
+                    out.push((format!("{tag}.w"), vec![cin, cout, kh, kw], "normal:0.05"));
+                    out.push((format!("{tag}.b"), vec![cout], "zeros"));
+                }
+                LayerOp::BatchNorm { c } => {
+                    out.push((format!("{tag}.g"), vec![c], "ones"));
+                    out.push((format!("{tag}.b"), vec![c], "zeros"));
+                }
+                LayerOp::Upsample { .. } => {}
+            }
+        }
+        out
+    }
+
+    /// Synthesize a dense net from ordered `(w, b)` param pairs — the MLP
+    /// artifacts carry no explicit arch, so topology is recovered from the
+    /// param roles exactly as the original dense-chain executor did.
+    pub fn dense_from_params(params: &[&HostTensor], hidden: Act, last: Act) -> Result<ConvNet> {
+        anyhow::ensure!(
+            !params.is_empty() && params.len() % 2 == 0,
+            "dense artifact expects (w, b) param pairs, got {} tensors",
+            params.len()
+        );
+        let n = params.len() / 2;
+        let mut layers = Vec::with_capacity(n);
+        for (li, pair) in params.chunks(2).enumerate() {
+            let (w, b) = (pair[0], pair[1]);
+            anyhow::ensure!(
+                w.shape.len() == 2,
+                "expected rank-2 weight '{}', got shape {:?}",
+                w.name,
+                w.shape
+            );
+            anyhow::ensure!(
+                b.shape.len() == 1 && b.shape[0] == w.shape[1],
+                "bias '{}' (shape {:?}) does not match weight '{}' (shape {:?})",
+                b.name,
+                b.shape,
+                w.name,
+                w.shape
+            );
+            if let Some(prev) = layers.last() {
+                let Layer { op: LayerOp::Dense { nout, .. }, .. } = prev else {
+                    unreachable!()
+                };
+                anyhow::ensure!(
+                    *nout == w.shape[0],
+                    "dense chain breaks at '{}': previous out {} != in {}",
+                    w.name,
+                    nout,
+                    w.shape[0]
+                );
+            }
+            layers.push(Layer {
+                op: LayerOp::Dense { nin: w.shape[0], nout: w.shape[1] },
+                act: if li + 1 < n { hidden } else { last },
+                in_hw: (0, 0),
+            });
+        }
+        ConvNet::new(layers)
+    }
+
+    /// Validate that `params` (count AND full shapes — a transposed weight
+    /// with the right element count must not execute silently wrong) line
+    /// up with the layer list; errors name the artifact and tensor.
+    pub fn check_params(&self, params: &[&HostTensor], key: &str) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.n_param_tensors(),
+            "artifact '{key}': net has {} layers wanting {} param tensors, got {}",
+            self.layers.len(),
+            self.n_param_tensors(),
+            params.len()
+        );
+        let mut pi = 0;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.n_params() == 0 {
+                continue;
+            }
+            let (w, b) = (params[pi], params[pi + 1]);
+            pi += 2;
+            let (want_w, want_b): (Vec<usize>, Vec<usize>) = match l.op {
+                LayerOp::Dense { nin, nout } => (vec![nin, nout], vec![nout]),
+                LayerOp::Conv { cin, cout, kh, kw, .. } => {
+                    (vec![cout, cin, kh, kw], vec![cout])
+                }
+                LayerOp::ConvT { cin, cout, kh, kw, .. } => {
+                    (vec![cin, cout, kh, kw], vec![cout])
+                }
+                LayerOp::BatchNorm { c } => (vec![c], vec![c]),
+                LayerOp::Upsample { .. } => unreachable!(),
+            };
+            anyhow::ensure!(
+                w.shape == want_w,
+                "artifact '{key}': layer {i} ({}) weight '{}' has shape {:?}, expected {:?}",
+                l.op_name(),
+                w.name,
+                w.shape,
+                want_w
+            );
+            anyhow::ensure!(
+                b.shape == want_b,
+                "artifact '{key}': layer {i} ({}) bias '{}' has shape {:?}, expected {:?}",
+                l.op_name(),
+                b.name,
+                b.shape,
+                want_b
+            );
+        }
+        Ok(())
+    }
+
+    /// Forward pass; `key` names the artifact in error messages.
+    pub fn forward(
+        &self,
+        params: &[&HostTensor],
+        x0: Vec<f32>,
+        batch: usize,
+        bf16: bool,
+        key: &str,
+    ) -> Result<ConvForward> {
+        self.check_params(params, key)?;
+        anyhow::ensure!(batch > 0, "artifact '{key}': zero batch");
+        anyhow::ensure!(
+            x0.len() == batch * self.in_numel(),
+            "artifact '{key}': input has {} values, net expects {}x{}",
+            x0.len(),
+            batch,
+            self.in_numel()
+        );
+        let n = self.layers.len();
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut post: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut bn: Vec<Option<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(n);
+        let mut pi = 0;
+        for (li, l) in self.layers.iter().enumerate() {
+            let x: &[f32] = if li == 0 {
+                &x0
+            } else if post[li - 1].is_empty() {
+                &pre[li - 1] // Act::None layer — post is not materialized
+            } else {
+                &post[li - 1]
+            };
+            let (h, w) = l.in_hw;
+            let a = match l.op {
+                LayerOp::Dense { nin, nout } => {
+                    let (wt, bt) = (params[pi], params[pi + 1]);
+                    pi += 2;
+                    let mut a = if bf16 {
+                        ops::matmul(
+                            &ops::quantize_bf16(x),
+                            batch,
+                            nin,
+                            &ops::quantize_bf16(&wt.data),
+                            nout,
+                        )
+                    } else {
+                        ops::matmul(x, batch, nin, &wt.data, nout)
+                    };
+                    ops::add_bias(&mut a, batch, &bt.data);
+                    bn.push(None);
+                    a
+                }
+                LayerOp::Conv { .. } => {
+                    let (wt, bt) = (params[pi], params[pi + 1]);
+                    pi += 2;
+                    bn.push(None);
+                    conv2d(&l.conv_shape(batch), x, &wt.data, Some(&bt.data), bf16)
+                }
+                LayerOp::ConvT { .. } => {
+                    let (wt, bt) = (params[pi], params[pi + 1]);
+                    pi += 2;
+                    bn.push(None);
+                    conv_transpose2d(&l.convt_shape(batch), x, &wt.data, Some(&bt.data), bf16)
+                }
+                LayerOp::BatchNorm { c } => {
+                    let (g, b) = (params[pi], params[pi + 1]);
+                    pi += 2;
+                    let (mean, var) = bn_stats(x, batch, c, h * w);
+                    let y = bn_apply(x, &g.data, &b.data, &mean, &var, batch, c, h * w, BN_EPS);
+                    bn.push(Some((mean, var)));
+                    y
+                }
+                LayerOp::Upsample { c, factor } => {
+                    bn.push(None);
+                    upsample_nearest(x, batch, c, h, w, factor)
+                }
+            };
+            post.push(match l.act {
+                Act::None => Vec::new(),
+                act => act.apply(&a),
+            });
+            pre.push(a);
+        }
+        Ok(ConvForward { x0, pre, post, bn, batch })
+    }
+
+    /// Backprop `dout` (gradient w.r.t. the final POST-activation output).
+    /// Returns per-param gradients aligned 1:1 with `params`, and the input
+    /// gradient when `want_dx`.  Gradients stay f32 regardless of the
+    /// forward precision (the paper's mixed-precision rule).
+    pub fn backward(
+        &self,
+        params: &[&HostTensor],
+        f: &ConvForward,
+        dout: Vec<f32>,
+        want_dx: bool,
+        key: &str,
+    ) -> Result<(Vec<Vec<f32>>, Option<Vec<f32>>)> {
+        anyhow::ensure!(
+            dout.len() == f.batch * self.out_numel(),
+            "artifact '{key}': output grad has {} values, net produces {}x{}",
+            dout.len(),
+            f.batch,
+            self.out_numel()
+        );
+        // Param start index per layer.
+        let mut starts = Vec::with_capacity(self.layers.len());
+        let mut pi = 0;
+        for l in &self.layers {
+            starts.push(pi);
+            pi += l.n_params();
+        }
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); params.len()];
+        let mut grad = dout;
+        let mut dx_out = None;
+        let batch = f.batch;
+        for li in (0..self.layers.len()).rev() {
+            let l = &self.layers[li];
+            l.act.grad_mul(&mut grad, &f.pre[li], &f.post[li]);
+            let x: &[f32] = if li == 0 { &f.x0 } else { f.post_of(li - 1) };
+            let need_dx = li > 0 || want_dx;
+            let (h, w) = l.in_hw;
+            let dx = match l.op {
+                LayerOp::Dense { nin, nout } => {
+                    let wt = params[starts[li]];
+                    let dw = ops::matmul_tn(x, batch, nin, &grad, nout);
+                    let db = ops::bias_grad(&grad, batch, nout);
+                    grads[starts[li]] = dw;
+                    grads[starts[li] + 1] = db;
+                    need_dx.then(|| ops::matmul_nt(&grad, batch, nout, &wt.data, nin))
+                }
+                LayerOp::Conv { .. } => {
+                    let wt = params[starts[li]];
+                    let (dx, dw, db) =
+                        conv2d_bwd(&l.conv_shape(batch), x, &wt.data, &grad, need_dx);
+                    grads[starts[li]] = dw;
+                    grads[starts[li] + 1] = db;
+                    dx
+                }
+                LayerOp::ConvT { .. } => {
+                    let wt = params[starts[li]];
+                    let (dx, dw, db) =
+                        conv_transpose2d_bwd(&l.convt_shape(batch), x, &wt.data, &grad, need_dx);
+                    grads[starts[li]] = dw;
+                    grads[starts[li] + 1] = db;
+                    dx
+                }
+                LayerOp::BatchNorm { c } => {
+                    let g = params[starts[li]];
+                    let (mean, var) = f.bn[li]
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("artifact '{key}': layer {li} (bn) has no cached statistics"))?;
+                    let (dx, dgamma, dbeta) =
+                        bn_bwd(x, &grad, &g.data, mean, var, batch, c, h * w, BN_EPS);
+                    grads[starts[li]] = dgamma;
+                    grads[starts[li] + 1] = dbeta;
+                    Some(dx)
+                }
+                LayerOp::Upsample { c, factor } => {
+                    Some(upsample_nearest_bwd(&grad, batch, c, h, w, factor))
+                }
+            };
+            if li == 0 {
+                dx_out = dx;
+            } else {
+                grad = dx.ok_or_else(|| {
+                    anyhow!("artifact '{key}': layer {li} produced no input gradient")
+                })?;
+            }
+        }
+        Ok((grads, dx_out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        rng.fill_gaussian(&mut v, 0.0, std);
+        v
+    }
+
+    /// Direct O(everything) conv loop — the oracle the im2col path must match.
+    fn conv2d_naive(s: &Conv2dShape, x: &[f32], w: &[f32], bias: Option<&[f32]>) -> Vec<f32> {
+        let (oh, ow) = s.out_hw();
+        let mut out = vec![0f32; s.batch * s.cout * oh * ow];
+        for n in 0..s.batch {
+            for co in 0..s.cout {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = bias.map(|b| b[co]).unwrap_or(0.0);
+                        for ci in 0..s.cin {
+                            for r in 0..s.kh {
+                                let iy = (oy * s.stride + r) as isize - s.pad_h as isize;
+                                if iy < 0 || iy >= s.ih as isize {
+                                    continue;
+                                }
+                                for c in 0..s.kw {
+                                    let ix = (ox * s.stride + c) as isize - s.pad_w as isize;
+                                    if ix < 0 || ix >= s.iw as isize {
+                                        continue;
+                                    }
+                                    acc += x[((n * s.cin + ci) * s.ih + iy as usize) * s.iw
+                                        + ix as usize]
+                                        * w[((co * s.cin + ci) * s.kh + r) * s.kw + c];
+                                }
+                            }
+                        }
+                        out[((n * s.cout + co) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Direct scatter loop for the transposed conv.
+    fn convt_naive(s: &ConvT2dShape, x: &[f32], w: &[f32], bias: Option<&[f32]>) -> Vec<f32> {
+        let (oh, ow) = s.out_hw();
+        let mut out = vec![0f32; s.batch * s.cout * oh * ow];
+        if let Some(b) = bias {
+            for n in 0..s.batch {
+                for co in 0..s.cout {
+                    let base = (n * s.cout + co) * oh * ow;
+                    for v in out[base..base + oh * ow].iter_mut() {
+                        *v += b[co];
+                    }
+                }
+            }
+        }
+        for n in 0..s.batch {
+            for ci in 0..s.cin {
+                for iy in 0..s.ih {
+                    for ix in 0..s.iw {
+                        let xv = x[((n * s.cin + ci) * s.ih + iy) * s.iw + ix];
+                        for co in 0..s.cout {
+                            for r in 0..s.kh {
+                                let oy = (iy * s.stride + r) as isize - s.pad as isize;
+                                if oy < 0 || oy >= oh as isize {
+                                    continue;
+                                }
+                                for c in 0..s.kw {
+                                    let ox = (ix * s.stride + c) as isize - s.pad as isize;
+                                    if ox < 0 || ox >= ow as isize {
+                                        continue;
+                                    }
+                                    out[((n * s.cout + co) * oh + oy as usize) * ow + ox as usize] +=
+                                        xv * w[((ci * s.cout + co) * s.kh + r) * s.kw + c];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn im2col_conv_matches_naive_loop() {
+        let mut rng = Rng::new(1);
+        for s in [
+            Conv2dShape { batch: 2, cin: 3, ih: 8, iw: 8, cout: 4, kh: 4, kw: 4, stride: 2, pad_h: 1, pad_w: 1 },
+            Conv2dShape { batch: 1, cin: 2, ih: 5, iw: 7, cout: 3, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1 },
+            Conv2dShape { batch: 2, cin: 1, ih: 4, iw: 4, cout: 2, kh: 2, kw: 3, stride: 2, pad_h: 0, pad_w: 0 },
+        ] {
+            let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+            let w = randn(&mut rng, s.cout * s.k(), 0.5);
+            let b = randn(&mut rng, s.cout, 0.3);
+            let got = conv2d(&s, &x, &w, Some(&b), false);
+            let want = conv2d_naive(&s, &x, &w, Some(&b));
+            close(&got, &want, 1e-5, "conv2d");
+        }
+    }
+
+    #[test]
+    fn conv_transpose_matches_naive_scatter() {
+        let mut rng = Rng::new(2);
+        for s in [
+            ConvT2dShape { batch: 2, cin: 4, ih: 4, iw: 4, cout: 3, kh: 4, kw: 4, stride: 2, pad: 1 },
+            ConvT2dShape { batch: 1, cin: 2, ih: 3, iw: 5, cout: 2, kh: 3, kw: 3, stride: 1, pad: 1 },
+            ConvT2dShape { batch: 2, cin: 3, ih: 2, iw: 2, cout: 4, kh: 4, kw: 4, stride: 2, pad: 1 },
+            // Non-square kernel: the equivalent conv pads each axis with
+            // its own k-1-p, which this case pins.
+            ConvT2dShape { batch: 1, cin: 2, ih: 3, iw: 3, cout: 2, kh: 4, kw: 3, stride: 2, pad: 1 },
+        ] {
+            let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+            let w = randn(&mut rng, s.cin * s.cout * s.kh * s.kw, 0.5);
+            let b = randn(&mut rng, s.cout, 0.3);
+            let got = conv_transpose2d(&s, &x, &w, Some(&b), false);
+            let want = convt_naive(&s, &x, &w, Some(&b));
+            close(&got, &want, 1e-5, "conv_t");
+            let (oh, ow) = s.out_hw();
+            assert_eq!(got.len(), s.batch * s.cout * oh * ow);
+        }
+    }
+
+    #[test]
+    fn conv_backward_matches_finite_difference() {
+        let mut rng = Rng::new(3);
+        let s = Conv2dShape { batch: 2, cin: 2, ih: 4, iw: 4, cout: 3, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1 };
+        let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+        let w = randn(&mut rng, s.cout * s.k(), 0.5);
+        let (oh, ow) = s.out_hw();
+        let dvec = randn(&mut rng, s.batch * s.cout * oh * ow, 1.0);
+        let loss = |x: &[f32], w: &[f32], b: &[f32]| -> f32 {
+            conv2d(&s, x, w, Some(b), false).iter().zip(&dvec).map(|(y, d)| y * d).sum()
+        };
+        let b = randn(&mut rng, s.cout, 0.3);
+        let (dx, dw, db) = conv2d_bwd(&s, &x, &w, &dvec, true);
+        let dx = dx.unwrap();
+        let eps = 1e-3;
+        let fd = |plus: f32, minus: f32| (plus - minus) / (2.0 * eps);
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let f = fd(loss(&xp, &w, &b), loss(&xm, &w, &b));
+            assert!((f - dx[i]).abs() < 2e-2 * (1.0 + f.abs()), "dx[{i}]: {f} vs {}", dx[i]);
+        }
+        for i in 0..w.len() {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let f = fd(loss(&x, &wp, &b), loss(&x, &wm, &b));
+            assert!((f - dw[i]).abs() < 2e-2 * (1.0 + f.abs()), "dw[{i}]: {f} vs {}", dw[i]);
+        }
+        for i in 0..b.len() {
+            let mut bp = b.clone();
+            bp[i] += eps;
+            let mut bm = b.clone();
+            bm[i] -= eps;
+            let f = fd(loss(&x, &w, &bp), loss(&x, &w, &bm));
+            assert!((f - db[i]).abs() < 2e-2 * (1.0 + f.abs()), "db[{i}]: {f} vs {}", db[i]);
+        }
+    }
+
+    #[test]
+    fn conv_transpose_backward_matches_finite_difference() {
+        let mut rng = Rng::new(4);
+        let s = ConvT2dShape { batch: 2, cin: 3, ih: 3, iw: 3, cout: 2, kh: 4, kw: 4, stride: 2, pad: 1 };
+        let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+        let w = randn(&mut rng, s.cin * s.cout * s.kh * s.kw, 0.5);
+        let b = randn(&mut rng, s.cout, 0.3);
+        let (oh, ow) = s.out_hw();
+        let dvec = randn(&mut rng, s.batch * s.cout * oh * ow, 1.0);
+        let loss = |x: &[f32], w: &[f32]| -> f32 {
+            conv_transpose2d(&s, x, w, Some(&b), false).iter().zip(&dvec).map(|(y, d)| y * d).sum()
+        };
+        let (dx, dw, db) = conv_transpose2d_bwd(&s, &x, &w, &dvec, true);
+        let dx = dx.unwrap();
+        let eps = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let f = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps);
+            assert!((f - dx[i]).abs() < 2e-2 * (1.0 + f.abs()), "dx[{i}]: {f} vs {}", dx[i]);
+        }
+        for i in 0..w.len() {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let f = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+            assert!((f - dw[i]).abs() < 2e-2 * (1.0 + f.abs()), "dw[{i}]: {f} vs {}", dw[i]);
+        }
+        // db is just per-channel sums of dout.
+        for co in 0..s.cout {
+            let want: f32 = (0..s.batch)
+                .map(|n| {
+                    dvec[(n * s.cout + co) * oh * ow..(n * s.cout + co + 1) * oh * ow]
+                        .iter()
+                        .sum::<f32>()
+                })
+                .sum();
+            assert!((db[co] - want).abs() < 1e-4, "db[{co}]");
+        }
+    }
+
+    #[test]
+    fn batchnorm_normalizes_and_inference_uses_given_stats() {
+        let mut rng = Rng::new(5);
+        let (b, c, hw) = (4, 3, 16);
+        let x = randn(&mut rng, b * c * hw, 2.0);
+        let gamma = vec![1.0f32; c];
+        let beta = vec![0.0f32; c];
+        let (mean, var) = bn_stats(&x, b, c, hw);
+        let y = bn_apply(&x, &gamma, &beta, &mean, &var, b, c, hw, BN_EPS);
+        let (ym, yv) = bn_stats(&y, b, c, hw);
+        for ch in 0..c {
+            assert!(ym[ch].abs() < 1e-5, "mean[{ch}] {}", ym[ch]);
+            assert!((yv[ch] - 1.0).abs() < 1e-3, "var[{ch}] {}", yv[ch]);
+        }
+        // Inference mode: fixed stats shift/scale deterministically.
+        let fm = vec![1.0f32; c];
+        let fv = vec![4.0f32; c];
+        let yi = bn_apply(&x, &gamma, &beta, &fm, &fv, b, c, hw, 0.0);
+        for (xi, yi) in x.iter().zip(&yi) {
+            assert!(((xi - 1.0) / 2.0 - yi).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batchnorm_backward_matches_finite_difference() {
+        let mut rng = Rng::new(6);
+        let (b, c, hw) = (3, 2, 4);
+        let x = randn(&mut rng, b * c * hw, 1.5);
+        let gamma = randn(&mut rng, c, 0.5);
+        let beta = randn(&mut rng, c, 0.5);
+        let dvec = randn(&mut rng, b * c * hw, 1.0);
+        let loss = |x: &[f32], g: &[f32], bt: &[f32]| -> f32 {
+            let (m, v) = bn_stats(x, b, c, hw);
+            bn_apply(x, g, bt, &m, &v, b, c, hw, BN_EPS)
+                .iter()
+                .zip(&dvec)
+                .map(|(y, d)| y * d)
+                .sum()
+        };
+        let (mean, var) = bn_stats(&x, b, c, hw);
+        let (dx, dgamma, dbeta) = bn_bwd(&x, &dvec, &gamma, &mean, &var, b, c, hw, BN_EPS);
+        let eps = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let f = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps);
+            assert!((f - dx[i]).abs() < 3e-2 * (1.0 + f.abs()), "dx[{i}]: {f} vs {}", dx[i]);
+        }
+        for i in 0..c {
+            let mut gp = gamma.clone();
+            gp[i] += eps;
+            let mut gm = gamma.clone();
+            gm[i] -= eps;
+            let f = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps);
+            assert!((f - dgamma[i]).abs() < 3e-2 * (1.0 + f.abs()), "dgamma[{i}]");
+            let mut bp = beta.clone();
+            bp[i] += eps;
+            let mut bm = beta.clone();
+            bm[i] -= eps;
+            let f = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps);
+            assert!((f - dbeta[i]).abs() < 3e-2 * (1.0 + f.abs()), "dbeta[{i}]");
+        }
+    }
+
+    #[test]
+    fn upsample_forward_and_adjoint() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // 1x1x2x2
+        let y = upsample_nearest(&x, 1, 1, 2, 2, 2);
+        assert_eq!(y, vec![1., 1., 2., 2., 1., 1., 2., 2., 3., 3., 4., 4., 3., 3., 4., 4.]);
+        // Adjoint identity: <up(x), dy> == <x, up_bwd(dy)>.
+        let mut rng = Rng::new(7);
+        let x = randn(&mut rng, 2 * 3 * 4 * 4, 1.0);
+        let dy = randn(&mut rng, 2 * 3 * 8 * 8, 1.0);
+        let lhs: f32 =
+            upsample_nearest(&x, 2, 3, 4, 4, 2).iter().zip(&dy).map(|(a, b)| a * b).sum();
+        let rhs: f32 =
+            upsample_nearest_bwd(&dy, 2, 3, 4, 4, 2).iter().zip(&x).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    fn tensor(name: &str, shape: Vec<usize>, rng: &mut Rng, std: f32) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut v = vec![0f32; n];
+        rng.fill_gaussian(&mut v, 0.0, std);
+        HostTensor::new(name, shape, v)
+    }
+
+    fn net_param_tensors(net: &ConvNet, rng: &mut Rng) -> Vec<HostTensor> {
+        net.param_defs("t")
+            .into_iter()
+            .map(|(name, shape, init)| match init {
+                "ones" => HostTensor::new(&name, shape.clone(), vec![1.0; shape.iter().product()]),
+                "zeros" => HostTensor::zeros(&name, shape),
+                _ => tensor(&name, shape, rng, 0.4),
+            })
+            .collect()
+    }
+
+    /// Full-net finite difference through conv -> bn -> dense and
+    /// conv_t -> upsample -> dense stacks, every param.
+    #[test]
+    fn convnet_backward_matches_finite_difference() {
+        let nets = vec![
+            ConvNet::new(vec![
+                Layer {
+                    op: LayerOp::Conv { cin: 2, cout: 2, kh: 3, kw: 3, stride: 2, pad: 1 },
+                    act: Act::LRelu,
+                    in_hw: (4, 4),
+                },
+                Layer { op: LayerOp::BatchNorm { c: 2 }, act: Act::Relu, in_hw: (2, 2) },
+                Layer { op: LayerOp::Dense { nin: 8, nout: 3 }, act: Act::Tanh, in_hw: (0, 0) },
+            ])
+            .unwrap(),
+            ConvNet::new(vec![
+                Layer {
+                    op: LayerOp::ConvT { cin: 2, cout: 3, kh: 4, kw: 4, stride: 2, pad: 1 },
+                    act: Act::None,
+                    in_hw: (2, 2),
+                },
+                Layer { op: LayerOp::Upsample { c: 3, factor: 2 }, act: Act::LRelu, in_hw: (4, 4) },
+                Layer { op: LayerOp::Dense { nin: 192, nout: 2 }, act: Act::None, in_hw: (0, 0) },
+            ])
+            .unwrap(),
+        ];
+        for (ni, net) in nets.iter().enumerate() {
+            let mut rng = Rng::new(100 + ni as u64);
+            let batch = 2;
+            let params = net_param_tensors(net, &mut rng);
+            let x0 = {
+                let mut v = vec![0f32; batch * net.in_numel()];
+                rng.fill_gaussian(&mut v, 0.0, 1.0);
+                v
+            };
+            let dvec = {
+                let mut v = vec![0f32; batch * net.out_numel()];
+                rng.fill_gaussian(&mut v, 0.0, 1.0);
+                v
+            };
+            let loss = |params: &[HostTensor]| -> f32 {
+                let refs: Vec<&HostTensor> = params.iter().collect();
+                let f = net.forward(&refs, x0.clone(), batch, false, "t").unwrap();
+                f.output().iter().zip(&dvec).map(|(y, d)| y * d).sum()
+            };
+            let refs: Vec<&HostTensor> = params.iter().collect();
+            let f = net.forward(&refs, x0.clone(), batch, false, "t").unwrap();
+            let (grads, dx) = net.backward(&refs, &f, dvec.clone(), true, "t").unwrap();
+            assert!(dx.is_some());
+            let eps = 2e-3f32;
+            for (pi, g) in grads.iter().enumerate() {
+                assert_eq!(g.len(), params[pi].numel(), "net {ni} param {pi}");
+                for idx in 0..g.len() {
+                    let mut plus = params.clone();
+                    plus[pi].data[idx] += eps;
+                    let mut minus = params.clone();
+                    minus[pi].data[idx] -= eps;
+                    let fd = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+                    assert!(
+                        (fd - g[idx]).abs() < 5e-2 * (1.0 + fd.abs().max(g[idx].abs())),
+                        "net {ni} param {pi} ({}) idx {idx}: fd {fd} vs analytic {}",
+                        params[pi].name,
+                        g[idx]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arch_json_roundtrips() {
+        let net = ConvNet::new(vec![
+            Layer { op: LayerOp::Dense { nin: 8, nout: 32 }, act: Act::None, in_hw: (0, 0) },
+            Layer { op: LayerOp::BatchNorm { c: 2 }, act: Act::Relu, in_hw: (4, 4) },
+            Layer {
+                op: LayerOp::ConvT { cin: 2, cout: 4, kh: 4, kw: 4, stride: 2, pad: 1 },
+                act: Act::None,
+                in_hw: (4, 4),
+            },
+            Layer { op: LayerOp::Upsample { c: 4, factor: 2 }, act: Act::None, in_hw: (8, 8) },
+            Layer {
+                op: LayerOp::Conv { cin: 4, cout: 3, kh: 3, kw: 3, stride: 1, pad: 1 },
+                act: Act::Tanh,
+                in_hw: (16, 16),
+            },
+        ])
+        .unwrap();
+        let j = net.to_json();
+        let back = ConvNet::from_json(&j).unwrap();
+        assert_eq!(net, back);
+        assert_eq!(net.in_numel(), 8);
+        assert_eq!(net.out_numel(), 3 * 16 * 16);
+    }
+
+    #[test]
+    fn mismatched_layers_and_params_produce_named_errors() {
+        // Chain break at construction.
+        let err = ConvNet::new(vec![
+            Layer { op: LayerOp::Dense { nin: 4, nout: 7 }, act: Act::Relu, in_hw: (0, 0) },
+            Layer { op: LayerOp::Dense { nin: 8, nout: 1 }, act: Act::None, in_hw: (0, 0) },
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("layer 0") && err.contains("expects"), "{err}");
+
+        // Param-count mismatch names the artifact.
+        let net = ConvNet::new(vec![Layer {
+            op: LayerOp::Dense { nin: 4, nout: 2 },
+            act: Act::None,
+            in_hw: (0, 0),
+        }])
+        .unwrap();
+        let w = HostTensor::zeros("w", vec![4, 2]);
+        let err = net.forward(&[&w], vec![0.0; 8], 2, false, "d_step_adam_fp32").unwrap_err();
+        assert!(format!("{err}").contains("d_step_adam_fp32"), "{err}");
+    }
+
+    #[test]
+    fn dense_from_params_recovers_chain_and_rejects_breaks() {
+        let mut rng = Rng::new(8);
+        let w0 = tensor("w0", vec![3, 5], &mut rng, 0.5);
+        let b0 = tensor("b0", vec![5], &mut rng, 0.2);
+        let w1 = tensor("w1", vec![5, 2], &mut rng, 0.5);
+        let b1 = tensor("b1", vec![2], &mut rng, 0.2);
+        let net =
+            ConvNet::dense_from_params(&[&w0, &b0, &w1, &b1], Act::Relu, Act::Tanh).unwrap();
+        assert_eq!(net.layers.len(), 2);
+        assert_eq!(net.layers[0].act, Act::Relu);
+        assert_eq!(net.layers[1].act, Act::Tanh);
+        // Chain break is a structured error naming the tensor.
+        let w_bad = tensor("w_bad", vec![4, 2], &mut rng, 0.5);
+        let err = ConvNet::dense_from_params(&[&w0, &b0, &w_bad, &b1], Act::Relu, Act::None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("w_bad"), "{err}");
+        // Odd tensor count too.
+        assert!(ConvNet::dense_from_params(&[&w0], Act::Relu, Act::None).is_err());
+    }
+}

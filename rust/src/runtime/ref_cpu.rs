@@ -2,18 +2,19 @@
 //!
 //! Executes the *reference artifact* format written by `runtime::refgen`:
 //! each `.ref.json` descriptor names a program kind (`d_step`, `g_step`,
-//! `generate`, `fid_features`), a loss, an optimizer and a precision; the
-//! network topology itself is recovered from the artifact's `param:` roles,
-//! which form a chain of dense `(w, b)` layers.  The op set is exactly what
-//! the MLP G/D step artifacts need — matmul (plus its two transposed
-//! variants for backprop), bias add, relu/lrelu/tanh and their gradients,
-//! and elementwise optimizer updates — mirroring the semantics of
+//! `generate`, `fid_features`), a loss, an optimizer and a precision.  The
+//! network topology comes from the descriptor's `arch` section (a layer
+//! list: dense / conv / conv_t / bn / upsample — see `runtime::ref_conv`),
+//! which is how conv backbones like `dcgan32` execute natively; MLP
+//! artifacts carry no `arch` and their dense chain is recovered from the
+//! `param:` roles as before.  Kernel semantics mirror
 //! `python/compile/kernels/ref.py` and `python/compile/optimizers.py`.
 //!
 //! Precision: `bf16` quantizes the operands of *forward* matmuls (round to
-//! nearest even, like XLA's bf16); parameters, gradients and optimizer
-//! state stay f32, matching the paper's mixed-precision finding that
-//! weights/grads are sensitive while activations tolerate bf16.
+//! nearest even, like XLA's bf16) — dense and im2col conv alike;
+//! parameters, gradients and optimizer state stay f32, matching the
+//! paper's mixed-precision finding that weights/grads are sensitive while
+//! activations tolerate bf16.
 //!
 //! Native HLO-text artifacts are NOT handled here — build with
 //! `--features pjrt` for those.
@@ -29,6 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::artifact::{ArtifactSpec, Role};
 use super::backend::{Backend, RuntimeStats};
 use super::params::HostTensor;
+use super::ref_conv::{Act, ConvNet, Layer, LayerOp};
 use crate::util::json;
 
 /// The reference op set, public so parity tests (vs. the Python oracles in
@@ -144,43 +146,6 @@ pub mod ops {
 
 use ops::{sigmoid, softplus};
 
-/// Hidden-layer activation of a dense chain.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Act {
-    Relu,
-    LRelu,
-}
-
-const LRELU_SLOPE: f32 = 0.2;
-
-fn act_apply(a: &[f32], act: Act) -> Vec<f32> {
-    match act {
-        Act::Relu => a.iter().map(|&x| x.max(0.0)).collect(),
-        Act::LRelu => a.iter().map(|&x| if x >= 0.0 { x } else { LRELU_SLOPE * x }).collect(),
-    }
-}
-
-/// grad *= act'(pre), elementwise.
-fn act_grad_mul(grad: &mut [f32], pre: &[f32], act: Act) {
-    debug_assert_eq!(grad.len(), pre.len());
-    match act {
-        Act::Relu => {
-            for (g, &p) in grad.iter_mut().zip(pre) {
-                if p < 0.0 {
-                    *g = 0.0;
-                }
-            }
-        }
-        Act::LRelu => {
-            for (g, &p) in grad.iter_mut().zip(pre) {
-                if p < 0.0 {
-                    *g *= LRELU_SLOPE;
-                }
-            }
-        }
-    }
-}
-
 // ---------------------------------------------------------------------------
 // Descriptor (the `.ref.json` program format)
 // ---------------------------------------------------------------------------
@@ -249,12 +214,27 @@ struct HParams {
     lars_momentum: f32,
 }
 
+/// How `fid_features` extracts features: a fixed random dense projection
+/// (the MLP stand-in) or the fixed random conv net (conv backbones).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FidKind {
+    Projection,
+    Conv,
+}
+
 struct RefProgram {
     kind: Kind,
     loss: Loss,
     opt: Option<Opt>,
     bf16: bool,
     hp: HParams,
+    /// The program's own network (D for d_step, G for g_step/generate).
+    /// `None` for MLP artifacts — their dense chain is recovered from the
+    /// param roles at execution time.
+    net: Option<ConvNet>,
+    /// Frozen-D topology for g_step of conv backbones.
+    d_net: Option<ConvNet>,
+    fid: FidKind,
 }
 
 impl RefProgram {
@@ -292,137 +272,20 @@ impl RefProgram {
             lars_trust: f("lars_trust", 1e-3),
             lars_momentum: f("lars_momentum", 0.9),
         };
-        Ok(RefProgram { kind, loss, opt, bf16, hp })
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Dense-chain forward/backward
-// ---------------------------------------------------------------------------
-
-type LayerRef<'a> = (&'a HostTensor, &'a HostTensor);
-
-/// Pair the ordered `param:` tensors into a chain of dense (w, b) layers.
-fn dense_chain<'a>(params: &[&'a HostTensor]) -> Result<Vec<LayerRef<'a>>> {
-    anyhow::ensure!(
-        !params.is_empty() && params.len() % 2 == 0,
-        "ref backend expects (w, b) dense pairs, got {} param tensors",
-        params.len()
-    );
-    let mut out: Vec<LayerRef<'a>> = Vec::with_capacity(params.len() / 2);
-    for pair in params.chunks(2) {
-        let (w, b) = (pair[0], pair[1]);
-        anyhow::ensure!(
-            w.shape.len() == 2,
-            "expected rank-2 weight '{}', got shape {:?}",
-            w.name,
-            w.shape
-        );
-        anyhow::ensure!(
-            b.shape.len() == 1 && b.shape[0] == w.shape[1],
-            "bias '{}' (shape {:?}) does not match weight '{}' (shape {:?})",
-            b.name,
-            b.shape,
-            w.name,
-            w.shape
-        );
-        if let Some(&(pw, _)) = out.last() {
-            anyhow::ensure!(
-                pw.shape[1] == w.shape[0],
-                "dense chain breaks at '{}': previous out {} != in {}",
-                w.name,
-                pw.shape[1],
-                w.shape[0]
-            );
-        }
-        out.push((w, b));
-    }
-    Ok(out)
-}
-
-/// Forward pass cache: per layer, the input `xs[i]` and pre-activation
-/// `pre[i]`.  The chain's final pre-activation is `pre.last()` — D's logits
-/// (nout 1) or G's pre-tanh image.
-struct Forward {
-    xs: Vec<Vec<f32>>,
-    pre: Vec<Vec<f32>>,
-    batch: usize,
-}
-
-fn mlp_forward(
-    layers: &[LayerRef],
-    x0: Vec<f32>,
-    batch: usize,
-    hidden: Act,
-    bf16: bool,
-) -> Result<Forward> {
-    let mut xs = Vec::with_capacity(layers.len());
-    let mut pre = Vec::with_capacity(layers.len());
-    let mut x = x0;
-    for (li, (w, b)) in layers.iter().copied().enumerate() {
-        let nin = w.shape[0];
-        let nout = w.shape[1];
-        anyhow::ensure!(
-            x.len() == batch * nin,
-            "layer '{}': input has {} values, expected {}x{}",
-            w.name,
-            x.len(),
-            batch,
-            nin
-        );
-        let mut a = if bf16 {
-            let xq = ops::quantize_bf16(&x);
-            let wq = ops::quantize_bf16(&w.data);
-            ops::matmul(&xq, batch, nin, &wq, nout)
-        } else {
-            ops::matmul(&x, batch, nin, &w.data, nout)
+        let net = match v.get("arch") {
+            json::Json::Null => None,
+            a => Some(ConvNet::from_json(a).context("descriptor 'arch'")?),
         };
-        ops::add_bias(&mut a, batch, &b.data);
-        let next = if li + 1 < layers.len() { act_apply(&a, hidden) } else { Vec::new() };
-        xs.push(x);
-        pre.push(a);
-        x = next;
-    }
-    Ok(Forward { xs, pre, batch })
-}
-
-/// Backprop `dout` (gradient w.r.t. the final pre-activation) through the
-/// chain.  Returns per-layer `(dw, db)` (chain order) and, when `want_dx`,
-/// the gradient w.r.t. the chain's input.  Gradients stay f32 regardless of
-/// the forward precision (the paper's mixed-precision rule).
-fn mlp_backward(
-    layers: &[LayerRef],
-    f: &Forward,
-    dout: Vec<f32>,
-    hidden: Act,
-    want_dx: bool,
-) -> (Vec<(Vec<f32>, Vec<f32>)>, Option<Vec<f32>>) {
-    let n = layers.len();
-    let mut grads: Vec<(Vec<f32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); n];
-    let mut dx_out = None;
-    let mut grad = dout; // dL/d(pre) of layer li
-    for li in (0..n).rev() {
-        let (w, _b) = layers[li];
-        let nin = w.shape[0];
-        let nout = w.shape[1];
-        let dw = ops::matmul_tn(&f.xs[li], f.batch, nin, &grad, nout);
-        let db = ops::bias_grad(&grad, f.batch, nout);
-        let need_dx = li > 0 || want_dx;
-        let dx = if need_dx {
-            Some(ops::matmul_nt(&grad, f.batch, nout, &w.data, nin))
-        } else {
-            None
+        let d_net = match v.get("d_arch") {
+            json::Json::Null => None,
+            a => Some(ConvNet::from_json(a).context("descriptor 'd_arch'")?),
         };
-        grads[li] = (dw, db);
-        if li == 0 {
-            dx_out = dx;
-        } else {
-            let mut g = dx.expect("dx computed for inner layer");
-            act_grad_mul(&mut g, &f.pre[li - 1], hidden);
-            grad = g;
-        }
+        let fid = match v.get("fid").as_str() {
+            Some("conv") => FidKind::Conv,
+            _ => FidKind::Projection,
+        };
+        Ok(RefProgram { kind, loss, opt, bf16, hp, net, d_net, fid })
     }
-    (grads, dx_out)
 }
 
 // ---------------------------------------------------------------------------
@@ -637,11 +500,97 @@ fn take_named(list: &mut [(String, Vec<f32>)], name: &str) -> Result<Vec<f32>> {
     Ok(std::mem::take(&mut list[i].1))
 }
 
+/// The fixed random conv feature extractor backing conv-model
+/// `fid_features` artifacts: conv s2 -> lrelu -> conv s2 -> lrelu ->
+/// global average pool -> dense projection -> tanh.  Weights are baked
+/// from a fixed seed, so every Runtime instance computes identical
+/// features (like the baked-in HLO constants).
+struct FidConvNet {
+    net: ConvNet,
+    params: Vec<HostTensor>,
+    /// (pooled_channels, feat_dim) projection.
+    proj: Vec<f32>,
+    pooled_c: usize,
+}
+
+impl FidConvNet {
+    const C1: usize = 16;
+    const C2: usize = 32;
+
+    fn build(cin: usize, h: usize, w: usize, feat: usize) -> Result<FidConvNet> {
+        let net = ConvNet::new(vec![
+            Layer {
+                op: LayerOp::Conv { cin, cout: Self::C1, kh: 3, kw: 3, stride: 2, pad: 1 },
+                act: Act::LRelu,
+                in_hw: (h, w),
+            },
+            Layer {
+                op: LayerOp::Conv {
+                    cin: Self::C1,
+                    cout: Self::C2,
+                    kh: 3,
+                    kw: 3,
+                    stride: 2,
+                    pad: 1,
+                },
+                act: Act::LRelu,
+                in_hw: ((h + 1) / 2, (w + 1) / 2),
+            },
+        ])
+        .context("fid conv net")?;
+        let mut rng = crate::util::rng::Rng::new(
+            0xF1DC_0DE5 ^ ((cin * h * w) as u64) ^ ((feat as u64) << 32),
+        );
+        let params = net
+            .param_defs("fid")
+            .into_iter()
+            .map(|(name, shape, _)| {
+                let n: usize = shape.iter().product();
+                let fan_in = match shape.len() {
+                    4 => shape[1] * shape[2] * shape[3],
+                    _ => 1,
+                };
+                let mut v = vec![0f32; n];
+                if name.ends_with(".w") {
+                    rng.fill_gaussian(&mut v, 0.0, 1.0 / (fan_in as f32).sqrt());
+                }
+                HostTensor::new(&name, shape, v)
+            })
+            .collect();
+        let mut proj = vec![0f32; Self::C2 * feat];
+        rng.fill_gaussian(&mut proj, 0.0, 1.0 / (Self::C2 as f32).sqrt());
+        Ok(FidConvNet { net, params, proj, pooled_c: Self::C2 })
+    }
+
+    /// images [B, cin, h, w] -> features [B, feat]; the feature width is
+    /// whatever the projection was built for, so it cannot desync from a
+    /// caller-supplied value.
+    fn features(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let feat = self.proj.len() / self.pooled_c;
+        let refs: Vec<&HostTensor> = self.params.iter().collect();
+        let f = self.net.forward(&refs, images.to_vec(), batch, false, "fid_features")?;
+        let out = f.output();
+        let hw = out.len() / (batch * self.pooled_c);
+        // Global average pool over spatial dims.
+        let mut pooled = vec![0f32; batch * self.pooled_c];
+        for bc in 0..batch * self.pooled_c {
+            pooled[bc] = out[bc * hw..(bc + 1) * hw].iter().sum::<f32>() / hw as f32;
+        }
+        let mut feats = ops::matmul(&pooled, batch, self.pooled_c, &self.proj, feat);
+        for v in feats.iter_mut() {
+            *v = v.tanh();
+        }
+        Ok(feats)
+    }
+}
+
 pub struct RefCpuBackend {
     dir: PathBuf,
     programs: RefCell<HashMap<String, Rc<RefProgram>>>,
-    /// (d_in, feat_dim) -> fixed random projection (the FID feature net).
+    /// (d_in, feat_dim) -> fixed random projection (the MLP FID stand-in).
     fid_weights: RefCell<HashMap<(usize, usize), Rc<Vec<f32>>>>,
+    /// (cin, h, w, feat_dim) -> fixed random conv feature net.
+    fid_conv_nets: RefCell<HashMap<(usize, usize, usize, usize), Rc<FidConvNet>>>,
     stats: RefCell<RuntimeStats>,
 }
 
@@ -651,6 +600,7 @@ impl RefCpuBackend {
             dir: artifact_dir.into(),
             programs: RefCell::new(HashMap::new()),
             fid_weights: RefCell::new(HashMap::new()),
+            fid_conv_nets: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
         }
     }
@@ -784,46 +734,71 @@ impl RefCpuBackend {
         Ok(out)
     }
 
+    /// The network a step/generate program executes: the descriptor's
+    /// `arch` when present (conv backbones), else a dense chain recovered
+    /// from the param roles (MLP backbones, unchanged behavior).
+    fn resolve_net(
+        net: &Option<ConvNet>,
+        params: &[&HostTensor],
+        hidden: Act,
+        last: Act,
+        key: &str,
+    ) -> Result<ConvNet> {
+        match net {
+            Some(n) => Ok(n.clone()),
+            None => ConvNet::dense_from_params(params, hidden, last)
+                .with_context(|| format!("artifact '{key}': recovering dense chain")),
+        }
+    }
+
     fn run_d_step(
         &self,
         prog: &RefProgram,
         spec: &ArtifactSpec,
         g: &Gathered,
     ) -> Result<Vec<HostTensor>> {
-        let chain = dense_chain(&g.params)?;
-        let real = *g.data.get("real").ok_or_else(|| anyhow!("d_step needs in:real"))?;
-        let fake = *g.data.get("fake").ok_or_else(|| anyhow!("d_step needs in:fake"))?;
-        let batch = *real.shape.first().context("real batch dim")?;
-        let d_in = chain[0].0.shape[0];
+        let key = &spec.key;
+        let net = Self::resolve_net(&prog.net, &g.params, Act::LRelu, Act::None, key)?;
+        let real = *g
+            .data
+            .get("real")
+            .ok_or_else(|| anyhow!("artifact '{key}': d_step needs in:real"))?;
+        let fake = *g
+            .data
+            .get("fake")
+            .ok_or_else(|| anyhow!("artifact '{key}': d_step needs in:fake"))?;
+        let batch = *real
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:real has no batch dim"))?;
         anyhow::ensure!(
-            real.numel() == batch * d_in && fake.numel() == real.numel(),
-            "image batch {}x{:?} does not flatten to D input {d_in}",
+            real.numel() == batch * net.in_numel() && fake.numel() == real.numel(),
+            "artifact '{key}': image batch {}x{:?} does not flatten to D input {}",
             batch,
-            &real.shape[1..]
+            &real.shape[1..],
+            net.in_numel()
         );
-        let nout_last = chain.last().unwrap().0.shape[1];
-        anyhow::ensure!(nout_last == 1, "D chain must end in 1 logit, got {nout_last}");
+        anyhow::ensure!(
+            net.out_numel() == 1,
+            "artifact '{key}': D must end in 1 logit/sample, got {}",
+            net.out_numel()
+        );
 
-        let f_r = mlp_forward(&chain, real.data.clone(), batch, Act::LRelu, prog.bf16)?;
-        let f_f = mlp_forward(&chain, fake.data.clone(), batch, Act::LRelu, prog.bf16)?;
-        let rl = f_r.pre.last().unwrap().clone();
-        let fl = f_f.pre.last().unwrap().clone();
+        let f_r = net.forward(&g.params, real.data.clone(), batch, prog.bf16, key)?;
+        let f_f = net.forward(&g.params, fake.data.clone(), batch, prog.bf16, key)?;
+        let rl = f_r.output().to_vec();
+        let fl = f_f.output().to_vec();
         let (loss, drl, dfl) = d_loss_and_grads(prog.loss, &rl, &fl);
-        let (gr, _) = mlp_backward(&chain, &f_r, drl, Act::LRelu, false);
-        let (gf, _) = mlp_backward(&chain, &f_f, dfl, Act::LRelu, false);
+        let (gr, _) = net.backward(&g.params, &f_r, drl, false, key)?;
+        let (gf, _) = net.backward(&g.params, &f_f, dfl, false, key)?;
 
-        // Total grad = real-pass grad + fake-pass grad, flattened to the
-        // param order (w0, b0, w1, b1, ...).
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(g.params.len());
-        for ((mut dwr, mut dbr), (dwf, dbf)) in gr.into_iter().zip(gf) {
-            for (a, b) in dwr.iter_mut().zip(&dwf) {
-                *a += b;
+        // Total grad = real-pass grad + fake-pass grad, aligned with the
+        // param order.
+        let mut grads = gr;
+        for (a, b) in grads.iter_mut().zip(&gf) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
             }
-            for (a, b) in dbr.iter_mut().zip(&dbf) {
-                *a += b;
-            }
-            grads.push(dwr);
-            grads.push(dbr);
         }
 
         let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
@@ -841,30 +816,32 @@ impl RefCpuBackend {
         spec: &ArtifactSpec,
         g: &Gathered,
     ) -> Result<Vec<HostTensor>> {
-        let g_chain = dense_chain(&g.params)?;
-        let d_chain = dense_chain(&g.dparams).context("g_step dparams")?;
-        let z = *g.data.get("z").ok_or_else(|| anyhow!("g_step needs in:z"))?;
-        let batch = *z.shape.first().context("z batch dim")?;
+        let key = &spec.key;
+        let g_net = Self::resolve_net(&prog.net, &g.params, Act::Relu, Act::Tanh, key)?;
+        let d_net = Self::resolve_net(&prog.d_net, &g.dparams, Act::LRelu, Act::None, key)
+            .with_context(|| format!("artifact '{key}': g_step dparams"))?;
+        let z = *g
+            .data
+            .get("z")
+            .ok_or_else(|| anyhow!("artifact '{key}': g_step needs in:z"))?;
+        let batch = *z
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:z has no batch dim"))?;
 
-        let gf = mlp_forward(&g_chain, z.data.clone(), batch, Act::Relu, prog.bf16)?;
-        let images = ops::tanh_vec(gf.pre.last().unwrap());
-        let df = mlp_forward(&d_chain, images.clone(), batch, Act::LRelu, prog.bf16)?;
-        let fl = df.pre.last().unwrap().clone();
+        let gf = g_net.forward(&g.params, z.data.clone(), batch, prog.bf16, key)?;
+        let images = gf.output().to_vec();
+        let df = d_net.forward(&g.dparams, images.clone(), batch, prog.bf16, key)?;
+        let fl = df.output().to_vec();
         let (loss, dfl) = g_loss_and_grad(prog.loss, &fl);
 
         // Back through D (grads discarded — D is a frozen snapshot here),
-        // then through tanh into the G chain.
-        let (_dgrads, dimg) = mlp_backward(&d_chain, &df, dfl, Act::LRelu, true);
-        let dimg = dimg.expect("dx requested");
-        let dpre: Vec<f32> =
-            dimg.iter().zip(&images).map(|(&d, &y)| d * (1.0 - y * y)).collect();
-        let (gg, _) = mlp_backward(&g_chain, &gf, dpre, Act::Relu, false);
+        // then through G's output activation into the G stack.
+        let (_dgrads, dimg) = d_net.backward(&g.dparams, &df, dfl, true, key)?;
+        let dimg = dimg
+            .ok_or_else(|| anyhow!("artifact '{key}': D backward produced no image gradient"))?;
+        let (grads, _) = g_net.backward(&g.params, &gf, dimg, false, key)?;
 
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(g.params.len());
-        for (dw, db) in gg {
-            grads.push(dw);
-            grads.push(db);
-        }
         let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
         self.emit(
             spec,
@@ -874,32 +851,83 @@ impl RefCpuBackend {
         )
     }
 
-    fn run_generate(&self, spec: &ArtifactSpec, g: &Gathered) -> Result<Vec<HostTensor>> {
-        let chain = dense_chain(&g.params)?;
-        let z = *g.data.get("z").ok_or_else(|| anyhow!("generate needs in:z"))?;
-        let batch = *z.shape.first().context("z batch dim")?;
-        let f = mlp_forward(&chain, z.data.clone(), batch, Act::Relu, false)?;
-        let images = ops::tanh_vec(f.pre.last().unwrap());
-        self.emit(spec, Vec::new(), Vec::new(), vec![("images", images)])
+    fn run_generate(
+        &self,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        g: &Gathered,
+    ) -> Result<Vec<HostTensor>> {
+        let key = &spec.key;
+        let net = Self::resolve_net(&prog.net, &g.params, Act::Relu, Act::Tanh, key)?;
+        let z = *g
+            .data
+            .get("z")
+            .ok_or_else(|| anyhow!("artifact '{key}': generate needs in:z"))?;
+        let batch = *z
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:z has no batch dim"))?;
+        let f = net.forward(&g.params, z.data.clone(), batch, false, key)?;
+        self.emit(spec, Vec::new(), Vec::new(), vec![("images", f.output().to_vec())])
     }
 
-    fn run_fid(&self, spec: &ArtifactSpec, g: &Gathered) -> Result<Vec<HostTensor>> {
-        let images = *g.data.get("images").ok_or_else(|| anyhow!("fid needs in:images"))?;
-        let batch = *images.shape.first().context("images batch dim")?;
-        anyhow::ensure!(batch > 0 && images.numel() % batch == 0, "bad image batch");
-        let d_in = images.numel() / batch;
+    fn run_fid(
+        &self,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        g: &Gathered,
+    ) -> Result<Vec<HostTensor>> {
+        let key = &spec.key;
+        let images = *g
+            .data
+            .get("images")
+            .ok_or_else(|| anyhow!("artifact '{key}': fid needs in:images"))?;
+        let batch = *images
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:images has no batch dim"))?;
+        anyhow::ensure!(
+            batch > 0 && images.numel() % batch == 0,
+            "artifact '{key}': bad image batch shape {:?}",
+            images.shape
+        );
         let feat = spec
             .outputs
             .first()
             .and_then(|t| t.shape.get(1))
             .copied()
             .unwrap_or(64);
-        let w = self.fid_projection(d_in, feat);
-        let mut f = ops::matmul(&images.data, batch, d_in, &w, feat);
-        for v in f.iter_mut() {
-            *v = v.tanh();
-        }
+        let f = match prog.fid {
+            FidKind::Conv => {
+                anyhow::ensure!(
+                    images.shape.len() == 4,
+                    "artifact '{key}': conv fid needs NCHW images, got shape {:?}",
+                    images.shape
+                );
+                let (c, h, w) = (images.shape[1], images.shape[2], images.shape[3]);
+                let net = self.fid_conv_net(c, h, w, feat)?;
+                net.features(&images.data, batch)?
+            }
+            FidKind::Projection => {
+                let d_in = images.numel() / batch;
+                let w = self.fid_projection(d_in, feat);
+                let mut f = ops::matmul(&images.data, batch, d_in, &w, feat);
+                for v in f.iter_mut() {
+                    *v = v.tanh();
+                }
+                f
+            }
+        };
         self.emit(spec, Vec::new(), Vec::new(), vec![("features", f)])
+    }
+
+    fn fid_conv_net(&self, c: usize, h: usize, w: usize, feat: usize) -> Result<Rc<FidConvNet>> {
+        if let Some(n) = self.fid_conv_nets.borrow().get(&(c, h, w, feat)) {
+            return Ok(n.clone());
+        }
+        let net = Rc::new(FidConvNet::build(c, h, w, feat)?);
+        self.fid_conv_nets.borrow_mut().insert((c, h, w, feat), net.clone());
+        Ok(net)
     }
 }
 
@@ -923,8 +951,8 @@ impl Backend for RefCpuBackend {
         let out = match prog.kind {
             Kind::DStep => self.run_d_step(&prog, spec, &g),
             Kind::GStep => self.run_g_step(&prog, spec, &g),
-            Kind::Generate => self.run_generate(spec, &g),
-            Kind::FidFeatures => self.run_fid(spec, &g),
+            Kind::Generate => self.run_generate(&prog, spec, &g),
+            Kind::FidFeatures => self.run_fid(&prog, spec, &g),
         }?;
         {
             let mut st = self.stats.borrow_mut();
@@ -1010,8 +1038,9 @@ mod tests {
         HostTensor::new(name, shape, v)
     }
 
-    /// Finite-difference check of the dense-chain backward pass: D loss on
-    /// a tiny 3 -> 4 -> 1 chain, every weight/bias grad vs. central diff.
+    /// Finite-difference check of the dense-chain backward pass (via the
+    /// unified `ConvNet` executor): D loss on a tiny 3 -> 4 -> 1 chain,
+    /// every weight/bias grad vs. central diff.
     #[test]
     fn backward_matches_finite_difference() {
         let mut rng = Rng::new(11);
@@ -1025,38 +1054,32 @@ mod tests {
 
         let loss_of = |params: &[HostTensor]| -> f32 {
             let refs: Vec<&HostTensor> = params.iter().collect();
-            let chain = dense_chain(&refs).unwrap();
-            let f = mlp_forward(&chain, x.clone(), batch, Act::LRelu, false).unwrap();
-            let logits = f.pre.last().unwrap();
-            logits.iter().map(|&l| softplus(-l)).sum::<f32>() / batch as f32
+            let net = ConvNet::dense_from_params(&refs, Act::LRelu, Act::None).unwrap();
+            let f = net.forward(&refs, x.clone(), batch, false, "t").unwrap();
+            f.output().iter().map(|&l| softplus(-l)).sum::<f32>() / batch as f32
         };
 
         let params = vec![w0, b0, w1, b1];
         let refs: Vec<&HostTensor> = params.iter().collect();
-        let chain = dense_chain(&refs).unwrap();
-        let f = mlp_forward(&chain, x.clone(), batch, Act::LRelu, false).unwrap();
-        let logits = f.pre.last().unwrap().clone();
+        let net = ConvNet::dense_from_params(&refs, Act::LRelu, Act::None).unwrap();
+        let f = net.forward(&refs, x.clone(), batch, false, "t").unwrap();
         let dout: Vec<f32> =
-            logits.iter().map(|&l| -sigmoid(-l) / batch as f32).collect();
-        let (grads, _) = mlp_backward(&chain, &f, dout, Act::LRelu, false);
+            f.output().iter().map(|&l| -sigmoid(-l) / batch as f32).collect();
+        let (grads, _) = net.backward(&refs, &f, dout, false, "t").unwrap();
 
         let eps = 3e-3f32;
-        for (li, layer_grads) in grads.iter().enumerate() {
-            let (dw, db) = (&layer_grads.0, &layer_grads.1);
-            for (which, g) in [(0usize, dw), (1usize, db)] {
-                let pi = 2 * li + which;
-                for idx in 0..g.len() {
-                    let mut plus = params.clone();
-                    plus[pi].data[idx] += eps;
-                    let mut minus = params.clone();
-                    minus[pi].data[idx] -= eps;
-                    let fd = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
-                    let an = g[idx];
-                    assert!(
-                        (fd - an).abs() < 5e-2 * (1.0 + fd.abs().max(an.abs())),
-                        "param {pi} idx {idx}: fd {fd} vs analytic {an}"
-                    );
-                }
+        for (pi, g) in grads.iter().enumerate() {
+            for idx in 0..g.len() {
+                let mut plus = params.clone();
+                plus[pi].data[idx] += eps;
+                let mut minus = params.clone();
+                minus[pi].data[idx] -= eps;
+                let fd = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
+                let an = g[idx];
+                assert!(
+                    (fd - an).abs() < 5e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "param {pi} idx {idx}: fd {fd} vs analytic {an}"
+                );
             }
         }
     }
@@ -1180,8 +1203,35 @@ mod tests {
         assert_eq!(p.loss, Loss::Hinge);
         assert_eq!(p.opt, Some(Opt::Lookahead));
         assert!(p.bf16);
+        assert!(p.net.is_none() && p.d_net.is_none());
+        assert_eq!(p.fid, FidKind::Projection);
         assert_eq!(p.hp.b1, 0.0);
         assert!((p.hp.eps - 1e-6).abs() < 1e-12);
         assert!(RefProgram::parse(r#"{"kind":"d_step"}"#).is_err());
+    }
+
+    #[test]
+    fn descriptor_parses_conv_arch() {
+        let p = RefProgram::parse(
+            r#"{"format":"paragan-ref","version":1,"kind":"d_step","loss":"bce",
+                "optimizer":"adam","precision":"fp32",
+                "arch":[
+                  {"op":"conv","cin":3,"cout":8,"k":[4,4],"stride":2,"pad":1,
+                   "act":"lrelu","in_hw":[32,32]},
+                  {"op":"dense","nin":2048,"nout":1,"act":"none","in_hw":[0,0]}]}"#,
+        )
+        .unwrap();
+        let net = p.net.unwrap();
+        assert_eq!(net.layers.len(), 2);
+        assert_eq!(net.in_numel(), 3 * 32 * 32);
+        assert_eq!(net.out_numel(), 1);
+        // A malformed arch is a structured error, not a panic.
+        let err = RefProgram::parse(
+            r#"{"format":"paragan-ref","kind":"d_step",
+                "arch":[{"op":"warp","act":"none"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("arch"), "{err}");
     }
 }

@@ -2,35 +2,62 @@
 //! for the `RefCpuBackend`.
 //!
 //! Writes a `manifest.json` (same schema `runtime::artifact` parses) plus a
-//! `.ref.json` descriptor per artifact, describing MLP GAN backbones whose
-//! step programs the reference backend can execute natively: a dense G
-//! (relu hidden, tanh out) against a dense D (lrelu hidden, 1 logit).  The
-//! artifact set mirrors the real exporter's: `d_step_<opt>_<prec>` /
+//! `.ref.json` descriptor per artifact.  Two backbone families are
+//! exported:
+//!
+//! * **MLP** (`refmlp`, `refhinge`) — dense G (relu hidden, tanh out)
+//!   against a dense D (lrelu hidden, 1 logit); descriptors carry no
+//!   `arch`, topology is recovered from the param roles (the original
+//!   scheme).
+//! * **Conv** (`dcgan32`, `sngan32`) — real DCGAN-shaped stacks executed
+//!   natively by `runtime::ref_conv`: G is dense z -> 4x4 seed ->
+//!   BatchNorm/ReLU ConvTranspose pyramid -> nearest-upsample + conv ->
+//!   tanh; D is a stride-2 conv stack with BatchNorm/LeakyReLU and a dense
+//!   1-logit head.  Their descriptors embed the layer list in an `arch`
+//!   section (plus `d_arch` for g_step), and `fid_features` is flagged
+//!   `"fid":"conv"` so FID statistics come from the fixed random conv
+//!   feature net instead of the MLP projection stand-in.
+//!
+//! `.ref.json` conv descriptor schema (see also the README "Backends"
+//! section): `arch` is an array of layers, each
+//! `{"op":"dense|conv|conv_t|bn|upsample", "act":"none|relu|lrelu|tanh",
+//! "in_hw":[h,w], ...}` with op-specific fields — dense `nin`/`nout`, conv
+//! and conv_t `cin`/`cout`/`k:[kh,kw]`/`stride`/`pad`, bn `c`, upsample
+//! `c`/`factor`.  Activations are NCHW; conv weights OIHW; conv_t weights
+//! `[cin, cout, kh, kw]` (the gradient-of-conv convention, matching
+//! `ref.py`).  Param tensors appear in layer order, `(w, b)` per
+//! dense/conv/conv_t layer and `(gamma, beta)` per bn layer.
+//!
+//! The artifact set mirrors the real exporter's: `d_step_<opt>_<prec>` /
 //! `g_step_<opt>_<prec>` per exported optimizer, `generate_fp32`, and
 //! `fid_features` — so every trainer, the evaluator, and the policy
-//! validation run unchanged against either artifact family.
-//!
-//! Two backbones are exported:
-//!
-//! * `refmlp`   — BCE loss, the full optimizer zoo + bf16 variants (the
-//!   `dcgan32` stand-in for Fig. 6-style sweeps);
-//! * `refhinge` — hinge loss, adam/adabelief (the `sngan32` stand-in).
+//! validation run unchanged against any artifact family.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::ref_conv::{Act, ConvNet, Layer, LayerOp};
+use crate::layout::cost::LayerShape;
 use crate::util::json::{arr, num, obj, s, write_json, Json};
 
-/// One exportable MLP GAN backbone.
+/// Network topology family of one exportable backbone.
+#[derive(Debug, Clone)]
+pub enum RefBackbone {
+    /// Dense G/D; topology recovered from param roles at execution time.
+    Mlp { g_hidden: usize, d_hidden: usize },
+    /// Explicit conv layer lists, embedded in the descriptors as `arch`.
+    Conv { g: ConvNet, d: ConvNet },
+}
+
+/// One exportable GAN backbone.
 #[derive(Debug, Clone)]
 pub struct RefModelSpec {
     pub name: &'static str,
     pub loss: &'static str,
     pub z_dim: usize,
     pub img_shape: [usize; 3],
-    pub g_hidden: usize,
-    pub d_hidden: usize,
+    pub backbone: RefBackbone,
     pub opts: Vec<&'static str>,
     pub bf16_opts: Vec<&'static str>,
 }
@@ -48,6 +75,95 @@ impl RefModelSpec {
             0.0
         }
     }
+
+    fn is_conv(&self) -> bool {
+        matches!(self.backbone, RefBackbone::Conv { .. })
+    }
+}
+
+/// The dcgan32 generator: z -> dense 4x4 seed -> BN/ReLU -> two stride-2
+/// ConvTranspose stages -> nearest upsample -> 3x3 conv -> tanh, producing
+/// 3x32x32 images.  Channels are sized so debug-mode CI can train it.
+pub fn dcgan32_g_net(z_dim: usize) -> ConvNet {
+    ConvNet::new(vec![
+        Layer { op: LayerOp::Dense { nin: z_dim, nout: 16 * 4 * 4 }, act: Act::None, in_hw: (0, 0) },
+        Layer { op: LayerOp::BatchNorm { c: 16 }, act: Act::Relu, in_hw: (4, 4) },
+        Layer {
+            op: LayerOp::ConvT { cin: 16, cout: 8, kh: 4, kw: 4, stride: 2, pad: 1 },
+            act: Act::None,
+            in_hw: (4, 4),
+        },
+        Layer { op: LayerOp::BatchNorm { c: 8 }, act: Act::Relu, in_hw: (8, 8) },
+        Layer {
+            op: LayerOp::ConvT { cin: 8, cout: 4, kh: 4, kw: 4, stride: 2, pad: 1 },
+            act: Act::None,
+            in_hw: (8, 8),
+        },
+        Layer { op: LayerOp::BatchNorm { c: 4 }, act: Act::Relu, in_hw: (16, 16) },
+        Layer { op: LayerOp::Upsample { c: 4, factor: 2 }, act: Act::None, in_hw: (16, 16) },
+        Layer {
+            op: LayerOp::Conv { cin: 4, cout: 3, kh: 3, kw: 3, stride: 1, pad: 1 },
+            act: Act::Tanh,
+            in_hw: (32, 32),
+        },
+    ])
+    .expect("dcgan32 G arch is consistent")
+}
+
+/// The dcgan32 discriminator: stride-2 4x4 conv stack with BatchNorm and
+/// LeakyReLU, dense 1-logit head.
+pub fn dcgan32_d_net() -> ConvNet {
+    ConvNet::new(vec![
+        Layer {
+            op: LayerOp::Conv { cin: 3, cout: 8, kh: 4, kw: 4, stride: 2, pad: 1 },
+            act: Act::LRelu,
+            in_hw: (32, 32),
+        },
+        Layer {
+            op: LayerOp::Conv { cin: 8, cout: 16, kh: 4, kw: 4, stride: 2, pad: 1 },
+            act: Act::None,
+            in_hw: (16, 16),
+        },
+        Layer { op: LayerOp::BatchNorm { c: 16 }, act: Act::LRelu, in_hw: (8, 8) },
+        Layer {
+            op: LayerOp::Conv { cin: 16, cout: 32, kh: 4, kw: 4, stride: 2, pad: 1 },
+            act: Act::None,
+            in_hw: (8, 8),
+        },
+        Layer { op: LayerOp::BatchNorm { c: 32 }, act: Act::LRelu, in_hw: (4, 4) },
+        Layer { op: LayerOp::Dense { nin: 32 * 4 * 4, nout: 1 }, act: Act::None, in_hw: (0, 0) },
+    ])
+    .expect("dcgan32 D arch is consistent")
+}
+
+pub const DCGAN32_Z_DIM: usize = 64;
+
+/// The `dcgan32` export spec — BCE loss, adam/adabelief/radam (+ bf16
+/// adam/adabelief), the conv model quickstart and Fig. 6 run.
+pub fn dcgan32_model() -> RefModelSpec {
+    RefModelSpec {
+        name: "dcgan32",
+        loss: "bce",
+        z_dim: DCGAN32_Z_DIM,
+        img_shape: [3, 32, 32],
+        backbone: RefBackbone::Conv { g: dcgan32_g_net(DCGAN32_Z_DIM), d: dcgan32_d_net() },
+        opts: vec!["adam", "adabelief", "radam"],
+        bf16_opts: vec!["adam", "adabelief"],
+    }
+}
+
+/// The `sngan32` export spec — same conv stacks under a hinge loss (the
+/// Fig. 13 model); adam/adabelief so the asymmetric policy runs.
+pub fn sngan32_model() -> RefModelSpec {
+    RefModelSpec {
+        name: "sngan32",
+        loss: "hinge",
+        z_dim: DCGAN32_Z_DIM,
+        img_shape: [3, 32, 32],
+        backbone: RefBackbone::Conv { g: dcgan32_g_net(DCGAN32_Z_DIM), d: dcgan32_d_net() },
+        opts: vec!["adam", "adabelief"],
+        bf16_opts: vec![],
+    }
 }
 
 /// The default export set (see module docs).
@@ -58,8 +174,7 @@ pub fn default_models() -> Vec<RefModelSpec> {
             loss: "bce",
             z_dim: 32,
             img_shape: [3, 8, 8],
-            g_hidden: 64,
-            d_hidden: 64,
+            backbone: RefBackbone::Mlp { g_hidden: 64, d_hidden: 64 },
             opts: vec!["adam", "adabelief", "radam", "lookahead", "lars"],
             bf16_opts: vec!["adam", "adabelief"],
         },
@@ -68,16 +183,44 @@ pub fn default_models() -> Vec<RefModelSpec> {
             loss: "hinge",
             z_dim: 32,
             img_shape: [3, 8, 8],
-            g_hidden: 64,
-            d_hidden: 64,
+            backbone: RefBackbone::Mlp { g_hidden: 64, d_hidden: 64 },
             opts: vec!["adam", "adabelief"],
             bf16_opts: vec![],
         },
+        dcgan32_model(),
+        sngan32_model(),
     ]
 }
 
 pub const REF_BATCH: usize = 8;
 pub const REF_FID_FEAT_DIM: usize = 64;
+
+/// im2col matmul shapes of a conv arch for the layout/utilization model
+/// (`layout::cost::LayerShape`) — the utilization model and the executable
+/// model derive from the SAME layer list, so they cannot drift apart.
+/// BatchNorm/upsample are vector ops with no matmul and contribute no
+/// entry; `repeats` is the fwd+bwd multiplier (3 = fwd + dgrad + wgrad).
+pub fn arch_layer_shapes(net: &ConvNet, prefix: &str, repeats: usize) -> Vec<LayerShape> {
+    let mut out = Vec::new();
+    for (i, l) in net.layers.iter().enumerate() {
+        let name = format!("{prefix}.{}{i}", l.op_name().replace('_', ""));
+        let mut shape = match l.op {
+            LayerOp::Dense { nin, nout } => LayerShape::dense(&name, nin, nout),
+            LayerOp::Conv { cin, cout, kh, kw, .. } => {
+                LayerShape::conv_rect(&name, cin, cout, (kh, kw), l.out_hw())
+            }
+            LayerOp::ConvT { cin, cout, kh, kw, .. } => {
+                // The transposed conv's im2col matmul also has one row per
+                // OUTPUT position and K = cin*kh*kw.
+                LayerShape::conv_rect(&name, cin, cout, (kh, kw), l.out_hw())
+            }
+            LayerOp::BatchNorm { .. } | LayerOp::Upsample { .. } => continue,
+        };
+        shape.repeats = repeats;
+        out.push(shape);
+    }
+    out
+}
 
 fn n_slots(opt: &str) -> usize {
     // Derived from the executor so exporter and backend cannot diverge.
@@ -98,21 +241,27 @@ fn param_entry(name: &str, shape: &[usize], init: &str) -> Json {
 
 /// (name, shape, init) param specs for the G network.
 fn g_params(m: &RefModelSpec) -> Vec<(String, Vec<usize>, &'static str)> {
-    vec![
-        ("g.fc1.w".into(), vec![m.z_dim, m.g_hidden], "normal:0.05"),
-        ("g.fc1.b".into(), vec![m.g_hidden], "zeros"),
-        ("g.fc2.w".into(), vec![m.g_hidden, m.img_numel()], "normal:0.05"),
-        ("g.fc2.b".into(), vec![m.img_numel()], "zeros"),
-    ]
+    match &m.backbone {
+        RefBackbone::Mlp { g_hidden, .. } => vec![
+            ("g.fc1.w".into(), vec![m.z_dim, *g_hidden], "normal:0.05"),
+            ("g.fc1.b".into(), vec![*g_hidden], "zeros"),
+            ("g.fc2.w".into(), vec![*g_hidden, m.img_numel()], "normal:0.05"),
+            ("g.fc2.b".into(), vec![m.img_numel()], "zeros"),
+        ],
+        RefBackbone::Conv { g, .. } => g.param_defs("g"),
+    }
 }
 
 fn d_params(m: &RefModelSpec) -> Vec<(String, Vec<usize>, &'static str)> {
-    vec![
-        ("d.fc1.w".into(), vec![m.img_numel(), m.d_hidden], "normal:0.05"),
-        ("d.fc1.b".into(), vec![m.d_hidden], "zeros"),
-        ("d.fc2.w".into(), vec![m.d_hidden, 1], "normal:0.05"),
-        ("d.fc2.b".into(), vec![1], "zeros"),
-    ]
+    match &m.backbone {
+        RefBackbone::Mlp { d_hidden, .. } => vec![
+            ("d.fc1.w".into(), vec![m.img_numel(), *d_hidden], "normal:0.05"),
+            ("d.fc1.b".into(), vec![*d_hidden], "zeros"),
+            ("d.fc2.w".into(), vec![*d_hidden, 1], "normal:0.05"),
+            ("d.fc2.b".into(), vec![1], "zeros"),
+        ],
+        RefBackbone::Conv { d, .. } => d.param_defs("d"),
+    }
 }
 
 fn spec_entries(prefix: &str, params: &[(String, Vec<usize>, &'static str)]) -> Vec<Json> {
@@ -130,7 +279,16 @@ fn slot_entries(params: &[(String, Vec<usize>, &'static str)], slots: usize) -> 
     out
 }
 
+/// Extra descriptor fields of one program: network archs + fid routing.
+#[derive(Default)]
+struct DescNets<'a> {
+    arch: Option<&'a ConvNet>,
+    d_arch: Option<&'a ConvNet>,
+    fid: Option<&'a str>,
+}
+
 /// Write one `.ref.json` descriptor; returns the artifact manifest record.
+#[allow(clippy::too_many_arguments)]
 fn write_descriptor(
     dir: &Path,
     file: &str,
@@ -138,6 +296,7 @@ fn write_descriptor(
     m: &RefModelSpec,
     opt: Option<&str>,
     prec: &str,
+    nets: DescNets,
     inputs: Vec<Json>,
     outputs: Vec<Json>,
 ) -> Result<Json> {
@@ -166,6 +325,15 @@ fn write_descriptor(
     if let Some(o) = opt {
         fields.push(("optimizer", s(o)));
     }
+    if let Some(a) = nets.arch {
+        fields.push(("arch", a.to_json()));
+    }
+    if let Some(a) = nets.d_arch {
+        fields.push(("d_arch", a.to_json()));
+    }
+    if let Some(f) = nets.fid {
+        fields.push(("fid", s(f)));
+    }
     let mut text = String::new();
     write_json(&obj(fields), &mut text);
     let path = dir.join(file);
@@ -180,6 +348,10 @@ fn write_descriptor(
 fn export_model(dir: &Path, m: &RefModelSpec, batch: usize) -> Result<Json> {
     let gp = g_params(m);
     let dp = d_params(m);
+    let (g_net, d_net) = match &m.backbone {
+        RefBackbone::Conv { g, d } => (Some(g), Some(d)),
+        RefBackbone::Mlp { .. } => (None, None),
+    };
     let img = {
         let mut v = vec![batch];
         v.extend_from_slice(&m.img_shape);
@@ -222,7 +394,17 @@ fn export_model(dir: &Path, m: &RefModelSpec, batch: usize) -> Result<Json> {
             let file = format!("{}_{key}.ref.json", m.name);
             artifacts.push((
                 key,
-                write_descriptor(dir, &file, "d_step", m, Some(opt), prec, inputs, outputs)?,
+                write_descriptor(
+                    dir,
+                    &file,
+                    "d_step",
+                    m,
+                    Some(opt),
+                    prec,
+                    DescNets { arch: d_net, ..Default::default() },
+                    inputs,
+                    outputs,
+                )?,
             ));
 
             // ---- g_step ----
@@ -239,7 +421,21 @@ fn export_model(dir: &Path, m: &RefModelSpec, batch: usize) -> Result<Json> {
             let file = format!("{}_{key}.ref.json", m.name);
             artifacts.push((
                 key,
-                write_descriptor(dir, &file, "g_step", m, Some(opt), prec, inputs, outputs)?,
+                write_descriptor(
+                    dir,
+                    &file,
+                    "g_step",
+                    m,
+                    Some(opt),
+                    prec,
+                    DescNets {
+                        arch: g_net,
+                        d_arch: d_net,
+                        ..Default::default()
+                    },
+                    inputs,
+                    outputs,
+                )?,
             ));
         }
     }
@@ -251,7 +447,17 @@ fn export_model(dir: &Path, m: &RefModelSpec, batch: usize) -> Result<Json> {
     let file = format!("{}_generate_fp32.ref.json", m.name);
     artifacts.push((
         "generate_fp32".to_string(),
-        write_descriptor(dir, &file, "generate", m, None, "fp32", inputs, outputs)?,
+        write_descriptor(
+            dir,
+            &file,
+            "generate",
+            m,
+            None,
+            "fp32",
+            DescNets { arch: g_net, ..Default::default() },
+            inputs,
+            outputs,
+        )?,
     ));
 
     // ---- fid_features ----
@@ -260,7 +466,17 @@ fn export_model(dir: &Path, m: &RefModelSpec, batch: usize) -> Result<Json> {
     let file = format!("{}_fid_features.ref.json", m.name);
     artifacts.push((
         "fid_features".to_string(),
-        write_descriptor(dir, &file, "fid_features", m, None, "fp32", inputs, outputs)?,
+        write_descriptor(
+            dir,
+            &file,
+            "fid_features",
+            m,
+            None,
+            "fp32",
+            DescNets { fid: m.is_conv().then_some("conv"), ..Default::default() },
+            inputs,
+            outputs,
+        )?,
     ));
 
     Ok(obj(vec![
@@ -358,5 +574,56 @@ mod tests {
         assert!(hinge.artifacts.contains_key("g_step_adabelief_fp32"));
         assert!(!hinge.artifacts.contains_key("d_step_adam_bf16"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exported_conv_models_carry_archs_and_match_param_defs() {
+        let dir =
+            std::env::temp_dir().join(format!("paragan-refgen-conv-{}", std::process::id()));
+        write_ref_artifacts(&dir).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("dcgan32").unwrap();
+        assert_eq!(model.z_dim, DCGAN32_Z_DIM);
+        assert_eq!(model.img_shape, vec![3, 32, 32]);
+        assert_eq!(model.loss, "bce");
+        for opt in ["adam", "adabelief", "radam"] {
+            assert!(model.artifacts.contains_key(&format!("d_step_{opt}_fp32")), "{opt}");
+            assert!(model.artifacts.contains_key(&format!("g_step_{opt}_fp32")), "{opt}");
+        }
+        assert!(model.artifacts.contains_key("d_step_adam_bf16"));
+        // Manifest param counts equal the arch's own accounting.
+        assert_eq!(model.n_params_g(), dcgan32_g_net(DCGAN32_Z_DIM).param_numel());
+        assert_eq!(model.n_params_d(), dcgan32_d_net().param_numel());
+        // Conv weights are rank-4 OIHW in the manifest.
+        let conv_w = model.params_d.iter().find(|p| p.name == "d.conv0.w").unwrap();
+        assert_eq!(conv_w.shape, vec![8, 3, 4, 4]);
+        // fid_features is routed through the conv feature net.
+        let text = std::fs::read_to_string(dir.join("dcgan32_fid_features.ref.json")).unwrap();
+        assert!(text.contains("\"fid\":\"conv\""), "{text}");
+        // d_step embeds the D arch; g_step embeds both.
+        let text = std::fs::read_to_string(dir.join("dcgan32_g_step_adam_fp32.ref.json")).unwrap();
+        assert!(text.contains("\"arch\"") && text.contains("\"d_arch\""));
+        assert!(text.contains("\"conv_t\""));
+
+        let sn = m.model("sngan32").unwrap();
+        assert_eq!(sn.loss, "hinge");
+        assert!(sn.artifacts.contains_key("g_step_adabelief_fp32"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn layout_shapes_derive_from_the_executable_arch() {
+        let g = dcgan32_g_net(DCGAN32_Z_DIM);
+        let shapes = arch_layer_shapes(&g, "g", 3);
+        // dense + convt + convt + conv carry matmuls; bn/upsample do not.
+        assert_eq!(shapes.len(), 4);
+        let convt = shapes.iter().find(|s| s.name == "g.convt2").unwrap();
+        assert_eq!(convt.m_per_sample, 8 * 8);
+        assert_eq!(convt.k, 16 * 4 * 4);
+        assert_eq!(convt.n, 8);
+        assert_eq!(convt.repeats, 3);
+        let d_shapes = arch_layer_shapes(&dcgan32_d_net(), "d", 3);
+        let head = d_shapes.last().unwrap();
+        assert_eq!((head.m_per_sample, head.k, head.n), (1, 512, 1));
     }
 }

@@ -25,24 +25,45 @@ pub const DEFAULT_CASES: usize = 256;
 /// pid-suffixed dir and atomically rename it into place; losing the
 /// publish race just means adopting the winner's copy, so parallel
 /// `cargo test` binaries neither race nor accumulate per-pid directories.
+///
+/// The `-v2` suffix versions the artifact SCHEMA (v2 added the conv
+/// backbones + `arch` descriptors).  Staleness is not left to the suffix
+/// alone: a cached copy is only adopted after its manifest actually lists
+/// every model the current `refgen::default_models()` exports, so a
+/// forgotten bump regenerates instead of silently serving old artifacts.
 pub fn ref_artifact_dir() -> std::path::PathBuf {
     use std::sync::OnceLock;
     static DIR: OnceLock<std::path::PathBuf> = OnceLock::new();
+
+    fn cache_is_current(dir: &std::path::Path) -> bool {
+        crate::runtime::Manifest::load(dir)
+            .map(|m| {
+                crate::runtime::refgen::default_models()
+                    .iter()
+                    .all(|spec| m.models.contains_key(spec.name))
+            })
+            .unwrap_or(false)
+    }
+
     DIR.get_or_init(|| {
-        let base = std::env::temp_dir().join("paragan-ref-artifacts-v1");
-        if base.join("manifest.json").exists() {
+        let base = std::env::temp_dir().join("paragan-ref-artifacts-v2");
+        if cache_is_current(&base) {
             return base;
         }
         let staging = std::env::temp_dir()
-            .join(format!("paragan-ref-artifacts-v1.{}", std::process::id()));
+            .join(format!("paragan-ref-artifacts-v2.{}", std::process::id()));
         crate::runtime::refgen::write_ref_artifacts(&staging)
             .expect("writing reference artifacts");
+        // Evict a stale occupant (missing models) before publishing.
+        if base.exists() && !cache_is_current(&base) {
+            let _ = std::fs::remove_dir_all(&base);
+        }
         match std::fs::rename(&staging, &base) {
             Ok(()) => base,
-            // Rename fails when another process already published `base`
-            // (or a stale dir occupies it): adopt theirs if complete,
-            // otherwise keep serving our staging copy.
-            Err(_) if base.join("manifest.json").exists() => {
+            // Rename fails when another process already published `base`:
+            // adopt theirs if complete and current, otherwise keep serving
+            // our staging copy.
+            Err(_) if cache_is_current(&base) => {
                 let _ = std::fs::remove_dir_all(&staging);
                 base
             }
@@ -54,14 +75,25 @@ pub fn ref_artifact_dir() -> std::path::PathBuf {
 
 /// Pick real AOT artifacts when this build can execute them (pjrt feature
 /// compiled in AND `make artifacts` has run), else the generated reference
-/// set — the shared fallback branch of the repro tests and examples.
-pub fn artifacts_for(real_model: &str, ref_model: &str) -> (std::path::PathBuf, String) {
+/// set — then resolve `model` IN the chosen set.  Since the reference set
+/// exports real `dcgan32`/`sngan32` conv artifacts, the requested model is
+/// what actually runs; an unknown model is a hard error listing what IS
+/// available, never a silent substitution.
+pub fn artifacts_for(model: &str) -> anyhow::Result<(std::path::PathBuf, String)> {
     let real = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if cfg!(feature = "pjrt") && real.join("manifest.json").exists() {
-        (real, real_model.to_string())
+    let dir = if cfg!(feature = "pjrt") && real.join("manifest.json").exists() {
+        real
     } else {
-        (ref_artifact_dir(), ref_model.to_string())
-    }
+        ref_artifact_dir()
+    };
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    anyhow::ensure!(
+        manifest.models.contains_key(model),
+        "model '{model}' is not in the artifact set at {dir:?} (available: {:?}); \
+         refusing to substitute a different backbone",
+        manifest.models.keys().collect::<Vec<_>>()
+    );
+    Ok((dir, model.to_string()))
 }
 
 /// A generator produces a value from entropy and knows how to shrink it.

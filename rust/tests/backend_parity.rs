@@ -4,10 +4,13 @@
 //! `python/tools/gen_golden.py` from `python/compile/kernels/ref.py` — the
 //! same reference semantics the Pallas kernels are tested against.  Inputs
 //! are regenerated here from a bit-identical 64-bit LCG (no binary fixture
-//! exchange), so a mismatch can only mean diverging kernel math.
+//! exchange), so a mismatch can only mean diverging kernel math.  Covers
+//! matmul plus the conv op set (im2col conv2d, transposed conv, BatchNorm
+//! train + inference, nearest upsample).
 //! `python/tests/test_golden_parity.py` guards the file from the other
 //! side.
 
+use paragan::runtime::ref_conv;
 use paragan::runtime::ref_cpu::ops;
 use paragan::util::json;
 
@@ -80,6 +83,155 @@ fn ref_cpu_matmul_matches_python_reference_kernels() {
                 "seed {seed} [{i}]: rust {a} vs ref.py {b}"
             );
         }
+    }
+}
+
+/// Pull a golden case's flat f32 output.
+fn case_y(case: &json::Json) -> Vec<f32> {
+    case.get("y")
+        .as_arr()
+        .expect("y array")
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn case_usize(case: &json::Json, key: &str) -> usize {
+    case.get(key).as_usize().unwrap_or_else(|| panic!("missing '{key}'"))
+}
+
+/// XLA's conv reductions and our im2col matmuls accumulate in different
+/// orders; 1e-4 relative covers the f32 reassociation drift.
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "{what}[{i}]: rust {a} vs ref.py {b}"
+        );
+    }
+}
+
+#[test]
+fn ref_conv2d_matches_python_reference_kernels() {
+    let g = golden();
+    let cases = g.get("conv2d").as_arr().expect("conv2d cases — regenerate the golden file");
+    assert!(!cases.is_empty());
+    for case in cases {
+        let seed = case_usize(case, "seed") as u64;
+        let (b, cin, ih, iw) = (
+            case_usize(case, "b"),
+            case_usize(case, "cin"),
+            case_usize(case, "ih"),
+            case_usize(case, "iw"),
+        );
+        let (cout, k, stride, pad) = (
+            case_usize(case, "cout"),
+            case_usize(case, "k"),
+            case_usize(case, "stride"),
+            case_usize(case, "pad"),
+        );
+        let mut lcg = Lcg(seed);
+        let x = lcg.fill(b * cin * ih * iw);
+        let w = lcg.fill(cout * cin * k * k);
+        let bias = lcg.fill(cout);
+        let s = ref_conv::Conv2dShape {
+            batch: b,
+            cin,
+            ih,
+            iw,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+        };
+        let got = ref_conv::conv2d(&s, &x, &w, Some(&bias), false);
+        assert_close(&got, &case_y(case), &format!("conv2d seed {seed}"));
+    }
+}
+
+#[test]
+fn ref_conv_transpose_matches_python_reference_kernels() {
+    let g = golden();
+    let cases = g.get("conv2d_transpose").as_arr().expect("conv2d_transpose cases");
+    assert!(!cases.is_empty());
+    for case in cases {
+        let seed = case_usize(case, "seed") as u64;
+        let (b, cin, ih, iw) = (
+            case_usize(case, "b"),
+            case_usize(case, "cin"),
+            case_usize(case, "ih"),
+            case_usize(case, "iw"),
+        );
+        let (cout, k, stride, pad) = (
+            case_usize(case, "cout"),
+            case_usize(case, "k"),
+            case_usize(case, "stride"),
+            case_usize(case, "pad"),
+        );
+        let mut lcg = Lcg(seed);
+        let x = lcg.fill(b * cin * ih * iw);
+        let w = lcg.fill(cin * cout * k * k);
+        let bias = lcg.fill(cout);
+        let s =
+            ref_conv::ConvT2dShape { batch: b, cin, ih, iw, cout, kh: k, kw: k, stride, pad };
+        let got = ref_conv::conv_transpose2d(&s, &x, &w, Some(&bias), false);
+        assert_close(&got, &case_y(case), &format!("conv_t seed {seed}"));
+    }
+}
+
+#[test]
+fn ref_batchnorm_matches_python_reference_kernels() {
+    let g = golden();
+    let cases = g.get("batchnorm").as_arr().expect("batchnorm cases");
+    let mut saw_inference = false;
+    for case in cases {
+        let seed = case_usize(case, "seed") as u64;
+        let (b, c, h, w) = (
+            case_usize(case, "b"),
+            case_usize(case, "c"),
+            case_usize(case, "h"),
+            case_usize(case, "w"),
+        );
+        let mode = case.get("mode").as_str().unwrap_or("train");
+        let mut lcg = Lcg(seed);
+        let x = lcg.fill(b * c * h * w);
+        let gamma = lcg.fill(c);
+        let beta = lcg.fill(c);
+        let got = if mode == "inference" {
+            saw_inference = true;
+            let mean = lcg.fill(c);
+            // var = |draw| + 0.5, mirrored in gen_golden.py.
+            let var: Vec<f32> = lcg.fill(c).iter().map(|v| v.abs() + 0.5).collect();
+            ref_conv::bn_apply(&x, &gamma, &beta, &mean, &var, b, c, h * w, ref_conv::BN_EPS)
+        } else {
+            let (mean, var) = ref_conv::bn_stats(&x, b, c, h * w);
+            ref_conv::bn_apply(&x, &gamma, &beta, &mean, &var, b, c, h * w, ref_conv::BN_EPS)
+        };
+        assert_close(&got, &case_y(case), &format!("batchnorm[{mode}] seed {seed}"));
+    }
+    assert!(saw_inference, "golden set lost its inference-mode batchnorm case");
+}
+
+#[test]
+fn ref_upsample_matches_python_reference_kernels() {
+    let g = golden();
+    let cases = g.get("upsample").as_arr().expect("upsample cases");
+    for case in cases {
+        let seed = case_usize(case, "seed") as u64;
+        let (b, c, h, w, f) = (
+            case_usize(case, "b"),
+            case_usize(case, "c"),
+            case_usize(case, "h"),
+            case_usize(case, "w"),
+            case_usize(case, "factor"),
+        );
+        let mut lcg = Lcg(seed);
+        let x = lcg.fill(b * c * h * w);
+        let got = ref_conv::upsample_nearest(&x, b, c, h, w, f);
+        assert_close(&got, &case_y(case), &format!("upsample seed {seed}"));
     }
 }
 

@@ -40,7 +40,7 @@ fn tiny_cfg(model: &str, steps: u64) -> TrainConfig {
 #[test]
 fn manifest_loads_and_lists_models() {
     let m = Manifest::load(ref_artifact_dir()).unwrap();
-    for name in ["refmlp", "refhinge"] {
+    for name in ["refmlp", "refhinge", "dcgan32", "sngan32"] {
         let model = m.model(name).unwrap();
         assert!(model.artifacts.contains_key("generate_fp32"), "{name}");
         assert!(model.artifacts.contains_key("fid_features"), "{name}");
@@ -55,6 +55,22 @@ fn manifest_loads_and_lists_models() {
     // bf16 variants exist for the asymmetric pair.
     assert!(d.artifacts.contains_key("d_step_adam_bf16"));
     assert!(d.artifacts.contains_key("g_step_adabelief_bf16"));
+    // The conv backbone is the real dcgan32 (32x32 images, conv params).
+    let c = m.model("dcgan32").unwrap();
+    assert_eq!(c.img_shape, vec![3, 32, 32]);
+    assert!(c.params_d.iter().any(|p| p.shape.len() == 4), "no rank-4 conv weights");
+}
+
+#[test]
+fn artifacts_for_resolves_conv_models_and_rejects_unknown() {
+    // dcgan32 resolves to itself — no refmlp substitution.
+    let (_, model) = paragan::testkit::artifacts_for("dcgan32").unwrap();
+    assert_eq!(model, "dcgan32");
+    let (_, model) = paragan::testkit::artifacts_for("sngan32").unwrap();
+    assert_eq!(model, "sngan32");
+    // An unknown model is a hard error naming the available set.
+    let err = paragan::testkit::artifacts_for("biggan9000").unwrap_err().to_string();
+    assert!(err.contains("biggan9000") && err.contains("dcgan32"), "{err}");
 }
 
 #[test]
@@ -207,6 +223,96 @@ fn estimator_api_end_to_end() {
     assert_eq!(res.steps, 6);
     assert!(res.images_seen >= 6 * 8);
     assert!(res.g_loss.points.iter().all(|p| p.value.is_finite()));
+}
+
+/// The acceptance smoke test for the conv backend: full SYNC training on
+/// dcgan32 — real conv G/D steps (im2col conv, transposed conv, BatchNorm,
+/// nearest upsample) end-to-end through the coordinator.
+#[test]
+fn dcgan32_sync_training_runs_conv_steps_end_to_end() {
+    let cfg = tiny_cfg("dcgan32", 3);
+    let res = paragan::coordinator::train_sync(&cfg).unwrap();
+    assert_eq!(res.g_loss.points.len(), 3);
+    assert!(res.g_loss.points.iter().all(|p| p.value.is_finite()));
+    assert!(res.d_loss.points.iter().all(|p| p.value.is_finite()));
+    assert!(res.final_fid().is_finite());
+    assert!(res.images_seen >= 3 * 8);
+}
+
+/// And the ASYNC scheme: decoupled conv G/D with img_buff + snapshots.
+#[test]
+fn dcgan32_async_training_runs_conv_steps_end_to_end() {
+    let cfg = tiny_cfg("dcgan32", 3);
+    let res = paragan::coordinator::train_async(&cfg).unwrap();
+    assert_eq!(res.g_loss.points.len(), 3);
+    assert!(!res.d_loss.points.is_empty(), "D never stepped");
+    assert!(res.g_loss.points.iter().all(|p| p.value.is_finite()));
+    assert!(res.d_loss.points.iter().all(|p| p.value.is_finite()));
+    assert!(res.mean_staleness >= 0.0);
+}
+
+/// dcgan32 generation produces tanh-bounded NCHW 32x32 images through the
+/// conv stack, and `fid_features` extracts CONV features (not the MLP
+/// projection): permuting an image's pixels must change its features,
+/// which a pure flat projection net would only do by coincidence of
+/// weights, and FID statistics over them must survive a Newton–Schulz
+/// square root on a near-singular covariance (few samples, 64 dims).
+#[test]
+fn dcgan32_generate_and_conv_fid_features() {
+    use paragan::metrics::fid::{frechet_distance, FeatureStats};
+    let dir = ref_artifact_dir();
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.model("dcgan32").unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(3);
+    let g_params = ParamStore::init(&model.params_g, &mut rng);
+    let mut data = std::collections::BTreeMap::new();
+    data.insert(
+        "z".to_string(),
+        paragan::coordinator::trainer::sample_z(&mut rng, model.batch, model.z_dim),
+    );
+    let out = paragan::runtime::run_inference(
+        &rt,
+        model.artifact("generate_fp32").unwrap(),
+        &g_params,
+        &data,
+    )
+    .unwrap();
+    let images = out["images"].clone();
+    assert_eq!(images.shape, vec![model.batch, 3, 32, 32]);
+    assert!(images.data.iter().all(|x| x.is_finite() && x.abs() <= 1.0));
+
+    let fid_spec = model.artifact("fid_features").unwrap();
+    let feats = |imgs: &paragan::runtime::HostTensor| {
+        let mut d = std::collections::BTreeMap::new();
+        d.insert("images".to_string(), imgs.clone());
+        paragan::runtime::run_inference(&rt, fid_spec, &ParamStore::new(), &d).unwrap()
+            ["features"]
+            .clone()
+    };
+    let f1 = feats(&images);
+    assert_eq!(f1.shape, vec![model.batch, model.fid_feat_dim]);
+    // Spatially-sensitive features: reversing each image's pixel order
+    // changes the conv features.
+    let mut rev = images.clone();
+    let per = rev.numel() / model.batch;
+    for b in 0..model.batch {
+        rev.data[b * per..(b + 1) * per].reverse();
+    }
+    let f2 = feats(&rev);
+    let delta: f32 = f1.data.iter().zip(&f2.data).map(|(a, b)| (a - b).abs()).sum();
+    assert!(delta > 1e-3, "conv features insensitive to pixel layout ({delta})");
+    // Near-singular Frechet: 8 samples in 64 dims is rank-deficient; the
+    // guarded Newton–Schulz must still produce a finite non-negative FID.
+    let a = FeatureStats::fit(&f1.data, model.fid_feat_dim);
+    let b = FeatureStats::fit(&f2.data, model.fid_feat_dim);
+    let fid = frechet_distance(&a, &b);
+    assert!(fid.is_finite() && fid >= 0.0, "{fid}");
+    // Self-distance stays small and finite even though the iteration runs
+    // on a rank-deficient spectrum (24 Newton–Schulz steps are approximate
+    // there — the guard just has to keep it from blowing up).
+    let self_fid = frechet_distance(&a, &a);
+    assert!(self_fid.is_finite() && (0.0..2.0).contains(&self_fid), "{self_fid}");
 }
 
 #[test]
