@@ -1,0 +1,202 @@
+//! Kernel-layer bench: naive triple-loop GEMM vs the planned, packed,
+//! parallel `runtime::kernel::Gemm` engine at the dcgan32 im2col shapes,
+//! plus real dcgan32 train-step throughput in three kernel modes (naive /
+//! planned threads=1 / planned all-cores).  Writes `BENCH_kernels.json` —
+//! the seed of the perf trajectory — and exits non-zero if the planned
+//! engine is slower than the naive baseline over the dcgan32 shape set
+//! (the CI gate).
+//!
+//! `--test` runs a smoke-sized version of the same protocol.
+
+use paragan::bench::{bench, BenchConfig, Reporter};
+use paragan::coordinator::{train_sync, TrainConfig};
+use paragan::layout::cost::LayerShape;
+use paragan::runtime::kernel::{self, Gemm, KernelConfig};
+use paragan::runtime::refgen::{
+    arch_layer_shapes, dcgan32_d_net, dcgan32_g_net, DCGAN32_Z_DIM, REF_BATCH,
+};
+use paragan::util::json::{arr, num, obj, s as js, write_json, Json};
+use paragan::util::rng::Rng;
+use paragan::util::table::Table;
+
+/// dcgan32's matmul shapes — the shapes the acceptance gate runs at:
+/// `(name, m, k, n, ta)` with `ta` marking the transposed-A orientation.
+/// Forward im2col GEMMs of G and D at the ref batch, plus one
+/// weight-gradient GEMM (dW = doutT x cols of d.conv0) run as real TN so
+/// the gate also covers the transposed pack path.
+fn dcgan32_gemm_shapes(batch: usize) -> Vec<(String, usize, usize, usize, bool)> {
+    let mut shapes = Vec::new();
+    for (prefix, net) in [("g", dcgan32_g_net(DCGAN32_Z_DIM)), ("d", dcgan32_d_net())] {
+        for l in arch_layer_shapes(&net, prefix, 1) {
+            shapes.push((l.name.clone(), l.m_per_sample * batch, l.k, l.n, false));
+        }
+    }
+    let d0: LayerShape = arch_layer_shapes(&dcgan32_d_net(), "d", 1)
+        .into_iter()
+        .next()
+        .expect("dcgan32 D has conv layers");
+    shapes.push((
+        format!("{}.dw", d0.name),
+        d0.n,
+        d0.m_per_sample * batch,
+        d0.k,
+        true,
+    ));
+    shapes
+}
+
+fn train_steps_per_sec(steps: u64, seed: u64) -> f64 {
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        model,
+        steps,
+        seed,
+        eval_batches: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let res = train_sync(&cfg).expect("dcgan32 train run");
+    res.steps_per_sec()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut rep = Reporter::new(if smoke {
+        "Kernel GEMM — naive vs planned (smoke)"
+    } else {
+        "Kernel GEMM — naive vs planned"
+    });
+    let threads = KernelConfig::current().threads;
+    let bench_cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 8,
+            target_time: std::time::Duration::from_millis(200),
+        }
+    } else {
+        BenchConfig { min_iters: 10, max_iters: 200, ..Default::default() }
+    };
+
+    // --- GEMM micro-bench over the dcgan32 shapes ---
+    let mut t = Table::new(
+        "dcgan32 GEMM shapes: naive vs planned engine",
+        &["shape", "m", "k", "n", "naive", "planned", "speedup"],
+    );
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    let (mut naive_total_ns, mut planned_total_ns) = (0.0f64, 0.0f64);
+    let mut rng = Rng::new(0xBE7C);
+    for (name, m, k, n, ta) in dcgan32_gemm_shapes(REF_BATCH) {
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        rng.fill_gaussian(&mut a, 0.0, 1.0);
+        rng.fill_gaussian(&mut b, 0.0, 1.0);
+        let rn = bench(&format!("naive {name}"), &bench_cfg, || {
+            let _ = kernel::naive::gemm(m, k, n, &a, ta, &b, false);
+        });
+        let g = Gemm::plan_with(KernelConfig::with_threads(threads), m, k, n);
+        let rp = bench(&format!("planned {name}"), &bench_cfg, || {
+            let _ = g.run(&a, ta, &b, false);
+        });
+        let speedup = rn.mean_ns / rp.mean_ns;
+        t.row(vec![
+            name.clone(),
+            m.to_string(),
+            k.to_string(),
+            n.to_string(),
+            format!("{:.1} us", rn.mean_ns / 1e3),
+            format!("{:.1} us", rp.mean_ns / 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        gemm_rows.push(obj(vec![
+            ("name", js(&name)),
+            ("m", num(m as f64)),
+            ("k", num(k as f64)),
+            ("n", num(n as f64)),
+            ("ta", js(if ta { "true" } else { "false" })),
+            ("naive_ns", num(rn.mean_ns)),
+            ("planned_ns", num(rp.mean_ns)),
+            ("speedup", num(speedup)),
+        ]));
+        naive_total_ns += rn.mean_ns;
+        planned_total_ns += rp.mean_ns;
+    }
+    rep.table(t);
+    let gemm_speedup = naive_total_ns / planned_total_ns.max(1.0);
+    rep.note(format!(
+        "gemm aggregate speedup over dcgan32 shapes: {gemm_speedup:.2}x ({threads} threads)"
+    ));
+
+    // --- dcgan32 train-step throughput: naive vs planned t=1 vs planned ---
+    let steps = if smoke { 6 } else { 40 };
+    kernel::set_naive_mode(true);
+    let naive_sps = train_steps_per_sec(steps, 41);
+    kernel::set_naive_mode(false);
+    kernel::set_threads(Some(1));
+    let t1_sps = train_steps_per_sec(steps, 42);
+    kernel::set_threads(None);
+    let planned_sps = train_steps_per_sec(steps, 43);
+    let train_speedup = planned_sps / naive_sps;
+    let t1_speedup = t1_sps / naive_sps;
+    let mut t = Table::new(
+        "dcgan32 train-step throughput (sync, ref backend)",
+        &["kernel mode", "steps/s", "vs naive"],
+    );
+    t.row(vec!["naive loops".into(), format!("{naive_sps:.2}"), "1.00x".into()]);
+    t.row(vec![
+        "planned, threads=1".into(),
+        format!("{t1_sps:.2}"),
+        format!("{t1_speedup:.2}x"),
+    ]);
+    t.row(vec![
+        format!("planned, threads={threads}"),
+        format!("{planned_sps:.2}"),
+        format!("{train_speedup:.2}x"),
+    ]);
+    rep.table(t);
+    rep.note(format!(
+        "train-step speedup {train_speedup:.2}x (threads={threads}); threads=1 {t1_speedup:.2}x"
+    ));
+
+    // --- BENCH_kernels.json ---
+    let json = obj(vec![
+        ("format", js("paragan-bench-kernels")),
+        ("version", num(1.0)),
+        ("smoke", js(if smoke { "true" } else { "false" })),
+        ("threads", num(threads as f64)),
+        ("batch", num(REF_BATCH as f64)),
+        ("gemm", arr(gemm_rows)),
+        ("gemm_total_speedup", num(gemm_speedup)),
+        (
+            "train",
+            obj(vec![
+                ("model", js("dcgan32")),
+                ("steps", num(steps as f64)),
+                ("naive_steps_per_sec", num(naive_sps)),
+                ("planned_t1_steps_per_sec", num(t1_sps)),
+                ("planned_steps_per_sec", num(planned_sps)),
+                ("t1_speedup", num(t1_speedup)),
+                ("speedup", num(train_speedup)),
+            ]),
+        ),
+    ]);
+    let mut text = String::new();
+    write_json(&json, &mut text);
+    text.push('\n');
+    std::fs::write("BENCH_kernels.json", &text).expect("writing BENCH_kernels.json");
+    rep.note("wrote BENCH_kernels.json");
+    rep.finish();
+
+    // CI gate: the planned engine must not lose to the naive loops over
+    // the dcgan32 shape set.
+    if planned_total_ns > naive_total_ns {
+        eprintln!(
+            "FAIL: planned GEMM slower than naive over dcgan32 shapes \
+             ({:.1} us vs {:.1} us)",
+            planned_total_ns / 1e3,
+            naive_total_ns / 1e3
+        );
+        std::process::exit(1);
+    }
+}

@@ -35,6 +35,10 @@ pub struct TrainConfig {
     pub log_every: u64,
     /// img_buff capacity == staleness bound for the async scheme.
     pub img_buff_cap: usize,
+    /// Worker threads for the ref backend's GEMM engine (`runtime::kernel`).
+    /// `None` keeps the process default (`PARAGAN_THREADS`, else
+    /// `available_parallelism`); `Some(n)` pins it for this process.
+    pub threads: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -53,6 +57,7 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             log_every: 25,
             img_buff_cap: 2,
+            threads: None,
         }
     }
 }
@@ -128,13 +133,17 @@ pub fn make_pipeline(model: &ModelManifest, n_modes: u32, seed: u64) -> Arc<Data
         Box::new(crate::pipeline::Constant(20e-6)),
         true,
     ));
+    let tuner = crate::pipeline::TunerConfig::default();
     DataPipeline::start(
         node,
         PipelineConfig {
             batch_size: model.batch,
-            initial_workers: 2,
+            // Core-derived default, but the end-to-end driver is
+            // compute-bound (the GEMM engine wants the cores): cap the
+            // initial prefetch pool and let the congestion tuner grow it.
+            initial_workers: crate::pipeline::default_workers(&tuner).min(4),
             initial_buffer: 4,
-            tuner: Some(Default::default()),
+            tuner: Some(tuner),
         },
     )
 }
@@ -236,6 +245,11 @@ pub struct Prologue {
 
 impl Prologue {
     pub fn new(cfg: &TrainConfig) -> Result<Prologue> {
+        // Both trainers come through here, so this is the one spot where
+        // the run's thread budget reaches the kernel engine.
+        if cfg.threads.is_some() {
+            crate::runtime::kernel::set_threads(cfg.threads);
+        }
         let manifest = Manifest::load(&cfg.artifact_dir)?;
         {
             let model = manifest.model(&cfg.model)?;

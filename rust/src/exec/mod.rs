@@ -337,6 +337,58 @@ where
     results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
 }
 
+/// Split `out` (a row-major `rows x row_len` buffer) into chunks of
+/// `chunk_rows` rows and run `f(first_row, chunk)` over them on up to
+/// `n_threads` scoped worker threads (work-stealing over chunk index, like
+/// [`parallel_map`]).  Chunks are disjoint `&mut` slices, so `f` can write
+/// its rows freely; with `n_threads <= 1` or a single chunk everything runs
+/// inline on the caller's thread — no spawn, bit-identical results.
+///
+/// This is the fan-out primitive of `runtime::kernel::Gemm`: one chunk per
+/// row-panel group, each accumulating its own output rows.
+pub fn parallel_chunks_mut<T, F>(
+    out: &mut [T],
+    row_len: usize,
+    chunk_rows: usize,
+    n_threads: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_rows = chunk_rows.max(1);
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    debug_assert_eq!(out.len() % row_len, 0);
+    let chunk_len = chunk_rows * row_len;
+    let n_chunks = out.len().div_ceil(chunk_len);
+    if n_threads <= 1 || n_chunks <= 1 {
+        for (ci, chunk) in out.chunks_mut(chunk_len).enumerate() {
+            f(ci * chunk_rows, chunk);
+        }
+        return;
+    }
+    let chunks: Vec<Mutex<Option<(usize, &mut [T])>>> = out
+        .chunks_mut(chunk_len)
+        .enumerate()
+        .map(|(ci, c)| Mutex::new(Some((ci * chunk_rows, c))))
+        .collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..n_threads.min(n_chunks) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= chunks.len() {
+                    break;
+                }
+                let (row0, chunk) = chunks[i].lock().unwrap().take().unwrap();
+                f(row0, chunk);
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,5 +512,24 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map((0..50).collect::<Vec<i32>>(), 4, |x| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn parallel_chunks_mut_covers_every_row_once() {
+        for (rows, row_len, chunk_rows, threads) in
+            [(17, 3, 4, 4), (8, 5, 8, 2), (1, 7, 3, 4), (16, 2, 16, 1), (5, 1, 1, 3)]
+        {
+            let mut out = vec![0u32; rows * row_len];
+            parallel_chunks_mut(&mut out, row_len, chunk_rows, threads, |row0, chunk| {
+                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + r + 1) as u32;
+                    }
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, (i / row_len + 1) as u32, "rows={rows} chunk={chunk_rows}");
+            }
+        }
     }
 }

@@ -84,6 +84,12 @@ impl Estimator {
         self.cfg.n_modes = n;
         self
     }
+    /// Pin the GEMM engine's worker-thread count for this run (default:
+    /// `PARAGAN_THREADS`, else all available cores).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = Some(n);
+        self
+    }
     pub fn log_every(mut self, n: u64) -> Self {
         self.cfg.log_every = n;
         self

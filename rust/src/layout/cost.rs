@@ -176,6 +176,26 @@ mod tests {
         assert_eq!((sq.m_per_sample, sq.k, sq.n, sq.repeats), (rq.m_per_sample, rq.k, rq.n, rq.repeats));
     }
 
+    /// The utilization model consumes the HostCpu rule like any other
+    /// accelerator: its 4x8 register tiles pad far less than the 8x128 TPU
+    /// sublane/lane rule, so the same model reports higher occupancy on the
+    /// CPU engine — and the layout transform still never hurts.
+    #[test]
+    fn host_cpu_rule_flows_through_utilization_model() {
+        let layers = toy_model();
+        let cpu = model_mxu_utilization(&layers, 32, Accelerator::HostCpu, 4, true);
+        let tpu = model_mxu_utilization(&layers, 32, Accelerator::TpuV3, 4, true);
+        assert!(cpu.mxu_occupancy > 0.0 && cpu.mxu_occupancy <= 1.0);
+        assert!(
+            cpu.mxu_occupancy >= tpu.mxu_occupancy,
+            "cpu {} tpu {}",
+            cpu.mxu_occupancy,
+            tpu.mxu_occupancy
+        );
+        let native = model_mxu_utilization(&layers, 32, Accelerator::HostCpu, 4, false);
+        assert!(cpu.mxu_occupancy >= native.mxu_occupancy - 1e-12);
+    }
+
     #[test]
     fn flops_scale_linearly_with_batch() {
         let layers = toy_model();

@@ -21,6 +21,66 @@ pub enum Accelerator {
     V100,
     /// A100: fp16 multiples of 64, fp32 multiples of 32.
     A100,
+    /// The host CPU running the `RefCpuBackend` — the one accelerator this
+    /// planner does not merely *model* but actually *drives*: the tiles it
+    /// picks here are the register blocks `runtime::kernel::Gemm` executes
+    /// (see [`CpuTileRule`]).
+    HostCpu,
+}
+
+/// Register micro-tile of the CPU GEMM engine: MR rows of A are held
+/// against NR columns of B in an MR x NR f32 accumulator block (32 scalars
+/// — comfortably register-resident; NR=8 matches one 256-bit f32 vector so
+/// the inner loop autovectorizes).
+pub const CPU_MR: usize = 4;
+pub const CPU_NR: usize = 8;
+
+/// Cache share the packed B block may occupy while A panels stream past it
+/// — the CPU analog of the VMEM budget above (a conservative L2 slice).
+pub const CPU_CACHE_BUDGET_BYTES: usize = 192 * 1024;
+
+/// The HostCpu tiling decision for one (M,K)x(K,N) GEMM — the CPU
+/// counterpart of [`MatmulPlan`], except these tiles are not a cost model:
+/// `runtime::kernel::Gemm` runs exactly what this rule chooses.
+///
+/// * `mr` x `nr` — the register micro-tile (panel heights of packed A / B).
+///   These are NOT a per-shape degree of freedom: the engine's micro-kernel
+///   is compiled at [`CPU_MR`] x [`CPU_NR`] (and `run_packed` asserts the
+///   rule matches), so the fields exist to let planning/inspection code read
+///   the executed tile, not to vary it — changing the micro-tile means
+///   changing the constants (which re-specializes the kernel), not the rule;
+/// * `nc_cols` — B columns kept cache-resident per pass (multiple of `nr`),
+///   sized so the packed block fits [`CPU_CACHE_BUDGET_BYTES`];
+/// * K is never split: bit-exact parity with the naive oracle requires each
+///   output element to accumulate k ascending in one chain, so the K stream
+///   stays register-resident per micro-tile (the CPU analog of streaming
+///   the full K through the systolic array).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuTileRule {
+    pub mr: usize,
+    pub nr: usize,
+    pub nc_cols: usize,
+}
+
+impl CpuTileRule {
+    pub fn for_shape(_m: usize, k: usize, n: usize) -> CpuTileRule {
+        let np = round_up(n.max(1), CPU_NR);
+        // B block bytes = nc_cols * k * 4; keep it under the cache budget.
+        let fit = if k == 0 { np } else { CPU_CACHE_BUDGET_BYTES / (4 * k) };
+        let nc_cols = (fit / CPU_NR * CPU_NR).clamp(CPU_NR, np);
+        CpuTileRule { mr: CPU_MR, nr: CPU_NR, nc_cols }
+    }
+
+    /// Worker threads worth spawning for this GEMM: never more than the
+    /// row-panel count, and exactly one when the matmul is too small to
+    /// amortize a scoped-thread spawn (~tens of microseconds).
+    pub fn effective_threads(&self, requested: usize, m: usize, k: usize, n: usize) -> usize {
+        let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+        if flops < 1 << 17 {
+            return 1;
+        }
+        requested.clamp(1, m.div_ceil(self.mr))
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +104,7 @@ impl Accelerator {
                     TileRule { row: 32, col: 32 }
                 }
             }
+            Accelerator::HostCpu => TileRule { row: CPU_MR, col: CPU_NR },
         }
     }
 
@@ -55,6 +116,9 @@ impl Accelerator {
             Accelerator::TpuV3 => 61.5e12,
             Accelerator::V100 => 125.0e12 / 8.0 * 8.0, // per-GPU
             Accelerator::A100 => 312.0e12,
+            // Ballpark multi-core f32 SIMD throughput — the ref backend's
+            // GEMM engine, not a tensor unit.
+            Accelerator::HostCpu => 1.0e11,
         }
     }
 }
@@ -229,6 +293,38 @@ mod tests {
                     && (p.vmem_bytes() <= VMEM_BUDGET_BYTES || p.bk == 128)
             },
         );
+    }
+
+    #[test]
+    fn host_cpu_tile_rule_matches_micro_kernel_constants() {
+        assert_eq!(
+            Accelerator::HostCpu.tile_rule(4),
+            TileRule { row: CPU_MR, col: CPU_NR }
+        );
+        // HostCpu plans flow through the same MatmulPlan machinery.
+        let p = MatmulPlan::for_accel(Accelerator::HostCpu, 100, 100, 100, 4);
+        assert_eq!(p.mp % CPU_MR, 0);
+        assert_eq!(p.np % CPU_NR, 0);
+        assert!(p.mxu_occupancy() > 0.9, "{}", p.mxu_occupancy());
+    }
+
+    #[test]
+    fn prop_cpu_tile_rule_invariants() {
+        forall(gens::vec(gens::usize_in(1..5000), 3..4), |dims| {
+            let (m, k, n) = (dims[0], dims[1], dims[2]);
+            let r = CpuTileRule::for_shape(m, k, n);
+            let block_fits = r.nc_cols * k * 4 <= CPU_CACHE_BUDGET_BYTES
+                || r.nc_cols == CPU_NR
+                || r.nc_cols >= round_up(n, CPU_NR);
+            r.mr == CPU_MR
+                && r.nr == CPU_NR
+                && r.nc_cols % CPU_NR == 0
+                && r.nc_cols >= CPU_NR
+                && block_fits
+                && r.effective_threads(64, m, k, n) <= m.div_ceil(CPU_MR)
+                && r.effective_threads(0, m, k, n) >= 1
+                && r.effective_threads(8, 4, 4, 4) == 1 // tiny matmul: no spawn
+        });
     }
 
     #[test]

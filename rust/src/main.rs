@@ -9,7 +9,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use paragan::cluster::{biggan, simulate, FrameworkProfile, SimConfig};
 use paragan::coordinator::{LrScaling, OptimizationPolicy, ScalingConfig};
@@ -47,6 +47,7 @@ fn print_usage() {
          \x20 paragan train    --model <dcgan32|sngan32|biggan32> --steps N [--scheme sync|async]\n\
          \x20                  [--g-opt OPT] [--d-opt OPT] [--precision fp32|bf16] [--d-ratio N]\n\
          \x20                  [--eval-every N] [--checkpoint-dir DIR] [--artifacts DIR] [--seed N]\n\
+         \x20                  [--threads N   GEMM engine workers; default PARAGAN_THREADS or all cores]\n\
          \x20 paragan repro    <table1|table2|fig1|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig13|all>\n\
          \x20 paragan simulate --workers N [--per-worker-batch N] [--framework paragan|native_tf|studiogan]\n\
          \x20 paragan info     [--artifacts DIR]"
@@ -108,6 +109,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         .seed(args.get_u64("seed", 42))
         .eval_every(args.get_u64("eval-every", 0))
         .log_every(args.get_u64("log-every", 25));
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse().context("--threads expects a positive integer")?;
+        anyhow::ensure!(n >= 1, "--threads expects a positive integer, got 0");
+        est = est.threads(n);
+    }
     if let Some(dir) = args.get("checkpoint-dir") {
         est = est.checkpoint(dir, args.get_u64("checkpoint-every", 100));
     }

@@ -14,6 +14,6 @@ pub mod tuner;
 
 pub use checkpoint::{AsyncCheckpointWriter, Checkpoint, TensorSnapshot};
 pub use latency::{CongestionModel, Constant, LatencySource, LogNormal, MarkovCongestion};
-pub use prefetcher::{Batch, DataPipeline, PipelineConfig};
+pub use prefetcher::{default_workers, Batch, DataPipeline, PipelineConfig};
 pub use source::{Record, RecordProducer, StorageNode, SynthImages};
 pub use tuner::{CongestionTuner, TunerAction, TunerConfig};

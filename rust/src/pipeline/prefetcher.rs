@@ -39,13 +39,24 @@ pub struct PipelineConfig {
 
 impl Default for PipelineConfig {
     fn default() -> Self {
+        let tuner = TunerConfig::default();
         PipelineConfig {
             batch_size: 32,
-            initial_workers: 2,
+            initial_workers: default_workers(&tuner),
             initial_buffer: 8,
-            tuner: Some(TunerConfig::default()),
+            tuner: Some(tuner),
         }
     }
+}
+
+/// Default prefetch worker count: one per available core (the old
+/// hardcoded 2 starved wide hosts), clamped into the tuner's
+/// `[min_workers, max_workers]` band so the initial pool is always a state
+/// the tuner itself could have chosen.
+pub fn default_workers(tuner: &TunerConfig) -> usize {
+    let lo = tuner.min_workers.max(1);
+    let hi = tuner.max_workers.max(lo);
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(lo, hi)
 }
 
 pub struct DataPipeline {
@@ -342,6 +353,19 @@ mod tests {
         assert_eq!(p.desired_workers(), 4);
         assert!(p.spawned_workers() >= 4, "monotonic id counter");
         p.shutdown();
+    }
+
+    #[test]
+    fn default_worker_count_derives_from_cores_within_tuner_bounds() {
+        let tuner = TunerConfig::default();
+        let d = PipelineConfig::default();
+        assert_eq!(d.initial_workers, default_workers(&tuner));
+        assert!(d.initial_workers >= tuner.min_workers);
+        assert!(d.initial_workers <= tuner.max_workers);
+        // Tight bounds clamp the core count on any host.
+        let narrow = TunerConfig { min_workers: 2, max_workers: 3, ..Default::default() };
+        let w = default_workers(&narrow);
+        assert!((2..=3).contains(&w), "{w}");
     }
 
     #[test]

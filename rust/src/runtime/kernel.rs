@@ -1,0 +1,614 @@
+//! The layout-driven CPU kernel layer: ONE packed, parallel GEMM engine
+//! under everything the ref backends execute.
+//!
+//! Every matmul in `ref_cpu` (dense chains, FID projections) and `ref_conv`
+//! (im2col forward, both backward passes, conv-transpose) funnels into
+//! [`Gemm`]: operands are packed into row/column panels, a register-blocked
+//! `CPU_MR x CPU_NR` micro-kernel accumulates over the full K stream, and
+//! row panels fan out over worker threads via `exec::parallel_chunks_mut`.
+//! Transpose flags replace the old `matmul` / `matmul_tn` / `matmul_nt`
+//! triplet — the packing step absorbs the layout change, so no operand is
+//! ever materialized transposed.
+//!
+//! The paper's layout transformation (§4.2) planned here is REAL: block and
+//! panel sizes come from `layout::plan::CpuTileRule` — the same `TileRule`
+//! machinery that models TPU v3 / V100 now plans host execution
+//! (`Accelerator::HostCpu`), and the tiles it chooses are the tiles this
+//! engine runs.
+//!
+//! **Bit-exactness contract.**  Each output element accumulates its K terms
+//! in ascending order through a single f32 chain with separate mul + add
+//! rounding (no FMA, no split accumulators).  That is exactly the naive
+//! triple-loop order, so the engine is bit-identical to the retained
+//! [`naive`] oracle — and therefore to the pinned `ref.py` goldens — at any
+//! thread count and any tile shape.  Property tests below assert equality
+//! with `to_bits`, not a tolerance.
+//!
+//! Threading is configured once per process ([`KernelConfig`]): default
+//! `std::thread::available_parallelism`, overridable by `PARAGAN_THREADS`
+//! and `TrainConfig::threads`.  `PARAGAN_KERNEL=naive` (or
+//! [`set_naive_mode`]) swaps the engine for the naive loops — the A/B
+//! baseline `benches/bench_kernel_gemm.rs` measures against.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::exec::parallel_chunks_mut;
+use crate::layout::plan::{CpuTileRule, CPU_MR, CPU_NR};
+
+// ---------------------------------------------------------------------------
+// Process-wide configuration
+// ---------------------------------------------------------------------------
+
+/// Explicit thread override (0 = unset -> env/auto).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// Naive-mode override: 0 = unset (follow `PARAGAN_KERNEL`), 1 = forced
+/// engine, 2 = forced naive.  A tri-state so `set_naive_mode(false)` truly
+/// restores the engine even when the env var is exported (the bench flips
+/// modes within one process).
+static NAIVE_MODE: AtomicUsize = AtomicUsize::new(0);
+
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(v) = std::env::var("PARAGAN_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+fn env_naive() -> bool {
+    static NAIVE: OnceLock<bool> = OnceLock::new();
+    *NAIVE.get_or_init(|| {
+        std::env::var("PARAGAN_KERNEL").map(|v| v.trim() == "naive").unwrap_or(false)
+    })
+}
+
+/// Set the GEMM worker-thread count for this process (`None` restores the
+/// `PARAGAN_THREADS` / `available_parallelism` default).  `TrainConfig`
+/// plumbs its `threads` field through here.
+pub fn set_threads(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.unwrap_or(0), Ordering::SeqCst);
+}
+
+/// Route all GEMMs through the naive oracle loops instead of the packed
+/// engine (the bench baseline).  Overrides `PARAGAN_KERNEL` in both
+/// directions.  Normal code never calls this.
+pub fn set_naive_mode(on: bool) {
+    NAIVE_MODE.store(if on { 2 } else { 1 }, Ordering::SeqCst);
+}
+
+/// Resolved kernel configuration.  Tests and benches build explicit values
+/// (no global mutation); production paths use [`KernelConfig::current`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Worker threads a GEMM may fan out to (>= 1; per-shape the plan may
+    /// use fewer — see `CpuTileRule::effective_threads`).
+    pub threads: usize,
+    /// Run the naive loops instead of the packed engine.
+    pub naive: bool,
+}
+
+impl KernelConfig {
+    pub fn current() -> KernelConfig {
+        let ov = THREAD_OVERRIDE.load(Ordering::SeqCst);
+        KernelConfig {
+            threads: if ov >= 1 { ov } else { auto_threads() },
+            naive: match NAIVE_MODE.load(Ordering::SeqCst) {
+                0 => env_naive(),
+                n => n == 2,
+            },
+        }
+    }
+
+    pub fn with_threads(threads: usize) -> KernelConfig {
+        KernelConfig { threads: threads.max(1), naive: false }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed operands
+// ---------------------------------------------------------------------------
+
+/// A packed into row panels: panel `p` holds rows `p*mr .. p*mr+mr` in
+/// k-major order — element `(i, kk)` lives at
+/// `p*(k*mr) + kk*mr + (i - p*mr)`.  Edge panels are zero-padded to `mr`
+/// rows (padded lanes are computed and discarded, never written back).
+///
+/// This is the planner-chosen layout im2col writes DIRECTLY
+/// (`ref_conv::im2col_packed`) — the paper's layout transformation applied
+/// for real instead of materializing row-major columns and re-packing.
+pub struct PackedA {
+    pub m: usize,
+    pub k: usize,
+    pub mr: usize,
+    data: Vec<f32>,
+}
+
+impl PackedA {
+    pub fn zeroed(m: usize, k: usize, mr: usize) -> PackedA {
+        let panels = m.div_ceil(mr.max(1)).max(1);
+        PackedA { m, k, mr, data: vec![0f32; panels * k * mr] }
+    }
+
+    /// Pack from a row-major buffer; `trans` means `a` is stored `[k, m]`
+    /// (the logical A transposed), i.e. element `(i, kk)` = `a[kk*m + i]`.
+    pub fn from_slice(a: &[f32], m: usize, k: usize, trans: bool, mr: usize) -> PackedA {
+        debug_assert_eq!(a.len(), m * k);
+        let mut pa = PackedA::zeroed(m, k, mr);
+        for p in 0..pa.n_panels() {
+            let base = p * k * mr;
+            let rows = mr.min(m - p * mr);
+            for r in 0..rows {
+                let i = p * mr + r;
+                if trans {
+                    for kk in 0..k {
+                        pa.data[base + kk * mr + r] = a[kk * m + i];
+                    }
+                } else {
+                    let row = &a[i * k..(i + 1) * k];
+                    for (kk, &v) in row.iter().enumerate() {
+                        pa.data[base + kk * mr + r] = v;
+                    }
+                }
+            }
+        }
+        pa
+    }
+
+    #[inline]
+    pub fn n_panels(&self) -> usize {
+        self.m.div_ceil(self.mr).max(1)
+    }
+
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * self.mr..(p + 1) * self.k * self.mr]
+    }
+
+    /// Flat index of element `(i, kk)` — for packers that write the layout
+    /// directly (im2col).
+    #[inline]
+    pub fn idx(&self, i: usize, kk: usize) -> usize {
+        (i / self.mr) * (self.k * self.mr) + kk * self.mr + i % self.mr
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+/// B packed into column panels: panel `q` holds columns `q*nr .. q*nr+nr`
+/// in k-major order — element `(kk, j)` lives at
+/// `q*(k*nr) + kk*nr + (j - q*nr)`; edge panels zero-padded to `nr`.
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    pub nr: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    pub fn zeroed(k: usize, n: usize, nr: usize) -> PackedB {
+        let panels = n.div_ceil(nr.max(1)).max(1);
+        PackedB { k, n, nr, data: vec![0f32; panels * k * nr] }
+    }
+
+    /// Pack from a row-major buffer; `trans` means `b` is stored `[n, k]`
+    /// (the logical B transposed), i.e. element `(kk, j)` = `b[j*k + kk]`.
+    pub fn from_slice(b: &[f32], k: usize, n: usize, trans: bool, nr: usize) -> PackedB {
+        debug_assert_eq!(b.len(), k * n);
+        let mut pb = PackedB::zeroed(k, n, nr);
+        for q in 0..pb.n_panels() {
+            let base = q * k * nr;
+            let cols = nr.min(n - q * nr);
+            for c in 0..cols {
+                let j = q * nr + c;
+                if trans {
+                    let row = &b[j * k..(j + 1) * k];
+                    for (kk, &v) in row.iter().enumerate() {
+                        pb.data[base + kk * nr + c] = v;
+                    }
+                } else {
+                    for kk in 0..k {
+                        pb.data[base + kk * nr + c] = b[kk * n + j];
+                    }
+                }
+            }
+        }
+        pb
+    }
+
+    #[inline]
+    pub fn n_panels(&self) -> usize {
+        self.n.div_ceil(self.nr).max(1)
+    }
+
+    #[inline]
+    pub fn panel(&self, q: usize) -> &[f32] {
+        &self.data[q * self.k * self.nr..(q + 1) * self.k * self.nr]
+    }
+
+    /// Flat index of element `(kk, j)` — for direct packers (im2col of the
+    /// weight-gradient GEMM).
+    #[inline]
+    pub fn idx(&self, kk: usize, j: usize) -> usize {
+        (j / self.nr) * (self.k * self.nr) + kk * self.nr + j % self.nr
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro-kernel
+// ---------------------------------------------------------------------------
+
+/// One register tile: `acc[r][c] += sum_k apanel[k*MR+r] * bpanel[k*NR+c]`,
+/// k ascending, mul and add rounded separately (bit-exact contract).  The
+/// `j` loop is a fixed `CPU_NR`-wide f32 lane — autovectorizes to one
+/// 256-bit vector; `CPU_MR` independent accumulator rows hide the add
+/// latency.
+#[inline(always)]
+fn micro_tile(apanel: &[f32], bpanel: &[f32], k: usize) -> [[f32; CPU_NR]; CPU_MR] {
+    let mut acc = [[0f32; CPU_NR]; CPU_MR];
+    for kk in 0..k {
+        let a = &apanel[kk * CPU_MR..kk * CPU_MR + CPU_MR];
+        let b = &bpanel[kk * CPU_NR..kk * CPU_NR + CPU_NR];
+        for r in 0..CPU_MR {
+            let av = a[r];
+            for j in 0..CPU_NR {
+                acc[r][j] += av * b[j];
+            }
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// A planned GEMM: shape + the tiles `layout::plan` chose for it.  `run*`
+/// executes exactly `rule`'s blocking — the acceptance invariant "the
+/// planner's chosen tiles are the ones the engine runs" holds by
+/// construction.
+#[derive(Debug, Clone, Copy)]
+pub struct Gemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub rule: CpuTileRule,
+    pub cfg: KernelConfig,
+}
+
+impl Gemm {
+    pub fn plan(m: usize, k: usize, n: usize) -> Gemm {
+        Gemm::plan_with(KernelConfig::current(), m, k, n)
+    }
+
+    pub fn plan_with(cfg: KernelConfig, m: usize, k: usize, n: usize) -> Gemm {
+        Gemm { m, k, n, rule: CpuTileRule::for_shape(m, k, n), cfg }
+    }
+
+    /// `C[m,n] = op(A) x op(B)`: `ta` means `a` is stored `[k, m]`, `tb`
+    /// means `b` is stored `[n, k]`.
+    pub fn run(&self, a: &[f32], ta: bool, b: &[f32], tb: bool) -> Vec<f32> {
+        debug_assert_eq!(a.len(), self.m * self.k);
+        debug_assert_eq!(b.len(), self.k * self.n);
+        if self.cfg.naive {
+            return naive::gemm(self.m, self.k, self.n, a, ta, b, tb);
+        }
+        let pa = PackedA::from_slice(a, self.m, self.k, ta, self.rule.mr);
+        let pb = PackedB::from_slice(b, self.k, self.n, tb, self.rule.nr);
+        self.run_packed(&pa, &pb)
+    }
+
+    /// Run with pre-packed operands (the conv path packs im2col columns
+    /// directly into panel layout and comes in here).
+    pub fn run_packed(&self, pa: &PackedA, pb: &PackedB) -> Vec<f32> {
+        debug_assert_eq!((pa.m, pa.k), (self.m, self.k));
+        debug_assert_eq!((pb.k, pb.n), (self.k, self.n));
+        debug_assert_eq!((pa.mr, pb.nr), (self.rule.mr, self.rule.nr));
+        // The micro-kernel's register tile is compiled at CPU_MR x CPU_NR;
+        // a rule carrying anything else would silently misindex the panels,
+        // so check in release builds too (a plan bug, not a hot-path cost).
+        assert_eq!(
+            (self.rule.mr, self.rule.nr),
+            (CPU_MR, CPU_NR),
+            "CpuTileRule micro-tile does not match the compiled micro-kernel"
+        );
+        let (m, k, n) = (self.m, self.k, self.n);
+        let mut out = vec![0f32; m * n];
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let rule = self.rule;
+        let threads = rule.effective_threads(self.cfg.threads, m, k, n);
+        // Row panels per thread chunk: ~4 chunks per worker for balance,
+        // always whole panels so no row is shared.
+        let n_panels = pa.n_panels();
+        let panels_per_chunk = n_panels.div_ceil(threads * 4).max(1);
+        let chunk_rows = panels_per_chunk * rule.mr;
+        let q_panels = pb.n_panels();
+        let q_per_block = (rule.nc_cols / rule.nr).max(1);
+
+        parallel_chunks_mut(&mut out, n, chunk_rows, threads, |row0, chunk| {
+            let p0 = row0 / rule.mr;
+            let chunk_panels = (chunk.len() / n).div_ceil(rule.mr);
+            // Cache-block over B panels: the packed `nc_cols`-wide block
+            // stays resident while this chunk's A panels stream past it.
+            for qb in (0..q_panels).step_by(q_per_block) {
+                for dp in 0..chunk_panels {
+                    let p = p0 + dp;
+                    let apanel = pa.panel(p);
+                    let rows = rule.mr.min(m - p * rule.mr);
+                    for q in qb..(qb + q_per_block).min(q_panels) {
+                        let acc = micro_tile(apanel, pb.panel(q), k);
+                        let cols = rule.nr.min(n - q * rule.nr);
+                        for r in 0..rows {
+                            let orow = (dp * rule.mr + r) * n + q * rule.nr;
+                            chunk[orow..orow + cols].copy_from_slice(&acc[r][..cols]);
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+/// `C[m,n] = op(A) x op(B)` under the process-wide [`KernelConfig`] — the
+/// drop-in replacement for the old `matmul` (`false,false`), `matmul_tn`
+/// (A stored `[k,m]`: `true,false`) and `matmul_nt` (B stored `[n,k]`:
+/// `false,true`).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], ta: bool, b: &[f32], tb: bool) -> Vec<f32> {
+    Gemm::plan(m, k, n).run(a, ta, b, tb)
+}
+
+// ---------------------------------------------------------------------------
+// The retained naive oracle
+// ---------------------------------------------------------------------------
+
+/// The original triple-loop kernels, kept verbatim as (a) the correctness
+/// oracle the packed engine must match **bit-exactly** and (b) the baseline
+/// `bench_kernel_gemm` measures the planned engine against.
+pub mod naive {
+    /// (M,K) x (K,N) -> (M,N), f32 accumulate, row-major.
+    pub fn nn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// aT x b with a:(M,K), b:(M,N) -> (K,N).  Backprop: dW = xT @ dA.
+    pub fn tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        let mut out = vec![0f32; k * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// a x bT with a:(M,K), b:(N,K) -> (M,N).  Backprop: dX = dA @ WT.
+    pub fn nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Flag-based dispatch mirroring [`super::gemm`]'s operand convention.
+    pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], ta: bool, b: &[f32], tb: bool) -> Vec<f32> {
+        match (ta, tb) {
+            (false, false) => nn(a, m, k, b, n),
+            // a stored [k, m]; naive::tn contracts over its first dim.
+            (true, false) => tn(a, k, m, b, n),
+            (false, true) => nt(a, m, k, b, n),
+            (true, true) => {
+                // Not used by any backend path; compose via an explicit
+                // transpose of the (small) output of the TN case.
+                let mut at = vec![0f32; m * k];
+                for kk in 0..k {
+                    for i in 0..m {
+                        at[i * k + kk] = a[kk * m + i];
+                    }
+                }
+                nt(&at, m, k, b, n)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        rng.fill_gaussian(&mut v, 0.0, 1.0);
+        v
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// The satellite property sweep: odd / rectangular / degenerate shapes,
+    /// every transpose mode, packed engine vs the naive oracle, BIT-exact.
+    #[test]
+    fn packed_engine_matches_naive_oracle_bit_exactly() {
+        let dims = [1usize, 2, 3, 7, 17, 64, 65];
+        let mut rng = Rng::new(0x6E44);
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    for (ta, tb) in [(false, false), (true, false), (false, true)] {
+                        let a = randv(&mut rng, m * k);
+                        let b = randv(&mut rng, k * n);
+                        let want = naive::gemm(m, k, n, &a, ta, b.as_slice(), tb);
+                        let got = Gemm::plan_with(KernelConfig::with_threads(3), m, k, n)
+                            .run(&a, ta, &b, tb);
+                        assert_bits_eq(&got, &want, &format!("{m}x{k}x{n} ta={ta} tb={tb}"));
+                    }
+                }
+            }
+        }
+    }
+
+    /// threads=1 vs threads=N produce bit-identical output (the ascending-k
+    /// chain per element does not depend on the chunking).
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let mut rng = Rng::new(0xDE7);
+        for (m, k, n) in [(67, 33, 12), (256, 48, 8), (31, 130, 5)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let one = Gemm::plan_with(KernelConfig::with_threads(1), m, k, n)
+                .run(&a, false, &b, false);
+            for t in [2, 3, 8] {
+                let many = Gemm::plan_with(KernelConfig::with_threads(t), m, k, n)
+                    .run(&a, false, &b, false);
+                assert_bits_eq(&many, &one, &format!("threads={t} {m}x{k}x{n}"));
+            }
+        }
+    }
+
+    /// The engine runs the tiles the planner chose (plan equality) and the
+    /// packed layouts round-trip element access.
+    #[test]
+    fn engine_runs_planner_tiles() {
+        let g = Gemm::plan_with(KernelConfig::with_threads(2), 100, 300, 50);
+        assert_eq!(g.rule, CpuTileRule::for_shape(100, 300, 50));
+        assert_eq!(g.rule.mr, CPU_MR);
+        assert_eq!(g.rule.nr, CPU_NR);
+
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (13, 5, 11);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let pa = PackedA::from_slice(&a, m, k, false, CPU_MR);
+        for i in 0..m {
+            for kk in 0..k {
+                assert_eq!(pa.panel(i / CPU_MR)[kk * CPU_MR + i % CPU_MR], a[i * k + kk]);
+                assert_eq!(pa.data[pa.idx(i, kk)], a[i * k + kk]);
+            }
+        }
+        let pb = PackedB::from_slice(&b, k, n, false, CPU_NR);
+        for kk in 0..k {
+            for j in 0..n {
+                assert_eq!(pb.data[pb.idx(kk, j)], b[kk * n + j]);
+            }
+        }
+    }
+
+    /// The old `matmul_tn` / `matmul_nt` unit test, folded in: transpose
+    /// modes agree with explicit transposes + plain NN (oracle AND engine).
+    #[test]
+    fn transpose_modes_agree_with_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (4, 5, 3);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, m * n);
+        // aT b via explicit transpose + plain NN.
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let want = naive::nn(&at, k, m, &b, n);
+        for got in [
+            naive::gemm(k, m, n, &a, true, &b, false),
+            gemm(k, m, n, &a, true, &b, false),
+        ] {
+            for (w, g) in want.iter().zip(&got) {
+                assert!((w - g).abs() < 1e-5, "{w} vs {g}");
+            }
+        }
+        // a bT via explicit transpose.
+        let c = randv(&mut rng, n * k);
+        let mut ct = vec![0f32; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                ct[j * n + i] = c[i * k + j];
+            }
+        }
+        let want = naive::nn(&a, m, k, &ct, n);
+        for got in [
+            naive::gemm(m, k, n, &a, false, &c, true),
+            gemm(m, k, n, &a, false, &c, true),
+        ] {
+            for (w, g) in want.iter().zip(&got) {
+                assert!((w - g).abs() < 1e-5, "{w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_mode_flag_routes_to_oracle() {
+        let mut rng = Rng::new(77);
+        let (m, k, n) = (9, 14, 6);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let g = Gemm {
+            cfg: KernelConfig { threads: 4, naive: true },
+            ..Gemm::plan_with(KernelConfig::with_threads(4), m, k, n)
+        };
+        assert_bits_eq(
+            &g.run(&a, false, &b, false),
+            &naive::nn(&a, m, k, &b, n),
+            "naive mode",
+        );
+    }
+
+    #[test]
+    fn degenerate_k_zero_yields_zeros() {
+        let g = Gemm::plan_with(KernelConfig::with_threads(2), 3, 0, 4);
+        let out = g.run(&[], false, &[], false);
+        assert_eq!(out, vec![0f32; 12]);
+    }
+}

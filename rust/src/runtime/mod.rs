@@ -12,6 +12,7 @@
 pub mod artifact;
 pub mod backend;
 pub mod client;
+pub mod kernel;
 pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -23,6 +24,7 @@ pub mod step;
 pub use artifact::{ArtifactSpec, Init, Manifest, ModelManifest, OptimizerDef, ParamDef, Role, SlotInit, TensorSpec};
 pub use backend::{Backend, RuntimeStats};
 pub use client::Runtime;
+pub use kernel::{Gemm, KernelConfig};
 pub use params::{HostTensor, ParamStore};
 pub use ref_conv::{Act, ConvNet, Layer, LayerOp};
 pub use ref_cpu::RefCpuBackend;

@@ -17,8 +17,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::kernel::{Gemm, KernelConfig, PackedA, PackedB};
 use super::params::HostTensor;
 use super::ref_cpu::ops;
+use crate::exec::parallel_chunks_mut;
 use crate::util::json::{arr, num, obj, s as js, Json};
 
 pub const LRELU_SLOPE: f32 = 0.2;
@@ -129,37 +131,99 @@ impl Conv2dShape {
     }
 }
 
-/// x:[B,Cin,IH,IW] -> columns [B*OH*OW, Cin*kh*kw] (zero-padded borders).
-pub fn im2col(x: &[f32], s: &Conv2dShape) -> Vec<f32> {
+/// x:[B,Cin,IH,IW] -> im2col columns packed DIRECTLY into the GEMM
+/// engine's A-panel layout (the paper's layout transformation applied for
+/// real): no row-major `[B*OH*OW, Cin*kh*kw]` buffer is materialized and
+/// re-read — each column value lands straight in the planner-chosen panel
+/// slot.  Row panels are filled in parallel (they are disjoint slices of
+/// the packed buffer), reusing the same worker fan-out as the GEMM itself.
+pub fn im2col_packed(x: &[f32], s: &Conv2dShape, cfg: &KernelConfig) -> PackedA {
     debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
     let (oh, ow) = s.out_hw();
     let kk = s.k();
-    let mut cols = vec![0f32; s.batch * oh * ow * kk];
-    for n in 0..s.batch {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((n * oh + oy) * ow + ox) * kk;
-                for ci in 0..s.cin {
-                    let xbase = (n * s.cin + ci) * s.ih * s.iw;
-                    for r in 0..s.kh {
-                        let iy = (oy * s.stride + r) as isize - s.pad_h as isize;
-                        if iy < 0 || iy >= s.ih as isize {
-                            continue;
-                        }
-                        let xrow = xbase + iy as usize * s.iw;
-                        let crow = row + (ci * s.kh + r) * s.kw;
-                        for c in 0..s.kw {
-                            let ix = (ox * s.stride + c) as isize - s.pad_w as isize;
-                            if ix < 0 || ix >= s.iw as isize {
-                                continue;
-                            }
-                            cols[crow + c] = x[xrow + ix as usize];
-                        }
+    let m = s.batch * oh * ow;
+    let mut pa = PackedA::zeroed(m, kk, crate::layout::plan::CPU_MR);
+    let mr = pa.mr;
+    let panel_len = kk * mr;
+    let n_panels = pa.n_panels();
+    let threads = if m * kk >= 1 << 16 { cfg.threads } else { 1 };
+    let panels_per_chunk = n_panels.div_ceil(threads.max(1) * 4).max(1);
+    // Each panel is one "row" of the chunked buffer: chunks are whole
+    // panels, so writers never share a slot.
+    parallel_chunks_mut(pa.data_mut(), panel_len, panels_per_chunk, threads, |p0, chunk| {
+        let rows = (chunk.len() / panel_len) * mr;
+        let (r0, r1) = (p0 * mr, (p0 * mr + rows).min(m));
+        im2col_rows(x, s, r0, r1, |row, ki, v| {
+            chunk[(row / mr - p0) * panel_len + ki * mr + row % mr] = v;
+        });
+    });
+    pa
+}
+
+/// The canonical im2col gather over column rows `r0..r1` (row = one output
+/// position, `(n*oh + oy)*ow + ox`): calls `put(row, ki, value)` for every
+/// non-padding column element.  ONE copy of the padded-gather loop serves
+/// every output layout — row-major [`im2col`], the engine's B panels
+/// [`im2col_packed_b`], and the parallel A-panel writer [`im2col_packed`]
+/// (which runs this per worker chunk).  Targets must be zero-initialized:
+/// padding positions are never visited.
+#[inline]
+fn im2col_rows(x: &[f32], s: &Conv2dShape, r0: usize, r1: usize, mut put: impl FnMut(usize, usize, f32)) {
+    debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
+    let (oh, ow) = s.out_hw();
+    for row in r0..r1 {
+        let n = row / (oh * ow);
+        let rem = row % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
+        for ci in 0..s.cin {
+            let xbase = (n * s.cin + ci) * s.ih * s.iw;
+            for r in 0..s.kh {
+                let iy = (oy * s.stride + r) as isize - s.pad_h as isize;
+                if iy < 0 || iy >= s.ih as isize {
+                    continue;
+                }
+                let xrow = xbase + iy as usize * s.iw;
+                let crow = (ci * s.kh + r) * s.kw;
+                for c in 0..s.kw {
+                    let ix = (ox * s.stride + c) as isize - s.pad_w as isize;
+                    if ix < 0 || ix >= s.iw as isize {
+                        continue;
                     }
+                    put(row, crow + c, x[xrow + ix as usize]);
                 }
             }
         }
     }
+}
+
+/// im2col columns packed as the GEMM engine's *B* operand (contraction over
+/// the B*OH*OW rows): the weight-gradient GEMM `dW = doutT x cols` consumes
+/// this directly, again without a row-major intermediate.  Serial: the dW
+/// GEMM that follows is a factor `cout` more work and is the parallel part.
+pub fn im2col_packed_b(x: &[f32], s: &Conv2dShape) -> PackedB {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    let mut pb = PackedB::zeroed(m, kk, crate::layout::plan::CPU_NR);
+    let nr = pb.nr;
+    let data = pb.data_mut();
+    im2col_rows(x, s, 0, m, |row, ki, v| {
+        data[(ki / nr) * (m * nr) + row * nr + ki % nr] = v;
+    });
+    pb
+}
+
+/// x:[B,Cin,IH,IW] -> columns [B*OH*OW, Cin*kh*kw] (zero-padded borders).
+/// Row-major reference layout — kept as the oracle `im2col_packed*` are
+/// tested against and as `col2im`'s adjoint counterpart; the execution path
+/// uses the packed variants above.
+pub fn im2col(x: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let mut cols = vec![0f32; s.batch * oh * ow * kk];
+    im2col_rows(x, s, 0, s.batch * oh * ow, |row, ki, v| {
+        cols[row * kk + ki] = v;
+    });
     cols
 }
 
@@ -197,7 +261,9 @@ pub fn col2im(cols: &[f32], s: &Conv2dShape) -> Vec<f32> {
     x
 }
 
-/// OIHW weights -> matmul operand [Cin*kh*kw, Cout].
+/// OIHW weights -> the row-major matmul operand [Cin*kh*kw, Cout] of the
+/// PRE-refactor path — used only by the naive (bench-baseline) branches;
+/// the engine packs the OIHW matrix directly under a transpose flag.
 fn conv_w_mat(w: &[f32], s: &Conv2dShape) -> Vec<f32> {
     let kk = s.k();
     debug_assert_eq!(w.len(), s.cout * kk);
@@ -211,16 +277,46 @@ fn conv_w_mat(w: &[f32], s: &Conv2dShape) -> Vec<f32> {
 }
 
 /// Forward conv: out [B,Cout,OH,OW] = x * w (+ bias per channel).
+///
+/// im2col columns go straight into the GEMM engine's packed A layout; the
+/// OIHW weight matrix `[Cout, K]` is the engine's B operand under a
+/// transpose flag (the pack absorbs the old `conv_w_mat` transpose).  bf16
+/// quantizes both operands *before* packing — identical values to the old
+/// quantize-the-columns path, since padding zeros round to zero.
 pub fn conv2d(s: &Conv2dShape, x: &[f32], w: &[f32], bias: Option<&[f32]>, bf16: bool) -> Vec<f32> {
     let (oh, ow) = s.out_hw();
     let kk = s.k();
     let m = s.batch * oh * ow;
-    let cols = im2col(x, s);
-    let wm = conv_w_mat(w, s);
-    let out_mat = if bf16 {
-        ops::matmul(&ops::quantize_bf16(&cols), m, kk, &ops::quantize_bf16(&wm), s.cout)
+    debug_assert_eq!(w.len(), s.cout * kk);
+    let cfg = KernelConfig::current();
+    let g = Gemm::plan_with(cfg, m, kk, s.cout);
+    let out_mat = if g.cfg.naive {
+        // Bench-baseline path: the original row-major cols + naive loops.
+        let cols = im2col(x, s);
+        let wm = conv_w_mat(w, s);
+        if bf16 {
+            super::kernel::naive::nn(
+                &ops::quantize_bf16(&cols),
+                m,
+                kk,
+                &ops::quantize_bf16(&wm),
+                s.cout,
+            )
+        } else {
+            super::kernel::naive::nn(&cols, m, kk, &wm, s.cout)
+        }
     } else {
-        ops::matmul(&cols, m, kk, &wm, s.cout)
+        let (xq, wq);
+        let (xr, wr) = if bf16 {
+            xq = ops::quantize_bf16(x);
+            wq = ops::quantize_bf16(w);
+            (xq.as_slice(), wq.as_slice())
+        } else {
+            (x, w)
+        };
+        let pa = im2col_packed(xr, s, &cfg);
+        let pb = PackedB::from_slice(wr, kk, s.cout, true, g.rule.nr);
+        g.run_packed(&pa, &pb)
     };
     // [B*OH*OW, Cout] -> NCHW + bias.
     let mut out = vec![0f32; s.batch * s.cout * oh * ow];
@@ -269,19 +365,32 @@ pub fn conv2d_bwd(
         }
     }
 
-    // dW = colsT @ dout, [K, Cout] -> OIHW.
-    let cols = im2col(x, s);
-    let dwm = ops::matmul_tn(&cols, m, kk, &dout_mat, s.cout);
-    let mut dw = vec![0f32; s.cout * kk];
-    for co in 0..s.cout {
-        for ki in 0..kk {
-            dw[co * kk + ki] = dwm[ki * s.cout + co];
+    // dW[co, ki] = sum_m dout[m, co] * cols[m, ki] — one TN GEMM landing
+    // directly in OIHW order (the old path computed [K, Cout] and
+    // transposed back).  A = dout_mat under the transpose flag, B = im2col
+    // columns packed straight into panel layout.
+    let cfg = KernelConfig::current();
+    let gw = Gemm::plan_with(cfg, s.cout, m, kk);
+    let dw = if gw.cfg.naive {
+        let cols = im2col(x, s);
+        let dwm = super::kernel::naive::tn(&cols, m, kk, &dout_mat, s.cout);
+        let mut dw = vec![0f32; s.cout * kk];
+        for co in 0..s.cout {
+            for ki in 0..kk {
+                dw[co * kk + ki] = dwm[ki * s.cout + co];
+            }
         }
-    }
+        dw
+    } else {
+        let pa = PackedA::from_slice(&dout_mat, s.cout, m, true, gw.rule.mr);
+        let pb = im2col_packed_b(x, s);
+        gw.run_packed(&pa, &pb)
+    };
 
     let dx = if want_dx {
-        let wm = conv_w_mat(w, s);
-        let dcols = ops::matmul_nt(&dout_mat, m, s.cout, &wm, kk);
+        // dcols[m, ki] = sum_co dout[m, co] * w[co, ki]: the OIHW weight
+        // matrix is already the [Cout, K] B operand — plain NN GEMM.
+        let dcols = super::kernel::gemm(m, s.cout, kk, &dout_mat, false, w, false);
         Some(col2im(&dcols, s))
     } else {
         None
@@ -1060,15 +1169,17 @@ impl ConvNet {
                     let (wt, bt) = (params[pi], params[pi + 1]);
                     pi += 2;
                     let mut a = if bf16 {
-                        ops::matmul(
-                            &ops::quantize_bf16(x),
+                        super::kernel::gemm(
                             batch,
                             nin,
-                            &ops::quantize_bf16(&wt.data),
                             nout,
+                            &ops::quantize_bf16(x),
+                            false,
+                            &ops::quantize_bf16(&wt.data),
+                            false,
                         )
                     } else {
-                        ops::matmul(x, batch, nin, &wt.data, nout)
+                        super::kernel::gemm(batch, nin, nout, x, false, &wt.data, false)
                     };
                     ops::add_bias(&mut a, batch, &bt.data);
                     bn.push(None);
@@ -1147,11 +1258,15 @@ impl ConvNet {
             let dx = match l.op {
                 LayerOp::Dense { nin, nout } => {
                     let wt = params[starts[li]];
-                    let dw = ops::matmul_tn(x, batch, nin, &grad, nout);
+                    // dW = xT @ dA (TN), dX = dA @ WT (NT) — both through
+                    // the engine's transpose flags.
+                    let dw = super::kernel::gemm(nin, batch, nout, x, true, &grad, false);
                     let db = ops::bias_grad(&grad, batch, nout);
                     grads[starts[li]] = dw;
                     grads[starts[li] + 1] = db;
-                    need_dx.then(|| ops::matmul_nt(&grad, batch, nout, &wt.data, nin))
+                    need_dx.then(|| {
+                        super::kernel::gemm(batch, nout, nin, &grad, false, &wt.data, true)
+                    })
                 }
                 LayerOp::Conv { .. } => {
                     let wt = params[starts[li]];
@@ -1287,6 +1402,49 @@ mod tests {
         assert_eq!(a.len(), b.len(), "{what}: length");
         for (i, (x, y)) in a.iter().zip(b).enumerate() {
             assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// The packed im2col writers produce exactly the panels the engine's
+    /// generic packers would build from the row-major reference columns —
+    /// so the no-materialization fast path cannot drift from the oracle
+    /// layout.  Covers odd shapes, rect kernels and the parallel fill.
+    #[test]
+    fn packed_im2col_matches_row_major_reference() {
+        let mut rng = Rng::new(21);
+        for s in [
+            Conv2dShape { batch: 2, cin: 3, ih: 8, iw: 8, cout: 4, kh: 4, kw: 4, stride: 2, pad_h: 1, pad_w: 1 },
+            Conv2dShape { batch: 3, cin: 2, ih: 5, iw: 7, cout: 3, kh: 3, kw: 2, stride: 1, pad_h: 1, pad_w: 0 },
+            Conv2dShape { batch: 1, cin: 1, ih: 3, iw: 3, cout: 1, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1 },
+        ] {
+            let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+            let (oh, ow) = s.out_hw();
+            let (m, kk) = (s.batch * oh * ow, s.k());
+            let cols = im2col(&x, &s);
+            let want_a = PackedA::from_slice(&cols, m, kk, false, crate::layout::plan::CPU_MR);
+            for threads in [1, 3] {
+                let got = im2col_packed(&x, &s, &KernelConfig::with_threads(threads));
+                assert_eq!((got.m, got.k), (want_a.m, want_a.k));
+                for i in 0..m {
+                    for ki in 0..kk {
+                        assert_eq!(
+                            got.panel(i / got.mr)[ki * got.mr + i % got.mr],
+                            cols[i * kk + ki],
+                            "packed A ({i},{ki}) threads={threads}"
+                        );
+                    }
+                }
+            }
+            let got_b = im2col_packed_b(&x, &s);
+            for ki in 0..kk {
+                for i in 0..m {
+                    assert_eq!(
+                        got_b.panel(ki / got_b.nr)[i * got_b.nr + ki % got_b.nr],
+                        cols[i * kk + ki],
+                        "packed B ({i},{ki})"
+                    );
+                }
+            }
         }
     }
 

@@ -35,60 +35,17 @@ use crate::util::json;
 
 /// The reference op set, public so parity tests (vs. the Python oracles in
 /// `python/compile/kernels/ref.py`) can drive the kernels directly.
+///
+/// `matmul` now routes through the packed, parallel `runtime::kernel::Gemm`
+/// engine (bit-exact with the old naive loop — the goldens pin the engine).
+/// The old `matmul_tn`/`matmul_nt` duplicates are gone: call sites use the
+/// engine's transpose flags, and their loop bodies survive only as the
+/// oracle in `runtime::kernel::naive`.
 pub mod ops {
-    /// (M,K) x (K,N) -> (M,N), f32 accumulate, row-major.
+    /// (M,K) x (K,N) -> (M,N), f32 accumulate, row-major — executed by the
+    /// planned GEMM engine.
     pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-        debug_assert_eq!(a.len(), m * k);
-        debug_assert_eq!(b.len(), k * n);
-        let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-        out
-    }
-
-    /// aT x b with a:(M,K), b:(M,N) -> (K,N).  Backprop: dW = xT @ dA.
-    pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-        debug_assert_eq!(a.len(), m * k);
-        debug_assert_eq!(b.len(), m * n);
-        let mut out = vec![0f32; k * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let brow = &b[i * n..(i + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                let orow = &mut out[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-        out
-    }
-
-    /// a x bT with a:(M,K), b:(N,K) -> (M,N).  Backprop: dX = dA @ WT.
-    pub fn matmul_nt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-        debug_assert_eq!(a.len(), m * k);
-        debug_assert_eq!(b.len(), n * k);
-        let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0f32;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
-                }
-                out[i * n + j] = acc;
-            }
-        }
-        out
+        super::super::kernel::gemm(m, k, n, a, false, b, false)
     }
 
     /// h[r, :] += b for every row r.
@@ -973,42 +930,6 @@ mod tests {
         // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
         let y = ops::matmul(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[5.0, 6.0, 7.0, 8.0], 2);
         assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
-    }
-
-    #[test]
-    fn transposed_matmuls_agree_with_plain() {
-        let mut rng = Rng::new(3);
-        let (m, k, n) = (4, 5, 3);
-        let mut a = vec![0f32; m * k];
-        let mut b = vec![0f32; m * n];
-        rng.fill_gaussian(&mut a, 0.0, 1.0);
-        rng.fill_gaussian(&mut b, 0.0, 1.0);
-        // aT b via explicit transpose + plain matmul.
-        let mut at = vec![0f32; k * m];
-        for i in 0..m {
-            for j in 0..k {
-                at[j * m + i] = a[i * k + j];
-            }
-        }
-        let want = ops::matmul(&at, k, m, &b, n);
-        let got = ops::matmul_tn(&a, m, k, &b, n);
-        for (w, g) in want.iter().zip(&got) {
-            assert!((w - g).abs() < 1e-5, "{w} vs {g}");
-        }
-        // a bT via explicit transpose.
-        let mut c = vec![0f32; n * k];
-        rng.fill_gaussian(&mut c, 0.0, 1.0);
-        let mut ct = vec![0f32; k * n];
-        for i in 0..n {
-            for j in 0..k {
-                ct[j * n + i] = c[i * k + j];
-            }
-        }
-        let want = ops::matmul(&a, m, k, &ct, n);
-        let got = ops::matmul_nt(&a, m, k, &c, n);
-        for (w, g) in want.iter().zip(&got) {
-            assert!((w - g).abs() < 1e-5, "{w} vs {g}");
-        }
     }
 
     #[test]

@@ -86,6 +86,39 @@ fn ref_cpu_matmul_matches_python_reference_kernels() {
     }
 }
 
+/// The packed parallel engine behind `ops::matmul` is BIT-identical to the
+/// retained naive oracle on the golden inputs (any thread count): the
+/// engine accumulates each output element's K terms ascending through one
+/// f32 chain, exactly the naive order.  This is why the kernel refactor
+/// needs no new parity tolerance — `ops::matmul` above already pins the
+/// engine against ref.py at the pre-existing 1e-5.
+#[test]
+fn gemm_engine_is_bit_exact_with_naive_oracle_on_golden_inputs() {
+    use paragan::runtime::kernel::{naive, Gemm, KernelConfig};
+    let g = golden();
+    for case in g.get("matmul").as_arr().expect("matmul cases") {
+        let seed = case.get("seed").as_usize().unwrap() as u64;
+        let m = case.get("m").as_usize().unwrap();
+        let k = case.get("k").as_usize().unwrap();
+        let n = case.get("n").as_usize().unwrap();
+        let mut lcg = Lcg(seed);
+        let x = lcg.fill(m * k);
+        let w = lcg.fill(k * n);
+        let want = naive::nn(&x, m, k, &w, n);
+        for threads in [1, 4] {
+            let got = Gemm::plan_with(KernelConfig::with_threads(threads), m, k, n)
+                .run(&x, false, &w, false);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} threads {threads} [{i}]: engine {a} vs naive {b}"
+                );
+            }
+        }
+    }
+}
+
 /// Pull a golden case's flat f32 output.
 fn case_y(case: &json::Json) -> Vec<f32> {
     case.get("y")
