@@ -1,0 +1,186 @@
+//! Dist scaling bench: REAL multi-replica dcgan32 training at 1/2/4/8
+//! replicas, sync (all-reduce) vs async (parameter server), measured on the
+//! ref backend and compared against the fig9 cluster simulator's
+//! weak-scaling prediction for the same worker counts.  Writes
+//! `BENCH_dist.json` next to `BENCH_kernels.json`.
+//!
+//! Per-replica GEMM threads are pinned to 1 so the replica count is the
+//! ONLY parallelism axis being measured (otherwise the 1-replica baseline
+//! grabs every core and the comparison measures scheduler contention, not
+//! scaling).  In-process replicas share one host's cores, so measured
+//! efficiency at replica counts beyond the core count degrades by
+//! construction — the simulator models a pod where every worker owns its
+//! chip; the delta between the two is exactly what the fig9 cross-check
+//! (`repro::fig9_crosscheck`) reports.
+//!
+//! `--test` runs the smoke protocol (1/2 replicas, tiny step budget) — the
+//! CI gate: sync multi-replica aggregate steps/sec must beat the 1-replica
+//! baseline; every async run's mean applied-update staleness must respect
+//! the parameter-server bound (defense-in-depth — the trainer itself
+//! hard-errors on violation); and every mdgan run's mean fake-batch
+//! staleness must respect its queue-capacity backpressure bound.
+
+use paragan::coordinator::TrainConfig;
+use paragan::dist::{train_dist, DistMode, DistResult};
+use paragan::repro::simulated_dcgan32_efficiency;
+use paragan::util::json::{arr, num, obj, s as js, write_json, Json};
+use paragan::util::table::{f2, pct, Table};
+
+const STALENESS_BOUND: u64 = 2;
+
+fn run(mode: DistMode, replicas: usize, steps: u64) -> DistResult {
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        model,
+        steps,
+        seed: 42,
+        eval_batches: 2,
+        log_every: 0,
+        threads: Some(1), // one GEMM worker per replica: replicas ARE the parallelism
+        replicas,
+        dist: paragan::dist::DistConfig {
+            mode,
+            staleness_bound: STALENESS_BOUND,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    train_dist(&cfg).unwrap_or_else(|e| panic!("{} x{replicas}: {e:?}", mode.as_str()))
+}
+
+/// Weak-scaling efficiency vs the 1-replica sync baseline: per-replica
+/// aggregate throughput retained.
+fn efficiency(base: &DistResult, r: &DistResult) -> f64 {
+    (r.aggregate_steps_per_sec / r.replicas as f64)
+        / (base.aggregate_steps_per_sec / base.replicas.max(1) as f64)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let steps: u64 = if smoke { 4 } else { 24 };
+    let sync_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    // async/mdgan need both a G and a D side.
+    let par_counts: &[usize] = if smoke { &[2] } else { &[2, 4, 8] };
+
+    let mut t = Table::new(
+        if smoke {
+            "dist scaling — dcgan32, ref backend (smoke)"
+        } else {
+            "dist scaling — dcgan32, ref backend"
+        },
+        &["mode", "replicas", "agg steps/s", "efficiency", "sim eff", "staleness", "drops"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base: Option<DistResult> = None;
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    let mut record = |mode: DistMode, r: DistResult, base: &Option<DistResult>| {
+        let eff = base.as_ref().map(|b| efficiency(b, &r)).unwrap_or(1.0);
+        let sim_eff = if r.replicas >= 2 && mode == DistMode::Sync {
+            simulated_dcgan32_efficiency(r.replicas, 8, if smoke { 80 } else { 150 })
+        } else {
+            f64::NAN
+        };
+        t.row(vec![
+            mode.as_str().into(),
+            r.replicas.to_string(),
+            f2(r.aggregate_steps_per_sec),
+            pct(eff),
+            if sim_eff.is_nan() { "-".into() } else { pct(sim_eff) },
+            f2(r.train.mean_staleness),
+            r.stale_drops.to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("mode", js(mode.as_str())),
+            ("replicas", num(r.replicas as f64)),
+            ("steps", num(r.train.steps as f64)),
+            ("wall_secs", num(r.train.wall_secs)),
+            ("steps_per_sec", num(r.train.steps_per_sec())),
+            ("aggregate_steps_per_sec", num(r.aggregate_steps_per_sec)),
+            ("images_per_sec", num(r.train.images_per_sec())),
+            ("efficiency", num(eff)),
+            ("sim_efficiency", num(if sim_eff.is_nan() { -1.0 } else { sim_eff })),
+            ("mean_staleness", num(r.train.mean_staleness)),
+            ("mean_fake_staleness", num(r.mean_fake_staleness)),
+            ("staleness_bound", num(STALENESS_BOUND as f64)),
+            ("stale_drops", num(r.stale_drops as f64)),
+            ("swaps", num(r.swaps as f64)),
+            ("replica_steps", num(r.replica_steps as f64)),
+        ]));
+        r
+    };
+
+    // --- sync sweep (the weak-scaling curve; n=1 is the baseline) ---
+    for &n in sync_counts {
+        let r = run(DistMode::Sync, n, steps);
+        let r = record(DistMode::Sync, r, &base);
+        if base.is_none() {
+            base = Some(r);
+        } else if n > 1 {
+            let b = base.as_ref().unwrap();
+            if r.aggregate_steps_per_sec <= b.aggregate_steps_per_sec {
+                gate_failures.push(format!(
+                    "sync {n}-replica aggregate {:.2} steps/s does not beat the \
+                     1-replica baseline {:.2}",
+                    r.aggregate_steps_per_sec, b.aggregate_steps_per_sec
+                ));
+            }
+        }
+    }
+
+    // --- async (parameter server) and mdgan sweeps ---
+    let queue_cap = TrainConfig::default().img_buff_cap as f64;
+    for mode in [DistMode::Async, DistMode::MdGan] {
+        for &n in par_counts {
+            let r = run(mode, n, steps);
+            if mode == DistMode::Async && r.train.mean_staleness > STALENESS_BOUND as f64 {
+                gate_failures.push(format!(
+                    "async {n}-replica mean staleness {:.2} exceeds bound {STALENESS_BOUND}",
+                    r.train.mean_staleness
+                ));
+            }
+            // mdgan's staleness bound is the per-D task-queue capacity: G's
+            // blocking send caps how far a queued fake batch can age.
+            if mode == DistMode::MdGan && r.mean_fake_staleness > queue_cap {
+                gate_failures.push(format!(
+                    "mdgan {n}-replica mean fake staleness {:.2} exceeds queue cap {queue_cap}",
+                    r.mean_fake_staleness
+                ));
+            }
+            record(mode, r, &base);
+        }
+    }
+    drop(record);
+
+    println!("{}", t.render());
+
+    let json = obj(vec![
+        ("format", js("paragan-bench-dist")),
+        ("version", num(1.0)),
+        ("smoke", js(if smoke { "true" } else { "false" })),
+        ("model", js("dcgan32")),
+        ("batch", num(paragan::runtime::refgen::REF_BATCH as f64)),
+        ("threads_per_replica", num(1.0)),
+        ("steps", num(steps as f64)),
+        ("runs", arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&json, &mut text);
+    text.push('\n');
+    std::fs::write("BENCH_dist.json", &text).expect("writing BENCH_dist.json");
+    println!("wrote BENCH_dist.json");
+
+    if let Some(xcheck) =
+        paragan::repro::fig9_crosscheck(std::path::Path::new("BENCH_dist.json"))
+    {
+        println!("{}", xcheck.render());
+    }
+
+    if !gate_failures.is_empty() {
+        for f in &gate_failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -29,7 +29,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
-use super::trainer::{batch_to_tensors, make_pipeline, sample_y, sample_z, Evaluator, Prologue, TrainConfig, TrainResult};
+use super::trainer::{make_pipeline, sample_y, sample_z, Evaluator, Prologue, TrainConfig, TrainResult};
 use crate::metrics::tracker::Series;
 use crate::runtime::{run_step, ParamStore, Runtime};
 use crate::util::rng::Rng;
@@ -102,15 +102,13 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
             for _ in 0..d_cfg.policy.d_steps_per_g {
                 step += 1;
                 let real = pipeline.next_batch().context("real batch (D)")?;
-                let (real_t, y_t) = batch_to_tensors(&real, &d_img_shape, d_n_classes);
-                let mut d_in = BTreeMap::new();
-                d_in.insert("real".to_string(), real_t);
-                d_in.insert("fake".to_string(), fake.images.clone());
-                if d_n_classes > 0 {
-                    // Use the labels the fakes were generated with.
-                    let y = fake.labels.clone().or(y_t).context("labels")?;
-                    d_in.insert("y".to_string(), y);
-                }
+                let d_in = super::trainer::d_step_inputs(
+                    &real,
+                    &d_img_shape,
+                    d_n_classes,
+                    fake.images.clone(),
+                    fake.labels.clone(),
+                )?;
                 let lr = d_scaling.lr_at(step) * d_cfg.policy.discriminator.lr_mult;
                 let outs = run_step(
                     &rt, &d_spec, step as f32, lr as f32, params, slots, None, &d_in,

@@ -39,6 +39,13 @@ pub struct TrainConfig {
     /// `None` keeps the process default (`PARAGAN_THREADS`, else
     /// `available_parallelism`); `Some(n)` pins it for this process.
     pub threads: Option<usize>,
+    /// Model replicas for distributed training (`crate::dist`).  1 = the
+    /// classic single-replica trainers; > 1 routes through
+    /// `dist::train_dist` in the mode `dist.mode` selects.
+    pub replicas: usize,
+    /// Replication knobs (mode, all-reduce topology, staleness bound,
+    /// MD-GAN swap period) — active when `replicas > 1`.
+    pub dist: crate::dist::DistConfig,
 }
 
 impl Default for TrainConfig {
@@ -58,6 +65,8 @@ impl Default for TrainConfig {
             log_every: 25,
             img_buff_cap: 2,
             threads: None,
+            replicas: 1,
+            dist: crate::dist::DistConfig::default(),
         }
     }
 }
@@ -72,7 +81,14 @@ pub struct TrainResult {
     pub steps: u64,
     pub wall_secs: f64,
     pub images_seen: u64,
-    /// Mean staleness of fake batches consumed by D (0 for sync).
+    /// Mean staleness of the run's asynchrony — the quantity its staleness
+    /// bound governs: fake batches consumed by D for the two-thread async
+    /// scheme and `dist` mdgan (bounded by the img_buff capacity /
+    /// per-D queue backpressure), applied-update basis staleness for the
+    /// `dist` async parameter server (bounded by `DistConfig::
+    /// staleness_bound` by construction).  0 for the sync schemes.
+    /// `DistResult::mean_fake_staleness` always carries the fake-batch
+    /// number when the two differ.
     pub mean_staleness: f64,
 }
 
@@ -101,6 +117,29 @@ pub fn batch_to_tensors(b: &Batch, img_shape: &[usize], n_classes: usize) -> (Ho
         HostTensor::new("y", vec![b.batch_size, n_classes], y)
     });
     (images, labels)
+}
+
+/// Assemble a d_step's data inputs from a real pipeline batch and a
+/// received fake batch.  Conditional models train D on the labels the
+/// fakes were GENERATED with (falling back to the real batch's labels) —
+/// one definition of that rule, shared by the two-thread async trainer and
+/// every `dist` consumer of fake batches.
+pub fn d_step_inputs(
+    real: &Batch,
+    img_shape: &[usize],
+    n_classes: usize,
+    fake_images: HostTensor,
+    fake_labels: Option<HostTensor>,
+) -> Result<BTreeMap<String, HostTensor>> {
+    let (real_t, y_t) = batch_to_tensors(real, img_shape, n_classes);
+    let mut d_in = BTreeMap::new();
+    d_in.insert("real".to_string(), real_t);
+    d_in.insert("fake".to_string(), fake_images);
+    if n_classes > 0 {
+        let y = fake_labels.or(y_t).context("labels for conditional d_step")?;
+        d_in.insert("y".to_string(), y);
+    }
+    Ok(d_in)
 }
 
 /// Gaussian latent batch.

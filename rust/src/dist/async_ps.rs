@@ -1,0 +1,329 @@
+//! Asynchronous replication: N×G / M×D workers around two bounded-staleness
+//! parameter servers — the paper's §5.1 scheme generalized from the
+//! two-thread trainer to real worker pools.
+//!
+//! Dataflow (cf. `coordinator::async_trainer`'s G-thread/D-thread picture):
+//!
+//! ```text
+//!   G workers ──fake batches──▶ shared `ImgBuff` ──▶ D workers
+//!   G workers ◀──D snapshots─── `ParamServer` (D) ◀── D grads
+//!   G workers ──G grads───────▶ `ParamServer` (G)
+//! ```
+//!
+//! * Every worker PULLS a `(params, version)` snapshot, computes gradients
+//!   on its own data/noise shard, and PUSHes them back; the server applies
+//!   them through the artifact's own optimizer, or DROPS them when the
+//!   basis exceeds the staleness bound (`DistConfig::staleness_bound`) — so
+//!   applied-update staleness respects the bound by construction.
+//! * The asymmetric policy survives intact: D consumes stale fake batches
+//!   from the bounded `ImgBuff` (capacity = fake-staleness backpressure,
+//!   exactly the two-thread scheme), G always reads the CURRENT published D
+//!   from the D server, and `d_steps_per_g` sets the work ratio.
+//! * The run ends when the G server's version reaches `cfg.steps`: the
+//!   TOTAL number of G updates is the same as a single-replica run — more
+//!   workers buy wall-clock, not extra steps.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::param_server::{ParamServer, Push};
+use super::{bound_scaling, DistMode, DistResult};
+use crate::coordinator::buffers::{ImgBuff, TaggedBatch};
+use crate::coordinator::trainer::{d_step_inputs, sample_y, sample_z, Prologue, TrainConfig};
+use crate::coordinator::TrainResult;
+use crate::metrics::tracker::Series;
+use crate::runtime::{run_step_grads, Runtime};
+use crate::util::rng::Rng;
+
+enum Report {
+    G { step: u64, loss: f64 },
+    D { step: u64, loss: f64, fake_staleness: u64 },
+}
+
+/// How an N-replica budget splits into G and D workers: half each, G gets
+/// the floor but never less than one of either side.
+pub fn split_workers(replicas: usize) -> (usize, usize) {
+    let g = (replicas / 2).max(1);
+    (g, replicas.saturating_sub(g).max(1))
+}
+
+struct WorkerCtx {
+    cfg: TrainConfig,
+    g_srv: Arc<ParamServer>,
+    d_srv: Arc<ParamServer>,
+    buff: Arc<ImgBuff>,
+    reports: mpsc::Sender<Report>,
+}
+
+fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
+    let cfg = &ctx.cfg;
+    let manifest = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let g_spec = ctx.g_srv.spec().clone();
+    rt.prepare(&g_spec)?;
+    let n_slots = model.optimizers[&cfg.policy.generator.optimizer].n_slots;
+    let slots = super::zero_slots(&model.params_g, n_slots);
+    let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, replica as u64);
+    let mut images = 0u64;
+
+    loop {
+        let (g_params, g_ver) = ctx.g_srv.pull();
+        if g_ver >= cfg.steps {
+            break;
+        }
+        // The CURRENT published D — never waits on D's in-flight update.
+        let (d_params, _) = ctx.d_srv.pull();
+
+        let mut g_in = BTreeMap::new();
+        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        let y = (model.n_classes > 0)
+            .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
+        if let Some(y) = &y {
+            g_in.insert("y".to_string(), y.clone());
+        }
+        let (grads, mut outs) =
+            run_step_grads(&rt, &g_spec, &g_params, &slots, Some(&d_params), &g_in)?;
+        // Release the pulled snapshots BEFORE pushing: a held Arc forces
+        // the server's copy-on-write (`Arc::make_mut`) to clone the whole
+        // store on every apply.
+        drop(g_params);
+        drop(d_params);
+        let loss = outs["loss"].data[0] as f64;
+        let fake = outs.remove("fake").context("g_step fake output")?;
+        images += model.batch as u64;
+
+        // Ship the fakes first (D-side progress never depends on whether
+        // our gradient survives the staleness check)…
+        if !ctx.buff.push(TaggedBatch { images: fake, labels: y, produced_at: g_ver }) {
+            break; // D side gone
+        }
+        // …then offer the gradient; a drop just means faster peers already
+        // moved the server past our basis.
+        match ctx.g_srv.push(&rt, &grads, g_ver)? {
+            Push::Applied { step, .. } => {
+                let _ = ctx.reports.send(Report::G { step, loss });
+            }
+            Push::Stale { .. } => {}
+            Push::Done => break, // step budget reached while we computed
+        }
+    }
+    Ok(images)
+}
+
+fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
+    let cfg = &ctx.cfg;
+    let manifest = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let d_spec = ctx.d_srv.spec().clone();
+    rt.prepare(&d_spec)?;
+    let n_slots = model.optimizers[&cfg.policy.discriminator.optimizer].n_slots;
+    let slots = super::zero_slots(&model.params_d, n_slots);
+    let pipeline = super::replica_pipeline(model, cfg.n_modes, cfg.seed, replica);
+    let mut images = 0u64;
+
+    loop {
+        // Consume a (possibly stale) fake batch; None = G side finished.
+        let Some(fake) = ctx.buff.pop_batch() else { break };
+        // Post-pop read, like the two-thread trainer: G kept advancing
+        // while we waited, and that age is real.
+        let fake_staleness = ctx.g_srv.version().saturating_sub(fake.produced_at);
+        for _ in 0..cfg.policy.d_steps_per_g {
+            let real = pipeline.next_batch().context("real batch (dist async)")?;
+            let d_in = d_step_inputs(
+                &real,
+                &model.img_shape,
+                model.n_classes,
+                fake.images.clone(),
+                fake.labels.clone(),
+            )?;
+            let (d_params, d_ver) = ctx.d_srv.pull();
+            let (grads, outs) =
+                run_step_grads(&rt, &d_spec, &d_params, &slots, None, &d_in)?;
+            drop(d_params); // free the snapshot so the server can update in place
+            let loss = outs["loss"].data[0] as f64;
+            images += model.batch as u64;
+            if let Push::Applied { step, .. } = ctx.d_srv.push(&rt, &grads, d_ver)? {
+                let _ = ctx.reports.send(Report::D { step, loss, fake_staleness });
+            }
+        }
+    }
+    pipeline.shutdown();
+    Ok(images)
+}
+
+pub(crate) fn train_async_ps(cfg: &TrainConfig) -> Result<DistResult> {
+    let n = cfg.replicas;
+    anyhow::ensure!(
+        n >= 2,
+        "async dist mode needs at least 2 replicas (N×G / M×D); got {n}"
+    );
+    let (n_g, n_d) = split_workers(n);
+
+    // Validate + init on the main thread: both servers start from the SAME
+    // deterministic init as every other trainer.
+    let pro = Prologue::new(cfg)?;
+    let model = pro.manifest.model(&cfg.model)?;
+    let (g_params, g_slots) =
+        pro.init_net(cfg, &model.params_g, &cfg.policy.generator.optimizer, 0x61)?;
+    let (d_params, d_slots) =
+        pro.init_net(cfg, &model.params_d, &cfg.policy.discriminator.optimizer, 0xd1)?;
+    let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
+    let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
+    let scaling = bound_scaling(cfg)?;
+    let threads_partition = super::partition_kernel_threads(cfg, n);
+
+    let bound = cfg.dist.staleness_bound;
+    let (g_mult, d_mult) =
+        (cfg.policy.generator.lr_mult, cfg.policy.discriminator.lr_mult);
+    // G's version counter IS the global step budget: cap it so racing G
+    // workers cannot apply more than cfg.steps updates.  D's side is
+    // work-driven (it ends when the fake stream drains), so no cap.
+    let g_srv = {
+        let scaling = scaling.clone();
+        ParamServer::new(g_spec, g_params, g_slots, bound, Some(cfg.steps), move |step| {
+            scaling.lr_at(step) * g_mult
+        })
+    };
+    let d_srv = {
+        let scaling = scaling.clone();
+        ParamServer::new(d_spec, d_params, d_slots, bound, None, move |step| {
+            scaling.lr_at(step) * d_mult
+        })
+    };
+    let buff = ImgBuff::new(cfg.img_buff_cap);
+    let (report_tx, report_rx) = mpsc::channel::<Report>();
+
+    // Tear the exchange down whenever a worker leaves WITHOUT finishing —
+    // via Err or via panic (a plain `if err` check is skipped by unwinds;
+    // with every D worker gone, G would block in `buff.push` forever).
+    struct CloseOnDrop {
+        buff: Arc<ImgBuff>,
+        armed: bool,
+    }
+    impl Drop for CloseOnDrop {
+        fn drop(&mut self) {
+            if self.armed {
+                self.buff.close();
+            }
+        }
+    }
+    let spawn = |replica: usize, is_g: bool| {
+        let ctx = WorkerCtx {
+            cfg: cfg.clone(),
+            g_srv: g_srv.clone(),
+            d_srv: d_srv.clone(),
+            buff: buff.clone(),
+            reports: report_tx.clone(),
+        };
+        std::thread::spawn(move || {
+            let mut guard = CloseOnDrop { buff: ctx.buff.clone(), armed: true };
+            let out = if is_g { g_worker(&ctx, replica) } else { d_worker(&ctx, replica) };
+            guard.armed = out.is_err();
+            out
+        })
+    };
+
+    let t0 = Instant::now();
+    let g_handles: Vec<_> = (0..n_g).map(|r| spawn(r, true)).collect();
+    let d_handles: Vec<_> = (n_g..n_g + n_d).map(|r| spawn(r, false)).collect();
+    drop(report_tx);
+
+    let mut images_seen = 0u64;
+    let mut first_err: Option<anyhow::Error> = None;
+    let join = |handles: Vec<std::thread::JoinHandle<Result<u64>>>,
+                    images: &mut u64,
+                    first_err: &mut Option<anyhow::Error>| {
+        for h in handles {
+            match h.join().map_err(|_| anyhow!("dist async worker panicked")) {
+                Ok(Ok(n)) => *images += n,
+                Ok(Err(e)) | Err(e) => *first_err = first_err.take().or(Some(e)),
+            }
+        }
+    };
+    join(g_handles, &mut images_seen, &mut first_err);
+    buff.close(); // G side done: let D workers drain and exit
+    join(d_handles, &mut images_seen, &mut first_err);
+    if let Some(e) = first_err {
+        return Err(e.context("dist async worker failed"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(threads_partition); // fleet joined: restore full parallelism
+
+    // Fold the report stream into ordered series.
+    let mut g_pts = Vec::new();
+    let mut d_pts = Vec::new();
+    let mut fake_stale_sum = 0u64;
+    let mut fake_stale_n = 0u64;
+    while let Ok(r) = report_rx.try_recv() {
+        match r {
+            Report::G { step, loss } => g_pts.push((step, loss)),
+            Report::D { step, loss, fake_staleness } => {
+                d_pts.push((step, loss));
+                fake_stale_sum += fake_staleness;
+                fake_stale_n += 1;
+            }
+        }
+    }
+    let g_loss = super::series_from("g_loss", g_pts);
+    let d_loss = super::series_from("d_loss", d_pts);
+
+    let gs = g_srv.stats();
+    let ds = d_srv.stats();
+    let applied = gs.applied + ds.applied;
+    let mean_staleness =
+        (gs.staleness_sum + ds.staleness_sum) as f64 / applied.max(1) as f64;
+    anyhow::ensure!(
+        gs.staleness_max <= bound && ds.staleness_max <= bound,
+        "parameter server applied an update beyond the staleness bound"
+    );
+
+    let final_g = (*g_srv.pull().0).clone();
+    let final_d = d_srv.pull().0;
+    anyhow::ensure!(
+        final_g.all_finite() && final_d.all_finite(),
+        "non-finite parameters after dist async run"
+    );
+    let mut fid = Series::new("fid", 1.0);
+    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    let (f, c) = super::final_eval(cfg, &final_g)?;
+    fid.push(cfg.steps, f);
+    mode_cov.push(cfg.steps, c);
+
+    // The bound ScalingManager schedule at each applied G step (pre per-net
+    // multiplier — same convention as the sync and mdgan recorders).
+    let mut lr = Series::new("lr", 0.05);
+    for step in 1..=g_srv.version() {
+        lr.push(step, scaling.lr_at(step));
+    }
+
+    Ok(DistResult {
+        train: TrainResult {
+            g_loss,
+            d_loss,
+            fid,
+            mode_cov,
+            steps: cfg.steps,
+            wall_secs: wall,
+            images_seen,
+            mean_staleness,
+        },
+        mode: DistMode::Async,
+        replicas: n,
+        // G updates ONLY — the same unit every mode reports (sync counts N
+        // lockstep G steps per global step, mdgan counts its G steps), so
+        // the bench's cross-mode efficiency column compares like with like;
+        // D-side work shows up in images_seen and the d_loss series.
+        replica_steps: gs.applied,
+        aggregate_steps_per_sec: gs.applied as f64 / wall.max(1e-9),
+        lr,
+        stale_drops: gs.dropped + ds.dropped,
+        swaps: 0,
+        mean_fake_staleness: fake_stale_sum as f64 / fake_stale_n.max(1) as f64,
+        final_g,
+    })
+}

@@ -1,0 +1,350 @@
+//! The replica exchange layer: an in-process all-reduce over flat f32
+//! tensors.
+//!
+//! [`Exchange`] is the convention every execution path must follow (see the
+//! ROADMAP PR-4 decision): replicas deposit their local gradients and get
+//! back the element-wise MEAN, combined in a FIXED topology-determined
+//! order so the result is bit-identical regardless of thread arrival order
+//! — that is what makes N-replica sync training deterministic (same seed ⇒
+//! same parameters) and lets the parity tests document a single summation
+//! tolerance instead of a race.
+//!
+//! [`InProcAllReduce`] is the shared-memory implementation behind
+//! `dist::sync`: a reusable two-phase barrier (deposit → combine →
+//! collect).  Two combine schedules are provided, mirroring the collective
+//! topologies the paper's interconnect model simulates
+//! (`cluster::network::ring_allreduce_time`):
+//!
+//! * [`Topology::Tree`] — pairwise halving: partial(i) += partial(i + s)
+//!   for s = 1, 2, 4, …  (the order of a binary reduction tree);
+//! * [`Topology::Ring`] — each of R chunks is summed walking the ring from
+//!   a different start rank (the order of ring reduce-scatter).
+//!
+//! The two schedules produce different f32 roundings of the same sum (both
+//! within the documented summation-order tolerance of `dist_parity`); each
+//! is individually deterministic.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+/// Which deterministic combine schedule the all-reduce uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    #[default]
+    Tree,
+    Ring,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s {
+            "tree" => Ok(Topology::Tree),
+            "ring" => Ok(Topology::Ring),
+            other => bail!("unknown all-reduce topology '{other}' (tree|ring)"),
+        }
+    }
+}
+
+/// The exchange convention: deposit per-replica tensors, receive the mean.
+/// Implementations must be deterministic in the deposited VALUES alone —
+/// never in thread timing.
+pub trait Exchange: Send + Sync {
+    /// Number of participating replicas.
+    fn replicas(&self) -> usize;
+
+    /// Blocking collective: replica `r` deposits its flat tensors and the
+    /// call returns once all replicas of this round have arrived, yielding
+    /// the element-wise mean (same tensor count/lengths as deposited).
+    /// Every replica must call this the same number of times with the same
+    /// tensor layout; an aborted exchange returns Err on all replicas.
+    fn all_reduce_mean(&self, replica: usize, tensors: Vec<Vec<f32>>) -> Result<Arc<Vec<Vec<f32>>>>;
+
+    /// Poison the exchange: every blocked or future call returns Err.  A
+    /// replica that fails mid-step calls this so its peers unwind instead
+    /// of waiting forever at the barrier.
+    fn abort(&self);
+}
+
+struct ReduceState {
+    /// Per-replica deposits for the current round.
+    slots: Vec<Option<Vec<Vec<f32>>>>,
+    arrived: usize,
+    /// Combined mean of the current round, present once all have arrived.
+    result: Option<Arc<Vec<Vec<f32>>>>,
+    /// How many replicas have collected `result`; the last one resets the
+    /// round so the barrier is reusable.
+    taken: usize,
+    rounds: u64,
+    aborted: bool,
+}
+
+/// Shared-memory all-reduce over N replica threads (see module docs).
+pub struct InProcAllReduce {
+    n: usize,
+    topo: Topology,
+    st: Mutex<ReduceState>,
+    cv: Condvar,
+}
+
+impl InProcAllReduce {
+    pub fn new(n: usize, topo: Topology) -> Arc<InProcAllReduce> {
+        assert!(n >= 1);
+        Arc::new(InProcAllReduce {
+            n,
+            topo,
+            st: Mutex::new(ReduceState {
+                slots: (0..n).map(|_| None).collect(),
+                arrived: 0,
+                result: None,
+                taken: 0,
+                rounds: 0,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Completed reduction rounds (tests / stats).
+    pub fn rounds(&self) -> u64 {
+        self.st.lock().unwrap().rounds
+    }
+
+    /// Combine deposited tensors in the topology's fixed order and divide
+    /// by N.  Pure function of the deposits — called by whichever replica
+    /// arrives last, with identical results no matter which that is.
+    fn combine(topo: Topology, mut slots: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
+        let n = slots.len();
+        if n == 1 {
+            return slots.pop().unwrap();
+        }
+        let n_tensors = slots[0].len();
+        match topo {
+            Topology::Tree => {
+                // Pairwise halving: after the loop, slots[0] holds the sum
+                // combined in binary-tree order.
+                let mut stride = 1;
+                while stride < n {
+                    let mut i = 0;
+                    while i + stride < n {
+                        let (a, b) = slots.split_at_mut(i + stride);
+                        let (dst, src) = (&mut a[i], &b[0]);
+                        for t in 0..n_tensors {
+                            for (x, y) in dst[t].iter_mut().zip(&src[t]) {
+                                *x += y;
+                            }
+                        }
+                        i += stride * 2;
+                    }
+                    stride *= 2;
+                }
+                let mut sum = std::mem::take(&mut slots[0]);
+                for t in sum.iter_mut() {
+                    for x in t.iter_mut() {
+                        *x /= n as f32;
+                    }
+                }
+                sum
+            }
+            Topology::Ring => {
+                // Ring reduce-scatter order: tensor t's chunk c is summed
+                // walking the ring starting at rank (c % n).
+                let mut sum: Vec<Vec<f32>> =
+                    slots[0].iter().map(|t| vec![0f32; t.len()]).collect();
+                for t in 0..n_tensors {
+                    let len = sum[t].len();
+                    let chunk = len.div_ceil(n).max(1);
+                    for (c, lo) in (0..len).step_by(chunk).enumerate() {
+                        let hi = (lo + chunk).min(len);
+                        for walk in 0..n {
+                            let rank = (c + walk) % n;
+                            let src = &slots[rank][t][lo..hi];
+                            for (x, y) in sum[t][lo..hi].iter_mut().zip(src) {
+                                *x += y;
+                            }
+                        }
+                    }
+                    for x in sum[t].iter_mut() {
+                        *x /= n as f32;
+                    }
+                }
+                sum
+            }
+        }
+    }
+}
+
+impl Exchange for InProcAllReduce {
+    fn replicas(&self) -> usize {
+        self.n
+    }
+
+    fn all_reduce_mean(&self, replica: usize, tensors: Vec<Vec<f32>>) -> Result<Arc<Vec<Vec<f32>>>> {
+        let mut st = self.st.lock().unwrap();
+        // A validation failure must POISON the barrier, not just error the
+        // replica that detected it: the peers are (or will be) parked
+        // waiting for a result that can no longer exist.  `fail` marks the
+        // abort and wakes everyone before surfacing the error.
+        let fail = |mut st: std::sync::MutexGuard<'_, ReduceState>,
+                    msg: String|
+         -> anyhow::Error {
+            st.aborted = true;
+            drop(st);
+            self.cv.notify_all();
+            anyhow::anyhow!(msg)
+        };
+        if replica >= self.n {
+            return Err(fail(st, format!("replica {replica} out of range (n={})", self.n)));
+        }
+        // Phase 0: wait out the previous round's collection (a replica can
+        // only lap the barrier after it collected, so this clears quickly).
+        while st.result.is_some() && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.aborted {
+            bail!("all-reduce aborted by a failing replica");
+        }
+        if st.slots[replica].is_some() {
+            return Err(fail(st, format!("replica {replica} deposited twice in one round")));
+        }
+        st.slots[replica] = Some(tensors);
+        st.arrived += 1;
+        if st.arrived == self.n {
+            // Last arrival combines — deterministic in the deposits alone.
+            let deposits: Vec<Vec<Vec<f32>>> =
+                st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+            let lens: Vec<usize> = deposits[0].iter().map(|t| t.len()).collect();
+            if !deposits.iter().all(|d| {
+                d.len() == lens.len() && d.iter().zip(&lens).all(|(t, &l)| t.len() == l)
+            }) {
+                return Err(fail(st, "replicas deposited mismatched tensor layouts".into()));
+            }
+            st.result = Some(Arc::new(Self::combine(self.topo, deposits)));
+            st.arrived = 0;
+            st.rounds += 1;
+            self.cv.notify_all();
+        }
+        // Phase 1: wait for the round's result, collect it.
+        while st.result.is_none() && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.aborted {
+            bail!("all-reduce aborted by a failing replica");
+        }
+        let out = st.result.as_ref().unwrap().clone();
+        st.taken += 1;
+        if st.taken == self.n {
+            st.taken = 0;
+            st.result = None;
+            self.cv.notify_all();
+        }
+        Ok(out)
+    }
+
+    fn abort(&self) {
+        self.st.lock().unwrap().aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_threads(n: usize, topo: Topology, make: impl Fn(usize) -> Vec<Vec<f32>> + Sync) -> Vec<Arc<Vec<Vec<f32>>>> {
+        let ex = InProcAllReduce::new(n, topo);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let ex = ex.clone();
+                    let tensors = make(r);
+                    s.spawn(move || ex.all_reduce_mean(r, tensors).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn mean_is_correct_for_both_topologies() {
+        for topo in [Topology::Tree, Topology::Ring] {
+            let out = run_threads(4, topo, |r| {
+                vec![vec![r as f32; 5], vec![10.0 * r as f32]]
+            });
+            for o in &out {
+                assert_eq!(o[0], vec![1.5; 5], "{topo:?}");
+                assert_eq!(o[1], vec![15.0], "{topo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_replica_is_identity() {
+        let out = run_threads(1, Topology::Tree, |_| vec![vec![1.0, 2.0, 3.0]]);
+        assert_eq!(*out[0], vec![vec![1.0, 2.0, 3.0]]);
+    }
+
+    #[test]
+    fn combine_is_deterministic_in_values_not_arrival() {
+        // Same deposits through repeated rounds with different thread
+        // interleavings must produce bit-identical results.
+        let mk = |r: usize| -> Vec<Vec<f32>> {
+            let mut rng = crate::util::rng::Rng::replica_stream(9, r as u64);
+            let mut v = vec![0f32; 257];
+            rng.fill_gaussian(&mut v, 0.0, 1.0);
+            vec![v]
+        };
+        for topo in [Topology::Tree, Topology::Ring] {
+            let a = run_threads(5, topo, mk);
+            for _ in 0..3 {
+                let b = run_threads(5, topo, mk);
+                assert_eq!(a[0][0], b[0][0], "{topo:?} nondeterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_is_reusable_across_rounds() {
+        let n = 3;
+        let ex = InProcAllReduce::new(n, Topology::Tree);
+        std::thread::scope(|s| {
+            for r in 0..n {
+                let ex = ex.clone();
+                s.spawn(move || {
+                    for round in 0..10u32 {
+                        let v = vec![vec![(r as f32) + round as f32]];
+                        let out = ex.all_reduce_mean(r, v).unwrap();
+                        assert_eq!(out[0][0], 1.0 + round as f32); // mean(0,1,2)+round
+                    }
+                });
+            }
+        });
+        assert_eq!(ex.rounds(), 10);
+    }
+
+    #[test]
+    fn abort_unblocks_waiters() {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let ex2 = ex.clone();
+        let t = std::thread::spawn(move || ex2.all_reduce_mean(0, vec![vec![1.0]]));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ex.abort();
+        assert!(t.join().unwrap().is_err());
+        assert!(ex.all_reduce_mean(1, vec![vec![1.0]]).is_err());
+    }
+
+    #[test]
+    fn mismatched_layouts_poison_the_barrier_for_everyone() {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let ex2 = ex.clone();
+        let t = std::thread::spawn(move || ex2.all_reduce_mean(0, vec![vec![1.0, 2.0]]));
+        // Whichever replica arrives last detects the mismatch and POISONS
+        // the barrier — the peer unblocks with Err instead of hanging, with
+        // no caller-side abort() needed.
+        let r1 = ex.all_reduce_mean(1, vec![vec![1.0]]);
+        let r0 = t.join().unwrap();
+        assert!(r0.is_err() && r1.is_err());
+        // And the exchange stays poisoned for future rounds.
+        assert!(ex.all_reduce_mean(1, vec![vec![1.0]]).is_err());
+    }
+}

@@ -1,0 +1,412 @@
+//! MD-GAN topology (arXiv:1811.03850): one generator, K discriminator
+//! replicas, each training on a DISJOINT data shard.
+//!
+//! Per G step:
+//! * G sends each D_k its OWN fresh fake batch (distinct latents per D —
+//!   the paper's X^{(d)} split) through a bounded per-D task queue, whose
+//!   capacity is the fake-staleness backpressure bound exactly like the
+//!   async scheme's `img_buff`;
+//! * G computes its gradient against EVERY D's latest published snapshot
+//!   and applies the MEAN over the K feedbacks — the paper's aggregation
+//!   step, expressed over the same `run_step_grads`/`apply_step` machinery
+//!   the other dist modes use;
+//! * each D_k trains locally (full fused steps, its own optimizer state)
+//!   on (own shard real, received fakes) and republishes its snapshot.
+//!
+//! Every `swap_every` G steps the discriminators SWAP parameters (and
+//! optimizer state — momentum travels with the weights): G sends each D a
+//! swap task; each D mails its state back and installs the state of a
+//! seeded-random rotation peer.  This is the paper's defense against each
+//! D overfitting its local shard, and it is what makes topology choice
+//! measurable here (cf. arXiv:2107.08681 on topology-dependent dynamics).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{bound_scaling, DistMode, DistResult};
+use crate::coordinator::buffers::{SnapshotCell, TaggedBatch};
+use crate::coordinator::trainer::{d_step_inputs, sample_y, sample_z, Prologue, TrainConfig};
+use crate::coordinator::TrainResult;
+use crate::exec::{bounded, Receiver, Sender};
+use crate::metrics::tracker::Series;
+use crate::runtime::{apply_step, run_step, run_step_grads, ParamStore, Runtime};
+use crate::util::rng::Rng;
+
+/// One D parameter+slot bundle in flight during a swap.
+type DState = (ParamStore, Vec<ParamStore>);
+
+/// D_k's init salt — ONE definition, because the coordinator pre-seeds each
+/// `SnapshotCell` with the same init the worker derives; if the two sites
+/// computed it independently, a drift would silently hand G a D that never
+/// exists.
+fn d_init_salt(k: usize) -> u64 {
+    0xd1 ^ ((k as u64 + 1) << 8)
+}
+
+/// What G sends a discriminator worker.
+enum DTask {
+    /// A fresh fake batch to train against.
+    Batch(TaggedBatch),
+    /// Swap round: mail the current state back, install the replacement.
+    Swap { reply: mpsc::Sender<(usize, DState)>, incoming: mpsc::Receiver<DState> },
+}
+
+struct DReport {
+    g_step: u64,
+    loss: f64,
+    fake_staleness: u64,
+}
+
+struct DWorker {
+    k: usize,
+    cfg: TrainConfig,
+    tasks: Receiver<DTask>,
+    /// Own sender half, used only to close the queue on error so G's
+    /// blocking sends unwind instead of waiting on a dead worker.
+    own_tx: Sender<DTask>,
+    snapshot: Arc<SnapshotCell<ParamStore>>,
+    g_step_now: Arc<AtomicU64>,
+    reports: mpsc::Sender<DReport>,
+}
+
+fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
+    let cfg = &w.cfg;
+    let pro = Prologue::new(cfg)?;
+    let model = pro.manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
+    rt.prepare(&d_spec)?;
+    // Distinct init salt per D: MD-GAN's discriminators are independent
+    // models, not lockstep replicas.
+    let (mut d_params, mut d_slots) = pro.init_net(
+        cfg,
+        &model.params_d,
+        &cfg.policy.discriminator.optimizer,
+        d_init_salt(w.k),
+    )?;
+    w.snapshot.publish(d_params.snapshot(), 0);
+    // Same replica-bound schedule as every other dist mode — num_workers is
+    // the real replica count, never the config's fiction.
+    let scaling = bound_scaling(cfg)?;
+    let pipeline = super::replica_pipeline(model, cfg.n_modes, cfg.seed, w.k + 1);
+    let mut local_step = 0u64;
+    let mut images = 0u64;
+
+    while let Ok(task) = w.tasks.recv() {
+        match task {
+            DTask::Batch(fake) => {
+                let fake_staleness = w
+                    .g_step_now
+                    .load(Ordering::SeqCst)
+                    .saturating_sub(fake.produced_at);
+                for _ in 0..cfg.policy.d_steps_per_g {
+                    local_step += 1;
+                    let real = pipeline.next_batch().context("real batch (mdgan)")?;
+                    let d_in = d_step_inputs(
+                        &real,
+                        &model.img_shape,
+                        model.n_classes,
+                        fake.images.clone(),
+                        fake.labels.clone(),
+                    )?;
+                    let lr = scaling.lr_at(local_step) * cfg.policy.discriminator.lr_mult;
+                    let outs = run_step(
+                        &rt,
+                        &d_spec,
+                        local_step as f32,
+                        lr as f32,
+                        &mut d_params,
+                        &mut d_slots,
+                        None,
+                        &d_in,
+                    )?;
+                    images += model.batch as u64;
+                    let _ = w.reports.send(DReport {
+                        g_step: fake.produced_at,
+                        loss: outs["loss"].data[0] as f64,
+                        fake_staleness,
+                    });
+                }
+                w.snapshot.publish(d_params.snapshot(), local_step);
+            }
+            DTask::Swap { reply, incoming } => {
+                let outgoing = (std::mem::take(&mut d_params), std::mem::take(&mut d_slots));
+                reply
+                    .send((w.k, outgoing))
+                    .map_err(|_| anyhow!("mdgan swap coordinator gone"))?;
+                let (p, s) = incoming
+                    .recv()
+                    .map_err(|_| anyhow!("mdgan swap replacement never arrived"))?;
+                d_params = p;
+                d_slots = s;
+                w.snapshot.publish(d_params.snapshot(), local_step);
+            }
+        }
+    }
+    pipeline.shutdown();
+    Ok((d_params, images))
+}
+
+/// Orchestrate one swap round: collect every D's state, rotate by a seeded
+/// random shift, hand the states back.
+fn swap_round(
+    task_txs: &[Sender<DTask>],
+    rng: &mut Rng,
+) -> Result<()> {
+    let k_workers = task_txs.len();
+    let (reply_tx, reply_rx) = mpsc::channel::<(usize, DState)>();
+    let mut incoming_txs = Vec::with_capacity(k_workers);
+    for tx in task_txs {
+        let (itx, irx) = mpsc::channel::<DState>();
+        incoming_txs.push(itx);
+        tx.send(DTask::Swap { reply: reply_tx.clone(), incoming: irx })
+            .map_err(|_| anyhow!("mdgan D worker queue closed during swap"))?;
+    }
+    drop(reply_tx);
+    let mut states: Vec<Option<DState>> = (0..k_workers).map(|_| None).collect();
+    for _ in 0..k_workers {
+        let (k, st) = reply_rx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow!("mdgan swap: a D worker never reported its state"))?;
+        states[k] = Some(st);
+    }
+    // Seeded rotation: shift in [1, K) so every D actually moves.
+    let shift = 1 + rng.usize_below(k_workers - 1);
+    for (k, itx) in incoming_txs.iter().enumerate() {
+        let st = states[(k + shift) % k_workers]
+            .take()
+            .expect("every worker reported exactly once");
+        itx.send(st).map_err(|_| anyhow!("mdgan swap: D worker gone before hand-back"))?;
+    }
+    Ok(())
+}
+
+pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
+    let n = cfg.replicas;
+    anyhow::ensure!(
+        n >= 2,
+        "mdgan dist mode needs at least 2 replicas (1 G + K discriminators); got {n}"
+    );
+    let k_workers = n - 1;
+
+    let pro = Prologue::new(cfg)?;
+    let model = pro.manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let (mut g_params, mut g_slots) =
+        pro.init_net(cfg, &model.params_g, &cfg.policy.generator.optimizer, 0x61)?;
+    let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
+    rt.prepare(&g_spec)?;
+    let scaling = bound_scaling(cfg)?;
+    let threads_partition = super::partition_kernel_threads(cfg, n);
+
+    // Per-D plumbing: bounded task queue (cap = fake-staleness bound),
+    // latest-wins snapshot cell, shared G progress counter.
+    let g_step_now = Arc::new(AtomicU64::new(0));
+    let (report_tx, report_rx) = mpsc::channel::<DReport>();
+    let mut task_txs: Vec<Sender<DTask>> = Vec::with_capacity(k_workers);
+    let mut snapshots: Vec<Arc<SnapshotCell<ParamStore>>> = Vec::with_capacity(k_workers);
+    let mut handles = Vec::with_capacity(k_workers);
+    for k in 0..k_workers {
+        let (tx, rx) = bounded::<DTask>(cfg.img_buff_cap.max(1));
+        // Seed the cell with D_k's deterministic init (same salt the worker
+        // uses) so G's first step never races an unpublished snapshot.
+        let (d0, _) = pro.init_net(
+            cfg,
+            &model.params_d,
+            &cfg.policy.discriminator.optimizer,
+            d_init_salt(k),
+        )?;
+        let snapshot = SnapshotCell::new(d0);
+        task_txs.push(tx.clone());
+        snapshots.push(snapshot.clone());
+        let w = DWorker {
+            k,
+            cfg: cfg.clone(),
+            tasks: rx,
+            own_tx: tx,
+            snapshot,
+            g_step_now: g_step_now.clone(),
+            reports: report_tx.clone(),
+        };
+        handles.push(std::thread::spawn(move || {
+            // Close the task queue on ANY exit — Err, panic, or normal end
+            // (by then it is closed anyway, close is idempotent) — so G's
+            // blocking sends can never wait on a dead worker.
+            struct CloseOnDrop(Sender<DTask>);
+            impl Drop for CloseOnDrop {
+                fn drop(&mut self) {
+                    self.0.close();
+                }
+            }
+            let _closer = CloseOnDrop(w.own_tx.clone());
+            d_worker(&w)
+        }));
+    }
+    drop(report_tx);
+
+    let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, 0);
+    let mut swap_rng = Rng::new(cfg.seed ^ 0x5A5A);
+    let mut g_loss = Vec::new();
+    let mut lr_series = Vec::new();
+    let mut swaps = 0u64;
+    let mut g_images = 0u64;
+
+    let t0 = Instant::now();
+    let g_run = (|| -> Result<()> {
+        for step in 1..=cfg.steps {
+            g_step_now.store(step, Ordering::SeqCst);
+            let lr = scaling.lr_at(step) * cfg.policy.generator.lr_mult;
+
+            // Aggregate feedback: mean of per-D gradients, fixed D order.
+            let mut agg: Option<ParamStore> = None;
+            let mut loss_sum = 0.0f64;
+            for (k, snap) in snapshots.iter().enumerate() {
+                let (d_snap, _) = snap.latest();
+                let mut g_in = BTreeMap::new();
+                g_in.insert(
+                    "z".to_string(),
+                    sample_z(&mut z_rng, model.batch, model.z_dim),
+                );
+                let y = (model.n_classes > 0)
+                    .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
+                if let Some(y) = &y {
+                    g_in.insert("y".to_string(), y.clone());
+                }
+                let (grads, mut outs) =
+                    run_step_grads(&rt, &g_spec, &g_params, &g_slots, Some(&d_snap), &g_in)?;
+                loss_sum += outs["loss"].data[0] as f64;
+                let fake = outs.remove("fake").context("g_step fake output")?;
+                g_images += model.batch as u64;
+                // D_k gets its OWN fake batch (distinct latents).
+                task_txs[k]
+                    .send(DTask::Batch(TaggedBatch {
+                        images: fake,
+                        labels: y,
+                        produced_at: step,
+                    }))
+                    .map_err(|_| anyhow!("mdgan D worker {k} queue closed"))?;
+                agg = Some(match agg {
+                    None => grads,
+                    Some(mut acc) => {
+                        for t in grads.iter() {
+                            let a = acc.get(&t.name)?;
+                            let sum: Vec<f32> =
+                                a.data.iter().zip(&t.data).map(|(x, y)| x + y).collect();
+                            acc.set_data(&t.name, sum)?;
+                        }
+                        acc
+                    }
+                });
+            }
+            let mut agg = agg.expect("at least one D");
+            if k_workers > 1 {
+                let names: Vec<String> = agg.iter().map(|t| t.name.clone()).collect();
+                for name in names {
+                    let mean: Vec<f32> = agg
+                        .get(&name)?
+                        .data
+                        .iter()
+                        .map(|x| x / k_workers as f32)
+                        .collect();
+                    agg.set_data(&name, mean)?;
+                }
+            }
+            apply_step(
+                &rt,
+                &g_spec,
+                step as f32,
+                lr as f32,
+                &mut g_params,
+                &mut g_slots,
+                &agg,
+            )?;
+            g_loss.push((step, loss_sum / k_workers as f64));
+            lr_series.push((step, scaling.lr_at(step)));
+
+            if cfg.dist.swap_every > 0 && step % cfg.dist.swap_every == 0 && k_workers > 1 {
+                swap_round(&task_txs, &mut swap_rng)?;
+                swaps += 1;
+            }
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                log::info!(
+                    "mdgan step {step}/{}: g_loss {:.4} ({k_workers} D shards, {swaps} swaps)",
+                    cfg.steps,
+                    g_loss.last().map(|p| p.1).unwrap_or(f64::NAN),
+                );
+            }
+        }
+        Ok(())
+    })();
+
+    // End of G's run (ok or not): close every task queue so D workers
+    // drain and exit, then join them.
+    for tx in &task_txs {
+        tx.close();
+    }
+    let mut images_seen = g_images;
+    let mut first_err = g_run.err();
+    let mut finals: Vec<ParamStore> = Vec::new();
+    for h in handles {
+        match h.join().map_err(|_| anyhow!("mdgan D worker panicked")) {
+            Ok(Ok((p, imgs))) => {
+                images_seen += imgs;
+                finals.push(p);
+            }
+            Ok(Err(e)) | Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e.context("mdgan run failed"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(threads_partition); // D fleet joined: restore full parallelism
+
+    let mut d_pts = Vec::new();
+    let mut stale_sum = 0u64;
+    let mut stale_n = 0u64;
+    while let Ok(r) = report_rx.try_recv() {
+        d_pts.push((r.g_step, r.loss));
+        stale_sum += r.fake_staleness;
+        stale_n += 1;
+    }
+    anyhow::ensure!(
+        g_params.all_finite() && finals.iter().all(|p| p.all_finite()),
+        "non-finite parameters after mdgan run"
+    );
+
+    let g_loss = super::series_from("g_loss", g_loss);
+    let d_loss = super::series_from("d_loss", d_pts);
+    let lr = super::series_from("lr", lr_series);
+    let mut fid = Series::new("fid", 1.0);
+    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    let (f, c) = super::final_eval(cfg, &g_params)?;
+    fid.push(cfg.steps, f);
+    mode_cov.push(cfg.steps, c);
+
+    let mean_fake_staleness = stale_sum as f64 / stale_n.max(1) as f64;
+    Ok(DistResult {
+        train: TrainResult {
+            g_loss,
+            d_loss,
+            fid,
+            mode_cov,
+            steps: cfg.steps,
+            wall_secs: wall,
+            images_seen,
+            mean_staleness: mean_fake_staleness,
+        },
+        mode: DistMode::MdGan,
+        replicas: n,
+        replica_steps: cfg.steps,
+        aggregate_steps_per_sec: cfg.steps as f64 / wall.max(1e-9),
+        lr,
+        stale_drops: 0,
+        swaps,
+        mean_fake_staleness,
+        final_g: g_params,
+    })
+}

@@ -1,0 +1,348 @@
+//! `dist` — REAL multi-replica training over the pluggable backend.
+//!
+//! Until this module, the paper's distributed story ran only in the cluster
+//! simulator (`cluster::simulate`, Figs 1/8/9) or as the two-thread G/D
+//! async trainer.  Here N worker replicas actually execute: one OS thread
+//! per replica, each with its OWN `Runtime` (backends are thread-local by
+//! design), its own deterministic data-pipeline shard, and its own
+//! `Rng::replica_stream` noise stream.  Three coordination modes:
+//!
+//! * **sync** (`sync`) — data-parallel replicas in lockstep: every step,
+//!   each replica computes LOCAL gradients on its shard
+//!   (`runtime::step::run_step_grads`) and the replicas exchange them
+//!   through an in-process tree/ring all-reduce ([`exchange`]); the MEAN
+//!   gradient is applied identically everywhere
+//!   (`runtime::step::apply_step`), so replicas never drift — the paper's
+//!   synchronous data parallelism, executed instead of simulated.
+//! * **async** (`async_ps`) — the two-thread scheme of §5.1 generalized to
+//!   N×G / M×D workers around two bounded-staleness parameter servers
+//!   ([`param_server`]): D consumes stale fake batches through the shared
+//!   `ImgBuff`, G reads fresh D snapshots from the D server, and every
+//!   applied update's staleness is bounded by construction.
+//! * **mdgan** (`mdgan`) — MD-GAN (arXiv:1811.03850): one G, K
+//!   discriminators on disjoint data shards; G aggregates feedback from all
+//!   K D's (mean of per-D gradients) and the D's periodically swap their
+//!   parameters (+ optimizer state) under a seeded permutation.
+//!
+//! The `ScalingManager` finally drives real workers: `train_dist` binds
+//! `ScalingConfig::num_workers` to the actual replica count (mismatches are
+//! an error), so the lr scaling rules of §3.1.1 act on the run they claim
+//! to describe.
+
+pub mod async_ps;
+pub mod exchange;
+pub mod mdgan;
+pub mod param_server;
+pub mod sync;
+
+pub use exchange::{Exchange, InProcAllReduce, Topology};
+pub use param_server::{ParamServer, Push, ServerStats};
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::trainer::{make_pipeline, Evaluator, TrainConfig, TrainResult};
+use crate::coordinator::{ScalingConfig, ScalingManager};
+use crate::metrics::tracker::Series;
+use crate::pipeline::{Constant, DataPipeline, PipelineConfig, StorageNode, SynthImages};
+use crate::runtime::{Manifest, ModelManifest, ParamDef, ParamStore, Runtime};
+use crate::util::rng::Rng;
+
+/// Which replica topology `paragan train --dist-mode` runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DistMode {
+    /// All-reduce data parallelism (lockstep replicas).
+    #[default]
+    Sync,
+    /// Bounded-staleness parameter server, N×G / M×D workers.
+    Async,
+    /// MD-GAN: one G, K discriminators on disjoint shards.
+    MdGan,
+}
+
+impl DistMode {
+    pub fn parse(s: &str) -> Result<DistMode> {
+        match s {
+            "sync" => Ok(DistMode::Sync),
+            "async" => Ok(DistMode::Async),
+            "mdgan" => Ok(DistMode::MdGan),
+            other => bail!("unknown dist mode '{other}' (sync|async|mdgan)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DistMode::Sync => "sync",
+            DistMode::Async => "async",
+            DistMode::MdGan => "mdgan",
+        }
+    }
+}
+
+/// Replication knobs carried by `TrainConfig` (active when `replicas > 1`,
+/// or when `train_dist` is called directly).
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub mode: DistMode,
+    /// Combine schedule of the sync all-reduce.
+    pub topology: Topology,
+    /// Parameter-server staleness bound (async mode): an update whose basis
+    /// is more than this many versions old is dropped, never applied.
+    pub staleness_bound: u64,
+    /// MD-GAN: swap D parameters between workers every N G-steps
+    /// (0 = never swap).
+    pub swap_every: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            mode: DistMode::Sync,
+            topology: Topology::Tree,
+            staleness_bound: 2,
+            swap_every: 8,
+        }
+    }
+}
+
+/// A distributed run's outcome: the familiar `TrainResult` plus
+/// replication-specific accounting.
+#[derive(Debug)]
+pub struct DistResult {
+    pub train: TrainResult,
+    pub mode: DistMode,
+    pub replicas: usize,
+    /// Applied G updates summed over all replicas — ONE unit across modes
+    /// (sync: N lockstep replicas × `steps`; async: the G server's applied
+    /// count, == `steps`; mdgan: G's `steps`).  D-side work is visible in
+    /// `images_seen` / the d_loss series, never mixed into this count.
+    pub replica_steps: u64,
+    /// `replica_steps / wall` — the weak-scaling throughput axis
+    /// `bench_dist_scaling` plots against the fig9 simulator.
+    pub aggregate_steps_per_sec: f64,
+    /// The bound `ScalingManager` schedule sampled at each applied global
+    /// G step, BEFORE the per-net policy multipliers (the same quantity in
+    /// every mode) — pinned against a manually-built manager by the
+    /// regression tests.
+    pub lr: Series,
+    /// Async: gradient pushes dropped by the staleness bound.
+    pub stale_drops: u64,
+    /// MD-GAN: completed D-swap rounds.
+    pub swaps: u64,
+    /// Mean staleness of fake batches consumed by D workers (async/mdgan).
+    pub mean_fake_staleness: f64,
+    /// Final generator parameters (identical on every replica in sync mode
+    /// — the trainer asserts it).
+    pub final_g: ParamStore,
+}
+
+/// Bind the scaling manager to the ACTUAL replica count.  `num_workers`
+/// left at its default (1) inherits the replica count; any other value must
+/// agree with `replicas` — the old behavior where `num_workers` was a
+/// hyper-parameter-only fiction is a hard error now.
+pub fn bound_scaling(cfg: &TrainConfig) -> Result<ScalingManager> {
+    let n = cfg.replicas.max(1);
+    anyhow::ensure!(
+        cfg.scaling.num_workers == 1 || cfg.scaling.num_workers == n,
+        "ScalingConfig.num_workers ({}) disagrees with the actual replica \
+         count ({n}); set them equal, or leave num_workers at 1 to inherit \
+         the replica count",
+        cfg.scaling.num_workers,
+    );
+    Ok(ScalingManager::new(ScalingConfig { num_workers: n, ..cfg.scaling.clone() }))
+}
+
+/// Run the configured dist mode.  `replicas == 1` is allowed for sync (an
+/// all-reduce of one is the identity — the bench uses it as the scaling
+/// baseline); async and mdgan need at least 2 replicas to have both sides
+/// of the GAN working.
+pub fn train_dist(cfg: &TrainConfig) -> Result<DistResult> {
+    anyhow::ensure!(cfg.replicas >= 1, "replicas must be >= 1");
+    match cfg.dist.mode {
+        DistMode::Sync => sync::train_sync_dist(cfg),
+        DistMode::Async => async_ps::train_async_ps(cfg),
+        DistMode::MdGan => mdgan::train_mdgan(cfg),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared replica plumbing
+// ---------------------------------------------------------------------------
+
+/// Replica `r`'s private data shard: its own prefetcher over a disjoint
+/// record stream (`Rng::replica_stream`-derived dataset seed), with exactly
+/// ONE prefetch worker and no tuner so the batch sequence is a
+/// deterministic function of (seed, replica) — replicas themselves provide
+/// the parallelism, and `--replicas N` runs stay reproducible.
+pub(crate) fn replica_pipeline(
+    model: &ModelManifest,
+    n_modes: u32,
+    seed: u64,
+    replica: usize,
+) -> Arc<DataPipeline> {
+    let shard_seed = Rng::replica_stream(seed ^ 0xDA7A, replica as u64).next_u64();
+    let node = Arc::new(StorageNode::new(
+        Box::new(SynthImages {
+            c: model.img_shape[0],
+            h: model.img_shape[1],
+            w: model.img_shape[2],
+            n_modes,
+            seed: shard_seed,
+        }),
+        Box::new(Constant(20e-6)),
+        true,
+    ));
+    DataPipeline::start(
+        node,
+        PipelineConfig {
+            batch_size: model.batch,
+            initial_workers: 1,
+            initial_buffer: 2,
+            tuner: None,
+        },
+    )
+}
+
+/// Zero-valued slot banks shaped like `defs` — satisfies a step spec's slot
+/// inputs for gradient-only execution (grads are slot-independent; see
+/// `runtime::step::run_step_grads`).
+pub(crate) fn zero_slots(defs: &[ParamDef], banks: usize) -> Vec<ParamStore> {
+    (0..banks)
+        .map(|_| {
+            let mut s = ParamStore::new();
+            for def in defs {
+                s.insert(crate::runtime::HostTensor::zeros(&def.name, def.shape.clone()));
+            }
+            s
+        })
+        .collect()
+}
+
+/// Restores the process-default kernel thread count when dropped (only if
+/// this run overrode it) — the per-replica partition must not outlive the
+/// worker fleet and under-parallelize everything that follows (final eval,
+/// later runs in the same process).
+pub(crate) struct ThreadsPartition(bool);
+
+impl Drop for ThreadsPartition {
+    fn drop(&mut self) {
+        if self.0 {
+            crate::runtime::kernel::set_threads(None);
+        }
+    }
+}
+
+/// Partition the host's cores across concurrently-running replicas: unless
+/// the user pinned `--threads`, each replica's GEMM engine gets
+/// `cores / replicas` workers (min 1) so N replicas don't oversubscribe the
+/// machine N-fold.  Results are unaffected either way — the engine is
+/// thread-count invariant (PR 3).  Drop the returned guard once the worker
+/// fleet has joined.
+pub(crate) fn partition_kernel_threads(cfg: &TrainConfig, concurrent: usize) -> ThreadsPartition {
+    if cfg.threads.is_none() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        crate::runtime::kernel::set_threads(Some((cores / concurrent.max(1)).max(1)));
+        ThreadsPartition(true)
+    } else {
+        ThreadsPartition(false)
+    }
+}
+
+/// Final FID-proxy / mode-coverage eval on the main thread (dist workers
+/// are gone by now): fit real statistics, evaluate the final G.
+pub(crate) fn final_eval(cfg: &TrainConfig, g_params: &ParamStore) -> Result<(f64, f64)> {
+    let manifest = Manifest::load(&cfg.artifact_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let pipeline = make_pipeline(model, cfg.n_modes, cfg.seed ^ 0xE7A1);
+    let evaluator = Evaluator::fit(&rt, model, &pipeline, cfg.eval_batches)?;
+    pipeline.shutdown();
+    let mut rng = Rng::new(cfg.seed ^ 0xEE);
+    evaluator
+        .evaluate(&rt, model, g_params, &mut rng, cfg.eval_batches)
+        .context("final dist eval")
+}
+
+/// Sorted (step, value) pairs -> a `Series` (reports from racing workers
+/// arrive out of order; the series should not).
+pub(crate) fn series_from(name: &str, mut points: Vec<(u64, f64)>) -> Series {
+    points.sort_by_key(|&(step, _)| step);
+    let mut s = Series::new(name, 0.05);
+    for (step, v) in points {
+        s.push(step, v);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_mode_parses() {
+        assert_eq!(DistMode::parse("sync").unwrap(), DistMode::Sync);
+        assert_eq!(DistMode::parse("async").unwrap(), DistMode::Async);
+        assert_eq!(DistMode::parse("mdgan").unwrap(), DistMode::MdGan);
+        assert!(DistMode::parse("hogwild").is_err());
+        assert_eq!(DistMode::Async.as_str(), "async");
+    }
+
+    #[test]
+    fn bound_scaling_binds_or_rejects() {
+        let mut cfg = TrainConfig { replicas: 4, ..Default::default() };
+        // num_workers default (1) inherits the replica count.
+        let m = bound_scaling(&cfg).unwrap();
+        assert_eq!(m.config().num_workers, 4);
+        assert_eq!(m.global_batch(), 4 * cfg.scaling.per_worker_batch);
+        // Explicit agreement is fine.
+        cfg.scaling.num_workers = 4;
+        assert_eq!(bound_scaling(&cfg).unwrap().config().num_workers, 4);
+        // Disagreement is a hard error, not a silent fiction.
+        cfg.scaling.num_workers = 16;
+        let err = bound_scaling(&cfg).unwrap_err().to_string();
+        assert!(err.contains("16") && err.contains('4'), "{err}");
+    }
+
+    #[test]
+    fn replica_pipelines_are_disjoint_and_deterministic() {
+        let dir = crate::testkit::ref_artifact_dir();
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("refmlp").unwrap();
+        let batch_of = |replica: usize| {
+            let p = replica_pipeline(model, 4, 77, replica);
+            let b = p.next_batch().unwrap();
+            p.shutdown();
+            b.data
+        };
+        // Deterministic per replica…
+        assert_eq!(batch_of(0), batch_of(0));
+        assert_eq!(batch_of(2), batch_of(2));
+        // …and disjoint across replicas.
+        assert_ne!(batch_of(0), batch_of(1));
+        assert_ne!(batch_of(1), batch_of(2));
+    }
+
+    #[test]
+    fn zero_slots_match_defs() {
+        let defs = vec![
+            ParamDef {
+                name: "w".into(),
+                shape: vec![2, 3],
+                init: crate::runtime::Init::Normal(0.1),
+            },
+            ParamDef { name: "b".into(), shape: vec![3], init: crate::runtime::Init::Zeros },
+        ];
+        let banks = zero_slots(&defs, 2);
+        assert_eq!(banks.len(), 2);
+        assert_eq!(banks[0].get("w").unwrap().data, vec![0.0; 6]);
+        assert_eq!(banks[1].get("b").unwrap().shape, vec![3]);
+    }
+
+    #[test]
+    fn series_from_sorts_reports() {
+        let s = series_from("x", vec![(3, 3.0), (1, 1.0), (2, 2.0)]);
+        let steps: Vec<u64> = s.points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![1, 2, 3]);
+    }
+}

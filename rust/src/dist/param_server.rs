@@ -1,0 +1,285 @@
+//! In-process parameter server with the paper's bounded-staleness rule.
+//!
+//! The async dist mode runs N×G / M×D workers against two of these (one per
+//! network).  A worker `pull`s a consistent `(params, version)` snapshot,
+//! computes gradients locally (`runtime::step::run_step_grads`), and
+//! `push`es them back tagged with the version it computed against.  The
+//! server applies the update through the artifact's own optimizer
+//! (`runtime::step::apply_step` — identical math to the fused step), with
+//! the optimizer slots living server-side so momentum/variance state is
+//! never forked across workers.
+//!
+//! **Bounded staleness**: an update whose basis is more than `bound`
+//! versions behind the current parameters is DROPPED (counted, never
+//! applied), so the staleness of every applied update — and therefore
+//! `mean_staleness` — respects the bound by construction.  This is the
+//! N-worker generalization of the two-thread scheme's "img_buff capacity IS
+//! the staleness bound": there backpressure enforced it, here the server
+//! enforces it at the apply point.
+//!
+//! The learning-rate schedule is owned by the server (`lr_of(step)`), not
+//! the workers: the update number is only known at apply time, which is
+//! exactly where the `ScalingManager` schedule has to be sampled for the
+//! optimizer's bias correction and warmup to see the true global step.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::runtime::{apply_step, ArtifactSpec, ParamStore, Runtime};
+
+/// Outcome of one gradient push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Push {
+    /// Update applied as global step `step`; its basis was `staleness`
+    /// versions old (guaranteed `<= bound`).
+    Applied { step: u64, staleness: u64 },
+    /// Basis exceeded the staleness bound; gradient dropped.
+    Stale { staleness: u64 },
+    /// The server already reached its version cap (`max_version`); the
+    /// gradient is discarded and the worker should wind down.  Without the
+    /// cap, two workers racing on the last step would both apply and the
+    /// run would overshoot its step budget.
+    Done,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub applied: u64,
+    pub dropped: u64,
+    pub staleness_sum: u64,
+    pub staleness_max: u64,
+}
+
+impl ServerStats {
+    pub fn mean_staleness(&self) -> f64 {
+        self.staleness_sum as f64 / self.applied.max(1) as f64
+    }
+}
+
+struct ServerState {
+    params: Arc<ParamStore>,
+    slots: Vec<ParamStore>,
+    version: u64,
+    stats: ServerStats,
+}
+
+/// One network's central parameter store (see module docs).
+pub struct ParamServer {
+    spec: ArtifactSpec,
+    bound: u64,
+    /// Hard cap on the version counter (None = unbounded): pushes against a
+    /// capped server return [`Push::Done`] instead of applying.
+    max_version: Option<u64>,
+    lr_of: Box<dyn Fn(u64) -> f64 + Send + Sync>,
+    st: Mutex<ServerState>,
+}
+
+impl ParamServer {
+    /// `lr_of(step)` yields the learning rate for applying update number
+    /// `step` (1-based) — pass the bound `ScalingManager` schedule times
+    /// the net's policy multiplier.
+    pub fn new(
+        spec: ArtifactSpec,
+        params: ParamStore,
+        slots: Vec<ParamStore>,
+        bound: u64,
+        max_version: Option<u64>,
+        lr_of: impl Fn(u64) -> f64 + Send + Sync + 'static,
+    ) -> Arc<ParamServer> {
+        Arc::new(ParamServer {
+            spec,
+            bound,
+            max_version,
+            lr_of: Box::new(lr_of),
+            st: Mutex::new(ServerState {
+                params: Arc::new(params),
+                slots,
+                version: 0,
+                stats: ServerStats::default(),
+            }),
+        })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn bound(&self) -> u64 {
+        self.bound
+    }
+
+    /// Consistent snapshot: the parameters and the version they correspond
+    /// to.  Cheap — an `Arc` clone, no tensor copy.
+    pub fn pull(&self) -> (Arc<ParamStore>, u64) {
+        let st = self.st.lock().unwrap();
+        (st.params.clone(), st.version)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.st.lock().unwrap().version
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.st.lock().unwrap().stats.clone()
+    }
+
+    /// Offer gradients computed against version `based`.  Applies through
+    /// the artifact's optimizer under the server lock (updates serialize —
+    /// that is what defines the version order), or drops if the basis is
+    /// older than the staleness bound.
+    ///
+    /// `rt` is the CALLING worker's runtime: backends are thread-local, so
+    /// the server borrows whichever one shows up; the update math is a pure
+    /// function of (params, slots, grads, step, lr), making the result
+    /// independent of which worker's backend executes it.
+    pub fn push(&self, rt: &Runtime, grads: &ParamStore, based: u64) -> Result<Push> {
+        let mut st = self.st.lock().unwrap();
+        if let Some(cap) = self.max_version {
+            if st.version >= cap {
+                return Ok(Push::Done);
+            }
+        }
+        let staleness = st.version.saturating_sub(based);
+        if staleness > self.bound {
+            st.stats.dropped += 1;
+            return Ok(Push::Stale { staleness });
+        }
+        let step = st.version + 1;
+        let lr = (self.lr_of)(step);
+        // Copy-on-write: pullers hold `Arc` snapshots, so `make_mut` clones
+        // only while someone is actually reading; an uncontended server
+        // updates in place instead of copying the whole model every push.
+        // (On an apply error the run is torn down by the worker's `?`, so a
+        // partially-written in-place store is never trained on.)
+        let st = &mut *st;
+        let params = Arc::make_mut(&mut st.params);
+        apply_step(rt, &self.spec, step as f32, lr as f32, params, &mut st.slots, grads)?;
+        st.version = step;
+        st.stats.applied += 1;
+        st.stats.staleness_sum += staleness;
+        st.stats.staleness_max = st.stats.staleness_max.max(staleness);
+        Ok(Push::Applied { step, staleness })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, ParamStore};
+    use crate::testkit::ref_artifact_dir;
+    use crate::util::rng::Rng;
+
+    fn server_fixture_capped(
+        bound: u64,
+        max_version: Option<u64>,
+    ) -> (Runtime, Arc<ParamServer>, ParamStore) {
+        let dir = ref_artifact_dir();
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("refmlp").unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        let spec = model.artifact("d_step_adam_fp32").unwrap().clone();
+        let mut rng = Rng::new(5);
+        let params = ParamStore::init(&model.params_d, &mut rng);
+        let slots = ParamStore::init_slots(
+            &model.params_d,
+            &params,
+            &model.optimizers["adam"].slot_init,
+        );
+        // A plausible gradient: small gaussian per tensor.
+        let mut grads = ParamStore::new();
+        for t in params.iter() {
+            let mut g = vec![0f32; t.numel()];
+            rng.fill_gaussian(&mut g, 0.0, 0.01);
+            grads.insert(crate::runtime::HostTensor::new(&t.name, t.shape.clone(), g));
+        }
+        let srv = ParamServer::new(spec, params, slots, bound, max_version, |_| 1e-3);
+        (rt, srv, grads)
+    }
+
+    fn server_fixture(bound: u64) -> (Runtime, Arc<ParamServer>, ParamStore) {
+        server_fixture_capped(bound, None)
+    }
+
+    #[test]
+    fn version_cap_stops_applies() {
+        let (rt, srv, grads) = server_fixture_capped(2, Some(2));
+        for want in 1..=2u64 {
+            let (_, v) = srv.pull();
+            assert_eq!(
+                srv.push(&rt, &grads, v).unwrap(),
+                Push::Applied { step: want, staleness: 0 }
+            );
+        }
+        let frozen = srv.pull().0;
+        assert_eq!(srv.push(&rt, &grads, 2).unwrap(), Push::Done);
+        assert_eq!(srv.version(), 2);
+        assert_eq!(frozen.l2_distance(&srv.pull().0), 0.0);
+        assert_eq!(srv.stats().applied, 2);
+    }
+
+    #[test]
+    fn push_applies_and_versions_advance() {
+        let (rt, srv, grads) = server_fixture(2);
+        let (p0, v0) = srv.pull();
+        assert_eq!(v0, 0);
+        let out = srv.push(&rt, &grads, 0).unwrap();
+        assert_eq!(out, Push::Applied { step: 1, staleness: 0 });
+        let (p1, v1) = srv.pull();
+        assert_eq!(v1, 1);
+        assert!(p1.l2_distance(&p0) > 0.0, "update did not move params");
+        let s = srv.stats();
+        assert_eq!((s.applied, s.dropped), (1, 0));
+    }
+
+    #[test]
+    fn stale_pushes_are_dropped_beyond_the_bound() {
+        let (rt, srv, grads) = server_fixture(1);
+        // Advance the server 3 versions from fresh bases.
+        for _ in 0..3 {
+            let (_, v) = srv.pull();
+            srv.push(&rt, &grads, v).unwrap();
+        }
+        let before = srv.pull().0;
+        // A basis 3 behind exceeds bound 1 → dropped, params untouched.
+        let out = srv.push(&rt, &grads, 0).unwrap();
+        assert_eq!(out, Push::Stale { staleness: 3 });
+        assert_eq!(srv.version(), 3);
+        assert_eq!(before.l2_distance(&srv.pull().0), 0.0);
+        // A basis exactly `bound` behind is applied.
+        let out = srv.push(&rt, &grads, 2).unwrap();
+        assert_eq!(out, Push::Applied { step: 4, staleness: 1 });
+        let s = srv.stats();
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.staleness_max, 1);
+        assert!(s.mean_staleness() <= 1.0);
+    }
+
+    #[test]
+    fn concurrent_pushes_serialize_and_respect_bound() {
+        let (_, srv, grads) = server_fixture(2);
+        let dir = ref_artifact_dir();
+        let n_threads = 4;
+        let per = 5;
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                let srv = srv.clone();
+                let grads = grads.clone();
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let rt = Runtime::new(&dir).unwrap();
+                    for _ in 0..per {
+                        let (_, v) = srv.pull();
+                        srv.push(&rt, &grads, v).unwrap();
+                    }
+                });
+            }
+        });
+        let stats = srv.stats();
+        assert_eq!(stats.applied + stats.dropped, n_threads * per);
+        assert_eq!(srv.version(), stats.applied);
+        assert!(stats.staleness_max <= srv.bound(), "bound violated");
+        assert!(stats.mean_staleness() <= srv.bound() as f64);
+        assert!(srv.pull().0.all_finite());
+    }
+}

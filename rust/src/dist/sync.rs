@@ -1,0 +1,274 @@
+//! Synchronous data-parallel replication: N lockstep replicas around the
+//! in-process all-reduce.
+//!
+//! Per global step, every replica: draws a REAL batch from its own shard,
+//! generates fakes from its own latent stream, computes LOCAL gradients
+//! (`run_step_grads` — forward+backward only), exchanges them through
+//! [`super::exchange`] (mean, fixed combine order), and applies the reduced
+//! gradient through the artifact's own optimizer (`apply_step`).  Because
+//! every replica starts from the same init (same seeds as the single-replica
+//! trainers) and applies identical updates, the replicas never drift — the
+//! trainer asserts bitwise agreement at the end.  One scalar rides along
+//! with each gradient exchange: the local loss, so the recorded loss
+//! curves are cross-replica means for free.
+//!
+//! Equivalence contract (pinned in `tests/dist_parity.rs`): with the
+//! bit-exact GEMM engine, a 2-replica step at per-replica batch B matches a
+//! single-replica batch-2B step up to f32 summation order — the losses are
+//! batch MEANS, so mean-of-grads over equal shards IS the full-batch grad.
+//! (Conv models with BatchNorm use per-replica batch statistics, like
+//! unsynced BatchNorm in real data-parallel training, so the contract is
+//! exact only for BN-free nets.)
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::exchange::{Exchange, InProcAllReduce};
+use super::{bound_scaling, DistResult};
+use crate::coordinator::trainer::{
+    batch_to_tensors, d_step_inputs, sample_y, sample_z, Prologue, TrainConfig,
+};
+use crate::coordinator::TrainResult;
+use crate::metrics::tracker::Series;
+use crate::runtime::{apply_step, run_inference, run_step_grads, ParamStore, Runtime};
+use crate::util::rng::Rng;
+
+/// What one replica thread hands back.
+struct ReplicaOutcome {
+    g_loss: Vec<(u64, f64)>,
+    d_loss: Vec<(u64, f64)>,
+    lr: Vec<(u64, f64)>,
+    images: u64,
+    g_params: ParamStore,
+    d_params: ParamStore,
+}
+
+/// All-reduce `grads` (in place) together with a scalar loss; returns the
+/// cross-replica mean loss.  The loss rides as one extra 1-element tensor.
+fn reduce_with_loss(
+    ex: &dyn Exchange,
+    replica: usize,
+    grads: &mut ParamStore,
+    loss: f64,
+) -> Result<f64> {
+    let mut tensors: Vec<Vec<f32>> = grads.iter().map(|t| t.data.clone()).collect();
+    tensors.push(vec![loss as f32]);
+    let reduced = ex.all_reduce_mean(replica, tensors)?;
+    let names: Vec<String> = grads.iter().map(|t| t.name.clone()).collect();
+    for (name, data) in names.iter().zip(reduced.iter()) {
+        grads.set_data(name, data.clone())?;
+    }
+    Ok(reduced.last().expect("loss tensor")[0] as f64)
+}
+
+fn sync_worker(
+    cfg: &TrainConfig,
+    replica: usize,
+    n: usize,
+    ex: &InProcAllReduce,
+) -> Result<ReplicaOutcome> {
+    let pro = Prologue::new(cfg)?;
+    let model = pro.manifest.model(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+
+    // Same init seeds as the single-replica trainers: every replica starts
+    // from identical parameters (replication, not ensembling).
+    let (mut g_params, mut g_slots) =
+        pro.init_net(cfg, &model.params_g, &cfg.policy.generator.optimizer, 0x61)?;
+    let (mut d_params, mut d_slots) =
+        pro.init_net(cfg, &model.params_d, &cfg.policy.discriminator.optimizer, 0xd1)?;
+
+    let g_spec = model.artifact(&cfg.policy.g_step_key())?.clone();
+    let d_spec = model.artifact(&cfg.policy.d_step_key())?.clone();
+    let gen_spec = model.artifact("generate_fp32")?.clone();
+    for spec in [&g_spec, &d_spec, &gen_spec] {
+        rt.prepare(spec)?;
+    }
+
+    let scaling = bound_scaling(cfg)?;
+    let pipeline = super::replica_pipeline(model, cfg.n_modes, cfg.seed, replica);
+    let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, replica as u64);
+
+    let mut g_loss = Vec::new();
+    let mut d_loss = Vec::new();
+    let mut lr_series = Vec::new();
+    let mut images = 0u64;
+
+    for step in 1..=cfg.steps {
+        let lr = scaling.lr_at(step);
+
+        // --- D phase: local grads on (own real shard, own fakes), mean
+        // across replicas, identical apply ---
+        for _ in 0..cfg.policy.d_steps_per_g {
+            let real = pipeline.next_batch().context("real batch (dist sync)")?;
+            let mut gen_in = BTreeMap::new();
+            gen_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+            // Conditional models generate with the real batch's labels (the
+            // sync scheme's pairing); `d_step_inputs` then reuses them.
+            let y_t = (model.n_classes > 0)
+                .then(|| batch_to_tensors(&real, &model.img_shape, model.n_classes).1)
+                .flatten();
+            if let Some(y) = &y_t {
+                gen_in.insert("y".to_string(), y.clone());
+            }
+            let fake = run_inference(&rt, &gen_spec, &g_params, &gen_in)?
+                .remove("images")
+                .context("generate")?;
+            let d_in = d_step_inputs(&real, &model.img_shape, model.n_classes, fake, y_t)?;
+            let (mut grads, outs) =
+                run_step_grads(&rt, &d_spec, &d_params, &d_slots, None, &d_in)?;
+            let local_loss = outs["loss"].data[0] as f64;
+            let mean_loss = reduce_with_loss(ex, replica, &mut grads, local_loss)?;
+            apply_step(
+                &rt,
+                &d_spec,
+                step as f32,
+                (lr * cfg.policy.discriminator.lr_mult) as f32,
+                &mut d_params,
+                &mut d_slots,
+                &grads,
+            )?;
+            d_loss.push((step, mean_loss));
+            images += model.batch as u64;
+        }
+
+        // --- G phase against the freshly (identically) updated D ---
+        let mut g_in = BTreeMap::new();
+        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        if model.n_classes > 0 {
+            g_in.insert("y".to_string(), sample_y(&mut z_rng, model.batch, model.n_classes));
+        }
+        let (mut grads, outs) =
+            run_step_grads(&rt, &g_spec, &g_params, &g_slots, Some(&d_params), &g_in)?;
+        let local_loss = outs["loss"].data[0] as f64;
+        let mean_loss = reduce_with_loss(ex, replica, &mut grads, local_loss)?;
+        apply_step(
+            &rt,
+            &g_spec,
+            step as f32,
+            (lr * cfg.policy.generator.lr_mult) as f32,
+            &mut g_params,
+            &mut g_slots,
+            &grads,
+        )?;
+        g_loss.push((step, mean_loss));
+        lr_series.push((step, lr));
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 && replica == 0 {
+            log::info!(
+                "dist sync step {step}/{}: g_loss {:.4} d_loss {:.4} lr {:.2e} ({n} replicas)",
+                cfg.steps,
+                g_loss.last().map(|p| p.1).unwrap_or(f64::NAN),
+                d_loss.last().map(|p| p.1).unwrap_or(f64::NAN),
+                lr
+            );
+        }
+    }
+    pipeline.shutdown();
+    Ok(ReplicaOutcome { g_loss, d_loss, lr: lr_series, images, g_params, d_params })
+}
+
+pub(crate) fn train_sync_dist(cfg: &TrainConfig) -> Result<DistResult> {
+    let n = cfg.replicas.max(1);
+    // Validate policy/artifacts + num_workers agreement BEFORE spawning, so
+    // config errors surface once, cleanly.
+    Prologue::new(cfg)?;
+    bound_scaling(cfg)?;
+    let threads_partition = super::partition_kernel_threads(cfg, n);
+
+    let ex = InProcAllReduce::new(n, cfg.dist.topology);
+    let t0 = Instant::now();
+    // Poison the barrier whenever a replica leaves WITHOUT finishing — via
+    // Err or via panic/unwind.  A plain `if err { abort() }` would be
+    // skipped by a panic, parking every peer (and the join below) forever.
+    struct AbortOnDrop {
+        ex: std::sync::Arc<InProcAllReduce>,
+        armed: bool,
+    }
+    impl Drop for AbortOnDrop {
+        fn drop(&mut self) {
+            if self.armed {
+                self.ex.abort();
+            }
+        }
+    }
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let cfg = cfg.clone();
+            let ex = ex.clone();
+            std::thread::spawn(move || {
+                let mut guard = AbortOnDrop { ex: ex.clone(), armed: true };
+                let out = sync_worker(&cfg, r, n, &ex);
+                guard.armed = out.is_err();
+                out
+            })
+        })
+        .collect();
+    let mut outcomes = Vec::with_capacity(n);
+    let mut first_err = None;
+    for h in handles {
+        match h.join().map_err(|_| anyhow!("dist sync replica thread panicked")) {
+            Ok(Ok(o)) => outcomes.push(o),
+            Ok(Err(e)) | Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e.context("dist sync replica failed"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // Workers are gone: give the final eval (and whatever runs next in this
+    // process) the full core count back.
+    drop(threads_partition);
+
+    // Lockstep invariant: identical reduced grads + deterministic apply ⇒
+    // bitwise-identical replicas.  A drift here means the exchange or the
+    // apply path broke determinism — fail loudly.
+    for (r, o) in outcomes.iter().enumerate().skip(1) {
+        anyhow::ensure!(
+            o.g_params.l2_distance(&outcomes[0].g_params) == 0.0
+                && o.d_params.l2_distance(&outcomes[0].d_params) == 0.0,
+            "sync replicas drifted: replica {r} differs from replica 0"
+        );
+    }
+
+    let images_seen: u64 = outcomes.iter().map(|o| o.images).sum();
+    let first = &outcomes[0];
+    anyhow::ensure!(
+        first.g_params.all_finite() && first.d_params.all_finite(),
+        "non-finite parameters after dist sync run"
+    );
+
+    let g_loss = super::series_from("g_loss", first.g_loss.clone());
+    let d_loss = super::series_from("d_loss", first.d_loss.clone());
+    let lr = super::series_from("lr", first.lr.clone());
+    let mut fid = Series::new("fid", 1.0);
+    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    let (f, c) = super::final_eval(cfg, &first.g_params)?;
+    fid.push(cfg.steps, f);
+    mode_cov.push(cfg.steps, c);
+
+    let replica_steps = n as u64 * cfg.steps;
+    Ok(DistResult {
+        train: TrainResult {
+            g_loss,
+            d_loss,
+            fid,
+            mode_cov,
+            steps: cfg.steps,
+            wall_secs: wall,
+            images_seen,
+            mean_staleness: 0.0,
+        },
+        mode: super::DistMode::Sync,
+        replicas: n,
+        replica_steps,
+        aggregate_steps_per_sec: replica_steps as f64 / wall.max(1e-9),
+        lr,
+        stale_drops: 0,
+        swaps: 0,
+        mean_fake_staleness: 0.0,
+        final_g: outcomes.into_iter().next().unwrap().g_params,
+    })
+}

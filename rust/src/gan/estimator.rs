@@ -14,6 +14,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::coordinator::{train_async, train_sync, OptimizationPolicy, ScalingConfig, TrainConfig, TrainResult};
+use crate::dist::{self, DistMode, DistResult};
 
 /// Which of the paper's two update schemes (Fig. 5) to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +30,9 @@ pub enum UpdateScheme {
 pub struct Estimator {
     cfg: TrainConfig,
     scheme: UpdateScheme,
+    /// Whether `dist_mode()` was called: an EXPLICIT mode always wins; only
+    /// the default carries a `scheme(Async)` intent over to replication.
+    dist_mode_explicit: bool,
 }
 
 impl Estimator {
@@ -36,6 +40,7 @@ impl Estimator {
         Estimator {
             cfg: TrainConfig { model: model.to_string(), ..Default::default() },
             scheme: UpdateScheme::Sync,
+            dist_mode_explicit: false,
         }
     }
 
@@ -94,17 +99,66 @@ impl Estimator {
         self.cfg.log_every = n;
         self
     }
+    /// Model replicas (`> 1` routes `train()` through `dist::train_dist`).
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.cfg.replicas = n.max(1);
+        self
+    }
+    /// Replication mode for `--replicas > 1` runs (sync | async | mdgan).
+    pub fn dist_mode(mut self, mode: DistMode) -> Self {
+        self.cfg.dist.mode = mode;
+        self.dist_mode_explicit = true;
+        self
+    }
+    /// Parameter-server staleness bound (async dist mode).
+    pub fn staleness_bound(mut self, bound: u64) -> Self {
+        self.cfg.dist.staleness_bound = bound;
+        self
+    }
 
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
     }
 
-    /// Run training end-to-end through the AOT artifacts.
+    /// Mutable access for knobs without a dedicated builder method.
+    pub fn config_mut(&mut self) -> &mut TrainConfig {
+        &mut self.cfg
+    }
+
+    /// The config a dist run actually receives: a `scheme(Async)` request
+    /// without an explicit `dist_mode()` carries its intent over to the
+    /// replicated engine (bounded-staleness parameter server) rather than
+    /// being silently ignored — an explicit `dist_mode()` always wins.
+    /// Shared by [`Estimator::train`] and [`Estimator::train_dist`] so the
+    /// two entry points can never diverge on the mode.
+    fn dist_cfg(&self) -> TrainConfig {
+        let mut cfg = self.cfg.clone();
+        if self.scheme == UpdateScheme::Async && !self.dist_mode_explicit {
+            cfg.dist.mode = DistMode::Async;
+        }
+        cfg
+    }
+
+    /// Run training end-to-end through the AOT artifacts.  With
+    /// `replicas > 1` this is real multi-replica training (`crate::dist`)
+    /// in the mode [`Estimator::dist_cfg`] resolves; otherwise the classic
+    /// single-replica schemes.
     pub fn train(&self) -> Result<TrainResult> {
+        if self.cfg.replicas > 1 {
+            return dist::train_dist(&self.dist_cfg()).map(|r| r.train);
+        }
         match self.scheme {
             UpdateScheme::Sync => train_sync(&self.cfg),
             UpdateScheme::Async => train_async(&self.cfg),
         }
+    }
+
+    /// Like [`Estimator::train`] but returns the full distributed report
+    /// (aggregate throughput, staleness accounting, lr schedule, swaps).
+    /// Runs the dist engine even at `replicas == 1` (the scaling baseline),
+    /// resolving the mode exactly like [`Estimator::train`].
+    pub fn train_dist(&self) -> Result<DistResult> {
+        dist::train_dist(&self.dist_cfg())
     }
 }
 

@@ -48,6 +48,9 @@ fn print_usage() {
          \x20                  [--g-opt OPT] [--d-opt OPT] [--precision fp32|bf16] [--d-ratio N]\n\
          \x20                  [--eval-every N] [--checkpoint-dir DIR] [--artifacts DIR] [--seed N]\n\
          \x20                  [--threads N   GEMM engine workers; default PARAGAN_THREADS or all cores]\n\
+         \x20                  [--replicas N  real multi-replica training (crate::dist)]\n\
+         \x20                  [--dist-mode sync|async|mdgan] [--dist-topology tree|ring]\n\
+         \x20                  [--staleness-bound N] [--swap-every N]\n\
          \x20 paragan repro    <table1|table2|fig1|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig13|all>\n\
          \x20 paragan simulate --workers N [--per-worker-batch N] [--framework paragan|native_tf|studiogan]\n\
          \x20 paragan info     [--artifacts DIR]"
@@ -117,6 +120,76 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("checkpoint-dir") {
         est = est.checkpoint(dir, args.get_u64("checkpoint-every", 100));
     }
+
+    // --- distributed path: --replicas N [--dist-mode sync|async|mdgan] ---
+    let replicas = args.get_usize("replicas", 1);
+    if replicas > 1 || args.get("dist-mode").is_some() {
+        // An explicit --dist-mode wins; otherwise `--scheme async` carries
+        // its intent over to the replicated engine (parameter server)
+        // instead of being silently downgraded to lockstep sync.
+        let mode = match args.get("dist-mode") {
+            Some(m) => paragan::dist::DistMode::parse(m)?,
+            None if scheme == UpdateScheme::Async => paragan::dist::DistMode::Async,
+            None => paragan::dist::DistMode::Sync,
+        };
+        est = est
+            .replicas(replicas)
+            .dist_mode(mode)
+            .staleness_bound(args.get_u64("staleness-bound", 2));
+        if est.config().checkpoint_dir.is_some() || est.config().eval_every > 0 {
+            eprintln!(
+                "warning: --checkpoint-dir/--eval-every are not yet honored by \
+                 dist runs (final eval only) — see the ROADMAP PR-4 open items"
+            );
+        }
+        {
+            let cfg = est.config_mut();
+            cfg.dist.topology =
+                paragan::dist::Topology::parse(&args.get_or("dist-topology", "tree"))?;
+            cfg.dist.swap_every = args.get_u64("swap-every", 8);
+        }
+        println!(
+            "dist: {replicas} replicas, mode {}, topology {:?}, staleness bound {}",
+            mode.as_str(),
+            est.config().dist.topology,
+            est.config().dist.staleness_bound
+        );
+        let r = est.train_dist()?;
+        let res = &r.train;
+        println!(
+            "\ndone in {:.1}s — {:.2} steps/s/replica-group, {:.2} aggregate replica-steps/s, {:.1} img/s",
+            res.wall_secs,
+            res.steps_per_sec(),
+            r.aggregate_steps_per_sec,
+            res.images_per_sec()
+        );
+        let g: Vec<f64> = res.g_loss.downsample(60).iter().map(|p| p.value).collect();
+        let d: Vec<f64> = res.d_loss.downsample(60).iter().map(|p| p.value).collect();
+        println!("g_loss {}  (last {:.4})", sparkline(&g), res.g_loss.last().unwrap_or(f64::NAN));
+        println!("d_loss {}  (last {:.4})", sparkline(&d), res.d_loss.last().unwrap_or(f64::NAN));
+        // "(bound N)" only where --staleness-bound actually governs the
+        // number (the async parameter server); mdgan's staleness is the
+        // fake-batch age bounded by queue backpressure, sync has none.
+        let bound_note = match est.config().dist.mode {
+            paragan::dist::DistMode::Async => {
+                format!(" (bound {})", est.config().dist.staleness_bound)
+            }
+            _ => String::new(),
+        };
+        println!(
+            "FID-proxy: {:.2}   mode coverage: {:.2}   mean staleness: {:.2}{}   \
+             fake-batch staleness: {:.2}   stale drops: {}   swaps: {}",
+            res.final_fid(),
+            res.mode_cov.last().unwrap_or(f64::NAN),
+            res.mean_staleness,
+            bound_note,
+            r.mean_fake_staleness,
+            r.stale_drops,
+            r.swaps
+        );
+        return Ok(());
+    }
+
     let res = est.train()?;
 
     println!(
@@ -150,7 +223,17 @@ fn cmd_repro(args: &Args) -> Result<()> {
             "fig4" => println!("{}", repro::fig4(16, steps).0.render()),
             "fig7" => println!("{}", repro::fig7(16, steps).0.render()),
             "fig8" => println!("{}", repro::fig8(steps).0.render()),
-            "fig9" => println!("{}", repro::fig9(16, steps).0.render()),
+            "fig9" => {
+                println!("{}", repro::fig9(16, steps).0.render());
+                // Measured-vs-simulated drift (warn-only): picks up the
+                // BENCH_dist.json left by `cargo bench --bench
+                // bench_dist_scaling` when one exists.
+                if let Some(t) =
+                    repro::fig9_crosscheck(std::path::Path::new("BENCH_dist.json"))
+                {
+                    println!("{}", t.render());
+                }
+            }
             "fig10" => println!("{}", repro::fig10(16, steps).0.render()),
             "fig11" => println!("{}", repro::fig11(&Default::default()).0.render()),
             "fig6" => {

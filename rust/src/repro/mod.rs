@@ -25,7 +25,7 @@ pub use fig4_op_profile::fig4;
 pub use fig6_optimizers::{fig6, Fig6Config};
 pub use fig7_throughput::fig7;
 pub use fig8_strong_scaling::fig8;
-pub use fig9_weak_scaling::fig9;
+pub use fig9_weak_scaling::{fig9, fig9_crosscheck, simulated_dcgan32_efficiency};
 pub use fig10_utilization::fig10;
 pub use fig11_pipeline::{fig11, Fig11Config};
 pub use fig13_async::{fig13, Fig13Config};

@@ -17,7 +17,7 @@
 //! coordinator's one-runtime-per-thread design; everything crossing threads
 //! stays `HostTensor`.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::artifact::ArtifactSpec;
 use super::params::HostTensor;
@@ -48,4 +48,56 @@ pub trait Backend {
 
     /// Execute one artifact.
     fn execute(&self, spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Gradient-only execution of a STEP artifact: forward + backward, no
+    /// optimizer update, nothing written back.  `inputs` is the artifact's
+    /// full spec-aligned list (slot tensors are accepted and ignored — grads
+    /// do not depend on optimizer state).  Returns `(grads, extras)`: one
+    /// gradient tensor per `param:` input, in spec input order, named and
+    /// shaped like the parameter it differentiates; plus the artifact's
+    /// `out:` tensors (loss / logits / fake).
+    ///
+    /// This is the capability `dist` replication is built on — sync
+    /// all-reduce averages these grads across replicas, and the async
+    /// parameter server applies them centrally.  Backends that only ship
+    /// fused step executables (PJRT today) keep the default and cannot run
+    /// `dist` modes; see the `dist::Exchange` convention note in ROADMAP.
+    fn execute_grads(
+        &self,
+        spec: &ArtifactSpec,
+        _inputs: &[&HostTensor],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        bail!(
+            "backend '{}' cannot extract gradients from artifact '{}' \
+             (fused step executables only); dist training needs a backend \
+             with execute_grads/apply_update support",
+            self.platform(),
+            spec.key
+        )
+    }
+
+    /// Apply a step artifact's OPTIMIZER to externally supplied (already
+    /// reduced) gradients: the counterpart of [`Backend::execute_grads`].
+    /// `params`/`slots` are the current stores in the spec's param order;
+    /// `grads` aligns 1:1 with `params`.  Returns the updated parameter
+    /// tensors and slot banks, same order.  Must be a pure deterministic
+    /// function of its arguments — `dist` sync replicas rely on identical
+    /// inputs producing bit-identical updates on every replica.
+    fn apply_update(
+        &self,
+        spec: &ArtifactSpec,
+        _step: f32,
+        _lr: f32,
+        _params: &[&HostTensor],
+        _slots: &[Vec<&HostTensor>],
+        _grads: &[&HostTensor],
+    ) -> Result<(Vec<HostTensor>, Vec<Vec<HostTensor>>)> {
+        bail!(
+            "backend '{}' cannot apply external gradients for artifact '{}'; \
+             dist training needs a backend with execute_grads/apply_update \
+             support",
+            self.platform(),
+            spec.key
+        )
+    }
 }

@@ -64,6 +64,30 @@ impl Runtime {
     ) -> Result<Vec<HostTensor>> {
         self.backend.execute(spec, inputs)
     }
+
+    /// Gradient-only execution of a step artifact (no optimizer update):
+    /// `(grads aligned with the spec's param inputs, out: extras)`.  Errors
+    /// on backends without gradient support — see [`crate::runtime::Backend`].
+    pub fn execute_grads(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[&HostTensor],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        self.backend.execute_grads(spec, inputs)
+    }
+
+    /// Apply a step artifact's optimizer to externally reduced gradients.
+    pub fn apply_update(
+        &self,
+        spec: &ArtifactSpec,
+        step: f32,
+        lr: f32,
+        params: &[&HostTensor],
+        slots: &[Vec<&HostTensor>],
+        grads: &[&HostTensor],
+    ) -> Result<(Vec<HostTensor>, Vec<Vec<HostTensor>>)> {
+        self.backend.apply_update(spec, step, lr, params, slots, grads)
+    }
 }
 
 /// Does `dir` hold reference descriptors (vs. native HLO text)?  Routing by

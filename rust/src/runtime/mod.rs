@@ -29,4 +29,4 @@ pub use params::{HostTensor, ParamStore};
 pub use ref_conv::{Act, ConvNet, Layer, LayerOp};
 pub use ref_cpu::RefCpuBackend;
 pub use refgen::{write_ref_artifacts, write_ref_artifacts_for, RefBackbone, RefModelSpec};
-pub use step::{run_inference, run_step, StepOutputs};
+pub use step::{apply_step, run_inference, run_step, run_step_grads, StepOutputs};

@@ -606,34 +606,38 @@ impl RefCpuBackend {
     }
 
     /// Run the optimizer over every (param, grads) pair, returning updated
-    /// (name, data) lists for params and each slot bank.
+    /// (name, data) lists for params and each slot bank.  The core is
+    /// independent of `Gathered` so `apply_update` (externally reduced
+    /// grads, `dist` replication) runs the EXACT same code as the fused
+    /// step.
     #[allow(clippy::type_complexity)]
-    fn optimize(
-        &self,
+    fn optimize_core(
         prog: &RefProgram,
-        g: &Gathered,
-        grads: &[Vec<f32>],
+        step: f32,
+        lr: f32,
+        in_params: &[&HostTensor],
+        in_slots: &[Vec<&HostTensor>],
+        grads: &[&[f32]],
     ) -> Result<(Vec<(String, Vec<f32>)>, Vec<Vec<(String, Vec<f32>)>>)> {
         let opt = prog.opt.context("step artifact descriptor lacks an optimizer")?;
         anyhow::ensure!(
-            g.slots.len() == opt.n_slots(),
+            in_slots.len() == opt.n_slots(),
             "optimizer {opt:?} wants {} slots, artifact supplied {}",
             opt.n_slots(),
-            g.slots.len()
+            in_slots.len()
         );
-        anyhow::ensure!(grads.len() == g.params.len(), "grad/param count mismatch");
-        for (k, sv) in g.slots.iter().enumerate() {
+        anyhow::ensure!(grads.len() == in_params.len(), "grad/param count mismatch");
+        for (k, sv) in in_slots.iter().enumerate() {
             anyhow::ensure!(
-                sv.len() == g.params.len(),
+                sv.len() == in_params.len(),
                 "slot bank {k} has {} tensors, expected {}",
                 sv.len(),
-                g.params.len()
+                in_params.len()
             );
         }
         let mut params: Vec<(String, Vec<f32>)> =
-            g.params.iter().map(|t| (t.name.clone(), t.data.clone())).collect();
-        let mut slots: Vec<Vec<(String, Vec<f32>)>> = g
-            .slots
+            in_params.iter().map(|t| (t.name.clone(), t.data.clone())).collect();
+        let mut slots: Vec<Vec<(String, Vec<f32>)>> = in_slots
             .iter()
             .map(|sv| sv.iter().map(|t| (t.name.clone(), t.data.clone())).collect())
             .collect();
@@ -645,9 +649,20 @@ impl RefCpuBackend {
             );
             let mut srefs: Vec<&mut Vec<f32>> =
                 slots.iter_mut().map(|sv| &mut sv[j].1).collect();
-            apply_opt(opt, &prog.hp, g.step, g.lr, &mut params[j].1, &grads[j], &mut srefs);
+            apply_opt(opt, &prog.hp, step, lr, &mut params[j].1, grads[j], &mut srefs);
         }
         Ok((params, slots))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn optimize(
+        &self,
+        prog: &RefProgram,
+        g: &Gathered,
+        grads: &[Vec<f32>],
+    ) -> Result<(Vec<(String, Vec<f32>)>, Vec<Vec<(String, Vec<f32>)>>)> {
+        let grefs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        Self::optimize_core(prog, g.step, g.lr, &g.params, &g.slots, &grefs)
     }
 
     /// Assemble the output list in spec order from updated params/slots and
@@ -708,12 +723,15 @@ impl RefCpuBackend {
         }
     }
 
-    fn run_d_step(
+    /// Forward + backward of a d_step: grads aligned with the param order,
+    /// plus the extra outputs.  Shared by the fused step (`run_d_step`) and
+    /// the gradient-only path (`execute_grads`) so the two can never drift.
+    fn eval_d_step(
         &self,
         prog: &RefProgram,
         spec: &ArtifactSpec,
         g: &Gathered,
-    ) -> Result<Vec<HostTensor>> {
+    ) -> Result<(Vec<Vec<f32>>, Vec<(&'static str, Vec<f32>)>)> {
         let key = &spec.key;
         let net = Self::resolve_net(&prog.net, &g.params, Act::LRelu, Act::None, key)?;
         let real = *g
@@ -757,22 +775,27 @@ impl RefCpuBackend {
                 *x += y;
             }
         }
-
-        let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
-        self.emit(
-            spec,
-            new_params,
-            new_slots,
-            vec![("loss", vec![loss]), ("real_logits", rl), ("fake_logits", fl)],
-        )
+        Ok((grads, vec![("loss", vec![loss]), ("real_logits", rl), ("fake_logits", fl)]))
     }
 
-    fn run_g_step(
+    fn run_d_step(
         &self,
         prog: &RefProgram,
         spec: &ArtifactSpec,
         g: &Gathered,
     ) -> Result<Vec<HostTensor>> {
+        let (grads, extra) = self.eval_d_step(prog, spec, g)?;
+        let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
+        self.emit(spec, new_params, new_slots, extra)
+    }
+
+    /// Forward + backward of a g_step (see [`Self::eval_d_step`]).
+    fn eval_g_step(
+        &self,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        g: &Gathered,
+    ) -> Result<(Vec<Vec<f32>>, Vec<(&'static str, Vec<f32>)>)> {
         let key = &spec.key;
         let g_net = Self::resolve_net(&prog.net, &g.params, Act::Relu, Act::Tanh, key)?;
         let d_net = Self::resolve_net(&prog.d_net, &g.dparams, Act::LRelu, Act::None, key)
@@ -798,14 +821,18 @@ impl RefCpuBackend {
         let dimg = dimg
             .ok_or_else(|| anyhow!("artifact '{key}': D backward produced no image gradient"))?;
         let (grads, _) = g_net.backward(&g.params, &gf, dimg, false, key)?;
+        Ok((grads, vec![("loss", vec![loss]), ("fake", images)]))
+    }
 
+    fn run_g_step(
+        &self,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        g: &Gathered,
+    ) -> Result<Vec<HostTensor>> {
+        let (grads, extra) = self.eval_g_step(prog, spec, g)?;
         let (new_params, new_slots) = self.optimize(prog, g, &grads)?;
-        self.emit(
-            spec,
-            new_params,
-            new_slots,
-            vec![("loss", vec![loss]), ("fake", images)],
-        )
+        self.emit(spec, new_params, new_slots, extra)
     }
 
     fn run_generate(
@@ -917,6 +944,109 @@ impl Backend for RefCpuBackend {
             st.execute_secs += t0.elapsed().as_secs_f64();
         }
         Ok(out)
+    }
+
+    fn execute_grads(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[&HostTensor],
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        let prog = self.program(spec)?;
+        let t0 = Instant::now();
+        let g = gather(spec, inputs)?;
+        let (grads, extra) = match prog.kind {
+            Kind::DStep => self.eval_d_step(&prog, spec, &g),
+            Kind::GStep => self.eval_g_step(&prog, spec, &g),
+            other => bail!(
+                "artifact '{}' is a {other:?} program — gradient extraction \
+                 only applies to step artifacts",
+                spec.key
+            ),
+        }?;
+        anyhow::ensure!(grads.len() == g.params.len(), "grad/param count mismatch");
+        let grads = grads
+            .into_iter()
+            .zip(&g.params)
+            .map(|(gr, p)| {
+                anyhow::ensure!(
+                    gr.len() == p.data.len(),
+                    "grad size mismatch for '{}'",
+                    p.name
+                );
+                Ok(HostTensor::new(&p.name, p.shape.clone(), gr))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Extras carry the spec shapes (loss is scalar-shaped, fake is the
+        // image batch) so callers can insert them like run_step outputs.
+        let shape_of = |name: &str, n: usize| -> Vec<usize> {
+            spec.outputs
+                .iter()
+                .find_map(|t| match &t.role {
+                    Role::Out(o) if o == name => Some(t.shape.clone()),
+                    _ => None,
+                })
+                .unwrap_or_else(|| vec![n])
+        };
+        let extra = extra
+            .into_iter()
+            .map(|(name, data)| {
+                let shape = shape_of(name, data.len());
+                HostTensor::new(name, shape, data)
+            })
+            .collect();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok((grads, extra))
+    }
+
+    fn apply_update(
+        &self,
+        spec: &ArtifactSpec,
+        step: f32,
+        lr: f32,
+        params: &[&HostTensor],
+        slots: &[Vec<&HostTensor>],
+        grads: &[&HostTensor],
+    ) -> Result<(Vec<HostTensor>, Vec<Vec<HostTensor>>)> {
+        let prog = self.program(spec)?;
+        anyhow::ensure!(
+            matches!(prog.kind, Kind::DStep | Kind::GStep),
+            "artifact '{}' is not a step program — nothing to apply",
+            spec.key
+        );
+        for (p, g) in params.iter().zip(grads) {
+            anyhow::ensure!(
+                p.shape == g.shape,
+                "grad '{}' shape {:?} does not match param '{}' {:?}",
+                g.name,
+                g.shape,
+                p.name,
+                p.shape
+            );
+        }
+        let grefs: Vec<&[f32]> = grads.iter().map(|g| g.data.as_slice()).collect();
+        let (new_params, new_slots) =
+            Self::optimize_core(&prog, step, lr, params, slots, &grefs)?;
+        fn with_shapes(list: Vec<(String, Vec<f32>)>, shapes: &[&HostTensor]) -> Vec<HostTensor> {
+            list.into_iter()
+                .zip(shapes)
+                .map(|((name, data), t)| HostTensor::new(&name, t.shape.clone(), data))
+                .collect()
+        }
+        let out_params = with_shapes(new_params, params);
+        let out_slots = new_slots
+            .into_iter()
+            .zip(slots)
+            .map(|(bank, refs)| with_shapes(bank, refs))
+            .collect();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+        }
+        Ok((out_params, out_slots))
     }
 }
 

@@ -36,36 +36,7 @@ pub fn run_step(
     // path; only the two scalars are materialized here.
     let step_t = HostTensor::new("step", vec![], vec![step]);
     let lr_t = HostTensor::new("lr", vec![], vec![lr]);
-    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(spec.inputs.len());
-    for tin in &spec.inputs {
-        let t: &HostTensor = match &tin.role {
-            Role::Step => &step_t,
-            Role::Lr => &lr_t,
-            Role::Param(name) => params.get(name)?,
-            Role::Slot(k, name) => slots
-                .get(*k)
-                .ok_or_else(|| anyhow!("artifact wants slot {k}, have {}", slots.len()))?
-                .get(name)?,
-            Role::DParam(name) => dparams
-                .ok_or_else(|| anyhow!("artifact wants dparams but none supplied"))?
-                .get(name)?,
-            Role::In(name) => {
-                let t = data
-                    .get(name)
-                    .ok_or_else(|| anyhow!("missing data input '{name}'"))?;
-                anyhow::ensure!(
-                    t.numel() == tin.numel(),
-                    "input '{name}' numel {} != spec {} (shape {:?})",
-                    t.numel(),
-                    tin.numel(),
-                    tin.shape
-                );
-                t
-            }
-            Role::Out(_) => anyhow::bail!("out role in input list"),
-        };
-        inputs.push(t);
-    }
+    let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
 
     let outs = rt.execute_artifact(spec, &inputs)?;
     drop(inputs);
@@ -97,6 +68,134 @@ pub fn run_step(
         }
     }
     Ok(extra)
+}
+
+/// Assemble the spec-aligned input list shared by the gradient-only paths.
+/// Mirrors [`run_step`]'s resolution exactly, but read-only (`params` is
+/// never written) — the two scalars are materialized by the caller because
+/// the borrows must outlive the returned vector.
+fn stage_inputs<'a>(
+    spec: &'a ArtifactSpec,
+    step_t: &'a HostTensor,
+    lr_t: &'a HostTensor,
+    params: &'a ParamStore,
+    slots: &'a [ParamStore],
+    dparams: Option<&'a ParamStore>,
+    data: &'a BTreeMap<String, HostTensor>,
+) -> Result<Vec<&'a HostTensor>> {
+    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(spec.inputs.len());
+    for tin in &spec.inputs {
+        let t: &HostTensor = match &tin.role {
+            Role::Step => step_t,
+            Role::Lr => lr_t,
+            Role::Param(name) => params.get(name)?,
+            Role::Slot(k, name) => slots
+                .get(*k)
+                .ok_or_else(|| anyhow!("artifact wants slot {k}, have {}", slots.len()))?
+                .get(name)?,
+            Role::DParam(name) => dparams
+                .ok_or_else(|| anyhow!("artifact wants dparams but none supplied"))?
+                .get(name)?,
+            Role::In(name) => {
+                let t = data
+                    .get(name)
+                    .ok_or_else(|| anyhow!("missing data input '{name}'"))?;
+                anyhow::ensure!(
+                    t.numel() == tin.numel(),
+                    "input '{name}' numel {} != spec {} (shape {:?})",
+                    t.numel(),
+                    tin.numel(),
+                    tin.shape
+                );
+                t
+            }
+            Role::Out(_) => anyhow::bail!("out role in input list"),
+        };
+        inputs.push(t);
+    }
+    Ok(inputs)
+}
+
+/// Gradient-only execution of a step artifact: forward + backward, NO
+/// optimizer update, nothing written back.  Returns the per-parameter
+/// gradients as a `ParamStore` (spec param order preserved) plus the
+/// artifact's `out:` tensors (loss / logits / fake).
+///
+/// Gradients do not depend on `step`/`lr` or on optimizer slot values;
+/// zeros are staged for the scalars, and `slots` only has to satisfy the
+/// spec's input list shape-wise (a zero-initialized bank is fine — the
+/// async parameter server's workers use exactly that).
+pub fn run_step_grads(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    params: &ParamStore,
+    slots: &[ParamStore],
+    dparams: Option<&ParamStore>,
+    data: &BTreeMap<String, HostTensor>,
+) -> Result<(ParamStore, StepOutputs)> {
+    let step_t = HostTensor::new("step", vec![], vec![0.0]);
+    let lr_t = HostTensor::new("lr", vec![], vec![0.0]);
+    let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
+    let (grads, extras) = rt.execute_grads(spec, &inputs)?;
+    drop(inputs);
+    let mut gstore = ParamStore::new();
+    for g in grads {
+        gstore.insert(g);
+    }
+    let mut outs = StepOutputs::new();
+    for t in extras {
+        outs.insert(t.name.clone(), t);
+    }
+    Ok((gstore, outs))
+}
+
+/// Apply a step artifact's optimizer update with externally supplied
+/// (already reduced) gradients: the counterpart of [`run_step_grads`].
+/// `params`/`slots` are updated in place; `grads` is looked up by parameter
+/// name, so any store holding a gradient per parameter works.
+pub fn apply_step(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    step: f32,
+    lr: f32,
+    params: &mut ParamStore,
+    slots: &mut [ParamStore],
+    grads: &ParamStore,
+) -> Result<()> {
+    // Param / slot-bank refs in the spec's input order.
+    let mut prefs: Vec<&HostTensor> = Vec::new();
+    let mut grefs: Vec<&HostTensor> = Vec::new();
+    let mut srefs: Vec<Vec<&HostTensor>> = vec![Vec::new(); slots.len()];
+    for tin in &spec.inputs {
+        match &tin.role {
+            Role::Param(name) => {
+                prefs.push(params.get(name)?);
+                grefs.push(grads.get(name).context("gradient for param")?);
+            }
+            Role::Slot(k, name) => {
+                let bank = slots
+                    .get(*k)
+                    .ok_or_else(|| anyhow!("artifact wants slot {k}, have {}", slots.len()))?;
+                srefs[*k].push(bank.get(name)?);
+            }
+            _ => {}
+        }
+    }
+    let (new_params, new_slots) = rt.apply_update(spec, step, lr, &prefs, &srefs, &grefs)?;
+    drop(prefs);
+    drop(grefs);
+    drop(srefs);
+    for t in new_params {
+        let HostTensor { name, data, .. } = t;
+        params.set_data(&name, data).context("write back param")?;
+    }
+    for (k, bank) in new_slots.into_iter().enumerate() {
+        for t in bank {
+            let HostTensor { name, data, .. } = t;
+            slots[k].set_data(&name, data).context("write back slot")?;
+        }
+    }
+    Ok(())
 }
 
 /// Convenience for inference-only artifacts (generate / fid_features):
