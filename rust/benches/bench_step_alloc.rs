@@ -1,0 +1,436 @@
+//! Step-allocation bench: the PR-5 workspace arena vs the allocating
+//! baseline, plus the steady-state allocation counts the arena is gated on.
+//!
+//! Three measurements, written to `BENCH_step_alloc.json`:
+//!
+//! * **Throughput** — dcgan32 sync training steps/sec with the arena ON
+//!   (default) vs `set_arena_mode(Some(false))` (the legacy allocating step
+//!   path) at the all-core default thread count, plus 2-replica sync and
+//!   async aggregate steps/sec with the arena on.
+//! * **Steady-state allocations** — a counting global allocator measures N
+//!   post-warmup steps of the fused 1-replica loop and the 2-replica sync
+//!   loop (grads → buffer-reusing all-reduce → in-place apply).  Both must
+//!   be ZERO; the async fake-batch hand-off (ownership crosses the
+//!   `ImgBuff`) is reported, not gated.
+//!
+//! Exit code 1 (the CI gate) if a gated count is nonzero or the arena loses
+//! throughput to the allocating baseline.  `--test` runs the smoke-sized
+//! protocol.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Barrier;
+
+use paragan::coordinator::trainer::upsert_z;
+use paragan::coordinator::{train_sync, TrainConfig};
+use paragan::dist::{train_dist, DistConfig, DistMode, Exchange, InProcAllReduce, Topology};
+use paragan::runtime::{
+    apply_step, refgen, run_inference_into, run_step_grads_into, run_step_into, set_arena_mode,
+    ArtifactSpec, HostTensor, Manifest, ParamStore, Runtime, StepOutputs,
+};
+use paragan::util::json::{num, obj, s as js, write_json};
+use paragan::util::rng::Rng;
+use paragan::util::table::Table;
+
+// --- counting allocator ---------------------------------------------------
+
+struct CountingAlloc;
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// --- fixtures -------------------------------------------------------------
+
+fn small_batch_artifacts(batch: usize, tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("paragan-bench-step-alloc-{}-{tag}", std::process::id()));
+    let models: Vec<refgen::RefModelSpec> = refgen::default_models()
+        .into_iter()
+        .filter(|m| m.name == "dcgan32")
+        .collect();
+    refgen::write_ref_artifacts_for(&dir, &models, batch).expect("dcgan32 export");
+    dir
+}
+
+struct Rig {
+    rt: Runtime,
+    d_spec: ArtifactSpec,
+    g_spec: ArtifactSpec,
+    gen_spec: ArtifactSpec,
+    d_params: ParamStore,
+    d_slots: Vec<ParamStore>,
+    g_params: ParamStore,
+    g_slots: Vec<ParamStore>,
+    d_in: BTreeMap<String, HostTensor>,
+    g_in: BTreeMap<String, HostTensor>,
+    gen_in: BTreeMap<String, HostTensor>,
+    d_outs: StepOutputs,
+    g_outs: StepOutputs,
+    gen_outs: StepOutputs,
+    rng: Rng,
+    batch: usize,
+    z_dim: usize,
+}
+
+fn rig(dir: &std::path::Path, seed: u64) -> Rig {
+    let m = Manifest::load(dir).expect("manifest");
+    let model = m.model("dcgan32").expect("dcgan32");
+    let rt = Runtime::new(dir).expect("runtime");
+    let mut rng = Rng::new(seed);
+    let d_params = ParamStore::init(&model.params_d, &mut rng);
+    let d_slots =
+        ParamStore::init_slots(&model.params_d, &d_params, &model.optimizers["adam"].slot_init);
+    let g_params = ParamStore::init(&model.params_g, &mut rng);
+    let g_slots =
+        ParamStore::init_slots(&model.params_g, &g_params, &model.optimizers["adam"].slot_init);
+    let batch = model.batch;
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&model.img_shape);
+    let n: usize = shape.iter().product();
+    let mut real = vec![0f32; n];
+    rng.fill_gaussian(&mut real, 0.0, 0.5);
+    let mut d_in = BTreeMap::new();
+    d_in.insert("real".to_string(), HostTensor::new("real", shape.clone(), real));
+    d_in.insert("fake".to_string(), HostTensor::new("fake", shape, vec![0f32; n]));
+    Rig {
+        d_spec: model.artifact("d_step_adam_fp32").unwrap().clone(),
+        g_spec: model.artifact("g_step_adam_fp32").unwrap().clone(),
+        gen_spec: model.artifact("generate_fp32").unwrap().clone(),
+        rt,
+        d_params,
+        d_slots,
+        g_params,
+        g_slots,
+        d_in,
+        g_in: BTreeMap::new(),
+        gen_in: BTreeMap::new(),
+        d_outs: StepOutputs::new(),
+        g_outs: StepOutputs::new(),
+        gen_outs: StepOutputs::new(),
+        rng,
+        batch,
+        z_dim: model.z_dim,
+    }
+}
+
+impl Rig {
+    fn fused_step(&mut self, step: u64) {
+        upsert_z(&mut self.gen_in, &mut self.rng, self.batch, self.z_dim);
+        run_inference_into(&self.rt, &self.gen_spec, &self.g_params, &self.gen_in, &mut self.gen_outs)
+            .unwrap();
+        let images = self.gen_outs.get_mut("images").unwrap();
+        let fake = self.d_in.get_mut("fake").unwrap();
+        std::mem::swap(&mut fake.data, &mut images.data);
+        run_step_into(
+            &self.rt,
+            &self.d_spec,
+            step as f32,
+            2e-4,
+            &mut self.d_params,
+            &mut self.d_slots,
+            None,
+            &self.d_in,
+            &mut self.d_outs,
+        )
+        .unwrap();
+        upsert_z(&mut self.g_in, &mut self.rng, self.batch, self.z_dim);
+        run_step_into(
+            &self.rt,
+            &self.g_spec,
+            step as f32,
+            2e-4,
+            &mut self.g_params,
+            &mut self.g_slots,
+            Some(&self.d_params),
+            &self.g_in,
+            &mut self.g_outs,
+        )
+        .unwrap();
+    }
+}
+
+/// Post-warmup allocation count of N fused steps on one replica.
+fn fused_steady_allocs(dir: &std::path::Path, warmup: u64, measured: u64) -> u64 {
+    let mut r = rig(dir, 0xA110C);
+    for s in 1..=warmup {
+        r.fused_step(s);
+    }
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for s in warmup + 1..=warmup + measured {
+        r.fused_step(s);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn reduce_scratch(
+    ex: &dyn Exchange,
+    replica: usize,
+    grads: &mut ParamStore,
+    scratch: &mut Vec<Vec<f32>>,
+) {
+    let matches = scratch.len() == grads.len()
+        && scratch.iter().zip(grads.iter()).all(|(b, t)| b.len() == t.data.len());
+    if matches {
+        for (b, t) in scratch.iter_mut().zip(grads.iter()) {
+            b.copy_from_slice(&t.data);
+        }
+    } else {
+        scratch.clear();
+        for t in grads.iter() {
+            scratch.push(t.data.clone());
+        }
+    }
+    ex.all_reduce_mean_into(replica, scratch).unwrap();
+    for (t, b) in grads.iter_mut().zip(scratch.iter()) {
+        t.data.copy_from_slice(b);
+    }
+}
+
+/// Post-warmup allocation count of N grad-split steps across 2 lockstep
+/// replicas (grads → all-reduce → apply), counted over BOTH threads.
+fn sync2_steady_allocs(dir: &std::path::Path, warmup: u64, measured: u64) -> u64 {
+    let n = 2usize;
+    let ex_d = InProcAllReduce::new(n, Topology::Tree);
+    let ex_g = InProcAllReduce::new(n, Topology::Tree);
+    let warm = Barrier::new(n + 1);
+    let start = Barrier::new(n + 1);
+    let done = Barrier::new(n + 1);
+    std::thread::scope(|s| {
+        for r in 0..n {
+            let dir = dir.to_path_buf();
+            let (ex_d, ex_g) = (ex_d.clone(), ex_g.clone());
+            let (warm, start, done) = (&warm, &start, &done);
+            s.spawn(move || {
+                let mut rg = rig(&dir, 0xD157);
+                let mut shard = Rng::replica_stream(5, r as u64);
+                let mut d_grads = ParamStore::new();
+                let mut g_grads = ParamStore::new();
+                let mut d_scratch: Vec<Vec<f32>> = Vec::new();
+                let mut g_scratch: Vec<Vec<f32>> = Vec::new();
+                let mut one = |rg: &mut Rig,
+                               d_grads: &mut ParamStore,
+                               g_grads: &mut ParamStore,
+                               d_scratch: &mut Vec<Vec<f32>>,
+                               g_scratch: &mut Vec<Vec<f32>>,
+                               shard: &mut Rng,
+                               step: u64| {
+                    shard.fill_gaussian(&mut rg.d_in.get_mut("real").unwrap().data, 0.0, 0.5);
+                    shard.fill_gaussian(&mut rg.d_in.get_mut("fake").unwrap().data, 0.0, 0.5);
+                    run_step_grads_into(
+                        &rg.rt,
+                        &rg.d_spec,
+                        &rg.d_params,
+                        &rg.d_slots,
+                        None,
+                        &rg.d_in,
+                        d_grads,
+                        &mut rg.d_outs,
+                    )
+                    .unwrap();
+                    reduce_scratch(ex_d.as_ref(), r, d_grads, d_scratch);
+                    apply_step(
+                        &rg.rt,
+                        &rg.d_spec,
+                        step as f32,
+                        2e-4,
+                        &mut rg.d_params,
+                        &mut rg.d_slots,
+                        d_grads,
+                    )
+                    .unwrap();
+                    upsert_z(&mut rg.g_in, shard, rg.batch, rg.z_dim);
+                    run_step_grads_into(
+                        &rg.rt,
+                        &rg.g_spec,
+                        &rg.g_params,
+                        &rg.g_slots,
+                        Some(&rg.d_params),
+                        &rg.g_in,
+                        g_grads,
+                        &mut rg.g_outs,
+                    )
+                    .unwrap();
+                    reduce_scratch(ex_g.as_ref(), r, g_grads, g_scratch);
+                    apply_step(
+                        &rg.rt,
+                        &rg.g_spec,
+                        step as f32,
+                        2e-4,
+                        &mut rg.g_params,
+                        &mut rg.g_slots,
+                        g_grads,
+                    )
+                    .unwrap();
+                };
+                for s in 1..=warmup {
+                    one(&mut rg, &mut d_grads, &mut g_grads, &mut d_scratch, &mut g_scratch, &mut shard, s);
+                }
+                warm.wait();
+                start.wait();
+                for s in warmup + 1..=warmup + measured {
+                    one(&mut rg, &mut d_grads, &mut g_grads, &mut d_scratch, &mut g_scratch, &mut shard, s);
+                }
+                done.wait();
+            });
+        }
+        warm.wait();
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        start.wait();
+        done.wait();
+        COUNTING.store(false, Ordering::SeqCst);
+    });
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn train_steps_per_sec(steps: u64, seed: u64) -> f64 {
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        model,
+        steps,
+        seed,
+        eval_batches: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    train_sync(&cfg).expect("dcgan32 train run").steps_per_sec()
+}
+
+fn dist_steps_per_sec(steps: u64, seed: u64, replicas: usize, mode: DistMode) -> f64 {
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        model,
+        steps,
+        seed,
+        eval_batches: 2,
+        log_every: 0,
+        replicas,
+        dist: DistConfig { mode, ..Default::default() },
+        ..Default::default()
+    };
+    train_dist(&cfg).expect("dcgan32 dist run").aggregate_steps_per_sec
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let (warmup, measured) = (2u64, if smoke { 2u64 } else { 4 });
+    let steps = if smoke { 6 } else { 40 };
+    let alloc_batch = if smoke { 4 } else { 8 };
+    println!(
+        "== step-alloc bench{} ==",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // --- steady-state allocation counts (small-batch export: the counts
+    // are shape-independent, only the warmup wall-clock isn't) ---
+    let dir = small_batch_artifacts(alloc_batch, "counts");
+    let fused_allocs = fused_steady_allocs(&dir, warmup, measured);
+    let sync2_allocs = sync2_steady_allocs(&dir, warmup, measured);
+
+    // --- throughput: arena vs allocating baseline (all-core) ---
+    set_arena_mode(Some(false));
+    let baseline_sps = train_steps_per_sec(steps, 41);
+    set_arena_mode(Some(true));
+    let arena_sps = train_steps_per_sec(steps, 41);
+    set_arena_mode(None);
+    let speedup = arena_sps / baseline_sps.max(1e-12);
+
+    // --- dist throughput with the arena (context series for BENCH_dist) ---
+    let sync2_sps = dist_steps_per_sec(steps.min(12), 43, 2, DistMode::Sync);
+    let async2_sps = dist_steps_per_sec(steps.min(12), 44, 2, DistMode::Async);
+
+    let mut t = Table::new(
+        "dcgan32 step path: workspace arena vs allocating baseline",
+        &["metric", "value"],
+    );
+    t.row(vec!["fused steady-state allocs (1 replica)".into(), fused_allocs.to_string()]);
+    t.row(vec!["grad-split steady-state allocs (2-replica sync)".into(), sync2_allocs.to_string()]);
+    t.row(vec!["baseline steps/s (arena off)".into(), format!("{baseline_sps:.2}")]);
+    t.row(vec!["arena steps/s".into(), format!("{arena_sps:.2}")]);
+    t.row(vec!["speedup".into(), format!("{speedup:.2}x")]);
+    t.row(vec!["2-replica sync agg steps/s".into(), format!("{sync2_sps:.2}")]);
+    t.row(vec!["2-replica async agg steps/s".into(), format!("{async2_sps:.2}")]);
+    println!("{}", t.render());
+
+    let json = obj(vec![
+        ("format", js("paragan-bench-step-alloc")),
+        ("version", num(1.0)),
+        ("smoke", js(if smoke { "true" } else { "false" })),
+        ("model", js("dcgan32")),
+        ("warmup_steps", num(warmup as f64)),
+        ("measured_steps", num(measured as f64)),
+        ("fused_steady_allocs", num(fused_allocs as f64)),
+        ("sync2_steady_allocs", num(sync2_allocs as f64)),
+        ("baseline_steps_per_sec", num(baseline_sps)),
+        ("arena_steps_per_sec", num(arena_sps)),
+        ("speedup", num(speedup)),
+        ("target_speedup", num(1.15)),
+        ("meets_target", js(if speedup >= 1.15 { "true" } else { "false" })),
+        ("sync2_agg_steps_per_sec", num(sync2_sps)),
+        ("async2_agg_steps_per_sec", num(async2_sps)),
+    ]);
+    let mut text = String::new();
+    write_json(&json, &mut text);
+    text.push('\n');
+    std::fs::write("BENCH_step_alloc.json", &text).expect("writing BENCH_step_alloc.json");
+    println!("wrote BENCH_step_alloc.json");
+
+    // CI gates: the steady state must be allocation-free and the arena must
+    // not lose to the allocating baseline.
+    let mut failed = false;
+    if fused_allocs != 0 {
+        eprintln!("FAIL: fused steady-state step path allocated {fused_allocs} times");
+        failed = true;
+    }
+    if sync2_allocs != 0 {
+        eprintln!("FAIL: 2-replica sync steady-state path allocated {sync2_allocs} times");
+        failed = true;
+    }
+    if speedup < 1.0 {
+        eprintln!(
+            "FAIL: arena steps/sec ({arena_sps:.2}) loses to the allocating \
+             baseline ({baseline_sps:.2})"
+        );
+        failed = true;
+    }
+    if speedup < 1.15 {
+        eprintln!(
+            "note: speedup {speedup:.2}x below the 1.15x target (recorded, \
+             gated only on parity with the baseline)"
+        );
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -10,10 +10,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::trainer::{batch_to_tensors, sample_z, make_pipeline, Evaluator, Prologue, TrainConfig, TrainResult};
+use super::trainer::{
+    make_pipeline, upsert_batch_y, upsert_real, upsert_y, upsert_z, Evaluator, Prologue,
+    TrainConfig, TrainResult,
+};
 use crate::metrics::tracker::Series;
 use crate::pipeline::checkpoint::{AsyncCheckpointWriter, Checkpoint, TensorSnapshot};
-use crate::runtime::{run_inference, run_step, Runtime};
+use crate::runtime::{run_inference_into, run_step_into, HostTensor, Runtime, StepOutputs};
 
 pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
     let pro = Prologue::new(cfg)?;
@@ -45,6 +48,16 @@ pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
     let mut mode_cov = Series::new("mode_coverage", 1.0);
     let mut images_seen = 0u64;
 
+    // Step-persistent input/output maps: refreshed in place every step
+    // (identical RNG streams and values), so with the ref backend's
+    // workspace arena the steady-state loop stops allocating.
+    let mut gen_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut g_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut gen_outs = StepOutputs::new();
+    let mut d_outs = StepOutputs::new();
+    let mut g_outs = StepOutputs::new();
+
     let t0 = Instant::now();
     for step in 1..=cfg.steps {
         let lr = pro.scaling.lr_at(step);
@@ -52,22 +65,31 @@ pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
         // --- D update(s): fakes from the CURRENT generator ---
         for _ in 0..cfg.policy.d_steps_per_g {
             let real = pipeline.next_batch().context("real batch")?;
-            let (real_t, y_t) = batch_to_tensors(&real, &model.img_shape, model.n_classes);
-            let mut gen_in = BTreeMap::new();
-            gen_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
-            if let Some(y) = &y_t {
-                gen_in.insert("y".to_string(), y.clone());
+            upsert_z(&mut gen_in, &mut z_rng, model.batch, model.z_dim);
+            if model.n_classes > 0 {
+                upsert_batch_y(&mut gen_in, &real, model.n_classes);
+                upsert_batch_y(&mut d_in, &real, model.n_classes);
             }
-            let fake = run_inference(&rt, &gen_spec, &g_params, &gen_in)?
-                .remove("images")
-                .context("generate")?;
-            let mut d_in = BTreeMap::new();
-            d_in.insert("real".to_string(), real_t);
-            d_in.insert("fake".to_string(), fake);
-            if let Some(y) = y_t {
-                d_in.insert("y".to_string(), y);
+            upsert_real(&mut d_in, &real, &model.img_shape);
+            pipeline.recycle(real);
+            run_inference_into(&rt, &gen_spec, &g_params, &gen_in, &mut gen_outs)?;
+            // Ping-pong the generated images into the d_step's `fake`
+            // input without copying.
+            let images_t = gen_outs.get_mut("images").context("generate")?;
+            match d_in.get_mut("fake") {
+                Some(t) => std::mem::swap(&mut t.data, &mut images_t.data),
+                None => {
+                    d_in.insert(
+                        "fake".to_string(),
+                        HostTensor::new(
+                            "fake",
+                            images_t.shape.clone(),
+                            std::mem::take(&mut images_t.data),
+                        ),
+                    );
+                }
             }
-            let outs = run_step(
+            run_step_into(
                 &rt,
                 &d_spec,
                 step as f32,
@@ -76,21 +98,18 @@ pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
                 &mut d_slots,
                 None,
                 &d_in,
+                &mut d_outs,
             )?;
-            d_loss.push(step, outs["loss"].data[0] as f64);
+            d_loss.push(step, d_outs["loss"].data[0] as f64);
             images_seen += model.batch as u64;
         }
 
         // --- G update against the freshly updated D ---
-        let mut g_in = BTreeMap::new();
-        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        upsert_z(&mut g_in, &mut z_rng, model.batch, model.z_dim);
         if model.n_classes > 0 {
-            g_in.insert(
-                "y".to_string(),
-                super::trainer::sample_y(&mut z_rng, model.batch, model.n_classes),
-            );
+            upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
         }
-        let outs = run_step(
+        run_step_into(
             &rt,
             &g_spec,
             step as f32,
@@ -99,8 +118,9 @@ pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
             &mut g_slots,
             Some(&d_params),
             &g_in,
+            &mut g_outs,
         )?;
-        g_loss.push(step, outs["loss"].data[0] as f64);
+        g_loss.push(step, g_outs["loss"].data[0] as f64);
 
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
             log::info!(

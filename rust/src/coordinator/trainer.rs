@@ -158,6 +158,76 @@ pub fn sample_y(rng: &mut Rng, batch: usize, n_classes: usize) -> HostTensor {
     HostTensor::new("y", vec![batch, n_classes], y)
 }
 
+// ---------------------------------------------------------------------------
+// Reusable-input upserts — the zero-allocation trainer loops refresh their
+// persistent input maps in place (identical RNG consumption and values to
+// the sample_* constructors, so loss curves are bit-for-bit unchanged);
+// only the very first step inserts.
+// ---------------------------------------------------------------------------
+
+/// Refresh (or first-insert) the `z` latent batch in a reusable input map.
+pub fn upsert_z(data: &mut BTreeMap<String, HostTensor>, rng: &mut Rng, batch: usize, z_dim: usize) {
+    match data.get_mut("z") {
+        Some(t) => rng.fill_gaussian(&mut t.data, 0.0, 1.0),
+        None => {
+            data.insert("z".to_string(), sample_z(rng, batch, z_dim));
+        }
+    }
+}
+
+/// Refresh (or first-insert) random one-hot `y` labels.
+pub fn upsert_y(data: &mut BTreeMap<String, HostTensor>, rng: &mut Rng, batch: usize, n_classes: usize) {
+    match data.get_mut("y") {
+        Some(t) => {
+            t.data.fill(0.0);
+            for i in 0..batch {
+                t.data[i * n_classes + rng.usize_below(n_classes)] = 1.0;
+            }
+        }
+        None => {
+            data.insert("y".to_string(), sample_y(rng, batch, n_classes));
+        }
+    }
+}
+
+/// Refresh (or first-insert) the `real` image batch from a pipeline batch.
+pub fn upsert_real(data: &mut BTreeMap<String, HostTensor>, b: &Batch, img_shape: &[usize]) {
+    match data.get_mut("real") {
+        Some(t) => {
+            t.data.clear();
+            t.data.extend_from_slice(&b.data);
+        }
+        None => {
+            let mut shape = vec![b.batch_size];
+            shape.extend_from_slice(img_shape);
+            data.insert("real".to_string(), HostTensor::new("real", shape, b.data.clone()));
+        }
+    }
+}
+
+/// Refresh (or first-insert) one-hot `y` labels from a pipeline batch's
+/// label stream (the conditional d_step pairing).
+pub fn upsert_batch_y(data: &mut BTreeMap<String, HostTensor>, b: &Batch, n_classes: usize) {
+    match data.get_mut("y") {
+        Some(t) => {
+            t.data.fill(0.0);
+            for (i, &l) in b.labels.iter().enumerate() {
+                t.data[i * n_classes + (l as usize % n_classes)] = 1.0;
+            }
+        }
+        None => {
+            let mut y = vec![0f32; b.batch_size * n_classes];
+            for (i, &l) in b.labels.iter().enumerate() {
+                y[i * n_classes + (l as usize % n_classes)] = 1.0;
+            }
+            data.insert(
+                "y".to_string(),
+                HostTensor::new("y", vec![b.batch_size, n_classes], y),
+            );
+        }
+    }
+}
+
 /// Build the real-data pipeline used by the trainers.
 pub fn make_pipeline(model: &ModelManifest, n_modes: u32, seed: u64) -> Arc<DataPipeline> {
     let node = Arc::new(StorageNode::new(

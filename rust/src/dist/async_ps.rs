@@ -32,10 +32,10 @@ use anyhow::{anyhow, Context, Result};
 use super::param_server::{ParamServer, Push};
 use super::{bound_scaling, DistMode, DistResult};
 use crate::coordinator::buffers::{ImgBuff, TaggedBatch};
-use crate::coordinator::trainer::{d_step_inputs, sample_y, sample_z, Prologue, TrainConfig};
+use crate::coordinator::trainer::{d_step_inputs, sample_y, upsert_z, Prologue, TrainConfig};
 use crate::coordinator::TrainResult;
 use crate::metrics::tracker::Series;
-use crate::runtime::{run_step_grads, Runtime};
+use crate::runtime::{run_step_grads_into, HostTensor, ParamStore, Runtime, StepOutputs};
 use crate::util::rng::Rng;
 
 enum Report {
@@ -70,30 +70,46 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
     let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, replica as u64);
     let mut images = 0u64;
 
+    // Step-persistent snapshot/gradient/input stores — the server's
+    // `pull_into` copies values into these, so the worker loop stops
+    // allocating once every buffer exists.
+    let mut g_params = ParamStore::new();
+    let mut d_params = ParamStore::new();
+    let mut g_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut grads = ParamStore::new();
+    let mut outs = StepOutputs::new();
+
     loop {
-        let (g_params, g_ver) = ctx.g_srv.pull();
+        let g_ver = ctx.g_srv.pull_into(&mut g_params)?;
         if g_ver >= cfg.steps {
             break;
         }
         // The CURRENT published D — never waits on D's in-flight update.
-        let (d_params, _) = ctx.d_srv.pull();
+        ctx.d_srv.pull_into(&mut d_params)?;
 
-        let mut g_in = BTreeMap::new();
-        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        upsert_z(&mut g_in, &mut z_rng, model.batch, model.z_dim);
         let y = (model.n_classes > 0)
             .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
         if let Some(y) = &y {
             g_in.insert("y".to_string(), y.clone());
         }
-        let (grads, mut outs) =
-            run_step_grads(&rt, &g_spec, &g_params, &slots, Some(&d_params), &g_in)?;
-        // Release the pulled snapshots BEFORE pushing: a held Arc forces
-        // the server's copy-on-write (`Arc::make_mut`) to clone the whole
-        // store on every apply.
-        drop(g_params);
-        drop(d_params);
+        run_step_grads_into(
+            &rt,
+            &g_spec,
+            &g_params,
+            &slots,
+            Some(&d_params),
+            &g_in,
+            &mut grads,
+            &mut outs,
+        )?;
         let loss = outs["loss"].data[0] as f64;
-        let fake = outs.remove("fake").context("g_step fake output")?;
+        // Move the generated batch out for shipping; the output map refills
+        // the (empty) buffer next step.
+        let fake = {
+            let t = outs.get_mut("fake").context("g_step fake output")?;
+            HostTensor::new("fake", t.shape.clone(), std::mem::take(&mut t.data))
+        };
         images += model.batch as u64;
 
         // Ship the fakes first (D-side progress never depends on whether
@@ -126,6 +142,10 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
     let pipeline = super::replica_pipeline(model, cfg.n_modes, cfg.seed, replica);
     let mut images = 0u64;
 
+    let mut d_params = ParamStore::new();
+    let mut grads = ParamStore::new();
+    let mut outs = StepOutputs::new();
+
     loop {
         // Consume a (possibly stale) fake batch; None = G side finished.
         let Some(fake) = ctx.buff.pop_batch() else { break };
@@ -141,10 +161,18 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
                 fake.images.clone(),
                 fake.labels.clone(),
             )?;
-            let (d_params, d_ver) = ctx.d_srv.pull();
-            let (grads, outs) =
-                run_step_grads(&rt, &d_spec, &d_params, &slots, None, &d_in)?;
-            drop(d_params); // free the snapshot so the server can update in place
+            pipeline.recycle(real);
+            let d_ver = ctx.d_srv.pull_into(&mut d_params)?;
+            run_step_grads_into(
+                &rt,
+                &d_spec,
+                &d_params,
+                &slots,
+                None,
+                &d_in,
+                &mut grads,
+                &mut outs,
+            )?;
             let loss = outs["loss"].data[0] as f64;
             images += model.batch as u64;
             if let Push::Applied { step, .. } = ctx.d_srv.push(&rt, &grads, d_ver)? {
@@ -282,7 +310,7 @@ pub(crate) fn train_async_ps(cfg: &TrainConfig) -> Result<DistResult> {
         "parameter server applied an update beyond the staleness bound"
     );
 
-    let final_g = (*g_srv.pull().0).clone();
+    let final_g = g_srv.pull().0;
     let final_d = d_srv.pull().0;
     anyhow::ensure!(
         final_g.all_finite() && final_d.all_finite(),

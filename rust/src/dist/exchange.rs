@@ -60,6 +60,19 @@ pub trait Exchange: Send + Sync {
     /// tensor layout; an aborted exchange returns Err on all replicas.
     fn all_reduce_mean(&self, replica: usize, tensors: Vec<Vec<f32>>) -> Result<Arc<Vec<Vec<f32>>>>;
 
+    /// Buffer-reusing collective: `tensors` is deposited by MOVE, combined
+    /// in the same fixed order as [`Exchange::all_reduce_mean`] (bitwise
+    /// identical means), and handed back holding the mean — the caller's
+    /// buffers round-trip, so a steady-state loop allocates nothing.  The
+    /// default forwards to the Arc API for implementations without a
+    /// reuse path.
+    fn all_reduce_mean_into(&self, replica: usize, tensors: &mut Vec<Vec<f32>>) -> Result<()> {
+        let out = self.all_reduce_mean(replica, std::mem::take(tensors))?;
+        tensors.clear();
+        tensors.extend(out.iter().cloned());
+        Ok(())
+    }
+
     /// Poison the exchange: every blocked or future call returns Err.  A
     /// replica that fails mid-step calls this so its peers unwind instead
     /// of waiting forever at the barrier.
@@ -77,6 +90,16 @@ struct ReduceState {
     taken: usize,
     rounds: u64,
     aborted: bool,
+    // --- buffer-reuse protocol (`all_reduce_mean_into`) ---
+    /// Per-replica deposits, moved in from the callers' own buffers and
+    /// moved back at collection.
+    bufs: Vec<Option<Vec<Vec<f32>>>>,
+    bufs_arrived: usize,
+    /// The round's mean — the ONE exchange-persistent scratch, reused
+    /// across rounds (resized only when the deposited layout changes).
+    mean_buf: Vec<Vec<f32>>,
+    mean_ready: bool,
+    mean_taken: usize,
 }
 
 /// Shared-memory all-reduce over N replica threads (see module docs).
@@ -100,6 +123,11 @@ impl InProcAllReduce {
                 taken: 0,
                 rounds: 0,
                 aborted: false,
+                bufs: (0..n).map(|_| None).collect(),
+                bufs_arrived: 0,
+                mean_buf: Vec::new(),
+                mean_ready: false,
+                mean_taken: 0,
             }),
             cv: Condvar::new(),
         })
@@ -172,6 +200,93 @@ impl InProcAllReduce {
             }
         }
     }
+
+    /// Reshape the persistent mean scratch to the deposited layout (no-op —
+    /// and no allocation — when the layout is unchanged, i.e. every round
+    /// after the first for a given exchange).
+    fn shape_mean(mean: &mut Vec<Vec<f32>>, layout: &[Vec<f32>]) {
+        let matches = mean.len() == layout.len()
+            && mean.iter().zip(layout).all(|(m, t)| m.len() == t.len());
+        if !matches {
+            mean.clear();
+            for t in layout {
+                mean.push(vec![0f32; t.len()]);
+            }
+        }
+    }
+
+    /// [`InProcAllReduce::combine`]'s arithmetic over moved-in deposits,
+    /// writing the mean into the persistent scratch.  Same combine order ⇒
+    /// bit-identical results (`x / n` written elsewhere equals `x /= n` in
+    /// place).
+    fn combine_into(
+        topo: Topology,
+        n: usize,
+        bufs: &mut [Option<Vec<Vec<f32>>>],
+        mean: &mut Vec<Vec<f32>>,
+    ) {
+        if n == 1 {
+            let only = bufs[0].as_ref().expect("deposit present");
+            Self::shape_mean(mean, only);
+            for (m, t) in mean.iter_mut().zip(only) {
+                m.copy_from_slice(t);
+            }
+            return;
+        }
+        let n_tensors = bufs[0].as_ref().expect("deposit present").len();
+        match topo {
+            Topology::Tree => {
+                let mut stride = 1;
+                while stride < n {
+                    let mut i = 0;
+                    while i + stride < n {
+                        let (a, b) = bufs.split_at_mut(i + stride);
+                        let dst = a[i].as_mut().expect("deposit present");
+                        let src = b[0].as_ref().expect("deposit present");
+                        for t in 0..n_tensors {
+                            for (x, y) in dst[t].iter_mut().zip(&src[t]) {
+                                *x += y;
+                            }
+                        }
+                        i += stride * 2;
+                    }
+                    stride *= 2;
+                }
+                let sum = bufs[0].as_ref().expect("deposit present");
+                Self::shape_mean(mean, sum);
+                for t in 0..n_tensors {
+                    for (m, &x) in mean[t].iter_mut().zip(&sum[t]) {
+                        *m = x / n as f32;
+                    }
+                }
+            }
+            Topology::Ring => {
+                {
+                    let layout = bufs[0].as_ref().expect("deposit present");
+                    Self::shape_mean(mean, layout);
+                }
+                for t in 0..n_tensors {
+                    let len = mean[t].len();
+                    mean[t].fill(0.0);
+                    let chunk = len.div_ceil(n).max(1);
+                    for (c, lo) in (0..len).step_by(chunk).enumerate() {
+                        let hi = (lo + chunk).min(len);
+                        for walk in 0..n {
+                            let rank = (c + walk) % n;
+                            let src = bufs[rank].as_ref().expect("deposit present");
+                            let src = &src[t][lo..hi];
+                            for (x, y) in mean[t][lo..hi].iter_mut().zip(src) {
+                                *x += y;
+                            }
+                        }
+                    }
+                    for x in mean[t].iter_mut() {
+                        *x /= n as f32;
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl Exchange for InProcAllReduce {
@@ -239,6 +354,77 @@ impl Exchange for InProcAllReduce {
             self.cv.notify_all();
         }
         Ok(out)
+    }
+
+    /// The buffer-reusing round: deposits are MOVED in (the caller's vec is
+    /// left empty), the last arrival combines into the one persistent mean
+    /// scratch, and each collector gets its own buffers back refilled with
+    /// the mean.  Steady state: zero allocations on every replica.  Uses
+    /// its own round state — do not interleave with [`Self::all_reduce_mean`]
+    /// within a round.
+    fn all_reduce_mean_into(&self, replica: usize, tensors: &mut Vec<Vec<f32>>) -> Result<()> {
+        let mut st = self.st.lock().unwrap();
+        let fail = |mut st: std::sync::MutexGuard<'_, ReduceState>,
+                    msg: String|
+         -> anyhow::Error {
+            st.aborted = true;
+            drop(st);
+            self.cv.notify_all();
+            anyhow::anyhow!(msg)
+        };
+        if replica >= self.n {
+            return Err(fail(st, format!("replica {replica} out of range (n={})", self.n)));
+        }
+        // Phase 0: wait out the previous round's collection.
+        while st.mean_ready && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.aborted {
+            bail!("all-reduce aborted by a failing replica");
+        }
+        if st.bufs[replica].is_some() {
+            return Err(fail(st, format!("replica {replica} deposited twice in one round")));
+        }
+        st.bufs[replica] = Some(std::mem::take(tensors));
+        st.bufs_arrived += 1;
+        if st.bufs_arrived == self.n {
+            let layouts_match = {
+                let first = st.bufs[0].as_ref().expect("deposit present");
+                st.bufs.iter().all(|d| {
+                    let d = d.as_ref().expect("deposit present");
+                    d.len() == first.len()
+                        && d.iter().zip(first.iter()).all(|(t, f)| t.len() == f.len())
+                })
+            };
+            if !layouts_match {
+                return Err(fail(st, "replicas deposited mismatched tensor layouts".into()));
+            }
+            let stm = &mut *st;
+            Self::combine_into(self.topo, self.n, &mut stm.bufs, &mut stm.mean_buf);
+            stm.bufs_arrived = 0;
+            stm.mean_ready = true;
+            stm.rounds += 1;
+            self.cv.notify_all();
+        }
+        // Phase 1: wait for the mean, refill our own buffers, take them back.
+        while !st.mean_ready && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.aborted {
+            bail!("all-reduce aborted by a failing replica");
+        }
+        let mut mine = st.bufs[replica].take().expect("own deposit present");
+        for (dst, src) in mine.iter_mut().zip(st.mean_buf.iter()) {
+            dst.copy_from_slice(src);
+        }
+        *tensors = mine;
+        st.mean_taken += 1;
+        if st.mean_taken == self.n {
+            st.mean_taken = 0;
+            st.mean_ready = false;
+            self.cv.notify_all();
+        }
+        Ok(())
     }
 
     fn abort(&self) {
@@ -320,6 +506,66 @@ mod tests {
             }
         });
         assert_eq!(ex.rounds(), 10);
+    }
+
+    #[test]
+    fn into_protocol_matches_arc_protocol_bit_exactly() {
+        let mk = |r: usize| -> Vec<Vec<f32>> {
+            let mut rng = crate::util::rng::Rng::replica_stream(17, r as u64);
+            let mut v = vec![0f32; 133];
+            rng.fill_gaussian(&mut v, 0.0, 1.0);
+            let mut w = vec![0f32; 7];
+            rng.fill_gaussian(&mut w, 0.0, 1.0);
+            vec![v, w]
+        };
+        for topo in [Topology::Tree, Topology::Ring] {
+            let want = run_threads(4, topo, mk);
+            let ex = InProcAllReduce::new(4, topo);
+            let got: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4)
+                    .map(|r| {
+                        let ex = ex.clone();
+                        let mut bufs = mk(r);
+                        s.spawn(move || {
+                            ex.all_reduce_mean_into(r, &mut bufs).unwrap();
+                            bufs
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for g in &got {
+                for (t, wt) in g.iter().zip(want[0].iter()) {
+                    for (a, b) in t.iter().zip(wt) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{topo:?} into vs arc");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_protocol_round_trips_buffers_across_rounds() {
+        let n = 3;
+        let ex = InProcAllReduce::new(n, Topology::Ring);
+        std::thread::scope(|s| {
+            for r in 0..n {
+                let ex = ex.clone();
+                s.spawn(move || {
+                    let mut bufs = vec![vec![0f32; 64]];
+                    for round in 0..8u32 {
+                        // The same buffers go in and come out every round.
+                        bufs[0].fill(r as f32 + round as f32);
+                        ex.all_reduce_mean_into(r, &mut bufs).unwrap();
+                        assert_eq!(bufs.len(), 1);
+                        assert_eq!(bufs[0].len(), 64);
+                        let want = (0..n).map(|k| k as f32 + round as f32).sum::<f32>() / n as f32;
+                        assert!((bufs[0][0] - want).abs() < 1e-6, "round {round}");
+                    }
+                });
+            }
+        });
+        assert_eq!(ex.rounds(), 8);
     }
 
     #[test]

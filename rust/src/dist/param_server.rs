@@ -58,7 +58,7 @@ impl ServerStats {
 }
 
 struct ServerState {
-    params: Arc<ParamStore>,
+    params: ParamStore,
     slots: Vec<ParamStore>,
     version: u64,
     stats: ServerStats,
@@ -93,7 +93,7 @@ impl ParamServer {
             max_version,
             lr_of: Box::new(lr_of),
             st: Mutex::new(ServerState {
-                params: Arc::new(params),
+                params,
                 slots,
                 version: 0,
                 stats: ServerStats::default(),
@@ -109,11 +109,23 @@ impl ParamServer {
         self.bound
     }
 
-    /// Consistent snapshot: the parameters and the version they correspond
-    /// to.  Cheap — an `Arc` clone, no tensor copy.
-    pub fn pull(&self) -> (Arc<ParamStore>, u64) {
+    /// Consistent snapshot: a deep copy of the parameters and the version
+    /// they correspond to.  Convenience for tests / final evaluation — the
+    /// worker hot path uses [`ParamServer::pull_into`] with a reusable
+    /// destination store instead.
+    pub fn pull(&self) -> (ParamStore, u64) {
         let st = self.st.lock().unwrap();
         (st.params.clone(), st.version)
+    }
+
+    /// Snapshot INTO a caller-owned store: values are copied under the
+    /// server lock into the destination's existing buffers (tensors are
+    /// inserted on the first pull), so a worker that reuses its store pulls
+    /// with zero heap allocations in steady state.
+    pub fn pull_into(&self, dst: &mut ParamStore) -> Result<u64> {
+        let st = self.st.lock().unwrap();
+        dst.copy_values_from(&st.params)?;
+        Ok(st.version)
     }
 
     pub fn version(&self) -> u64 {
@@ -147,14 +159,12 @@ impl ParamServer {
         }
         let step = st.version + 1;
         let lr = (self.lr_of)(step);
-        // Copy-on-write: pullers hold `Arc` snapshots, so `make_mut` clones
-        // only while someone is actually reading; an uncontended server
-        // updates in place instead of copying the whole model every push.
+        // In-place apply: pullers copy values OUT under the lock
+        // (`pull_into`), so the server never clones the model on a push.
         // (On an apply error the run is torn down by the worker's `?`, so a
-        // partially-written in-place store is never trained on.)
+        // partially-written store is never trained on.)
         let st = &mut *st;
-        let params = Arc::make_mut(&mut st.params);
-        apply_step(rt, &self.spec, step as f32, lr as f32, params, &mut st.slots, grads)?;
+        apply_step(rt, &self.spec, step as f32, lr as f32, &mut st.params, &mut st.slots, grads)?;
         st.version = step;
         st.stats.applied += 1;
         st.stats.staleness_sum += staleness;
@@ -253,6 +263,21 @@ mod tests {
         assert_eq!(s.dropped, 1);
         assert_eq!(s.staleness_max, 1);
         assert!(s.mean_staleness() <= 1.0);
+    }
+
+    #[test]
+    fn pull_into_reuses_the_destination_store() {
+        let (rt, srv, grads) = server_fixture(2);
+        let mut dst = ParamStore::new();
+        let v0 = srv.pull_into(&mut dst).unwrap();
+        assert_eq!(v0, 0);
+        assert_eq!(dst.l2_distance(&srv.pull().0), 0.0);
+        srv.push(&rt, &grads, 0).unwrap();
+        // Second pull copies the NEW values into the SAME tensors.
+        let v1 = srv.pull_into(&mut dst).unwrap();
+        assert_eq!(v1, 1);
+        assert_eq!(dst.l2_distance(&srv.pull().0), 0.0);
+        assert_eq!(dst.len(), srv.pull().0.len());
     }
 
     #[test]

@@ -27,12 +27,13 @@ use anyhow::{anyhow, Context, Result};
 
 use super::exchange::{Exchange, InProcAllReduce};
 use super::{bound_scaling, DistResult};
-use crate::coordinator::trainer::{
-    batch_to_tensors, d_step_inputs, sample_y, sample_z, Prologue, TrainConfig,
-};
+use crate::coordinator::trainer::{upsert_batch_y, upsert_y, upsert_z, Prologue, TrainConfig};
 use crate::coordinator::TrainResult;
 use crate::metrics::tracker::Series;
-use crate::runtime::{apply_step, run_inference, run_step_grads, ParamStore, Runtime};
+use crate::runtime::{
+    apply_step, run_inference_into, run_step_grads_into, HostTensor, ParamStore, Runtime,
+    StepOutputs,
+};
 use crate::util::rng::Rng;
 
 /// What one replica thread hands back.
@@ -45,29 +46,55 @@ struct ReplicaOutcome {
     d_params: ParamStore,
 }
 
-/// All-reduce `grads` (in place) together with a scalar loss; returns the
-/// cross-replica mean loss.  The loss rides as one extra 1-element tensor.
-fn reduce_with_loss(
+/// All-reduce `grads` (in place) together with a scalar loss through the
+/// buffer-reusing exchange round; returns the cross-replica mean loss.  The
+/// loss rides as one extra 1-element tensor, and `scratch` (caller-owned,
+/// reused every round) carries the flat deposits — steady state allocates
+/// nothing on any replica.
+fn reduce_with_loss_into(
     ex: &dyn Exchange,
     replica: usize,
     grads: &mut ParamStore,
     loss: f64,
+    scratch: &mut Vec<Vec<f32>>,
 ) -> Result<f64> {
-    let mut tensors: Vec<Vec<f32>> = grads.iter().map(|t| t.data.clone()).collect();
-    tensors.push(vec![loss as f32]);
-    let reduced = ex.all_reduce_mean(replica, tensors)?;
-    let names: Vec<String> = grads.iter().map(|t| t.name.clone()).collect();
-    for (name, data) in names.iter().zip(reduced.iter()) {
-        grads.set_data(name, data.clone())?;
+    let n_t = grads.len() + 1;
+    let matches = scratch.len() == n_t
+        && scratch.iter().zip(grads.iter()).all(|(b, t)| b.len() == t.data.len())
+        && scratch[n_t - 1].len() == 1;
+    if matches {
+        for (b, t) in scratch.iter_mut().zip(grads.iter()) {
+            b.copy_from_slice(&t.data);
+        }
+        scratch[n_t - 1][0] = loss as f32;
+    } else {
+        scratch.clear();
+        for t in grads.iter() {
+            scratch.push(t.data.clone());
+        }
+        scratch.push(vec![loss as f32]);
     }
-    Ok(reduced.last().expect("loss tensor")[0] as f64)
+    ex.all_reduce_mean_into(replica, scratch)?;
+    // Store iteration order is the deposit order on every replica, so the
+    // positional copy-back is exact.
+    for (t, b) in grads.iter_mut().zip(scratch.iter()) {
+        t.data.copy_from_slice(b);
+    }
+    Ok(scratch[n_t - 1][0] as f64)
+}
+
+/// The two collectives of one sync run (one per phase, so each keeps a
+/// stable tensor layout and its reduce scratch never reallocates).
+pub(crate) struct SyncExchanges {
+    pub d: std::sync::Arc<InProcAllReduce>,
+    pub g: std::sync::Arc<InProcAllReduce>,
 }
 
 fn sync_worker(
     cfg: &TrainConfig,
     replica: usize,
     n: usize,
-    ex: &InProcAllReduce,
+    ex: &SyncExchanges,
 ) -> Result<ReplicaOutcome> {
     let pro = Prologue::new(cfg)?;
     let model = pro.manifest.model(&cfg.model)?;
@@ -91,10 +118,26 @@ fn sync_worker(
     let pipeline = super::replica_pipeline(model, cfg.n_modes, cfg.seed, replica);
     let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, replica as u64);
 
-    let mut g_loss = Vec::new();
-    let mut d_loss = Vec::new();
-    let mut lr_series = Vec::new();
+    let mut g_loss = Vec::with_capacity(cfg.steps as usize);
+    let mut d_loss =
+        Vec::with_capacity(cfg.steps as usize * cfg.policy.d_steps_per_g.max(1) as usize);
+    let mut lr_series = Vec::with_capacity(cfg.steps as usize);
     let mut images = 0u64;
+
+    // Step-persistent state: input maps, gradient stores, output maps and
+    // reduce scratch are allocated on the first step and reused afterwards
+    // — with the backend's workspace arena this makes the whole replica
+    // loop allocation-free in steady state.
+    let mut gen_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut g_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut gen_outs = StepOutputs::new();
+    let mut d_outs = StepOutputs::new();
+    let mut g_outs = StepOutputs::new();
+    let mut d_grads = ParamStore::new();
+    let mut g_grads = ParamStore::new();
+    let mut d_scratch: Vec<Vec<f32>> = Vec::new();
+    let mut g_scratch: Vec<Vec<f32>> = Vec::new();
 
     for step in 1..=cfg.steps {
         let lr = scaling.lr_at(step);
@@ -103,24 +146,45 @@ fn sync_worker(
         // across replicas, identical apply ---
         for _ in 0..cfg.policy.d_steps_per_g {
             let real = pipeline.next_batch().context("real batch (dist sync)")?;
-            let mut gen_in = BTreeMap::new();
-            gen_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+            upsert_z(&mut gen_in, &mut z_rng, model.batch, model.z_dim);
             // Conditional models generate with the real batch's labels (the
-            // sync scheme's pairing); `d_step_inputs` then reuses them.
-            let y_t = (model.n_classes > 0)
-                .then(|| batch_to_tensors(&real, &model.img_shape, model.n_classes).1)
-                .flatten();
-            if let Some(y) = &y_t {
-                gen_in.insert("y".to_string(), y.clone());
+            // sync scheme's pairing); the d_step then reuses them.
+            if model.n_classes > 0 {
+                upsert_batch_y(&mut gen_in, &real, model.n_classes);
+                upsert_batch_y(&mut d_in, &real, model.n_classes);
             }
-            let fake = run_inference(&rt, &gen_spec, &g_params, &gen_in)?
-                .remove("images")
-                .context("generate")?;
-            let d_in = d_step_inputs(&real, &model.img_shape, model.n_classes, fake, y_t)?;
-            let (mut grads, outs) =
-                run_step_grads(&rt, &d_spec, &d_params, &d_slots, None, &d_in)?;
-            let local_loss = outs["loss"].data[0] as f64;
-            let mean_loss = reduce_with_loss(ex, replica, &mut grads, local_loss)?;
+            crate::coordinator::trainer::upsert_real(&mut d_in, &real, &model.img_shape);
+            pipeline.recycle(real);
+            run_inference_into(&rt, &gen_spec, &g_params, &gen_in, &mut gen_outs)?;
+            // Swap the generated images into the d_step's `fake` input —
+            // the buffers ping-pong between the two maps, no copy.
+            let images_t = gen_outs.get_mut("images").context("generate")?;
+            match d_in.get_mut("fake") {
+                Some(t) => std::mem::swap(&mut t.data, &mut images_t.data),
+                None => {
+                    d_in.insert(
+                        "fake".to_string(),
+                        HostTensor::new(
+                            "fake",
+                            images_t.shape.clone(),
+                            std::mem::take(&mut images_t.data),
+                        ),
+                    );
+                }
+            }
+            run_step_grads_into(
+                &rt,
+                &d_spec,
+                &d_params,
+                &d_slots,
+                None,
+                &d_in,
+                &mut d_grads,
+                &mut d_outs,
+            )?;
+            let local_loss = d_outs["loss"].data[0] as f64;
+            let mean_loss =
+                reduce_with_loss_into(ex.d.as_ref(), replica, &mut d_grads, local_loss, &mut d_scratch)?;
             apply_step(
                 &rt,
                 &d_spec,
@@ -128,22 +192,30 @@ fn sync_worker(
                 (lr * cfg.policy.discriminator.lr_mult) as f32,
                 &mut d_params,
                 &mut d_slots,
-                &grads,
+                &d_grads,
             )?;
             d_loss.push((step, mean_loss));
             images += model.batch as u64;
         }
 
         // --- G phase against the freshly (identically) updated D ---
-        let mut g_in = BTreeMap::new();
-        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
+        upsert_z(&mut g_in, &mut z_rng, model.batch, model.z_dim);
         if model.n_classes > 0 {
-            g_in.insert("y".to_string(), sample_y(&mut z_rng, model.batch, model.n_classes));
+            upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
         }
-        let (mut grads, outs) =
-            run_step_grads(&rt, &g_spec, &g_params, &g_slots, Some(&d_params), &g_in)?;
-        let local_loss = outs["loss"].data[0] as f64;
-        let mean_loss = reduce_with_loss(ex, replica, &mut grads, local_loss)?;
+        run_step_grads_into(
+            &rt,
+            &g_spec,
+            &g_params,
+            &g_slots,
+            Some(&d_params),
+            &g_in,
+            &mut g_grads,
+            &mut g_outs,
+        )?;
+        let local_loss = g_outs["loss"].data[0] as f64;
+        let mean_loss =
+            reduce_with_loss_into(ex.g.as_ref(), replica, &mut g_grads, local_loss, &mut g_scratch)?;
         apply_step(
             &rt,
             &g_spec,
@@ -151,7 +223,7 @@ fn sync_worker(
             (lr * cfg.policy.generator.lr_mult) as f32,
             &mut g_params,
             &mut g_slots,
-            &grads,
+            &g_grads,
         )?;
         g_loss.push((step, mean_loss));
         lr_series.push((step, lr));
@@ -178,28 +250,37 @@ pub(crate) fn train_sync_dist(cfg: &TrainConfig) -> Result<DistResult> {
     bound_scaling(cfg)?;
     let threads_partition = super::partition_kernel_threads(cfg, n);
 
-    let ex = InProcAllReduce::new(n, cfg.dist.topology);
+    // One collective per phase: the D and G gradient layouts differ, and a
+    // dedicated exchange per layout keeps the reduce scratch stable (and
+    // allocation-free) across rounds.
+    let ex = SyncExchanges {
+        d: InProcAllReduce::new(n, cfg.dist.topology),
+        g: InProcAllReduce::new(n, cfg.dist.topology),
+    };
     let t0 = Instant::now();
-    // Poison the barrier whenever a replica leaves WITHOUT finishing — via
+    // Poison the barriers whenever a replica leaves WITHOUT finishing — via
     // Err or via panic/unwind.  A plain `if err { abort() }` would be
     // skipped by a panic, parking every peer (and the join below) forever.
     struct AbortOnDrop {
-        ex: std::sync::Arc<InProcAllReduce>,
+        d: std::sync::Arc<InProcAllReduce>,
+        g: std::sync::Arc<InProcAllReduce>,
         armed: bool,
     }
     impl Drop for AbortOnDrop {
         fn drop(&mut self) {
             if self.armed {
-                self.ex.abort();
+                self.d.abort();
+                self.g.abort();
             }
         }
     }
     let handles: Vec<_> = (0..n)
         .map(|r| {
             let cfg = cfg.clone();
-            let ex = ex.clone();
+            let ex = SyncExchanges { d: ex.d.clone(), g: ex.g.clone() };
             std::thread::spawn(move || {
-                let mut guard = AbortOnDrop { ex: ex.clone(), armed: true };
+                let mut guard =
+                    AbortOnDrop { d: ex.d.clone(), g: ex.g.clone(), armed: true };
                 let out = sync_worker(&cfg, r, n, &ex);
                 guard.armed = out.is_err();
                 out

@@ -337,12 +337,191 @@ where
     results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
 }
 
+// ---------------------------------------------------------------------------
+// The persistent kernel fan-out pool
+// ---------------------------------------------------------------------------
+//
+// `parallel_chunks_mut` used to spawn SCOPED threads per call — a handful of
+// heap allocations and ~tens of microseconds of spawn/join per GEMM, many
+// times per training step.  The zero-allocation steady state (see
+// `runtime::workspace`) demands a persistent pool instead: each OS thread
+// that fans kernels out lazily spawns its own helper threads ONCE and then
+// dispatches borrowed jobs to them through a condvar handoff.  Per-thread
+// pools keep replica threads fully independent (no cross-replica lock
+// contention, same as the one-backend-per-thread design).
+
+/// A borrowed job handed to helpers.  SAFETY: the dispatcher blocks until
+/// every participant has finished before the borrow ends (see
+/// [`GemmPool::run`]), so erasing the lifetime is sound.
+#[derive(Clone, Copy)]
+struct RawJob(*const (dyn Fn() + Sync));
+unsafe impl Send for RawJob {}
+
+struct GemmPoolState {
+    job: Option<RawJob>,
+    /// Monotonic job id: helpers track the last id they saw so a job is
+    /// never run twice by one helper.
+    job_id: u64,
+    /// Participants this job still wants (claimed by helpers as they wake).
+    open_slots: usize,
+    /// Participants still running the current job.
+    active: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct GemmPoolInner {
+    state: Mutex<GemmPoolState>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// One caller thread's persistent helper fleet.
+struct GemmPool {
+    inner: Arc<GemmPoolInner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl GemmPool {
+    fn new() -> GemmPool {
+        GemmPool {
+            inner: Arc::new(GemmPoolInner {
+                state: Mutex::new(GemmPoolState {
+                    job: None,
+                    job_id: 0,
+                    open_slots: 0,
+                    active: 0,
+                    panicked: false,
+                    shutdown: false,
+                }),
+                start: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            handles: Vec::new(),
+        }
+    }
+
+    fn helper_loop(inner: Arc<GemmPoolInner>) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = inner.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.job_id > seen {
+                        seen = st.job_id;
+                        if st.open_slots > 0 {
+                            st.open_slots -= 1;
+                            break st.job.expect("open job present");
+                        }
+                        // Job already fully claimed: wait for the next one.
+                    }
+                    st = inner.start.wait(st).unwrap();
+                }
+            };
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: the dispatcher keeps the closure alive until
+                // `active` reaches zero (below).
+                (unsafe { &*job.0 })();
+            }))
+            .is_ok();
+            let mut st = inner.state.lock().unwrap();
+            if !ok {
+                st.panicked = true;
+            }
+            st.active -= 1;
+            if st.active == 0 {
+                inner.done.notify_all();
+            }
+            drop(st);
+        }
+    }
+
+    /// Grow the helper fleet to at least `n` threads (steady state: no-op).
+    fn ensure_helpers(&mut self, n: usize) {
+        while self.handles.len() < n {
+            let inner = self.inner.clone();
+            self.handles.push(std::thread::spawn(move || Self::helper_loop(inner)));
+        }
+    }
+
+    /// Run `f` on `helpers` pool threads plus the calling thread; returns
+    /// once every participant finished.  Zero heap allocations once the
+    /// fleet exists.
+    fn run(&mut self, f: &(dyn Fn() + Sync), helpers: usize) {
+        if helpers == 0 {
+            f();
+            return;
+        }
+        self.ensure_helpers(helpers);
+        // SAFETY: lifetime erased; we block until all participants finish,
+        // so the borrow outlives every dereference.
+        let f_static: &'static (dyn Fn() + Sync + 'static) = unsafe { std::mem::transmute(f) };
+        let raw = RawJob(f_static as *const (dyn Fn() + Sync));
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            debug_assert!(st.job.is_none() || st.active == 0, "pool reentry");
+            st.job = Some(raw);
+            st.job_id += 1;
+            st.open_slots = helpers;
+            st.active = helpers;
+            st.panicked = false;
+        }
+        self.inner.start.notify_all();
+        // The caller is a participant too — it drains the same chunk queue.
+        // Its panic must NOT unwind past this frame while helpers still hold
+        // the lifetime-erased job pointer: catch, drain the fleet, re-raise.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f()));
+        let mut st = self.inner.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.inner.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let helper_panicked = st.panicked;
+        drop(st);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        assert!(!helper_panicked, "kernel pool helper panicked");
+    }
+}
+
+impl Drop for GemmPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL_GEMM_POOL: std::cell::RefCell<Option<GemmPool>> =
+        std::cell::RefCell::new(None);
+}
+
+/// Dispatch a borrowed job to this thread's persistent kernel pool.
+fn run_on_local_pool(f: &(dyn Fn() + Sync), helpers: usize) {
+    LOCAL_GEMM_POOL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        slot.get_or_insert_with(GemmPool::new).run(f, helpers);
+    });
+}
+
 /// Split `out` (a row-major `rows x row_len` buffer) into chunks of
 /// `chunk_rows` rows and run `f(first_row, chunk)` over them on up to
-/// `n_threads` scoped worker threads (work-stealing over chunk index, like
-/// [`parallel_map`]).  Chunks are disjoint `&mut` slices, so `f` can write
-/// its rows freely; with `n_threads <= 1` or a single chunk everything runs
-/// inline on the caller's thread — no spawn, bit-identical results.
+/// `n_threads` threads (the calling thread plus its persistent helper pool,
+/// work-stealing over an atomic chunk index).  Chunks are disjoint `&mut`
+/// slices, so `f` can write its rows freely; with `n_threads <= 1` or a
+/// single chunk everything runs inline on the caller's thread — no
+/// dispatch, bit-identical results.  Steady state performs zero heap
+/// allocations: helpers are spawned once per caller thread and reused.
 ///
 /// This is the fan-out primitive of `runtime::kernel::Gemm`: one chunk per
 /// row-panel group, each accumulating its own output rows.
@@ -369,24 +548,27 @@ pub fn parallel_chunks_mut<T, F>(
         }
         return;
     }
-    let chunks: Vec<Mutex<Option<(usize, &mut [T])>>> = out
-        .chunks_mut(chunk_len)
-        .enumerate()
-        .map(|(ci, c)| Mutex::new(Some((ci * chunk_rows, c))))
-        .collect();
+    // A Sync-by-assertion base pointer: chunk claims are exclusive (atomic
+    // index), so concurrent participants never touch overlapping elements.
+    struct BasePtr<T>(*mut T);
+    unsafe impl<T: Send> Sync for BasePtr<T> {}
+    let total = out.len();
+    let base = BasePtr(out.as_mut_ptr());
     let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..n_threads.min(n_chunks) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= chunks.len() {
-                    break;
-                }
-                let (row0, chunk) = chunks[i].lock().unwrap().take().unwrap();
-                f(row0, chunk);
-            });
+    let worker = move || loop {
+        let i = next.fetch_add(1, Ordering::SeqCst);
+        if i >= n_chunks {
+            break;
         }
-    });
+        let start = i * chunk_len;
+        let end = (start + chunk_len).min(total);
+        // SAFETY: chunk index `i` is claimed exactly once (atomic), so the
+        // slices are disjoint; `out` outlives the dispatch (the pool blocks
+        // until all participants finish).
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(i * chunk_rows, chunk);
+    };
+    run_on_local_pool(&worker, n_threads.min(n_chunks) - 1);
 }
 
 #[cfg(test)]
@@ -512,6 +694,23 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map((0..50).collect::<Vec<i32>>(), 4, |x| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn repeated_pool_dispatch_from_one_thread_is_stable() {
+        // The persistent per-thread pool serves many back-to-back fan-outs
+        // (the per-step GEMM pattern) without respawning helpers.
+        for round in 0..50u32 {
+            let mut out = vec![0u32; 24 * 4];
+            parallel_chunks_mut(&mut out, 4, 2, 4, |row0, chunk| {
+                for (r, row) in chunk.chunks_mut(4).enumerate() {
+                    row.fill((row0 + r) as u32 + round);
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, (i / 4) as u32 + round, "round {round}");
+            }
+        }
     }
 
     #[test]

@@ -222,6 +222,217 @@ impl MatmulPlan {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Memory planning — the arena layer of the layout transformer
+// ---------------------------------------------------------------------------
+
+/// First-fit interval allocator over an abstract f32 arena.  This is the ONE
+/// placement policy for step-scratch memory: `MemoryPlan::assign` runs it
+/// over a buffer-request trace at plan time, and `runtime::workspace` runs
+/// the same allocator live, so planned offsets and executed offsets agree by
+/// construction (PR-3's "the planner's tiles are the tiles the engine runs",
+/// applied to bytes).
+///
+/// All operations are heap-free once `with_capacity` has reserved the free
+/// list (splits and coalesced releases never exceed one interval per
+/// outstanding buffer plus one).
+#[derive(Debug, Clone)]
+pub struct IntervalAlloc {
+    /// Free intervals (offset, len), sorted by offset, always coalesced.
+    free: Vec<(usize, usize)>,
+    total: usize,
+}
+
+impl IntervalAlloc {
+    pub fn new(total: usize) -> IntervalAlloc {
+        IntervalAlloc::with_capacity(total, 64)
+    }
+
+    pub fn with_capacity(total: usize, cap: usize) -> IntervalAlloc {
+        let mut free = Vec::with_capacity(cap.max(4));
+        if total > 0 {
+            free.push((0, total));
+        }
+        IntervalAlloc { free, total }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Drop all checkouts and make the whole (possibly resized) arena free.
+    /// Keeps the free list's capacity — no allocation in steady state.
+    pub fn reset(&mut self, total: usize) {
+        self.free.clear();
+        if total > 0 {
+            self.free.push((0, total));
+        }
+        self.total = total;
+    }
+
+    /// First-fit: the lowest-offset free interval that holds `len`.
+    /// Deterministic in the request/release sequence alone.
+    pub fn alloc(&mut self, len: usize) -> Option<usize> {
+        if len == 0 {
+            return Some(0);
+        }
+        for i in 0..self.free.len() {
+            let (off, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + len, flen - len);
+                }
+                return Some(off);
+            }
+        }
+        None
+    }
+
+    /// Return an interval, coalescing with free neighbours.
+    pub fn release(&mut self, off: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        debug_assert!(off + len <= self.total, "release past arena end");
+        let i = self.free.partition_point(|&(o, _)| o < off);
+        self.free.insert(i, (off, len));
+        if i + 1 < self.free.len() && self.free[i].0 + self.free[i].1 == self.free[i + 1].0 {
+            let add = self.free[i + 1].1;
+            self.free[i].1 += add;
+            self.free.remove(i + 1);
+        }
+        if i > 0 && self.free[i - 1].0 + self.free[i - 1].1 == self.free[i].0 {
+            let add = self.free[i].1;
+            self.free[i - 1].1 += add;
+            self.free.remove(i);
+        }
+    }
+}
+
+/// One buffer request in a step's memory trace: `len` f32 values live over
+/// the half-open-free event range `[start, end]` (event indices along the
+/// walk of the arch array — acquire at `start`, release after `end`).
+#[derive(Debug, Clone)]
+pub struct BufReq {
+    pub name: String,
+    pub len: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A planned buffer: the request plus its assigned arena offset.
+#[derive(Debug, Clone)]
+pub struct PlannedBuf {
+    pub name: String,
+    pub len: usize,
+    pub start: usize,
+    pub end: usize,
+    pub offset: usize,
+}
+
+impl PlannedBuf {
+    fn overlaps_time(&self, other: &PlannedBuf) -> bool {
+        self.start <= other.end && other.start <= self.end
+    }
+
+    fn overlaps_bytes(&self, other: &PlannedBuf) -> bool {
+        self.len > 0
+            && other.len > 0
+            && self.offset < other.offset + other.len
+            && other.offset < self.offset + self.len
+    }
+}
+
+/// The planned step arena: every intermediate of one training step placed at
+/// a fixed offset, with buffers whose live ranges do not overlap sharing
+/// bytes.  Built once per (model, batch, thread-count) — see
+/// `runtime::workspace::step_memory_plan`, which walks the same `arch` array
+/// the backend executes and feeds the trace through [`MemoryPlan::assign`].
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    pub bufs: Vec<PlannedBuf>,
+    /// Arena size in f32 values (max watermark of the placement).
+    pub total: usize,
+}
+
+impl MemoryPlan {
+    /// Place a request trace with first-fit reuse across non-overlapping
+    /// live ranges.  Requests are processed in ascending `start` (ties in
+    /// trace order); before each acquisition every earlier buffer whose
+    /// `end` precedes the new `start` is released (ascending (end, index)
+    /// order).  Pure function of the trace — stable offsets across runs.
+    pub fn assign(reqs: Vec<BufReq>) -> MemoryPlan {
+        // Effectively-unbounded arena; the high-water mark becomes `total`.
+        const INF: usize = usize::MAX / 4;
+        let mut order: Vec<usize> = (0..reqs.len()).collect();
+        order.sort_by_key(|&i| (reqs[i].start, i));
+
+        let mut alloc = IntervalAlloc::with_capacity(INF, reqs.len() * 2 + 4);
+        let mut bufs: Vec<Option<PlannedBuf>> = (0..reqs.len()).map(|_| None).collect();
+        // (end, index) of live buffers, kept sorted ascending.
+        let mut live: Vec<(usize, usize)> = Vec::with_capacity(reqs.len());
+        let mut total = 0usize;
+
+        for &i in &order {
+            let r = &reqs[i];
+            // Release everything that died before this acquisition.
+            while let Some(&(end, j)) = live.first() {
+                if end >= r.start {
+                    break;
+                }
+                let b = bufs[j].as_ref().expect("released buf was placed");
+                alloc.release(b.offset, b.len);
+                live.remove(0);
+            }
+            let offset = alloc.alloc(r.len).expect("unbounded arena");
+            total = total.max(offset + r.len);
+            let pos = live.partition_point(|&(e, j)| (e, j) < (r.end, i));
+            live.insert(pos, (r.end, i));
+            bufs[i] = Some(PlannedBuf {
+                name: r.name.clone(),
+                len: r.len,
+                start: r.start,
+                end: r.end,
+                offset,
+            });
+        }
+        MemoryPlan {
+            bufs: bufs.into_iter().map(|b| b.expect("every request placed")).collect(),
+            total,
+        }
+    }
+
+    /// Planner invariant: two buffers alive at the same time never share
+    /// bytes.  O(n^2) — a plan-time/test-time check, not a hot path.
+    pub fn check_no_overlap(&self) -> Result<(), String> {
+        for (i, a) in self.bufs.iter().enumerate() {
+            for b in &self.bufs[i + 1..] {
+                if a.overlaps_time(b) && a.overlaps_bytes(b) {
+                    return Err(format!(
+                        "'{}' [{}..{}) and '{}' [{}..{}) are simultaneously live \
+                         and share bytes",
+                        a.name,
+                        a.offset,
+                        a.offset + a.len,
+                        b.name,
+                        b.offset,
+                        b.offset + b.len
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// How many bytes the plan reuses: sum of buffer sizes minus the arena
+    /// size (0 = no sharing).
+    pub fn reused(&self) -> usize {
+        self.bufs.iter().map(|b| b.len).sum::<usize>().saturating_sub(self.total)
+    }
+}
+
 /// Largest multiple of `tile` that divides `dim` and is <= pref.
 fn divisor_block(dim: usize, pref: usize, tile: usize) -> usize {
     debug_assert_eq!(dim % tile, 0);
@@ -324,6 +535,89 @@ mod tests {
                 && r.effective_threads(64, m, k, n) <= m.div_ceil(CPU_MR)
                 && r.effective_threads(0, m, k, n) >= 1
                 && r.effective_threads(8, 4, 4, 4) == 1 // tiny matmul: no spawn
+        });
+    }
+
+    fn req(name: &str, len: usize, start: usize, end: usize) -> BufReq {
+        BufReq { name: name.into(), len, start, end }
+    }
+
+    #[test]
+    fn interval_alloc_first_fit_reuses_and_coalesces() {
+        let mut a = IntervalAlloc::new(100);
+        let x = a.alloc(30).unwrap();
+        let y = a.alloc(30).unwrap();
+        let z = a.alloc(30).unwrap();
+        assert_eq!((x, y, z), (0, 30, 60));
+        assert!(a.alloc(20).is_none(), "only 10 of 100 left");
+        a.release(30, 30); // free the middle
+        assert_eq!(a.alloc(30).unwrap(), 30, "first-fit reuses the freed hole");
+        a.release(0, 30);
+        a.release(30, 30);
+        a.release(60, 30);
+        // Fully coalesced: one 100-wide interval serves a 95.
+        assert_eq!(a.alloc(95).unwrap(), 0);
+    }
+
+    #[test]
+    fn interval_alloc_rejects_when_full() {
+        let mut a = IntervalAlloc::new(10);
+        assert_eq!(a.alloc(10), Some(0));
+        assert_eq!(a.alloc(1), None);
+        a.reset(10);
+        assert_eq!(a.alloc(10), Some(0));
+    }
+
+    #[test]
+    fn memory_plan_no_overlap_and_reuse() {
+        // a and b overlap in time; c starts after a dies, so it may (and
+        // with first-fit, will) reuse a's bytes.
+        let plan = MemoryPlan::assign(vec![
+            req("a", 64, 0, 2),
+            req("b", 32, 1, 5),
+            req("c", 64, 3, 6),
+        ]);
+        plan.check_no_overlap().unwrap();
+        let a = &plan.bufs[0];
+        let c = &plan.bufs[2];
+        assert_eq!(c.offset, a.offset, "disjoint live ranges share the slab");
+        assert_eq!(plan.total, 96, "arena is peak live, not sum of sizes");
+        assert_eq!(plan.reused(), 64);
+    }
+
+    #[test]
+    fn memory_plan_offsets_are_stable_across_runs() {
+        let trace = || {
+            vec![
+                req("x0", 128, 0, 9),
+                req("pre0", 256, 1, 8),
+                req("im2col", 512, 1, 1),
+                req("pre1", 64, 2, 7),
+                req("grad1", 64, 7, 8),
+                req("grad0", 256, 8, 9),
+            ]
+        };
+        let p1 = MemoryPlan::assign(trace());
+        let p2 = MemoryPlan::assign(trace());
+        for (a, b) in p1.bufs.iter().zip(&p2.bufs) {
+            assert_eq!((a.offset, a.len), (b.offset, b.len), "{}", a.name);
+        }
+        p1.check_no_overlap().unwrap();
+        assert_eq!(p1.total, p2.total);
+    }
+
+    #[test]
+    fn prop_memory_plan_never_overlaps() {
+        forall(gens::vec(gens::usize_in(1..64), 12..13), |dims| {
+            let reqs: Vec<BufReq> = dims
+                .chunks(3)
+                .enumerate()
+                .map(|(i, c)| {
+                    let (s, e) = (c[1].min(c[2]), c[1].max(c[2]));
+                    req(&format!("b{i}"), c[0], s, e)
+                })
+                .collect();
+            MemoryPlan::assign(reqs).check_no_overlap().is_ok()
         });
     }
 

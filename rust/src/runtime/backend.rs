@@ -17,10 +17,13 @@
 //! coordinator's one-runtime-per-thread design; everything crossing threads
 //! stays `HostTensor`.
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Result};
 
 use super::artifact::ArtifactSpec;
-use super::params::HostTensor;
+use super::params::{HostTensor, ParamStore};
+use super::step::StepOutputs;
 
 /// Compile/execute counters for perf accounting (shared by all backends).
 #[derive(Debug, Default, Clone)]
@@ -99,5 +102,77 @@ pub trait Backend {
             self.platform(),
             spec.key
         )
+    }
+
+    // -----------------------------------------------------------------
+    // In-place (zero-allocation) step paths — OPTIONAL fast lane.
+    //
+    // `Ok(false)` means "not supported here, use the HostTensor-list
+    // protocol above"; the step plumbing always falls back, so these
+    // defaults keep fused-only backends (PJRT) fully functional.  A
+    // backend that returns `Ok(true)` must have produced EXACTLY the
+    // observable effects of the generic path: params/slots updated with
+    // bit-identical values, `outs` holding the artifact's `out:` tensors.
+    // `RefCpuBackend` implements them over its per-replica workspace
+    // arena (`runtime::workspace`) so the steady-state training step
+    // performs zero heap allocations.
+    // -----------------------------------------------------------------
+
+    /// Fused step executed in place: params/slots mutated directly, `out:`
+    /// tensors upserted into the caller's reusable `outs` map.
+    #[allow(clippy::too_many_arguments)]
+    fn step_in_place(
+        &self,
+        _spec: &ArtifactSpec,
+        _step: f32,
+        _lr: f32,
+        _params: &mut ParamStore,
+        _slots: &mut [ParamStore],
+        _dparams: Option<&ParamStore>,
+        _data: &BTreeMap<String, HostTensor>,
+        _outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Gradient-only execution in place: gradients upserted into the
+    /// caller's reusable `grads` store (one tensor per `param:` input,
+    /// named/shaped like the parameter), extras into `outs`.
+    fn grads_in_place(
+        &self,
+        _spec: &ArtifactSpec,
+        _params: &ParamStore,
+        _dparams: Option<&ParamStore>,
+        _data: &BTreeMap<String, HostTensor>,
+        _grads: &mut ParamStore,
+        _outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Optimizer application in place (externally reduced gradients) —
+    /// the zero-copy counterpart of [`Backend::apply_update`].
+    fn apply_in_place(
+        &self,
+        _spec: &ArtifactSpec,
+        _step: f32,
+        _lr: f32,
+        _params: &mut ParamStore,
+        _slots: &mut [ParamStore],
+        _grads: &ParamStore,
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Inference (generate) in place: outputs upserted into `outs`,
+    /// nothing written back.
+    fn infer_in_place(
+        &self,
+        _spec: &ArtifactSpec,
+        _params: &ParamStore,
+        _data: &BTreeMap<String, HostTensor>,
+        _outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        Ok(false)
     }
 }

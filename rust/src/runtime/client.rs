@@ -12,13 +12,15 @@
 //! lives on one thread (the coordinator's runtime thread) and everything
 //! crossing threads is `HostTensor` (see `runtime::params`).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
 use super::artifact::ArtifactSpec;
 use super::backend::{Backend, RuntimeStats};
-use super::params::HostTensor;
+use super::params::{HostTensor, ParamStore};
+use super::step::StepOutputs;
 
 pub struct Runtime {
     backend: Box<dyn Backend>,
@@ -87,6 +89,59 @@ impl Runtime {
         grads: &[&HostTensor],
     ) -> Result<(Vec<HostTensor>, Vec<Vec<HostTensor>>)> {
         self.backend.apply_update(spec, step, lr, params, slots, grads)
+    }
+
+    // In-place fast-lane delegates (see `Backend` docs): `Ok(false)` means
+    // the backend does not support the lane and the step plumbing must use
+    // the generic HostTensor-list protocol.
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        step: f32,
+        lr: f32,
+        params: &mut ParamStore,
+        slots: &mut [ParamStore],
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        self.backend.step_in_place(spec, step, lr, params, slots, dparams, data, outs)
+    }
+
+    pub fn grads_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        grads: &mut ParamStore,
+        outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        self.backend.grads_in_place(spec, params, dparams, data, grads, outs)
+    }
+
+    pub fn apply_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        step: f32,
+        lr: f32,
+        params: &mut ParamStore,
+        slots: &mut [ParamStore],
+        grads: &ParamStore,
+    ) -> Result<bool> {
+        self.backend.apply_in_place(spec, step, lr, params, slots, grads)
+    }
+
+    pub fn infer_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        self.backend.infer_in_place(spec, params, data, outs)
     }
 }
 

@@ -115,6 +115,69 @@ impl KernelConfig {
 // Packed operands
 // ---------------------------------------------------------------------------
 
+/// Length of the packed A buffer for an (m, k) operand at panel height `mr`.
+pub fn packed_a_len(m: usize, k: usize, mr: usize) -> usize {
+    m.div_ceil(mr.max(1)).max(1) * k * mr
+}
+
+/// Length of the packed B buffer for a (k, n) operand at panel width `nr`.
+pub fn packed_b_len(k: usize, n: usize, nr: usize) -> usize {
+    n.div_ceil(nr.max(1)).max(1) * k * nr
+}
+
+/// Pack a row-major A operand into row panels, writing into `dst` (length
+/// [`packed_a_len`], pre-zeroed by the caller — edge-panel padding lanes are
+/// never written).  `trans` means `a` is stored `[k, m]`.  This is the one
+/// packing loop; [`PackedA::from_slice`] and the workspace paths both run it.
+pub fn pack_a_into(a: &[f32], m: usize, k: usize, trans: bool, mr: usize, dst: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(dst.len(), packed_a_len(m, k, mr));
+    let n_panels = m.div_ceil(mr.max(1)).max(1);
+    for p in 0..n_panels {
+        let base = p * k * mr;
+        let rows = mr.min(m - p * mr);
+        for r in 0..rows {
+            let i = p * mr + r;
+            if trans {
+                for kk in 0..k {
+                    dst[base + kk * mr + r] = a[kk * m + i];
+                }
+            } else {
+                let row = &a[i * k..(i + 1) * k];
+                for (kk, &v) in row.iter().enumerate() {
+                    dst[base + kk * mr + r] = v;
+                }
+            }
+        }
+    }
+}
+
+/// Pack a row-major B operand into column panels, writing into `dst`
+/// (length [`packed_b_len`], pre-zeroed).  `trans` means `b` is stored
+/// `[n, k]`.
+pub fn pack_b_into(b: &[f32], k: usize, n: usize, trans: bool, nr: usize, dst: &mut [f32]) {
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(dst.len(), packed_b_len(k, n, nr));
+    let n_panels = n.div_ceil(nr.max(1)).max(1);
+    for q in 0..n_panels {
+        let base = q * k * nr;
+        let cols = nr.min(n - q * nr);
+        for c in 0..cols {
+            let j = q * nr + c;
+            if trans {
+                let row = &b[j * k..(j + 1) * k];
+                for (kk, &v) in row.iter().enumerate() {
+                    dst[base + kk * nr + c] = v;
+                }
+            } else {
+                for kk in 0..k {
+                    dst[base + kk * nr + c] = b[kk * n + j];
+                }
+            }
+        }
+    }
+}
+
 /// A packed into row panels: panel `p` holds rows `p*mr .. p*mr+mr` in
 /// k-major order — element `(i, kk)` lives at
 /// `p*(k*mr) + kk*mr + (i - p*mr)`.  Edge panels are zero-padded to `mr`
@@ -123,6 +186,8 @@ impl KernelConfig {
 /// This is the planner-chosen layout im2col writes DIRECTLY
 /// (`ref_conv::im2col_packed`) — the paper's layout transformation applied
 /// for real instead of materializing row-major columns and re-packing.
+/// The owned type allocates its backing; the workspace step paths pack into
+/// arena slices via [`pack_a_into`] instead.
 pub struct PackedA {
     pub m: usize,
     pub k: usize,
@@ -132,32 +197,14 @@ pub struct PackedA {
 
 impl PackedA {
     pub fn zeroed(m: usize, k: usize, mr: usize) -> PackedA {
-        let panels = m.div_ceil(mr.max(1)).max(1);
-        PackedA { m, k, mr, data: vec![0f32; panels * k * mr] }
+        PackedA { m, k, mr, data: vec![0f32; packed_a_len(m, k, mr)] }
     }
 
     /// Pack from a row-major buffer; `trans` means `a` is stored `[k, m]`
     /// (the logical A transposed), i.e. element `(i, kk)` = `a[kk*m + i]`.
     pub fn from_slice(a: &[f32], m: usize, k: usize, trans: bool, mr: usize) -> PackedA {
-        debug_assert_eq!(a.len(), m * k);
         let mut pa = PackedA::zeroed(m, k, mr);
-        for p in 0..pa.n_panels() {
-            let base = p * k * mr;
-            let rows = mr.min(m - p * mr);
-            for r in 0..rows {
-                let i = p * mr + r;
-                if trans {
-                    for kk in 0..k {
-                        pa.data[base + kk * mr + r] = a[kk * m + i];
-                    }
-                } else {
-                    let row = &a[i * k..(i + 1) * k];
-                    for (kk, &v) in row.iter().enumerate() {
-                        pa.data[base + kk * mr + r] = v;
-                    }
-                }
-            }
-        }
+        pack_a_into(a, m, k, trans, mr, &mut pa.data);
         pa
     }
 
@@ -179,6 +226,11 @@ impl PackedA {
     }
 
     #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
@@ -196,32 +248,14 @@ pub struct PackedB {
 
 impl PackedB {
     pub fn zeroed(k: usize, n: usize, nr: usize) -> PackedB {
-        let panels = n.div_ceil(nr.max(1)).max(1);
-        PackedB { k, n, nr, data: vec![0f32; panels * k * nr] }
+        PackedB { k, n, nr, data: vec![0f32; packed_b_len(k, n, nr)] }
     }
 
     /// Pack from a row-major buffer; `trans` means `b` is stored `[n, k]`
     /// (the logical B transposed), i.e. element `(kk, j)` = `b[j*k + kk]`.
     pub fn from_slice(b: &[f32], k: usize, n: usize, trans: bool, nr: usize) -> PackedB {
-        debug_assert_eq!(b.len(), k * n);
         let mut pb = PackedB::zeroed(k, n, nr);
-        for q in 0..pb.n_panels() {
-            let base = q * k * nr;
-            let cols = nr.min(n - q * nr);
-            for c in 0..cols {
-                let j = q * nr + c;
-                if trans {
-                    let row = &b[j * k..(j + 1) * k];
-                    for (kk, &v) in row.iter().enumerate() {
-                        pb.data[base + kk * nr + c] = v;
-                    }
-                } else {
-                    for kk in 0..k {
-                        pb.data[base + kk * nr + c] = b[kk * n + j];
-                    }
-                }
-            }
-        }
+        pack_b_into(b, k, n, trans, nr, &mut pb.data);
         pb
     }
 
@@ -240,6 +274,11 @@ impl PackedB {
     #[inline]
     pub fn idx(&self, kk: usize, j: usize) -> usize {
         (j / self.nr) * (self.k * self.nr) + kk * self.nr + j % self.nr
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
     }
 
     #[inline]
@@ -318,6 +357,20 @@ impl Gemm {
         debug_assert_eq!((pa.m, pa.k), (self.m, self.k));
         debug_assert_eq!((pb.k, pb.n), (self.k, self.n));
         debug_assert_eq!((pa.mr, pb.nr), (self.rule.mr, self.rule.nr));
+        let mut out = vec![0f32; self.m * self.n];
+        self.run_panels_into(pa.data(), pb.data(), &mut out);
+        out
+    }
+
+    /// The compute core: panel-layout operands (see [`pack_a_into`] /
+    /// [`pack_b_into`]) multiplied into a caller-provided `out` slice of
+    /// length `m * n`.  Every element of `out` is written, so the buffer
+    /// does not need zeroing; the workspace step paths call this directly
+    /// so the steady state never allocates.
+    pub fn run_panels_into(&self, adata: &[f32], bdata: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(adata.len(), packed_a_len(self.m, self.k, self.rule.mr));
+        debug_assert_eq!(bdata.len(), packed_b_len(self.k, self.n, self.rule.nr));
+        debug_assert_eq!(out.len(), self.m * self.n);
         // The micro-kernel's register tile is compiled at CPU_MR x CPU_NR;
         // a rule carrying anything else would silently misindex the panels,
         // so check in release builds too (a plan bug, not a hot-path cost).
@@ -327,21 +380,22 @@ impl Gemm {
             "CpuTileRule micro-tile does not match the compiled micro-kernel"
         );
         let (m, k, n) = (self.m, self.k, self.n);
-        let mut out = vec![0f32; m * n];
         if m == 0 || n == 0 {
-            return out;
+            return;
         }
         let rule = self.rule;
         let threads = rule.effective_threads(self.cfg.threads, m, k, n);
         // Row panels per thread chunk: ~4 chunks per worker for balance,
         // always whole panels so no row is shared.
-        let n_panels = pa.n_panels();
+        let n_panels = m.div_ceil(rule.mr).max(1);
         let panels_per_chunk = n_panels.div_ceil(threads * 4).max(1);
         let chunk_rows = panels_per_chunk * rule.mr;
-        let q_panels = pb.n_panels();
+        let q_panels = n.div_ceil(rule.nr).max(1);
         let q_per_block = (rule.nc_cols / rule.nr).max(1);
+        let a_panel_len = k * rule.mr;
+        let b_panel_len = k * rule.nr;
 
-        parallel_chunks_mut(&mut out, n, chunk_rows, threads, |row0, chunk| {
+        parallel_chunks_mut(out, n, chunk_rows, threads, |row0, chunk| {
             let p0 = row0 / rule.mr;
             let chunk_panels = (chunk.len() / n).div_ceil(rule.mr);
             // Cache-block over B panels: the packed `nc_cols`-wide block
@@ -349,10 +403,11 @@ impl Gemm {
             for qb in (0..q_panels).step_by(q_per_block) {
                 for dp in 0..chunk_panels {
                     let p = p0 + dp;
-                    let apanel = pa.panel(p);
+                    let apanel = &adata[p * a_panel_len..(p + 1) * a_panel_len];
                     let rows = rule.mr.min(m - p * rule.mr);
                     for q in qb..(qb + q_per_block).min(q_panels) {
-                        let acc = micro_tile(apanel, pb.panel(q), k);
+                        let bpanel = &bdata[q * b_panel_len..(q + 1) * b_panel_len];
+                        let acc = micro_tile(apanel, bpanel, k);
                         let cols = rule.nr.min(n - q * rule.nr);
                         for r in 0..rows {
                             let orow = (dp * rule.mr + r) * n + q * rule.nr;
@@ -362,7 +417,6 @@ impl Gemm {
                 }
             }
         });
-        out
     }
 }
 

@@ -20,13 +20,18 @@ pub mod ref_conv;
 pub mod ref_cpu;
 pub mod refgen;
 pub mod step;
+pub mod workspace;
 
 pub use artifact::{ArtifactSpec, Init, Manifest, ModelManifest, OptimizerDef, ParamDef, Role, SlotInit, TensorSpec};
 pub use backend::{Backend, RuntimeStats};
 pub use client::Runtime;
 pub use kernel::{Gemm, KernelConfig};
-pub use params::{HostTensor, ParamStore};
+pub use params::{HostTensor, ParamStore, ParamView};
 pub use ref_conv::{Act, ConvNet, Layer, LayerOp};
 pub use ref_cpu::RefCpuBackend;
 pub use refgen::{write_ref_artifacts, write_ref_artifacts_for, RefBackbone, RefModelSpec};
-pub use step::{apply_step, run_inference, run_step, run_step_grads, StepOutputs};
+pub use step::{
+    apply_step, run_inference, run_inference_into, run_step, run_step_grads,
+    run_step_grads_into, run_step_into, StepOutputs,
+};
+pub use workspace::{arena_enabled, set_arena_mode, step_memory_plan, StepShape, Workspace, WsBuf};

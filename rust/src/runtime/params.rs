@@ -114,6 +114,49 @@ impl ParamStore {
             .ok_or_else(|| anyhow!("no tensor '{name}' in store"))
     }
 
+    /// Mutable access for the in-place (zero-copy) step paths.  The shape
+    /// is part of the store's contract — callers mutate `data` contents,
+    /// never its length.
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut HostTensor> {
+        let i = *self.index.get(name).ok_or_else(|| anyhow!("no tensor '{name}' in store"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    /// Positional index of `name` (stable across `set_data`/`get_mut`; only
+    /// `insert` of a new name appends).  The workspace step paths resolve
+    /// names once per call into a reusable index list and then read through
+    /// [`ParamView`] without further lookups.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no tensor '{name}' in store"))
+    }
+
+    pub fn by_index(&self, i: usize) -> &HostTensor {
+        &self.tensors[i]
+    }
+
+    /// Copy every tensor's values from `src` (same layout); inserts missing
+    /// tensors on first use so a reused destination store is allocation-free
+    /// afterwards.  The parameter-server `pull_into` snapshot path.
+    pub fn copy_values_from(&mut self, src: &ParamStore) -> Result<()> {
+        for t in src.iter() {
+            match self.index.get(&t.name) {
+                Some(&i) => {
+                    anyhow::ensure!(
+                        self.tensors[i].data.len() == t.data.len(),
+                        "size mismatch copying '{}'",
+                        t.name
+                    );
+                    self.tensors[i].data.copy_from_slice(&t.data);
+                }
+                None => self.insert(t.clone()),
+            }
+        }
+        Ok(())
+    }
+
     pub fn set_data(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
         let i = *self.index.get(name).ok_or_else(|| anyhow!("no tensor '{name}'"))?;
         anyhow::ensure!(
@@ -134,6 +177,11 @@ impl ParamStore {
     }
     pub fn iter(&self) -> impl Iterator<Item = &HostTensor> {
         self.tensors.iter()
+    }
+    /// Mutable iteration in insertion order — the dist reduce paths copy
+    /// exchanged values back through this without per-name lookups.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut HostTensor> {
+        self.tensors.iter_mut()
     }
     pub fn total_params(&self) -> usize {
         self.tensors.iter().map(|t| t.numel()).sum()
@@ -163,6 +211,31 @@ impl ParamStore {
             })
             .sum::<f64>()
             .sqrt()
+    }
+}
+
+/// A borrowed, allocation-free view of spec-ordered parameters: the store
+/// plus tensor indices in artifact param order (resolved once per call via
+/// [`ParamStore::index_of`] into a reusable buffer).  The workspace step
+/// paths read parameters through this instead of materializing
+/// `Vec<&HostTensor>` lists every step.
+pub struct ParamView<'a> {
+    pub store: &'a ParamStore,
+    pub order: &'a [usize],
+}
+
+impl<'a> ParamView<'a> {
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// The `pi`-th parameter in spec order.
+    pub fn get(&self, pi: usize) -> &'a HostTensor {
+        self.store.by_index(self.order[pi])
     }
 }
 

@@ -17,9 +17,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::kernel::{Gemm, KernelConfig, PackedA, PackedB};
-use super::params::HostTensor;
+use super::kernel::{
+    pack_a_into, pack_b_into, packed_a_len, packed_b_len, Gemm, KernelConfig, PackedA, PackedB,
+};
+use super::params::{HostTensor, ParamView};
 use super::ref_cpu::ops;
+use super::workspace::{Workspace, WsBuf};
 use crate::exec::parallel_chunks_mut;
 use crate::util::json::{arr, num, obj, s as js, Json};
 
@@ -60,11 +63,31 @@ impl Act {
     }
 
     pub fn apply(self, a: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; a.len()];
+        self.apply_into(a, &mut out);
+        out
+    }
+
+    /// [`Act::apply`] into a caller buffer — same elementwise math.
+    pub fn apply_into(self, a: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(a.len(), out.len());
         match self {
-            Act::None => a.to_vec(),
-            Act::Relu => a.iter().map(|&x| x.max(0.0)).collect(),
-            Act::LRelu => a.iter().map(|&x| if x >= 0.0 { x } else { LRELU_SLOPE * x }).collect(),
-            Act::Tanh => a.iter().map(|&x| x.tanh()).collect(),
+            Act::None => out.copy_from_slice(a),
+            Act::Relu => {
+                for (o, &x) in out.iter_mut().zip(a) {
+                    *o = x.max(0.0);
+                }
+            }
+            Act::LRelu => {
+                for (o, &x) in out.iter_mut().zip(a) {
+                    *o = if x >= 0.0 { x } else { LRELU_SLOPE * x };
+                }
+            }
+            Act::Tanh => {
+                for (o, &x) in out.iter_mut().zip(a) {
+                    *o = x.tanh();
+                }
+            }
         }
     }
 
@@ -138,26 +161,37 @@ impl Conv2dShape {
 /// slot.  Row panels are filled in parallel (they are disjoint slices of
 /// the packed buffer), reusing the same worker fan-out as the GEMM itself.
 pub fn im2col_packed(x: &[f32], s: &Conv2dShape, cfg: &KernelConfig) -> PackedA {
-    debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
     let (oh, ow) = s.out_hw();
     let kk = s.k();
     let m = s.batch * oh * ow;
     let mut pa = PackedA::zeroed(m, kk, crate::layout::plan::CPU_MR);
-    let mr = pa.mr;
+    im2col_packed_into(x, s, cfg, pa.data_mut());
+    pa
+}
+
+/// [`im2col_packed`] into a caller (workspace) buffer of length
+/// `packed_a_len(B*OH*OW, K, CPU_MR)`, pre-zeroed — identical fill order,
+/// identical parallel fan-out, no allocation.
+pub fn im2col_packed_into(x: &[f32], s: &Conv2dShape, cfg: &KernelConfig, dst: &mut [f32]) {
+    debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    let mr = crate::layout::plan::CPU_MR;
+    debug_assert_eq!(dst.len(), super::kernel::packed_a_len(m, kk, mr));
     let panel_len = kk * mr;
-    let n_panels = pa.n_panels();
+    let n_panels = m.div_ceil(mr).max(1);
     let threads = if m * kk >= 1 << 16 { cfg.threads } else { 1 };
     let panels_per_chunk = n_panels.div_ceil(threads.max(1) * 4).max(1);
     // Each panel is one "row" of the chunked buffer: chunks are whole
     // panels, so writers never share a slot.
-    parallel_chunks_mut(pa.data_mut(), panel_len, panels_per_chunk, threads, |p0, chunk| {
+    parallel_chunks_mut(dst, panel_len, panels_per_chunk, threads, |p0, chunk| {
         let rows = (chunk.len() / panel_len) * mr;
         let (r0, r1) = (p0 * mr, (p0 * mr + rows).min(m));
         im2col_rows(x, s, r0, r1, |row, ki, v| {
             chunk[(row / mr - p0) * panel_len + ki * mr + row % mr] = v;
         });
     });
-    pa
 }
 
 /// The canonical im2col gather over column rows `r0..r1` (row = one output
@@ -205,12 +239,21 @@ pub fn im2col_packed_b(x: &[f32], s: &Conv2dShape) -> PackedB {
     let kk = s.k();
     let m = s.batch * oh * ow;
     let mut pb = PackedB::zeroed(m, kk, crate::layout::plan::CPU_NR);
-    let nr = pb.nr;
-    let data = pb.data_mut();
-    im2col_rows(x, s, 0, m, |row, ki, v| {
-        data[(ki / nr) * (m * nr) + row * nr + ki % nr] = v;
-    });
+    im2col_packed_b_into(x, s, pb.data_mut());
     pb
+}
+
+/// [`im2col_packed_b`] into a caller buffer of length
+/// `packed_b_len(B*OH*OW, K, CPU_NR)`, pre-zeroed.
+pub fn im2col_packed_b_into(x: &[f32], s: &Conv2dShape, dst: &mut [f32]) {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    let nr = crate::layout::plan::CPU_NR;
+    debug_assert_eq!(dst.len(), super::kernel::packed_b_len(m, kk, nr));
+    im2col_rows(x, s, 0, m, |row, ki, v| {
+        dst[(ki / nr) * (m * nr) + row * nr + ki % nr] = v;
+    });
 }
 
 /// x:[B,Cin,IH,IW] -> columns [B*OH*OW, Cin*kh*kw] (zero-padded borders).
@@ -229,10 +272,18 @@ pub fn im2col(x: &[f32], s: &Conv2dShape) -> Vec<f32> {
 
 /// Scatter-add columns back to x-shape — the adjoint of `im2col`.
 pub fn col2im(cols: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    let mut x = vec![0f32; s.batch * s.cin * s.ih * s.iw];
+    col2im_into(cols, s, &mut x);
+    x
+}
+
+/// [`col2im`] into a caller buffer (zeroed here) — same scatter order.
+pub fn col2im_into(cols: &[f32], s: &Conv2dShape, x: &mut [f32]) {
     let (oh, ow) = s.out_hw();
     let kk = s.k();
     debug_assert_eq!(cols.len(), s.batch * oh * ow * kk);
-    let mut x = vec![0f32; s.batch * s.cin * s.ih * s.iw];
+    debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
+    x.fill(0.0);
     for n in 0..s.batch {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -258,7 +309,6 @@ pub fn col2im(cols: &[f32], s: &Conv2dShape) -> Vec<f32> {
             }
         }
     }
-    x
 }
 
 /// OIHW weights -> the row-major matmul operand [Cin*kh*kw, Cout] of the
@@ -425,12 +475,14 @@ impl ConvT2dShape {
         )
     }
 
-    fn dilated_hw(&self) -> (usize, usize) {
+    /// Spatial size of the zero-dilated input.
+    pub fn dilated_hw(&self) -> (usize, usize) {
         ((self.ih - 1) * self.stride + 1, (self.iw - 1) * self.stride + 1)
     }
 
-    /// The equivalent stride-1 conv over the zero-dilated input.
-    fn eq_conv(&self) -> Conv2dShape {
+    /// The equivalent stride-1 conv over the zero-dilated input (the memory
+    /// planner sizes the conv_t scratch from this).
+    pub fn eq_conv(&self) -> Conv2dShape {
         let (dh, dw) = self.dilated_hw();
         Conv2dShape {
             batch: self.batch,
@@ -451,6 +503,15 @@ impl ConvT2dShape {
 fn dilate(x: &[f32], s: &ConvT2dShape) -> Vec<f32> {
     let (dh, dw) = s.dilated_hw();
     let mut out = vec![0f32; s.batch * s.cin * dh * dw];
+    dilate_into(x, s, &mut out);
+    out
+}
+
+/// [`dilate`] into a caller buffer (zeroed here).
+fn dilate_into(x: &[f32], s: &ConvT2dShape, out: &mut [f32]) {
+    let (dh, dw) = s.dilated_hw();
+    debug_assert_eq!(out.len(), s.batch * s.cin * dh * dw);
+    out.fill(0.0);
     for n in 0..s.batch {
         for ci in 0..s.cin {
             let src = (n * s.cin + ci) * s.ih * s.iw;
@@ -462,13 +523,19 @@ fn dilate(x: &[f32], s: &ConvT2dShape) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// `[cin, cout, kh, kw]` -> spatially flipped, channel-swapped OIHW.
 fn flip_swap_w(w: &[f32], s: &ConvT2dShape) -> Vec<f32> {
+    let mut out = vec![0f32; s.cout * s.cin * s.kh * s.kw];
+    flip_swap_w_into(w, s, &mut out);
+    out
+}
+
+/// [`flip_swap_w`] into a caller buffer (every element written).
+fn flip_swap_w_into(w: &[f32], s: &ConvT2dShape, out: &mut [f32]) {
     let (kh, kw) = (s.kh, s.kw);
-    let mut out = vec![0f32; s.cout * s.cin * kh * kw];
+    debug_assert_eq!(out.len(), s.cout * s.cin * kh * kw);
     for ci in 0..s.cin {
         for co in 0..s.cout {
             for r in 0..kh {
@@ -479,7 +546,6 @@ fn flip_swap_w(w: &[f32], s: &ConvT2dShape) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Forward transposed conv: out [B,Cout,(IH-1)*s+kh-2p, ...].
@@ -550,10 +616,25 @@ pub fn conv_transpose2d_bwd(
 
 /// Batch statistics of x:[B,C,HW]: per-channel mean and biased variance.
 pub fn bn_stats(x: &[f32], batch: usize, c: usize, hw: usize) -> (Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(x.len(), batch * c * hw);
-    let n = (batch * hw) as f64;
     let mut mean = vec![0f32; c];
     let mut var = vec![0f32; c];
+    bn_stats_into(x, batch, c, hw, &mut mean, &mut var);
+    (mean, var)
+}
+
+/// [`bn_stats`] into caller buffers — identical f64 accumulation.
+pub fn bn_stats_into(
+    x: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    mean: &mut [f32],
+    var: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * c * hw);
+    debug_assert_eq!(mean.len(), c);
+    debug_assert_eq!(var.len(), c);
+    let n = (batch * hw) as f64;
     for ch in 0..c {
         let mut sum = 0f64;
         let mut sq = 0f64;
@@ -568,7 +649,6 @@ pub fn bn_stats(x: &[f32], batch: usize, c: usize, hw: usize) -> (Vec<f32>, Vec<
         mean[ch] = m as f32;
         var[ch] = ((sq / n) - m * m).max(0.0) as f32;
     }
-    (mean, var)
 }
 
 /// Normalize with the GIVEN statistics — train mode passes the batch stats,
@@ -585,8 +665,27 @@ pub fn bn_apply(
     hw: usize,
     eps: f32,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), batch * c * hw);
     let mut y = vec![0f32; x.len()];
+    bn_apply_into(x, gamma, beta, mean, var, batch, c, hw, eps, &mut y);
+    y
+}
+
+/// [`bn_apply`] into a caller buffer (every element written).
+#[allow(clippy::too_many_arguments)]
+pub fn bn_apply_into(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * c * hw);
+    debug_assert_eq!(y.len(), x.len());
     for ch in 0..c {
         let inv = 1.0 / (var[ch] + eps).sqrt();
         let (g, bt, m) = (gamma[ch], beta[ch], mean[ch]);
@@ -597,7 +696,6 @@ pub fn bn_apply(
             }
         }
     }
-    y
 }
 
 /// Train-mode BatchNorm backward (through the batch statistics).
@@ -613,11 +711,53 @@ pub fn bn_bwd(
     hw: usize,
     eps: f32,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(x.len(), dout.len());
-    let n = (batch * hw) as f32;
     let mut dx = vec![0f32; x.len()];
     let mut dgamma = vec![0f32; c];
     let mut dbeta = vec![0f32; c];
+    bn_bwd_ws(
+        x,
+        dout,
+        gamma,
+        mean,
+        var,
+        batch,
+        c,
+        hw,
+        eps,
+        Some(&mut dx),
+        Some((&mut dgamma, &mut dbeta, false)),
+    );
+    (dx, dgamma, dbeta)
+}
+
+/// BatchNorm backward into caller buffers — the workspace step path's form
+/// and the one implementation [`bn_bwd`] wraps.
+///
+/// * `dx`: input gradient destination (every element written when present);
+/// * `dgb`: `(dgamma, dbeta, accumulate)` — `None` SKIPS the parameter
+///   gradient entirely (the channel sums still feed `dx`, but nothing is
+///   allocated or written for gradients the caller would discard — the
+///   fixed-stats / frozen-parameter paths of g_step's D backward).
+#[allow(clippy::too_many_arguments)]
+pub fn bn_bwd_ws(
+    x: &[f32],
+    dout: &[f32],
+    gamma: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+    mut dx: Option<&mut [f32]>,
+    mut dgb: Option<(&mut [f32], &mut [f32], bool)>,
+) {
+    debug_assert_eq!(x.len(), dout.len());
+    debug_assert_eq!(x.len(), batch * c * hw);
+    if let Some(d) = dx.as_deref() {
+        debug_assert_eq!(d.len(), x.len());
+    }
+    let n = (batch * hw) as f32;
     for ch in 0..c {
         let inv = 1.0 / (var[ch] + eps).sqrt();
         let m = mean[ch];
@@ -632,20 +772,28 @@ pub fn bn_bwd(
                 sum_dx += (d * xh) as f64;
             }
         }
-        dbeta[ch] = sum_d as f32;
-        dgamma[ch] = sum_dx as f32;
-        let k = gamma[ch] * inv;
-        let mean_d = sum_d as f32 / n;
-        let mean_dxh = sum_dx as f32 / n;
-        for b in 0..batch {
-            let base = (b * c + ch) * hw;
-            for i in 0..hw {
-                let xh = (x[base + i] - m) * inv;
-                dx[base + i] = k * (dout[base + i] - mean_d - xh * mean_dxh);
+        if let Some((dgamma, dbeta, acc)) = dgb.as_mut() {
+            if *acc {
+                dbeta[ch] += sum_d as f32;
+                dgamma[ch] += sum_dx as f32;
+            } else {
+                dbeta[ch] = sum_d as f32;
+                dgamma[ch] = sum_dx as f32;
+            }
+        }
+        if let Some(dx) = dx.as_deref_mut() {
+            let k = gamma[ch] * inv;
+            let mean_d = sum_d as f32 / n;
+            let mean_dxh = sum_dx as f32 / n;
+            for b in 0..batch {
+                let base = (b * c + ch) * hw;
+                for i in 0..hw {
+                    let xh = (x[base + i] - m) * inv;
+                    dx[base + i] = k * (dout[base + i] - mean_d - xh * mean_dxh);
+                }
             }
         }
     }
-    (dx, dgamma, dbeta)
 }
 
 // ---------------------------------------------------------------------------
@@ -653,9 +801,24 @@ pub fn bn_bwd(
 // ---------------------------------------------------------------------------
 
 pub fn upsample_nearest(x: &[f32], batch: usize, c: usize, ih: usize, iw: usize, f: usize) -> Vec<f32> {
+    let mut y = vec![0f32; batch * c * ih * f * iw * f];
+    upsample_nearest_into(x, batch, c, ih, iw, f, &mut y);
+    y
+}
+
+/// [`upsample_nearest`] into a caller buffer (every element written).
+pub fn upsample_nearest_into(
+    x: &[f32],
+    batch: usize,
+    c: usize,
+    ih: usize,
+    iw: usize,
+    f: usize,
+    y: &mut [f32],
+) {
     debug_assert_eq!(x.len(), batch * c * ih * iw);
     let (oh, ow) = (ih * f, iw * f);
-    let mut y = vec![0f32; batch * c * oh * ow];
+    debug_assert_eq!(y.len(), batch * c * oh * ow);
     for bc in 0..batch * c {
         let src = bc * ih * iw;
         let dst = bc * oh * ow;
@@ -667,7 +830,6 @@ pub fn upsample_nearest(x: &[f32], batch: usize, c: usize, ih: usize, iw: usize,
             }
         }
     }
-    y
 }
 
 /// Adjoint of nearest upsampling: sum each f x f block of `dout`.
@@ -679,9 +841,25 @@ pub fn upsample_nearest_bwd(
     iw: usize,
     f: usize,
 ) -> Vec<f32> {
+    let mut dx = vec![0f32; batch * c * ih * iw];
+    upsample_nearest_bwd_into(dout, batch, c, ih, iw, f, &mut dx);
+    dx
+}
+
+/// [`upsample_nearest_bwd`] into a caller buffer (zeroed here).
+pub fn upsample_nearest_bwd_into(
+    dout: &[f32],
+    batch: usize,
+    c: usize,
+    ih: usize,
+    iw: usize,
+    f: usize,
+    dx: &mut [f32],
+) {
     let (oh, ow) = (ih * f, iw * f);
     debug_assert_eq!(dout.len(), batch * c * oh * ow);
-    let mut dx = vec![0f32; batch * c * ih * iw];
+    debug_assert_eq!(dx.len(), batch * c * ih * iw);
+    dx.fill(0.0);
     for bc in 0..batch * c {
         let src = bc * oh * ow;
         let dst = bc * ih * iw;
@@ -693,7 +871,6 @@ pub fn upsample_nearest_bwd(
             }
         }
     }
-    dx
 }
 
 // ---------------------------------------------------------------------------
@@ -1311,6 +1488,674 @@ impl ConvNet {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Workspace execution — the zero-allocation step path
+// ---------------------------------------------------------------------------
+//
+// Every function below is the arithmetic of its allocating counterpart with
+// the destinations and scratch carved from the step arena
+// (`runtime::workspace`): same ascending-K GEMM chains, same loop orders,
+// same fresh-compute-then-single-add gradient accumulation — so golden
+// parity and bitwise contracts hold unchanged while the steady state stops
+// touching the heap.  The allocating forms survive untouched as the parity
+// oracle (and the `PARAGAN_KERNEL=naive` / `PARAGAN_ARENA=off` baselines).
+
+/// GEMM into a caller buffer with the packed operands staged in the
+/// workspace.  In naive mode this falls back to the allocating oracle (the
+/// baseline path is not the zero-alloc path by design).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    ta: bool,
+    b: &[f32],
+    tb: bool,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    let g = Gemm::plan(m, k, n);
+    if g.cfg.naive {
+        let r = super::kernel::naive::gemm(m, k, n, a, ta, b, tb);
+        out.copy_from_slice(&r);
+        return;
+    }
+    let mut pa = ws.take_zeroed(packed_a_len(m, k, g.rule.mr));
+    pack_a_into(a, m, k, ta, g.rule.mr, pa.as_mut_slice());
+    let mut pb = ws.take_zeroed(packed_b_len(k, n, g.rule.nr));
+    pack_b_into(b, k, n, tb, g.rule.nr, pb.as_mut_slice());
+    g.run_panels_into(pa.as_slice(), pb.as_slice(), out);
+    ws.release(pb);
+    ws.release(pa);
+}
+
+/// Forward conv into a caller buffer — [`conv2d`]'s engine path over
+/// workspace scratch (bf16 copies, im2col A panels, packed weight B panels,
+/// matmul output), identical operation order.
+pub fn conv2d_ws(
+    s: &Conv2dShape,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    bf16: bool,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    debug_assert_eq!(w.len(), s.cout * kk);
+    debug_assert_eq!(out.len(), s.batch * s.cout * oh * ow);
+    let cfg = KernelConfig::current();
+    let g = Gemm::plan_with(cfg, m, kk, s.cout);
+
+    let mut qx = ws.take(if bf16 { x.len() } else { 0 });
+    let mut qw = ws.take(if bf16 { w.len() } else { 0 });
+    let mut pa = ws.take_zeroed(packed_a_len(m, kk, g.rule.mr));
+    let mut pb = ws.take_zeroed(packed_b_len(kk, s.cout, g.rule.nr));
+    if bf16 {
+        ops::quantize_bf16_into(x, qx.as_mut_slice());
+        ops::quantize_bf16_into(w, qw.as_mut_slice());
+        im2col_packed_into(qx.as_slice(), s, &cfg, pa.as_mut_slice());
+        pack_b_into(qw.as_slice(), kk, s.cout, true, g.rule.nr, pb.as_mut_slice());
+    } else {
+        im2col_packed_into(x, s, &cfg, pa.as_mut_slice());
+        pack_b_into(w, kk, s.cout, true, g.rule.nr, pb.as_mut_slice());
+    }
+    ws.release(qw);
+    ws.release(qx);
+    let mut out_mat = ws.take(m * s.cout);
+    g.run_panels_into(pa.as_slice(), pb.as_slice(), out_mat.as_mut_slice());
+    ws.release(pb);
+    ws.release(pa);
+
+    // [B*OH*OW, Cout] -> NCHW + bias (every element of `out` written).
+    let om = out_mat.as_slice();
+    for n in 0..s.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((n * oh + oy) * ow + ox) * s.cout;
+                for co in 0..s.cout {
+                    let b = bias.map(|b| b[co]).unwrap_or(0.0);
+                    out[((n * s.cout + co) * oh + oy) * ow + ox] = om[row + co] + b;
+                }
+            }
+        }
+    }
+    ws.release(out_mat);
+}
+
+/// Where a layer's parameter gradients land: destination slices plus the
+/// accumulate flag.  Accumulation is always fresh-compute-then-one-add —
+/// the exact summation order of the legacy `gr + gf` pass merge.
+pub struct GradDst<'a> {
+    pub dw: &'a mut [f32],
+    pub db: &'a mut [f32],
+    pub acc: bool,
+}
+
+/// Backward conv over workspace scratch — [`conv2d_bwd`]'s engine path.
+/// `pg = None` skips the dW GEMM and db reduction entirely (frozen-D
+/// backward); `dx = None` skips the input gradient (first layer).
+pub fn conv2d_bwd_ws(
+    s: &Conv2dShape,
+    x: &[f32],
+    w: &[f32],
+    dout: &[f32],
+    mut pg: Option<GradDst>,
+    dx: Option<&mut [f32]>,
+    ws: &mut Workspace,
+) {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    debug_assert_eq!(dout.len(), s.batch * s.cout * oh * ow);
+    let cfg = KernelConfig::current();
+
+    // NCHW -> [B*OH*OW, Cout], plus the fresh channel sums (db).
+    let mut dout_mat = ws.take(m * s.cout);
+    let mut db_fresh = ws.take(if pg.is_some() { s.cout } else { 0 });
+    {
+        let dm = dout_mat.as_mut_slice();
+        let dbs = db_fresh.as_mut_slice();
+        dbs.fill(0.0);
+        for n in 0..s.batch {
+            for co in 0..s.cout {
+                let dbase = ((n * s.cout + co) * oh) * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let d = dout[dbase + oy * ow + ox];
+                        dm[((n * oh + oy) * ow + ox) * s.cout + co] = d;
+                        if !dbs.is_empty() {
+                            dbs[co] += d;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    if let Some(g) = pg.as_mut() {
+        debug_assert_eq!(g.dw.len(), s.cout * kk);
+        debug_assert_eq!(g.db.len(), s.cout);
+        if g.acc {
+            for (d, &v) in g.db.iter_mut().zip(db_fresh.as_slice()) {
+                *d += v;
+            }
+        } else {
+            g.db.copy_from_slice(db_fresh.as_slice());
+        }
+        // dW[co, ki] = sum_m dout[m, co] * cols[m, ki] — one TN GEMM
+        // landing directly in OIHW order.
+        let gw = Gemm::plan_with(cfg, s.cout, m, kk);
+        let mut pa = ws.take_zeroed(packed_a_len(s.cout, m, gw.rule.mr));
+        pack_a_into(dout_mat.as_slice(), s.cout, m, true, gw.rule.mr, pa.as_mut_slice());
+        let mut pb = ws.take_zeroed(packed_b_len(m, kk, gw.rule.nr));
+        im2col_packed_b_into(x, s, pb.as_mut_slice());
+        if g.acc {
+            let mut fresh = ws.take(s.cout * kk);
+            gw.run_panels_into(pa.as_slice(), pb.as_slice(), fresh.as_mut_slice());
+            for (d, &v) in g.dw.iter_mut().zip(fresh.as_slice()) {
+                *d += v;
+            }
+            ws.release(fresh);
+        } else {
+            gw.run_panels_into(pa.as_slice(), pb.as_slice(), g.dw);
+        }
+        ws.release(pb);
+        ws.release(pa);
+    }
+
+    if let Some(dxo) = dx {
+        // dcols[m, ki] = sum_co dout[m, co] * w[co, ki] — plain NN GEMM,
+        // then the col2im scatter-add.
+        let mut dcols = ws.take(m * kk);
+        gemm_ws(m, s.cout, kk, dout_mat.as_slice(), false, w, false, dcols.as_mut_slice(), ws);
+        col2im_into(dcols.as_slice(), s, dxo);
+        ws.release(dcols);
+    }
+    ws.release(db_fresh);
+    ws.release(dout_mat);
+}
+
+/// Forward transposed conv over workspace scratch.
+pub fn conv_transpose2d_ws(
+    s: &ConvT2dShape,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    bf16: bool,
+    out: &mut [f32],
+    ws: &mut Workspace,
+) {
+    debug_assert!(s.pad < s.kh && s.pad < s.kw, "conv_t needs pad <= k-1");
+    let eq = s.eq_conv();
+    let mut xd = ws.take_zeroed(eq.batch * eq.cin * eq.ih * eq.iw);
+    dilate_into(x, s, xd.as_mut_slice());
+    let mut weq = ws.take(s.cout * s.cin * s.kh * s.kw);
+    flip_swap_w_into(w, s, weq.as_mut_slice());
+    conv2d_ws(&eq, xd.as_slice(), weq.as_slice(), bias, bf16, out, ws);
+    ws.release(weq);
+    ws.release(xd);
+}
+
+/// Backward transposed conv over workspace scratch — [`conv_transpose2d_bwd`]
+/// with the same dw-unflip and strided-conv dx.
+pub fn conv_transpose2d_bwd_ws(
+    s: &ConvT2dShape,
+    x: &[f32],
+    w: &[f32],
+    dout: &[f32],
+    pg: Option<GradDst>,
+    dx: Option<&mut [f32]>,
+    ws: &mut Workspace,
+) {
+    let (oh, ow) = s.out_hw();
+    if let Some(g) = pg {
+        let eq = s.eq_conv();
+        let mut xd = ws.take_zeroed(eq.batch * eq.cin * eq.ih * eq.iw);
+        dilate_into(x, s, xd.as_mut_slice());
+        let mut weq = ws.take(s.cout * s.cin * s.kh * s.kw);
+        flip_swap_w_into(w, s, weq.as_mut_slice());
+        // Fresh dw/db of the equivalent conv, then unflip into the caller's
+        // destination with its accumulate mode.
+        let mut dweq = ws.take(s.cout * eq.k());
+        let mut dbeq = ws.take(s.cout);
+        conv2d_bwd_ws(
+            &eq,
+            xd.as_slice(),
+            weq.as_slice(),
+            dout,
+            Some(GradDst { dw: dweq.as_mut_slice(), db: dbeq.as_mut_slice(), acc: false }),
+            None,
+            ws,
+        );
+        debug_assert_eq!(g.dw.len(), s.cin * s.cout * s.kh * s.kw);
+        let dweqs = dweq.as_slice();
+        for ci in 0..s.cin {
+            for co in 0..s.cout {
+                for r in 0..s.kh {
+                    for c in 0..s.kw {
+                        let v = dweqs
+                            [((co * s.cin + ci) * s.kh + (s.kh - 1 - r)) * s.kw + (s.kw - 1 - c)];
+                        let d = &mut g.dw[((ci * s.cout + co) * s.kh + r) * s.kw + c];
+                        if g.acc {
+                            *d += v;
+                        } else {
+                            *d = v;
+                        }
+                    }
+                }
+            }
+        }
+        if g.acc {
+            for (d, &v) in g.db.iter_mut().zip(dbeq.as_slice()) {
+                *d += v;
+            }
+        } else {
+            g.db.copy_from_slice(dbeq.as_slice());
+        }
+        ws.release(dbeq);
+        ws.release(dweq);
+        ws.release(weq);
+        ws.release(xd);
+    }
+    if let Some(dxo) = dx {
+        let dxs = Conv2dShape {
+            batch: s.batch,
+            cin: s.cout,
+            ih: oh,
+            iw: ow,
+            cout: s.cin,
+            kh: s.kh,
+            kw: s.kw,
+            stride: s.stride,
+            pad_h: s.pad,
+            pad_w: s.pad,
+        };
+        conv2d_ws(&dxs, dout, w, None, false, dxo, ws);
+    }
+}
+
+/// Forward cache of one workspace execution: arena-backed pre/post buffers
+/// and BatchNorm statistics.  The CONTAINER is caller-owned and reused
+/// across steps (its vectors keep their capacity); the bytes live in the
+/// workspace and are released (or reclaimed by the step reset) after
+/// backward.
+#[derive(Default)]
+pub struct ConvForwardWs {
+    pub x0: Option<WsBuf>,
+    pub pre: Vec<WsBuf>,
+    pub post: Vec<Option<WsBuf>>,
+    pub bn: Vec<Option<(WsBuf, WsBuf)>>,
+    pub batch: usize,
+}
+
+impl ConvForwardWs {
+    pub fn new() -> ConvForwardWs {
+        ConvForwardWs::default()
+    }
+
+    /// Forget all checkouts WITHOUT releasing (error paths / after a
+    /// workspace reset reclaimed the bytes wholesale).
+    pub fn clear(&mut self) {
+        self.x0 = None;
+        self.pre.clear();
+        self.post.clear();
+        self.bn.clear();
+    }
+
+    /// Hand every buffer back to the workspace.
+    pub fn release_into(&mut self, ws: &mut Workspace) {
+        if let Some(b) = self.x0.take() {
+            ws.release(b);
+        }
+        for b in self.pre.drain(..) {
+            ws.release(b);
+        }
+        for b in self.post.drain(..) {
+            if let Some(b) = b {
+                ws.release(b);
+            }
+        }
+        for b in self.bn.drain(..) {
+            if let Some((m, v)) = b {
+                ws.release(m);
+                ws.release(v);
+            }
+        }
+    }
+
+    /// Post-activation of layer `li` (the pre buffer for `Act::None`).
+    pub fn post_of(&self, li: usize) -> &[f32] {
+        match &self.post[li] {
+            Some(b) => b.as_slice(),
+            None => self.pre[li].as_slice(),
+        }
+    }
+
+    /// The network output (post-activation of the last layer).
+    pub fn output(&self) -> &[f32] {
+        self.post_of(self.pre.len() - 1)
+    }
+}
+
+/// Where backward's parameter gradients land: one persistent buffer per
+/// param tensor (spec order), overwrite or fresh-then-add accumulate.
+pub struct GradSink<'a> {
+    pub bufs: &'a mut [Vec<f32>],
+    pub acc: bool,
+}
+
+impl ConvNet {
+    /// Forward pass over the workspace — [`ConvNet::forward`]'s arithmetic
+    /// with every buffer carved from the arena.  Parameter shape validation
+    /// is the caller's prologue (`check_params` at spec-state build); this
+    /// path only asserts the cheap invariants.
+    pub fn forward_ws(
+        &self,
+        pv: &ParamView,
+        x0: &[f32],
+        batch: usize,
+        bf16: bool,
+        key: &str,
+        ws: &mut Workspace,
+        f: &mut ConvForwardWs,
+    ) -> Result<()> {
+        anyhow::ensure!(batch > 0, "artifact '{key}': zero batch");
+        anyhow::ensure!(
+            x0.len() == batch * self.in_numel(),
+            "artifact '{key}': input has {} values, net expects {}x{}",
+            x0.len(),
+            batch,
+            self.in_numel()
+        );
+        anyhow::ensure!(
+            pv.len() == self.n_param_tensors(),
+            "artifact '{key}': view has {} param tensors, net wants {}",
+            pv.len(),
+            self.n_param_tensors()
+        );
+        f.clear();
+        f.batch = batch;
+        f.x0 = Some(ws.take_copy(x0));
+        let mut pi = 0;
+        for (li, l) in self.layers.iter().enumerate() {
+            let (h, w) = l.in_hw;
+            let mut pre = ws.take(batch * l.out_numel());
+            let mut bn_stats_bufs: Option<(WsBuf, WsBuf)> = None;
+            {
+                let x: &[f32] = if li == 0 {
+                    f.x0.as_ref().expect("x0 staged").as_slice()
+                } else {
+                    f.post_of(li - 1)
+                };
+                match l.op {
+                    LayerOp::Dense { nin, nout } => {
+                        let (wt, bt) = (pv.get(pi), pv.get(pi + 1));
+                        pi += 2;
+                        if bf16 {
+                            let mut qx = ws.take(x.len());
+                            ops::quantize_bf16_into(x, qx.as_mut_slice());
+                            let mut qw = ws.take(wt.data.len());
+                            ops::quantize_bf16_into(&wt.data, qw.as_mut_slice());
+                            gemm_ws(
+                                batch,
+                                nin,
+                                nout,
+                                qx.as_slice(),
+                                false,
+                                qw.as_slice(),
+                                false,
+                                pre.as_mut_slice(),
+                                ws,
+                            );
+                            ws.release(qw);
+                            ws.release(qx);
+                        } else {
+                            gemm_ws(batch, nin, nout, x, false, &wt.data, false, pre.as_mut_slice(), ws);
+                        }
+                        ops::add_bias(pre.as_mut_slice(), batch, &bt.data);
+                    }
+                    LayerOp::Conv { .. } => {
+                        let (wt, bt) = (pv.get(pi), pv.get(pi + 1));
+                        pi += 2;
+                        conv2d_ws(
+                            &l.conv_shape(batch),
+                            x,
+                            &wt.data,
+                            Some(&bt.data),
+                            bf16,
+                            pre.as_mut_slice(),
+                            ws,
+                        );
+                    }
+                    LayerOp::ConvT { .. } => {
+                        let (wt, bt) = (pv.get(pi), pv.get(pi + 1));
+                        pi += 2;
+                        conv_transpose2d_ws(
+                            &l.convt_shape(batch),
+                            x,
+                            &wt.data,
+                            Some(&bt.data),
+                            bf16,
+                            pre.as_mut_slice(),
+                            ws,
+                        );
+                    }
+                    LayerOp::BatchNorm { c } => {
+                        let (g, b) = (pv.get(pi), pv.get(pi + 1));
+                        pi += 2;
+                        let mut mean = ws.take(c);
+                        let mut var = ws.take(c);
+                        bn_stats_into(x, batch, c, h * w, mean.as_mut_slice(), var.as_mut_slice());
+                        bn_apply_into(
+                            x,
+                            &g.data,
+                            &b.data,
+                            mean.as_slice(),
+                            var.as_slice(),
+                            batch,
+                            c,
+                            h * w,
+                            BN_EPS,
+                            pre.as_mut_slice(),
+                        );
+                        bn_stats_bufs = Some((mean, var));
+                    }
+                    LayerOp::Upsample { c, factor } => {
+                        upsample_nearest_into(x, batch, c, h, w, factor, pre.as_mut_slice());
+                    }
+                }
+            }
+            let post = match l.act {
+                Act::None => None,
+                act => {
+                    let mut p = ws.take(batch * l.out_numel());
+                    act.apply_into(pre.as_slice(), p.as_mut_slice());
+                    Some(p)
+                }
+            };
+            f.pre.push(pre);
+            f.post.push(post);
+            f.bn.push(bn_stats_bufs);
+        }
+        Ok(())
+    }
+
+    /// Backprop over the workspace — [`ConvNet::backward`]'s arithmetic.
+    /// `dout` is CONSUMED (its buffer feeds the gradient ping-pong).
+    /// `sink = None` skips every parameter gradient (the frozen-D pass);
+    /// the returned input gradient (when `want_dx`) is a workspace buffer
+    /// the caller releases.
+    pub fn backward_ws(
+        &self,
+        pv: &ParamView,
+        f: &ConvForwardWs,
+        dout: WsBuf,
+        want_dx: bool,
+        mut sink: Option<&mut GradSink<'_>>,
+        key: &str,
+        ws: &mut Workspace,
+    ) -> Result<Option<WsBuf>> {
+        anyhow::ensure!(
+            dout.len() == f.batch * self.out_numel(),
+            "artifact '{key}': output grad has {} values, net produces {}x{}",
+            dout.len(),
+            f.batch,
+            self.out_numel()
+        );
+        if let Some(sk) = sink.as_deref() {
+            anyhow::ensure!(
+                sk.bufs.len() == self.n_param_tensors(),
+                "artifact '{key}': grad sink has {} buffers, net wants {}",
+                sk.bufs.len(),
+                self.n_param_tensors()
+            );
+        }
+        let batch = f.batch;
+        let mut grad = dout;
+        let mut pstart = self.n_param_tensors();
+        for li in (0..self.layers.len()).rev() {
+            let l = &self.layers[li];
+            pstart -= l.n_params();
+            {
+                let post: &[f32] = match &f.post[li] {
+                    Some(b) => b.as_slice(),
+                    None => &[],
+                };
+                l.act.grad_mul(grad.as_mut_slice(), f.pre[li].as_slice(), post);
+            }
+            let need_dx = li > 0 || want_dx;
+            let mut dx = if need_dx { Some(ws.take(batch * l.in_numel())) } else { None };
+            {
+                let x: &[f32] = if li == 0 {
+                    f.x0.as_ref().expect("x0 staged").as_slice()
+                } else {
+                    f.post_of(li - 1)
+                };
+                let dxs: Option<&mut [f32]> = dx.as_mut().map(|b| b.as_mut_slice());
+                let (h, w) = l.in_hw;
+                match l.op {
+                    LayerOp::Dense { nin, nout } => {
+                        let wt = pv.get(pstart);
+                        if let Some(sk) = sink.as_deref_mut() {
+                            let (head, tail) = sk.bufs.split_at_mut(pstart + 1);
+                            let dw = head[pstart].as_mut_slice();
+                            let db = tail[0].as_mut_slice();
+                            if sk.acc {
+                                let mut fresh = ws.take(nin * nout);
+                                gemm_ws(
+                                    nin,
+                                    batch,
+                                    nout,
+                                    x,
+                                    true,
+                                    grad.as_slice(),
+                                    false,
+                                    fresh.as_mut_slice(),
+                                    ws,
+                                );
+                                for (d, &v) in dw.iter_mut().zip(fresh.as_slice()) {
+                                    *d += v;
+                                }
+                                ws.release(fresh);
+                                let mut dbf = ws.take(nout);
+                                ops::bias_grad_into(grad.as_slice(), batch, nout, dbf.as_mut_slice());
+                                for (d, &v) in db.iter_mut().zip(dbf.as_slice()) {
+                                    *d += v;
+                                }
+                                ws.release(dbf);
+                            } else {
+                                gemm_ws(nin, batch, nout, x, true, grad.as_slice(), false, dw, ws);
+                                ops::bias_grad_into(grad.as_slice(), batch, nout, db);
+                            }
+                        }
+                        if let Some(dxs) = dxs {
+                            gemm_ws(batch, nout, nin, grad.as_slice(), false, &wt.data, true, dxs, ws);
+                        }
+                    }
+                    LayerOp::Conv { .. } => {
+                        let wt = pv.get(pstart);
+                        let pg = sink.as_deref_mut().map(|sk| {
+                            let (head, tail) = sk.bufs.split_at_mut(pstart + 1);
+                            GradDst {
+                                dw: head[pstart].as_mut_slice(),
+                                db: tail[0].as_mut_slice(),
+                                acc: sk.acc,
+                            }
+                        });
+                        conv2d_bwd_ws(&l.conv_shape(batch), x, &wt.data, grad.as_slice(), pg, dxs, ws);
+                    }
+                    LayerOp::ConvT { .. } => {
+                        let wt = pv.get(pstart);
+                        let pg = sink.as_deref_mut().map(|sk| {
+                            let (head, tail) = sk.bufs.split_at_mut(pstart + 1);
+                            GradDst {
+                                dw: head[pstart].as_mut_slice(),
+                                db: tail[0].as_mut_slice(),
+                                acc: sk.acc,
+                            }
+                        });
+                        conv_transpose2d_bwd_ws(
+                            &l.convt_shape(batch),
+                            x,
+                            &wt.data,
+                            grad.as_slice(),
+                            pg,
+                            dxs,
+                            ws,
+                        );
+                    }
+                    LayerOp::BatchNorm { c } => {
+                        let g = pv.get(pstart);
+                        let (mean, var) = f.bn[li].as_ref().ok_or_else(|| {
+                            anyhow!("artifact '{key}': layer {li} (bn) has no cached statistics")
+                        })?;
+                        let dgb = sink.as_deref_mut().map(|sk| {
+                            let (head, tail) = sk.bufs.split_at_mut(pstart + 1);
+                            (head[pstart].as_mut_slice(), tail[0].as_mut_slice(), sk.acc)
+                        });
+                        bn_bwd_ws(
+                            x,
+                            grad.as_slice(),
+                            &g.data,
+                            mean.as_slice(),
+                            var.as_slice(),
+                            batch,
+                            c,
+                            h * w,
+                            BN_EPS,
+                            dxs,
+                            dgb,
+                        );
+                    }
+                    LayerOp::Upsample { c, factor } => {
+                        if let Some(dxs) = dxs {
+                            upsample_nearest_bwd_into(grad.as_slice(), batch, c, h, w, factor, dxs);
+                        }
+                    }
+                }
+            }
+            let next = match dx.take() {
+                Some(b) => b,
+                None => ws.take(0),
+            };
+            let consumed = std::mem::replace(&mut grad, next);
+            ws.release(consumed);
+        }
+        debug_assert_eq!(pstart, 0);
+        if want_dx {
+            Ok(Some(grad))
+        } else {
+            ws.release(grad);
+            Ok(None)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1788,6 +2633,217 @@ mod tests {
         let w = HostTensor::zeros("w", vec![4, 2]);
         let err = net.forward(&[&w], vec![0.0; 8], 2, false, "d_step_adam_fp32").unwrap_err();
         assert!(format!("{err}").contains("d_step_adam_fp32"), "{err}");
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// The workspace conv kernels are BIT-identical to the allocating forms
+    /// — the arena changes where bytes live, never the arithmetic.
+    #[test]
+    fn ws_conv_paths_match_allocating_paths_bit_exactly() {
+        let mut rng = Rng::new(0xA11C);
+        let mut ws = Workspace::new();
+        for bf16 in [false, true] {
+            let s = Conv2dShape { batch: 2, cin: 3, ih: 8, iw: 8, cout: 4, kh: 4, kw: 4, stride: 2, pad_h: 1, pad_w: 1 };
+            let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+            let w = randn(&mut rng, s.cout * s.k(), 0.5);
+            let b = randn(&mut rng, s.cout, 0.3);
+            let want = conv2d(&s, &x, &w, Some(&b), bf16);
+            let mut got = vec![0f32; want.len()];
+            conv2d_ws(&s, &x, &w, Some(&b), bf16, &mut got, &mut ws);
+            assert_bits(&got, &want, &format!("conv2d bf16={bf16}"));
+            ws.reset();
+
+            let t = ConvT2dShape { batch: 2, cin: 4, ih: 4, iw: 4, cout: 3, kh: 4, kw: 4, stride: 2, pad: 1 };
+            let xt = randn(&mut rng, t.batch * t.cin * t.ih * t.iw, 1.0);
+            let wt = randn(&mut rng, t.cin * t.cout * t.kh * t.kw, 0.5);
+            let want = conv_transpose2d(&t, &xt, &wt, None, bf16);
+            let mut got = vec![0f32; want.len()];
+            conv_transpose2d_ws(&t, &xt, &wt, None, bf16, &mut got, &mut ws);
+            assert_bits(&got, &want, &format!("conv_t bf16={bf16}"));
+            ws.reset();
+        }
+    }
+
+    #[test]
+    fn ws_conv_backward_matches_allocating_backward_bit_exactly() {
+        let mut rng = Rng::new(0xA11D);
+        let mut ws = Workspace::new();
+        let s = Conv2dShape { batch: 2, cin: 2, ih: 6, iw: 6, cout: 3, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1 };
+        let (oh, ow) = s.out_hw();
+        let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+        let w = randn(&mut rng, s.cout * s.k(), 0.5);
+        let dout = randn(&mut rng, s.batch * s.cout * oh * ow, 1.0);
+        let (dx_want, dw_want, db_want) = conv2d_bwd(&s, &x, &w, &dout, true);
+        let mut dw = vec![0f32; dw_want.len()];
+        let mut db = vec![0f32; db_want.len()];
+        let mut dx = vec![0f32; x.len()];
+        conv2d_bwd_ws(
+            &s,
+            &x,
+            &w,
+            &dout,
+            Some(GradDst { dw: &mut dw, db: &mut db, acc: false }),
+            Some(&mut dx),
+            &mut ws,
+        );
+        assert_bits(&dw, &dw_want, "conv dw");
+        assert_bits(&db, &db_want, "conv db");
+        assert_bits(&dx, dx_want.as_ref().unwrap(), "conv dx");
+
+        // Accumulate mode: fresh-then-single-add, the legacy merge order.
+        conv2d_bwd_ws(
+            &s,
+            &x,
+            &w,
+            &dout,
+            Some(GradDst { dw: &mut dw, db: &mut db, acc: true }),
+            None,
+            &mut ws,
+        );
+        let twice: Vec<f32> = dw_want.iter().map(|&v| v + v).collect();
+        assert_bits(&dw, &twice, "conv dw accumulated");
+        ws.reset();
+        assert_eq!(ws.outstanding(), 0);
+    }
+
+    /// Whole-net parity: forward_ws/backward_ws versus the allocating
+    /// executor, every cached activation, every gradient, bit-exact.
+    #[test]
+    fn ws_net_execution_matches_legacy_bit_exactly() {
+        let net = ConvNet::new(vec![
+            Layer {
+                op: LayerOp::ConvT { cin: 3, cout: 4, kh: 4, kw: 4, stride: 2, pad: 1 },
+                act: Act::Relu,
+                in_hw: (4, 4),
+            },
+            Layer { op: LayerOp::BatchNorm { c: 4 }, act: Act::None, in_hw: (8, 8) },
+            Layer { op: LayerOp::Upsample { c: 4, factor: 2 }, act: Act::LRelu, in_hw: (8, 8) },
+            Layer {
+                op: LayerOp::Conv { cin: 4, cout: 2, kh: 3, kw: 3, stride: 2, pad: 1 },
+                act: Act::None,
+                in_hw: (16, 16),
+            },
+            Layer { op: LayerOp::Dense { nin: 2 * 8 * 8, nout: 3 }, act: Act::Tanh, in_hw: (0, 0) },
+        ])
+        .unwrap();
+        let mut rng = Rng::new(0xA11E);
+        let batch = 2;
+        let tensors = net_param_tensors(&net, &mut rng);
+        let refs: Vec<&HostTensor> = tensors.iter().collect();
+        let x0 = randn(&mut rng, batch * net.in_numel(), 1.0);
+        let dvec = randn(&mut rng, batch * net.out_numel(), 1.0);
+
+        // Legacy executor.
+        let f = net.forward(&refs, x0.clone(), batch, false, "t").unwrap();
+        let (grads_want, dx_want) = net.backward(&refs, &f, dvec.clone(), true, "t").unwrap();
+
+        // Workspace executor over a ParamStore-backed view.
+        let mut store = crate::runtime::ParamStore::new();
+        for t in &tensors {
+            store.insert(t.clone());
+        }
+        let order: Vec<usize> = tensors.iter().map(|t| store.index_of(&t.name).unwrap()).collect();
+        let pv = crate::runtime::ParamView { store: &store, order: &order };
+        let mut ws = Workspace::new();
+        let mut fw = ConvForwardWs::new();
+        net.forward_ws(&pv, &x0, batch, false, "t", &mut ws, &mut fw).unwrap();
+        for li in 0..net.layers.len() {
+            assert_bits(fw.pre[li].as_slice(), &f.pre[li], &format!("pre[{li}]"));
+            assert_bits(fw.post_of(li), f.post_of(li), &format!("post[{li}]"));
+        }
+        let mut gbufs: Vec<Vec<f32>> = grads_want.iter().map(|g| vec![0f32; g.len()]).collect();
+        let dout = ws.take_copy(&dvec);
+        let mut sink = GradSink { bufs: &mut gbufs, acc: false };
+        let dx = net
+            .backward_ws(&pv, &fw, dout, true, Some(&mut sink), "t", &mut ws)
+            .unwrap()
+            .expect("dx requested");
+        for (pi, want) in grads_want.iter().enumerate() {
+            assert_bits(&gbufs[pi], want, &format!("grad[{pi}]"));
+        }
+        assert_bits(dx.as_slice(), dx_want.as_ref().unwrap(), "dx");
+        ws.release(dx);
+        fw.release_into(&mut ws);
+        assert_eq!(ws.outstanding(), 0, "all checkouts returned");
+        assert!(ws.overflow_takes() > 0, "unplanned workspace grew from empty");
+        ws.reset();
+        // One settle round over the FULL sequence: growth converges within
+        // the warmup (first-fit fragmentation may cost a second grow),
+        // mirroring the 2-step warmup of the step-alloc gates.
+        {
+            net.forward_ws(&pv, &x0, batch, false, "t", &mut ws, &mut fw).unwrap();
+            let dout = ws.take_copy(&dvec);
+            let mut sink = GradSink { bufs: &mut gbufs, acc: false };
+            let dx = net
+                .backward_ws(&pv, &fw, dout, true, Some(&mut sink), "t", &mut ws)
+                .unwrap()
+                .unwrap();
+            ws.release(dx);
+            fw.release_into(&mut ws);
+            ws.reset();
+        }
+
+        // Steady-state run after the warmup: same bits, no further overflow.
+        let before = ws.overflow_takes();
+        net.forward_ws(&pv, &x0, batch, false, "t", &mut ws, &mut fw).unwrap();
+        let dout = ws.take_copy(&dvec);
+        let mut sink = GradSink { bufs: &mut gbufs, acc: false };
+        let dx = net
+            .backward_ws(&pv, &fw, dout, true, Some(&mut sink), "t", &mut ws)
+            .unwrap()
+            .unwrap();
+        assert_bits(dx.as_slice(), dx_want.as_ref().unwrap(), "dx (steady)");
+        for (pi, want) in grads_want.iter().enumerate() {
+            assert_bits(&gbufs[pi], want, &format!("grad[{pi}] (steady)"));
+        }
+        ws.release(dx);
+        fw.release_into(&mut ws);
+        assert_eq!(ws.overflow_takes(), before, "steady state stays in the slab");
+    }
+
+    /// `sink = None` (the frozen-D backward) produces the same input
+    /// gradient while touching no parameter-gradient buffers.
+    #[test]
+    fn ws_backward_without_sink_matches_dx() {
+        let net = ConvNet::new(vec![
+            Layer {
+                op: LayerOp::Conv { cin: 2, cout: 3, kh: 3, kw: 3, stride: 2, pad: 1 },
+                act: Act::LRelu,
+                in_hw: (8, 8),
+            },
+            Layer { op: LayerOp::Dense { nin: 3 * 4 * 4, nout: 1 }, act: Act::None, in_hw: (0, 0) },
+        ])
+        .unwrap();
+        let mut rng = Rng::new(0xA11F);
+        let batch = 3;
+        let tensors = net_param_tensors(&net, &mut rng);
+        let refs: Vec<&HostTensor> = tensors.iter().collect();
+        let x0 = randn(&mut rng, batch * net.in_numel(), 1.0);
+        let dvec = randn(&mut rng, batch * net.out_numel(), 1.0);
+        let f = net.forward(&refs, x0.clone(), batch, false, "t").unwrap();
+        let (_, dx_want) = net.backward(&refs, &f, dvec.clone(), true, "t").unwrap();
+
+        let mut store = crate::runtime::ParamStore::new();
+        for t in &tensors {
+            store.insert(t.clone());
+        }
+        let order: Vec<usize> = tensors.iter().map(|t| store.index_of(&t.name).unwrap()).collect();
+        let pv = crate::runtime::ParamView { store: &store, order: &order };
+        let mut ws = Workspace::new();
+        let mut fw = ConvForwardWs::new();
+        net.forward_ws(&pv, &x0, batch, false, "t", &mut ws, &mut fw).unwrap();
+        let dout = ws.take_copy(&dvec);
+        let dx = net.backward_ws(&pv, &fw, dout, true, None, "t", &mut ws).unwrap().unwrap();
+        assert_bits(dx.as_slice(), dx_want.as_ref().unwrap(), "dx without sink");
+        ws.release(dx);
+        fw.release_into(&mut ws);
+        assert_eq!(ws.outstanding(), 0);
     }
 
     #[test]

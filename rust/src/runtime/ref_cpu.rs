@@ -29,8 +29,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::{ArtifactSpec, Role};
 use super::backend::{Backend, RuntimeStats};
-use super::params::HostTensor;
-use super::ref_conv::{Act, ConvNet, Layer, LayerOp};
+use super::kernel::KernelConfig;
+use super::params::{HostTensor, ParamStore, ParamView};
+use super::ref_conv::{Act, ConvForwardWs, ConvNet, GradSink, Layer, LayerOp};
+use super::step::StepOutputs;
+use super::workspace::{self, StepShape, Workspace};
 use crate::util::json;
 
 /// The reference op set, public so parity tests (vs. the Python oracles in
@@ -62,15 +65,23 @@ pub mod ops {
 
     /// Column sums of d:(rows, cols) — the bias gradient.
     pub fn bias_grad(d: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-        debug_assert_eq!(d.len(), rows * cols);
         let mut out = vec![0f32; cols];
+        bias_grad_into(d, rows, cols, &mut out);
+        out
+    }
+
+    /// [`bias_grad`] into a caller buffer (zeroed here) — the workspace
+    /// step path's allocation-free form, same accumulation order.
+    pub fn bias_grad_into(d: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+        debug_assert_eq!(d.len(), rows * cols);
+        debug_assert_eq!(out.len(), cols);
+        out.fill(0.0);
         for r in 0..rows {
             let row = &d[r * cols..(r + 1) * cols];
             for j in 0..cols {
                 out[j] += row[j];
             }
         }
-        out
     }
 
     pub fn tanh_vec(a: &[f32]) -> Vec<f32> {
@@ -98,6 +109,14 @@ pub mod ops {
 
     pub fn quantize_bf16(v: &[f32]) -> Vec<f32> {
         v.iter().map(|&x| bf16_round(x)).collect()
+    }
+
+    /// [`quantize_bf16`] into a caller buffer — the workspace path's form.
+    pub fn quantize_bf16_into(v: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(v.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o = bf16_round(x);
+        }
     }
 }
 
@@ -280,6 +299,58 @@ fn g_loss_and_grad(loss: Loss, fl: &[f32]) -> (f32, Vec<f32>) {
         Loss::Hinge => {
             let l = -fl.iter().sum::<f32>() / b;
             (l, vec![-1.0 / b; fl.len()])
+        }
+    }
+}
+
+/// [`d_loss_and_grads`] into caller buffers — the workspace path's form,
+/// identical math and reduction order.
+fn d_loss_grads_into(loss: Loss, rl: &[f32], fl: &[f32], drl: &mut [f32], dfl: &mut [f32]) -> f32 {
+    debug_assert_eq!(rl.len(), drl.len());
+    debug_assert_eq!(fl.len(), dfl.len());
+    let b = rl.len() as f32;
+    match loss {
+        Loss::Bce => {
+            let l = rl.iter().map(|&x| softplus(-x)).sum::<f32>() / b
+                + fl.iter().map(|&x| softplus(x)).sum::<f32>() / b;
+            for (d, &x) in drl.iter_mut().zip(rl) {
+                *d = -sigmoid(-x) / b;
+            }
+            for (d, &x) in dfl.iter_mut().zip(fl) {
+                *d = sigmoid(x) / b;
+            }
+            l
+        }
+        Loss::Hinge => {
+            let l = rl.iter().map(|&x| (1.0 - x).max(0.0)).sum::<f32>() / b
+                + fl.iter().map(|&x| (1.0 + x).max(0.0)).sum::<f32>() / b;
+            for (d, &x) in drl.iter_mut().zip(rl) {
+                *d = if x < 1.0 { -1.0 / b } else { 0.0 };
+            }
+            for (d, &x) in dfl.iter_mut().zip(fl) {
+                *d = if x > -1.0 { 1.0 / b } else { 0.0 };
+            }
+            l
+        }
+    }
+}
+
+/// [`g_loss_and_grad`] into a caller buffer.
+fn g_loss_grad_into(loss: Loss, fl: &[f32], dfl: &mut [f32]) -> f32 {
+    debug_assert_eq!(fl.len(), dfl.len());
+    let b = fl.len() as f32;
+    match loss {
+        Loss::Bce => {
+            let l = fl.iter().map(|&x| softplus(-x)).sum::<f32>() / b;
+            for (d, &x) in dfl.iter_mut().zip(fl) {
+                *d = -sigmoid(-x) / b;
+            }
+            l
+        }
+        Loss::Hinge => {
+            let l = -fl.iter().sum::<f32>() / b;
+            dfl.fill(-1.0 / b);
+            l
         }
     }
 }
@@ -541,6 +612,67 @@ impl FidConvNet {
     }
 }
 
+/// Per-program cached execution state of the workspace (in-place) step
+/// paths: resolved nets, spec-ordered names, reusable forward caches and
+/// persistent gradient accumulators.  Containers keep their capacity across
+/// steps, so the steady state allocates nothing.
+struct SpecState {
+    net: ConvNet,
+    /// Frozen-D topology of a g_step — resolved lazily on the first
+    /// gradient evaluation (the optimizer-only `apply` path has no
+    /// dparams to resolve against).
+    d_net: Option<ConvNet>,
+    param_names: Vec<String>,
+    dparam_names: Vec<String>,
+    /// `out:` role shapes from the spec, for emitted tensors.
+    out_shapes: Vec<(String, Vec<usize>)>,
+    /// Reusable spec-order -> store-index scratch (re-resolved per call:
+    /// lookups are allocation-free, and caching indices across different
+    /// caller stores would be wrong).
+    order: Vec<usize>,
+    d_order: Vec<usize>,
+    f_a: ConvForwardWs,
+    f_b: ConvForwardWs,
+    /// One gradient accumulator per param tensor, spec order.
+    grads: Vec<Vec<f32>>,
+}
+
+/// The backend's workspace arena plus per-spec states.  One per backend
+/// instance — and backends are per-replica-thread, so this is the "one
+/// pre-faulted slab per replica" of the memory plan.
+#[derive(Default)]
+struct ExecState {
+    ws: Workspace,
+    specs: HashMap<String, SpecState>,
+}
+
+/// Where the in-place optimizer reads gradients from: the spec-state's
+/// accumulator buffers (fused step) or a caller store (external reduce).
+enum GradSrc<'a> {
+    Bufs(&'a [Vec<f32>]),
+    Store(&'a ParamStore),
+}
+
+impl<'a> GradSrc<'a> {
+    fn get(&self, j: usize, name: &str) -> Result<&'a [f32]> {
+        match self {
+            GradSrc::Bufs(b) => Ok(b[j].as_slice()),
+            GradSrc::Store(s) => Ok(&s.get(name).context("gradient for param")?.data),
+        }
+    }
+}
+
+/// Resolve spec-ordered names into store indices (reusable buffer, no
+/// allocation once capacity is grown).
+fn resolve_order(store: &ParamStore, names: &[String], order: &mut Vec<usize>) -> Result<()> {
+    order.clear();
+    order.reserve(names.len());
+    for n in names {
+        order.push(store.index_of(n)?);
+    }
+    Ok(())
+}
+
 pub struct RefCpuBackend {
     dir: PathBuf,
     programs: RefCell<HashMap<String, Rc<RefProgram>>>,
@@ -549,6 +681,7 @@ pub struct RefCpuBackend {
     /// (cin, h, w, feat_dim) -> fixed random conv feature net.
     fid_conv_nets: RefCell<HashMap<(usize, usize, usize, usize), Rc<FidConvNet>>>,
     stats: RefCell<RuntimeStats>,
+    exec: RefCell<ExecState>,
 }
 
 impl RefCpuBackend {
@@ -559,7 +692,14 @@ impl RefCpuBackend {
             fid_weights: RefCell::new(HashMap::new()),
             fid_conv_nets: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
+            exec: RefCell::new(ExecState::default()),
         }
+    }
+
+    /// Peak workspace residency / slab size (perf accounting + tests).
+    pub fn workspace_stats(&self) -> (usize, usize, u64) {
+        let st = self.exec.borrow();
+        (st.ws.slab_len(), st.ws.high_water(), st.ws.overflow_takes())
     }
 
     pub fn artifact_dir(&self) -> &Path {
@@ -913,6 +1053,371 @@ impl RefCpuBackend {
         self.fid_conv_nets.borrow_mut().insert((c, h, w, feat), net.clone());
         Ok(net)
     }
+
+    // -----------------------------------------------------------------
+    // Workspace (in-place) execution — the zero-allocation step path.
+    //
+    // Same arithmetic as the allocating runners above (the `_ws` kernels
+    // in `ref_conv` are bit-exact with their allocating forms, and the
+    // optimizer is literally the same `apply_opt`), with every
+    // intermediate carved from the per-backend `Workspace` and params /
+    // slots / gradient stores mutated in place instead of cloned.
+    // -----------------------------------------------------------------
+
+    /// Build the cached per-spec execution state (first call only).
+    fn build_spec_state(
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+    ) -> Result<SpecState> {
+        let mut param_names = Vec::new();
+        let mut dparam_names = Vec::new();
+        for tin in &spec.inputs {
+            match &tin.role {
+                Role::Param(n) => param_names.push(n.clone()),
+                Role::DParam(n) => dparam_names.push(n.clone()),
+                _ => {}
+            }
+        }
+        let prefs: Vec<&HostTensor> =
+            param_names.iter().map(|n| params.get(n)).collect::<Result<_>>()?;
+        let (hidden, last) = match prog.kind {
+            Kind::DStep => (Act::LRelu, Act::None),
+            _ => (Act::Relu, Act::Tanh),
+        };
+        let net = Self::resolve_net(&prog.net, &prefs, hidden, last, &spec.key)?;
+        net.check_params(&prefs, &spec.key)?;
+        let d_net = match (prog.kind, dparams) {
+            (Kind::GStep, Some(ds)) => {
+                let drefs: Vec<&HostTensor> =
+                    dparam_names.iter().map(|n| ds.get(n)).collect::<Result<_>>()?;
+                let dn = Self::resolve_net(&prog.d_net, &drefs, Act::LRelu, Act::None, &spec.key)
+                    .with_context(|| format!("artifact '{}': g_step dparams", spec.key))?;
+                dn.check_params(&drefs, &spec.key)?;
+                Some(dn)
+            }
+            _ => None,
+        };
+        let grads = if matches!(prog.kind, Kind::DStep | Kind::GStep) {
+            prefs.iter().map(|t| vec![0f32; t.numel()]).collect()
+        } else {
+            Vec::new()
+        };
+        let out_shapes = spec
+            .outputs
+            .iter()
+            .filter_map(|t| match &t.role {
+                Role::Out(n) => Some((n.clone(), t.shape.clone())),
+                _ => None,
+            })
+            .collect();
+        Ok(SpecState {
+            net,
+            d_net,
+            param_names,
+            dparam_names,
+            out_shapes,
+            order: Vec::new(),
+            d_order: Vec::new(),
+            f_a: ConvForwardWs::new(),
+            f_b: ConvForwardWs::new(),
+            grads,
+        })
+    }
+
+    /// Ensure the spec's execution state exists; on first build, size the
+    /// workspace slab from the `layout::plan` memory plan (`batch` known).
+    /// A missing plan (e.g. the apply-only path saw the spec first) only
+    /// costs warmup overflow — the slab self-corrects at the next reset.
+    fn ensure_spec(
+        state: &mut ExecState,
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+        batch: Option<usize>,
+        cfg: &KernelConfig,
+    ) -> Result<()> {
+        if state.specs.contains_key(&spec.key) {
+            return Ok(());
+        }
+        let st = Self::build_spec_state(prog, spec, params, dparams)?;
+        if let Some(batch) = batch {
+            let shape = match prog.kind {
+                Kind::DStep => Some(StepShape::DStep),
+                Kind::GStep => st.d_net.as_ref().map(|_| StepShape::GStep),
+                Kind::Generate => Some(StepShape::Generate),
+                Kind::FidFeatures => None,
+            };
+            if let Some(shape) = shape {
+                let plan = workspace::step_memory_plan(
+                    shape,
+                    &st.net,
+                    st.d_net.as_ref(),
+                    batch,
+                    cfg.threads,
+                    prog.bf16,
+                );
+                let need = plan.total.max(state.ws.slab_len());
+                state.ws.ensure_capacity(need);
+            }
+        }
+        state.specs.insert(spec.key.clone(), st);
+        Ok(())
+    }
+
+    /// The spec's shape for an `out:` tensor (element-count checked; a
+    /// mismatching spec shape falls back to a flat shape so the tensor's
+    /// shape/data invariant always holds).
+    fn out_shape(st: &SpecState, name: &str, len: usize) -> Vec<usize> {
+        st.out_shapes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.clone())
+            .filter(|s| s.iter().product::<usize>().max(1) == len.max(1))
+            .unwrap_or_else(|| vec![len])
+    }
+
+    /// Upsert an `out:` tensor into the caller's reusable map — copy into
+    /// the existing buffer in steady state, insert (allocating) only once.
+    fn set_out(st: &SpecState, outs: &mut StepOutputs, name: &str, data: &[f32]) -> Result<()> {
+        if let Some(t) = outs.get_mut(name) {
+            // Steady state is a same-size copy; a caller that moved the
+            // buffer out (shipping `fake` downstream) or changed batch
+            // size pays the refill AND gets a consistent shape back.
+            let refresh_shape = t.data.len() != data.len();
+            t.data.clear();
+            t.data.extend_from_slice(data);
+            if refresh_shape {
+                t.shape = Self::out_shape(st, name, data.len());
+            }
+            return Ok(());
+        }
+        let shape = Self::out_shape(st, name, data.len());
+        outs.insert(name.to_string(), HostTensor::new(name, shape, data.to_vec()));
+        Ok(())
+    }
+
+    /// d_step forward+backward over the workspace: gradients land in
+    /// `st.grads` (real pass overwrites, fake pass accumulates — the
+    /// legacy `gr + gf` merge order), extras land in `outs`.
+    fn d_step_eval_ws(
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        st: &mut SpecState,
+        ws: &mut Workspace,
+        params: &ParamStore,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<()> {
+        let key = &spec.key;
+        let real = data
+            .get("real")
+            .ok_or_else(|| anyhow!("artifact '{key}': d_step needs in:real"))?;
+        let fake = data
+            .get("fake")
+            .ok_or_else(|| anyhow!("artifact '{key}': d_step needs in:fake"))?;
+        let batch = *real
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:real has no batch dim"))?;
+        anyhow::ensure!(
+            real.numel() == batch * st.net.in_numel() && fake.numel() == real.numel(),
+            "artifact '{key}': image batch {}x{:?} does not flatten to D input {}",
+            batch,
+            &real.shape[1..],
+            st.net.in_numel()
+        );
+        anyhow::ensure!(
+            st.net.out_numel() == 1,
+            "artifact '{key}': D must end in 1 logit/sample, got {}",
+            st.net.out_numel()
+        );
+        resolve_order(params, &st.param_names, &mut st.order)?;
+        st.f_a.clear();
+        st.f_b.clear();
+        {
+            let pv = ParamView { store: params, order: &st.order };
+            st.net.forward_ws(&pv, &real.data, batch, prog.bf16, key, ws, &mut st.f_a)?;
+            st.net.forward_ws(&pv, &fake.data, batch, prog.bf16, key, ws, &mut st.f_b)?;
+        }
+        let mut drl = ws.take(st.f_a.output().len());
+        let mut dfl = ws.take(st.f_b.output().len());
+        let loss = d_loss_grads_into(
+            prog.loss,
+            st.f_a.output(),
+            st.f_b.output(),
+            drl.as_mut_slice(),
+            dfl.as_mut_slice(),
+        );
+        Self::set_out(st, outs, "loss", &[loss])?;
+        Self::set_out(st, outs, "real_logits", st.f_a.output())?;
+        Self::set_out(st, outs, "fake_logits", st.f_b.output())?;
+        {
+            let pv = ParamView { store: params, order: &st.order };
+            let mut sink = GradSink { bufs: &mut st.grads, acc: false };
+            st.net.backward_ws(&pv, &st.f_a, drl, false, Some(&mut sink), key, ws)?;
+        }
+        {
+            let pv = ParamView { store: params, order: &st.order };
+            let mut sink = GradSink { bufs: &mut st.grads, acc: true };
+            st.net.backward_ws(&pv, &st.f_b, dfl, false, Some(&mut sink), key, ws)?;
+        }
+        st.f_a.release_into(ws);
+        st.f_b.release_into(ws);
+        Ok(())
+    }
+
+    /// g_step forward+backward over the workspace.  The frozen-D backward
+    /// runs with NO gradient sink, skipping its dW/db/dgamma/dbeta work
+    /// entirely (the allocating path computed and discarded them).
+    #[allow(clippy::too_many_arguments)]
+    fn g_step_eval_ws(
+        prog: &RefProgram,
+        spec: &ArtifactSpec,
+        st: &mut SpecState,
+        ws: &mut Workspace,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<()> {
+        let key = &spec.key;
+        let z = data
+            .get("z")
+            .ok_or_else(|| anyhow!("artifact '{key}': g_step needs in:z"))?;
+        let batch = *z
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:z has no batch dim"))?;
+        let dstore =
+            dparams.ok_or_else(|| anyhow!("artifact '{key}': g_step needs dparams"))?;
+        if st.d_net.is_none() {
+            let drefs: Vec<&HostTensor> =
+                st.dparam_names.iter().map(|n| dstore.get(n)).collect::<Result<_>>()?;
+            let dn = Self::resolve_net(&prog.d_net, &drefs, Act::LRelu, Act::None, key)
+                .with_context(|| format!("artifact '{key}': g_step dparams"))?;
+            dn.check_params(&drefs, key)?;
+            st.d_net = Some(dn);
+        }
+        resolve_order(params, &st.param_names, &mut st.order)?;
+        resolve_order(dstore, &st.dparam_names, &mut st.d_order)?;
+        st.f_a.clear();
+        st.f_b.clear();
+        {
+            let pv = ParamView { store: params, order: &st.order };
+            st.net.forward_ws(&pv, &z.data, batch, prog.bf16, key, ws, &mut st.f_a)?;
+        }
+        {
+            let dv = ParamView { store: dstore, order: &st.d_order };
+            let d_net = st.d_net.as_ref().expect("resolved above");
+            d_net.forward_ws(&dv, st.f_a.output(), batch, prog.bf16, key, ws, &mut st.f_b)?;
+        }
+        let mut dfl = ws.take(st.f_b.output().len());
+        let loss = g_loss_grad_into(prog.loss, st.f_b.output(), dfl.as_mut_slice());
+        Self::set_out(st, outs, "loss", &[loss])?;
+        Self::set_out(st, outs, "fake", st.f_a.output())?;
+        let dimg = {
+            let dv = ParamView { store: dstore, order: &st.d_order };
+            let d_net = st.d_net.as_ref().expect("resolved above");
+            d_net
+                .backward_ws(&dv, &st.f_b, dfl, true, None, key, ws)?
+                .ok_or_else(|| {
+                    anyhow!("artifact '{key}': D backward produced no image gradient")
+                })?
+        };
+        st.f_b.release_into(ws);
+        {
+            let pv = ParamView { store: params, order: &st.order };
+            let mut sink = GradSink { bufs: &mut st.grads, acc: false };
+            st.net.backward_ws(&pv, &st.f_a, dimg, false, Some(&mut sink), key, ws)?;
+        }
+        st.f_a.release_into(ws);
+        Ok(())
+    }
+
+    /// Forward-only generate over the workspace.
+    fn generate_ws(
+        spec: &ArtifactSpec,
+        st: &mut SpecState,
+        ws: &mut Workspace,
+        params: &ParamStore,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<()> {
+        let key = &spec.key;
+        let z = data
+            .get("z")
+            .ok_or_else(|| anyhow!("artifact '{key}': generate needs in:z"))?;
+        let batch = *z
+            .shape
+            .first()
+            .with_context(|| format!("artifact '{key}': in:z has no batch dim"))?;
+        resolve_order(params, &st.param_names, &mut st.order)?;
+        st.f_a.clear();
+        {
+            let pv = ParamView { store: params, order: &st.order };
+            st.net.forward_ws(&pv, &z.data, batch, false, key, ws, &mut st.f_a)?;
+        }
+        Self::set_out(st, outs, "images", st.f_a.output())?;
+        st.f_a.release_into(ws);
+        Ok(())
+    }
+
+    /// Apply the program's optimizer in place — the exact [`apply_opt`]
+    /// math of `optimize_core`, minus the param/slot clones (params and
+    /// slot banks are mutated directly).
+    fn optimize_in_place(
+        prog: &RefProgram,
+        names: &[String],
+        grads: GradSrc<'_>,
+        step: f32,
+        lr: f32,
+        params: &mut ParamStore,
+        slots: &mut [ParamStore],
+    ) -> Result<()> {
+        let opt = prog.opt.context("step artifact descriptor lacks an optimizer")?;
+        anyhow::ensure!(
+            slots.len() == opt.n_slots(),
+            "optimizer {opt:?} wants {} slots, caller supplied {}",
+            opt.n_slots(),
+            slots.len()
+        );
+        for (j, name) in names.iter().enumerate() {
+            let g = grads.get(j, name)?;
+            let p = params.get_mut(name)?;
+            anyhow::ensure!(
+                g.len() == p.data.len(),
+                "grad size mismatch for '{name}'"
+            );
+            match opt.n_slots() {
+                1 => {
+                    let s0 = &mut slots[0].get_mut(name)?.data;
+                    let mut banks = [s0];
+                    apply_opt(opt, &prog.hp, step, lr, &mut p.data, g, &mut banks);
+                }
+                2 => {
+                    let (a, b) = slots.split_at_mut(1);
+                    let mut banks =
+                        [&mut a[0].get_mut(name)?.data, &mut b[0].get_mut(name)?.data];
+                    apply_opt(opt, &prog.hp, step, lr, &mut p.data, g, &mut banks);
+                }
+                3 => {
+                    let (a, rest) = slots.split_at_mut(1);
+                    let (b, c) = rest.split_at_mut(1);
+                    let mut banks = [
+                        &mut a[0].get_mut(name)?.data,
+                        &mut b[0].get_mut(name)?.data,
+                        &mut c[0].get_mut(name)?.data,
+                    ];
+                    apply_opt(opt, &prog.hp, step, lr, &mut p.data, g, &mut banks);
+                }
+                n => bail!("unsupported optimizer slot count {n}"),
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Backend for RefCpuBackend {
@@ -1047,6 +1552,214 @@ impl Backend for RefCpuBackend {
             st.executions += 1;
         }
         Ok((out_params, out_slots))
+    }
+
+    fn step_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        step: f32,
+        lr: f32,
+        params: &mut ParamStore,
+        slots: &mut [ParamStore],
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        if !workspace::arena_enabled() {
+            return Ok(false);
+        }
+        let cfg = KernelConfig::current();
+        if cfg.naive {
+            return Ok(false); // the PARAGAN_KERNEL=naive baseline stays intact
+        }
+        let prog = self.program(spec)?;
+        if matches!(prog.kind, Kind::FidFeatures) {
+            return Ok(false);
+        }
+        let t0 = Instant::now();
+        let mut exec_guard = self.exec.borrow_mut();
+        let state = &mut *exec_guard;
+        state.ws.reset();
+        match prog.kind {
+            Kind::Generate => {
+                let batch = data.get("z").and_then(|z| z.shape.first().copied());
+                Self::ensure_spec(state, &prog, spec, params, None, batch, &cfg)?;
+                let ExecState { ws, specs } = state;
+                let st = specs.get_mut(&spec.key).expect("just ensured");
+                Self::generate_ws(spec, st, ws, params, data, outs)?;
+            }
+            Kind::DStep => {
+                let batch = data.get("real").and_then(|r| r.shape.first().copied());
+                Self::ensure_spec(state, &prog, spec, params, None, batch, &cfg)?;
+                let ExecState { ws, specs } = state;
+                let st = specs.get_mut(&spec.key).expect("just ensured");
+                Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs)?;
+                Self::optimize_in_place(
+                    &prog,
+                    &st.param_names,
+                    GradSrc::Bufs(&st.grads),
+                    step,
+                    lr,
+                    params,
+                    slots,
+                )?;
+            }
+            Kind::GStep => {
+                let batch = data.get("z").and_then(|z| z.shape.first().copied());
+                Self::ensure_spec(state, &prog, spec, params, dparams, batch, &cfg)?;
+                let ExecState { ws, specs } = state;
+                let st = specs.get_mut(&spec.key).expect("just ensured");
+                Self::g_step_eval_ws(&prog, spec, st, ws, params, dparams, data, outs)?;
+                Self::optimize_in_place(
+                    &prog,
+                    &st.param_names,
+                    GradSrc::Bufs(&st.grads),
+                    step,
+                    lr,
+                    params,
+                    slots,
+                )?;
+            }
+            Kind::FidFeatures => unreachable!("returned false above"),
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(true)
+    }
+
+    fn grads_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        grads: &mut ParamStore,
+        outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        if !workspace::arena_enabled() {
+            return Ok(false);
+        }
+        let cfg = KernelConfig::current();
+        if cfg.naive {
+            return Ok(false);
+        }
+        let prog = self.program(spec)?;
+        if !matches!(prog.kind, Kind::DStep | Kind::GStep) {
+            return Ok(false); // the generic path raises the structured error
+        }
+        let t0 = Instant::now();
+        let mut exec_guard = self.exec.borrow_mut();
+        let state = &mut *exec_guard;
+        state.ws.reset();
+        let batch = match prog.kind {
+            Kind::DStep => data.get("real").and_then(|r| r.shape.first().copied()),
+            _ => data.get("z").and_then(|z| z.shape.first().copied()),
+        };
+        Self::ensure_spec(state, &prog, spec, params, dparams, batch, &cfg)?;
+        let ExecState { ws, specs } = state;
+        let st = specs.get_mut(&spec.key).expect("just ensured");
+        match prog.kind {
+            Kind::DStep => Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs)?,
+            Kind::GStep => {
+                Self::g_step_eval_ws(&prog, spec, st, ws, params, dparams, data, outs)?
+            }
+            _ => unreachable!(),
+        }
+        for (j, name) in st.param_names.iter().enumerate() {
+            match grads.get_mut(name) {
+                Ok(t) => {
+                    anyhow::ensure!(
+                        t.data.len() == st.grads[j].len(),
+                        "reused grad store tensor '{name}' has the wrong size"
+                    );
+                    t.data.copy_from_slice(&st.grads[j]);
+                }
+                Err(_) => {
+                    let p = params.get(name)?;
+                    grads.insert(HostTensor::new(name, p.shape.clone(), st.grads[j].clone()));
+                }
+            }
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(true)
+    }
+
+    fn apply_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        step: f32,
+        lr: f32,
+        params: &mut ParamStore,
+        slots: &mut [ParamStore],
+        grads: &ParamStore,
+    ) -> Result<bool> {
+        if !workspace::arena_enabled() {
+            return Ok(false);
+        }
+        let prog = self.program(spec)?;
+        if !matches!(prog.kind, Kind::DStep | Kind::GStep) {
+            return Ok(false); // generic path raises the structured error
+        }
+        let mut exec_guard = self.exec.borrow_mut();
+        let state = &mut *exec_guard;
+        Self::ensure_spec(state, &prog, spec, params, None, None, &KernelConfig::current())?;
+        let st = state.specs.get(&spec.key).expect("just ensured");
+        Self::optimize_in_place(
+            &prog,
+            &st.param_names,
+            GradSrc::Store(grads),
+            step,
+            lr,
+            params,
+            slots,
+        )?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+        }
+        Ok(true)
+    }
+
+    fn infer_in_place(
+        &self,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        data: &BTreeMap<String, HostTensor>,
+        outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        if !workspace::arena_enabled() {
+            return Ok(false);
+        }
+        let cfg = KernelConfig::current();
+        if cfg.naive {
+            return Ok(false);
+        }
+        let prog = self.program(spec)?;
+        if !matches!(prog.kind, Kind::Generate) {
+            return Ok(false); // fid_features keeps the allocating eval path
+        }
+        let t0 = Instant::now();
+        let mut exec_guard = self.exec.borrow_mut();
+        let state = &mut *exec_guard;
+        state.ws.reset();
+        let batch = data.get("z").and_then(|z| z.shape.first().copied());
+        Self::ensure_spec(state, &prog, spec, params, None, batch, &cfg)?;
+        let ExecState { ws, specs } = state;
+        let st = specs.get_mut(&spec.key).expect("just ensured");
+        Self::generate_ws(spec, st, ws, params, data, outs)?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(true)
     }
 }
 

@@ -32,24 +32,48 @@ pub fn run_step(
     dparams: Option<&ParamStore>,
     data: &BTreeMap<String, HostTensor>,
 ) -> Result<StepOutputs> {
-    // Inputs are staged by reference — no tensor copies on the step hot
-    // path; only the two scalars are materialized here.
+    let mut outs = StepOutputs::new();
+    run_step_into(rt, spec, step, lr, params, slots, dparams, data, &mut outs)?;
+    Ok(outs)
+}
+
+/// [`run_step`] with a caller-owned, reusable output map: the backend's
+/// in-place lane (ref backend: the workspace arena) mutates params/slots
+/// directly and upserts `out:` tensors into `outs`, so a trainer that holds
+/// `outs` across steps runs the whole step with ZERO heap allocations.
+/// Backends without the lane fall back to the HostTensor-list protocol.
+#[allow(clippy::too_many_arguments)]
+pub fn run_step_into(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    step: f32,
+    lr: f32,
+    params: &mut ParamStore,
+    slots: &mut [ParamStore],
+    dparams: Option<&ParamStore>,
+    data: &BTreeMap<String, HostTensor>,
+    outs: &mut StepOutputs,
+) -> Result<()> {
+    if rt.step_in_place(spec, step, lr, params, slots, dparams, data, outs)? {
+        return Ok(());
+    }
+    // Generic path: inputs staged by reference — no tensor copies on the
+    // step hot path; only the two scalars are materialized here.
     let step_t = HostTensor::new("step", vec![], vec![step]);
     let lr_t = HostTensor::new("lr", vec![], vec![lr]);
     let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
 
-    let outs = rt.execute_artifact(spec, &inputs)?;
+    let ret = rt.execute_artifact(spec, &inputs)?;
     drop(inputs);
     anyhow::ensure!(
-        outs.len() == spec.outputs.len(),
+        ret.len() == spec.outputs.len(),
         "artifact '{}' returned {} outputs, manifest says {}",
         spec.key,
-        outs.len(),
+        ret.len(),
         spec.outputs.len()
     );
 
-    let mut extra = StepOutputs::new();
-    for (tout, t) in spec.outputs.iter().zip(outs.into_iter()) {
+    for (tout, t) in spec.outputs.iter().zip(ret.into_iter()) {
         match &tout.role {
             Role::Param(name) => {
                 params.set_data(name, t.data).context("write back param")?
@@ -59,7 +83,7 @@ pub fn run_step(
                 .ok_or_else(|| anyhow!("output slot {k} out of range"))?
                 .set_data(name, t.data)?,
             Role::Out(name) => {
-                extra.insert(
+                outs.insert(
                     name.clone(),
                     HostTensor::new(name, tout.shape.clone(), t.data),
                 );
@@ -67,7 +91,7 @@ pub fn run_step(
             other => anyhow::bail!("unexpected output role {other:?}"),
         }
     }
-    Ok(extra)
+    Ok(())
 }
 
 /// Assemble the spec-aligned input list shared by the gradient-only paths.
@@ -133,20 +157,42 @@ pub fn run_step_grads(
     dparams: Option<&ParamStore>,
     data: &BTreeMap<String, HostTensor>,
 ) -> Result<(ParamStore, StepOutputs)> {
+    let mut gstore = ParamStore::new();
+    let mut outs = StepOutputs::new();
+    run_step_grads_into(rt, spec, params, slots, dparams, data, &mut gstore, &mut outs)?;
+    Ok((gstore, outs))
+}
+
+/// [`run_step_grads`] with caller-owned, reusable gradient/output stores:
+/// the dist trainers hold both across steps, so after the first step the
+/// gradient path stops allocating (the ref backend's in-place lane writes
+/// straight into the reused buffers).
+#[allow(clippy::too_many_arguments)]
+pub fn run_step_grads_into(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    params: &ParamStore,
+    slots: &[ParamStore],
+    dparams: Option<&ParamStore>,
+    data: &BTreeMap<String, HostTensor>,
+    grads: &mut ParamStore,
+    outs: &mut StepOutputs,
+) -> Result<()> {
+    if rt.grads_in_place(spec, params, dparams, data, grads, outs)? {
+        return Ok(());
+    }
     let step_t = HostTensor::new("step", vec![], vec![0.0]);
     let lr_t = HostTensor::new("lr", vec![], vec![0.0]);
     let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
-    let (grads, extras) = rt.execute_grads(spec, &inputs)?;
+    let (ret, extras) = rt.execute_grads(spec, &inputs)?;
     drop(inputs);
-    let mut gstore = ParamStore::new();
-    for g in grads {
-        gstore.insert(g);
+    for g in ret {
+        grads.insert(g);
     }
-    let mut outs = StepOutputs::new();
     for t in extras {
         outs.insert(t.name.clone(), t);
     }
-    Ok((gstore, outs))
+    Ok(())
 }
 
 /// Apply a step artifact's optimizer update with externally supplied
@@ -162,6 +208,9 @@ pub fn apply_step(
     slots: &mut [ParamStore],
     grads: &ParamStore,
 ) -> Result<()> {
+    if rt.apply_in_place(spec, step, lr, params, slots, grads)? {
+        return Ok(());
+    }
     // Param / slot-bank refs in the spec's input order.
     let mut prefs: Vec<&HostTensor> = Vec::new();
     let mut grefs: Vec<&HostTensor> = Vec::new();
@@ -207,6 +256,25 @@ pub fn run_inference(
     params: &ParamStore,
     data: &BTreeMap<String, HostTensor>,
 ) -> Result<StepOutputs> {
+    let mut outs = StepOutputs::new();
+    run_inference_into(rt, spec, params, data, &mut outs)?;
+    Ok(outs)
+}
+
+/// [`run_inference`] with a caller-owned, reusable output map.  The ref
+/// backend's in-place lane serves `generate` without cloning the parameter
+/// store or allocating output images; other artifacts (fid_features) take
+/// the generic path.
+pub fn run_inference_into(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    params: &ParamStore,
+    data: &BTreeMap<String, HostTensor>,
+    outs: &mut StepOutputs,
+) -> Result<()> {
+    if rt.infer_in_place(spec, params, data, outs)? {
+        return Ok(());
+    }
     let mut p = params.clone();
-    run_step(rt, spec, 0.0, 0.0, &mut p, &mut [], None, data)
+    run_step_into(rt, spec, 0.0, 0.0, &mut p, &mut [], None, data, outs)
 }

@@ -1,0 +1,627 @@
+//! The step-scoped workspace arena: one pre-faulted slab per replica,
+//! planned by `layout::plan::MemoryPlan`, from which every intermediate of a
+//! training step is carved without touching the heap.
+//!
+//! Before this module the hot path fought the allocator: every
+//! `run_step`/`execute_grads` re-allocated ~50+ intermediate buffers
+//! (im2col panels, activations, backward scratch, packed GEMM operands,
+//! dW/db accumulators), so per-step heap traffic grew with replica count
+//! exactly where scaling efficiency is decided.  Now:
+//!
+//! * [`step_memory_plan`] walks the SAME `arch` array the backend executes
+//!   (per program kind, batch and precision) and emits a buffer-request
+//!   trace; `MemoryPlan::assign` places it with first-fit reuse across
+//!   non-overlapping live ranges.  Memory decisions live in `layout::plan`,
+//!   next to the tile decisions of PR 3 — kernels receive slices, they do
+//!   not size buffers.
+//! * [`Workspace`] owns the slab (sized to the max plan total over the
+//!   backend's step programs, pre-faulted by the zeroing write) and serves
+//!   checkouts through the same `IntervalAlloc` the planner ran, so the
+//!   executed placement follows the planned discipline.  A request the slab
+//!   cannot hold falls back to an owned heap buffer and records the demand;
+//!   the next [`Workspace::reset`] (step boundary, nothing checked out)
+//!   grows the slab to cover it.  Steady state therefore performs ZERO heap
+//!   allocations by construction: the request sequence is a fixed function
+//!   of (model, batch), and a sequence that fit once fits forever.
+//!
+//! The arena changes WHERE bytes live, never the arithmetic order: the
+//! `_into` kernels in `runtime::kernel` / `runtime::ref_conv` run the exact
+//! ascending-K chains of the allocating forms, so golden parity and
+//! `to_bits` thread-determinism hold unchanged (pinned in
+//! `tests/step_alloc.rs` alongside the counting-allocator gate).
+
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::layout::plan::{BufReq, IntervalAlloc, MemoryPlan, CPU_MR, CPU_NR};
+
+use super::kernel::{packed_a_len, packed_b_len};
+use super::ref_conv::{ConvNet, Layer, LayerOp};
+
+// ---------------------------------------------------------------------------
+// Arena mode toggle (the bench's A/B switch)
+// ---------------------------------------------------------------------------
+
+/// 0 = unset (follow `PARAGAN_ARENA`), 1 = forced on, 2 = forced off.
+static ARENA_MODE: AtomicUsize = AtomicUsize::new(0);
+
+fn env_arena() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        std::env::var("PARAGAN_ARENA")
+            .map(|v| {
+                let v = v.trim();
+                !(v == "off" || v == "0")
+            })
+            .unwrap_or(true)
+    })
+}
+
+/// Route step execution through the workspace arena (default) or the legacy
+/// allocating path (`Some(false)` / `PARAGAN_ARENA=off`) — the baseline
+/// `benches/bench_step_alloc.rs` measures against.  `None` restores the env
+/// default.
+pub fn set_arena_mode(on: Option<bool>) {
+    ARENA_MODE.store(match on { None => 0, Some(true) => 1, Some(false) => 2 }, Ordering::SeqCst);
+}
+
+/// Is the zero-allocation arena path active for this process?
+pub fn arena_enabled() -> bool {
+    match ARENA_MODE.load(Ordering::SeqCst) {
+        0 => env_arena(),
+        n => n == 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The workspace
+// ---------------------------------------------------------------------------
+
+/// A checked-out span of the workspace.  Holds a raw pointer either into the
+/// slab (disjointness guaranteed by the interval allocator — each offset
+/// range is checked out at most once) or into its own heap buffer (slab
+/// overflow, warmup only).  Not `Send`/`Sync` (raw pointer): workspaces are
+/// per-replica-thread, like the backend that owns them.
+pub struct WsBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+    off: usize,
+    owned: Option<Box<[f32]>>,
+}
+
+impl WsBuf {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `ptr` covers `len` f32s in the slab (exclusive interval)
+        // or in `owned`; the slab never reallocates while checkouts exist
+        // (growth happens only in `reset`/`ensure_capacity`).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as above; `&mut self` gives unique access to this span.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+/// The per-replica step arena (see module docs).
+pub struct Workspace {
+    slab: Vec<f32>,
+    /// Base pointer of the slab, derived ONCE per (re)allocation — takes
+    /// offset from this stored pointer instead of re-borrowing the Vec, so
+    /// outstanding checkouts are never invalidated by a later take.
+    base: *mut f32,
+    alloc: IntervalAlloc,
+    outstanding: usize,
+    in_use: usize,
+    high_water: usize,
+    /// Overflow demand observed since the last reset; the next reset grows
+    /// the slab by this much.
+    pending_grow: usize,
+    overflow_takes: u64,
+    resets: u64,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace {
+            slab: Vec::new(),
+            base: std::ptr::null_mut(),
+            alloc: IntervalAlloc::with_capacity(0, 256),
+            outstanding: 0,
+            in_use: 0,
+            high_water: 0,
+            pending_grow: 0,
+            overflow_takes: 0,
+            resets: 0,
+        }
+    }
+
+    fn rebase(&mut self) {
+        self.base = self.slab.as_mut_ptr();
+    }
+
+    /// Grow (never shrink) the slab to at least `n` f32s, pre-faulting via
+    /// the zeroing write.  Must only be called with nothing checked out —
+    /// the backend calls it at `prepare` time with the `MemoryPlan` total.
+    pub fn ensure_capacity(&mut self, n: usize) {
+        assert_eq!(self.outstanding, 0, "ensure_capacity with buffers checked out");
+        if self.slab.len() < n {
+            self.slab = vec![0f32; n];
+        }
+        self.rebase();
+        self.alloc.reset(self.slab.len());
+    }
+
+    /// Step boundary: reclaim everything (including error-path leaks) and
+    /// absorb any overflow demand into the slab.  After a warmup in which
+    /// every request sequence has been seen once, this never allocates.
+    pub fn reset(&mut self) {
+        self.outstanding = 0;
+        self.in_use = 0;
+        self.resets += 1;
+        if self.pending_grow > 0 {
+            // 50% headroom over the measured deficit: first-fit
+            // fragmentation can leave a same-size slab short of a
+            // contiguous hole, and the headroom makes the growth converge
+            // within the 2-step warmup instead of trickling.
+            let n = self.slab.len() + self.pending_grow + self.pending_grow / 2;
+            self.pending_grow = 0;
+            self.slab = vec![0f32; n];
+        }
+        self.rebase();
+        self.alloc.reset(self.slab.len());
+    }
+
+    /// Check out `len` f32s of UNINITIALIZED (stale) content.  Use
+    /// [`Workspace::take_zeroed`] when the kernel relies on zero-fill.
+    pub fn take(&mut self, len: usize) -> WsBuf {
+        self.outstanding += 1;
+        self.in_use += len;
+        self.high_water = self.high_water.max(self.in_use);
+        if len == 0 {
+            return WsBuf { ptr: NonNull::dangling(), len: 0, off: usize::MAX, owned: None };
+        }
+        if let Some(off) = self.alloc.alloc(len) {
+            // SAFETY: `off + len <= slab.len()` by the allocator contract;
+            // `base` is the slab's pointer, refreshed at every
+            // (re)allocation, and non-null for a non-empty slab.
+            let ptr = unsafe { NonNull::new_unchecked(self.base.add(off)) };
+            WsBuf { ptr, len, off, owned: None }
+        } else {
+            // Slab overflow: serve from the heap (counted — warmup only)
+            // and grow at the next reset.  The grow target is the PEAK
+            // unmet demand (live bytes beyond capacity), not the sum of
+            // overflowed requests — a plan-less first step must not
+            // permanently inflate the slab to sum-of-all-buffers.  The
+            // request's own length is the floor so a fragmentation-only
+            // miss (live < capacity but no hole fits) still guarantees a
+            // hole next round.
+            let shortfall = self.in_use.saturating_sub(self.slab.len()).max(len);
+            self.pending_grow = self.pending_grow.max(shortfall);
+            self.overflow_takes += 1;
+            let mut owned = vec![0f32; len].into_boxed_slice();
+            // SAFETY: a freshly allocated non-empty box is non-null.
+            let ptr = unsafe { NonNull::new_unchecked(owned.as_mut_ptr()) };
+            WsBuf { ptr, len, off: usize::MAX, owned: Some(owned) }
+        }
+    }
+
+    /// Check out `len` zero-filled f32s.
+    pub fn take_zeroed(&mut self, len: usize) -> WsBuf {
+        let mut b = self.take(len);
+        b.as_mut_slice().fill(0.0);
+        b
+    }
+
+    /// Check out a copy of `src`.
+    pub fn take_copy(&mut self, src: &[f32]) -> WsBuf {
+        let mut b = self.take(src.len());
+        b.as_mut_slice().copy_from_slice(src);
+        b
+    }
+
+    /// Return a checkout.  Dropping a `WsBuf` without releasing merely
+    /// leaks its interval until the next reset (the error-path behavior).
+    pub fn release(&mut self, buf: WsBuf) {
+        self.outstanding = self.outstanding.saturating_sub(1);
+        self.in_use = self.in_use.saturating_sub(buf.len);
+        if buf.owned.is_none() && buf.len > 0 {
+            self.alloc.release(buf.off, buf.len);
+        }
+    }
+
+    pub fn slab_len(&self) -> usize {
+        self.slab.len()
+    }
+
+    /// Peak concurrently-checked-out f32s since construction.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Requests the slab could not hold (each one heap-allocated).
+    pub fn overflow_takes(&self) -> u64 {
+        self.overflow_takes
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The arch-walking plan builder
+// ---------------------------------------------------------------------------
+
+/// Which step program the plan models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepShape {
+    /// Two forward + two backward passes of one net (real and fake batches)
+    /// with parameter gradients.
+    DStep,
+    /// Forward G, forward frozen D, backward D (input gradient only),
+    /// backward G with parameter gradients.
+    GStep,
+    /// Forward only.
+    Generate,
+}
+
+struct Tracer {
+    reqs: Vec<BufReq>,
+}
+
+impl Tracer {
+    fn buf(&mut self, tag: &str, li: usize, len: usize, start: usize, end: usize) {
+        if len > 0 {
+            self.reqs.push(BufReq {
+                name: format!("{tag}{li}"),
+                len,
+                start,
+                end: end.max(start),
+            });
+        }
+    }
+}
+
+/// Forward-pass scratch of one layer (packed GEMM operands, bf16 copies,
+/// conv matmul output) — live only while that layer executes.
+fn fwd_scratch(l: &Layer, batch: usize, bf16: bool) -> usize {
+    match l.op {
+        LayerOp::Dense { nin, nout } => {
+            let q = if bf16 { batch * nin + nin * nout } else { 0 };
+            q + packed_a_len(batch, nin, CPU_MR) + packed_b_len(nin, nout, CPU_NR)
+        }
+        LayerOp::Conv { .. } => {
+            let s = conv_shape_of(l, batch);
+            let (oh, ow) = s.out_hw();
+            let (m, kk) = (batch * oh * ow, s.k());
+            let q = if bf16 { s.batch * s.cin * s.ih * s.iw + s.cout * kk } else { 0 };
+            q + packed_a_len(m, kk, CPU_MR) + packed_b_len(kk, s.cout, CPU_NR) + m * s.cout
+        }
+        LayerOp::ConvT { .. } => {
+            let t = convt_shape_of(l, batch);
+            let eq = t.eq_conv();
+            let (oh, ow) = t.out_hw();
+            let (m, kk) = (batch * oh * ow, eq.k());
+            let dil = eq.batch * eq.cin * eq.ih * eq.iw;
+            let w = t.cin * t.cout * t.kh * t.kw;
+            let q = if bf16 { dil + w } else { 0 };
+            dil + w + q
+                + packed_a_len(m, kk, CPU_MR)
+                + packed_b_len(kk, t.cout, CPU_NR)
+                + m * t.cout
+        }
+        LayerOp::BatchNorm { .. } | LayerOp::Upsample { .. } => 0,
+    }
+}
+
+/// Backward-pass scratch of one layer; `want_pgrads` = parameter gradients
+/// are produced (the frozen-D pass of g_step skips that work entirely).
+fn bwd_scratch(l: &Layer, batch: usize, want_pgrads: bool) -> usize {
+    match l.op {
+        LayerOp::Dense { nin, nout } => {
+            let dx = packed_a_len(batch, nout, CPU_MR) + packed_b_len(nout, nin, CPU_NR);
+            let dw = if want_pgrads {
+                packed_a_len(nin, batch, CPU_MR) + packed_b_len(batch, nout, CPU_NR) + nin * nout
+            } else {
+                0
+            };
+            dx + dw
+        }
+        LayerOp::Conv { .. } => {
+            let s = conv_shape_of(l, batch);
+            let (oh, ow) = s.out_hw();
+            let (m, kk) = (batch * oh * ow, s.k());
+            let dout_mat = m * s.cout;
+            let dx = packed_a_len(m, s.cout, CPU_MR) + packed_b_len(s.cout, kk, CPU_NR) + m * kk;
+            let dw = if want_pgrads {
+                packed_a_len(s.cout, m, CPU_MR) + packed_b_len(m, kk, CPU_NR) + s.cout * kk
+            } else {
+                0
+            };
+            dout_mat + dx + dw
+        }
+        LayerOp::ConvT { .. } => {
+            let t = convt_shape_of(l, batch);
+            let eq = t.eq_conv();
+            let (oh, ow) = t.out_hw();
+            let (m, kk) = (batch * oh * ow, eq.k());
+            let dil = eq.batch * eq.cin * eq.ih * eq.iw;
+            let w = t.cin * t.cout * t.kh * t.kw;
+            // dw/db via the equivalent conv's backward on the dilated input.
+            let dw = if want_pgrads {
+                dil + w
+                    + m * t.cout
+                    + packed_a_len(t.cout, m, CPU_MR)
+                    + packed_b_len(m, kk, CPU_NR)
+                    + t.cout * kk
+                    + w
+            } else {
+                0
+            };
+            // dx = strided conv of dout with the stored weights.
+            let kk_dx = t.cout * t.kh * t.kw;
+            let m_dx = batch * t.ih * t.iw;
+            let dx = packed_a_len(m_dx, kk_dx, CPU_MR)
+                + packed_b_len(kk_dx, t.cin, CPU_NR)
+                + m_dx * t.cin;
+            dw + dx
+        }
+        LayerOp::BatchNorm { .. } | LayerOp::Upsample { .. } => 0,
+    }
+}
+
+fn conv_shape_of(l: &Layer, batch: usize) -> super::ref_conv::Conv2dShape {
+    let (h, w) = l.in_hw;
+    match l.op {
+        LayerOp::Conv { cin, cout, kh, kw, stride, pad } => super::ref_conv::Conv2dShape {
+            batch,
+            cin,
+            ih: h,
+            iw: w,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+        },
+        _ => unreachable!("conv shape of non-conv layer"),
+    }
+}
+
+fn convt_shape_of(l: &Layer, batch: usize) -> super::ref_conv::ConvT2dShape {
+    let (h, w) = l.in_hw;
+    match l.op {
+        LayerOp::ConvT { cin, cout, kh, kw, stride, pad } => {
+            super::ref_conv::ConvT2dShape { batch, cin, ih: h, iw: w, cout, kh, kw, stride, pad }
+        }
+        _ => unreachable!("conv_t shape of non-conv_t layer"),
+    }
+}
+
+/// Emit the buffer trace of one net pass.  Forward runs at events
+/// `f0 .. f0+L-1`; backward (when `b0` is `Some`) at `b0 .. b0+L-1` in
+/// reverse layer order.  Returns the first event after the pass.
+#[allow(clippy::too_many_arguments)]
+fn net_pass(
+    tr: &mut Tracer,
+    net: &ConvNet,
+    batch: usize,
+    bf16: bool,
+    f0: usize,
+    b0: Option<usize>,
+    want_pgrads: bool,
+    tag: &str,
+) -> usize {
+    let n = net.layers.len();
+    let b_of = |li: usize, b0: usize| b0 + (n - 1 - li);
+    // x0 copy lives through the whole pass.
+    let last = match b0 {
+        Some(b0) => b_of(0, b0),
+        None => f0 + n.saturating_sub(1),
+    };
+    tr.buf(&format!("{tag}.x0."), 0, batch * net.in_numel(), f0, last);
+    for (li, l) in net.layers.iter().enumerate() {
+        let f = f0 + li;
+        let end = match b0 {
+            Some(b0) => b_of(li, b0),
+            // Forward-only: a layer's output is consumed by the next layer.
+            None => (f + 1).min(f0 + n - 1),
+        };
+        tr.buf(&format!("{tag}.pre."), li, batch * l.out_numel(), f, end);
+        if l.act != super::ref_conv::Act::None {
+            tr.buf(&format!("{tag}.post."), li, batch * l.out_numel(), f, end);
+        }
+        if matches!(l.op, LayerOp::BatchNorm { .. }) {
+            let c = l.out_numel() / (l.out_hw().0 * l.out_hw().1).max(1);
+            tr.buf(&format!("{tag}.bn."), li, 2 * c, f, end);
+        }
+        tr.buf(&format!("{tag}.fscratch."), li, fwd_scratch(l, batch, bf16), f, f);
+    }
+    if let Some(b0) = b0 {
+        // The output gradient enters at the loss event (b0 - 1) and the
+        // per-layer input gradients ping-pong down the stack.
+        let out_grad = batch * net.out_numel();
+        tr.buf(&format!("{tag}.dout."), n - 1, out_grad, b0.saturating_sub(1), b_of(n - 1, b0));
+        for (li, l) in net.layers.iter().enumerate() {
+            let b = b_of(li, b0);
+            tr.buf(&format!("{tag}.bscratch."), li, bwd_scratch(l, batch, want_pgrads), b, b);
+            // dx produced at this layer's backward, consumed one event later.
+            let consumed = if li == 0 { b } else { b_of(li - 1, b0) };
+            tr.buf(&format!("{tag}.dx."), li, batch * l.in_numel(), b, consumed);
+        }
+        b_of(0, b0) + 1
+    } else {
+        f0 + n
+    }
+}
+
+/// Build the `MemoryPlan` of one step program by walking the SAME layer
+/// list the backend executes.  `_threads` is accepted for plan identity
+/// (the engine's row-panel parallelism shares one output buffer, so today
+/// thread count does not change sizes; a future per-worker-accumulator
+/// engine would key on it).
+pub fn step_memory_plan(
+    kind: StepShape,
+    net: &ConvNet,
+    d_net: Option<&ConvNet>,
+    batch: usize,
+    _threads: usize,
+    bf16: bool,
+) -> MemoryPlan {
+    let mut tr = Tracer { reqs: Vec::new() };
+    let n = net.layers.len();
+    match kind {
+        StepShape::DStep => {
+            // fwd real, fwd fake, loss, bwd real, bwd fake.
+            let loss_t = 2 * n;
+            net_pass(&mut tr, net, batch, bf16, 0, Some(loss_t + 1), true, "r");
+            net_pass(&mut tr, net, batch, bf16, n, Some(loss_t + 1 + n), true, "f");
+            // Logit copies + loss gradients live from the loss event into
+            // the matching backward.
+            tr.buf("rl.", 0, batch, loss_t, loss_t);
+            tr.buf("fl.", 0, batch, loss_t, loss_t);
+        }
+        StepShape::GStep => {
+            let d = d_net.expect("g_step plan needs the frozen D arch");
+            let nd = d.layers.len();
+            let loss_t = n + nd;
+            // fwd G, fwd D, loss, bwd D (dx only), bwd G (param grads).
+            net_pass(&mut tr, net, batch, bf16, 0, Some(loss_t + 1 + nd), true, "g");
+            net_pass(&mut tr, d, batch, bf16, n, Some(loss_t + 1), false, "d");
+        }
+        StepShape::Generate => {
+            net_pass(&mut tr, net, batch, bf16, 0, None, false, "gen");
+        }
+    }
+    MemoryPlan::assign(tr.reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ref_conv::Act;
+
+    #[test]
+    fn take_release_reuses_the_slab_exactly() {
+        let mut ws = Workspace::new();
+        ws.ensure_capacity(1024);
+        let a = ws.take_zeroed(100);
+        let b = ws.take(200);
+        assert_eq!(a.as_slice().len(), 100);
+        assert!(a.as_slice().iter().all(|&x| x == 0.0));
+        ws.release(a);
+        let c = ws.take(100);
+        // First-fit hands back the freed interval; b is untouched.
+        assert_eq!(c.as_slice().as_ptr() as usize % std::mem::align_of::<f32>(), 0);
+        ws.release(b);
+        ws.release(c);
+        assert_eq!(ws.outstanding(), 0);
+        assert_eq!(ws.overflow_takes(), 0);
+        assert_eq!(ws.high_water(), 300);
+    }
+
+    #[test]
+    fn overflow_grows_at_reset_then_fits() {
+        let mut ws = Workspace::new();
+        ws.ensure_capacity(64);
+        let a = ws.take(50);
+        let b = ws.take(50); // does not fit: overflow
+        assert_eq!(ws.overflow_takes(), 1);
+        ws.release(a);
+        ws.release(b);
+        ws.reset();
+        assert!(ws.slab_len() >= 100, "reset absorbs the overflow demand");
+        let a = ws.take(50);
+        let b = ws.take(50);
+        assert_eq!(ws.overflow_takes(), 1, "steady state never overflows again");
+        ws.release(a);
+        ws.release(b);
+    }
+
+    #[test]
+    fn writes_through_disjoint_checkouts_do_not_alias() {
+        let mut ws = Workspace::new();
+        ws.ensure_capacity(64);
+        let mut a = ws.take_zeroed(16);
+        let mut b = ws.take_zeroed(16);
+        a.as_mut_slice().fill(1.0);
+        b.as_mut_slice().fill(2.0);
+        assert!(a.as_slice().iter().all(|&x| x == 1.0));
+        assert!(b.as_slice().iter().all(|&x| x == 2.0));
+        ws.release(a);
+        ws.release(b);
+    }
+
+    #[test]
+    fn zero_len_takes_are_fine() {
+        let mut ws = Workspace::new();
+        let z = ws.take(0);
+        assert!(z.is_empty());
+        ws.release(z);
+    }
+
+    fn tiny_conv_net() -> ConvNet {
+        ConvNet::new(vec![
+            Layer {
+                op: LayerOp::Conv { cin: 2, cout: 4, kh: 3, kw: 3, stride: 2, pad: 1 },
+                act: Act::LRelu,
+                in_hw: (8, 8),
+            },
+            Layer { op: LayerOp::BatchNorm { c: 4 }, act: Act::Relu, in_hw: (4, 4) },
+            Layer { op: LayerOp::Dense { nin: 64, nout: 1 }, act: Act::None, in_hw: (0, 0) },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn step_plan_is_consistent_and_reuses() {
+        let net = tiny_conv_net();
+        for kind in [StepShape::DStep, StepShape::Generate] {
+            let p = step_memory_plan(kind, &net, None, 4, 4, false);
+            p.check_no_overlap().unwrap();
+            assert!(p.total > 0);
+            let p2 = step_memory_plan(kind, &net, None, 4, 4, false);
+            assert_eq!(p.total, p2.total, "stable totals");
+            for (a, b) in p.bufs.iter().zip(&p2.bufs) {
+                assert_eq!((a.offset, a.len), (b.offset, b.len), "{}", a.name);
+            }
+        }
+        // A d_step plan reuses memory across the two passes' scratch.
+        let p = step_memory_plan(StepShape::DStep, &net, None, 4, 1, true);
+        assert!(p.reused() > 0, "no live-range sharing in the d_step plan");
+        // g_step needs both nets.
+        let g = step_memory_plan(StepShape::GStep, &net, Some(&net), 4, 1, false);
+        g.check_no_overlap().unwrap();
+        assert!(g.total > 0);
+    }
+
+    #[test]
+    fn arena_mode_toggle_round_trips() {
+        set_arena_mode(Some(false));
+        assert!(!arena_enabled());
+        set_arena_mode(Some(true));
+        assert!(arena_enabled());
+        set_arena_mode(None);
+    }
+}

@@ -1,0 +1,547 @@
+//! Zero-allocation steady-state regression suite (the PR-5 arena gate).
+//!
+//! A counting global allocator wraps `System`; after a 2-step warmup (which
+//! builds the workspace plan, grows the slab, spawns the kernel pool and
+//! fills every reusable container) the measured steps of the training-step
+//! path must perform ZERO heap allocations:
+//!
+//! * fused `run_step_into` (d_step + g_step + generate), refmlp AND dcgan32;
+//! * the grad-split path (`run_step_grads_into` + `apply_step`);
+//! * the 2-replica sync path (grads → `all_reduce_mean_into` → apply on two
+//!   real threads).
+//!
+//! Counting is process-global, so every measuring test serializes on one
+//! mutex; non-measuring tests (plan determinism) don't care.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use paragan::coordinator::trainer::upsert_z;
+use paragan::dist::{Exchange, InProcAllReduce, Topology};
+use paragan::layout::plan::{BufReq, MemoryPlan};
+use paragan::runtime::{
+    apply_step, refgen, run_inference_into, run_step_grads_into, run_step_into, ArtifactSpec,
+    HostTensor, Manifest, ParamStore, Runtime, StepOutputs, Workspace,
+};
+use paragan::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Counting allocator
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Counting is process-global: measuring tests run one at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn measured<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let r = f();
+    COUNTING.store(false, Ordering::SeqCst);
+    (r, ALLOCS.load(Ordering::SeqCst))
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// Export `model` at a small batch into a fresh temp dir (fast even in
+/// debug builds) and load everything the step loop needs.
+fn fixture(model_name: &str, batch: usize, tag: &str) -> (std::path::PathBuf, Runtime) {
+    let dir = std::env::temp_dir().join(format!(
+        "paragan-step-alloc-{}-{model_name}-{tag}",
+        std::process::id()
+    ));
+    let models: Vec<refgen::RefModelSpec> = refgen::default_models()
+        .into_iter()
+        .filter(|m| m.name == model_name)
+        .collect();
+    assert!(!models.is_empty(), "unknown model {model_name}");
+    refgen::write_ref_artifacts_for(&dir, &models, batch).unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    (dir, rt)
+}
+
+struct StepRig {
+    rt: Runtime,
+    d_spec: ArtifactSpec,
+    g_spec: ArtifactSpec,
+    gen_spec: ArtifactSpec,
+    d_params: ParamStore,
+    d_slots: Vec<ParamStore>,
+    g_params: ParamStore,
+    g_slots: Vec<ParamStore>,
+    d_in: BTreeMap<String, HostTensor>,
+    g_in: BTreeMap<String, HostTensor>,
+    gen_in: BTreeMap<String, HostTensor>,
+    d_outs: StepOutputs,
+    g_outs: StepOutputs,
+    gen_outs: StepOutputs,
+    rng: Rng,
+    batch: usize,
+    z_dim: usize,
+}
+
+fn step_rig(model_name: &str, batch: usize, tag: &str) -> StepRig {
+    let (dir, rt) = fixture(model_name, batch, tag);
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.model(model_name).unwrap();
+    let mut rng = Rng::new(0x57E9);
+    let d_params = ParamStore::init(&model.params_d, &mut rng);
+    let d_slots =
+        ParamStore::init_slots(&model.params_d, &d_params, &model.optimizers["adam"].slot_init);
+    let g_params = ParamStore::init(&model.params_g, &mut rng);
+    let g_slots =
+        ParamStore::init_slots(&model.params_g, &g_params, &model.optimizers["adam"].slot_init);
+
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&model.img_shape);
+    let n: usize = shape.iter().product();
+    let mut real = vec![0f32; n];
+    rng.fill_gaussian(&mut real, 0.0, 0.5);
+    let mut d_in = BTreeMap::new();
+    d_in.insert("real".to_string(), HostTensor::new("real", shape.clone(), real));
+    d_in.insert("fake".to_string(), HostTensor::new("fake", shape, vec![0f32; n]));
+
+    StepRig {
+        d_spec: model.artifact("d_step_adam_fp32").unwrap().clone(),
+        g_spec: model.artifact("g_step_adam_fp32").unwrap().clone(),
+        gen_spec: model.artifact("generate_fp32").unwrap().clone(),
+        rt,
+        d_params,
+        d_slots,
+        g_params,
+        g_slots,
+        d_in,
+        g_in: BTreeMap::new(),
+        gen_in: BTreeMap::new(),
+        d_outs: StepOutputs::new(),
+        g_outs: StepOutputs::new(),
+        gen_outs: StepOutputs::new(),
+        rng,
+        batch,
+        z_dim: model.z_dim,
+    }
+}
+
+impl StepRig {
+    /// One full fused training step: generate fakes, D update, G update —
+    /// every input refreshed in place, every output upserted in place.
+    fn fused_step(&mut self, step: u64) {
+        upsert_z(&mut self.gen_in, &mut self.rng, self.batch, self.z_dim);
+        run_inference_into(&self.rt, &self.gen_spec, &self.g_params, &self.gen_in, &mut self.gen_outs)
+            .unwrap();
+        let images = self.gen_outs.get_mut("images").unwrap();
+        let fake = self.d_in.get_mut("fake").unwrap();
+        std::mem::swap(&mut fake.data, &mut images.data);
+        run_step_into(
+            &self.rt,
+            &self.d_spec,
+            step as f32,
+            2e-4,
+            &mut self.d_params,
+            &mut self.d_slots,
+            None,
+            &self.d_in,
+            &mut self.d_outs,
+        )
+        .unwrap();
+        upsert_z(&mut self.g_in, &mut self.rng, self.batch, self.z_dim);
+        run_step_into(
+            &self.rt,
+            &self.g_spec,
+            step as f32,
+            2e-4,
+            &mut self.g_params,
+            &mut self.g_slots,
+            Some(&self.d_params),
+            &self.g_in,
+            &mut self.g_outs,
+        )
+        .unwrap();
+    }
+}
+
+fn assert_fused_zero_alloc(model_name: &str) {
+    let _serial = SERIAL.lock().unwrap();
+    let mut rig = step_rig(model_name, 4, "fused");
+    for s in 1..=2u64 {
+        rig.fused_step(s); // warmup: plans, slab growth, pool spawn, maps
+    }
+    let (_, allocs) = measured(|| {
+        for s in 3..=5u64 {
+            rig.fused_step(s);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "{model_name}: fused steady-state step path allocated {allocs} times"
+    );
+    assert!(rig.d_params.all_finite() && rig.g_params.all_finite());
+}
+
+#[test]
+fn fused_step_path_is_allocation_free_refmlp() {
+    assert_fused_zero_alloc("refmlp");
+}
+
+#[test]
+fn fused_step_path_is_allocation_free_dcgan32() {
+    assert_fused_zero_alloc("dcgan32");
+}
+
+fn assert_grad_split_zero_alloc(model_name: &str) {
+    let _serial = SERIAL.lock().unwrap();
+    let mut rig = step_rig(model_name, 4, "split");
+    let mut d_grads = ParamStore::new();
+    let mut g_grads = ParamStore::new();
+    let mut step_once = |rig: &mut StepRig,
+                         d_grads: &mut ParamStore,
+                         g_grads: &mut ParamStore,
+                         step: u64| {
+        upsert_z(&mut rig.gen_in, &mut rig.rng, rig.batch, rig.z_dim);
+        run_inference_into(&rig.rt, &rig.gen_spec, &rig.g_params, &rig.gen_in, &mut rig.gen_outs)
+            .unwrap();
+        let images = rig.gen_outs.get_mut("images").unwrap();
+        let fake = rig.d_in.get_mut("fake").unwrap();
+        std::mem::swap(&mut fake.data, &mut images.data);
+        run_step_grads_into(
+            &rig.rt,
+            &rig.d_spec,
+            &rig.d_params,
+            &rig.d_slots,
+            None,
+            &rig.d_in,
+            d_grads,
+            &mut rig.d_outs,
+        )
+        .unwrap();
+        apply_step(
+            &rig.rt,
+            &rig.d_spec,
+            step as f32,
+            2e-4,
+            &mut rig.d_params,
+            &mut rig.d_slots,
+            d_grads,
+        )
+        .unwrap();
+        upsert_z(&mut rig.g_in, &mut rig.rng, rig.batch, rig.z_dim);
+        run_step_grads_into(
+            &rig.rt,
+            &rig.g_spec,
+            &rig.g_params,
+            &rig.g_slots,
+            Some(&rig.d_params),
+            &rig.g_in,
+            g_grads,
+            &mut rig.g_outs,
+        )
+        .unwrap();
+        apply_step(
+            &rig.rt,
+            &rig.g_spec,
+            step as f32,
+            2e-4,
+            &mut rig.g_params,
+            &mut rig.g_slots,
+            g_grads,
+        )
+        .unwrap();
+    };
+    for s in 1..=2u64 {
+        step_once(&mut rig, &mut d_grads, &mut g_grads, s);
+    }
+    let (_, allocs) = measured(|| {
+        for s in 3..=5u64 {
+            step_once(&mut rig, &mut d_grads, &mut g_grads, s);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "{model_name}: grad-split steady-state path allocated {allocs} times"
+    );
+}
+
+#[test]
+fn grad_split_path_is_allocation_free_refmlp() {
+    assert_grad_split_zero_alloc("refmlp");
+}
+
+#[test]
+fn grad_split_path_is_allocation_free_dcgan32() {
+    assert_grad_split_zero_alloc("dcgan32");
+}
+
+/// Two REAL replica threads: local grads → buffer-reusing all-reduce →
+/// identical apply.  Main thread flips the counter between two barriers, so
+/// only steady-state rounds are measured, across BOTH threads.
+#[test]
+fn two_replica_sync_path_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
+    let n = 2usize;
+    let (dir, _) = fixture("dcgan32", 4, "sync2");
+    let ex_d = InProcAllReduce::new(n, Topology::Tree);
+    let ex_g = InProcAllReduce::new(n, Topology::Tree);
+    let warm = Barrier::new(n + 1);
+    let start = Barrier::new(n + 1);
+    let done = Barrier::new(n + 1);
+
+    std::thread::scope(|s| {
+        for r in 0..n {
+            let dir = dir.clone();
+            let (ex_d, ex_g) = (ex_d.clone(), ex_g.clone());
+            let (warm, start, done) = (&warm, &start, &done);
+            s.spawn(move || {
+                let m = Manifest::load(&dir).unwrap();
+                let model = m.model("dcgan32").unwrap();
+                let rt = Runtime::new(&dir).unwrap();
+                let d_spec = model.artifact("d_step_adam_fp32").unwrap().clone();
+                let g_spec = model.artifact("g_step_adam_fp32").unwrap().clone();
+                let mut rng = Rng::new(0xD157);
+                // Same init on both replicas (replication), own data shard.
+                let mut d_params = ParamStore::init(&model.params_d, &mut rng);
+                let mut d_slots = ParamStore::init_slots(
+                    &model.params_d,
+                    &d_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut g_params = ParamStore::init(&model.params_g, &mut rng);
+                let mut g_slots = ParamStore::init_slots(
+                    &model.params_g,
+                    &g_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut shard_rng = Rng::replica_stream(9, r as u64);
+                let batch = model.batch;
+                let mut shape = vec![batch];
+                shape.extend_from_slice(&model.img_shape);
+                let numel: usize = shape.iter().product();
+                let mut d_in = BTreeMap::new();
+                d_in.insert(
+                    "real".to_string(),
+                    HostTensor::new("real", shape.clone(), vec![0f32; numel]),
+                );
+                d_in.insert(
+                    "fake".to_string(),
+                    HostTensor::new("fake", shape, vec![0f32; numel]),
+                );
+                let mut g_in = BTreeMap::new();
+                let mut d_grads = ParamStore::new();
+                let mut g_grads = ParamStore::new();
+                let mut d_outs = StepOutputs::new();
+                let mut g_outs = StepOutputs::new();
+                let mut d_scratch: Vec<Vec<f32>> = Vec::new();
+                let mut g_scratch: Vec<Vec<f32>> = Vec::new();
+
+                let mut one_step = |step: u64,
+                                    d_params: &mut ParamStore,
+                                    d_slots: &mut Vec<ParamStore>,
+                                    g_params: &mut ParamStore,
+                                    g_slots: &mut Vec<ParamStore>,
+                                    d_in: &mut BTreeMap<String, HostTensor>,
+                                    g_in: &mut BTreeMap<String, HostTensor>,
+                                    d_grads: &mut ParamStore,
+                                    g_grads: &mut ParamStore,
+                                    d_outs: &mut StepOutputs,
+                                    g_outs: &mut StepOutputs,
+                                    d_scratch: &mut Vec<Vec<f32>>,
+                                    g_scratch: &mut Vec<Vec<f32>>,
+                                    shard_rng: &mut Rng| {
+                    // Refresh this replica's shard in place.
+                    shard_rng.fill_gaussian(&mut d_in.get_mut("real").unwrap().data, 0.0, 0.5);
+                    shard_rng.fill_gaussian(&mut d_in.get_mut("fake").unwrap().data, 0.0, 0.5);
+                    run_step_grads_into(
+                        &rt, &d_spec, d_params, d_slots, None, d_in, d_grads, d_outs,
+                    )
+                    .unwrap();
+                    reduce_scratch(ex_d.as_ref(), r, d_grads, d_scratch);
+                    apply_step(&rt, &d_spec, step as f32, 2e-4, d_params, d_slots, d_grads)
+                        .unwrap();
+                    upsert_z(g_in, shard_rng, batch, model.z_dim);
+                    run_step_grads_into(
+                        &rt,
+                        &g_spec,
+                        g_params,
+                        g_slots,
+                        Some(d_params),
+                        g_in,
+                        g_grads,
+                        g_outs,
+                    )
+                    .unwrap();
+                    reduce_scratch(ex_g.as_ref(), r, g_grads, g_scratch);
+                    apply_step(&rt, &g_spec, step as f32, 2e-4, g_params, g_slots, g_grads)
+                        .unwrap();
+                };
+                for s in 1..=2u64 {
+                    one_step(
+                        s,
+                        &mut d_params,
+                        &mut d_slots,
+                        &mut g_params,
+                        &mut g_slots,
+                        &mut d_in,
+                        &mut g_in,
+                        &mut d_grads,
+                        &mut g_grads,
+                        &mut d_outs,
+                        &mut g_outs,
+                        &mut d_scratch,
+                        &mut g_scratch,
+                        &mut shard_rng,
+                    );
+                }
+                warm.wait();
+                start.wait();
+                for s in 3..=5u64 {
+                    one_step(
+                        s,
+                        &mut d_params,
+                        &mut d_slots,
+                        &mut g_params,
+                        &mut g_slots,
+                        &mut d_in,
+                        &mut g_in,
+                        &mut d_grads,
+                        &mut g_grads,
+                        &mut d_outs,
+                        &mut g_outs,
+                        &mut d_scratch,
+                        &mut g_scratch,
+                        &mut shard_rng,
+                    );
+                }
+                done.wait();
+                assert!(d_params.all_finite() && g_params.all_finite());
+            });
+        }
+        warm.wait();
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        start.wait();
+        done.wait();
+        COUNTING.store(false, Ordering::SeqCst);
+    });
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "2-replica sync steady state allocated {allocs} times");
+}
+
+/// Deposit grads + exchange the mean through the buffer-reusing round —
+/// the `dist::sync` reduce scheme, reproduced over the public API.
+fn reduce_scratch(
+    ex: &dyn Exchange,
+    replica: usize,
+    grads: &mut ParamStore,
+    scratch: &mut Vec<Vec<f32>>,
+) {
+    let n_t = grads.len();
+    let matches = scratch.len() == n_t
+        && scratch.iter().zip(grads.iter()).all(|(b, t)| b.len() == t.data.len());
+    if matches {
+        for (b, t) in scratch.iter_mut().zip(grads.iter()) {
+            b.copy_from_slice(&t.data);
+        }
+    } else {
+        scratch.clear();
+        for t in grads.iter() {
+            scratch.push(t.data.clone());
+        }
+    }
+    ex.all_reduce_mean_into(replica, scratch).unwrap();
+    for (t, b) in grads.iter_mut().zip(scratch.iter()) {
+        t.data.copy_from_slice(b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemoryPlan / workspace invariants (through the public API)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn memory_plan_is_stable_and_non_overlapping() {
+    // Counting is process-global: even non-measuring tests serialize so
+    // their allocations never land in a measuring test's window.
+    let _serial = SERIAL.lock().unwrap();
+    let trace = || {
+        vec![
+            BufReq { name: "x0".into(), len: 512, start: 0, end: 9 },
+            BufReq { name: "pre0".into(), len: 2048, start: 1, end: 8 },
+            BufReq { name: "im2col0".into(), len: 4096, start: 1, end: 1 },
+            BufReq { name: "pre1".into(), len: 256, start: 2, end: 7 },
+            BufReq { name: "bwd1".into(), len: 4096, start: 7, end: 7 },
+            BufReq { name: "dx0".into(), len: 2048, start: 8, end: 9 },
+        ]
+    };
+    let p1 = MemoryPlan::assign(trace());
+    let p2 = MemoryPlan::assign(trace());
+    p1.check_no_overlap().unwrap();
+    assert!(p1.reused() > 0, "live-range reuse must shrink the arena");
+    for (a, b) in p1.bufs.iter().zip(&p2.bufs) {
+        assert_eq!((a.offset, a.len), (b.offset, b.len), "{} moved across runs", a.name);
+    }
+    assert_eq!(p1.total, p2.total);
+}
+
+#[test]
+fn workspace_steady_state_requests_stay_in_the_slab() {
+    let _serial = SERIAL.lock().unwrap();
+    let mut ws = Workspace::new();
+    // Warmup round grows the slab through the overflow path...
+    for _ in 0..2 {
+        let a = ws.take_zeroed(1000);
+        let b = ws.take(500);
+        ws.release(a);
+        let c = ws.take(1000);
+        ws.release(b);
+        ws.release(c);
+        ws.reset();
+    }
+    // ...after which the identical request sequence is allocation-free.
+    let (_, allocs) = measured(|| {
+        for _ in 0..10 {
+            let a = ws.take_zeroed(1000);
+            let b = ws.take(500);
+            ws.release(a);
+            let c = ws.take(1000);
+            ws.release(b);
+            ws.release(c);
+            ws.reset();
+        }
+    });
+    assert_eq!(allocs, 0, "workspace steady state allocated {allocs} times");
+    assert_eq!(ws.outstanding(), 0);
+}
