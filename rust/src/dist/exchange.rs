@@ -24,9 +24,15 @@
 //! within the documented summation-order tolerance of `dist_parity`); each
 //! is individually deterministic.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
+
+// Lock + condvar through the `util::sync` shim: under `--cfg loom` (the CI
+// loom lane) the barrier below is model-checked over every bounded
+// interleaving by `rust/tests/loom_models.rs` — see the ROADMAP PR-6
+// decision binding dist concurrency to this shim.
+use crate::util::sync::{Condvar, Mutex, MutexGuard};
 
 /// Which deterministic combine schedule the all-reduce uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -300,9 +306,7 @@ impl Exchange for InProcAllReduce {
         // replica that detected it: the peers are (or will be) parked
         // waiting for a result that can no longer exist.  `fail` marks the
         // abort and wakes everyone before surfacing the error.
-        let fail = |mut st: std::sync::MutexGuard<'_, ReduceState>,
-                    msg: String|
-         -> anyhow::Error {
+        let fail = |mut st: MutexGuard<'_, ReduceState>, msg: String| -> anyhow::Error {
             st.aborted = true;
             drop(st);
             self.cv.notify_all();
@@ -364,9 +368,7 @@ impl Exchange for InProcAllReduce {
     /// within a round.
     fn all_reduce_mean_into(&self, replica: usize, tensors: &mut Vec<Vec<f32>>) -> Result<()> {
         let mut st = self.st.lock().unwrap();
-        let fail = |mut st: std::sync::MutexGuard<'_, ReduceState>,
-                    msg: String|
-         -> anyhow::Error {
+        let fail = |mut st: MutexGuard<'_, ReduceState>, msg: String| -> anyhow::Error {
             st.aborted = true;
             drop(st);
             self.cv.notify_all();

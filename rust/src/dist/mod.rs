@@ -33,6 +33,7 @@ pub mod async_ps;
 pub mod exchange;
 pub mod mdgan;
 pub mod param_server;
+pub mod staleness;
 pub mod sync;
 
 pub use exchange::{Exchange, InProcAllReduce, Topology};

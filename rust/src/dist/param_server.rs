@@ -15,70 +15,50 @@
 //! `mean_staleness` — respects the bound by construction.  This is the
 //! N-worker generalization of the two-thread scheme's "img_buff capacity IS
 //! the staleness bound": there backpressure enforced it, here the server
-//! enforces it at the apply point.
+//! enforces it at the apply point.  The admission discipline itself —
+//! version counter, staleness gate, stats — lives in
+//! [`dist::staleness::Versioned`](crate::dist::staleness::Versioned); this
+//! type binds it to real parameters and the artifact optimizer, while the
+//! loom lane model-checks the same gate with a scalar payload.
 //!
 //! The learning-rate schedule is owned by the server (`lr_of(step)`), not
 //! the workers: the update number is only known at apply time, which is
 //! exactly where the `ScalingManager` schedule has to be sampled for the
 //! optimizer's bias correction and warmup to see the true global step.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::dist::staleness::{Admit, Versioned};
 use crate::runtime::{apply_step, ArtifactSpec, ParamStore, Runtime};
 
-/// Outcome of one gradient push.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Push {
-    /// Update applied as global step `step`; its basis was `staleness`
-    /// versions old (guaranteed `<= bound`).
-    Applied { step: u64, staleness: u64 },
-    /// Basis exceeded the staleness bound; gradient dropped.
-    Stale { staleness: u64 },
-    /// The server already reached its version cap (`max_version`); the
-    /// gradient is discarded and the worker should wind down.  Without the
-    /// cap, two workers racing on the last step would both apply and the
-    /// run would overshoot its step budget.
-    Done,
-}
+pub use crate::dist::staleness::ServerStats;
 
-#[derive(Debug, Clone, Default)]
-pub struct ServerStats {
-    pub applied: u64,
-    pub dropped: u64,
-    pub staleness_sum: u64,
-    pub staleness_max: u64,
-}
-
-impl ServerStats {
-    pub fn mean_staleness(&self) -> f64 {
-        self.staleness_sum as f64 / self.applied.max(1) as f64
-    }
-}
+/// Outcome of one gradient push — the [`staleness::Admit`] verdict under the
+/// name the async trainer has always matched on.
+///
+/// [`staleness::Admit`]: crate::dist::staleness::Admit
+pub type Push = Admit;
 
 struct ServerState {
     params: ParamStore,
     slots: Vec<ParamStore>,
-    version: u64,
-    stats: ServerStats,
 }
 
 /// One network's central parameter store (see module docs).
 pub struct ParamServer {
     spec: ArtifactSpec,
-    bound: u64,
-    /// Hard cap on the version counter (None = unbounded): pushes against a
-    /// capped server return [`Push::Done`] instead of applying.
-    max_version: Option<u64>,
     lr_of: Box<dyn Fn(u64) -> f64 + Send + Sync>,
-    st: Mutex<ServerState>,
+    gate: Versioned<ServerState>,
 }
 
 impl ParamServer {
     /// `lr_of(step)` yields the learning rate for applying update number
     /// `step` (1-based) — pass the bound `ScalingManager` schedule times
-    /// the net's policy multiplier.
+    /// the net's policy multiplier.  `max_version` is a hard cap on the
+    /// version counter (None = unbounded): pushes against a capped server
+    /// return [`Push::Done`] instead of applying.
     pub fn new(
         spec: ArtifactSpec,
         params: ParamStore,
@@ -89,15 +69,8 @@ impl ParamServer {
     ) -> Arc<ParamServer> {
         Arc::new(ParamServer {
             spec,
-            bound,
-            max_version,
             lr_of: Box::new(lr_of),
-            st: Mutex::new(ServerState {
-                params,
-                slots,
-                version: 0,
-                stats: ServerStats::default(),
-            }),
+            gate: Versioned::new(ServerState { params, slots }, bound, max_version),
         })
     }
 
@@ -106,7 +79,7 @@ impl ParamServer {
     }
 
     pub fn bound(&self) -> u64 {
-        self.bound
+        self.gate.bound()
     }
 
     /// Consistent snapshot: a deep copy of the parameters and the version
@@ -114,8 +87,7 @@ impl ParamServer {
     /// worker hot path uses [`ParamServer::pull_into`] with a reusable
     /// destination store instead.
     pub fn pull(&self) -> (ParamStore, u64) {
-        let st = self.st.lock().unwrap();
-        (st.params.clone(), st.version)
+        self.gate.read(|st, v| (st.params.clone(), v))
     }
 
     /// Snapshot INTO a caller-owned store: values are copied under the
@@ -123,17 +95,18 @@ impl ParamServer {
     /// inserted on the first pull), so a worker that reuses its store pulls
     /// with zero heap allocations in steady state.
     pub fn pull_into(&self, dst: &mut ParamStore) -> Result<u64> {
-        let st = self.st.lock().unwrap();
-        dst.copy_values_from(&st.params)?;
-        Ok(st.version)
+        self.gate.read(|st, v| {
+            dst.copy_values_from(&st.params)?;
+            Ok(v)
+        })
     }
 
     pub fn version(&self) -> u64 {
-        self.st.lock().unwrap().version
+        self.gate.version()
     }
 
     pub fn stats(&self) -> ServerStats {
-        self.st.lock().unwrap().stats.clone()
+        self.gate.stats()
     }
 
     /// Offer gradients computed against version `based`.  Applies through
@@ -146,30 +119,22 @@ impl ParamServer {
     /// function of (params, slots, grads, step, lr), making the result
     /// independent of which worker's backend executes it.
     pub fn push(&self, rt: &Runtime, grads: &ParamStore, based: u64) -> Result<Push> {
-        let mut st = self.st.lock().unwrap();
-        if let Some(cap) = self.max_version {
-            if st.version >= cap {
-                return Ok(Push::Done);
-            }
-        }
-        let staleness = st.version.saturating_sub(based);
-        if staleness > self.bound {
-            st.stats.dropped += 1;
-            return Ok(Push::Stale { staleness });
-        }
-        let step = st.version + 1;
-        let lr = (self.lr_of)(step);
-        // In-place apply: pullers copy values OUT under the lock
-        // (`pull_into`), so the server never clones the model on a push.
-        // (On an apply error the run is torn down by the worker's `?`, so a
-        // partially-written store is never trained on.)
-        let st = &mut *st;
-        apply_step(rt, &self.spec, step as f32, lr as f32, &mut st.params, &mut st.slots, grads)?;
-        st.version = step;
-        st.stats.applied += 1;
-        st.stats.staleness_sum += staleness;
-        st.stats.staleness_max = st.stats.staleness_max.max(staleness);
-        Ok(Push::Applied { step, staleness })
+        self.gate.offer(based, |st, step| {
+            let lr = (self.lr_of)(step);
+            // In-place apply: pullers copy values OUT under the lock
+            // (`pull_into`), so the server never clones the model on a push.
+            // (On an apply error the run is torn down by the worker's `?`,
+            // so a partially-written store is never trained on.)
+            apply_step(
+                rt,
+                &self.spec,
+                step as f32,
+                lr as f32,
+                &mut st.params,
+                &mut st.slots,
+                grads,
+            )
+        })
     }
 }
 

@@ -1,0 +1,204 @@
+//! The bounded-staleness admission core behind [`ParamServer`].
+//!
+//! [`Versioned`] owns the one lock that defines the async mode's version
+//! order: a guarded payload (the parameter server keeps params + optimizer
+//! slots in it) plus the version counter and staleness statistics.  Pullers
+//! read a CONSISTENT `(payload, version)` snapshot; pushers offer an update
+//! computed against a basis version, and the gate either applies it (basis
+//! at most `bound` versions old), drops it ([`Admit::Stale`]), or refuses
+//! because the version cap was reached ([`Admit::Done`]).  Because the
+//! decision and the apply happen under the same lock, the staleness of
+//! every APPLIED update respects the bound by construction — the invariant
+//! `dist_parity` asserts statistically and `rust/tests/loom_models.rs`
+//! proves over every bounded interleaving (the lock comes from
+//! `util::sync`, so `--cfg loom` swaps in the model checker).
+//!
+//! Extracted from `ParamServer` so the synchronization discipline is ONE
+//! piece of code shared by production and the loom model, instead of a
+//! test-only re-implementation that can drift.
+
+use anyhow::Result;
+
+use crate::util::sync::Mutex;
+
+/// Staleness accounting of one gate (the parameter server's public stats).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub applied: u64,
+    pub dropped: u64,
+    pub staleness_sum: u64,
+    pub staleness_max: u64,
+}
+
+impl ServerStats {
+    pub fn mean_staleness(&self) -> f64 {
+        self.staleness_sum as f64 / self.applied.max(1) as f64
+    }
+}
+
+/// Outcome of one offered update (the parameter server's push result).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Update applied as global step `step`; its basis was `staleness`
+    /// versions old (guaranteed `<= bound`).
+    Applied { step: u64, staleness: u64 },
+    /// Basis exceeded the staleness bound; update dropped.
+    Stale { staleness: u64 },
+    /// The gate already reached its version cap (`max_version`); the update
+    /// is discarded and the worker should wind down.  Without the cap, two
+    /// workers racing on the last step would both apply and the run would
+    /// overshoot its step budget.
+    Done,
+}
+
+struct VersionedState<S> {
+    payload: S,
+    version: u64,
+    stats: ServerStats,
+}
+
+/// A versioned, staleness-gated shared payload (see module docs).
+pub struct Versioned<S> {
+    bound: u64,
+    /// Hard cap on the version counter (None = unbounded).
+    max_version: Option<u64>,
+    st: Mutex<VersionedState<S>>,
+}
+
+impl<S> Versioned<S> {
+    pub fn new(payload: S, bound: u64, max_version: Option<u64>) -> Versioned<S> {
+        Versioned {
+            bound,
+            max_version,
+            st: Mutex::new(VersionedState { payload, version: 0, stats: ServerStats::default() }),
+        }
+    }
+
+    pub fn bound(&self) -> u64 {
+        self.bound
+    }
+
+    pub fn version(&self) -> u64 {
+        self.st.lock().unwrap().version
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.st.lock().unwrap().stats.clone()
+    }
+
+    /// Consistent snapshot: `f` sees the payload and the version it
+    /// corresponds to, under the gate lock.
+    pub fn read<R>(&self, f: impl FnOnce(&S, u64) -> R) -> R {
+        let st = self.st.lock().unwrap();
+        f(&st.payload, st.version)
+    }
+
+    /// Offer an update computed against version `based`.  `apply` runs
+    /// under the gate lock with the step number the update becomes
+    /// (`version + 1`) — applies serialize; that is what defines the
+    /// version order.  An `apply` error propagates to the caller (the
+    /// payload may be partially written — the offering worker is expected
+    /// to tear the run down, so a torn payload is never trained on).
+    pub fn offer<E, F>(&self, based: u64, apply: F) -> Result<Admit, E>
+    where
+        F: FnOnce(&mut S, u64) -> Result<(), E>,
+    {
+        let mut st = self.st.lock().unwrap();
+        if let Some(cap) = self.max_version {
+            if st.version >= cap {
+                return Ok(Admit::Done);
+            }
+        }
+        let staleness = st.version.saturating_sub(based);
+        if staleness > self.bound {
+            st.stats.dropped += 1;
+            return Ok(Admit::Stale { staleness });
+        }
+        let step = st.version + 1;
+        apply(&mut st.payload, step)?;
+        st.version = step;
+        st.stats.applied += 1;
+        st.stats.staleness_sum += staleness;
+        st.stats.staleness_max = st.stats.staleness_max.max(staleness);
+        Ok(Admit::Applied { step, staleness })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_within_bound_and_drops_beyond() {
+        let g: Versioned<u32> = Versioned::new(0, 1, None);
+        assert_eq!(
+            g.offer::<(), _>(0, |p, _| {
+                *p += 1;
+                Ok(())
+            })
+            .unwrap(),
+            Admit::Applied { step: 1, staleness: 0 }
+        );
+        assert_eq!(
+            g.offer::<(), _>(0, |p, _| {
+                *p += 1;
+                Ok(())
+            })
+            .unwrap(),
+            Admit::Applied { step: 2, staleness: 1 }
+        );
+        // Basis 0 is now 2 behind — beyond bound 1, payload untouched.
+        assert_eq!(g.offer::<(), _>(0, |_, _| Ok(())).unwrap(), Admit::Stale { staleness: 2 });
+        assert_eq!(g.read(|p, v| (*p, v)), (2, 2));
+        let s = g.stats();
+        assert_eq!((s.applied, s.dropped, s.staleness_max), (2, 1, 1));
+    }
+
+    #[test]
+    fn version_cap_refuses_further_applies() {
+        let g: Versioned<u32> = Versioned::new(0, 8, Some(1));
+        assert_eq!(
+            g.offer::<(), _>(0, |p, _| {
+                *p = 7;
+                Ok(())
+            })
+            .unwrap(),
+            Admit::Applied { step: 1, staleness: 0 }
+        );
+        assert_eq!(g.offer::<(), _>(1, |_, _| Ok(())).unwrap(), Admit::Done);
+        assert_eq!(g.read(|p, v| (*p, v)), (7, 1));
+    }
+
+    #[test]
+    fn apply_errors_propagate_without_advancing_the_version() {
+        let g: Versioned<u32> = Versioned::new(0, 1, None);
+        assert!(g.offer(0, |_, _| Err("apply failed")).is_err());
+        assert_eq!(g.version(), 0);
+        assert_eq!(g.stats().applied, 0);
+    }
+
+    #[test]
+    fn concurrent_offers_never_exceed_the_bound() {
+        let g: std::sync::Arc<Versioned<u64>> = std::sync::Arc::new(Versioned::new(0, 1, None));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let g = g.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let v = g.version();
+                        g.offer::<(), _>(v, |p, _| {
+                            *p += 1;
+                            Ok(())
+                        })
+                        .unwrap();
+                    }
+                });
+            }
+        });
+        let s = g.stats();
+        assert_eq!(s.applied + s.dropped, 200);
+        assert_eq!(g.version(), s.applied);
+        assert!(s.staleness_max <= 1, "staleness bound violated");
+        assert_eq!(g.read(|p, _| *p), s.applied);
+    }
+}

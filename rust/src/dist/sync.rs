@@ -68,10 +68,14 @@ fn reduce_with_loss_into(
         }
         scratch[n_t - 1][0] = loss as f32;
     } else {
+        // First round (or a layout change) builds the reusable deposit
+        // buffers; every later round takes the copy_from_slice arm above.
         scratch.clear();
         for t in grads.iter() {
+            // alloc-ok: warmup-only deposit buffer build (see above).
             scratch.push(t.data.clone());
         }
+        // alloc-ok: warmup-only loss slot build (see above).
         scratch.push(vec![loss as f32]);
     }
     ex.all_reduce_mean_into(replica, scratch)?;

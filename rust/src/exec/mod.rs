@@ -6,9 +6,16 @@
 //! channels, and a condvar-based bounded queue for backpressure.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::{mpsc, Arc};
+
+// All lock/condvar/atomic/thread primitives come through the `util::sync`
+// shim so the loom lane (`rust/tests/loom_models.rs`, built with
+// `--cfg loom`) can model-check this module's handoffs — see the ROADMAP
+// PR-6 decision.  `std::thread::scope` (no loom equivalent) is spelled out
+// explicitly where used.
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::thread::JoinHandle;
+use crate::util::sync::{thread, Condvar, Mutex};
 
 // ---------------------------------------------------------------------------
 // Bounded MPMC channel with blocking send (backpressure) and recv.
@@ -215,7 +222,7 @@ impl ThreadPool {
         let live = self.live.clone();
         let shutdown = self.shutdown.clone();
         live.fetch_add(1, Ordering::SeqCst);
-        let h = std::thread::spawn(move || loop {
+        let h = thread::spawn(move || loop {
             let msg = {
                 let guard = rx.lock().unwrap();
                 guard.recv()
@@ -350,11 +357,14 @@ where
 // pools keep replica threads fully independent (no cross-replica lock
 // contention, same as the one-backend-per-thread design).
 
-/// A borrowed job handed to helpers.  SAFETY: the dispatcher blocks until
-/// every participant has finished before the borrow ends (see
-/// [`GemmPool::run`]), so erasing the lifetime is sound.
+/// A borrowed job handed to helpers.  The dispatcher blocks until every
+/// participant has finished before the borrow ends (see [`GemmPool::run`]),
+/// so erasing the lifetime is sound.
 #[derive(Clone, Copy)]
 struct RawJob(*const (dyn Fn() + Sync));
+// SAFETY: the pointee is `Sync` (shared `&` calls are safe from any thread)
+// and [`GemmPool::run`] keeps it alive until `active == 0`, so sending the
+// raw pointer to helper threads is sound.
 unsafe impl Send for RawJob {}
 
 struct GemmPoolState {
@@ -377,13 +387,24 @@ struct GemmPoolInner {
 }
 
 /// One caller thread's persistent helper fleet.
-struct GemmPool {
+///
+/// Public so `rust/tests/loom_models.rs` can model-check the condvar
+/// handoff directly (the production entry point is the thread-local
+/// [`parallel_chunks_mut`], whose `thread_local!` state would leak across
+/// loom's model iterations).
+pub struct GemmPool {
     inner: Arc<GemmPoolInner>,
     handles: Vec<JoinHandle<()>>,
 }
 
+impl Default for GemmPool {
+    fn default() -> Self {
+        GemmPool::new()
+    }
+}
+
 impl GemmPool {
-    fn new() -> GemmPool {
+    pub fn new() -> GemmPool {
         GemmPool {
             inner: Arc::new(GemmPoolInner {
                 state: Mutex::new(GemmPoolState {
@@ -443,14 +464,14 @@ impl GemmPool {
     fn ensure_helpers(&mut self, n: usize) {
         while self.handles.len() < n {
             let inner = self.inner.clone();
-            self.handles.push(std::thread::spawn(move || Self::helper_loop(inner)));
+            self.handles.push(thread::spawn(move || Self::helper_loop(inner)));
         }
     }
 
     /// Run `f` on `helpers` pool threads plus the calling thread; returns
     /// once every participant finished.  Zero heap allocations once the
     /// fleet exists.
-    fn run(&mut self, f: &(dyn Fn() + Sync), helpers: usize) {
+    pub fn run(&mut self, f: &(dyn Fn() + Sync), helpers: usize) {
         if helpers == 0 {
             f();
             return;
@@ -551,6 +572,10 @@ pub fn parallel_chunks_mut<T, F>(
     // A Sync-by-assertion base pointer: chunk claims are exclusive (atomic
     // index), so concurrent participants never touch overlapping elements.
     struct BasePtr<T>(*mut T);
+    // SAFETY: participants only ever materialize DISJOINT `&mut` chunks
+    // from this pointer (each chunk index is claimed exactly once via the
+    // atomic queue below), so sharing the wrapper across threads is sound
+    // for `T: Send`.
     unsafe impl<T: Send> Sync for BasePtr<T> {}
     let total = out.len();
     let base = BasePtr(out.as_mut_ptr());
@@ -562,6 +587,7 @@ pub fn parallel_chunks_mut<T, F>(
         }
         let start = i * chunk_len;
         let end = (start + chunk_len).min(total);
+        debug_assert!(start < end && end <= total, "chunk [{start}..{end}) out of bounds");
         // SAFETY: chunk index `i` is claimed exactly once (atomic), so the
         // slices are disjoint; `out` outlives the dispatch (the pool blocks
         // until all participants finish).
@@ -710,6 +736,31 @@ mod tests {
             for (i, &v) in out.iter().enumerate() {
                 assert_eq!(v, (i / 4) as u32 + round, "round {round}");
             }
+        }
+    }
+
+    #[test]
+    fn pool_panic_drains_and_stays_usable() {
+        // One participant (caller or helper — whoever claims chunk 3)
+        // panics mid-job.  The dispatcher must drain the fleet, surface the
+        // panic, and leave the persistent pool usable for the next job.
+        let mut out = vec![0u32; 8];
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_chunks_mut(&mut out, 1, 1, 4, |row0, _chunk| {
+                if row0 == 3 {
+                    panic!("seeded kernel panic");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must propagate to the dispatcher");
+        let mut out = vec![0u32; 16];
+        parallel_chunks_mut(&mut out, 2, 2, 4, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(2).enumerate() {
+                row.fill((row0 + r) as u32);
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i / 2) as u32, "pool unusable after panic drain");
         }
     }
 

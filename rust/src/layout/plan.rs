@@ -297,6 +297,22 @@ impl IntervalAlloc {
         }
         debug_assert!(off + len <= self.total, "release past arena end");
         let i = self.free.partition_point(|&(o, _)| o < off);
+        // Double-free / bad-handle detection: the released range must be
+        // disjoint from both free neighbours, or some bytes were already
+        // free — the checkout discipline (each interval out at most once)
+        // has been violated.
+        debug_assert!(
+            i >= self.free.len() || off + len <= self.free[i].0,
+            "release [{off}..{}) overlaps free interval at {}",
+            off + len,
+            self.free[i].0
+        );
+        debug_assert!(
+            i == 0 || self.free[i - 1].0 + self.free[i - 1].1 <= off,
+            "release [{off}..{}) overlaps free interval at {}",
+            off + len,
+            self.free[i - 1].0
+        );
         self.free.insert(i, (off, len));
         if i + 1 < self.free.len() && self.free[i].0 + self.free[i].1 == self.free[i + 1].0 {
             let add = self.free[i + 1].1;

@@ -67,6 +67,10 @@ impl PjrtBackend {
         if t.shape.is_empty() {
             return Ok(xla::Literal::scalar(t.data[0]));
         }
+        // SAFETY: reinterpreting the f32 slice as its own bytes — same
+        // allocation, `len * 4 == size_of_val(&t.data[..])`, and u8 has no
+        // alignment or validity requirements.  The borrow of `t.data` keeps
+        // the buffer alive for the whole `bytes` lifetime.
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
         };

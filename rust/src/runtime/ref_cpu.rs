@@ -1678,6 +1678,8 @@ impl Backend for RefCpuBackend {
                     t.data.copy_from_slice(&st.grads[j]);
                 }
                 Err(_) => {
+                    // alloc-ok: first use of a reusable grad store (warmup);
+                    // every later step hits the copy_from_slice arm above.
                     let p = params.get(name)?;
                     grads.insert(HostTensor::new(name, p.shape.clone(), st.grads[j].clone()));
                 }

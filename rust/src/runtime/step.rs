@@ -59,6 +59,8 @@ pub fn run_step_into(
     }
     // Generic path: inputs staged by reference — no tensor copies on the
     // step hot path; only the two scalars are materialized here.
+    // alloc-ok: non-arena fallback lane (backend without step_in_place);
+    // the ref backend never reaches this.
     let step_t = HostTensor::new("step", vec![], vec![step]);
     let lr_t = HostTensor::new("lr", vec![], vec![lr]);
     let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
@@ -83,6 +85,7 @@ pub fn run_step_into(
                 .ok_or_else(|| anyhow!("output slot {k} out of range"))?
                 .set_data(name, t.data)?,
             Role::Out(name) => {
+                // alloc-ok: fallback-lane metadata clones (data is moved).
                 outs.insert(
                     name.clone(),
                     HostTensor::new(name, tout.shape.clone(), t.data),
@@ -181,6 +184,7 @@ pub fn run_step_grads_into(
     if rt.grads_in_place(spec, params, dparams, data, grads, outs)? {
         return Ok(());
     }
+    // alloc-ok: non-arena fallback lane (backend without grads_in_place).
     let step_t = HostTensor::new("step", vec![], vec![0.0]);
     let lr_t = HostTensor::new("lr", vec![], vec![0.0]);
     let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
@@ -190,6 +194,7 @@ pub fn run_step_grads_into(
         grads.insert(g);
     }
     for t in extras {
+        // alloc-ok: fallback lane metadata clone (tensor data is moved).
         outs.insert(t.name.clone(), t);
     }
     Ok(())
@@ -275,6 +280,8 @@ pub fn run_inference_into(
     if rt.infer_in_place(spec, params, data, outs)? {
         return Ok(());
     }
+    // alloc-ok: generic fallback (fid_features etc.) clones the store so
+    // the write-back protocol of run_step_into can't touch the caller's.
     let mut p = params.clone();
     run_step_into(rt, spec, 0.0, 0.0, &mut p, &mut [], None, data, outs)
 }

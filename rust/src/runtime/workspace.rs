@@ -132,6 +132,14 @@ pub struct Workspace {
     pending_grow: usize,
     overflow_takes: u64,
     resets: u64,
+    /// Debug-only shadow of every live slab checkout `(off, len)`, backing
+    /// the aliasing `debug_assert` in [`Workspace::take`] — a second line of
+    /// defense behind the `IntervalAlloc` contract, since an aliased
+    /// checkout would be UB at the raw-slice layer.  Push/`swap_remove` are
+    /// balanced and `clear` keeps capacity, so after warmup this never
+    /// allocates (the `tests/step_alloc.rs` counting-allocator pin runs
+    /// with debug assertions on).  Empty in release builds.
+    live: Vec<(usize, usize)>,
 }
 
 impl Default for Workspace {
@@ -152,6 +160,7 @@ impl Workspace {
             pending_grow: 0,
             overflow_takes: 0,
             resets: 0,
+            live: Vec::new(),
         }
     }
 
@@ -169,6 +178,7 @@ impl Workspace {
         }
         self.rebase();
         self.alloc.reset(self.slab.len());
+        self.live.clear();
     }
 
     /// Step boundary: reclaim everything (including error-path leaks) and
@@ -189,6 +199,7 @@ impl Workspace {
         }
         self.rebase();
         self.alloc.reset(self.slab.len());
+        self.live.clear();
     }
 
     /// Check out `len` f32s of UNINITIALIZED (stale) content.  Use
@@ -201,6 +212,14 @@ impl Workspace {
             return WsBuf { ptr: NonNull::dangling(), len: 0, off: usize::MAX, owned: None };
         }
         if let Some(off) = self.alloc.alloc(len) {
+            if cfg!(debug_assertions) {
+                debug_assert!(
+                    self.live.iter().all(|&(o, l)| off + len <= o || o + l <= off),
+                    "slab checkout [{off}..{}) aliases a live checkout",
+                    off + len
+                );
+                self.live.push((off, len));
+            }
             // SAFETY: `off + len <= slab.len()` by the allocator contract;
             // `base` is the slab's pointer, refreshed at every
             // (re)allocation, and non-null for a non-empty slab.
@@ -245,6 +264,11 @@ impl Workspace {
         self.outstanding = self.outstanding.saturating_sub(1);
         self.in_use = self.in_use.saturating_sub(buf.len);
         if buf.owned.is_none() && buf.len > 0 {
+            if cfg!(debug_assertions) {
+                if let Some(i) = self.live.iter().position(|&e| e == (buf.off, buf.len)) {
+                    self.live.swap_remove(i);
+                }
+            }
             self.alloc.release(buf.off, buf.len);
         }
     }

@@ -7,5 +7,6 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod window;

@@ -1,0 +1,42 @@
+//! The synchronization shim every concurrency primitive in this crate must
+//! be built on (ROADMAP PR-6 decision).
+//!
+//! In a normal build this module is a zero-cost re-export of `std::sync` /
+//! `std::thread`.  Under `RUSTFLAGS="--cfg loom"` it swaps in the [loom]
+//! model checker's permutation-exploring replacements, so the same
+//! production code that runs training — `exec`'s persistent kernel-pool
+//! handoff, `dist::exchange`'s two-phase all-reduce barrier, the
+//! bounded-staleness gate behind `dist::ParamServer` — can be exhaustively
+//! schedule-checked by `rust/tests/loom_models.rs` without a test-only fork
+//! of the logic.  A loom model that passes is a proof over every
+//! (bounded-preemption) interleaving, not a lucky run.
+//!
+//! Conventions (enforced socially here, mechanically by `cargo xtask lint`
+//! for the alloc/timing rules):
+//!
+//! * New lock/condvar/atomic state in `exec` or `dist` imports `Mutex`,
+//!   `Condvar`, `MutexGuard`, `atomic::*` and `thread` from THIS module,
+//!   never from `std::sync` directly — otherwise loom cannot see it and the
+//!   model silently stops covering the code it claims to.
+//! * `std::thread::scope` has no loom equivalent; scoped fan-outs stay on
+//!   `std` explicitly (they are not loom-modeled) — spell them
+//!   `std::thread::scope` so the intent is visible.
+//! * `loom` is NOT in the offline vendor set and is not a declared
+//!   dependency: the `cfg(loom)` branch only compiles in the CI loom lane,
+//!   which runs `cargo add loom` first (see `.github/workflows/ci.yml`).
+//!
+//! [loom]: https://github.com/tokio-rs/loom
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use loom::thread;

@@ -1,0 +1,191 @@
+//! loom model checks for the three concurrency disciplines behind the
+//! training path: the kernel pool's condvar handoff (`exec::GemmPool`), the
+//! sync mode's two-phase all-reduce barrier (`dist::InProcAllReduce`), and
+//! the async mode's bounded-staleness gate (`dist::staleness::Versioned`).
+//!
+//! Everything here runs ONLY under `RUSTFLAGS="--cfg loom"` (the CI loom
+//! lane, which `cargo add`s loom first — the offline vendor set does not
+//! carry it): the `util::sync` shim then swaps `std::sync`/`std::thread`
+//! for loom's model-checked versions, and each `model(..)` closure is
+//! re-executed over every interleaving up to the preemption bound.  A plain
+//! `cargo test` compiles this file to nothing.
+//!
+//! Conventions (why the models look the way they do):
+//! * Pools are constructed DIRECTLY (`GemmPool::new`), never through
+//!   `parallel_chunks_mut` — its `thread_local!` cache would leak
+//!   loom-typed state across model iterations, which loom rejects.
+//! * Thread counts stay at loom's default budget (≤ 4 including main) and
+//!   rounds stay at 2 — enough to exercise barrier/handoff REUSE, where
+//!   lost-wakeup bugs actually live, while keeping the state space bounded.
+//! * The panic-drain path of `GemmPool::run` is covered by the std test
+//!   `exec::tests::pool_panic_drains_and_stays_usable` instead:
+//!   `catch_unwind` inside a loom model aborts the exploration.
+
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+#![cfg(loom)]
+
+use std::sync::Arc;
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+
+use paragan::dist::staleness::Versioned;
+use paragan::dist::{Exchange, InProcAllReduce, Topology};
+use paragan::exec::GemmPool;
+
+/// Run `f` over every interleaving with a small preemption bound (loom's
+/// recommended way to keep condvar-heavy models tractable; bugs of the
+/// lost-wakeup / double-claim family need ≤ 3 forced preemptions).
+fn model(f: impl Fn() + Sync + Send + 'static) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+// ---------------------------------------------------------------------------
+// GemmPool: the condvar job handoff
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_job_runs_on_every_participant() {
+    model(|| {
+        let mut pool = GemmPool::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        // 1 helper + the caller = 2 participants; `run` must not return
+        // until BOTH ran the job (visible-then-complete).
+        pool.run(&move || { h.fetch_add(1, Ordering::SeqCst); }, 1);
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "a participant missed the job");
+        drop(pool); // shutdown handshake is part of the model
+    });
+}
+
+#[test]
+fn pool_consecutive_jobs_have_no_lost_wakeup() {
+    model(|| {
+        let mut pool = GemmPool::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        // Two back-to-back dispatches through the SAME helper: the second
+        // job must be seen even if the helper was mid-wait or had not yet
+        // parked when it was published (the job_id monotonic counter is
+        // what makes the wakeup impossible to lose).
+        for round in 1..=2usize {
+            let h = hits.clone();
+            pool.run(&move || { h.fetch_add(1, Ordering::SeqCst); }, 1);
+            assert_eq!(hits.load(Ordering::SeqCst), 2 * round, "round {round}");
+        }
+        drop(pool);
+    });
+}
+
+#[test]
+fn pool_two_helpers_each_claim_one_slot() {
+    model(|| {
+        let mut pool = GemmPool::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        // 2 helpers + caller: exactly 3 executions — open_slots must hand
+        // each helper exactly one claim, never two to one helper.
+        pool.run(&move || { h.fetch_add(1, Ordering::SeqCst); }, 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "slot claimed twice or missed");
+        drop(pool);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// InProcAllReduce: the two-phase barrier
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_reduce_barrier_is_reusable_across_rounds() {
+    model(|| {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let ex1 = ex.clone();
+        let t = loom::thread::spawn(move || {
+            for round in 0..2u32 {
+                let out = ex1.all_reduce_mean(1, vec![vec![1.0 + round as f32]]).unwrap();
+                assert_eq!(out[0][0], 0.5 + round as f32);
+            }
+        });
+        for round in 0..2u32 {
+            // A replica lapping the barrier (phase 0) must wait out the
+            // previous round's collection, in every interleaving.
+            let out = ex.all_reduce_mean(0, vec![vec![round as f32]]).unwrap();
+            assert_eq!(out[0][0], 0.5 + round as f32);
+        }
+        t.join().unwrap();
+        assert_eq!(ex.rounds(), 2);
+    });
+}
+
+#[test]
+fn all_reduce_into_round_trips_buffers() {
+    model(|| {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let ex1 = ex.clone();
+        let t = loom::thread::spawn(move || {
+            let mut bufs = vec![vec![3.0f32]];
+            ex1.all_reduce_mean_into(1, &mut bufs).unwrap();
+            assert_eq!(bufs[0], vec![2.0]);
+        });
+        let mut bufs = vec![vec![1.0f32]];
+        ex.all_reduce_mean_into(0, &mut bufs).unwrap();
+        assert_eq!(bufs[0], vec![2.0]);
+        t.join().unwrap();
+    });
+}
+
+#[test]
+fn abort_poisons_the_barrier_in_every_interleaving() {
+    model(|| {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let ex1 = ex.clone();
+        // Replica 0 deposits and parks waiting for a peer that never comes;
+        // the main thread aborts.  Whichever order the model explores —
+        // abort before the deposit, after it, or mid-wait — the waiter MUST
+        // unblock with Err (no lost abort wakeup, no hang).
+        let t = loom::thread::spawn(move || ex1.all_reduce_mean(0, vec![vec![1.0]]));
+        ex.abort();
+        assert!(t.join().unwrap().is_err(), "aborted waiter returned Ok");
+        // And the poison is sticky for later rounds.
+        assert!(ex.all_reduce_mean(1, vec![vec![1.0]]).is_err());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Versioned: the bounded-staleness gate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn staleness_bound_holds_under_every_interleaving() {
+    model(|| {
+        // Bound 0: an update only applies if NOTHING intervened between its
+        // pull and its offer.  Two racing pushers ⇒ in every interleaving
+        // either both apply back-to-back (each basis still fresh at apply
+        // time) or the loser is dropped — an applied update with staleness
+        // > 0 would be the gate admitting what it promised to refuse.
+        let g: Arc<Versioned<u64>> = Arc::new(Versioned::new(0, 0, None));
+        let g1 = g.clone();
+        let t = loom::thread::spawn(move || {
+            let v = g1.version();
+            g1.offer::<(), _>(v, |p, _| {
+                *p += 1;
+                Ok(())
+            })
+            .unwrap();
+        });
+        let v = g.version();
+        g.offer::<(), _>(v, |p, _| {
+            *p += 1;
+            Ok(())
+        })
+        .unwrap();
+        t.join().unwrap();
+        let s = g.stats();
+        assert_eq!(s.applied + s.dropped, 2);
+        assert_eq!(s.staleness_max, 0, "applied update exceeded the bound");
+        assert_eq!(g.version(), s.applied);
+        // The payload saw exactly one increment per APPLIED update.
+        assert_eq!(g.read(|p, _| *p), s.applied);
+    });
+}

@@ -1,0 +1,212 @@
+//! The Miri lane: undefined-behavior checks over every raw-pointer surface
+//! the arena fast path leans on — `Workspace`/`WsBuf` checkouts (raw slices
+//! into the slab), `IntervalAlloc` (the disjointness contract those slices
+//! depend on), `MemoryPlan` placement, and `parallel_chunks_mut` (the
+//! lifetime-erased `&mut` fan-out behind every GEMM).
+//!
+//! Runs as a normal test under `cargo test` (cheap extra coverage) and as
+//! the CI `cargo miri test -p paragan --test miri_lane` job, where every
+//! pointer op is checked against the aliasing model.  Trace lengths scale
+//! down under `cfg(miri)` (~2 orders slower than native); the PROPERTIES
+//! asserted are identical in both lanes.  Paths here avoid `Instant::now`
+//! and env reads — both need Miri opt-ins that would weaken isolation.
+
+use paragan::exec::parallel_chunks_mut;
+use paragan::layout::plan::{BufReq, IntervalAlloc, MemoryPlan};
+use paragan::runtime::Workspace;
+use paragan::util::rng::Rng;
+
+/// Iteration budget: native runs get real soak counts, Miri gets enough to
+/// cover every branch (overflow, coalescing, reuse) without minutes of
+/// interpretation.
+const fn scaled(native: usize, miri: usize) -> usize {
+    if cfg!(miri) {
+        miri
+    } else {
+        native
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace / WsBuf
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ws_checkout_write_read_release_reset() {
+    let mut ws = Workspace::new();
+    ws.ensure_capacity(128);
+    let mut a = ws.take_zeroed(32);
+    a.as_mut_slice().iter_mut().enumerate().for_each(|(i, x)| *x = i as f32);
+    assert_eq!(a.as_slice()[31], 31.0);
+    let b = ws.take_copy(a.as_slice());
+    assert_eq!(b.as_slice(), a.as_slice());
+    ws.release(a);
+    ws.release(b);
+    ws.reset();
+    // Post-reset checkouts reuse the same slab bytes legally.
+    let c = ws.take_zeroed(128);
+    assert!(c.as_slice().iter().all(|&x| x == 0.0));
+    ws.release(c);
+}
+
+#[test]
+fn ws_overflow_fallback_is_sound_then_absorbed() {
+    let mut ws = Workspace::new();
+    ws.ensure_capacity(16);
+    let mut a = ws.take_zeroed(10);
+    // Does not fit: served from an owned heap buffer, same WsBuf contract.
+    let mut b = ws.take_zeroed(10);
+    assert_eq!(ws.overflow_takes(), 1);
+    a.as_mut_slice().fill(1.0);
+    b.as_mut_slice().fill(2.0);
+    assert!(a.as_slice().iter().all(|&x| x == 1.0));
+    assert!(b.as_slice().iter().all(|&x| x == 2.0));
+    ws.release(a);
+    ws.release(b);
+    ws.reset();
+    // The reset grew the slab; the same sequence now stays in-arena.
+    let a = ws.take(10);
+    let b = ws.take(10);
+    assert_eq!(ws.overflow_takes(), 1);
+    ws.release(a);
+    ws.release(b);
+}
+
+#[test]
+fn ws_random_trace_checkouts_never_alias() {
+    let mut rng = Rng::new(0xA11A5);
+    let mut ws = Workspace::new();
+    ws.ensure_capacity(96);
+    // Random take/release trace; every live buffer carries a unique fill
+    // value and must still hold it (no cross-buffer writes) at release —
+    // including buffers that overflowed to the heap mid-trace.
+    let mut live: Vec<(paragan::runtime::WsBuf, f32)> = Vec::new();
+    for step in 0..scaled(4000, 120) {
+        if !live.is_empty() && rng.bool(0.45) {
+            let (buf, tag) = live.swap_remove(rng.usize_below(live.len()));
+            assert!(buf.as_slice().iter().all(|&x| x == tag), "buffer clobbered");
+            ws.release(buf);
+        } else {
+            let len = 1 + rng.usize_below(24);
+            let tag = step as f32 + 1.0;
+            let mut buf = ws.take(len);
+            buf.as_mut_slice().fill(tag);
+            live.push((buf, tag));
+        }
+        if step % 97 == 0 && live.is_empty() {
+            ws.reset();
+        }
+    }
+    for (buf, tag) in live {
+        assert!(buf.as_slice().iter().all(|&x| x == tag), "buffer clobbered");
+        ws.release(buf);
+    }
+    assert_eq!(ws.outstanding(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// IntervalAlloc: the disjointness contract
+// ---------------------------------------------------------------------------
+
+/// Drive one random alloc/release trace; returns the offset sequence so a
+/// replay can assert determinism.
+fn interval_trace(seed: u64, total: usize, steps: usize) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut ia = IntervalAlloc::new(total);
+    let mut live: Vec<(usize, usize)> = Vec::new();
+    let mut offsets = Vec::new();
+    for _ in 0..steps {
+        if !live.is_empty() && rng.bool(0.4) {
+            let (off, len) = live.swap_remove(rng.usize_below(live.len()));
+            ia.release(off, len);
+        } else {
+            let len = 1 + rng.usize_below(total / 4);
+            if let Some(off) = ia.alloc(len) {
+                // The new interval must be disjoint from every live one.
+                assert!(
+                    live.iter().all(|&(o, l)| off + len <= o || o + l <= off),
+                    "overlapping allocation [{off}..{})",
+                    off + len
+                );
+                assert!(off + len <= total, "allocation past arena end");
+                live.push((off, len));
+                offsets.push(off);
+            }
+        }
+    }
+    for (off, len) in live {
+        ia.release(off, len);
+    }
+    // Fully drained: the arena coalesces back to one interval and can serve
+    // a full-size request again.
+    assert_eq!(ia.alloc(total), Some(0), "free list failed to coalesce");
+    offsets
+}
+
+#[test]
+fn interval_alloc_random_traces_stay_disjoint_and_replay_stably() {
+    for seed in 0..scaled(20, 3) as u64 {
+        let a = interval_trace(seed, 256, scaled(600, 80));
+        let b = interval_trace(seed, 256, scaled(600, 80));
+        assert_eq!(a, b, "same trace must place identically (seed {seed})");
+    }
+}
+
+#[test]
+fn memory_plan_random_traces_do_not_overlap_and_replan_stably() {
+    for seed in 0..scaled(20, 3) as u64 {
+        let mut rng = Rng::new(0x917A9 ^ seed);
+        let n = 12 + rng.usize_below(20);
+        let reqs: Vec<BufReq> = (0..n)
+            .map(|i| {
+                let start = rng.usize_below(16);
+                BufReq {
+                    name: format!("b{i}"),
+                    len: 1 + rng.usize_below(64),
+                    start,
+                    end: start + rng.usize_below(8),
+                }
+            })
+            .collect();
+        let plan = MemoryPlan::assign(reqs.clone());
+        plan.check_no_overlap().unwrap();
+        let replan = MemoryPlan::assign(reqs);
+        assert_eq!(plan.total, replan.total, "seed {seed}");
+        for (a, b) in plan.bufs.iter().zip(&replan.bufs) {
+            assert_eq!((a.offset, a.len), (b.offset, b.len), "{} (seed {seed})", a.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel_chunks_mut: the lifetime-erased fan-out
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_chunks_mut_is_disjoint_under_miri_threads() {
+    // Run inside an explicitly spawned (and joined) thread so the
+    // thread-local GemmPool's helper fleet is torn down by the TLS
+    // destructor before the test returns — Miri treats threads alive at
+    // process exit as an error.
+    std::thread::spawn(|| {
+        for (rows, row_len, chunk_rows, threads) in
+            [(7, 3, 2, 3), (4, 1, 1, 2), (5, 2, 5, 4), (3, 4, 1, 2)]
+        {
+            let mut out = vec![0u32; rows * row_len];
+            parallel_chunks_mut(&mut out, row_len, chunk_rows, threads, |row0, chunk| {
+                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        // += (not =) so an aliased or doubly-claimed chunk
+                        // shows up as a wrong value, not a masked overwrite.
+                        *v += (row0 + r + 1) as u32;
+                    }
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, (i / row_len + 1) as u32, "rows={rows} threads={threads}");
+            }
+        }
+    })
+    .join()
+    .unwrap();
+}

@@ -1,0 +1,538 @@
+//! `paragan-lint`: a text-level lint that turns the ROADMAP decision log
+//! into CI-enforceable rules.  Zero dependencies (no syn in the offline
+//! vendor set), so it works on stripped source lines — a per-line scanner
+//! that blanks string literals and separates comments, plus a brace counter
+//! for function bodies.  That is deliberately cruder than an AST walk, and
+//! exactly as precise as these rules need:
+//!
+//! * **unsafe-safety** — every `unsafe` in code carries a `// SAFETY:`
+//!   comment on the same line or the immediately preceding comment block.
+//! * **hot-alloc** — functions on the zero-allocation steady-state path
+//!   (names ending `_ws` / `_into` / `_in_place`, plus the GEMM
+//!   `micro_tile`) contain no allocation tokens (`vec!`,
+//!   `Vec::with_capacity`, `.to_vec()`, `.to_owned()`, `Box::new(`,
+//!   `.clone(`).  Warmup / overflow / fallback lanes are annotated at the
+//!   allocation site with `// alloc-ok: <reason>` (covers the line and the
+//!   next 3 lines below it).  Cold error paths (`format!` inside
+//!   `bail!`/`with_context`) are outside the token set by design: an error
+//!   tears the run down, so its allocations never recur in steady state.
+//! * **tile-const** — tile/blocking constants (`MR`, `NR`, `MC`, `NC`,
+//!   `KC`, `TILE[S]`, `BLOCK[S]` name segments) may only be declared in
+//!   `layout/plan.rs`: kernels receive sizes from the layout planner, they
+//!   never compute them (ROADMAP PR-3/PR-5 decisions).
+//! * **kernel-purity** — kernel / workspace / planner modules contain no
+//!   timing or thread-management calls (`Instant::now`, `SystemTime::now`,
+//!   `thread::spawn`, `thread::sleep`): kernels compute, the exec layer
+//!   schedules, benches time.
+//! * **exchange-combine** — in any file implementing `Exchange`, the
+//!   `all_reduce_mean` / `all_reduce_mean_into` bodies must route through
+//!   the fixed-order `combine` helpers (or forward to
+//!   `self.all_reduce_mean`): the deterministic combine order is the PR-4
+//!   convention that makes sync training bit-reproducible.
+//!
+//! Suppressions beyond the inline escapes live in `xtask/lint_allow.txt`
+//! (`<rule> <file-suffix>` per line) so every exception is reviewable in
+//! one place.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+const HOT_SUFFIXES: [&str; 3] = ["_ws", "_into", "_in_place"];
+const HOT_NAMES: [&str; 1] = ["micro_tile"];
+const ALLOC_TOKENS: [&str; 6] =
+    ["vec!", "Vec::with_capacity", ".to_vec()", ".to_owned()", "Box::new(", ".clone("];
+const TILE_SEGMENTS: [&str; 9] =
+    ["MR", "NR", "MC", "NC", "KC", "TILE", "TILES", "BLOCK", "BLOCKS"];
+/// The one file allowed to define tile/blocking constants.
+const TILE_HOME: &str = "layout/plan.rs";
+const PURITY_FILES: [&str; 4] =
+    ["runtime/kernel.rs", "runtime/ref_conv.rs", "runtime/workspace.rs", "layout/plan.rs"];
+const PURITY_TOKENS: [&str; 4] =
+    ["Instant::now", "SystemTime::now", "thread::spawn", "thread::sleep"];
+/// How many comment/attribute/blank lines above an `unsafe` the SAFETY
+/// comment may start.
+const SAFETY_LOOKBACK: usize = 10;
+/// How many lines below an `// alloc-ok:` marker it covers.
+const ALLOC_OK_REACH: usize = 3;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Path as reported (relative to the lint root).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One source line split into its code and comment parts, string literals
+/// blanked out of the code.
+struct SplitLine {
+    code: String,
+    comment: String,
+}
+
+/// Split `line` into code/comment, carrying block-comment state across
+/// lines.  String literals are replaced by `""` so tokens inside them never
+/// match; char literals are skipped (distinguished from lifetimes by their
+/// closing quote).  Raw-string hashes and multi-line strings degrade to
+/// per-line scanning — acceptable for a convention lint (the tree-clean
+/// test below keeps false positives at zero for this repo).
+fn split_line(line: &str, in_block_comment: &mut bool) -> SplitLine {
+    let b = line.as_bytes();
+    let mut code = String::with_capacity(line.len());
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        if *in_block_comment {
+            match line[i..].find("*/") {
+                Some(j) => {
+                    comment.push_str(&line[i..i + j]);
+                    i += j + 2;
+                    *in_block_comment = false;
+                }
+                None => {
+                    comment.push_str(&line[i..]);
+                    i = b.len();
+                }
+            }
+            continue;
+        }
+        match b[i] {
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                comment.push_str(&line[i + 2..]);
+                break;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                *in_block_comment = true;
+                i += 2;
+            }
+            b'"' => {
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                code.push_str("\"\"");
+            }
+            b'\'' => {
+                // Char literal iff it closes ('x' or '\x'); else lifetime.
+                let is_char = i + 2 < b.len() && (b[i + 1] == b'\\' || b[i + 2] == b'\'');
+                if is_char {
+                    let mut j = i + 2;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    i = j + 1;
+                    code.push_str("''");
+                } else {
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            c => {
+                code.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    SplitLine { code, comment }
+}
+
+/// Is `needle` present in `hay` with no identifier character on either side?
+fn word(hay: &str, needle: &str) -> bool {
+    let is_ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut from = 0;
+    while let Some(j) = hay[from..].find(needle) {
+        let at = from + j;
+        let before_ok = at == 0 || !is_ident(hay.as_bytes()[at - 1]);
+        let after = at + needle.len();
+        let after_ok = after >= hay.len() || !is_ident(hay.as_bytes()[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// The identifier following `fn ` on this code line, if any.
+fn fn_name(code: &str) -> Option<(usize, String)> {
+    let mut from = 0;
+    while let Some(j) = code[from..].find("fn ") {
+        let at = from + j;
+        let before_ok =
+            at == 0 || !(code.as_bytes()[at - 1] == b'_' || code.as_bytes()[at - 1].is_ascii_alphanumeric());
+        if before_ok {
+            let rest = code[at + 3..].trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some((at, name));
+            }
+        }
+        from = at + 3;
+    }
+    None
+}
+
+/// Line range `[sig_line, end_line]` of the body of the fn declared at
+/// `sig`, or None for body-less declarations (trait methods, externs).
+fn fn_body_range(codes: &[String], sig: usize) -> Option<(usize, usize)> {
+    let mut depth: i64 = 0;
+    let mut found = false;
+    let mut j = sig;
+    while j < codes.len() {
+        let c = &codes[j];
+        if !found && c.contains(';') && !c.contains('{') {
+            return None;
+        }
+        for ch in c.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    found = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if found && depth <= 0 {
+            return Some((sig, j));
+        }
+        j += 1;
+    }
+    None
+}
+
+fn is_hot(name: &str) -> bool {
+    HOT_SUFFIXES.iter().any(|s| name.ends_with(s)) || HOT_NAMES.contains(&name)
+}
+
+/// Lint one source file; `rel` is the path label used in diagnostics and
+/// for the path-scoped rules (purity files, the tile-const home).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let mut in_block = false;
+    let mut codes: Vec<String> = Vec::new();
+    let mut comments: Vec<String> = Vec::new();
+    for line in src.lines() {
+        let s = split_line(line, &mut in_block);
+        codes.push(s.code);
+        comments.push(s.comment);
+    }
+    let mut v = Vec::new();
+    let flag = |v: &mut Vec<Violation>, line: usize, rule: &'static str, msg: String| {
+        v.push(Violation { file: rel.to_string(), line: line + 1, rule, msg });
+    };
+
+    // --- unsafe-safety -----------------------------------------------------
+    for (i, code) in codes.iter().enumerate() {
+        if !word(code, "unsafe") {
+            continue;
+        }
+        let mut ok = comments[i].contains("SAFETY:");
+        let mut k = i;
+        let mut budget = SAFETY_LOOKBACK;
+        while !ok && k > 0 && budget > 0 {
+            k -= 1;
+            budget -= 1;
+            let cs = codes[k].trim();
+            if !(cs.is_empty() || cs.starts_with("#[")) {
+                break; // a code line ends the comment block above `unsafe`
+            }
+            if comments[k].contains("SAFETY:") {
+                ok = true;
+            }
+        }
+        if !ok {
+            flag(&mut v, i, "unsafe-safety", format!(
+                "`unsafe` without a `// SAFETY:` comment: {}",
+                codes[i].trim()
+            ));
+        }
+    }
+
+    // --- hot-alloc ---------------------------------------------------------
+    let mut i = 0;
+    while i < codes.len() {
+        let Some((_, name)) = fn_name(&codes[i]) else {
+            i += 1;
+            continue;
+        };
+        let Some((start, end)) = fn_body_range(&codes, i) else {
+            i += 1;
+            continue;
+        };
+        if is_hot(&name) {
+            for b in start..=end {
+                for tok in ALLOC_TOKENS {
+                    if codes[b].contains(tok) {
+                        let lo = b.saturating_sub(ALLOC_OK_REACH);
+                        let escaped = (lo..=b).any(|k| comments[k].contains("alloc-ok"));
+                        if !escaped {
+                            flag(&mut v, b, "hot-alloc", format!(
+                                "`{tok}` in hot-path fn `{name}` (annotate warmup/fallback \
+                                 sites with `// alloc-ok: <reason>`)"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // Resume after the signature line: nested fns inside the body are
+        // still discovered (the scan is per-line), outer fns are not
+        // re-matched.
+        i += 1;
+    }
+
+    // --- tile-const --------------------------------------------------------
+    if !rel.ends_with(TILE_HOME) {
+        for (i, code) in codes.iter().enumerate() {
+            if let Some(name) = const_name(code) {
+                if name.split('_').any(|seg| TILE_SEGMENTS.contains(&seg)) {
+                    flag(&mut v, i, "tile-const", format!(
+                        "tile/blocking const `{name}` outside {TILE_HOME} — kernels \
+                         receive sizes from the layout planner, they do not define them"
+                    ));
+                }
+            }
+        }
+    }
+
+    // --- kernel-purity -----------------------------------------------------
+    if PURITY_FILES.iter().any(|p| rel.ends_with(p)) {
+        for (i, code) in codes.iter().enumerate() {
+            for tok in PURITY_TOKENS {
+                if code.contains(tok) {
+                    flag(&mut v, i, "kernel-purity", format!(
+                        "`{tok}` in a kernel/planner module — kernels compute, the \
+                         exec layer schedules, benches time"
+                    ));
+                }
+            }
+        }
+    }
+
+    // --- exchange-combine --------------------------------------------------
+    if codes.iter().any(|c| c.contains("impl Exchange for")) {
+        let mut i = 0;
+        while i < codes.len() {
+            let hit = fn_name(&codes[i])
+                .filter(|(_, n)| n == "all_reduce_mean" || n == "all_reduce_mean_into");
+            let Some((_, name)) = hit else {
+                i += 1;
+                continue;
+            };
+            let Some((start, end)) = fn_body_range(&codes, i) else {
+                i += 1;
+                continue;
+            };
+            let body = codes[start..=end].join("\n");
+            if !body.contains("combine") && !body.contains("self.all_reduce_mean") {
+                flag(&mut v, i, "exchange-combine", format!(
+                    "`{name}` does not route through the fixed-order combine helpers \
+                     (or forward to self.all_reduce_mean) — the deterministic combine \
+                     order is the PR-4 Exchange convention"
+                ));
+            }
+            i = end + 1;
+        }
+    }
+
+    v
+}
+
+/// `const NAME:` / `pub const NAME:` declaration name on this code line.
+fn const_name(code: &str) -> Option<String> {
+    let at = code.find("const ")?;
+    let before_ok = at == 0 || {
+        let c = code.as_bytes()[at - 1];
+        !(c == b'_' || c.is_ascii_alphanumeric())
+    };
+    if !before_ok {
+        return None;
+    }
+    let rest = code[at + 6..].trim_start();
+    let name: String =
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    let after = rest[name.len()..].trim_start();
+    // Screen-case consts only (`const fn`, generics like `const N: usize`
+    // in signatures still match the colon form — acceptable: rule set is
+    // name-based and generic params use single letters).
+    if !name.is_empty() && after.starts_with(':') && name.chars().next().unwrap().is_ascii_uppercase()
+    {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// Allowlist: `(rule, file-suffix)` pairs parsed from lint_allow.txt.
+pub fn parse_allowlist(text: &str) -> Vec<(String, String)> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut it = l.split_whitespace();
+            Some((it.next()?.to_string(), it.next()?.to_string()))
+        })
+        .collect()
+}
+
+/// Recursively lint every `.rs` file under `root`, dropping violations the
+/// allowlist covers.  Paths in diagnostics are relative to `root`.
+pub fn lint_tree(root: &Path, allow: &[(String, String)]) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&f)?;
+        out.extend(lint_source(&rel, &src).into_iter().filter(|v| {
+            !allow.iter().any(|(rule, suffix)| *rule == v.rule && v.file.ends_with(suffix.as_str()))
+        }));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_source(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() {\n    let p = unsafe { x.get_unchecked(0) };\n}\n";
+        assert_eq!(rules_of("a.rs", bad), vec!["unsafe-safety"]);
+        let same_line = "fn f() {\n    let p = unsafe { g() }; // SAFETY: g is total\n}\n";
+        assert!(rules_of("a.rs", same_line).is_empty());
+        let above = "fn f() {\n    // SAFETY: bounds checked above\n    let p = unsafe { g() };\n}\n";
+        assert!(rules_of("a.rs", above).is_empty());
+        // A code line between the comment and the unsafe breaks the link.
+        let detached =
+            "fn f() {\n    // SAFETY: stale\n    let n = 1;\n    let p = unsafe { g() };\n}\n";
+        assert_eq!(rules_of("a.rs", detached), vec!["unsafe-safety"]);
+        // `unsafe` in strings or comments is not code.
+        let in_str = "fn f() { let s = \"unsafe\"; } // unsafe mentioned\n";
+        assert!(rules_of("a.rs", in_str).is_empty());
+    }
+
+    #[test]
+    fn hot_fn_allocations_are_flagged_and_alloc_ok_escapes() {
+        let bad = "fn copy_into(d: &mut V) {\n    let t = vec![0f32; 8];\n}\n";
+        assert_eq!(rules_of("a.rs", bad), vec!["hot-alloc"]);
+        let escaped =
+            "fn copy_into(d: &mut V) {\n    // alloc-ok: warmup only\n    let t = vec![0f32; 8];\n}\n";
+        assert!(rules_of("a.rs", escaped).is_empty());
+        // The escape reaches only ALLOC_OK_REACH lines down.
+        let too_far = "fn grads_in_place(d: &mut V) {\n    // alloc-ok: warmup\n    let a = 1;\n    let b = 2;\n    let c = 3;\n    let t = x.clone();\n}\n";
+        assert_eq!(rules_of("a.rs", too_far), vec!["hot-alloc"]);
+        // Cold functions may allocate freely.
+        let cold = "fn build() -> V {\n    vec![0f32; 8].to_vec()\n}\n";
+        assert!(rules_of("a.rs", cold).is_empty());
+        // micro_tile is hot by name.
+        let micro = "fn micro_tile(a: &[f32]) {\n    let t = a.to_vec();\n}\n";
+        assert_eq!(rules_of("a.rs", micro), vec!["hot-alloc"]);
+    }
+
+    #[test]
+    fn tile_consts_belong_to_the_planner() {
+        let bad = "pub const CONV_TILE: usize = 8;\n";
+        assert_eq!(rules_of("runtime/kernel.rs", bad), vec!["tile-const"]);
+        // Segment match, not substring: CONVERGENCE_STEPS contains "NC".
+        let fine = "pub const CONVERGENCE_STEPS: usize = 150_000;\n";
+        assert!(rules_of("repro/x.rs", fine).is_empty());
+        // The planner itself is the sanctioned home.
+        let home = "pub const CPU_MR: usize = 4;\n";
+        assert!(rules_of("layout/plan.rs", home).is_empty());
+        assert_eq!(rules_of("other.rs", home), vec!["tile-const"]);
+    }
+
+    #[test]
+    fn kernel_purity_is_path_scoped() {
+        let bad = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of("runtime/kernel.rs", bad), vec!["kernel-purity"]);
+        assert_eq!(rules_of("runtime/workspace.rs", bad), vec!["kernel-purity"]);
+        // Outside the kernel/planner modules, timing is fine (benches).
+        assert!(rules_of("bench/harness.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn exchange_impls_must_combine_in_fixed_order() {
+        let bad = "impl Exchange for Foo {\n    fn all_reduce_mean(&self, r: usize) -> R {\n        Ok(x)\n    }\n}\n";
+        assert_eq!(rules_of("a.rs", bad), vec!["exchange-combine"]);
+        let combine = "impl Exchange for Foo {\n    fn all_reduce_mean(&self, r: usize) -> R {\n        Self::combine(t)\n    }\n}\n";
+        assert!(rules_of("a.rs", combine).is_empty());
+        let forward = "impl Exchange for Foo {\n    fn all_reduce_mean_into(&self, r: usize) -> R {\n        self.all_reduce_mean(r)\n    }\n}\n";
+        assert!(rules_of("a.rs", forward).is_empty());
+        // Files without an Exchange impl are not checked.
+        let elsewhere = "fn all_reduce_mean() {\n    Ok(x)\n}\n";
+        assert!(rules_of("a.rs", elsewhere).is_empty());
+    }
+
+    #[test]
+    fn allowlist_parses_and_filters() {
+        let allow = parse_allowlist("# comment\n\nhot-alloc runtime/legacy.rs\n");
+        assert_eq!(allow, vec![("hot-alloc".to_string(), "runtime/legacy.rs".to_string())]);
+        let v = Violation {
+            file: "runtime/legacy.rs".into(),
+            line: 3,
+            rule: "hot-alloc",
+            msg: String::new(),
+        };
+        assert!(allow.iter().any(|(r, s)| *r == v.rule && v.file.ends_with(s.as_str())));
+    }
+
+    /// THE gate: the real tree must be lint-clean.  Runs inside plain
+    /// `cargo test` so tier-1 and the dedicated CI lint job enforce the
+    /// same thing.
+    #[test]
+    fn paragan_source_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("rust/src");
+        let allow_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint_allow.txt");
+        let allow = parse_allowlist(&fs::read_to_string(allow_path).unwrap_or_default());
+        let viols = lint_tree(&root, &allow).unwrap();
+        assert!(
+            viols.is_empty(),
+            "paragan-lint violations:\n{}",
+            viols.iter().map(|v| format!("  {v}\n")).collect::<String>()
+        );
+    }
+}

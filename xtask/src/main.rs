@@ -1,0 +1,62 @@
+//! `cargo xtask` — the repo's zero-dependency task runner (aliased in
+//! .cargo/config.toml).
+//!
+//! Commands:
+//! * `cargo xtask lint [root]` — run the paragan-lint conventions pass over
+//!   `rust/src` (or an explicit root).  Exit 1 with `file:line` diagnostics
+//!   on any violation; see `src/lint.rs` for the rule set and
+//!   `lint_allow.txt` for the (reviewable) suppression list.
+
+mod lint;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn workspace_root() -> PathBuf {
+    // xtask lives at <root>/xtask; the manifest dir is compile-time known.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask has a parent dir").to_path_buf()
+}
+
+fn run_lint(root_arg: Option<&str>) -> ExitCode {
+    let ws = workspace_root();
+    let root = match root_arg {
+        Some(p) => PathBuf::from(p),
+        None => ws.join("rust/src"),
+    };
+    let allow_path = ws.join("xtask/lint_allow.txt");
+    let allow = std::fs::read_to_string(&allow_path)
+        .map(|t| lint::parse_allowlist(&t))
+        .unwrap_or_default();
+    match lint::lint_tree(&root, &allow) {
+        Ok(viols) if viols.is_empty() => {
+            println!("paragan-lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(viols) => {
+            for v in &viols {
+                eprintln!("{v}");
+            }
+            eprintln!("paragan-lint: {} violation(s)", viols.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("paragan-lint: cannot read {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(args.get(1).map(String::as_str)),
+        Some(other) => {
+            eprintln!("unknown xtask command '{other}' (available: lint)");
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint [root]");
+            ExitCode::FAILURE
+        }
+    }
+}
