@@ -8,10 +8,11 @@
 //!   path) at the all-core default thread count, plus 2-replica sync and
 //!   async aggregate steps/sec with the arena on.
 //! * **Steady-state allocations** — a counting global allocator measures N
-//!   post-warmup steps of the fused 1-replica loop and the 2-replica sync
-//!   loop (grads → buffer-reusing all-reduce → in-place apply).  Both must
-//!   be ZERO; the async fake-batch hand-off (ownership crosses the
-//!   `ImgBuff`) is reported, not gated.
+//!   post-warmup steps of the fused 1-replica loop, the 2-replica sync loop
+//!   (grads → buffer-reusing all-reduce → in-place apply), and the async
+//!   fake-batch hand-off (ownership crossing the recycling `ImgBuff` +
+//!   double-buffered `SnapshotCell`, two real threads).  All three are
+//!   gated at ZERO since PR-7.
 //!
 //! Exit code 1 (the CI gate) if a gated count is nonzero or the arena loses
 //! throughput to the allocating baseline.  `--test` runs the smoke-sized
@@ -22,9 +23,11 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Barrier;
 
-use paragan::coordinator::trainer::upsert_z;
+use paragan::coordinator::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
+use paragan::coordinator::trainer::{d_step_inputs_into, upsert_z};
 use paragan::coordinator::{train_sync, TrainConfig};
 use paragan::dist::{train_dist, DistConfig, DistMode, Exchange, InProcAllReduce, Topology};
+use paragan::pipeline::Batch;
 use paragan::runtime::{
     apply_step, refgen, run_inference_into, run_step_grads_into, run_step_into, set_arena_mode,
     ArtifactSpec, HostTensor, Manifest, ParamStore, Runtime, StepOutputs,
@@ -312,6 +315,131 @@ fn sync2_steady_allocs(dir: &std::path::Path, warmup: u64, measured: u64) -> u64
     ALLOCS.load(Ordering::SeqCst)
 }
 
+/// Post-warmup allocation count of N async G<->D rounds through the
+/// recycling exchanges (free-list `ImgBuff` + double-buffered
+/// `SnapshotCell`), counted over BOTH threads.  Lockstep rounds — one
+/// produced batch, one D update, one snapshot publish — so the reader
+/// provably releases its snapshot before the publisher laps it.
+fn async_handoff_steady_allocs(dir: &std::path::Path, warmup: u64, measured: u64) -> u64 {
+    let buff = ImgBuff::new(2);
+    let cell = {
+        let m = Manifest::load(dir).expect("manifest");
+        let model = m.model("dcgan32").expect("dcgan32");
+        let mut rng = Rng::new(0xD1A5);
+        SnapshotCell::new(ParamStore::init(&model.params_d, &mut rng))
+    };
+    let warm = Barrier::new(3);
+    let start = Barrier::new(3);
+    let done = Barrier::new(3);
+    let round = Barrier::new(2);
+    std::thread::scope(|s| {
+        // G side (replica 0): step against the latest snapshot, ship fakes
+        // in recycled shells.
+        {
+            let dir = dir.to_path_buf();
+            let (buff, cell) = (buff.clone(), cell.clone());
+            let (warm, start, done, round) = (&warm, &start, &done, &round);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(0);
+                let mut rg = rig(&dir, 0x6A11);
+                let mut one = |rg: &mut Rig, r: u64| {
+                    let (d_snap, _) = cell.latest();
+                    upsert_z(&mut rg.g_in, &mut rg.rng, rg.batch, rg.z_dim);
+                    run_step_into(
+                        &rg.rt,
+                        &rg.g_spec,
+                        r as f32,
+                        2e-4,
+                        &mut rg.g_params,
+                        &mut rg.g_slots,
+                        Some(&d_snap),
+                        &rg.g_in,
+                        &mut rg.g_outs,
+                    )
+                    .unwrap();
+                    drop(d_snap);
+                    let mut b = buff.take_recycled().unwrap_or_else(TaggedBatch::empty);
+                    b.refill_from(rg.g_outs.get_mut("fake").unwrap(), rg.g_in.get("y"), r);
+                    assert!(buff.push(b));
+                    round.wait();
+                };
+                for r in 1..=warmup {
+                    one(&mut rg, r);
+                }
+                warm.wait();
+                start.wait();
+                for r in warmup + 1..=warmup + measured {
+                    one(&mut rg, r);
+                }
+                done.wait();
+            });
+        }
+        // D side (replica 1): consume, update, publish by refilling the
+        // retired snapshot, recycle the shell.
+        {
+            let dir = dir.to_path_buf();
+            let (buff, cell) = (buff.clone(), cell.clone());
+            let (warm, start, done, round) = (&warm, &start, &done, &round);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(1);
+                let m = Manifest::load(&dir).expect("manifest");
+                let model = m.model("dcgan32").expect("dcgan32");
+                let img_shape = model.img_shape.clone();
+                let n_classes = model.n_classes;
+                let mut rg = rig(&dir, 0xD1A5);
+                let mut shard = Rng::replica_stream(7, 1);
+                let numel: usize = rg.batch * img_shape.iter().product::<usize>();
+                let mut real = Batch {
+                    data: vec![0f32; numel],
+                    labels: vec![0u32; rg.batch],
+                    batch_size: rg.batch,
+                };
+                let mut one = |rg: &mut Rig, real: &mut Batch, shard: &mut Rng, r: u64| {
+                    let fake = buff.pop_batch().unwrap();
+                    shard.fill_gaussian(&mut real.data, 0.0, 0.5);
+                    d_step_inputs_into(&mut rg.d_in, real, &img_shape, n_classes, &fake)
+                        .unwrap();
+                    run_step_into(
+                        &rg.rt,
+                        &rg.d_spec,
+                        r as f32,
+                        2e-4,
+                        &mut rg.d_params,
+                        &mut rg.d_slots,
+                        None,
+                        &rg.d_in,
+                        &mut rg.d_outs,
+                    )
+                    .unwrap();
+                    cell.publish_with(
+                        r,
+                        |ps| ps.copy_values_from(&rg.d_params).unwrap(),
+                        || rg.d_params.snapshot(),
+                    );
+                    buff.recycle(fake);
+                    round.wait();
+                };
+                for r in 1..=warmup {
+                    one(&mut rg, &mut real, &mut shard, r);
+                }
+                warm.wait();
+                start.wait();
+                for r in warmup + 1..=warmup + measured {
+                    one(&mut rg, &mut real, &mut shard, r);
+                }
+                done.wait();
+            });
+        }
+        warm.wait();
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        start.wait();
+        done.wait();
+        COUNTING.store(false, Ordering::SeqCst);
+    });
+    ALLOCS.load(Ordering::SeqCst)
+}
+
 fn train_steps_per_sec(steps: u64, seed: u64) -> f64 {
     let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
     let cfg = TrainConfig {
@@ -357,6 +485,7 @@ fn main() {
     let dir = small_batch_artifacts(alloc_batch, "counts");
     let fused_allocs = fused_steady_allocs(&dir, warmup, measured);
     let sync2_allocs = sync2_steady_allocs(&dir, warmup, measured);
+    let async_allocs = async_handoff_steady_allocs(&dir, warmup, measured);
 
     // --- throughput: arena vs allocating baseline (all-core) ---
     set_arena_mode(Some(false));
@@ -376,6 +505,7 @@ fn main() {
     );
     t.row(vec!["fused steady-state allocs (1 replica)".into(), fused_allocs.to_string()]);
     t.row(vec!["grad-split steady-state allocs (2-replica sync)".into(), sync2_allocs.to_string()]);
+    t.row(vec!["async fake hand-off steady-state allocs".into(), async_allocs.to_string()]);
     t.row(vec!["baseline steps/s (arena off)".into(), format!("{baseline_sps:.2}")]);
     t.row(vec!["arena steps/s".into(), format!("{arena_sps:.2}")]);
     t.row(vec!["speedup".into(), format!("{speedup:.2}x")]);
@@ -385,13 +515,14 @@ fn main() {
 
     let json = obj(vec![
         ("format", js("paragan-bench-step-alloc")),
-        ("version", num(1.0)),
+        ("version", num(2.0)),
         ("smoke", js(if smoke { "true" } else { "false" })),
         ("model", js("dcgan32")),
         ("warmup_steps", num(warmup as f64)),
         ("measured_steps", num(measured as f64)),
         ("fused_steady_allocs", num(fused_allocs as f64)),
         ("sync2_steady_allocs", num(sync2_allocs as f64)),
+        ("async_handoff_steady_allocs", num(async_allocs as f64)),
         ("baseline_steps_per_sec", num(baseline_sps)),
         ("arena_steps_per_sec", num(arena_sps)),
         ("speedup", num(speedup)),
@@ -415,6 +546,10 @@ fn main() {
     }
     if sync2_allocs != 0 {
         eprintln!("FAIL: 2-replica sync steady-state path allocated {sync2_allocs} times");
+        failed = true;
+    }
+    if async_allocs != 0 {
+        eprintln!("FAIL: async fake hand-off steady state allocated {async_allocs} times");
         failed = true;
     }
     if speedup < 1.0 {

@@ -29,9 +29,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
-use super::trainer::{make_pipeline, sample_y, sample_z, Evaluator, Prologue, TrainConfig, TrainResult};
+use super::trainer::{make_pipeline, upsert_y, upsert_z, Evaluator, Prologue, TrainConfig, TrainResult};
 use crate::metrics::tracker::Series;
-use crate::runtime::{run_step, ParamStore, Runtime};
+use crate::runtime::{run_step_into, HostTensor, ParamStore, Runtime, StepOutputs};
 use crate::util::rng::Rng;
 
 /// Messages D sends back for bookkeeping.
@@ -77,6 +77,8 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
     let d_n_classes = model.n_classes;
     let d_g_step_now = g_step_now.clone();
     let d_thread = std::thread::spawn(move || -> Result<(ParamStore, u64)> {
+        // D is replica 1 (G is 0): its slab faults in on this thread.
+        let _bind = crate::runtime::workspace::bind_replica(1);
         // D owns its own runtime/backend ("different node").
         let rt = Runtime::new(&d_cfg.artifact_dir)?;
         let manifest = crate::runtime::Manifest::load(&d_cfg.artifact_dir)?;
@@ -91,6 +93,9 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
         let (ref mut params, ref mut slots) = d_params;
         let pipeline = make_pipeline(model, d_cfg.n_modes, d_cfg.seed ^ 0xDA7A);
         let mut step: u64 = 0;
+        // Step-persistent input/output stores (refilled in place).
+        let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+        let mut outs = StepOutputs::new();
         loop {
             // Consume a (possibly stale) fake batch; None = G finished.
             // Read G's counter AFTER the blocking pop: while we wait, G
@@ -102,30 +107,40 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
             for _ in 0..d_cfg.policy.d_steps_per_g {
                 step += 1;
                 let real = pipeline.next_batch().context("real batch (D)")?;
-                let d_in = super::trainer::d_step_inputs(
+                super::trainer::d_step_inputs_into(
+                    &mut d_in,
                     &real,
                     &d_img_shape,
                     d_n_classes,
-                    fake.images.clone(),
-                    fake.labels.clone(),
+                    &fake,
                 )?;
+                pipeline.recycle(real);
                 let lr = d_scaling.lr_at(step) * d_cfg.policy.discriminator.lr_mult;
-                let outs = run_step(
-                    &rt, &d_spec, step as f32, lr as f32, params, slots, None, &d_in,
+                run_step_into(
+                    &rt, &d_spec, step as f32, lr as f32, params, slots, None, &d_in, &mut outs,
                 )?;
                 let _ = report_tx.send(DReport {
                     step,
                     loss: outs["loss"].data[0] as f64,
                     staleness,
                 });
-                // Publish the new D state for G ("current state").
-                d_cell.publish(params.snapshot(), step);
+                // Publish the new D state for G ("current state") by
+                // refilling the retired snapshot in place.
+                d_cell.publish_with(
+                    step,
+                    |ps| ps.copy_values_from(params).expect("same D layout every publish"),
+                    || params.snapshot(),
+                );
             }
+            // Consumed: hand the batch's storage back to the G side.
+            d_buff.recycle(fake);
         }
         Ok((params.snapshot(), step))
     });
 
     // ---------------- G side (this thread) ----------------
+    // G is replica 0; the binding restores on return.
+    let _bind = crate::runtime::workspace::bind_replica(0);
     let mut z_rng = Rng::new(cfg.seed ^ 0x22);
     let mut eval_rng = Rng::new(cfg.seed ^ 0xEE);
     let mut g_loss = Series::new("g_loss", 0.05);
@@ -136,6 +151,11 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
     let mut staleness_n = 0u64;
     let mut images_seen = 0u64;
 
+    // Step-persistent G-side stores: same RNG stream and values as the
+    // sample_* constructors, refreshed in place.
+    let mut g_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut g_outs = StepOutputs::new();
+
     let t0 = Instant::now();
     for step in 1..=cfg.steps {
         g_step_now.store(step, Ordering::SeqCst);
@@ -144,14 +164,11 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
         // update (the asynchrony).
         let (d_snap, _d_step) = d_snapshot.latest();
 
-        let mut g_in = BTreeMap::new();
-        g_in.insert("z".to_string(), sample_z(&mut z_rng, model.batch, model.z_dim));
-        let y = (model.n_classes > 0)
-            .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
-        if let Some(y) = &y {
-            g_in.insert("y".to_string(), y.clone());
+        upsert_z(&mut g_in, &mut z_rng, model.batch, model.z_dim);
+        if model.n_classes > 0 {
+            upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
         }
-        let mut outs = run_step(
+        run_step_into(
             &rt,
             &g_spec,
             step as f32,
@@ -160,13 +177,19 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
             &mut g_slots,
             Some(&d_snap),
             &g_in,
+            &mut g_outs,
         )?;
-        g_loss.push(step, outs["loss"].data[0] as f64);
+        g_loss.push(step, g_outs["loss"].data[0] as f64);
         images_seen += model.batch as u64;
 
-        // Ship the generated batch to D through img_buff.
-        let fake = outs.remove("fake").context("g_step fake output")?;
-        if !img_buff.push(TaggedBatch { images: fake, labels: y, produced_at: step }) {
+        // Ship the generated batch to D through img_buff, in a shell
+        // recycled from D's returns (storage swap — no per-step clone).
+        let mut batch = img_buff.take_recycled().unwrap_or_else(TaggedBatch::empty);
+        {
+            let t = g_outs.get_mut("fake").context("g_step fake output")?;
+            batch.refill_from(t, g_in.get("y"), step);
+        }
+        if !img_buff.push(batch) {
             break; // D side died
         }
 

@@ -6,10 +6,23 @@
 //! * `SnapshotCell` — discriminator -> generator: latest-wins snapshot of
 //!   D's parameters (and predictions, pred_buff-style).  G always reads the
 //!   *current* state without waiting for D's in-flight update.
+//!
+//! Both are RECYCLING exchanges (PR-7): consumed batches return through a
+//! free-list (`recycle`/`take_recycled`, the `DataPipeline::recycle`
+//! discipline) and snapshot publishes ping-pong between two `Arc` slots, so
+//! in steady state neither direction of the G<->D hand-off allocates.
+//! Ownership is replica-local by construction: every buffer is created —
+//! and therefore first-touched — on the thread that fills it, and the
+//! free-list hands storage back to that same producer.
+//!
+//! Concurrency primitives come from `util::sync` (PR-6 convention), so the
+//! recycle protocols are model-checked by `rust/tests/loom_models.rs` under
+//! `--cfg loom`.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use crate::runtime::params::HostTensor;
+use crate::util::sync::{Condvar, Mutex};
 
 /// A produced fake batch with provenance for staleness accounting.
 #[derive(Debug, Clone)]
@@ -20,15 +33,70 @@ pub struct TaggedBatch {
     pub produced_at: u64,
 }
 
+/// Overwrite `dst` with `src` without allocating when the capacity and
+/// length already match (the steady state — shapes only change on warmup).
+fn copy_shape(dst: &mut Vec<usize>, src: &[usize]) {
+    if dst.as_slice() != src {
+        dst.clear();
+        dst.extend_from_slice(src);
+    }
+}
+
+impl TaggedBatch {
+    /// An empty shell for producers to refill before the free-list is
+    /// primed (warmup only — in steady state `take_recycled` supplies
+    /// full-capacity buffers).
+    pub fn empty() -> TaggedBatch {
+        TaggedBatch {
+            images: HostTensor::new("fake", Vec::new(), Vec::new()),
+            labels: None,
+            produced_at: 0,
+        }
+    }
+
+    /// Refill this (recycled) batch in place from a producer's output
+    /// tensor by SWAPPING the image storage: `fake` gets this batch's
+    /// retired buffer back — same capacity in steady state — so the
+    /// producer's next in-place step refills it without growing, and
+    /// neither side allocates.  Labels are copied (the producer keeps its
+    /// `y` input for the step), shapes only rewritten on mismatch.
+    pub fn refill_from(
+        &mut self,
+        fake: &mut HostTensor,
+        labels: Option<&HostTensor>,
+        produced_at: u64,
+    ) {
+        std::mem::swap(&mut self.images.data, &mut fake.data);
+        copy_shape(&mut self.images.shape, &fake.shape);
+        match (labels, &mut self.labels) {
+            (Some(y), Some(t)) => {
+                t.data.clear();
+                t.data.extend_from_slice(&y.data);
+                copy_shape(&mut t.shape, &y.shape);
+            }
+            (Some(y), slot @ None) => *slot = Some(y.clone()), // alloc-ok: warmup (first refill)
+            (None, slot) => *slot = None,
+        }
+        self.produced_at = produced_at;
+    }
+}
+
 struct ImgBuffState {
     q: std::collections::VecDeque<TaggedBatch>,
+    /// Retired batches waiting to be refilled (`recycle` -> `take_recycled`).
+    free: std::collections::VecDeque<TaggedBatch>,
     cap: usize,
     closed: bool,
     pushed: u64,
     popped: u64,
+    recycled: u64,
+    reused: u64,
 }
 
-/// Bounded FIFO of generated batches (img_buff).
+/// Bounded FIFO of generated batches (img_buff) with a free-list return
+/// path: consumers hand consumed batches back through [`ImgBuff::recycle`],
+/// producers refill them via [`ImgBuff::take_recycled`] instead of
+/// allocating fresh ones.
 pub struct ImgBuff {
     st: Mutex<ImgBuffState>,
     not_full: Condvar,
@@ -37,13 +105,19 @@ pub struct ImgBuff {
 
 impl ImgBuff {
     pub fn new(cap: usize) -> Arc<ImgBuff> {
+        let cap = cap.max(1);
         Arc::new(ImgBuff {
             st: Mutex::new(ImgBuffState {
-                q: std::collections::VecDeque::new(),
-                cap: cap.max(1),
+                q: std::collections::VecDeque::with_capacity(cap),
+                // `cap` in the queue + one in the producer's hand + one in
+                // the consumer's hand can all retire here at once.
+                free: std::collections::VecDeque::with_capacity(cap + 2),
+                cap,
                 closed: false,
                 pushed: 0,
                 popped: 0,
+                recycled: 0,
+                reused: 0,
             }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
@@ -92,9 +166,8 @@ impl ImgBuff {
 
     /// Non-blocking pop; staleness is computed against the supplied
     /// counter, which is fresh by construction (no blocking in between).
-    /// Test-only until a production consumer exists — keeps the public
-    /// surface free of pop-with-staleness variants.
-    #[cfg(test)]
+    /// No production consumer yet — the integration suite's conservation
+    /// property drives it single-threaded, which is why it stays public.
     pub fn try_pop(&self, current_g_step: u64) -> Option<(TaggedBatch, u64)> {
         let mut st = self.st.lock().unwrap();
         let b = st.q.pop_front()?;
@@ -103,6 +176,29 @@ impl ImgBuff {
         self.not_full.notify_one();
         let staleness = current_g_step.saturating_sub(b.produced_at);
         Some((b, staleness))
+    }
+
+    /// Return a consumed batch to the free-list.  Never blocks and never
+    /// wakes anyone: the free-list is storage recycling, not flow control.
+    /// If the free-list is already at capacity (more buffers in circulation
+    /// than the exchange can ever hand out again) the batch is dropped —
+    /// correct, just a forfeited reuse.
+    pub fn recycle(&self, b: TaggedBatch) {
+        let mut st = self.st.lock().unwrap();
+        if st.free.len() < st.cap + 2 {
+            st.free.push_back(b);
+            st.recycled += 1;
+        }
+    }
+
+    /// Producer side of the free-list: take a retired batch to refill in
+    /// place ([`TaggedBatch::refill_from`]).  None while the list is dry
+    /// (warmup) — the producer allocates a fresh shell exactly then.
+    pub fn take_recycled(&self) -> Option<TaggedBatch> {
+        let mut st = self.st.lock().unwrap();
+        let b = st.free.pop_front()?;
+        st.reused += 1;
+        Some(b)
     }
 
     pub fn close(&self) {
@@ -117,32 +213,99 @@ impl ImgBuff {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    pub fn free_len(&self) -> usize {
+        self.st.lock().unwrap().free.len()
+    }
     pub fn stats(&self) -> (u64, u64) {
         let st = self.st.lock().unwrap();
         (st.pushed, st.popped)
     }
+    /// `(recycled, reused)` — accepted free-list returns and refill grabs.
+    /// Conservation: `recycled == reused + free_len()` whenever no producer
+    /// holds a just-taken buffer.
+    pub fn recycle_stats(&self) -> (u64, u64) {
+        let st = self.st.lock().unwrap();
+        (st.recycled, st.reused)
+    }
 }
 
-/// Latest-wins published snapshot (pred_buff / D-params snapshot).
+struct SnapState<T> {
+    cur: Arc<T>,
+    step: u64,
+    /// The snapshot retired by the previous publish — the publisher's
+    /// write-side half of the double buffer.
+    spare: Option<Arc<T>>,
+}
+
+/// Latest-wins published snapshot (pred_buff / D-params snapshot),
+/// double-buffered: a publish retires the current `Arc` into a spare slot,
+/// and the NEXT publish refills that spare in place when the publisher
+/// holds it uniquely (readers released their clones) — the
+/// `Arc::try_unwrap` reuse idea, done through `Arc::get_mut` so even the
+/// `ArcInner` survives.  Steady-state publishes therefore allocate nothing;
+/// a reader still pinning the retiree two publishes later forces one fresh
+/// allocation, never a wait and never a data race.
 pub struct SnapshotCell<T> {
-    cell: Mutex<(Arc<T>, u64)>,
+    st: Mutex<SnapState<T>>,
 }
 
 impl<T> SnapshotCell<T> {
     pub fn new(initial: T) -> Arc<SnapshotCell<T>> {
-        Arc::new(SnapshotCell { cell: Mutex::new((Arc::new(initial), 0)) })
+        Arc::new(SnapshotCell {
+            st: Mutex::new(SnapState { cur: Arc::new(initial), step: 0, spare: None }),
+        })
     }
 
-    /// Publish a new snapshot tagged with the producer's step.
+    /// Publish a new snapshot tagged with the producer's step, built by
+    /// REFILLING the retired double-buffer in place (`refill`) when the
+    /// publisher owns it uniquely, else by `fresh()` (warmup: the first two
+    /// publishes; fallback: a reader held the retiree across two publishes).
+    pub fn publish_with(
+        &self,
+        step: u64,
+        refill: impl FnOnce(&mut T),
+        fresh: impl FnOnce() -> T,
+    ) {
+        let mut st = self.st.lock().unwrap();
+        let next = match st.spare.take() {
+            Some(mut spare) => match Arc::get_mut(&mut spare) {
+                Some(slot) => {
+                    refill(slot);
+                    spare
+                }
+                None => Arc::new(fresh()), // alloc-ok: reader still pins the retiree
+            },
+            None => Arc::new(fresh()), // alloc-ok: warmup (no retiree yet)
+        };
+        st.spare = Some(std::mem::replace(&mut st.cur, next));
+        st.step = step;
+    }
+
+    /// Publish an already-built snapshot.  Kept for cold paths (initial
+    /// publish, swap rounds); the retired `Arc` still lands in the spare
+    /// slot so a later [`SnapshotCell::publish_with`] can reuse it.
     pub fn publish(&self, value: T, step: u64) {
-        let mut c = self.cell.lock().unwrap();
-        *c = (Arc::new(value), step);
+        let mut st = self.st.lock().unwrap();
+        let next = match st.spare.take() {
+            Some(mut spare) => match Arc::get_mut(&mut spare) {
+                Some(slot) => {
+                    *slot = value;
+                    spare
+                }
+                None => Arc::new(value),
+            },
+            None => Arc::new(value),
+        };
+        st.spare = Some(std::mem::replace(&mut st.cur, next));
+        st.step = step;
     }
 
-    /// Read the current snapshot without blocking the publisher.
+    /// Read the current snapshot without blocking the publisher.  Drop the
+    /// returned `Arc` before the publisher laps you twice and every
+    /// subsequent publish stays allocation-free.
     pub fn latest(&self) -> (Arc<T>, u64) {
-        let c = self.cell.lock().unwrap();
-        (c.0.clone(), c.1)
+        let st = self.st.lock().unwrap();
+        (st.cur.clone(), st.step)
     }
 }
 
@@ -199,6 +362,52 @@ mod tests {
     }
 
     #[test]
+    fn recycle_round_trips_storage() {
+        let b = ImgBuff::new(2);
+        assert!(b.take_recycled().is_none()); // dry at start (warmup)
+        b.push(batch(1));
+        let got = b.pop_batch().unwrap();
+        let images_ptr = got.images.data.as_ptr();
+        b.recycle(got);
+        assert_eq!(b.free_len(), 1);
+        // The producer gets the SAME storage back to refill.
+        let back = b.take_recycled().unwrap();
+        assert_eq!(back.images.data.as_ptr(), images_ptr);
+        assert_eq!(b.free_len(), 0);
+        assert_eq!(b.recycle_stats(), (1, 1));
+    }
+
+    #[test]
+    fn refill_from_swaps_storage_and_updates_tags() {
+        let mut shell = batch(1);
+        let shell_ptr = shell.images.data.as_ptr();
+        let mut fake = HostTensor::new("fake", vec![2, 1], vec![7.0, 8.0]);
+        let fake_ptr = fake.data.as_ptr();
+        let y = HostTensor::new("y", vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        shell.refill_from(&mut fake, Some(&y), 9);
+        // Storage swapped, not copied: producer got the retired buffer.
+        assert_eq!(shell.images.data.as_ptr(), fake_ptr);
+        assert_eq!(fake.data.as_ptr(), shell_ptr);
+        assert_eq!(shell.images.shape, vec![2, 1]);
+        assert_eq!(shell.images.data, vec![7.0, 8.0]);
+        assert_eq!(shell.labels.as_ref().unwrap().data, y.data);
+        assert_eq!(shell.produced_at, 9);
+        // Unconditional refill clears the label slot.
+        shell.refill_from(&mut fake, None, 10);
+        assert!(shell.labels.is_none());
+    }
+
+    #[test]
+    fn overfull_free_list_drops_instead_of_growing() {
+        let b = ImgBuff::new(1); // free-list capacity = cap + 2 = 3
+        for i in 0..5 {
+            b.recycle(batch(i));
+        }
+        assert_eq!(b.free_len(), 3);
+        assert_eq!(b.recycle_stats(), (3, 0));
+    }
+
+    #[test]
     fn snapshot_latest_wins() {
         let cell = SnapshotCell::new(10u32);
         assert_eq!(*cell.latest().0, 10);
@@ -215,6 +424,31 @@ mod tests {
         cell.publish(vec![9], 1);
         assert_eq!(*old, vec![1, 2, 3]); // reader unaffected by publish
         assert_eq!(*cell.latest().0, vec![9]);
+    }
+
+    #[test]
+    fn publish_with_reuses_the_retired_allocation() {
+        let cell = SnapshotCell::new(vec![0f32; 4]);
+        // Warmup: the first publish has no retiree and must build fresh.
+        cell.publish_with(1, |v| v.fill(1.0), || vec![1f32; 4]);
+        let first = Arc::as_ptr(&cell.latest().0);
+        cell.publish_with(2, |v| v.fill(2.0), || vec![2f32; 4]);
+        // Steady state: the 3rd publish refills the Arc retired by the 1st.
+        cell.publish_with(3, |v| v.fill(3.0), || vec![3f32; 4]);
+        let (third, step) = cell.latest();
+        assert_eq!(Arc::as_ptr(&third), first, "retired Arc was not reused");
+        assert_eq!((third[0], step), (3.0, 3));
+    }
+
+    #[test]
+    fn pinned_reader_forces_fresh_allocation_not_corruption() {
+        let cell = SnapshotCell::new(vec![0u64]);
+        cell.publish_with(1, |v| v[0] = 1, || vec![1]);
+        let (held, _) = cell.latest(); // pin snapshot 1
+        cell.publish_with(2, |v| v[0] = 2, || vec![2]); // retires 1 (pinned)
+        cell.publish_with(3, |v| v[0] = 3, || vec![3]); // cannot reuse 1
+        assert_eq!(*held, vec![1], "publisher mutated a reader-held snapshot");
+        assert_eq!(*cell.latest().0, vec![3]);
     }
 
     #[test]

@@ -142,6 +142,57 @@ pub fn d_step_inputs(
     Ok(d_in)
 }
 
+/// [`d_step_inputs`] into a caller-owned, reusable input map: the same
+/// tensors (bitwise) land under the same keys, but everything is refreshed
+/// in place so a trainer that holds `d_in` across steps builds D's inputs
+/// with zero heap allocations — and the `fake` batch is only BORROWED, so
+/// the caller can hand it back to the recycling exchange afterwards.
+pub fn d_step_inputs_into(
+    d_in: &mut BTreeMap<String, HostTensor>,
+    real: &Batch,
+    img_shape: &[usize],
+    n_classes: usize,
+    fake: &crate::coordinator::buffers::TaggedBatch,
+) -> Result<()> {
+    upsert_real(d_in, real, img_shape);
+    match d_in.get_mut("fake") {
+        Some(t) => {
+            t.data.clear();
+            t.data.extend_from_slice(&fake.images.data);
+            if t.shape != fake.images.shape {
+                // alloc-ok: shape change (never in steady state)
+                t.shape = fake.images.shape.clone();
+            }
+        }
+        None => {
+            // alloc-ok: first step inserts the reusable tensors
+            d_in.insert("fake".to_string(), fake.images.clone());
+        }
+    }
+    if n_classes > 0 {
+        // Same labeling rule as `d_step_inputs`: D trains on the labels the
+        // fakes were generated with, falling back to the real batch's.
+        match &fake.labels {
+            Some(y) => match d_in.get_mut("y") {
+                Some(t) => {
+                    t.data.clear();
+                    t.data.extend_from_slice(&y.data);
+                    if t.shape != y.shape {
+                        // alloc-ok: shape change (never in steady state)
+                        t.shape = y.shape.clone();
+                    }
+                }
+                None => {
+                    // alloc-ok: first step inserts the reusable tensors
+                    d_in.insert("y".to_string(), y.clone());
+                }
+            },
+            None => upsert_batch_y(d_in, real, n_classes),
+        }
+    }
+    Ok(())
+}
+
 /// Gaussian latent batch.
 pub fn sample_z(rng: &mut Rng, batch: usize, z_dim: usize) -> HostTensor {
     let mut v = vec![0f32; batch * z_dim];

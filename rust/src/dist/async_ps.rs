@@ -32,7 +32,7 @@ use anyhow::{anyhow, Context, Result};
 use super::param_server::{ParamServer, Push};
 use super::{bound_scaling, DistMode, DistResult};
 use crate::coordinator::buffers::{ImgBuff, TaggedBatch};
-use crate::coordinator::trainer::{d_step_inputs, sample_y, upsert_z, Prologue, TrainConfig};
+use crate::coordinator::trainer::{d_step_inputs_into, upsert_y, upsert_z, Prologue, TrainConfig};
 use crate::coordinator::TrainResult;
 use crate::metrics::tracker::Series;
 use crate::runtime::{run_step_grads_into, HostTensor, ParamStore, Runtime, StepOutputs};
@@ -59,6 +59,9 @@ struct WorkerCtx {
 }
 
 fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
+    // Replica-local placement: the workspace slab and every recycled batch
+    // this worker creates are allocated AND pre-faulted on this thread.
+    let _bind = crate::runtime::workspace::bind_replica(replica);
     let cfg = &ctx.cfg;
     let manifest = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
     let model = manifest.model(&cfg.model)?;
@@ -88,10 +91,8 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
         ctx.d_srv.pull_into(&mut d_params)?;
 
         upsert_z(&mut g_in, &mut z_rng, model.batch, model.z_dim);
-        let y = (model.n_classes > 0)
-            .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
-        if let Some(y) = &y {
-            g_in.insert("y".to_string(), y.clone());
+        if model.n_classes > 0 {
+            upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
         }
         run_step_grads_into(
             &rt,
@@ -104,17 +105,20 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
             &mut outs,
         )?;
         let loss = outs["loss"].data[0] as f64;
-        // Move the generated batch out for shipping; the output map refills
-        // the (empty) buffer next step.
-        let fake = {
+        // Ship the batch in a recycled shell: swap the output tensor's
+        // storage into a free-listed batch (the exchange hands our own
+        // retired buffers back), so the hand-off stops allocating once the
+        // free-list is primed.
+        let mut batch = ctx.buff.take_recycled().unwrap_or_else(TaggedBatch::empty);
+        {
             let t = outs.get_mut("fake").context("g_step fake output")?;
-            HostTensor::new("fake", t.shape.clone(), std::mem::take(&mut t.data))
-        };
+            batch.refill_from(t, g_in.get("y"), g_ver);
+        }
         images += model.batch as u64;
 
         // Ship the fakes first (D-side progress never depends on whether
         // our gradient survives the staleness check)…
-        if !ctx.buff.push(TaggedBatch { images: fake, labels: y, produced_at: g_ver }) {
+        if !ctx.buff.push(batch) {
             break; // D side gone
         }
         // …then offer the gradient; a drop just means faster peers already
@@ -131,6 +135,8 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
 }
 
 fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
+    // Replica-local placement, same as the G side.
+    let _bind = crate::runtime::workspace::bind_replica(replica);
     let cfg = &ctx.cfg;
     let manifest = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
     let model = manifest.model(&cfg.model)?;
@@ -143,6 +149,7 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
     let mut images = 0u64;
 
     let mut d_params = ParamStore::new();
+    let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
     let mut grads = ParamStore::new();
     let mut outs = StepOutputs::new();
 
@@ -154,13 +161,7 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
         let fake_staleness = ctx.g_srv.version().saturating_sub(fake.produced_at);
         for _ in 0..cfg.policy.d_steps_per_g {
             let real = pipeline.next_batch().context("real batch (dist async)")?;
-            let d_in = d_step_inputs(
-                &real,
-                &model.img_shape,
-                model.n_classes,
-                fake.images.clone(),
-                fake.labels.clone(),
-            )?;
+            d_step_inputs_into(&mut d_in, &real, &model.img_shape, model.n_classes, &fake)?;
             pipeline.recycle(real);
             let d_ver = ctx.d_srv.pull_into(&mut d_params)?;
             run_step_grads_into(
@@ -179,6 +180,8 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
                 let _ = ctx.reports.send(Report::D { step, loss, fake_staleness });
             }
         }
+        // The batch is consumed: hand its storage back to the G side.
+        ctx.buff.recycle(fake);
     }
     pipeline.shutdown();
     Ok(images)

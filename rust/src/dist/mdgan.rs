@@ -29,11 +29,13 @@ use anyhow::{anyhow, Context, Result};
 
 use super::{bound_scaling, DistMode, DistResult};
 use crate::coordinator::buffers::{SnapshotCell, TaggedBatch};
-use crate::coordinator::trainer::{d_step_inputs, sample_y, sample_z, Prologue, TrainConfig};
+use crate::coordinator::trainer::{d_step_inputs_into, upsert_y, upsert_z, Prologue, TrainConfig};
 use crate::coordinator::TrainResult;
 use crate::exec::{bounded, Receiver, Sender};
 use crate::metrics::tracker::Series;
-use crate::runtime::{apply_step, run_step, run_step_grads, ParamStore, Runtime};
+use crate::runtime::{
+    apply_step, run_step_grads_into, run_step_into, HostTensor, ParamStore, Runtime, StepOutputs,
+};
 use crate::util::rng::Rng;
 
 /// One D parameter+slot bundle in flight during a swap.
@@ -68,12 +70,19 @@ struct DWorker {
     /// Own sender half, used only to close the queue on error so G's
     /// blocking sends unwind instead of waiting on a dead worker.
     own_tx: Sender<DTask>,
+    /// Free-list back-channel: consumed fake batches return to G here so
+    /// the per-D hand-off stops allocating once the loop warms up (the
+    /// `DataPipeline::recycle` discipline).
+    ret_tx: Sender<TaggedBatch>,
     snapshot: Arc<SnapshotCell<ParamStore>>,
     g_step_now: Arc<AtomicU64>,
     reports: mpsc::Sender<DReport>,
 }
 
 fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
+    // Replica-local placement: D_k is replica k+1 (G is replica 0) — its
+    // workspace slab and input buffers are faulted in on this thread.
+    let _bind = crate::runtime::workspace::bind_replica(w.k + 1);
     let cfg = &w.cfg;
     let pro = Prologue::new(cfg)?;
     let model = pro.manifest.model(&cfg.model)?;
@@ -96,6 +105,11 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
     let mut local_step = 0u64;
     let mut images = 0u64;
 
+    // Step-persistent input/output stores: refreshed in place every batch,
+    // so after warmup the whole D step runs without heap allocations.
+    let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut outs = StepOutputs::new();
+
     while let Ok(task) = w.tasks.recv() {
         match task {
             DTask::Batch(fake) => {
@@ -106,15 +120,10 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
                 for _ in 0..cfg.policy.d_steps_per_g {
                     local_step += 1;
                     let real = pipeline.next_batch().context("real batch (mdgan)")?;
-                    let d_in = d_step_inputs(
-                        &real,
-                        &model.img_shape,
-                        model.n_classes,
-                        fake.images.clone(),
-                        fake.labels.clone(),
-                    )?;
+                    d_step_inputs_into(&mut d_in, &real, &model.img_shape, model.n_classes, &fake)?;
+                    pipeline.recycle(real);
                     let lr = scaling.lr_at(local_step) * cfg.policy.discriminator.lr_mult;
-                    let outs = run_step(
+                    run_step_into(
                         &rt,
                         &d_spec,
                         local_step as f32,
@@ -123,6 +132,7 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
                         &mut d_slots,
                         None,
                         &d_in,
+                        &mut outs,
                     )?;
                     images += model.batch as u64;
                     let _ = w.reports.send(DReport {
@@ -131,7 +141,15 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
                         fake_staleness,
                     });
                 }
-                w.snapshot.publish(d_params.snapshot(), local_step);
+                // Consumed: return the batch's storage to G's free queue
+                // (never blocks; a full queue just forfeits one reuse).
+                let _ = w.ret_tx.try_send(fake);
+                // Republish by refilling the retired snapshot in place.
+                w.snapshot.publish_with(
+                    local_step,
+                    |ps| ps.copy_values_from(&d_params).expect("same D layout every publish"),
+                    || d_params.snapshot(),
+                );
             }
             DTask::Swap { reply, incoming } => {
                 let outgoing = (std::mem::take(&mut d_params), std::mem::take(&mut d_slots));
@@ -143,7 +161,11 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
                     .map_err(|_| anyhow!("mdgan swap replacement never arrived"))?;
                 d_params = p;
                 d_slots = s;
-                w.snapshot.publish(d_params.snapshot(), local_step);
+                w.snapshot.publish_with(
+                    local_step,
+                    |ps| ps.copy_values_from(&d_params).expect("same D layout every publish"),
+                    || d_params.snapshot(),
+                );
             }
         }
     }
@@ -208,10 +230,15 @@ pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
     let g_step_now = Arc::new(AtomicU64::new(0));
     let (report_tx, report_rx) = mpsc::channel::<DReport>();
     let mut task_txs: Vec<Sender<DTask>> = Vec::with_capacity(k_workers);
+    let mut ret_rxs: Vec<Receiver<TaggedBatch>> = Vec::with_capacity(k_workers);
     let mut snapshots: Vec<Arc<SnapshotCell<ParamStore>>> = Vec::with_capacity(k_workers);
     let mut handles = Vec::with_capacity(k_workers);
     for k in 0..k_workers {
         let (tx, rx) = bounded::<DTask>(cfg.img_buff_cap.max(1));
+        // Free-list back-channel, sized for every batch that can be in
+        // flight at once (queue + one in each side's hand).
+        let (ret_tx, ret_rx) = bounded::<TaggedBatch>(cfg.img_buff_cap.max(1) + 2);
+        ret_rxs.push(ret_rx);
         // Seed the cell with D_k's deterministic init (same salt the worker
         // uses) so G's first step never races an unpublished snapshot.
         let (d0, _) = pro.init_net(
@@ -228,6 +255,7 @@ pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
             cfg: cfg.clone(),
             tasks: rx,
             own_tx: tx,
+            ret_tx,
             snapshot,
             g_step_now: g_step_now.clone(),
             reports: report_tx.clone(),
@@ -248,12 +276,23 @@ pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
     }
     drop(report_tx);
 
+    // G is replica 0: its workspace slab faults in on this thread.
+    let _bind = crate::runtime::workspace::bind_replica(0);
     let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, 0);
     let mut swap_rng = Rng::new(cfg.seed ^ 0x5A5A);
     let mut g_loss = Vec::new();
     let mut lr_series = Vec::new();
     let mut swaps = 0u64;
     let mut g_images = 0u64;
+
+    // Step-persistent G-side stores: inputs are upserted (same RNG stream
+    // and values as the sample_* constructors), gradients/outputs land in
+    // reused buffers, and the per-D aggregate accumulates in place — so
+    // after warmup a G step allocates nothing.
+    let mut g_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+    let mut grads = ParamStore::new();
+    let mut outs = StepOutputs::new();
+    let mut agg = ParamStore::new();
 
     let t0 = Instant::now();
     let g_run = (|| -> Result<()> {
@@ -262,57 +301,54 @@ pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
             let lr = scaling.lr_at(step) * cfg.policy.generator.lr_mult;
 
             // Aggregate feedback: mean of per-D gradients, fixed D order.
-            let mut agg: Option<ParamStore> = None;
             let mut loss_sum = 0.0f64;
             for (k, snap) in snapshots.iter().enumerate() {
                 let (d_snap, _) = snap.latest();
-                let mut g_in = BTreeMap::new();
-                g_in.insert(
-                    "z".to_string(),
-                    sample_z(&mut z_rng, model.batch, model.z_dim),
-                );
-                let y = (model.n_classes > 0)
-                    .then(|| sample_y(&mut z_rng, model.batch, model.n_classes));
-                if let Some(y) = &y {
-                    g_in.insert("y".to_string(), y.clone());
+                upsert_z(&mut g_in, &mut z_rng, model.batch, model.z_dim);
+                if model.n_classes > 0 {
+                    upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
                 }
-                let (grads, mut outs) =
-                    run_step_grads(&rt, &g_spec, &g_params, &g_slots, Some(&d_snap), &g_in)?;
+                run_step_grads_into(
+                    &rt,
+                    &g_spec,
+                    &g_params,
+                    &g_slots,
+                    Some(&d_snap),
+                    &g_in,
+                    &mut grads,
+                    &mut outs,
+                )?;
                 loss_sum += outs["loss"].data[0] as f64;
-                let fake = outs.remove("fake").context("g_step fake output")?;
                 g_images += model.batch as u64;
-                // D_k gets its OWN fake batch (distinct latents).
+                // D_k gets its OWN fake batch (distinct latents), shipped
+                // in a shell recycled through D_k's return queue.
+                let mut fake =
+                    ret_rxs[k].try_recv().unwrap_or_else(|_| TaggedBatch::empty());
+                {
+                    let t = outs.get_mut("fake").context("g_step fake output")?;
+                    fake.refill_from(t, g_in.get("y"), step);
+                }
                 task_txs[k]
-                    .send(DTask::Batch(TaggedBatch {
-                        images: fake,
-                        labels: y,
-                        produced_at: step,
-                    }))
+                    .send(DTask::Batch(fake))
                     .map_err(|_| anyhow!("mdgan D worker {k} queue closed"))?;
-                agg = Some(match agg {
-                    None => grads,
-                    Some(mut acc) => {
-                        for t in grads.iter() {
-                            let a = acc.get(&t.name)?;
-                            let sum: Vec<f32> =
-                                a.data.iter().zip(&t.data).map(|(x, y)| x + y).collect();
-                            acc.set_data(&t.name, sum)?;
+                // In-place accumulation, fixed D order — the same float op
+                // sequence as summing fresh stores: ((g_0 + g_1) + g_2)...
+                if k == 0 {
+                    agg.copy_values_from(&grads)?;
+                } else {
+                    for t in grads.iter() {
+                        let a = agg.get_mut(&t.name)?;
+                        for (x, y) in a.data.iter_mut().zip(&t.data) {
+                            *x += *y;
                         }
-                        acc
                     }
-                });
+                }
             }
-            let mut agg = agg.expect("at least one D");
             if k_workers > 1 {
-                let names: Vec<String> = agg.iter().map(|t| t.name.clone()).collect();
-                for name in names {
-                    let mean: Vec<f32> = agg
-                        .get(&name)?
-                        .data
-                        .iter()
-                        .map(|x| x / k_workers as f32)
-                        .collect();
-                    agg.set_data(&name, mean)?;
+                for t in agg.iter_mut() {
+                    for x in t.data.iter_mut() {
+                        *x /= k_workers as f32;
+                    }
                 }
             }
             apply_step(

@@ -100,6 +100,9 @@ fn sync_worker(
     n: usize,
     ex: &SyncExchanges,
 ) -> Result<ReplicaOutcome> {
+    // Bind before preparing the runtime: the workspace slab pre-faults on
+    // this thread, so replica-local scratch stays replica-local.
+    let _bind = crate::runtime::workspace::bind_replica(replica);
     let pro = Prologue::new(cfg)?;
     let model = pro.manifest.model(&cfg.model)?;
     let rt = Runtime::new(&cfg.artifact_dir)?;

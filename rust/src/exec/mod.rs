@@ -523,6 +523,11 @@ impl Drop for GemmPool {
 }
 
 thread_local! {
+    /// One helper fleet PER CALLER THREAD, never shared: a replica thread's
+    /// kernel fan-out scratch stays on that thread, matching the
+    /// replica-local slab placement in `runtime::workspace` (see
+    /// `bind_replica`) — helpers touch only the caller's chunks, so no
+    /// cross-replica pool ever mixes two replicas' pages.
     static LOCAL_GEMM_POOL: std::cell::RefCell<Option<GemmPool>> =
         std::cell::RefCell::new(None);
 }

@@ -371,6 +371,11 @@ pub struct MemoryPlan {
     pub bufs: Vec<PlannedBuf>,
     /// Arena size in f32 values (max watermark of the placement).
     pub total: usize,
+    /// Replica whose thread owns the backing slab (first-touch locality):
+    /// stamped by `runtime::workspace::step_memory_plan` from the calling
+    /// thread's replica binding, `None` for unbound (single-replica) plans.
+    /// Checkouts against an owned plan must never migrate threads.
+    pub owner: Option<usize>,
 }
 
 impl MemoryPlan {
@@ -417,6 +422,7 @@ impl MemoryPlan {
         MemoryPlan {
             bufs: bufs.into_iter().map(|b| b.expect("every request placed")).collect(),
             total,
+            owner: None,
         }
     }
 

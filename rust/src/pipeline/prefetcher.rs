@@ -15,6 +15,11 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+// Locks come through the `util::sync` shim (PR-6 convention: the loom lane
+// swaps these for model-checked equivalents; bare `std::sync` locks are
+// rejected by `cargo xtask lint`).
+use crate::util::sync::Mutex;
+
 use super::source::StorageNode;
 use super::tuner::{CongestionTuner, TunerAction, TunerConfig};
 use crate::exec::{bounded, Receiver, Sender};
@@ -73,10 +78,10 @@ pub struct DataPipeline {
     /// Outstanding shrink requests; workers claim one unit cooperatively
     /// and exit.  Growth cancels unclaimed units before spawning.
     retire_budget: AtomicUsize,
-    tuner: Option<std::sync::Mutex<CongestionTuner>>,
+    tuner: Option<Mutex<CongestionTuner>>,
     /// Batch-extraction latency samples (seconds) — the Fig. 11 metric.
-    extract_latency: std::sync::Mutex<Sample>,
-    handles: std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>,
+    extract_latency: Mutex<Sample>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     tx_template: Sender<Batch>,
     /// Free-list of consumed batches: trainers `recycle()` here, workers
     /// refill the recycled buffers (capacity retained) instead of
@@ -111,9 +116,9 @@ impl DataPipeline {
             live_workers: Arc::new(AtomicUsize::new(0)),
             next_worker_id: AtomicUsize::new(0),
             retire_budget: AtomicUsize::new(0),
-            tuner: cfg.tuner.clone().map(|t| std::sync::Mutex::new(CongestionTuner::new(t))),
-            extract_latency: std::sync::Mutex::new(Sample::new()),
-            handles: std::sync::Mutex::new(Vec::new()),
+            tuner: cfg.tuner.clone().map(|t| Mutex::new(CongestionTuner::new(t))),
+            extract_latency: Mutex::new(Sample::new()),
+            handles: Mutex::new(Vec::new()),
             tx_template: tx,
             recycle_tx,
             recycle_rx,

@@ -7,8 +7,12 @@
 //! wall-clock behaviour of the tuner); the cluster simulator uses the same
 //! latency process in virtual time.
 
-use std::sync::Mutex;
 use std::time::Duration;
+
+// Locks come through the `util::sync` shim (PR-6 convention: the loom lane
+// swaps these for model-checked equivalents; bare `std::sync` locks are
+// rejected by `cargo xtask lint`).
+use crate::util::sync::Mutex;
 
 use super::latency::LatencySource;
 use crate::util::rng::Rng;

@@ -34,4 +34,7 @@ pub use step::{
     apply_step, run_inference, run_inference_into, run_step, run_step_grads,
     run_step_grads_into, run_step_into, StepOutputs,
 };
-pub use workspace::{arena_enabled, set_arena_mode, step_memory_plan, StepShape, Workspace, WsBuf};
+pub use workspace::{
+    arena_enabled, bind_replica, bound_replica, set_arena_mode, step_memory_plan, ReplicaBinding,
+    StepShape, Workspace, WsBuf,
+};

@@ -24,12 +24,21 @@
 //!   allocations by construction: the request sequence is a fixed function
 //!   of (model, batch), and a sequence that fit once fits forever.
 //!
+//! Placement is replica-local: trainer worker threads call
+//! [`bind_replica`] before preparing their runtime, so the slab is
+//! allocated AND pre-faulted (the zeroing write) by the thread that will
+//! use it — first-touch locality on NUMA systems.  The workspace records
+//! the owning replica and thread, and debug builds assert that checkouts
+//! never migrate off that thread; [`step_memory_plan`] stamps the binding
+//! into `MemoryPlan::owner` so the placement decision is auditable.
+//!
 //! The arena changes WHERE bytes live, never the arithmetic order: the
 //! `_into` kernels in `runtime::kernel` / `runtime::ref_conv` run the exact
 //! ascending-K chains of the allocating forms, so golden parity and
 //! `to_bits` thread-determinism hold unchanged (pinned in
 //! `tests/step_alloc.rs` alongside the counting-allocator gate).
 
+use std::cell::Cell;
 use std::ptr::NonNull;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -71,6 +80,47 @@ pub fn arena_enabled() -> bool {
     match ARENA_MODE.load(Ordering::SeqCst) {
         0 => env_arena(),
         n => n == 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replica binding (first-touch locality)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// The replica this thread works for, set by [`bind_replica`].  Plans
+    /// and workspaces built while bound are stamped with the replica id so
+    /// later checkouts can assert they never migrated off the owner.
+    static BOUND_REPLICA: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Bind the current thread to `replica` for the lifetime of the returned
+/// guard.  Trainer worker threads call this FIRST, before preparing their
+/// runtime: the workspace slab is then allocated and pre-faulted (the
+/// zeroing write in [`Workspace::ensure_capacity`]) on this thread, so on
+/// first-touch NUMA systems every page of replica-local scratch is resident
+/// next to the compute that reads it.  Recycled exchange buffers follow the
+/// same rule by construction — their storage is allocated by the consuming
+/// side's warmup and only swapped thereafter.  Nested bindings restore the
+/// previous value on drop.
+pub fn bind_replica(replica: usize) -> ReplicaBinding {
+    let prev = BOUND_REPLICA.with(|b| b.replace(Some(replica)));
+    ReplicaBinding { prev }
+}
+
+/// The replica the current thread is bound to, if any.
+pub fn bound_replica() -> Option<usize> {
+    BOUND_REPLICA.with(|b| b.get())
+}
+
+/// RAII guard of [`bind_replica`]; restores the previous binding on drop.
+pub struct ReplicaBinding {
+    prev: Option<usize>,
+}
+
+impl Drop for ReplicaBinding {
+    fn drop(&mut self) {
+        BOUND_REPLICA.with(|b| b.set(self.prev));
     }
 }
 
@@ -140,6 +190,12 @@ pub struct Workspace {
     /// allocates (the `tests/step_alloc.rs` counting-allocator pin runs
     /// with debug assertions on).  Empty in release builds.
     live: Vec<(usize, usize)>,
+    /// Replica whose thread faulted the slab in, stamped from the thread's
+    /// [`bind_replica`] binding at the pre-fault site (`ensure_capacity`).
+    owner: Option<usize>,
+    /// The faulting thread itself; debug builds assert checkouts stay on
+    /// it ("checkouts never migrate").
+    owner_thread: Option<std::thread::ThreadId>,
 }
 
 impl Default for Workspace {
@@ -161,6 +217,8 @@ impl Workspace {
             overflow_takes: 0,
             resets: 0,
             live: Vec::new(),
+            owner: None,
+            owner_thread: None,
         }
     }
 
@@ -176,6 +234,12 @@ impl Workspace {
         if self.slab.len() < n {
             self.slab = vec![0f32; n];
         }
+        // The calling thread is the one the zeroing write faulted pages on:
+        // record it (and its replica binding) as the slab's owner.  Calling
+        // `thread::current` here also initializes the thread handle, so the
+        // debug assert in `take` never allocates inside a counted region.
+        self.owner = bound_replica();
+        self.owner_thread = Some(std::thread::current().id());
         self.rebase();
         self.alloc.reset(self.slab.len());
         self.live.clear();
@@ -185,6 +249,11 @@ impl Workspace {
     /// absorb any overflow demand into the slab.  After a warmup in which
     /// every request sequence has been seen once, this never allocates.
     pub fn reset(&mut self) {
+        debug_assert!(
+            self.owner_thread.map_or(true, |t| t == std::thread::current().id()),
+            "workspace reset off the owning thread (replica {:?})",
+            self.owner
+        );
         self.outstanding = 0;
         self.in_use = 0;
         self.resets += 1;
@@ -205,6 +274,12 @@ impl Workspace {
     /// Check out `len` f32s of UNINITIALIZED (stale) content.  Use
     /// [`Workspace::take_zeroed`] when the kernel relies on zero-fill.
     pub fn take(&mut self, len: usize) -> WsBuf {
+        debug_assert!(
+            self.owner_thread.map_or(true, |t| t == std::thread::current().id()),
+            "workspace checkout off the owning thread (replica {:?}) — \
+             checkouts never migrate",
+            self.owner
+        );
         self.outstanding += 1;
         self.in_use += len;
         self.high_water = self.high_water.max(self.in_use);
@@ -289,6 +364,12 @@ impl Workspace {
 
     pub fn outstanding(&self) -> usize {
         self.outstanding
+    }
+
+    /// Replica bound on the thread that faulted the slab in (`None` when the
+    /// slab was built unbound, e.g. single-replica training).
+    pub fn owner(&self) -> Option<usize> {
+        self.owner
     }
 }
 
@@ -538,7 +619,12 @@ pub fn step_memory_plan(
             net_pass(&mut tr, net, batch, bf16, 0, None, false, "gen");
         }
     }
-    MemoryPlan::assign(tr.reqs)
+    let mut plan = MemoryPlan::assign(tr.reqs);
+    // Stamp the calling thread's replica binding: the backend that executes
+    // this plan pre-faults its slab on the same thread, so the owner here is
+    // the owner of the pages.
+    plan.owner = bound_replica();
+    plan
 }
 
 #[cfg(test)]
@@ -638,6 +724,32 @@ mod tests {
         let g = step_memory_plan(StepShape::GStep, &net, Some(&net), 4, 1, false);
         g.check_no_overlap().unwrap();
         assert!(g.total > 0);
+    }
+
+    #[test]
+    fn replica_binding_stamps_plans_and_workspaces() {
+        assert_eq!(bound_replica(), None);
+        {
+            let _b = bind_replica(3);
+            assert_eq!(bound_replica(), Some(3));
+            {
+                let _inner = bind_replica(7);
+                assert_eq!(bound_replica(), Some(7), "nested binding wins");
+            }
+            assert_eq!(bound_replica(), Some(3), "inner guard restores");
+            let net = tiny_conv_net();
+            let p = step_memory_plan(StepShape::Generate, &net, None, 2, 1, false);
+            assert_eq!(p.owner, Some(3), "plan records the bound replica");
+            let mut ws = Workspace::new();
+            ws.ensure_capacity(64);
+            assert_eq!(ws.owner(), Some(3), "slab owner stamped at pre-fault");
+            let a = ws.take(16);
+            ws.release(a);
+        }
+        assert_eq!(bound_replica(), None, "guard restores the unbound state");
+        let net = tiny_conv_net();
+        let p = step_memory_plan(StepShape::Generate, &net, None, 2, 1, false);
+        assert_eq!(p.owner, None, "unbound threads build unowned plans");
     }
 
     #[test]

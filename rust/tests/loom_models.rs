@@ -1,7 +1,10 @@
-//! loom model checks for the three concurrency disciplines behind the
-//! training path: the kernel pool's condvar handoff (`exec::GemmPool`), the
-//! sync mode's two-phase all-reduce barrier (`dist::InProcAllReduce`), and
-//! the async mode's bounded-staleness gate (`dist::staleness::Versioned`).
+//! loom model checks for the concurrency disciplines behind the training
+//! path: the kernel pool's condvar handoff (`exec::GemmPool`), the sync
+//! mode's two-phase all-reduce barrier (`dist::InProcAllReduce`), the async
+//! mode's bounded-staleness gate (`dist::staleness::Versioned`), and the
+//! PR-7 recycling exchanges (`coordinator::buffers::{ImgBuff,
+//! SnapshotCell}`: free-list conservation, close-unblocks, and the
+//! double-buffered publish that must never refill a reader-pinned `Arc`).
 //!
 //! Everything here runs ONLY under `RUSTFLAGS="--cfg loom"` (the CI loom
 //! lane, which `cargo add`s loom first — the offline vendor set does not
@@ -29,9 +32,11 @@ use std::sync::Arc;
 
 use loom::sync::atomic::{AtomicUsize, Ordering};
 
+use paragan::coordinator::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
 use paragan::dist::staleness::Versioned;
 use paragan::dist::{Exchange, InProcAllReduce, Topology};
 use paragan::exec::GemmPool;
+use paragan::runtime::HostTensor;
 
 /// Run `f` over every interleaving with a small preemption bound (loom's
 /// recommended way to keep condvar-heavy models tractable; bugs of the
@@ -187,5 +192,118 @@ fn staleness_bound_holds_under_every_interleaving() {
         assert_eq!(g.version(), s.applied);
         // The payload saw exactly one increment per APPLIED update.
         assert_eq!(g.read(|p, _| *p), s.applied);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ImgBuff / SnapshotCell: the PR-7 recycling exchanges
+// ---------------------------------------------------------------------------
+
+/// A one-element batch shell with an identity stamped in its pixel data.
+fn tagged(id: f32) -> TaggedBatch {
+    TaggedBatch {
+        images: HostTensor::new("fake", vec![1], vec![id]),
+        labels: None,
+        produced_at: 0,
+    }
+}
+
+#[test]
+fn img_buff_handoff_and_recycle_conserve_batches() {
+    model(|| {
+        let b = ImgBuff::new(1);
+        let b1 = b.clone();
+        // Producer: 2 rounds of take-recycled-or-create → push (cap 1
+        // forces real blocking between rounds).
+        let t = loom::thread::spawn(move || {
+            for r in 1..=2u64 {
+                let mut s = b1.take_recycled().unwrap_or_else(|| tagged(r as f32));
+                s.produced_at = r;
+                assert!(b1.push(s), "push refused while open");
+            }
+        });
+        // Consumer: 2 pops, each returned through the free-list.
+        for _ in 0..2 {
+            let got = b.pop_batch().expect("open buffer drained early");
+            b.recycle(got);
+        }
+        t.join().unwrap();
+        // Conservation in EVERY interleaving: everything pushed was popped,
+        // every accepted return is either re-handed-out or still parked.
+        let (pushed, popped) = b.stats();
+        assert_eq!((pushed, popped, b.len()), (2, 2, 0));
+        let (recycled, reused) = b.recycle_stats();
+        assert_eq!(recycled, 2);
+        assert_eq!(reused as usize + b.free_len(), 2, "free-list lost a shell");
+    });
+}
+
+#[test]
+fn img_buff_recycle_never_hands_out_twice() {
+    model(|| {
+        let b = ImgBuff::new(1);
+        b.recycle(tagged(7.0)); // seed the free-list with ONE shell
+        let b1 = b.clone();
+        let t = loom::thread::spawn(move || b1.take_recycled());
+        let got_main = b.take_recycled();
+        let got_thr = t.join().unwrap();
+        // Exactly one side wins the single shell, in every interleaving.
+        assert!(
+            got_main.is_some() != got_thr.is_some(),
+            "single recycled shell handed to {} owners",
+            got_main.is_some() as usize + got_thr.is_some() as usize
+        );
+        let (recycled, reused) = b.recycle_stats();
+        assert_eq!((recycled, reused, b.free_len()), (1, 1, 0));
+    });
+}
+
+#[test]
+fn img_buff_close_unblocks_producer_and_consumer() {
+    model(|| {
+        let b = ImgBuff::new(1);
+        assert!(b.push(tagged(1.0))); // fill to cap: the next push parks
+        let b1 = b.clone();
+        let prod = loom::thread::spawn(move || b1.push(tagged(2.0)));
+        let b2 = b.clone();
+        let cons = loom::thread::spawn(move || {
+            let mut n = 0u64;
+            while b2.pop_batch().is_some() {
+                n += 1;
+            }
+            n
+        });
+        b.close();
+        // No interleaving may hang: the parked producer unblocks (refused
+        // or squeezed in before the close), the consumer drains exactly
+        // what landed and then sees the close.
+        let second_landed = prod.join().unwrap();
+        let drained = cons.join().unwrap();
+        assert_eq!(drained, 1 + second_landed as u64);
+    });
+}
+
+#[test]
+fn snapshot_publish_with_never_refills_a_pinned_arc() {
+    model(|| {
+        let cell = SnapshotCell::new(0u64);
+        let c1 = cell.clone();
+        // Reader pins a snapshot while the publisher laps it twice; the
+        // double-buffer reuses retired storage via `Arc::get_mut`, so a
+        // pinned snapshot must force the fresh-allocation fallback rather
+        // than being refilled under the reader.
+        let t = loom::thread::spawn(move || {
+            let (v, s) = c1.latest();
+            let seen = *v;
+            (v, s, seen)
+        });
+        for step in 1..=2u64 {
+            cell.publish_with(step, |p| *p = step, || step);
+        }
+        let (v, s, seen) = t.join().unwrap();
+        assert_eq!(*v, seen, "pinned snapshot mutated under the reader");
+        assert_eq!(seen, s, "payload and step tag published non-atomically");
+        let (cur, cur_step) = cell.latest();
+        assert_eq!((*cur, cur_step), (2, 2));
     });
 }

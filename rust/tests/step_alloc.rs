@@ -8,7 +8,11 @@
 //! * fused `run_step_into` (d_step + g_step + generate), refmlp AND dcgan32;
 //! * the grad-split path (`run_step_grads_into` + `apply_step`);
 //! * the 2-replica sync path (grads → `all_reduce_mean_into` → apply on two
-//!   real threads).
+//!   real threads);
+//! * the async G/D exchange (recycling `ImgBuff` + double-buffered
+//!   `SnapshotCell`) on two real threads (PR-7);
+//! * the MD-GAN lane: bounded task/return queues + snapshot publish +
+//!   in-place gradient aggregation on two real threads (PR-7).
 //!
 //! Counting is process-global, so every measuring test serializes on one
 //! mutex; non-measuring tests (plan determinism) don't care.
@@ -16,9 +20,13 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::Barrier;
 
-use paragan::coordinator::trainer::upsert_z;
+use paragan::coordinator::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
+use paragan::coordinator::trainer::{d_step_inputs_into, upsert_z};
+use paragan::pipeline::Batch;
+// Locks through the shim (the repo-wide bare-sync lint convention).
+use paragan::util::sync::Mutex;
 use paragan::dist::{Exchange, InProcAllReduce, Topology};
 use paragan::layout::plan::{BufReq, MemoryPlan};
 use paragan::runtime::{
@@ -485,6 +493,412 @@ fn reduce_scratch(
     for (t, b) in grads.iter_mut().zip(scratch.iter()) {
         t.data.copy_from_slice(b);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Async / MD-GAN exchange lanes (PR-7): recycling buffers, zero-alloc
+// ---------------------------------------------------------------------------
+
+/// G and D on two REAL threads around the recycling exchanges, replica-bound
+/// and in lockstep (one produced batch, one D update, one snapshot publish
+/// per round; a barrier closes each round, so the snapshot reader provably
+/// releases its `Arc` before the publisher laps it).  After a 2-round warmup
+/// the whole G<->D hand-off — fake batch out through `ImgBuff`, storage
+/// recycled back through the free-list, D snapshot refilled in place — must
+/// allocate NOTHING on either thread.
+#[test]
+fn async_exchange_path_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
+    let (dir, _) = fixture("dcgan32", 4, "async");
+    let buff = ImgBuff::new(2);
+    // Initial snapshot with D's layout, like the trainer's published init.
+    let cell = {
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("dcgan32").unwrap();
+        let mut rng = Rng::new(0xD1A5);
+        SnapshotCell::new(ParamStore::init(&model.params_d, &mut rng))
+    };
+    let warm = Barrier::new(3);
+    let start = Barrier::new(3);
+    let done = Barrier::new(3);
+    let round = Barrier::new(2);
+
+    std::thread::scope(|s| {
+        // ---- G side (replica 0) ----
+        {
+            let dir = dir.clone();
+            let (buff, cell) = (buff.clone(), cell.clone());
+            let (warm, start, done, round) = (&warm, &start, &done, &round);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(0);
+                let m = Manifest::load(&dir).unwrap();
+                let model = m.model("dcgan32").unwrap();
+                let rt = Runtime::new(&dir).unwrap();
+                let g_spec = model.artifact("g_step_adam_fp32").unwrap().clone();
+                let mut rng = Rng::new(0x6A11);
+                let mut g_params = ParamStore::init(&model.params_g, &mut rng);
+                let mut g_slots = ParamStore::init_slots(
+                    &model.params_g,
+                    &g_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut g_in = BTreeMap::new();
+                let mut g_outs = StepOutputs::new();
+                let mut one_round = |r: u64,
+                                     g_params: &mut ParamStore,
+                                     g_slots: &mut Vec<ParamStore>,
+                                     g_in: &mut BTreeMap<String, HostTensor>,
+                                     g_outs: &mut StepOutputs| {
+                    // Use the CURRENT published D state; drop it before the
+                    // publisher retires it (the recycling contract).
+                    let (d_snap, _) = cell.latest();
+                    upsert_z(g_in, &mut rng, model.batch, model.z_dim);
+                    run_step_into(
+                        &rt, &g_spec, r as f32, 2e-4, g_params, g_slots, Some(&d_snap), g_in,
+                        g_outs,
+                    )
+                    .unwrap();
+                    drop(d_snap);
+                    // Ship the fakes in a shell recycled from D's returns.
+                    let mut b = buff.take_recycled().unwrap_or_else(TaggedBatch::empty);
+                    b.refill_from(g_outs.get_mut("fake").unwrap(), g_in.get("y"), r);
+                    assert!(buff.push(b));
+                    round.wait();
+                };
+                for r in 1..=2u64 {
+                    one_round(r, &mut g_params, &mut g_slots, &mut g_in, &mut g_outs);
+                }
+                warm.wait();
+                start.wait();
+                for r in 3..=5u64 {
+                    one_round(r, &mut g_params, &mut g_slots, &mut g_in, &mut g_outs);
+                }
+                done.wait();
+                assert!(g_params.all_finite());
+            });
+        }
+        // ---- D side (replica 1) ----
+        {
+            let dir = dir.clone();
+            let (buff, cell) = (buff.clone(), cell.clone());
+            let (warm, start, done, round) = (&warm, &start, &done, &round);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(1);
+                let m = Manifest::load(&dir).unwrap();
+                let model = m.model("dcgan32").unwrap();
+                let rt = Runtime::new(&dir).unwrap();
+                let d_spec = model.artifact("d_step_adam_fp32").unwrap().clone();
+                let mut rng = Rng::new(0xD1A5);
+                let mut d_params = ParamStore::init(&model.params_d, &mut rng);
+                let mut d_slots = ParamStore::init_slots(
+                    &model.params_d,
+                    &d_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut shard_rng = Rng::replica_stream(7, 1);
+                let numel: usize =
+                    model.batch * model.img_shape.iter().product::<usize>();
+                let mut real = Batch {
+                    data: vec![0f32; numel],
+                    labels: vec![0u32; model.batch],
+                    batch_size: model.batch,
+                };
+                let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+                let mut d_outs = StepOutputs::new();
+                let mut one_round = |r: u64,
+                                     d_params: &mut ParamStore,
+                                     d_slots: &mut Vec<ParamStore>,
+                                     d_in: &mut BTreeMap<String, HostTensor>,
+                                     d_outs: &mut StepOutputs| {
+                    let fake = buff.pop_batch().unwrap();
+                    shard_rng.fill_gaussian(&mut real.data, 0.0, 0.5);
+                    d_step_inputs_into(d_in, &real, &model.img_shape, model.n_classes, &fake)
+                        .unwrap();
+                    run_step_into(
+                        &rt, &d_spec, r as f32, 2e-4, d_params, d_slots, None, d_in, d_outs,
+                    )
+                    .unwrap();
+                    // Publish by refilling the retired snapshot in place.
+                    cell.publish_with(
+                        r,
+                        |ps| ps.copy_values_from(d_params).unwrap(),
+                        || d_params.snapshot(),
+                    );
+                    // Consumed: hand the storage back to the G side.
+                    buff.recycle(fake);
+                    round.wait();
+                };
+                for r in 1..=2u64 {
+                    one_round(r, &mut d_params, &mut d_slots, &mut d_in, &mut d_outs);
+                }
+                warm.wait();
+                start.wait();
+                for r in 3..=5u64 {
+                    one_round(r, &mut d_params, &mut d_slots, &mut d_in, &mut d_outs);
+                }
+                done.wait();
+                assert!(d_params.all_finite());
+            });
+        }
+        warm.wait();
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        start.wait();
+        done.wait();
+        COUNTING.store(false, Ordering::SeqCst);
+    });
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "async exchange steady state allocated {allocs} times");
+}
+
+/// The MD-GAN lane on two REAL threads: G computes per-D gradients against
+/// the latest D snapshot, ships fakes through a bounded task queue, takes
+/// retired shells back through the return queue, aggregates in place and
+/// applies; the D worker updates and publishes by refilling the retired
+/// snapshot.  Steady state (after a 2-round warmup) allocates nothing.
+#[test]
+fn mdgan_lane_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
+    let (dir, _) = fixture("dcgan32", 4, "mdgan");
+    let (task_tx, task_rx) = paragan::exec::bounded::<TaggedBatch>(2);
+    let (ret_tx, ret_rx) = paragan::exec::bounded::<TaggedBatch>(4);
+    let cell = {
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("dcgan32").unwrap();
+        let mut rng = Rng::new(0xD1B5);
+        SnapshotCell::new(ParamStore::init(&model.params_d, &mut rng))
+    };
+    let warm = Barrier::new(3);
+    let start = Barrier::new(3);
+    let done = Barrier::new(3);
+    let round = Barrier::new(2);
+
+    std::thread::scope(|s| {
+        // ---- G side (replica 0) ----
+        {
+            let dir = dir.clone();
+            let cell = cell.clone();
+            let (task_tx, ret_rx) = (task_tx, ret_rx);
+            let (warm, start, done, round) = (&warm, &start, &done, &round);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(0);
+                let m = Manifest::load(&dir).unwrap();
+                let model = m.model("dcgan32").unwrap();
+                let rt = Runtime::new(&dir).unwrap();
+                let g_spec = model.artifact("g_step_adam_fp32").unwrap().clone();
+                let mut rng = Rng::new(0x6B22);
+                let mut g_params = ParamStore::init(&model.params_g, &mut rng);
+                let mut g_slots = ParamStore::init_slots(
+                    &model.params_g,
+                    &g_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut g_in = BTreeMap::new();
+                let mut g_outs = StepOutputs::new();
+                let mut grads = ParamStore::new();
+                let mut agg = ParamStore::new();
+                let mut one_round = |r: u64,
+                                     g_params: &mut ParamStore,
+                                     g_slots: &mut Vec<ParamStore>,
+                                     g_in: &mut BTreeMap<String, HostTensor>,
+                                     g_outs: &mut StepOutputs,
+                                     grads: &mut ParamStore,
+                                     agg: &mut ParamStore| {
+                    let (d_snap, _) = cell.latest();
+                    upsert_z(g_in, &mut rng, model.batch, model.z_dim);
+                    run_step_grads_into(
+                        &rt, &g_spec, g_params, g_slots, Some(&d_snap), g_in, grads, g_outs,
+                    )
+                    .unwrap();
+                    drop(d_snap);
+                    // Fake hand-off: retired shell from the return queue,
+                    // refilled by storage swap, shipped to the D worker.
+                    let mut fake =
+                        ret_rx.try_recv().unwrap_or_else(|_| TaggedBatch::empty());
+                    fake.refill_from(g_outs.get_mut("fake").unwrap(), g_in.get("y"), r);
+                    task_tx.send(fake).unwrap();
+                    // k=1 aggregation: fixed-order copy into the persistent
+                    // accumulator, then the in-place apply.
+                    agg.copy_values_from(grads).unwrap();
+                    apply_step(&rt, &g_spec, r as f32, 2e-4, g_params, g_slots, agg).unwrap();
+                    round.wait();
+                };
+                for r in 1..=2u64 {
+                    one_round(
+                        r, &mut g_params, &mut g_slots, &mut g_in, &mut g_outs, &mut grads,
+                        &mut agg,
+                    );
+                }
+                warm.wait();
+                start.wait();
+                for r in 3..=5u64 {
+                    one_round(
+                        r, &mut g_params, &mut g_slots, &mut g_in, &mut g_outs, &mut grads,
+                        &mut agg,
+                    );
+                }
+                done.wait();
+                task_tx.close();
+                assert!(g_params.all_finite());
+            });
+        }
+        // ---- D worker (replica 1) ----
+        {
+            let dir = dir.clone();
+            let cell = cell.clone();
+            let (task_rx, ret_tx) = (task_rx, ret_tx);
+            let (warm, start, done, round) = (&warm, &start, &done, &round);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(1);
+                let m = Manifest::load(&dir).unwrap();
+                let model = m.model("dcgan32").unwrap();
+                let rt = Runtime::new(&dir).unwrap();
+                let d_spec = model.artifact("d_step_adam_fp32").unwrap().clone();
+                let mut rng = Rng::new(0xD1B5);
+                let mut d_params = ParamStore::init(&model.params_d, &mut rng);
+                let mut d_slots = ParamStore::init_slots(
+                    &model.params_d,
+                    &d_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut shard_rng = Rng::replica_stream(8, 1);
+                let numel: usize =
+                    model.batch * model.img_shape.iter().product::<usize>();
+                let mut real = Batch {
+                    data: vec![0f32; numel],
+                    labels: vec![0u32; model.batch],
+                    batch_size: model.batch,
+                };
+                let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
+                let mut d_outs = StepOutputs::new();
+                let mut one_round = |r: u64,
+                                     d_params: &mut ParamStore,
+                                     d_slots: &mut Vec<ParamStore>,
+                                     d_in: &mut BTreeMap<String, HostTensor>,
+                                     d_outs: &mut StepOutputs| {
+                    let fake = task_rx.recv().unwrap();
+                    shard_rng.fill_gaussian(&mut real.data, 0.0, 0.5);
+                    d_step_inputs_into(d_in, &real, &model.img_shape, model.n_classes, &fake)
+                        .unwrap();
+                    run_step_into(
+                        &rt, &d_spec, r as f32, 2e-4, d_params, d_slots, None, d_in, d_outs,
+                    )
+                    .unwrap();
+                    cell.publish_with(
+                        r,
+                        |ps| ps.copy_values_from(d_params).unwrap(),
+                        || d_params.snapshot(),
+                    );
+                    // Never blocks: the retired shell rides back for reuse.
+                    let _ = ret_tx.try_send(fake);
+                    round.wait();
+                };
+                for r in 1..=2u64 {
+                    one_round(r, &mut d_params, &mut d_slots, &mut d_in, &mut d_outs);
+                }
+                warm.wait();
+                start.wait();
+                for r in 3..=5u64 {
+                    one_round(r, &mut d_params, &mut d_slots, &mut d_in, &mut d_outs);
+                }
+                done.wait();
+                assert!(d_params.all_finite());
+            });
+        }
+        warm.wait();
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        start.wait();
+        done.wait();
+        COUNTING.store(false, Ordering::SeqCst);
+    });
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "MD-GAN lane steady state allocated {allocs} times");
+}
+
+/// Free-list conservation, property-tested over random op sequences: the
+/// recycling exchange never loses a buffer, never hands one to two owners,
+/// and its counters stay consistent (`pushed == popped + len`,
+/// `recycled == reused + free_len`) after every operation.
+#[test]
+fn prop_recycle_free_list_conserves_buffers() {
+    use paragan::testkit::{forall_cases, gens};
+    forall_cases(gens::vec(gens::u64_below(4), 0..60), 48, |ops| {
+        let b = ImgBuff::new(4); // free-list capacity = 6: drops reachable
+        let mut next_id = 0u64;
+        let mut producer: Vec<TaggedBatch> = Vec::new();
+        let mut consumer: Vec<TaggedBatch> = Vec::new();
+        let mut created = 0u64;
+        let mut recycle_attempts = 0u64;
+        for &op in ops {
+            match op {
+                // Producer acquires a shell: recycled, else freshly created
+                // with a unique id stamped in its pixel data.
+                0 => {
+                    let shell = b.take_recycled().unwrap_or_else(|| {
+                        created += 1;
+                        next_id += 1;
+                        TaggedBatch {
+                            images: HostTensor::new("fake", vec![1], vec![next_id as f32]),
+                            labels: None,
+                            produced_at: 0,
+                        }
+                    });
+                    producer.push(shell);
+                }
+                // Producer ships a shell (guarded: push at cap would block).
+                1 => {
+                    if b.len() < 4 {
+                        if let Some(s) = producer.pop() {
+                            if !b.push(s) {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                // Consumer pops.
+                2 => {
+                    if let Some((got, _)) = b.try_pop(0) {
+                        consumer.push(got);
+                    }
+                }
+                // Consumer recycles (the exchange may drop when overfull).
+                _ => {
+                    if let Some(c) = consumer.pop() {
+                        recycle_attempts += 1;
+                        b.recycle(c);
+                    }
+                }
+            }
+            let (pushed, popped) = b.stats();
+            let (recycled, reused) = b.recycle_stats();
+            if pushed != popped + b.len() as u64 {
+                return false;
+            }
+            if recycled != reused + b.free_len() as u64 {
+                return false;
+            }
+        }
+        // Drain the exchange and account for every buffer ever created:
+        // none lost, none duplicated (drops are the only sanctioned exits).
+        while let Some((got, _)) = b.try_pop(0) {
+            consumer.push(got);
+        }
+        while let Some(s) = b.take_recycled() {
+            producer.push(s);
+        }
+        let (recycled, _) = b.recycle_stats();
+        let dropped = recycle_attempts - recycled;
+        let mut ids: Vec<u64> = producer
+            .iter()
+            .chain(consumer.iter())
+            .map(|t| t.images.data[0] as u64)
+            .collect();
+        let n = ids.len() as u64;
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len() as u64 == n && n == created - dropped
+    });
 }
 
 // ---------------------------------------------------------------------------

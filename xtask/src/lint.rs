@@ -29,6 +29,14 @@
 //!   the fixed-order `combine` helpers (or forward to
 //!   `self.all_reduce_mean`): the deterministic combine order is the PR-4
 //!   convention that makes sync training bit-reproducible.
+//! * **bare-sync** — `std::sync::Mutex` / `Condvar` / `MutexGuard` may be
+//!   named only in `util/sync.rs` (the loom shim).  Everywhere else,
+//!   lock/condvar primitives come through `crate::util::sync` so the loom
+//!   lane (`--cfg loom`) can model-check every handoff — the PR-6 binding
+//!   convention.  `std::sync::{Arc, Barrier, mpsc, atomic}` have no loom
+//!   substitution requirement here and stay allowed.  Unlike the
+//!   path-scoped rules above, this one also runs over the test/bench/
+//!   example/xtask trees (see `lint_tree_rules`).
 //!
 //! Suppressions beyond the inline escapes live in `xtask/lint_allow.txt`
 //! (`<rule> <file-suffix>` per line) so every exception is reviewable in
@@ -51,6 +59,10 @@ const PURITY_FILES: [&str; 4] =
     ["runtime/kernel.rs", "runtime/ref_conv.rs", "runtime/workspace.rs", "layout/plan.rs"];
 const PURITY_TOKENS: [&str; 4] =
     ["Instant::now", "SystemTime::now", "thread::spawn", "thread::sleep"];
+/// The one module allowed to name `std::sync` lock primitives: the shim
+/// that swaps them for loom's under `--cfg loom`.
+const SYNC_HOME: &str = "util/sync.rs";
+const BARE_SYNC_TYPES: [&str; 3] = ["Mutex", "Condvar", "MutexGuard"];
 /// How many comment/attribute/blank lines above an `unsafe` the SAFETY
 /// comment may start.
 const SAFETY_LOOKBACK: usize = 10;
@@ -355,6 +367,25 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
         }
     }
 
+    // --- bare-sync ---------------------------------------------------------
+    if !rel.ends_with(SYNC_HOME) {
+        for (i, code) in codes.iter().enumerate() {
+            if !code.contains("std::sync::") {
+                continue;
+            }
+            for ty in BARE_SYNC_TYPES {
+                if word(code, ty) {
+                    flag(&mut v, i, "bare-sync", format!(
+                        "bare `std::sync::{ty}` outside {SYNC_HOME} — lock/condvar \
+                         primitives go through the `util::sync` shim so the loom \
+                         lane can model-check them (PR-6 convention)"
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+
     v
 }
 
@@ -414,6 +445,18 @@ pub fn lint_tree(root: &Path, allow: &[(String, String)]) -> io::Result<Vec<Viol
         }));
     }
     Ok(out)
+}
+
+/// Like [`lint_tree`], but keeping only violations of the named rules.
+/// Used for the test/bench/example/xtask trees, where only the
+/// cross-cutting convention rules (today: bare-sync) apply — the hot-path
+/// and unsafe discipline is `rust/src`-scoped.
+pub fn lint_tree_rules(
+    root: &Path,
+    allow: &[(String, String)],
+    rules: &[&str],
+) -> io::Result<Vec<Violation>> {
+    Ok(lint_tree(root, allow)?.into_iter().filter(|v| rules.contains(&v.rule)).collect())
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
@@ -508,6 +551,33 @@ mod tests {
     }
 
     #[test]
+    fn bare_sync_primitives_must_come_from_the_shim() {
+        let bad = "use std::sync::Mutex;\n";
+        assert_eq!(rules_of("a.rs", bad), vec!["bare-sync"]);
+        let braced = "use std::sync::{Arc, Condvar, Mutex};\n";
+        assert_eq!(rules_of("a.rs", braced), vec!["bare-sync"]);
+        let qualified = "static S: std::sync::Mutex<u32> = std::sync::Mutex::new(0);\n";
+        assert_eq!(rules_of("a.rs", qualified), vec!["bare-sync"]);
+        // Arc / Barrier / mpsc / atomics carry no loom-shim requirement.
+        let fine = "use std::sync::{mpsc, Arc, Barrier};\nuse std::sync::atomic::AtomicUsize;\n";
+        assert!(rules_of("a.rs", fine).is_empty());
+        // The shim itself is the sanctioned home; anywhere else is not.
+        let home = "pub use std::sync::{Condvar, Mutex, MutexGuard};\n";
+        assert!(rules_of("util/sync.rs", home).is_empty());
+        assert_eq!(rules_of("exec/mod.rs", home), vec!["bare-sync"]);
+        // Shim-routed locks are exactly what the rule wants to see.
+        let shim = "use crate::util::sync::{Condvar, Mutex};\n";
+        assert!(rules_of("a.rs", shim).is_empty());
+        // Mentions in comments are not code.
+        let comment = "fn f() {} // std::sync::Mutex would be wrong here\n";
+        assert!(rules_of("a.rs", comment).is_empty());
+        // Word boundary: `MutexGuard`-like identifiers do not leak into a
+        // `Mutex` match (each type is matched as its own word).
+        let ident = "fn f(g: &std::sync::mpsc::Sender<MutexLike>) {}\n";
+        assert!(rules_of("a.rs", ident).is_empty());
+    }
+
+    #[test]
     fn allowlist_parses_and_filters() {
         let allow = parse_allowlist("# comment\n\nhot-alloc runtime/legacy.rs\n");
         assert_eq!(allow, vec![("hot-alloc".to_string(), "runtime/legacy.rs".to_string())]);
@@ -525,10 +595,19 @@ mod tests {
     /// same thing.
     #[test]
     fn paragan_source_tree_is_clean() {
-        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("rust/src");
+        let ws = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
         let allow_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint_allow.txt");
         let allow = parse_allowlist(&fs::read_to_string(allow_path).unwrap_or_default());
-        let viols = lint_tree(&root, &allow).unwrap();
+        let mut viols = lint_tree(&ws.join("rust/src"), &allow).unwrap();
+        // The cross-cutting bare-sync rule covers the whole workspace: a
+        // test or bench taking a bare `std::sync::Mutex` would silently
+        // fall out of the loom lane's coverage.
+        for tree in ["rust/tests", "rust/benches", "rust/examples", "xtask/src"] {
+            let root = ws.join(tree);
+            if root.is_dir() {
+                viols.extend(lint_tree_rules(&root, &allow, &["bare-sync"]).unwrap());
+            }
+        }
         assert!(
             viols.is_empty(),
             "paragan-lint violations:\n{}",

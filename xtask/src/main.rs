@@ -2,8 +2,10 @@
 //! .cargo/config.toml).
 //!
 //! Commands:
-//! * `cargo xtask lint [root]` — run the paragan-lint conventions pass over
-//!   `rust/src` (or an explicit root).  Exit 1 with `file:line` diagnostics
+//! * `cargo xtask lint [root]` — run the paragan-lint conventions pass:
+//!   the full rule set over `rust/src` (or an explicit root), plus the
+//!   cross-cutting `bare-sync` rule over the test/bench/example/xtask
+//!   trees (default invocation only).  Exit 1 with `file:line` diagnostics
 //!   on any violation; see `src/lint.rs` for the rule set and
 //!   `lint_allow.txt` for the (reviewable) suppression list.
 
@@ -27,7 +29,21 @@ fn run_lint(root_arg: Option<&str>) -> ExitCode {
     let allow = std::fs::read_to_string(&allow_path)
         .map(|t| lint::parse_allowlist(&t))
         .unwrap_or_default();
-    match lint::lint_tree(&root, &allow) {
+    let result = lint::lint_tree(&root, &allow).and_then(|mut viols| {
+        // Default invocation also sweeps the workspace's other source trees
+        // with the cross-cutting bare-sync rule (tests and benches must use
+        // the `util::sync` shim too, or they fall out of loom coverage).
+        if root_arg.is_none() {
+            for tree in ["rust/tests", "rust/benches", "rust/examples", "xtask/src"] {
+                let t = ws.join(tree);
+                if t.is_dir() {
+                    viols.extend(lint::lint_tree_rules(&t, &allow, &["bare-sync"])?);
+                }
+            }
+        }
+        Ok(viols)
+    });
+    match result {
         Ok(viols) if viols.is_empty() => {
             println!("paragan-lint: clean ({})", root.display());
             ExitCode::SUCCESS
