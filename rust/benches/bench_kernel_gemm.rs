@@ -1,16 +1,19 @@
-//! Kernel-layer bench: naive triple-loop GEMM vs the planned, packed,
-//! parallel `runtime::kernel::Gemm` engine at the dcgan32 im2col shapes,
-//! plus real dcgan32 train-step throughput in three kernel modes (naive /
-//! planned threads=1 / planned all-cores).  Writes `BENCH_kernels.json` —
-//! the seed of the perf trajectory — and exits non-zero if the planned
-//! engine is slower than the naive baseline over the dcgan32 shape set
-//! (the CI gate).
+//! Kernel-layer bench: naive triple-loop GEMM vs the planned engine's two
+//! lanes (exact and SIMD/FMA fast) at the dcgan32 im2col shapes, plus real
+//! dcgan32 train-step throughput in four kernel modes (naive / exact
+//! threads=1 / exact all-cores / simd all-cores).  Writes
+//! `BENCH_kernels.json` (schema v2: per-shape naive vs exact vs simd) — the
+//! perf trajectory record — and exits non-zero if (a) the exact lane loses
+//! to the naive loops, or (b) the fast lane misses its recorded multiple
+//! over the exact lane on a SIMD-capable host (the CI gates).
 //!
-//! `--test` runs a smoke-sized version of the same protocol.
+//! `--test` runs a smoke-sized version of the same protocol (the fast-lane
+//! gate relaxes to "not slower" there; the 1.5x target applies to full runs).
 
 use paragan::bench::{bench, BenchConfig, Reporter};
 use paragan::coordinator::{train_sync, TrainConfig};
 use paragan::layout::cost::LayerShape;
+use paragan::layout::plan::KernelLane;
 use paragan::runtime::kernel::{self, Gemm, KernelConfig};
 use paragan::runtime::refgen::{
     arch_layer_shapes, dcgan32_d_net, dcgan32_g_net, DCGAN32_Z_DIM, REF_BATCH,
@@ -18,6 +21,10 @@ use paragan::runtime::refgen::{
 use paragan::util::json::{arr, num, obj, s as js, write_json, Json};
 use paragan::util::rng::Rng;
 use paragan::util::table::Table;
+
+/// The fast lane's recorded target multiple over the exact lane on the
+/// dcgan32 GEMM shapes (full runs, SIMD-capable hosts).
+const FAST_TARGET: f64 = 1.5;
 
 /// dcgan32's matmul shapes — the shapes the acceptance gate runs at:
 /// `(name, m, k, n, ta)` with `ta` marking the transposed-A orientation.
@@ -63,11 +70,12 @@ fn train_steps_per_sec(steps: u64, seed: u64) -> f64 {
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
     let mut rep = Reporter::new(if smoke {
-        "Kernel GEMM — naive vs planned (smoke)"
+        "Kernel GEMM — naive vs exact vs simd (smoke)"
     } else {
-        "Kernel GEMM — naive vs planned"
+        "Kernel GEMM — naive vs exact vs simd"
     });
     let threads = KernelConfig::current().threads;
+    let simd_available = kernel::simd_available();
     let bench_cfg = if smoke {
         BenchConfig {
             warmup_iters: 1,
@@ -79,13 +87,13 @@ fn main() {
         BenchConfig { min_iters: 10, max_iters: 200, ..Default::default() }
     };
 
-    // --- GEMM micro-bench over the dcgan32 shapes ---
+    // --- GEMM micro-bench over the dcgan32 shapes, all three engines ---
     let mut t = Table::new(
-        "dcgan32 GEMM shapes: naive vs planned engine",
-        &["shape", "m", "k", "n", "naive", "planned", "speedup"],
+        "dcgan32 GEMM shapes: naive vs exact lane vs simd lane",
+        &["shape", "m", "k", "n", "naive", "exact", "simd", "ex/naive", "simd/ex"],
     );
     let mut gemm_rows: Vec<Json> = Vec::new();
-    let (mut naive_total_ns, mut planned_total_ns) = (0.0f64, 0.0f64);
+    let (mut naive_total_ns, mut exact_total_ns, mut simd_total_ns) = (0.0f64, 0.0f64, 0.0f64);
     let mut rng = Rng::new(0xBE7C);
     for (name, m, k, n, ta) in dcgan32_gemm_shapes(REF_BATCH) {
         let mut a = vec![0f32; m * k];
@@ -95,19 +103,34 @@ fn main() {
         let rn = bench(&format!("naive {name}"), &bench_cfg, || {
             let _ = kernel::naive::gemm(m, k, n, &a, ta, &b, false);
         });
-        let g = Gemm::plan_with(KernelConfig::with_threads(threads), m, k, n);
-        let rp = bench(&format!("planned {name}"), &bench_cfg, || {
-            let _ = g.run(&a, ta, &b, false);
+        let ge = Gemm::plan_with(KernelConfig::with_threads(threads), m, k, n);
+        let re = bench(&format!("exact {name}"), &bench_cfg, || {
+            let _ = ge.run(&a, ta, &b, false);
         });
-        let speedup = rn.mean_ns / rp.mean_ns;
+        // On a non-SIMD host the Simd request degrades to the exact lane
+        // (resolve_lane), so this column then re-measures the exact engine;
+        // the JSON records `simd_available` so readers can tell.
+        let gs = Gemm::plan_with(
+            KernelConfig::with_threads_lane(threads, KernelLane::Simd),
+            m,
+            k,
+            n,
+        );
+        let rs = bench(&format!("simd {name}"), &bench_cfg, || {
+            let _ = gs.run(&a, ta, &b, false);
+        });
+        let exact_speedup = rn.mean_ns / re.mean_ns;
+        let fast_vs_exact = re.mean_ns / rs.mean_ns;
         t.row(vec![
             name.clone(),
             m.to_string(),
             k.to_string(),
             n.to_string(),
             format!("{:.1} us", rn.mean_ns / 1e3),
-            format!("{:.1} us", rp.mean_ns / 1e3),
-            format!("{speedup:.2}x"),
+            format!("{:.1} us", re.mean_ns / 1e3),
+            format!("{:.1} us", rs.mean_ns / 1e3),
+            format!("{exact_speedup:.2}x"),
+            format!("{fast_vs_exact:.2}x"),
         ]);
         gemm_rows.push(obj(vec![
             ("name", js(&name)),
@@ -116,19 +139,24 @@ fn main() {
             ("n", num(n as f64)),
             ("ta", js(if ta { "true" } else { "false" })),
             ("naive_ns", num(rn.mean_ns)),
-            ("planned_ns", num(rp.mean_ns)),
-            ("speedup", num(speedup)),
+            ("exact_ns", num(re.mean_ns)),
+            ("simd_ns", num(rs.mean_ns)),
+            ("exact_speedup", num(exact_speedup)),
+            ("fast_vs_exact", num(fast_vs_exact)),
         ]));
         naive_total_ns += rn.mean_ns;
-        planned_total_ns += rp.mean_ns;
+        exact_total_ns += re.mean_ns;
+        simd_total_ns += rs.mean_ns;
     }
     rep.table(t);
-    let gemm_speedup = naive_total_ns / planned_total_ns.max(1.0);
+    let gemm_speedup = naive_total_ns / exact_total_ns.max(1.0);
+    let fast_speedup = exact_total_ns / simd_total_ns.max(1.0);
     rep.note(format!(
-        "gemm aggregate speedup over dcgan32 shapes: {gemm_speedup:.2}x ({threads} threads)"
+        "exact lane {gemm_speedup:.2}x over naive; fast lane {fast_speedup:.2}x over exact \
+         (target {FAST_TARGET:.1}x, simd_available={simd_available}, {threads} threads)"
     ));
 
-    // --- dcgan32 train-step throughput: naive vs planned t=1 vs planned ---
+    // --- dcgan32 train-step throughput across kernel modes ---
     let steps = if smoke { 6 } else { 40 };
     kernel::set_naive_mode(true);
     let naive_sps = train_steps_per_sec(steps, 41);
@@ -136,38 +164,50 @@ fn main() {
     kernel::set_threads(Some(1));
     let t1_sps = train_steps_per_sec(steps, 42);
     kernel::set_threads(None);
-    let planned_sps = train_steps_per_sec(steps, 43);
-    let train_speedup = planned_sps / naive_sps;
+    let exact_sps = train_steps_per_sec(steps, 43);
+    kernel::set_precision_mode(Some(KernelLane::Simd));
+    let simd_sps = train_steps_per_sec(steps, 44);
+    kernel::set_precision_mode(None);
+    let train_speedup = exact_sps / naive_sps;
     let t1_speedup = t1_sps / naive_sps;
+    let train_fast_speedup = simd_sps / exact_sps;
     let mut t = Table::new(
         "dcgan32 train-step throughput (sync, ref backend)",
         &["kernel mode", "steps/s", "vs naive"],
     );
     t.row(vec!["naive loops".into(), format!("{naive_sps:.2}"), "1.00x".into()]);
     t.row(vec![
-        "planned, threads=1".into(),
+        "exact, threads=1".into(),
         format!("{t1_sps:.2}"),
         format!("{t1_speedup:.2}x"),
     ]);
     t.row(vec![
-        format!("planned, threads={threads}"),
-        format!("{planned_sps:.2}"),
+        format!("exact, threads={threads}"),
+        format!("{exact_sps:.2}"),
         format!("{train_speedup:.2}x"),
+    ]);
+    t.row(vec![
+        format!("simd, threads={threads}"),
+        format!("{simd_sps:.2}"),
+        format!("{:.2}x", simd_sps / naive_sps),
     ]);
     rep.table(t);
     rep.note(format!(
-        "train-step speedup {train_speedup:.2}x (threads={threads}); threads=1 {t1_speedup:.2}x"
+        "train-step: exact {train_speedup:.2}x vs naive; simd lane {train_fast_speedup:.2}x vs exact"
     ));
 
-    // --- BENCH_kernels.json ---
+    // --- BENCH_kernels.json (schema v2: per-shape naive/exact/simd) ---
     let json = obj(vec![
         ("format", js("paragan-bench-kernels")),
-        ("version", num(1.0)),
+        ("version", num(2.0)),
         ("smoke", js(if smoke { "true" } else { "false" })),
         ("threads", num(threads as f64)),
         ("batch", num(REF_BATCH as f64)),
+        ("simd_available", js(if simd_available { "true" } else { "false" })),
+        ("fast_target", num(FAST_TARGET)),
         ("gemm", arr(gemm_rows)),
         ("gemm_total_speedup", num(gemm_speedup)),
+        ("gemm_fast_vs_exact", num(fast_speedup)),
         (
             "train",
             obj(vec![
@@ -175,9 +215,11 @@ fn main() {
                 ("steps", num(steps as f64)),
                 ("naive_steps_per_sec", num(naive_sps)),
                 ("planned_t1_steps_per_sec", num(t1_sps)),
-                ("planned_steps_per_sec", num(planned_sps)),
+                ("exact_steps_per_sec", num(exact_sps)),
+                ("simd_steps_per_sec", num(simd_sps)),
                 ("t1_speedup", num(t1_speedup)),
                 ("speedup", num(train_speedup)),
+                ("fast_speedup", num(train_fast_speedup)),
             ]),
         ),
     ]);
@@ -188,15 +230,33 @@ fn main() {
     rep.note("wrote BENCH_kernels.json");
     rep.finish();
 
-    // CI gate: the planned engine must not lose to the naive loops over
+    // CI gate 1: the exact engine must not lose to the naive loops over
     // the dcgan32 shape set.
-    if planned_total_ns > naive_total_ns {
+    if exact_total_ns > naive_total_ns {
         eprintln!(
-            "FAIL: planned GEMM slower than naive over dcgan32 shapes \
+            "FAIL: exact-lane GEMM slower than naive over dcgan32 shapes \
              ({:.1} us vs {:.1} us)",
-            planned_total_ns / 1e3,
+            exact_total_ns / 1e3,
             naive_total_ns / 1e3
         );
         std::process::exit(1);
+    }
+    // CI gate 2: on a SIMD-capable host, the fast lane must beat the exact
+    // lane — by the recorded FAST_TARGET multiple on full runs, and at
+    // least not lose on smoke runs (timings there are too short to hold a
+    // multiple steady).  Non-SIMD hosts skip (the simd column degraded to
+    // a second exact measurement).
+    if simd_available {
+        let floor = if smoke { 1.0 } else { FAST_TARGET };
+        if fast_speedup < floor {
+            eprintln!(
+                "FAIL: fast lane {fast_speedup:.2}x over exact, below the \
+                 {floor:.1}x gate over dcgan32 shapes \
+                 ({:.1} us vs {:.1} us)",
+                simd_total_ns / 1e3,
+                exact_total_ns / 1e3
+            );
+            std::process::exit(1);
+        }
     }
 }

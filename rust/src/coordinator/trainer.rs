@@ -46,6 +46,14 @@ pub struct TrainConfig {
     /// Replication knobs (mode, all-reduce topology, staleness bound,
     /// MD-GAN swap period) — active when `replicas > 1`.
     pub dist: crate::dist::DistConfig,
+    /// Kernel precision mode for the run.  `None` keeps the process
+    /// default (`PARAGAN_KERNEL=simd` env, else the exact lane);
+    /// `Some(lane)` pins it for this process.  `KernelLane::Simd`
+    /// degrades to the exact lane (with a one-time log) when the host
+    /// lacks AVX2+FMA/NEON or `PARAGAN_SIMD=off` is set.  Distinct
+    /// from `OptimizationPolicy::precision`, which names the *numeric
+    /// format* ("fp32"/"bf16"); this knob picks the *kernel lane*.
+    pub precision_mode: Option<crate::layout::plan::KernelLane>,
 }
 
 impl Default for TrainConfig {
@@ -67,6 +75,7 @@ impl Default for TrainConfig {
             threads: None,
             replicas: 1,
             dist: crate::dist::DistConfig::default(),
+            precision_mode: None,
         }
     }
 }
@@ -406,9 +415,12 @@ pub struct Prologue {
 impl Prologue {
     pub fn new(cfg: &TrainConfig) -> Result<Prologue> {
         // Both trainers come through here, so this is the one spot where
-        // the run's thread budget reaches the kernel engine.
+        // the run's thread budget and kernel lane reach the engine.
         if cfg.threads.is_some() {
             crate::runtime::kernel::set_threads(cfg.threads);
+        }
+        if cfg.precision_mode.is_some() {
+            crate::runtime::kernel::set_precision_mode(cfg.precision_mode);
         }
         let manifest = Manifest::load(&cfg.artifact_dir)?;
         {

@@ -95,6 +95,13 @@ impl Estimator {
         self.cfg.threads = Some(n);
         self
     }
+    /// Pin the kernel precision mode for this run (default:
+    /// `PARAGAN_KERNEL=simd` env, else the exact lane).  `Simd` degrades
+    /// to exact — with a one-time log — on hosts without AVX2+FMA/NEON.
+    pub fn precision_mode(mut self, lane: crate::layout::plan::KernelLane) -> Self {
+        self.cfg.precision_mode = Some(lane);
+        self
+    }
     pub fn log_every(mut self, n: u64) -> Self {
         self.cfg.log_every = n;
         self
@@ -173,10 +180,12 @@ mod tests {
             .seed(7)
             .scheme(UpdateScheme::Async)
             .policy(OptimizationPolicy::symmetric("adam"))
-            .img_buff_cap(4);
+            .img_buff_cap(4)
+            .precision_mode(crate::layout::plan::KernelLane::Simd);
         assert_eq!(e.config().model, "sngan32");
         assert_eq!(e.config().steps, 10);
         assert_eq!(e.config().img_buff_cap, 4);
         assert_eq!(e.scheme, UpdateScheme::Async);
+        assert_eq!(e.config().precision_mode, Some(crate::layout::plan::KernelLane::Simd));
     }
 }

@@ -17,7 +17,7 @@
 //! Both estimates run through the SAME `MatmulPlan` code — the deltas are
 //! produced by the planner, not scripted.
 
-use super::plan::{Accelerator, MatmulPlan};
+use super::plan::{host_peak_flops, Accelerator, KernelLane, MatmulPlan};
 
 /// One layer of a model, described as its im2col matmul per sample.
 #[derive(Debug, Clone)]
@@ -115,6 +115,64 @@ pub fn model_mxu_utilization(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-lane host GEMM cost model — one cost model, many targets
+// ---------------------------------------------------------------------------
+
+/// Sustained host stream bandwidth assumed for packing traffic (bytes/sec).
+/// Deliberately conservative (~20 GB/s, one DDR4/DDR5 channel's worth of
+/// sustained copy) — like [`super::plan::host_peak_flops`] this is a
+/// *relative* model for lane/shape comparisons, not a measured number.
+pub const HOST_STREAM_BYTES_PER_SEC: f64 = 2.0e10;
+
+/// Cost-model verdict for one GEMM on one host kernel lane.
+#[derive(Debug, Clone, Copy)]
+pub struct HostLaneEstimate {
+    pub lane: KernelLane,
+    /// FLOPs the lane actually executes, including its tile padding
+    /// (wider `nr` pads small-n shapes harder on the SIMD lane).
+    pub padded_flops: f64,
+    /// That lane's [`host_peak_flops`] ceiling.
+    pub peak_flops: f64,
+    /// Bytes touched packing A + B panels and writing C once.
+    pub pack_bytes: f64,
+    /// Modeled wall time: compute at lane peak + packing at stream bandwidth.
+    pub est_ns: f64,
+}
+
+/// Model one GEMM on a host lane.  Builds on [`MatmulPlan::for_host_lane`]
+/// (so padding follows that lane's [`super::plan::CpuTileRule`] exactly) and
+/// [`host_peak_flops`] (so the FLOP ceiling matches the lane's issue width).
+/// The roofline-style sum — compute at peak plus packing traffic at stream
+/// bandwidth — is what lets the planner see that doubling peak FLOPs does
+/// NOT halve the cost of a shape whose padded work also doubles.
+pub fn host_gemm_estimate(lane: KernelLane, m: usize, k: usize, n: usize) -> HostLaneEstimate {
+    let p = MatmulPlan::for_host_lane(lane, m, k, n);
+    let padded = p.padded_flops();
+    let peak = host_peak_flops(lane);
+    // Packed A panels (mp*kp) + packed B panels (kp*np) + one C write (mp*np),
+    // all f32 — the same volume `runtime::workspace` actually reserves.
+    let pack_bytes = ((p.mp * p.kp + p.kp * p.np + p.mp * p.np) * p.elem_bytes) as f64;
+    let est_ns = padded / peak * 1e9 + pack_bytes / HOST_STREAM_BYTES_PER_SEC * 1e9;
+    HostLaneEstimate { lane, padded_flops: padded, peak_flops: peak, pack_bytes, est_ns }
+}
+
+/// The lane the cost model would pick for this shape: argmin of
+/// [`host_gemm_estimate`] across both lanes, ties to the exact lane (it is
+/// the default and the parity oracle).  This is a *model* verdict — runtime
+/// lane selection additionally requires the fast lane to be requested
+/// (`PARAGAN_KERNEL=simd` / `TrainConfig::precision_mode`) and usable
+/// (`runtime::kernel::simd_available`, `PARAGAN_SIMD=off` escape hatch).
+pub fn preferred_host_lane(m: usize, k: usize, n: usize) -> KernelLane {
+    let exact = host_gemm_estimate(KernelLane::Exact, m, k, n);
+    let simd = host_gemm_estimate(KernelLane::Simd, m, k, n);
+    if simd.est_ns < exact.est_ns {
+        KernelLane::Simd
+    } else {
+        KernelLane::Exact
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,5 +260,52 @@ mod tests {
         let r1 = model_mxu_utilization(&layers, 16, Accelerator::TpuV3, 2, true);
         let r2 = model_mxu_utilization(&layers, 32, Accelerator::TpuV3, 2, true);
         assert!((r2.real_flops / r1.real_flops - 2.0).abs() < 1e-9);
+    }
+
+    /// The cost model prefers the SIMD lane on the big dcgan32 conv GEMM
+    /// (m = B*OH*OW = 64*16*16, k = 3*4*4, n = 64): n is already a multiple
+    /// of both lanes' `nr`, so padded work is identical, peak doubles, and
+    /// packing traffic is the same — the fast lane strictly wins.  These
+    /// verdicts are core-count independent (the unknown core count scales
+    /// both lanes' peaks equally).
+    #[test]
+    fn cost_model_prefers_simd_lane_on_dcgan32_conv_shapes() {
+        let (m, k, n) = (64 * 16 * 16, 3 * 4 * 4, 64);
+        assert_eq!(preferred_host_lane(m, k, n), KernelLane::Simd);
+        let e = host_gemm_estimate(KernelLane::Exact, m, k, n);
+        let s = host_gemm_estimate(KernelLane::Simd, m, k, n);
+        assert!(s.est_ns > 0.0 && e.est_ns > 0.0);
+        assert!((s.padded_flops - e.padded_flops).abs() < 1e-6, "n=64 pads neither lane");
+        assert!(s.est_ns < e.est_ns, "simd {} exact {}", s.est_ns, e.est_ns);
+    }
+
+    /// Tiny-n shapes (the FID head projects to n = 1) go the other way: the
+    /// SIMD lane's wider `nr` doubles the padded work, cancelling its doubled
+    /// peak, while its wider packed-B panels cost MORE packing traffic — so
+    /// the model keeps the exact lane.  One cost model, two verdicts.
+    #[test]
+    fn cost_model_keeps_exact_lane_for_tiny_n_shapes() {
+        assert_eq!(preferred_host_lane(4, 17, 1), KernelLane::Exact);
+        let e = host_gemm_estimate(KernelLane::Exact, 4, 17, 1);
+        let s = host_gemm_estimate(KernelLane::Simd, 4, 17, 1);
+        assert!(s.pack_bytes > e.pack_bytes, "wider nr packs more: {} vs {}", s.pack_bytes, e.pack_bytes);
+        assert!(e.est_ns <= s.est_ns, "exact {} simd {}", e.est_ns, s.est_ns);
+    }
+
+    /// Estimates stay positive and finite across a shape sweep, and the
+    /// lane peaks pin to the documented 2x issue-width ratio.
+    #[test]
+    fn prop_host_lane_estimates_positive_and_peak_ratio_pinned() {
+        forall_cases(gens::usize_in(1..200), 64, |&s| {
+            let (m, k, n) = (s, (s % 31) + 1, (s % 17) + 1);
+            let e = host_gemm_estimate(KernelLane::Exact, m, k, n);
+            let f = host_gemm_estimate(KernelLane::Simd, m, k, n);
+            e.est_ns.is_finite()
+                && e.est_ns > 0.0
+                && f.est_ns.is_finite()
+                && f.est_ns > 0.0
+                && (f.peak_flops / e.peak_flops - 2.0).abs() < 1e-12
+                && f.padded_flops >= e.padded_flops
+        });
     }
 }

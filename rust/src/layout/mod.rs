@@ -15,5 +15,5 @@ pub mod cost;
 pub mod plan;
 
 pub use batching::{plan_opportunistic_batches, BatchOpportunity};
-pub use cost::{model_mxu_utilization, LayerShape, UtilizationReport};
-pub use plan::{Accelerator, MatmulPlan, TileRule};
+pub use cost::{host_gemm_estimate, model_mxu_utilization, preferred_host_lane, HostLaneEstimate, LayerShape, UtilizationReport};
+pub use plan::{Accelerator, KernelLane, MatmulPlan, TileRule};

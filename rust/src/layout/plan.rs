@@ -35,9 +35,78 @@ pub enum Accelerator {
 pub const CPU_MR: usize = 4;
 pub const CPU_NR: usize = 8;
 
+/// The host GEMM engine's execution lanes.  `Exact` is the default and the
+/// parity oracle: scalar separate-mul-add, single ascending-K chain, bit
+/// identical to `kernel::naive` (the PR-3 contract).  `Simd` is the opt-in
+/// FMA fast lane (`PARAGAN_KERNEL=simd` / `TrainConfig::precision_mode`):
+/// fused multiply-add over wider register tiles with a fixed multi-chain K
+/// split — deterministic for a given lane and thread count, but NOT
+/// bit-equal to the oracle; it ships a documented relative-error bound
+/// instead (`runtime::kernel::fast_lane_abs_tol`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelLane {
+    Exact,
+    Simd,
+}
+
+impl KernelLane {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelLane::Exact => "exact",
+            KernelLane::Simd => "simd",
+        }
+    }
+}
+
+/// Fast-lane micro-tile.  The A-panel height is deliberately the SAME as
+/// the exact lane's (`CPU_MR`) so packed A buffers and the im2col direct
+/// packers are lane-invariant; only the B-panel width and the K-chain
+/// depth differ per lane.
+pub const CPU_SIMD_MR: usize = CPU_MR;
+
+/// Fast-lane B-panel width: two f32 vectors per accumulator row (AVX2:
+/// 2 x 8 lanes = 16; NEON: 2 x 4 = 8), twice the exact lane's single
+/// autovectorized vector — the "wider nr" the FMA kernel's extra
+/// throughput needs to stay fed.
+#[cfg(target_arch = "aarch64")]
+pub const CPU_SIMD_NR: usize = 8;
+#[cfg(not(target_arch = "aarch64"))]
+pub const CPU_SIMD_NR: usize = 16;
+
+/// Fast-lane K-chain depth: each output element accumulates through this
+/// many independent fused-multiply-add chains (chain `u` takes the K terms
+/// with `kk % CPU_SIMD_KU == u`), combined in ascending chain order at the
+/// end.  A FIXED split: the summation tree depends only on the lane and K,
+/// never on the thread count or tile traversal — the fast lane stays
+/// deterministic (`runtime::kernel` pins it).
+pub const CPU_SIMD_KU: usize = 2;
+
+/// f32 lanes per vector register the fast lane assumes after feature
+/// detection (AVX2 ymm: 8, NEON: 4) — the issue-width input to
+/// [`host_peak_flops`].
+#[cfg(target_arch = "aarch64")]
+pub const CPU_SIMD_LANES: usize = 4;
+#[cfg(not(target_arch = "aarch64"))]
+pub const CPU_SIMD_LANES: usize = 8;
+
+/// Widest B-panel any lane packs to — workspace memory plans size packed-B
+/// scratch with this so one plan covers every lane the process may select.
+pub const CPU_NR_ANY: usize = if CPU_NR > CPU_SIMD_NR { CPU_NR } else { CPU_SIMD_NR };
+
+// The lane-invariant contracts the packers rely on, checked at compile
+// time: shared A-panel height, covering B width.
+const _: () = assert!(CPU_SIMD_MR == CPU_MR, "lanes must share the A-panel height");
+const _: () = assert!(CPU_NR_ANY >= CPU_NR && CPU_NR_ANY >= CPU_SIMD_NR);
+const _: () = assert!(CPU_SIMD_KU >= 1);
+
 /// Cache share the packed B block may occupy while A panels stream past it
 /// — the CPU analog of the VMEM budget above (a conservative L2 slice).
 pub const CPU_CACHE_BUDGET_BYTES: usize = 192 * 1024;
+
+/// Cache share of the packed A row block a worker holds against one
+/// resident B block (the `mc_rows` row-blocking budget — a conservative
+/// L2 slice alongside [`CPU_CACHE_BUDGET_BYTES`]).
+pub const CPU_A_BLOCK_BUDGET_BYTES: usize = 96 * 1024;
 
 /// The HostCpu tiling decision for one (M,K)x(K,N) GEMM — the CPU
 /// counterpart of [`MatmulPlan`], except these tiles are not a cost model:
@@ -51,24 +120,50 @@ pub const CPU_CACHE_BUDGET_BYTES: usize = 192 * 1024;
 ///   changing the constants (which re-specializes the kernel), not the rule;
 /// * `nc_cols` — B columns kept cache-resident per pass (multiple of `nr`),
 ///   sized so the packed block fits [`CPU_CACHE_BUDGET_BYTES`];
-/// * K is never split: bit-exact parity with the naive oracle requires each
+/// * `mc_rows` — A rows (multiple of `mr`) a worker streams against one
+///   resident B block before moving to the next row block, sized so the
+///   packed A block fits [`CPU_A_BLOCK_BUDGET_BYTES`] (shape-aware: small-m
+///   GEMMs such as batch-tail and FID-projection shapes keep full height);
+/// * `lane` / `k_chains` — which micro-kernel runs and how many independent
+///   K accumulation chains it uses (`Exact` ⇒ 1).  For the exact lane K is
+///   never split: bit-exact parity with the naive oracle requires each
 ///   output element to accumulate k ascending in one chain, so the K stream
 ///   stays register-resident per micro-tile (the CPU analog of streaming
-///   the full K through the systolic array).
+///   the full K through the systolic array).  The fast lane splits K into
+///   [`CPU_SIMD_KU`] fixed chains — deterministic, but not oracle-bit-equal.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CpuTileRule {
     pub mr: usize,
     pub nr: usize,
     pub nc_cols: usize,
+    pub mc_rows: usize,
+    pub k_chains: usize,
+    pub lane: KernelLane,
 }
 
 impl CpuTileRule {
-    pub fn for_shape(_m: usize, k: usize, n: usize) -> CpuTileRule {
-        let np = round_up(n.max(1), CPU_NR);
+    /// Exact-lane tiles (the default engine configuration).
+    pub fn for_shape(m: usize, k: usize, n: usize) -> CpuTileRule {
+        Self::for_shape_lane(KernelLane::Exact, m, k, n)
+    }
+
+    /// Per-lane tiling decision — the ONLY place lane micro-tile shapes,
+    /// K-chain depth and cache blocking are chosen; kernels assert against
+    /// this rule and never decide blocking themselves.
+    pub fn for_shape_lane(lane: KernelLane, m: usize, k: usize, n: usize) -> CpuTileRule {
+        let (mr, nr, k_chains) = match lane {
+            KernelLane::Exact => (CPU_MR, CPU_NR, 1),
+            KernelLane::Simd => (CPU_SIMD_MR, CPU_SIMD_NR, CPU_SIMD_KU),
+        };
+        let np = round_up(n.max(1), nr);
         // B block bytes = nc_cols * k * 4; keep it under the cache budget.
         let fit = if k == 0 { np } else { CPU_CACHE_BUDGET_BYTES / (4 * k) };
-        let nc_cols = (fit / CPU_NR * CPU_NR).clamp(CPU_NR, np);
-        CpuTileRule { mr: CPU_MR, nr: CPU_NR, nc_cols }
+        let nc_cols = (fit / nr * nr).clamp(nr, np);
+        // A row block bytes = mc_rows * k * 4; full height when it fits.
+        let mp = round_up(m.max(1), mr);
+        let afit = if k == 0 { mp } else { CPU_A_BLOCK_BUDGET_BYTES / (4 * k) };
+        let mc_rows = (afit / mr * mr).clamp(mr, mp);
+        CpuTileRule { mr, nr, nc_cols, mc_rows, k_chains, lane }
     }
 
     /// Worker threads worth spawning for this GEMM: never more than the
@@ -111,16 +206,44 @@ impl Accelerator {
     /// Peak matmul throughput in FLOP/s (dense, mixed precision).
     /// TPU v3: 123 TFLOP/s bf16 per chip => 61.5 per core ("worker").
     /// V100: 125 TFLOP/s fp16 tensor core. A100: 312 TFLOP/s.
+    /// HostCpu: derived from the exact lane's issue width — see
+    /// [`host_peak_flops`] for the per-lane derivation.
     pub fn peak_flops(&self) -> f64 {
         match self {
             Accelerator::TpuV3 => 61.5e12,
             Accelerator::V100 => 125.0e12 / 8.0 * 8.0, // per-GPU
             Accelerator::A100 => 312.0e12,
-            // Ballpark multi-core f32 SIMD throughput — the ref backend's
-            // GEMM engine, not a tensor unit.
-            Accelerator::HostCpu => 1.0e11,
+            Accelerator::HostCpu => host_peak_flops(KernelLane::Exact),
         }
     }
+}
+
+/// Nominal host clock for the cost model.  Plan code is lint-banned from
+/// timing calls (kernel purity), so the model uses a fixed documented
+/// frequency; absolute numbers are ballpark, RATIOS between lanes are
+/// structural (the clock and core count cancel) and are what the planner
+/// and the regression tests rely on.
+const HOST_CLOCK_HZ: f64 = 3.0e9;
+
+/// Per-lane host peak in FLOP/s, derived from issue width instead of the
+/// former fictional `1.0e11` constant:
+///
+/// * `Exact` — the scalar-semantics kernel autovectorizes to one vector
+///   multiply + one vector add per cycle (two issue ports, no FMA):
+///   `2 * CPU_SIMD_LANES` FLOP/cycle/core.
+/// * `Simd` — two fused-multiply-add issues per cycle, each counting
+///   2 FLOPs per lane: `2 * 2 * CPU_SIMD_LANES` FLOP/cycle/core.
+///
+/// The Simd:Exact ratio is therefore exactly 2.0 on every arch — pinned by
+/// a regression test so the cost model can never silently drift back to a
+/// fictional machine.
+pub fn host_peak_flops(lane: KernelLane) -> f64 {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64;
+    let flops_per_cycle = match lane {
+        KernelLane::Exact => (2 * CPU_SIMD_LANES) as f64,
+        KernelLane::Simd => (2 * 2 * CPU_SIMD_LANES) as f64,
+    };
+    HOST_CLOCK_HZ * flops_per_cycle * cores
 }
 
 pub fn round_up(n: usize, m: usize) -> usize {
@@ -219,6 +342,31 @@ impl MatmulPlan {
     pub fn hbm_bytes(&self) -> f64 {
         (self.mp * self.kp + self.kp * self.np) as f64 * self.elem_bytes as f64
             + (self.mp * self.np) as f64 * 4.0
+    }
+
+    /// Plan one GEMM for a host lane: padding follows that lane's
+    /// [`CpuTileRule`] (m to `mr`, n to `nr`; K is never padded on the host
+    /// — packed panels are exactly k deep), blocks follow `mc_rows` /
+    /// `nc_cols`, so `mxu_occupancy`/`padded_flops` report the padding the
+    /// engine actually executes per lane.  `layout::cost` builds its
+    /// per-lane estimates on top of this.
+    pub fn for_host_lane(lane: KernelLane, m: usize, k: usize, n: usize) -> MatmulPlan {
+        let r = CpuTileRule::for_shape_lane(lane, m, k, n);
+        let mp = round_up(m.max(1), r.mr);
+        let kp = k.max(1);
+        let np = round_up(n.max(1), r.nr);
+        MatmulPlan {
+            m,
+            k,
+            n,
+            mp,
+            kp,
+            np,
+            bm: r.mc_rows.min(mp),
+            bk: kp,
+            bn: r.nc_cols.min(np),
+            elem_bytes: 4,
+        }
     }
 }
 
@@ -558,6 +706,78 @@ mod tests {
                 && r.effective_threads(0, m, k, n) >= 1
                 && r.effective_threads(8, 4, 4, 4) == 1 // tiny matmul: no spawn
         });
+    }
+
+    #[test]
+    fn prop_simd_lane_tiles_widen_nr_and_deepen_k_chain() {
+        forall(gens::vec(gens::usize_in(1..5000), 3..4), |dims| {
+            let (m, k, n) = (dims[0], dims[1], dims[2]);
+            let e = CpuTileRule::for_shape_lane(KernelLane::Exact, m, k, n);
+            let s = CpuTileRule::for_shape_lane(KernelLane::Simd, m, k, n);
+            e == CpuTileRule::for_shape(m, k, n)
+                && e.lane == KernelLane::Exact
+                && e.k_chains == 1
+                && s.lane == KernelLane::Simd
+                && (s.mr, s.nr, s.k_chains) == (CPU_SIMD_MR, CPU_SIMD_NR, CPU_SIMD_KU)
+                && s.mr == e.mr // shared A-panel layout across lanes
+                && s.nr >= e.nr
+                && s.nr <= CPU_NR_ANY
+                && s.nc_cols % s.nr == 0
+                && s.mc_rows % s.mr == 0
+                && s.mc_rows >= s.mr
+                && (s.mc_rows * k * 4 <= CPU_A_BLOCK_BUDGET_BYTES
+                    || s.mc_rows == s.mr
+                    || s.mc_rows >= round_up(m, s.mr))
+        });
+    }
+
+    #[test]
+    fn row_blocking_is_shape_aware_at_dcgan32_shapes() {
+        // dcgan32 D conv0 im2col GEMM at batch 64: m = 64*16*16, k = 3*4*4.
+        let big = CpuTileRule::for_shape(64 * 16 * 16, 48, 64);
+        assert_eq!(big.mc_rows, CPU_A_BLOCK_BUDGET_BYTES / (4 * 48) / CPU_MR * CPU_MR);
+        assert!(big.mc_rows < 64 * 16 * 16, "huge-m A blocks are capped");
+        // Batch-tail shape (m = 8): the whole A block fits — full height.
+        let tail = CpuTileRule::for_shape(8, 48, 64);
+        assert_eq!(tail.mc_rows, round_up(8, CPU_MR), "small m keeps full-height panels");
+        // FID-projection shape: small m but deep K — block capped by budget.
+        let fid = CpuTileRule::for_shape(64, 3 * 32 * 32, 2048);
+        assert_eq!(fid.mc_rows, CPU_A_BLOCK_BUDGET_BYTES / (4 * 3072) / CPU_MR * CPU_MR);
+        assert!(fid.mc_rows >= CPU_MR && fid.mc_rows < 64);
+        // The m argument is no longer ignored: same k/n, different m.
+        assert_ne!(
+            CpuTileRule::for_shape(8, 48, 64).mc_rows,
+            CpuTileRule::for_shape(64 * 16 * 16, 48, 64).mc_rows
+        );
+    }
+
+    #[test]
+    fn host_peak_flops_lane_ratio_pinned() {
+        let exact = host_peak_flops(KernelLane::Exact);
+        let simd = host_peak_flops(KernelLane::Simd);
+        assert!(exact > 0.0 && exact.is_finite());
+        // FMA doubles the per-issue FLOPs — structural, arch-independent.
+        assert_eq!(simd / exact, 2.0, "lane peak ratio drifted");
+        // HostCpu's Accelerator peak is the exact (default) lane, no longer
+        // the fictional 1.0e11 placeholder.
+        assert_eq!(Accelerator::HostCpu.peak_flops(), exact);
+    }
+
+    #[test]
+    fn host_lane_plan_reports_lane_padding() {
+        for lane in [KernelLane::Exact, KernelLane::Simd] {
+            let r = CpuTileRule::for_shape_lane(lane, 100, 50, 100);
+            let p = MatmulPlan::for_host_lane(lane, 100, 50, 100);
+            assert_eq!(p.kp, 50, "host K is never padded");
+            assert_eq!(p.mp % r.mr, 0);
+            assert_eq!(p.np % r.nr, 0);
+            assert!(p.mxu_occupancy() > 0.0 && p.mxu_occupancy() <= 1.0);
+        }
+        // A 1-column GEMM pads to the lane width: the wide lane wastes more.
+        let e = MatmulPlan::for_host_lane(KernelLane::Exact, 64, 64, 1);
+        let s = MatmulPlan::for_host_lane(KernelLane::Simd, 64, 64, 1);
+        assert!(s.padded_flops() >= e.padded_flops());
+        assert!(s.mxu_occupancy() <= e.mxu_occupancy());
     }
 
     fn req(name: &str, len: usize, start: usize, end: usize) -> BufReq {

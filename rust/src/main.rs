@@ -48,6 +48,7 @@ fn print_usage() {
          \x20                  [--g-opt OPT] [--d-opt OPT] [--precision fp32|bf16] [--d-ratio N]\n\
          \x20                  [--eval-every N] [--checkpoint-dir DIR] [--artifacts DIR] [--seed N]\n\
          \x20                  [--threads N   GEMM engine workers; default PARAGAN_THREADS or all cores]\n\
+         \x20                  [--precision-mode exact|simd  kernel lane; default PARAGAN_KERNEL or exact]\n\
          \x20                  [--replicas N  real multi-replica training (crate::dist)]\n\
          \x20                  [--dist-mode sync|async|mdgan] [--dist-topology tree|ring]\n\
          \x20                  [--staleness-bound N] [--swap-every N]\n\
@@ -116,6 +117,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         let n: usize = t.parse().context("--threads expects a positive integer")?;
         anyhow::ensure!(n >= 1, "--threads expects a positive integer, got 0");
         est = est.threads(n);
+    }
+    if let Some(mode) = args.get("precision-mode") {
+        est = est.precision_mode(match mode.as_str() {
+            "exact" => paragan::layout::plan::KernelLane::Exact,
+            "simd" => paragan::layout::plan::KernelLane::Simd,
+            other => bail!("unknown precision mode '{other}' (expected exact|simd)"),
+        });
     }
     if let Some(dir) = args.get("checkpoint-dir") {
         est = est.checkpoint(dir, args.get_u64("checkpoint-every", 100));

@@ -16,13 +16,29 @@
 //! (`Accelerator::HostCpu`), and the tiles it chooses are the tiles this
 //! engine runs.
 //!
-//! **Bit-exactness contract.**  Each output element accumulates its K terms
-//! in ascending order through a single f32 chain with separate mul + add
-//! rounding (no FMA, no split accumulators).  That is exactly the naive
-//! triple-loop order, so the engine is bit-identical to the retained
-//! [`naive`] oracle — and therefore to the pinned `ref.py` goldens — at any
-//! thread count and any tile shape.  Property tests below assert equality
-//! with `to_bits`, not a tolerance.
+//! **Bit-exactness contract (exact lane).**  Each output element
+//! accumulates its K terms in ascending order through a single f32 chain
+//! with separate mul + add rounding (no FMA, no split accumulators).  That
+//! is exactly the naive triple-loop order, so the engine is bit-identical
+//! to the retained [`naive`] oracle — and therefore to the pinned `ref.py`
+//! goldens — at any thread count and any tile shape.  Property tests below
+//! assert equality with `to_bits`, not a tolerance.
+//!
+//! **The SIMD/FMA fast lane (opt-in).**  `PARAGAN_KERNEL=simd`, or
+//! [`set_precision_mode`]`(Some(KernelLane::Simd))` via
+//! `TrainConfig::precision_mode`, swaps in a fused-multiply-add micro
+//! kernel on the wider per-lane tiles `layout::plan` chooses
+//! (`CpuTileRule::for_shape_lane`): two vector registers of B columns per
+//! accumulator row and [`CPU_SIMD_KU`] independent K chains to hide FMA
+//! latency.  Engaged only when runtime feature detection finds AVX2+FMA
+//! (NEON fuses natively on aarch64); otherwise the request degrades to the
+//! exact lane with a one-time stderr note, and `PARAGAN_SIMD=off` is the
+//! always-wins escape hatch.  The fast lane is NOT `to_bits`-equal to the
+//! oracle — it trades the single ascending chain for fused rounding and a
+//! fixed chain split — but it is **deterministic** (the summation schedule
+//! depends only on the lane and K, never on threads or tile traversal) and
+//! ships a documented error bound, [`fast_lane_abs_tol`], enforced by a
+//! property sweep.
 //!
 //! Threading is configured once per process ([`KernelConfig`]): default
 //! `std::thread::available_parallelism`, overridable by `PARAGAN_THREADS`
@@ -34,7 +50,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 use crate::exec::parallel_chunks_mut;
-use crate::layout::plan::{CpuTileRule, CPU_MR, CPU_NR};
+use crate::layout::plan::{CpuTileRule, KernelLane, CPU_MR, CPU_NR, CPU_SIMD_KU, CPU_SIMD_MR, CPU_SIMD_NR};
 
 // ---------------------------------------------------------------------------
 // Process-wide configuration
@@ -47,6 +63,11 @@ static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 /// restores the engine even when the env var is exported (the bench flips
 /// modes within one process).
 static NAIVE_MODE: AtomicUsize = AtomicUsize::new(0);
+/// Lane override: 0 = unset (follow `PARAGAN_KERNEL=simd`), 1 = forced
+/// exact, 2 = simd requested.  Same tri-state shape as [`NAIVE_MODE`] so
+/// `set_precision_mode(Some(Exact))` truly restores the default even when
+/// the env var is exported.
+static LANE_MODE: AtomicUsize = AtomicUsize::new(0);
 
 fn auto_threads() -> usize {
     static AUTO: OnceLock<usize> = OnceLock::new();
@@ -69,6 +90,73 @@ fn env_naive() -> bool {
     })
 }
 
+fn env_lane_simd() -> bool {
+    static SIMD: OnceLock<bool> = OnceLock::new();
+    *SIMD.get_or_init(|| {
+        std::env::var("PARAGAN_KERNEL").map(|v| v.trim() == "simd").unwrap_or(false)
+    })
+}
+
+/// `PARAGAN_SIMD=off` (also `0` / `false`): the escape hatch that forces
+/// the exact lane no matter what requested it — wins over the env request,
+/// the config override, and feature detection.
+fn env_simd_off() -> bool {
+    static OFF: OnceLock<bool> = OnceLock::new();
+    *OFF.get_or_init(|| {
+        std::env::var("PARAGAN_SIMD")
+            .map(|v| matches!(v.trim(), "off" | "0" | "false"))
+            .unwrap_or(false)
+    })
+}
+
+/// Does this host expose the vector features the fast lane's micro-kernel
+/// is compiled for?  Checked once per process via runtime detection.
+pub fn simd_available() -> bool {
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // FMA (fmla) is part of the aarch64 NEON baseline.
+            true
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            false
+        }
+    })
+}
+
+fn note_simd_fallback_once(reason: &str) {
+    static WARNED: OnceLock<()> = OnceLock::new();
+    WARNED.get_or_init(|| {
+        eprintln!("paragan: SIMD fast lane requested but {reason}; using the exact lane");
+    });
+}
+
+/// Resolve a requested lane against the escape hatch and feature
+/// detection.  A `Simd` request degrades to `Exact` (with a one-time
+/// stderr note) when `PARAGAN_SIMD=off` is set or the host lacks
+/// AVX2+FMA/NEON — non-SIMD hosts run the exact lane everywhere.
+pub fn resolve_lane(requested: KernelLane) -> KernelLane {
+    if requested != KernelLane::Simd {
+        return KernelLane::Exact;
+    }
+    if env_simd_off() {
+        note_simd_fallback_once("disabled via PARAGAN_SIMD=off");
+        return KernelLane::Exact;
+    }
+    if !simd_available() {
+        note_simd_fallback_once("the host lacks AVX2+FMA (or NEON)");
+        return KernelLane::Exact;
+    }
+    KernelLane::Simd
+}
+
 /// Set the GEMM worker-thread count for this process (`None` restores the
 /// `PARAGAN_THREADS` / `available_parallelism` default).  `TrainConfig`
 /// plumbs its `threads` field through here.
@@ -83,6 +171,25 @@ pub fn set_naive_mode(on: bool) {
     NAIVE_MODE.store(if on { 2 } else { 1 }, Ordering::SeqCst);
 }
 
+/// Set the process-wide precision mode (`None` restores the
+/// `PARAGAN_KERNEL` env default).  `TrainConfig::precision_mode` plumbs
+/// through here; the request still goes through [`resolve_lane`], so a
+/// `Simd` ask on a non-SIMD host runs exact.
+pub fn set_precision_mode(lane: Option<KernelLane>) {
+    let v = match lane {
+        None => 0,
+        Some(KernelLane::Exact) => 1,
+        Some(KernelLane::Simd) => 2,
+    };
+    LANE_MODE.store(v, Ordering::SeqCst);
+}
+
+/// The lane GEMMs planned via [`KernelConfig::current`] will execute right
+/// now (post feature-detection/escape-hatch resolution).
+pub fn active_lane() -> KernelLane {
+    KernelConfig::current().lane
+}
+
 /// Resolved kernel configuration.  Tests and benches build explicit values
 /// (no global mutation); production paths use [`KernelConfig::current`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,22 +199,50 @@ pub struct KernelConfig {
     pub threads: usize,
     /// Run the naive loops instead of the packed engine.
     pub naive: bool,
+    /// Which micro-kernel lane the engine runs (already resolved against
+    /// feature detection — constructors never leave an unusable `Simd`
+    /// here).
+    pub lane: KernelLane,
 }
 
 impl KernelConfig {
     pub fn current() -> KernelConfig {
         let ov = THREAD_OVERRIDE.load(Ordering::SeqCst);
+        let requested = match LANE_MODE.load(Ordering::SeqCst) {
+            0 => {
+                if env_lane_simd() {
+                    KernelLane::Simd
+                } else {
+                    KernelLane::Exact
+                }
+            }
+            n => {
+                if n == 2 {
+                    KernelLane::Simd
+                } else {
+                    KernelLane::Exact
+                }
+            }
+        };
         KernelConfig {
             threads: if ov >= 1 { ov } else { auto_threads() },
             naive: match NAIVE_MODE.load(Ordering::SeqCst) {
                 0 => env_naive(),
                 n => n == 2,
             },
+            lane: resolve_lane(requested),
         }
     }
 
     pub fn with_threads(threads: usize) -> KernelConfig {
-        KernelConfig { threads: threads.max(1), naive: false }
+        KernelConfig { threads: threads.max(1), naive: false, lane: KernelLane::Exact }
+    }
+
+    /// Explicit-lane constructor for tests/benches.  The request is still
+    /// resolved: asking for `Simd` on a host without it yields the exact
+    /// lane, so lane-explicit tests degrade gracefully instead of failing.
+    pub fn with_threads_lane(threads: usize, lane: KernelLane) -> KernelConfig {
+        KernelConfig { threads: threads.max(1), naive: false, lane: resolve_lane(lane) }
     }
 }
 
@@ -312,6 +447,115 @@ fn micro_tile(apanel: &[f32], bpanel: &[f32], k: usize) -> [[f32; CPU_NR]; CPU_M
     acc
 }
 
+/// Fast-lane register tile, portable body: `CPU_SIMD_KU` independent
+/// fused-multiply-add chains per output element (chain `u` takes the K
+/// terms with `kk % CPU_SIMD_KU == u`), combined in ascending chain order
+/// at the end.  The schedule is FIXED — it depends only on K — so the fast
+/// lane is deterministic at any thread count.
+///
+/// `f32::mul_add` is IEEE-754 `fusedMultiplyAdd` (one rounding), which is
+/// also exactly what a `vfmadd`/`fmla` instruction computes — so this body
+/// produces the same bits whether the compiler lowers it to libm calls
+/// (portable fallback) or to FMA vector instructions (the
+/// `#[target_feature]` wrapper below).  The portable fn therefore doubles
+/// as the fast lane's bit-oracle in tests.
+#[inline(always)]
+fn micro_tile_fast_body(apanel: &[f32], bpanel: &[f32], k: usize) -> [[f32; CPU_SIMD_NR]; CPU_SIMD_MR] {
+    // No local tile-const aliases here: the tile-const lint reserves those
+    // names for layout/plan.rs, and the planner's names say where the
+    // numbers come from.
+    let mut acc = [[[0f32; CPU_SIMD_NR]; CPU_SIMD_MR]; CPU_SIMD_KU];
+    let mut kk = 0;
+    while kk + CPU_SIMD_KU <= k {
+        for u in 0..CPU_SIMD_KU {
+            let a = &apanel[(kk + u) * CPU_SIMD_MR..(kk + u + 1) * CPU_SIMD_MR];
+            let b = &bpanel[(kk + u) * CPU_SIMD_NR..(kk + u + 1) * CPU_SIMD_NR];
+            for r in 0..CPU_SIMD_MR {
+                let av = a[r];
+                for j in 0..CPU_SIMD_NR {
+                    acc[u][r][j] = av.mul_add(b[j], acc[u][r][j]);
+                }
+            }
+        }
+        kk += CPU_SIMD_KU;
+    }
+    // Tail: kk is a CPU_SIMD_KU multiple here, so `kk % CPU_SIMD_KU` keeps
+    // the same fixed term-to-chain mapping as the unrolled body.
+    while kk < k {
+        let u = kk % CPU_SIMD_KU;
+        let a = &apanel[kk * CPU_SIMD_MR..(kk + 1) * CPU_SIMD_MR];
+        let b = &bpanel[kk * CPU_SIMD_NR..(kk + 1) * CPU_SIMD_NR];
+        for r in 0..CPU_SIMD_MR {
+            let av = a[r];
+            for j in 0..CPU_SIMD_NR {
+                acc[u][r][j] = av.mul_add(b[j], acc[u][r][j]);
+            }
+        }
+        kk += 1;
+    }
+    let mut out = [[0f32; CPU_SIMD_NR]; CPU_SIMD_MR];
+    for r in 0..CPU_SIMD_MR {
+        for j in 0..CPU_SIMD_NR {
+            let mut s = acc[0][r][j];
+            for chain in acc.iter().skip(1) {
+                s += chain[r][j];
+            }
+            out[r][j] = s;
+        }
+    }
+    out
+}
+
+/// The portable body compiled with AVX2+FMA codegen: `mul_add` lowers to
+/// `vfmadd` on ymm registers instead of libm calls.  Bit-identical to
+/// [`micro_tile_fast_body`] (see its doc), just fast.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_tile_fast_x86(
+    apanel: &[f32],
+    bpanel: &[f32],
+    k: usize,
+) -> [[f32; CPU_SIMD_NR]; CPU_SIMD_MR] {
+    micro_tile_fast_body(apanel, bpanel, k)
+}
+
+/// Fast-lane micro-kernel dispatch.
+#[inline]
+fn micro_tile_fast(apanel: &[f32], bpanel: &[f32], k: usize) -> [[f32; CPU_SIMD_NR]; CPU_SIMD_MR] {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: `simd_available()` confirmed AVX2 and FMA via
+        // `is_x86_feature_detected!`, which is the sole precondition of
+        // calling the `#[target_feature(enable = "avx2,fma")]` function.
+        return unsafe { micro_tile_fast_x86(apanel, bpanel, k) };
+    }
+    // aarch64 fuses natively (NEON baseline); on x86 this is only
+    // reachable by a hand-built Simd rule that bypassed `resolve_lane` —
+    // slow (libm fmaf) but the same bits.
+    micro_tile_fast_body(apanel, bpanel, k)
+}
+
+/// The documented fast-lane error bound, per output element.
+///
+/// Both lanes compute the same dot product `sum_k a_i * b_i`; they differ
+/// only in rounding schedule — the exact lane rounds each mul and add
+/// separately through one ascending chain, the fast lane fuses mul+add and
+/// splits K into [`CPU_SIMD_KU`] chains.  Standard forward-error analysis
+/// bounds EITHER schedule's distance from the real-arithmetic value by
+/// `(k + KU) * eps * absdot`, where `absdot = sum_k |a_i| * |b_i|`, so the
+/// two lanes differ by at most twice that (the `f32::MIN_POSITIVE` term
+/// absorbs underflow at k = 0 and denormal rounding):
+///
+/// `|fast - exact| <= 2 * (k + CPU_SIMD_KU) * EPSILON * absdot + MIN_POSITIVE`
+///
+/// Equivalently, a relative bound of `2 (k + KU) eps` against `absdot` —
+/// the same condition-number style as the dist f32-summation tolerances
+/// (`dist` reduction tests), and like those it is enforced by a property
+/// sweep over shapes and transpose modes, not assumed.
+pub fn fast_lane_abs_tol(k: usize, absdot: f32) -> f32 {
+    2.0 * (k as f32 + CPU_SIMD_KU as f32) * f32::EPSILON * absdot + f32::MIN_POSITIVE
+}
+
 // ---------------------------------------------------------------------------
 // The engine
 // ---------------------------------------------------------------------------
@@ -335,7 +579,7 @@ impl Gemm {
     }
 
     pub fn plan_with(cfg: KernelConfig, m: usize, k: usize, n: usize) -> Gemm {
-        Gemm { m, k, n, rule: CpuTileRule::for_shape(m, k, n), cfg }
+        Gemm { m, k, n, rule: CpuTileRule::for_shape_lane(cfg.lane, m, k, n), cfg }
     }
 
     /// `C[m,n] = op(A) x op(B)`: `ta` means `a` is stored `[k, m]`, `tb`
@@ -371,14 +615,52 @@ impl Gemm {
         debug_assert_eq!(adata.len(), packed_a_len(self.m, self.k, self.rule.mr));
         debug_assert_eq!(bdata.len(), packed_b_len(self.k, self.n, self.rule.nr));
         debug_assert_eq!(out.len(), self.m * self.n);
-        // The micro-kernel's register tile is compiled at CPU_MR x CPU_NR;
-        // a rule carrying anything else would silently misindex the panels,
-        // so check in release builds too (a plan bug, not a hot-path cost).
-        assert_eq!(
-            (self.rule.mr, self.rule.nr),
-            (CPU_MR, CPU_NR),
-            "CpuTileRule micro-tile does not match the compiled micro-kernel"
-        );
+        // The micro-kernels' register tiles are compiled at fixed per-lane
+        // shapes; a rule carrying anything else would silently misindex the
+        // panels, so check in release builds too (a plan bug, not a
+        // hot-path cost).
+        match self.rule.lane {
+            KernelLane::Exact => {
+                assert_eq!(
+                    (self.rule.mr, self.rule.nr),
+                    (CPU_MR, CPU_NR),
+                    "CpuTileRule micro-tile does not match the compiled exact micro-kernel"
+                );
+                self.panels_loop::<CPU_MR, CPU_NR, _>(adata, bdata, out, |a, b, k| {
+                    micro_tile(a, b, k)
+                });
+            }
+            KernelLane::Simd => {
+                assert_eq!(
+                    (self.rule.mr, self.rule.nr),
+                    (CPU_SIMD_MR, CPU_SIMD_NR),
+                    "CpuTileRule micro-tile does not match the compiled fast micro-kernel"
+                );
+                self.panels_loop::<CPU_SIMD_MR, CPU_SIMD_NR, _>(adata, bdata, out, |a, b, k| {
+                    micro_tile_fast(a, b, k)
+                });
+            }
+        }
+    }
+
+    /// The lane-generic blocking loop.  All blocking comes from the rule
+    /// (`mc_rows` row blocks x `nc_cols` cache blocks); the micro-kernel is
+    /// the only per-lane ingredient.  The traversal order never affects
+    /// output bits — each element's K schedule lives entirely inside one
+    /// `micro` call — so exact-lane parity is independent of the blocking.
+    /// `R`/`C` are the micro-tile's compiled row/column counts — single
+    /// letters because the planner's names (`CpuTileRule::{mr, nr}`) are
+    /// reserved for layout/plan.rs by the tile-const lint; the caller
+    /// asserts `rule.mr == R && rule.nr == C` before instantiating.
+    fn panels_loop<const R: usize, const C: usize, F>(
+        &self,
+        adata: &[f32],
+        bdata: &[f32],
+        out: &mut [f32],
+        micro: F,
+    ) where
+        F: Fn(&[f32], &[f32], usize) -> [[f32; C]; R] + Copy + Sync,
+    {
         let (m, k, n) = (self.m, self.k, self.n);
         if m == 0 || n == 0 {
             return;
@@ -387,31 +669,36 @@ impl Gemm {
         let threads = rule.effective_threads(self.cfg.threads, m, k, n);
         // Row panels per thread chunk: ~4 chunks per worker for balance,
         // always whole panels so no row is shared.
-        let n_panels = m.div_ceil(rule.mr).max(1);
+        let n_panels = m.div_ceil(R).max(1);
         let panels_per_chunk = n_panels.div_ceil(threads * 4).max(1);
-        let chunk_rows = panels_per_chunk * rule.mr;
-        let q_panels = n.div_ceil(rule.nr).max(1);
-        let q_per_block = (rule.nc_cols / rule.nr).max(1);
-        let a_panel_len = k * rule.mr;
-        let b_panel_len = k * rule.nr;
+        let chunk_rows = panels_per_chunk * R;
+        let q_panels = n.div_ceil(C).max(1);
+        let q_per_block = (rule.nc_cols / C).max(1);
+        let mc_panels = (rule.mc_rows / R).max(1);
+        let a_panel_len = k * R;
+        let b_panel_len = k * C;
 
         parallel_chunks_mut(out, n, chunk_rows, threads, |row0, chunk| {
-            let p0 = row0 / rule.mr;
-            let chunk_panels = (chunk.len() / n).div_ceil(rule.mr);
-            // Cache-block over B panels: the packed `nc_cols`-wide block
-            // stays resident while this chunk's A panels stream past it.
-            for qb in (0..q_panels).step_by(q_per_block) {
-                for dp in 0..chunk_panels {
-                    let p = p0 + dp;
-                    let apanel = &adata[p * a_panel_len..(p + 1) * a_panel_len];
-                    let rows = rule.mr.min(m - p * rule.mr);
-                    for q in qb..(qb + q_per_block).min(q_panels) {
-                        let bpanel = &bdata[q * b_panel_len..(q + 1) * b_panel_len];
-                        let acc = micro_tile(apanel, bpanel, k);
-                        let cols = rule.nr.min(n - q * rule.nr);
-                        for r in 0..rows {
-                            let orow = (dp * rule.mr + r) * n + q * rule.nr;
-                            chunk[orow..orow + cols].copy_from_slice(&acc[r][..cols]);
+            let p0 = row0 / R;
+            let chunk_panels = (chunk.len() / n).div_ceil(R);
+            // Row-block (`mc_rows`) x cache-block (`nc_cols`): a bounded A
+            // block stays hot while the packed B blocks stream past it —
+            // the shape-aware row decision `for_shape_lane` made.
+            for mb in (0..chunk_panels).step_by(mc_panels) {
+                let mb_end = (mb + mc_panels).min(chunk_panels);
+                for qb in (0..q_panels).step_by(q_per_block) {
+                    for dp in mb..mb_end {
+                        let p = p0 + dp;
+                        let apanel = &adata[p * a_panel_len..(p + 1) * a_panel_len];
+                        let rows = R.min(m - p * R);
+                        for q in qb..(qb + q_per_block).min(q_panels) {
+                            let bpanel = &bdata[q * b_panel_len..(q + 1) * b_panel_len];
+                            let acc = micro(apanel, bpanel, k);
+                            let cols = C.min(n - q * C);
+                            for r in 0..rows {
+                                let orow = (dp * R + r) * n + q * C;
+                                chunk[orow..orow + cols].copy_from_slice(&acc[r][..cols]);
+                            }
                         }
                     }
                 }
@@ -649,7 +936,7 @@ mod tests {
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, k * n);
         let g = Gemm {
-            cfg: KernelConfig { threads: 4, naive: true },
+            cfg: KernelConfig { threads: 4, naive: true, lane: KernelLane::Exact },
             ..Gemm::plan_with(KernelConfig::with_threads(4), m, k, n)
         };
         assert_bits_eq(
@@ -661,8 +948,155 @@ mod tests {
 
     #[test]
     fn degenerate_k_zero_yields_zeros() {
-        let g = Gemm::plan_with(KernelConfig::with_threads(2), 3, 0, 4);
-        let out = g.run(&[], false, &[], false);
-        assert_eq!(out, vec![0f32; 12]);
+        for lane in [KernelLane::Exact, KernelLane::Simd] {
+            let g = Gemm::plan_with(KernelConfig::with_threads_lane(2, lane), 3, 0, 4);
+            let out = g.run(&[], false, &[], false);
+            assert_eq!(out, vec![0f32; 12]);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // The SIMD/FMA fast lane
+    // -----------------------------------------------------------------
+
+    /// `sum_k |a_i| * |b_i|` per output element — the condition number the
+    /// documented bound is stated against (accumulated in f64 so the bound
+    /// itself is not polluted by summation error).
+    fn absdot_gemm(m: usize, k: usize, n: usize, a: &[f32], ta: bool, b: &[f32], tb: bool) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for kk in 0..k {
+                    let av = if ta { a[kk * m + i] } else { a[i * k + kk] };
+                    let bv = if tb { b[j * k + kk] } else { b[kk * n + j] };
+                    s += (av as f64).abs() * (bv as f64).abs();
+                }
+                out[i * n + j] = s as f32;
+            }
+        }
+        out
+    }
+
+    /// The satellite property sweep for the fast lane: same shapes and
+    /// transpose modes as the exact-lane bit sweep, but the assertion is
+    /// the DOCUMENTED tolerance — `|fast - exact| <= fast_lane_abs_tol` per
+    /// element.  On hosts without AVX2+FMA the request resolves to the
+    /// exact lane and the diff is identically zero, so the sweep doubles as
+    /// the fallback-correctness test.
+    #[test]
+    fn fast_lane_stays_within_documented_tolerance() {
+        let dims = [1usize, 2, 3, 7, 17, 64, 65];
+        let mut rng = Rng::new(0x51D);
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    for (ta, tb) in [(false, false), (true, false), (false, true)] {
+                        let a = randv(&mut rng, m * k);
+                        let b = randv(&mut rng, k * n);
+                        let exact = Gemm::plan_with(KernelConfig::with_threads(3), m, k, n)
+                            .run(&a, ta, &b, tb);
+                        let fast = Gemm::plan_with(
+                            KernelConfig::with_threads_lane(3, KernelLane::Simd),
+                            m,
+                            k,
+                            n,
+                        )
+                        .run(&a, ta, &b, tb);
+                        let absdot = absdot_gemm(m, k, n, &a, ta, &b, tb);
+                        for (i, (&f, &e)) in fast.iter().zip(&exact).enumerate() {
+                            let tol = fast_lane_abs_tol(k, absdot[i]);
+                            assert!(
+                                (f - e).abs() <= tol,
+                                "{m}x{k}x{n} ta={ta} tb={tb} [{i}]: |{f} - {e}| > {tol}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fixed K-chain split => the fast lane is DETERMINISTIC: bit-identical
+    /// output at any thread count (the row partitioning never touches an
+    /// element's summation schedule).
+    #[test]
+    fn fast_lane_is_thread_count_invariant() {
+        let mut rng = Rng::new(0xFA57);
+        for (m, k, n) in [(67, 33, 12), (256, 48, 8), (31, 130, 5)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let one = Gemm::plan_with(KernelConfig::with_threads_lane(1, KernelLane::Simd), m, k, n)
+                .run(&a, false, &b, false);
+            for t in [2, 3, 8] {
+                let many =
+                    Gemm::plan_with(KernelConfig::with_threads_lane(t, KernelLane::Simd), m, k, n)
+                        .run(&a, false, &b, false);
+                assert_bits_eq(&many, &one, &format!("simd threads={t} {m}x{k}x{n}"));
+            }
+        }
+    }
+
+    /// The `#[target_feature]` compilation of the fast micro-kernel is
+    /// bit-identical to the portable `mul_add` body (IEEE fused semantics
+    /// do not depend on how the FMA is issued).
+    #[test]
+    fn fast_micro_kernel_matches_portable_body_bitwise() {
+        let mut rng = Rng::new(0xB0D7);
+        for k in [0usize, 1, 2, 3, 17, 130] {
+            let apanel = randv(&mut rng, k * CPU_SIMD_MR);
+            let bpanel = randv(&mut rng, k * CPU_SIMD_NR);
+            let want = micro_tile_fast_body(&apanel, &bpanel, k);
+            let got = micro_tile_fast(&apanel, &bpanel, k);
+            for r in 0..CPU_SIMD_MR {
+                for j in 0..CPU_SIMD_NR {
+                    assert_eq!(got[r][j].to_bits(), want[r][j].to_bits(), "k={k} [{r}][{j}]");
+                }
+            }
+        }
+    }
+
+    /// Lane resolution: exact requests stay exact; a simd request resolves
+    /// to simd exactly when the host advertises the features and the escape
+    /// hatch is not set, and otherwise the engine output is bit-identical
+    /// to the exact lane (the fallback path IS the exact lane).
+    #[test]
+    fn lane_resolution_degrades_to_exact_when_unusable() {
+        assert_eq!(resolve_lane(KernelLane::Exact), KernelLane::Exact);
+        let resolved = resolve_lane(KernelLane::Simd);
+        if simd_available() && !env_simd_off() {
+            assert_eq!(resolved, KernelLane::Simd);
+        } else {
+            assert_eq!(resolved, KernelLane::Exact);
+            let mut rng = Rng::new(0xFB);
+            let (m, k, n) = (33, 20, 19);
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let fast = Gemm::plan_with(KernelConfig::with_threads_lane(2, KernelLane::Simd), m, k, n)
+                .run(&a, false, &b, false);
+            let exact = Gemm::plan_with(KernelConfig::with_threads(2), m, k, n)
+                .run(&a, false, &b, false);
+            assert_bits_eq(&fast, &exact, "simd fallback");
+        }
+        // The default constructors never engage the fast lane.
+        assert_eq!(KernelConfig::with_threads(4).lane, KernelLane::Exact);
+    }
+
+    /// `plan_with` hands the fast lane the planner's per-lane tiles.
+    #[test]
+    fn fast_lane_runs_planner_tiles() {
+        let cfg = KernelConfig::with_threads_lane(2, KernelLane::Simd);
+        let g = Gemm::plan_with(cfg, 100, 300, 50);
+        assert_eq!(g.rule, CpuTileRule::for_shape_lane(cfg.lane, 100, 300, 50));
+        if cfg.lane == KernelLane::Simd {
+            assert_eq!((g.rule.mr, g.rule.nr, g.rule.k_chains), (CPU_SIMD_MR, CPU_SIMD_NR, CPU_SIMD_KU));
+        }
+    }
+
+    #[test]
+    fn fast_lane_tol_grows_with_k_and_magnitude() {
+        assert!(fast_lane_abs_tol(10, 1.0) < fast_lane_abs_tol(100, 1.0));
+        assert!(fast_lane_abs_tol(10, 1.0) < fast_lane_abs_tol(10, 8.0));
+        assert!(fast_lane_abs_tol(0, 0.0) > 0.0, "degenerate dot still has slack");
     }
 }

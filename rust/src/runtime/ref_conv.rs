@@ -92,23 +92,23 @@ impl Act {
     }
 
     /// grad *= act'(pre), elementwise; tanh uses the cached post-activation
-    /// (`1 - y^2`), relu/lrelu the pre-activation sign.
+    /// (`1 - y^2`), relu/lrelu the pre-activation sign.  The relu/lrelu
+    /// bodies are branchless selects so the epilogue vectorizes on both
+    /// lanes — value-identical to the branchy forms (`g * 1.0 == g`,
+    /// select(p < 0, 0, g) == the old conditional store), so golden parity
+    /// is untouched.
     pub fn grad_mul(self, grad: &mut [f32], pre: &[f32], post: &[f32]) {
         debug_assert_eq!(grad.len(), pre.len());
         match self {
             Act::None => {}
             Act::Relu => {
                 for (g, &p) in grad.iter_mut().zip(pre) {
-                    if p < 0.0 {
-                        *g = 0.0;
-                    }
+                    *g = if p < 0.0 { 0.0 } else { *g };
                 }
             }
             Act::LRelu => {
                 for (g, &p) in grad.iter_mut().zip(pre) {
-                    if p < 0.0 {
-                        *g *= LRELU_SLOPE;
-                    }
+                    *g *= if p < 0.0 { LRELU_SLOPE } else { 1.0 };
                 }
             }
             Act::Tanh => {
@@ -218,12 +218,17 @@ fn im2col_rows(x: &[f32], s: &Conv2dShape, r0: usize, r1: usize, mut put: impl F
                 }
                 let xrow = xbase + iy as usize * s.iw;
                 let crow = (ci * s.kh + r) * s.kw;
-                for c in 0..s.kw {
-                    let ix = (ox * s.stride + c) as isize - s.pad_w as isize;
-                    if ix < 0 || ix >= s.iw as isize {
-                        continue;
-                    }
-                    put(row, crow + c, x[xrow + ix as usize]);
+                // Horizontal bounds hoisted to a per-row valid span:
+                // ix = ox*stride + c - pad_w must land in [0, iw), i.e.
+                // c in [c_lo, c_hi).  Same elements in the same ascending
+                // order as the old per-element branches — value-identical
+                // for both lanes — but the inner loop is branch-free, so
+                // the packers vectorize.
+                let x0 = ox * s.stride;
+                let c_lo = s.pad_w.saturating_sub(x0);
+                let c_hi = (s.pad_w + s.iw).saturating_sub(x0).min(s.kw);
+                for c in c_lo..c_hi {
+                    put(row, crow + c, x[xrow + x0 + c - s.pad_w]);
                 }
             }
         }
@@ -234,22 +239,23 @@ fn im2col_rows(x: &[f32], s: &Conv2dShape, r0: usize, r1: usize, mut put: impl F
 /// the B*OH*OW rows): the weight-gradient GEMM `dW = doutT x cols` consumes
 /// this directly, again without a row-major intermediate.  Serial: the dW
 /// GEMM that follows is a factor `cout` more work and is the parallel part.
-pub fn im2col_packed_b(x: &[f32], s: &Conv2dShape) -> PackedB {
+pub fn im2col_packed_b(x: &[f32], s: &Conv2dShape, nr: usize) -> PackedB {
     let (oh, ow) = s.out_hw();
     let kk = s.k();
     let m = s.batch * oh * ow;
-    let mut pb = PackedB::zeroed(m, kk, crate::layout::plan::CPU_NR);
-    im2col_packed_b_into(x, s, pb.data_mut());
+    let mut pb = PackedB::zeroed(m, kk, nr);
+    im2col_packed_b_into(x, s, nr, pb.data_mut());
     pb
 }
 
 /// [`im2col_packed_b`] into a caller buffer of length
-/// `packed_b_len(B*OH*OW, K, CPU_NR)`, pre-zeroed.
-pub fn im2col_packed_b_into(x: &[f32], s: &Conv2dShape, dst: &mut [f32]) {
+/// `packed_b_len(B*OH*OW, K, nr)`, pre-zeroed.  `nr` is the consuming
+/// GEMM's planned panel width (`rule.nr` — lane-dependent, so the packer
+/// takes it as an argument instead of hardcoding the exact lane's).
+pub fn im2col_packed_b_into(x: &[f32], s: &Conv2dShape, nr: usize, dst: &mut [f32]) {
     let (oh, ow) = s.out_hw();
     let kk = s.k();
     let m = s.batch * oh * ow;
-    let nr = crate::layout::plan::CPU_NR;
     debug_assert_eq!(dst.len(), super::kernel::packed_b_len(m, kk, nr));
     im2col_rows(x, s, 0, m, |row, ki, v| {
         dst[(ki / nr) * (m * nr) + row * nr + ki % nr] = v;
@@ -433,7 +439,7 @@ pub fn conv2d_bwd(
         dw
     } else {
         let pa = PackedA::from_slice(&dout_mat, s.cout, m, true, gw.rule.mr);
-        let pb = im2col_packed_b(x, s);
+        let pb = im2col_packed_b(x, s, gw.rule.nr);
         gw.run_packed(&pa, &pb)
     };
 
@@ -670,7 +676,10 @@ pub fn bn_apply(
     y
 }
 
-/// [`bn_apply`] into a caller buffer (every element written).
+/// [`bn_apply`] into a caller buffer (every element written).  Under the
+/// process-wide SIMD fast lane (`KernelConfig::current().lane`) the
+/// normalize runs the fused epilogue below; the default exact lane keeps
+/// the golden-parity rounding order.
 #[allow(clippy::too_many_arguments)]
 pub fn bn_apply_into(
     x: &[f32],
@@ -686,6 +695,10 @@ pub fn bn_apply_into(
 ) {
     debug_assert_eq!(x.len(), batch * c * hw);
     debug_assert_eq!(y.len(), x.len());
+    if KernelConfig::current().lane == crate::layout::plan::KernelLane::Simd {
+        bn_apply_fast(x, gamma, beta, mean, var, batch, c, hw, eps, y);
+        return;
+    }
     for ch in 0..c {
         let inv = 1.0 / (var[ch] + eps).sqrt();
         let (g, bt, m) = (gamma[ch], beta[ch], mean[ch]);
@@ -696,6 +709,87 @@ pub fn bn_apply_into(
             }
         }
     }
+}
+
+/// Fast-lane BatchNorm epilogue, portable body: per-channel
+/// `scale = gamma * inv_std` and `shift = beta - mean * scale` are folded
+/// once, so the per-element normalize collapses to a single fused
+/// multiply-add `y = x * scale + shift`.  Elementwise — the result is
+/// bit-deterministic at any thread count / vector width — but the rounding
+/// schedule differs from the exact path (fused vs. four separate
+/// roundings), so it runs ONLY under the fast lane's documented tolerance
+/// regime (see `kernel::fast_lane_abs_tol`'s module docs), never under the
+/// golden-parity default.
+#[allow(clippy::too_many_arguments)]
+fn bn_apply_fast_body(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+    y: &mut [f32],
+) {
+    for ch in 0..c {
+        let inv = 1.0 / (var[ch] + eps).sqrt();
+        let scale = gamma[ch] * inv;
+        let shift = (-mean[ch]).mul_add(scale, beta[ch]);
+        for b in 0..batch {
+            let base = (b * c + ch) * hw;
+            for i in 0..hw {
+                y[base + i] = x[base + i].mul_add(scale, shift);
+            }
+        }
+    }
+}
+
+/// The portable body compiled with AVX2+FMA codegen (`mul_add` lowers to
+/// `vfmadd` instead of libm) — bit-identical, just fast.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn bn_apply_fast_x86(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+    y: &mut [f32],
+) {
+    bn_apply_fast_body(x, gamma, beta, mean, var, batch, c, hw, eps, y);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bn_apply_fast(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    batch: usize,
+    c: usize,
+    hw: usize,
+    eps: f32,
+    y: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if super::kernel::simd_available() {
+        // SAFETY: `simd_available()` confirmed AVX2 and FMA via
+        // `is_x86_feature_detected!` — the sole precondition of the
+        // `#[target_feature(enable = "avx2,fma")]` function.
+        unsafe { bn_apply_fast_x86(x, gamma, beta, mean, var, batch, c, hw, eps, y) };
+        return;
+    }
+    // aarch64 fuses natively; x86 without AVX2 cannot resolve the fast
+    // lane, so this portable path is effectively test-only there.
+    bn_apply_fast_body(x, gamma, beta, mean, var, batch, c, hw, eps, y);
 }
 
 /// Train-mode BatchNorm backward (through the batch statistics).
@@ -1653,7 +1747,7 @@ pub fn conv2d_bwd_ws(
         let mut pa = ws.take_zeroed(packed_a_len(s.cout, m, gw.rule.mr));
         pack_a_into(dout_mat.as_slice(), s.cout, m, true, gw.rule.mr, pa.as_mut_slice());
         let mut pb = ws.take_zeroed(packed_b_len(m, kk, gw.rule.nr));
-        im2col_packed_b_into(x, s, pb.as_mut_slice());
+        im2col_packed_b_into(x, s, gw.rule.nr, pb.as_mut_slice());
         if g.acc {
             let mut fresh = ws.take(s.cout * kk);
             gw.run_panels_into(pa.as_slice(), pb.as_slice(), fresh.as_mut_slice());
@@ -2280,14 +2374,19 @@ mod tests {
                     }
                 }
             }
-            let got_b = im2col_packed_b(&x, &s);
-            for ki in 0..kk {
-                for i in 0..m {
-                    assert_eq!(
-                        got_b.panel(ki / got_b.nr)[i * got_b.nr + ki % got_b.nr],
-                        cols[i * kk + ki],
-                        "packed B ({i},{ki})"
-                    );
+            // Both lane widths: the packer takes `nr` from the consuming
+            // GEMM's rule instead of hardcoding the exact lane's.
+            for nr in [crate::layout::plan::CPU_NR, crate::layout::plan::CPU_SIMD_NR] {
+                let got_b = im2col_packed_b(&x, &s, nr);
+                assert_eq!(got_b.nr, nr);
+                for ki in 0..kk {
+                    for i in 0..m {
+                        assert_eq!(
+                            got_b.panel(ki / got_b.nr)[i * got_b.nr + ki % got_b.nr],
+                            cols[i * kk + ki],
+                            "packed B ({i},{ki}) nr={nr}"
+                        );
+                    }
                 }
             }
         }
@@ -2438,6 +2537,59 @@ mod tests {
         let yi = bn_apply(&x, &gamma, &beta, &fm, &fv, b, c, hw, 0.0);
         for (xi, yi) in x.iter().zip(&yi) {
             assert!(((xi - 1.0) / 2.0 - yi).abs() < 1e-5);
+        }
+    }
+
+    /// The fast-lane fused BN epilogue stays within a few ulps of the
+    /// exact rounding order — the conv-layer slice of the fast lane's
+    /// documented tolerance regime.  (Called directly; the lane dispatch
+    /// inside `bn_apply_into` is driven by the process-wide config.)
+    #[test]
+    fn batchnorm_fast_epilogue_within_tolerance_of_exact() {
+        let mut rng = Rng::new(0xB4);
+        let (b, c, hw) = (4, 5, 33);
+        let x = randn(&mut rng, b * c * hw, 2.0);
+        let gamma = randn(&mut rng, c, 0.7);
+        let beta = randn(&mut rng, c, 0.7);
+        let (mean, var) = bn_stats(&x, b, c, hw);
+        let exact = bn_apply(&x, &gamma, &beta, &mean, &var, b, c, hw, BN_EPS);
+        let mut fast = vec![0f32; x.len()];
+        bn_apply_fast_body(&x, &gamma, &beta, &mean, &var, b, c, hw, BN_EPS, &mut fast);
+        for ch in 0..c {
+            let inv = 1.0 / (var[ch] + BN_EPS).sqrt();
+            let scale = (gamma[ch] * inv).abs();
+            for bi in 0..b {
+                let base = (bi * c + ch) * hw;
+                for i in 0..hw {
+                    let (f, e) = (fast[base + i], exact[base + i]);
+                    // Both schedules are within 2 ulps of the real value
+                    // of x*scale - mean*scale + beta; bound the terms.
+                    let tol = 8.0
+                        * f32::EPSILON
+                        * (x[base + i].abs() * scale + mean[ch].abs() * scale + beta[ch].abs())
+                        + f32::MIN_POSITIVE;
+                    assert!((f - e).abs() <= tol, "[{ch},{bi},{i}]: |{f} - {e}| > {tol}");
+                }
+            }
+        }
+    }
+
+    /// The branchless relu/lrelu grad selects are value-identical to the
+    /// old conditional stores (golden parity depends on it).
+    #[test]
+    fn branchless_act_grads_match_conditional_semantics() {
+        let mut rng = Rng::new(0xAC7);
+        let pre = randn(&mut rng, 257, 1.0);
+        let g0 = randn(&mut rng, 257, 1.0);
+        let mut g_relu = g0.clone();
+        Act::Relu.grad_mul(&mut g_relu, &pre, &[]);
+        let mut g_lrelu = g0.clone();
+        Act::LRelu.grad_mul(&mut g_lrelu, &pre, &[]);
+        for i in 0..pre.len() {
+            let want_relu = if pre[i] < 0.0 { 0.0 } else { g0[i] };
+            let want_lrelu = if pre[i] < 0.0 { g0[i] * LRELU_SLOPE } else { g0[i] };
+            assert_eq!(g_relu[i].to_bits(), want_relu.to_bits(), "relu[{i}]");
+            assert_eq!(g_lrelu[i].to_bits(), want_lrelu.to_bits(), "lrelu[{i}]");
         }
     }
 

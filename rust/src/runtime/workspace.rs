@@ -43,7 +43,7 @@ use std::ptr::NonNull;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-use crate::layout::plan::{BufReq, IntervalAlloc, MemoryPlan, CPU_MR, CPU_NR};
+use crate::layout::plan::{BufReq, IntervalAlloc, MemoryPlan, CPU_MR, CPU_NR_ANY};
 
 use super::kernel::{packed_a_len, packed_b_len};
 use super::ref_conv::{ConvNet, Layer, LayerOp};
@@ -409,18 +409,25 @@ impl Tracer {
 
 /// Forward-pass scratch of one layer (packed GEMM operands, bf16 copies,
 /// conv matmul output) — live only while that layer executes.
+///
+/// Packed-B sizes use `CPU_NR_ANY` (the widest panel any kernel lane packs
+/// to) so ONE memory plan covers both the exact and SIMD lanes — the lane
+/// is process-global and may differ from the plan-time default; a few
+/// spare padding lanes under the exact lane is the price of never
+/// replanning.  Packed-A stays `CPU_MR`: the lanes share the A-panel
+/// height by construction (compile-time assert in `layout::plan`).
 fn fwd_scratch(l: &Layer, batch: usize, bf16: bool) -> usize {
     match l.op {
         LayerOp::Dense { nin, nout } => {
             let q = if bf16 { batch * nin + nin * nout } else { 0 };
-            q + packed_a_len(batch, nin, CPU_MR) + packed_b_len(nin, nout, CPU_NR)
+            q + packed_a_len(batch, nin, CPU_MR) + packed_b_len(nin, nout, CPU_NR_ANY)
         }
         LayerOp::Conv { .. } => {
             let s = conv_shape_of(l, batch);
             let (oh, ow) = s.out_hw();
             let (m, kk) = (batch * oh * ow, s.k());
             let q = if bf16 { s.batch * s.cin * s.ih * s.iw + s.cout * kk } else { 0 };
-            q + packed_a_len(m, kk, CPU_MR) + packed_b_len(kk, s.cout, CPU_NR) + m * s.cout
+            q + packed_a_len(m, kk, CPU_MR) + packed_b_len(kk, s.cout, CPU_NR_ANY) + m * s.cout
         }
         LayerOp::ConvT { .. } => {
             let t = convt_shape_of(l, batch);
@@ -432,7 +439,7 @@ fn fwd_scratch(l: &Layer, batch: usize, bf16: bool) -> usize {
             let q = if bf16 { dil + w } else { 0 };
             dil + w + q
                 + packed_a_len(m, kk, CPU_MR)
-                + packed_b_len(kk, t.cout, CPU_NR)
+                + packed_b_len(kk, t.cout, CPU_NR_ANY)
                 + m * t.cout
         }
         LayerOp::BatchNorm { .. } | LayerOp::Upsample { .. } => 0,
@@ -444,9 +451,9 @@ fn fwd_scratch(l: &Layer, batch: usize, bf16: bool) -> usize {
 fn bwd_scratch(l: &Layer, batch: usize, want_pgrads: bool) -> usize {
     match l.op {
         LayerOp::Dense { nin, nout } => {
-            let dx = packed_a_len(batch, nout, CPU_MR) + packed_b_len(nout, nin, CPU_NR);
+            let dx = packed_a_len(batch, nout, CPU_MR) + packed_b_len(nout, nin, CPU_NR_ANY);
             let dw = if want_pgrads {
-                packed_a_len(nin, batch, CPU_MR) + packed_b_len(batch, nout, CPU_NR) + nin * nout
+                packed_a_len(nin, batch, CPU_MR) + packed_b_len(batch, nout, CPU_NR_ANY) + nin * nout
             } else {
                 0
             };
@@ -457,9 +464,9 @@ fn bwd_scratch(l: &Layer, batch: usize, want_pgrads: bool) -> usize {
             let (oh, ow) = s.out_hw();
             let (m, kk) = (batch * oh * ow, s.k());
             let dout_mat = m * s.cout;
-            let dx = packed_a_len(m, s.cout, CPU_MR) + packed_b_len(s.cout, kk, CPU_NR) + m * kk;
+            let dx = packed_a_len(m, s.cout, CPU_MR) + packed_b_len(s.cout, kk, CPU_NR_ANY) + m * kk;
             let dw = if want_pgrads {
-                packed_a_len(s.cout, m, CPU_MR) + packed_b_len(m, kk, CPU_NR) + s.cout * kk
+                packed_a_len(s.cout, m, CPU_MR) + packed_b_len(m, kk, CPU_NR_ANY) + s.cout * kk
             } else {
                 0
             };
@@ -477,7 +484,7 @@ fn bwd_scratch(l: &Layer, batch: usize, want_pgrads: bool) -> usize {
                 dil + w
                     + m * t.cout
                     + packed_a_len(t.cout, m, CPU_MR)
-                    + packed_b_len(m, kk, CPU_NR)
+                    + packed_b_len(m, kk, CPU_NR_ANY)
                     + t.cout * kk
                     + w
             } else {
@@ -487,7 +494,7 @@ fn bwd_scratch(l: &Layer, batch: usize, want_pgrads: bool) -> usize {
             let kk_dx = t.cout * t.kh * t.kw;
             let m_dx = batch * t.ih * t.iw;
             let dx = packed_a_len(m_dx, kk_dx, CPU_MR)
-                + packed_b_len(kk_dx, t.cin, CPU_NR)
+                + packed_b_len(kk_dx, t.cin, CPU_NR_ANY)
                 + m_dx * t.cin;
             dw + dx
         }

@@ -1,0 +1,136 @@
+//! End-to-end coverage for the SIMD/FMA fast lane at PROCESS scope: the
+//! lane travels `PARAGAN_KERNEL=simd` / `TrainConfig::precision_mode` ->
+//! `kernel::set_precision_mode` -> `KernelConfig::current` -> every GEMM
+//! the trainers run.  CI runs this binary three ways:
+//!
+//!   * default env                 — exercises the toggle path on any host;
+//!   * `PARAGAN_KERNEL=simd`      — on AVX2 runners, the whole suite on the
+//!     fast lane;
+//!   * `PARAGAN_KERNEL=simd PARAGAN_SIMD=off` — the escape hatch must force
+//!     the exact lane (bitwise oracle parity) everywhere.
+//!
+//! One test function: the lane override is process-global state, and the
+//! default harness runs `#[test]` fns concurrently — sequencing inside a
+//! single fn keeps toggles from racing (same pattern as the bench).  The
+//! kernel-level contracts (tolerance sweep, thread invariance, tile
+//! parity) live in `runtime::kernel`'s unit tests; this file checks the
+//! plumbing and the training path.
+
+use paragan::coordinator::{train_sync, NetPolicy, OptimizationPolicy, ScalingConfig, TrainConfig};
+use paragan::layout::plan::KernelLane;
+use paragan::runtime::kernel::{self, fast_lane_abs_tol, naive, Gemm, KernelConfig};
+use paragan::testkit::ref_artifact_dir;
+use paragan::util::rng::Rng;
+
+fn tiny_cfg(steps: u64, lane: Option<KernelLane>) -> TrainConfig {
+    TrainConfig {
+        artifact_dir: ref_artifact_dir(),
+        model: "dcgan32".to_string(),
+        steps,
+        eval_batches: 2,
+        log_every: 0,
+        seed: 11,
+        scaling: ScalingConfig { base_lr: 5e-3, ..Default::default() },
+        policy: OptimizationPolicy {
+            generator: NetPolicy { optimizer: "adam".into(), lr_mult: 0.1 },
+            discriminator: NetPolicy { optimizer: "adam".into(), lr_mult: 1.0 },
+            precision: "fp32".into(),
+            d_steps_per_g: 1,
+        },
+        precision_mode: lane,
+        ..Default::default()
+    }
+}
+
+/// |a| x |b| accumulated in f64 — the per-element magnitude bound the
+/// documented tolerance is stated against.
+fn absdot(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0f64;
+            for t in 0..k {
+                s += (a[i * k + t].abs() as f64) * (b[t * n + j].abs() as f64);
+            }
+            out[i * n + j] = s as f32;
+        }
+    }
+    out
+}
+
+#[test]
+fn fast_lane_plumbing_end_to_end() {
+    // --- 1. env consistency: whatever the harness env says, the active
+    // lane must be the resolved version of it. -----------------------------
+    let env_requests_simd =
+        std::env::var("PARAGAN_KERNEL").map(|v| v.trim() == "simd").unwrap_or(false);
+    let env_off = std::env::var("PARAGAN_SIMD")
+        .map(|v| matches!(v.trim(), "off" | "0" | "false"))
+        .unwrap_or(false);
+    let expect_simd = env_requests_simd && !env_off && kernel::simd_available();
+    assert_eq!(
+        kernel::active_lane(),
+        if expect_simd { KernelLane::Simd } else { KernelLane::Exact },
+        "active_lane disagrees with env (PARAGAN_KERNEL simd={env_requests_simd}, \
+         PARAGAN_SIMD off={env_off}, available={})",
+        kernel::simd_available()
+    );
+
+    // --- 2. process-default GEMMs follow the global toggle. ---------------
+    let (m, k, n) = (33, 48, 20);
+    let mut rng = Rng::new(0x51D);
+    let mut a = vec![0f32; m * k];
+    let mut b = vec![0f32; k * n];
+    rng.fill_gaussian(&mut a, 0.0, 1.0);
+    rng.fill_gaussian(&mut b, 0.0, 1.0);
+    let oracle = naive::gemm(m, k, n, &a, false, &b, false);
+
+    kernel::set_precision_mode(Some(KernelLane::Simd));
+    let resolved = kernel::active_lane();
+    let fast = Gemm::plan(m, k, n).run(&a, false, &b, false);
+    kernel::set_precision_mode(Some(KernelLane::Exact));
+    assert_eq!(kernel::active_lane(), KernelLane::Exact);
+    let exact = Gemm::plan(m, k, n).run(&a, false, &b, false);
+    kernel::set_precision_mode(None);
+
+    // The exact lane is the oracle, bit for bit.
+    for (i, (e, o)) in exact.iter().zip(&oracle).enumerate() {
+        assert_eq!(e.to_bits(), o.to_bits(), "exact lane vs oracle at {i}");
+    }
+    if resolved == KernelLane::Simd {
+        // Fast lane: within the documented bound of the exact lane.
+        let mag = absdot(m, k, n, &a, &b);
+        for i in 0..m * n {
+            let tol = fast_lane_abs_tol(k, mag[i]);
+            let diff = (fast[i] - exact[i]).abs();
+            assert!(diff <= tol, "fast lane at {i}: diff {diff} > tol {tol}");
+        }
+    } else {
+        // Escape hatch / non-SIMD host: the Simd request degraded to the
+        // exact lane, so the results are bitwise identical.
+        for (i, (f, e)) in fast.iter().zip(&exact).enumerate() {
+            assert_eq!(f.to_bits(), e.to_bits(), "fallback not bitwise at {i}");
+        }
+    }
+
+    // --- 3. TrainConfig::precision_mode reaches the engine and real
+    // dcgan32 steps stay finite on the fast lane. --------------------------
+    let res = train_sync(&tiny_cfg(2, Some(KernelLane::Simd))).expect("fast-lane train");
+    assert_eq!(
+        kernel::active_lane(),
+        if env_off || !kernel::simd_available() { KernelLane::Exact } else { KernelLane::Simd },
+        "TrainConfig::precision_mode did not reach the kernel layer"
+    );
+    assert_eq!(res.steps, 2);
+    let gl = res.g_loss.last().expect("g loss recorded");
+    let dl = res.d_loss.last().expect("d loss recorded");
+    assert!(gl.is_finite() && dl.is_finite(), "non-finite losses g={gl} d={dl}");
+
+    // --- 4. restore the process default for any later code in this
+    // binary, and confirm the restore takes. -------------------------------
+    kernel::set_precision_mode(None);
+    assert_eq!(
+        kernel::active_lane(),
+        if expect_simd { KernelLane::Simd } else { KernelLane::Exact }
+    );
+}

@@ -16,10 +16,11 @@
 //!   next 3 lines below it).  Cold error paths (`format!` inside
 //!   `bail!`/`with_context`) are outside the token set by design: an error
 //!   tears the run down, so its allocations never recur in steady state.
-//! * **tile-const** — tile/blocking constants (`MR`, `NR`, `MC`, `NC`,
-//!   `KC`, `TILE[S]`, `BLOCK[S]` name segments) may only be declared in
+//! * **tile-const** — tile/blocking and lane-selection constants (`MR`,
+//!   `NR`, `MC`, `NC`, `KC`, `KU` (K-chain depth), `LANES` (vector width),
+//!   `TILE[S]`, `BLOCK[S]` name segments) may only be declared in
 //!   `layout/plan.rs`: kernels receive sizes from the layout planner, they
-//!   never compute them (ROADMAP PR-3/PR-5 decisions).
+//!   never compute them (ROADMAP PR-3/PR-5/PR-8 decisions).
 //! * **kernel-purity** — kernel / workspace / planner modules contain no
 //!   timing or thread-management calls (`Instant::now`, `SystemTime::now`,
 //!   `thread::spawn`, `thread::sleep`): kernels compute, the exec layer
@@ -48,11 +49,12 @@ use std::io;
 use std::path::Path;
 
 const HOT_SUFFIXES: [&str; 3] = ["_ws", "_into", "_in_place"];
-const HOT_NAMES: [&str; 1] = ["micro_tile"];
+const HOT_NAMES: [&str; 4] =
+    ["micro_tile", "micro_tile_fast", "micro_tile_fast_body", "micro_tile_fast_x86"];
 const ALLOC_TOKENS: [&str; 6] =
     ["vec!", "Vec::with_capacity", ".to_vec()", ".to_owned()", "Box::new(", ".clone("];
-const TILE_SEGMENTS: [&str; 9] =
-    ["MR", "NR", "MC", "NC", "KC", "TILE", "TILES", "BLOCK", "BLOCKS"];
+const TILE_SEGMENTS: [&str; 11] =
+    ["MR", "NR", "MC", "NC", "KC", "KU", "LANES", "TILE", "TILES", "BLOCK", "BLOCKS"];
 /// The one file allowed to define tile/blocking constants.
 const TILE_HOME: &str = "layout/plan.rs";
 const PURITY_FILES: [&str; 4] =
@@ -526,6 +528,15 @@ mod tests {
         let home = "pub const CPU_MR: usize = 4;\n";
         assert!(rules_of("layout/plan.rs", home).is_empty());
         assert_eq!(rules_of("other.rs", home), vec!["tile-const"]);
+        // Lane-selection constants (K-chain depth, vector-width assumptions)
+        // are blocking policy too — same home, same rule (PR-8).
+        let ku = "const GEMM_KU: usize = 2;\n";
+        assert_eq!(rules_of("runtime/kernel.rs", ku), vec!["tile-const"]);
+        let lanes = "pub const SIMD_LANES: usize = 8;\n";
+        assert_eq!(rules_of("runtime/ref_conv.rs", lanes), vec!["tile-const"]);
+        assert!(rules_of("layout/plan.rs", "pub const CPU_SIMD_KU: usize = 2;\n").is_empty());
+        // "KURTOSIS_WINDOW" has no KU *segment* — substring matches stay out.
+        assert!(rules_of("metrics/x.rs", "const KURTOSIS_WINDOW: usize = 9;\n").is_empty());
     }
 
     #[test]
