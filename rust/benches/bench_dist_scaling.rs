@@ -19,6 +19,11 @@
 //! the parameter-server bound (defense-in-depth — the trainer itself
 //! hard-errors on violation); and every mdgan run's mean fake-batch
 //! staleness must respect its queue-capacity backpressure bound.
+//!
+//! Schema v2 (PR-9): each run row carries a `phases` object — the
+//! per-phase telemetry breakdown (count / total / mean / p50 / p95 / p99)
+//! recorded during THAT run; telemetry is reset between runs (quiescent:
+//! `train_dist` joins every replica thread before returning).
 
 use paragan::coordinator::TrainConfig;
 use paragan::dist::{train_dist, DistMode, DistResult};
@@ -28,7 +33,8 @@ use paragan::util::table::{f2, pct, Table};
 
 const STALENESS_BOUND: u64 = 2;
 
-fn run(mode: DistMode, replicas: usize, steps: u64) -> DistResult {
+/// One measured run, plus the per-phase telemetry breakdown it recorded.
+fn run(mode: DistMode, replicas: usize, steps: u64) -> (DistResult, Json) {
     let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
     let cfg = TrainConfig {
         artifact_dir: dir,
@@ -46,7 +52,12 @@ fn run(mode: DistMode, replicas: usize, steps: u64) -> DistResult {
         },
         ..Default::default()
     };
-    train_dist(&cfg).unwrap_or_else(|e| panic!("{} x{replicas}: {e:?}", mode.as_str()))
+    // Quiescent between runs: `train_dist` joins every replica thread
+    // before returning, so the reset never races a recorder.
+    paragan::telemetry::reset();
+    let r = train_dist(&cfg).unwrap_or_else(|e| panic!("{} x{replicas}: {e:?}", mode.as_str()));
+    let phases = paragan::telemetry::report().phases_json();
+    (r, phases)
 }
 
 /// Weak-scaling efficiency vs the 1-replica sync baseline: per-replica
@@ -75,7 +86,7 @@ fn main() {
     let mut base: Option<DistResult> = None;
     let mut gate_failures: Vec<String> = Vec::new();
 
-    let mut record = |mode: DistMode, r: DistResult, base: &Option<DistResult>| {
+    let mut record = |mode: DistMode, r: DistResult, phases: Json, base: &Option<DistResult>| {
         let eff = base.as_ref().map(|b| efficiency(b, &r)).unwrap_or(1.0);
         let sim_eff = if r.replicas >= 2 && mode == DistMode::Sync {
             simulated_dcgan32_efficiency(r.replicas, 8, if smoke { 80 } else { 150 })
@@ -107,14 +118,15 @@ fn main() {
             ("stale_drops", num(r.stale_drops as f64)),
             ("swaps", num(r.swaps as f64)),
             ("replica_steps", num(r.replica_steps as f64)),
+            ("phases", phases),
         ]));
         r
     };
 
     // --- sync sweep (the weak-scaling curve; n=1 is the baseline) ---
     for &n in sync_counts {
-        let r = run(DistMode::Sync, n, steps);
-        let r = record(DistMode::Sync, r, &base);
+        let (r, phases) = run(DistMode::Sync, n, steps);
+        let r = record(DistMode::Sync, r, phases, &base);
         if base.is_none() {
             base = Some(r);
         } else if n > 1 {
@@ -133,7 +145,7 @@ fn main() {
     let queue_cap = TrainConfig::default().img_buff_cap as f64;
     for mode in [DistMode::Async, DistMode::MdGan] {
         for &n in par_counts {
-            let r = run(mode, n, steps);
+            let (r, phases) = run(mode, n, steps);
             if mode == DistMode::Async && r.train.mean_staleness > STALENESS_BOUND as f64 {
                 gate_failures.push(format!(
                     "async {n}-replica mean staleness {:.2} exceeds bound {STALENESS_BOUND}",
@@ -148,7 +160,7 @@ fn main() {
                     r.mean_fake_staleness
                 ));
             }
-            record(mode, r, &base);
+            record(mode, r, phases, &base);
         }
     }
     drop(record);
@@ -157,7 +169,7 @@ fn main() {
 
     let json = obj(vec![
         ("format", js("paragan-bench-dist")),
-        ("version", num(1.0)),
+        ("version", num(2.0)),
         ("smoke", js(if smoke { "true" } else { "false" })),
         ("model", js("dcgan32")),
         ("batch", num(paragan::runtime::refgen::REF_BATCH as f64)),

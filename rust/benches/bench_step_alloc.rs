@@ -17,6 +17,13 @@
 //! Exit code 1 (the CI gate) if a gated count is nonzero or the arena loses
 //! throughput to the allocating baseline.  `--test` runs the smoke-sized
 //! protocol.
+//!
+//! Schema v3 (PR-9): the JSON carries a `phases` object — the per-phase
+//! telemetry breakdown recorded during the arena-ON throughput run
+//! (telemetry is reset right before it, after the preceding run's trainer
+//! threads have joined).  The steady-state allocation counts above are
+//! measured with recording at its default (ON), so they gate the
+//! instrumented path — same contract as `tests/step_alloc.rs`.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
@@ -491,7 +498,11 @@ fn main() {
     set_arena_mode(Some(false));
     let baseline_sps = train_steps_per_sec(steps, 41);
     set_arena_mode(Some(true));
+    // Phase breakdown for the arena run: reset is safe here — the baseline
+    // run's trainer thread (the only ring writer so far) has returned.
+    paragan::telemetry::reset();
     let arena_sps = train_steps_per_sec(steps, 41);
+    let phases = paragan::telemetry::report().phases_json();
     set_arena_mode(None);
     let speedup = arena_sps / baseline_sps.max(1e-12);
 
@@ -515,7 +526,7 @@ fn main() {
 
     let json = obj(vec![
         ("format", js("paragan-bench-step-alloc")),
-        ("version", num(2.0)),
+        ("version", num(3.0)),
         ("smoke", js(if smoke { "true" } else { "false" })),
         ("model", js("dcgan32")),
         ("warmup_steps", num(warmup as f64)),
@@ -530,6 +541,7 @@ fn main() {
         ("meets_target", js(if speedup >= 1.15 { "true" } else { "false" })),
         ("sync2_agg_steps_per_sec", num(sync2_sps)),
         ("async2_agg_steps_per_sec", num(async2_sps)),
+        ("phases", phases),
     ]);
     let mut text = String::new();
     write_json(&json, &mut text);

@@ -1,0 +1,127 @@
+//! Telemetry overhead bench (PR-9): dcgan32 sync training steps/sec with
+//! span/counter recording ON vs OFF, written to `BENCH_telemetry.json`.
+//!
+//! Always-on observability is only tenable if it is effectively free, so
+//! this bench is the contract's enforcement point: the ON arm must land
+//! within 2% of the OFF arm (CI gate, exit 1), with a 1% target recorded in
+//! the JSON.  The OFF arm is `telemetry::set_enabled(Some(false))` — every
+//! record site degrades to a single relaxed atomic load — which is exactly
+//! the same A/B shape as the workspace arena's `set_arena_mode` bench.
+//!
+//! Protocol: interleaved OFF/ON trials (alternation cancels slow drift —
+//! thermal, page cache, pool warmup), best-of per arm (discards scheduler
+//! hiccups; throughput noise is one-sided).  The ON arm also asserts that
+//! spans were actually recorded, so the gate can never silently pass by
+//! measuring two OFF runs.  `--test` runs the smoke-sized protocol.
+
+use paragan::coordinator::{train_sync, TrainConfig};
+use paragan::telemetry;
+use paragan::util::json::{num, obj, s as js, write_json};
+use paragan::util::table::Table;
+
+/// Hard CI gate: recording may cost at most this fraction of throughput.
+const MAX_OVERHEAD: f64 = 0.02;
+/// Soft target recorded in the JSON (noted, not gated).
+const TARGET_OVERHEAD: f64 = 0.01;
+
+fn steps_per_sec(steps: u64, seed: u64) -> f64 {
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        model,
+        steps,
+        seed,
+        eval_batches: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    train_sync(&cfg).expect("dcgan32 train run").steps_per_sec()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let steps: u64 = if smoke { 6 } else { 40 };
+    let trials: u64 = if smoke { 2 } else { 3 };
+    println!("== telemetry overhead bench{} ==", if smoke { " (smoke)" } else { "" });
+
+    let mut best_off = 0.0f64;
+    let mut best_on = 0.0f64;
+    let mut events_on = 0u64;
+    for trial in 0..trials {
+        telemetry::set_enabled(Some(false));
+        best_off = best_off.max(steps_per_sec(steps, 50 + trial));
+        telemetry::set_enabled(Some(true));
+        // Quiescent: the OFF run's trainer thread has joined; reset so the
+        // final report describes exactly one ON run.
+        telemetry::reset();
+        best_on = best_on.max(steps_per_sec(steps, 50 + trial));
+        events_on = events_on.max(telemetry::events_recorded());
+    }
+    let rep = telemetry::report();
+    telemetry::set_enabled(None);
+
+    let overhead = 1.0 - best_on / best_off.max(1e-12);
+    let meets_gate = overhead <= MAX_OVERHEAD;
+    let meets_target = overhead <= TARGET_OVERHEAD;
+
+    let mut t = Table::new("dcgan32 telemetry recording overhead", &["metric", "value"]);
+    t.row(vec!["steps/s, recording off (best)".into(), format!("{best_off:.2}")]);
+    t.row(vec!["steps/s, recording on (best)".into(), format!("{best_on:.2}")]);
+    t.row(vec!["overhead".into(), format!("{:.2}%", overhead * 100.0)]);
+    t.row(vec!["gate (max)".into(), format!("{:.0}%", MAX_OVERHEAD * 100.0)]);
+    t.row(vec!["target".into(), format!("{:.0}%", TARGET_OVERHEAD * 100.0)]);
+    t.row(vec!["events recorded (on arm)".into(), events_on.to_string()]);
+    t.row(vec!["events dropped".into(), rep.dropped.to_string()]);
+    println!("{}", t.render());
+    println!("{}", rep.render());
+
+    let json = obj(vec![
+        ("format", js("paragan-bench-telemetry")),
+        ("version", num(1.0)),
+        ("smoke", js(if smoke { "true" } else { "false" })),
+        ("model", js("dcgan32")),
+        ("steps", num(steps as f64)),
+        ("trials", num(trials as f64)),
+        ("telemetry_off_steps_per_sec", num(best_off)),
+        ("telemetry_on_steps_per_sec", num(best_on)),
+        ("overhead_frac", num(overhead)),
+        ("max_overhead_frac", num(MAX_OVERHEAD)),
+        ("target_overhead_frac", num(TARGET_OVERHEAD)),
+        ("meets_gate", js(if meets_gate { "true" } else { "false" })),
+        ("meets_target", js(if meets_target { "true" } else { "false" })),
+        ("events_recorded", num(events_on as f64)),
+        ("dropped_events", num(rep.dropped as f64)),
+        ("phases", rep.phases_json()),
+    ]);
+    let mut text = String::new();
+    write_json(&json, &mut text);
+    text.push('\n');
+    std::fs::write("BENCH_telemetry.json", &text).expect("writing BENCH_telemetry.json");
+    println!("wrote BENCH_telemetry.json");
+
+    let mut failed = false;
+    if events_on == 0 {
+        eprintln!("FAIL: the ON arm recorded no telemetry events — the gate measured nothing");
+        failed = true;
+    }
+    if !meets_gate {
+        eprintln!(
+            "FAIL: telemetry overhead {:.2}% exceeds the {:.0}% gate \
+             (off {best_off:.2} vs on {best_on:.2} steps/s)",
+            overhead * 100.0,
+            MAX_OVERHEAD * 100.0
+        );
+        failed = true;
+    }
+    if meets_gate && !meets_target {
+        eprintln!(
+            "note: overhead {:.2}% above the {:.0}% target (recorded, gated at {:.0}%)",
+            overhead * 100.0,
+            TARGET_OVERHEAD * 100.0,
+            MAX_OVERHEAD * 100.0
+        );
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -32,6 +32,7 @@ use super::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
 use super::trainer::{make_pipeline, upsert_y, upsert_z, Evaluator, Prologue, TrainConfig, TrainResult};
 use crate::metrics::tracker::Series;
 use crate::runtime::{run_step_into, HostTensor, ParamStore, Runtime, StepOutputs};
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 /// Messages D sends back for bookkeeping.
@@ -101,9 +102,16 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
             // Read G's counter AFTER the blocking pop: while we wait, G
             // keeps advancing, and a pre-pop read would understate how old
             // the batch really is.
-            let Some(fake) = d_buff.pop_batch() else { break };
+            let fake = {
+                let _wait = telemetry::span(telemetry::Phase::FakeWait);
+                d_buff.pop_batch()
+            };
+            let Some(fake) = fake else { break };
             let g_now = d_g_step_now.load(Ordering::SeqCst);
             let staleness = g_now.saturating_sub(fake.produced_at);
+            // Bounded-staleness admission: the buffer cap is the bound, so
+            // every popped batch is an admit (no drop lane in this scheme).
+            telemetry::count(telemetry::Counter::StaleAdmit, 1);
             for _ in 0..d_cfg.policy.d_steps_per_g {
                 step += 1;
                 let real = pipeline.next_batch().context("real batch (D)")?;
@@ -126,6 +134,7 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
                 });
                 // Publish the new D state for G ("current state") by
                 // refilling the retired snapshot in place.
+                let _pub = telemetry::span(telemetry::Phase::SnapshotPublish);
                 d_cell.publish_with(
                     step,
                     |ps| ps.copy_values_from(params).expect("same D layout every publish"),
@@ -133,6 +142,7 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
                 );
             }
             // Consumed: hand the batch's storage back to the G side.
+            telemetry::count(telemetry::Counter::BatchRecycled, 1);
             d_buff.recycle(fake);
         }
         Ok((params.snapshot(), step))
@@ -143,10 +153,13 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
     let _bind = crate::runtime::workspace::bind_replica(0);
     let mut z_rng = Rng::new(cfg.seed ^ 0x22);
     let mut eval_rng = Rng::new(cfg.seed ^ 0xEE);
-    let mut g_loss = Series::new("g_loss", 0.05);
-    let mut d_loss = Series::new("d_loss", 0.05);
-    let mut fid = Series::new("fid", 1.0);
-    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    // Pre-sized from the planned step count (D reports one loss per D step).
+    let mut g_loss = Series::with_capacity("g_loss", 0.05, cfg.steps as usize);
+    let mut d_loss =
+        Series::with_capacity("d_loss", 0.05, cfg.steps as usize * cfg.policy.d_steps_per_g);
+    let evals = if cfg.eval_every > 0 { cfg.steps / cfg.eval_every } else { 0 } as usize + 1;
+    let mut fid = Series::with_capacity("fid", 1.0, evals);
+    let mut mode_cov = Series::with_capacity("mode_coverage", 1.0, evals);
     let mut staleness_sum = 0u64;
     let mut staleness_n = 0u64;
     let mut images_seen = 0u64;
@@ -184,14 +197,29 @@ pub fn train_async(cfg: &TrainConfig) -> Result<TrainResult> {
 
         // Ship the generated batch to D through img_buff, in a shell
         // recycled from D's returns (storage swap — no per-step clone).
-        let mut batch = img_buff.take_recycled().unwrap_or_else(TaggedBatch::empty);
+        // The span times the recycle turnaround: reclaim, refill, push
+        // (including any block on a full buffer — the staleness bound).
         {
-            let t = g_outs.get_mut("fake").context("g_step fake output")?;
-            batch.refill_from(t, g_in.get("y"), step);
+            let _rec = telemetry::span(telemetry::Phase::Recycle);
+            let mut batch = match img_buff.take_recycled() {
+                Some(b) => {
+                    telemetry::count(telemetry::Counter::FreeListHit, 1);
+                    b
+                }
+                None => {
+                    telemetry::count(telemetry::Counter::FreeListMiss, 1);
+                    TaggedBatch::empty()
+                }
+            };
+            {
+                let t = g_outs.get_mut("fake").context("g_step fake output")?;
+                batch.refill_from(t, g_in.get("y"), step);
+            }
+            if !img_buff.push(batch) {
+                break; // D side died
+            }
         }
-        if !img_buff.push(batch) {
-            break; // D side died
-        }
+        telemetry::gauge(telemetry::Gauge::FakeBuffDepth, img_buff.len() as u64);
 
         // Drain D reports.
         while let Ok(r) = report_rx.try_recv() {

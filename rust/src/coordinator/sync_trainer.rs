@@ -42,10 +42,14 @@ pub fn train_sync(cfg: &TrainConfig) -> Result<TrainResult> {
 
     let mut z_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x22);
     let mut eval_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xEE);
-    let mut g_loss = Series::new("g_loss", 0.05);
-    let mut d_loss = Series::new("d_loss", 0.05);
-    let mut fid = Series::new("fid", 1.0);
-    let mut mode_cov = Series::new("mode_coverage", 1.0);
+    // Pre-size the loss series from the planned step count so the training
+    // loop never reallocs them (d_loss sees d_steps_per_g pushes per step).
+    let mut g_loss = Series::with_capacity("g_loss", 0.05, cfg.steps as usize);
+    let mut d_loss =
+        Series::with_capacity("d_loss", 0.05, cfg.steps as usize * cfg.policy.d_steps_per_g);
+    let evals = if cfg.eval_every > 0 { cfg.steps / cfg.eval_every } else { 0 } as usize + 1;
+    let mut fid = Series::with_capacity("fid", 1.0, evals);
+    let mut mode_cov = Series::with_capacity("mode_coverage", 1.0, evals);
     let mut images_seen = 0u64;
 
     // Step-persistent input/output maps: refreshed in place every step

@@ -36,6 +36,7 @@ use crate::coordinator::trainer::{d_step_inputs_into, upsert_y, upsert_z, Prolog
 use crate::coordinator::TrainResult;
 use crate::metrics::tracker::Series;
 use crate::runtime::{run_step_grads_into, HostTensor, ParamStore, Runtime, StepOutputs};
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 enum Report {
@@ -109,25 +110,43 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
         // storage into a free-listed batch (the exchange hands our own
         // retired buffers back), so the hand-off stops allocating once the
         // free-list is primed.
-        let mut batch = ctx.buff.take_recycled().unwrap_or_else(TaggedBatch::empty);
         {
-            let t = outs.get_mut("fake").context("g_step fake output")?;
-            batch.refill_from(t, g_in.get("y"), g_ver);
-        }
-        images += model.batch as u64;
+            // Recycle turnaround: reclaim a retired shell, refill, push
+            // (including any block on a full buffer — the staleness bound).
+            let _rec = telemetry::span(telemetry::Phase::Recycle);
+            let mut batch = match ctx.buff.take_recycled() {
+                Some(b) => {
+                    telemetry::count(telemetry::Counter::FreeListHit, 1);
+                    b
+                }
+                None => {
+                    telemetry::count(telemetry::Counter::FreeListMiss, 1);
+                    TaggedBatch::empty()
+                }
+            };
+            {
+                let t = outs.get_mut("fake").context("g_step fake output")?;
+                batch.refill_from(t, g_in.get("y"), g_ver);
+            }
+            images += model.batch as u64;
 
-        // Ship the fakes first (D-side progress never depends on whether
-        // our gradient survives the staleness check)…
-        if !ctx.buff.push(batch) {
-            break; // D side gone
+            // Ship the fakes first (D-side progress never depends on whether
+            // our gradient survives the staleness check)…
+            if !ctx.buff.push(batch) {
+                break; // D side gone
+            }
         }
+        telemetry::gauge(telemetry::Gauge::FakeBuffDepth, ctx.buff.len() as u64);
         // …then offer the gradient; a drop just means faster peers already
         // moved the server past our basis.
         match ctx.g_srv.push(&rt, &grads, g_ver)? {
             Push::Applied { step, .. } => {
+                telemetry::count(telemetry::Counter::StaleAdmit, 1);
                 let _ = ctx.reports.send(Report::G { step, loss });
             }
-            Push::Stale { .. } => {}
+            Push::Stale { .. } => {
+                telemetry::count(telemetry::Counter::StaleDrop, 1);
+            }
             Push::Done => break, // step budget reached while we computed
         }
     }
@@ -155,7 +174,11 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
 
     loop {
         // Consume a (possibly stale) fake batch; None = G side finished.
-        let Some(fake) = ctx.buff.pop_batch() else { break };
+        let fake = {
+            let _wait = telemetry::span(telemetry::Phase::FakeWait);
+            ctx.buff.pop_batch()
+        };
+        let Some(fake) = fake else { break };
         // Post-pop read, like the two-thread trainer: G kept advancing
         // while we waited, and that age is real.
         let fake_staleness = ctx.g_srv.version().saturating_sub(fake.produced_at);
@@ -176,11 +199,19 @@ fn d_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
             )?;
             let loss = outs["loss"].data[0] as f64;
             images += model.batch as u64;
-            if let Push::Applied { step, .. } = ctx.d_srv.push(&rt, &grads, d_ver)? {
-                let _ = ctx.reports.send(Report::D { step, loss, fake_staleness });
+            match ctx.d_srv.push(&rt, &grads, d_ver)? {
+                Push::Applied { step, .. } => {
+                    telemetry::count(telemetry::Counter::StaleAdmit, 1);
+                    let _ = ctx.reports.send(Report::D { step, loss, fake_staleness });
+                }
+                Push::Stale { .. } => {
+                    telemetry::count(telemetry::Counter::StaleDrop, 1);
+                }
+                Push::Done => {}
             }
         }
         // The batch is consumed: hand its storage back to the G side.
+        telemetry::count(telemetry::Counter::BatchRecycled, 1);
         ctx.buff.recycle(fake);
     }
     pipeline.shutdown();
@@ -327,7 +358,7 @@ pub(crate) fn train_async_ps(cfg: &TrainConfig) -> Result<DistResult> {
 
     // The bound ScalingManager schedule at each applied G step (pre per-net
     // multiplier — same convention as the sync and mdgan recorders).
-    let mut lr = Series::new("lr", 0.05);
+    let mut lr = Series::with_capacity("lr", 0.05, g_srv.version() as usize);
     for step in 1..=g_srv.version() {
         lr.push(step, scaling.lr_at(step));
     }

@@ -36,6 +36,7 @@ use crate::metrics::tracker::Series;
 use crate::runtime::{
     apply_step, run_step_grads_into, run_step_into, HostTensor, ParamStore, Runtime, StepOutputs,
 };
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 /// One D parameter+slot bundle in flight during a swap.
@@ -110,13 +111,20 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
     let mut d_in: BTreeMap<String, HostTensor> = BTreeMap::new();
     let mut outs = StepOutputs::new();
 
-    while let Ok(task) = w.tasks.recv() {
+    loop {
+        let task = {
+            let _wait = telemetry::span(telemetry::Phase::FakeWait);
+            w.tasks.recv()
+        };
+        let Ok(task) = task else { break };
         match task {
             DTask::Batch(fake) => {
                 let fake_staleness = w
                     .g_step_now
                     .load(Ordering::SeqCst)
                     .saturating_sub(fake.produced_at);
+                // Queue cap is the bound: every delivered batch is an admit.
+                telemetry::count(telemetry::Counter::StaleAdmit, 1);
                 for _ in 0..cfg.policy.d_steps_per_g {
                     local_step += 1;
                     let real = pipeline.next_batch().context("real batch (mdgan)")?;
@@ -143,8 +151,10 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
                 }
                 // Consumed: return the batch's storage to G's free queue
                 // (never blocks; a full queue just forfeits one reuse).
+                telemetry::count(telemetry::Counter::BatchRecycled, 1);
                 let _ = w.ret_tx.try_send(fake);
                 // Republish by refilling the retired snapshot in place.
+                let _pub = telemetry::span(telemetry::Phase::SnapshotPublish);
                 w.snapshot.publish_with(
                     local_step,
                     |ps| ps.copy_values_from(&d_params).expect("same D layout every publish"),
@@ -161,6 +171,7 @@ fn d_worker(w: &DWorker) -> Result<(ParamStore, u64)> {
                     .map_err(|_| anyhow!("mdgan swap replacement never arrived"))?;
                 d_params = p;
                 d_slots = s;
+                let _pub = telemetry::span(telemetry::Phase::SnapshotPublish);
                 w.snapshot.publish_with(
                     local_step,
                     |ps| ps.copy_values_from(&d_params).expect("same D layout every publish"),
@@ -280,8 +291,8 @@ pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
     let _bind = crate::runtime::workspace::bind_replica(0);
     let mut z_rng = Rng::replica_stream(cfg.seed ^ 0x22, 0);
     let mut swap_rng = Rng::new(cfg.seed ^ 0x5A5A);
-    let mut g_loss = Vec::new();
-    let mut lr_series = Vec::new();
+    let mut g_loss = Vec::with_capacity(cfg.steps as usize);
+    let mut lr_series = Vec::with_capacity(cfg.steps as usize);
     let mut swaps = 0u64;
     let mut g_images = 0u64;
 
@@ -322,15 +333,27 @@ pub(crate) fn train_mdgan(cfg: &TrainConfig) -> Result<DistResult> {
                 g_images += model.batch as u64;
                 // D_k gets its OWN fake batch (distinct latents), shipped
                 // in a shell recycled through D_k's return queue.
-                let mut fake =
-                    ret_rxs[k].try_recv().unwrap_or_else(|_| TaggedBatch::empty());
                 {
-                    let t = outs.get_mut("fake").context("g_step fake output")?;
-                    fake.refill_from(t, g_in.get("y"), step);
+                    let _rec = telemetry::span(telemetry::Phase::Recycle);
+                    let mut fake = match ret_rxs[k].try_recv() {
+                        Ok(b) => {
+                            telemetry::count(telemetry::Counter::FreeListHit, 1);
+                            b
+                        }
+                        Err(_) => {
+                            telemetry::count(telemetry::Counter::FreeListMiss, 1);
+                            TaggedBatch::empty()
+                        }
+                    };
+                    {
+                        let t = outs.get_mut("fake").context("g_step fake output")?;
+                        fake.refill_from(t, g_in.get("y"), step);
+                    }
+                    task_txs[k]
+                        .send(DTask::Batch(fake))
+                        .map_err(|_| anyhow!("mdgan D worker {k} queue closed"))?;
                 }
-                task_txs[k]
-                    .send(DTask::Batch(fake))
-                    .map_err(|_| anyhow!("mdgan D worker {k} queue closed"))?;
+                telemetry::gauge(telemetry::Gauge::FakeBuffDepth, task_txs[k].len() as u64);
                 // In-place accumulation, fixed D order — the same float op
                 // sequence as summing fresh stores: ((g_0 + g_1) + g_2)...
                 if k == 0 {

@@ -269,7 +269,7 @@ pub(crate) fn final_eval(cfg: &TrainConfig, g_params: &ParamStore) -> Result<(f6
 /// arrive out of order; the series should not).
 pub(crate) fn series_from(name: &str, mut points: Vec<(u64, f64)>) -> Series {
     points.sort_by_key(|&(step, _)| step);
-    let mut s = Series::new(name, 0.05);
+    let mut s = Series::with_capacity(name, 0.05, points.len());
     for (step, v) in points {
         s.push(step, v);
     }

@@ -78,7 +78,12 @@ fn reduce_with_loss_into(
         // alloc-ok: warmup-only loss slot build (see above).
         scratch.push(vec![loss as f32]);
     }
-    ex.all_reduce_mean_into(replica, scratch)?;
+    {
+        // The exchange wait — lockstep sync's analogue of staleness: time
+        // this replica parks at the all-reduce barrier for its peers.
+        let _span = crate::telemetry::span(crate::telemetry::Phase::Exchange);
+        ex.all_reduce_mean_into(replica, scratch)?;
+    }
     // Store iteration order is the deposit order on every replica, so the
     // positional copy-back is exact.
     for (t, b) in grads.iter_mut().zip(scratch.iter()) {

@@ -52,6 +52,8 @@ fn print_usage() {
          \x20                  [--replicas N  real multi-replica training (crate::dist)]\n\
          \x20                  [--dist-mode sync|async|mdgan] [--dist-topology tree|ring]\n\
          \x20                  [--staleness-bound N] [--swap-every N]\n\
+         \x20                  [--trace FILE  write a Chrome trace-event JSON of the run's phase\n\
+         \x20                   spans (chrome://tracing / Perfetto) and print the telemetry report]\n\
          \x20 paragan repro    <table1|table2|fig1|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig13|all>\n\
          \x20 paragan simulate --workers N [--per-worker-batch N] [--framework paragan|native_tf|studiogan]\n\
          \x20 paragan info     [--artifacts DIR]"
@@ -195,6 +197,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             r.stale_drops,
             r.swaps
         );
+        finish_trace(args)?;
         return Ok(());
     }
 
@@ -216,6 +219,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.mode_cov.last().unwrap_or(f64::NAN),
         res.mean_staleness
     );
+    finish_trace(args)?;
+    Ok(())
+}
+
+/// `--trace FILE`: after a train run, print the aggregate telemetry report
+/// and export the recorded spans as Chrome trace-event JSON (one lane per
+/// replica thread — open in chrome://tracing or Perfetto).
+fn finish_trace(args: &Args) -> Result<()> {
+    let Some(path) = args.get("trace") else { return Ok(()) };
+    println!("{}", paragan::telemetry::report().render());
+    paragan::telemetry::write_chrome_trace(std::path::Path::new(&path))
+        .with_context(|| format!("writing trace to {path}"))?;
+    println!("trace written to {path}");
     Ok(())
 }
 

@@ -17,17 +17,35 @@ pub struct Series {
     pub smoothed: Vec<SeriesPoint>,
 }
 
+/// Growth chunk for series built without a capacity hint: `push` reserves
+/// whole chunks instead of letting two `Vec`s double independently mid-step.
+const SERIES_CHUNK: usize = 1024;
+
 impl Series {
     pub fn new(name: &str, ema_alpha: f64) -> Self {
+        Series::with_capacity(name, ema_alpha, 0)
+    }
+
+    /// Pre-size both point vectors for a planned run length (trainers pass
+    /// `cfg.steps`), so a long training loop never reallocs its loss series.
+    pub fn with_capacity(name: &str, ema_alpha: f64, capacity: usize) -> Self {
         Series {
             name: name.to_string(),
-            points: Vec::new(),
+            points: Vec::with_capacity(capacity),
             ema: Ema::new(ema_alpha),
-            smoothed: Vec::new(),
+            smoothed: Vec::with_capacity(capacity),
         }
     }
 
     pub fn push(&mut self, step: u64, value: f64) {
+        // Chunked growth for un-hinted series: one reserve per SERIES_CHUNK
+        // steps rather than a realloc whenever either Vec happens to fill.
+        if self.points.len() == self.points.capacity() {
+            self.points.reserve(SERIES_CHUNK);
+        }
+        if self.smoothed.len() == self.smoothed.capacity() {
+            self.smoothed.reserve(SERIES_CHUNK);
+        }
         self.points.push(SeriesPoint { step, value });
         let s = self.ema.push(value);
         self.smoothed.push(SeriesPoint { step, value: s });
@@ -124,6 +142,35 @@ mod tests {
         assert_eq!(s.points.len(), 10);
         assert_eq!(s.last(), Some(1.0));
         assert!(s.last_smoothed().unwrap() > 1.0); // EMA lags
+    }
+
+    #[test]
+    fn capacity_hint_means_no_realloc_across_10k_pushes() {
+        // Regression (PR-9): the trainer loop grew two Vecs per step with no
+        // hint.  With a planned-steps hint, 10k pushes must never move
+        // either buffer.
+        let mut s = Series::with_capacity("g_loss", 0.05, 10_000);
+        let p0 = s.points.as_ptr();
+        let sm0 = s.smoothed.as_ptr();
+        for i in 0..10_000 {
+            s.push(i, i as f64 * 0.1);
+        }
+        assert_eq!(s.points.as_ptr(), p0, "points realloc'd despite hint");
+        assert_eq!(s.smoothed.as_ptr(), sm0, "smoothed realloc'd despite hint");
+        assert_eq!(s.points.capacity(), 10_000);
+        assert_eq!(s.points.len(), 10_000);
+    }
+
+    #[test]
+    fn unhinted_series_grows_in_chunks() {
+        let mut s = Series::new("x", 0.1);
+        for i in 0..(SERIES_CHUNK as u64) {
+            s.push(i, 1.0);
+        }
+        // One chunk covers the first SERIES_CHUNK pushes: capacity is the
+        // chunk size exactly, not a power-of-two doubling ladder.
+        assert_eq!(s.points.capacity(), SERIES_CHUNK);
+        assert_eq!(s.smoothed.capacity(), SERIES_CHUNK);
     }
 
     #[test]

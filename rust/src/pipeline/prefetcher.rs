@@ -23,6 +23,7 @@ use crate::util::sync::Mutex;
 use super::source::StorageNode;
 use super::tuner::{CongestionTuner, TunerAction, TunerConfig};
 use crate::exec::{bounded, Receiver, Sender};
+use crate::telemetry;
 use crate::util::stats::Sample;
 
 /// A training batch (flat NCHW pixels + labels).
@@ -79,6 +80,11 @@ pub struct DataPipeline {
     /// and exit.  Growth cancels unclaimed units before spawning.
     retire_budget: AtomicUsize,
     tuner: Option<Mutex<CongestionTuner>>,
+    /// Worker target latched by `next_batch` (which holds only `&self` —
+    /// `Evaluator::fit` takes `&DataPipeline`) when the tuner's data-wait
+    /// monitor asks to scale; a worker (which holds an `Arc<Self>`) swaps
+    /// it out and applies it.  0 = no pending target (real targets are >=1).
+    pending_worker_target: AtomicUsize,
     /// Batch-extraction latency samples (seconds) — the Fig. 11 metric.
     extract_latency: Mutex<Sample>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -117,6 +123,7 @@ impl DataPipeline {
             next_worker_id: AtomicUsize::new(0),
             retire_budget: AtomicUsize::new(0),
             tuner: cfg.tuner.clone().map(|t| Mutex::new(CongestionTuner::new(t))),
+            pending_worker_target: AtomicUsize::new(0),
             extract_latency: Mutex::new(Sample::new()),
             handles: Mutex::new(Vec::new()),
             tx_template: tx,
@@ -153,19 +160,29 @@ impl DataPipeline {
                 if me.claim_retire() {
                     break;
                 }
+                // Apply a scale target the consumer's data-wait monitor
+                // latched (next_batch can't spawn: it has no Arc<Self>).
+                let pending = me.pending_worker_target.swap(0, Ordering::SeqCst);
+                if pending > 0 {
+                    me.apply_worker_target(pending);
+                }
                 // Reuse a recycled batch's buffers when one is available
                 // (clear keeps capacity — the refill below is then
                 // allocation-free); fall back to a fresh allocation.
                 let (mut data, mut labels) = match me.recycle_rx.try_recv() {
                     Ok(mut b) => {
+                        telemetry::count(telemetry::Counter::FreeListHit, 1);
                         b.data.clear();
                         b.labels.clear();
                         (b.data, b.labels)
                     }
-                    Err(_) => (
-                        Vec::with_capacity(me.batch_size * 3 * 32 * 32),
-                        Vec::with_capacity(me.batch_size),
-                    ),
+                    Err(_) => {
+                        telemetry::count(telemetry::Counter::FreeListMiss, 1);
+                        (
+                            Vec::with_capacity(me.batch_size * 3 * 32 * 32),
+                            Vec::with_capacity(me.batch_size),
+                        )
+                    }
                 };
                 for _ in 0..me.batch_size {
                     let (rec, lat) = me.node.fetch();
@@ -213,8 +230,24 @@ impl DataPipeline {
     /// Pop the next batch, recording the extraction latency.
     pub fn next_batch(&self) -> Option<Batch> {
         let t0 = Instant::now();
-        let b = self.rx.recv().ok();
-        self.extract_latency.lock().unwrap().push(t0.elapsed().as_secs_f64());
+        let b = {
+            let _span = telemetry::span(telemetry::Phase::DataWait);
+            self.rx.recv().ok()
+        };
+        let wait = t0.elapsed().as_secs_f64();
+        telemetry::gauge(telemetry::Gauge::QueueDepth, self.rx.len() as u64);
+        self.extract_latency.lock().unwrap().push(wait);
+        // Consumer-side tuner hookup: the observed data-wait feeds the same
+        // tuner the workers feed fetch latencies — it catches the regime
+        // where every fetch is fast but the fleet is too small to keep the
+        // buffer ahead of the training loop.
+        if let Some(tuner) = &self.tuner {
+            if let TunerAction::Scale { workers, .. } =
+                tuner.lock().unwrap().observe_data_wait(wait)
+            {
+                self.pending_worker_target.store(workers, Ordering::SeqCst);
+            }
+        }
         b
     }
 
@@ -222,6 +255,7 @@ impl DataPipeline {
     /// free-list is full (or the pipeline is shutting down) the batch is
     /// simply dropped and the next producer allocates fresh.
     pub fn recycle(&self, b: Batch) {
+        telemetry::count(telemetry::Counter::BatchRecycled, 1);
         let _ = self.recycle_tx.try_send(b);
     }
 
@@ -389,6 +423,28 @@ mod tests {
         assert!(p.live_workers() <= p.desired_workers());
         assert_eq!(p.desired_workers(), 4);
         assert!(p.spawned_workers() >= 4, "monotonic id counter");
+        p.shutdown();
+    }
+
+    #[test]
+    fn pending_worker_target_is_applied_by_workers() {
+        // The consumer-side data-wait monitor can't spawn (no Arc<Self> in
+        // next_batch) — it latches a target and a worker applies it.
+        let p = DataPipeline::start(
+            node(1e-5),
+            PipelineConfig { batch_size: 2, initial_workers: 1, initial_buffer: 2, tuner: None },
+        );
+        p.next_batch().unwrap();
+        p.pending_worker_target.store(3, Ordering::SeqCst);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while p.desired_workers() != 3 {
+            let _ = p.next_batch(); // keep the worker looping
+            assert!(
+                std::time::Instant::now() < deadline,
+                "latched target never applied (desired={})",
+                p.desired_workers()
+            );
+        }
         p.shutdown();
     }
 

@@ -59,6 +59,10 @@ pub struct CongestionTuner {
     window: SlidingWindow,
     /// Baseline median latency learned from the first full window.
     baseline: Option<f64>,
+    /// Consumer-side data-wait observations (telemetry's `data_wait` phase).
+    wait_window: SlidingWindow,
+    /// Baseline median data-wait learned from the first full wait window.
+    wait_baseline: Option<f64>,
     workers: usize,
     buffer: usize,
     since_action: usize,
@@ -66,14 +70,21 @@ pub struct CongestionTuner {
     shrinks: u64,
 }
 
+/// Floor for the data-wait baseline: a well-fed consumer waits ~0s, and a
+/// relative threshold against zero would fire on any jitter.  100µs keeps
+/// the trigger meaning "the training loop actually blocked".
+const WAIT_BASELINE_FLOOR: f64 = 1e-4;
+
 impl CongestionTuner {
     pub fn new(cfg: TunerConfig) -> Self {
         let workers = cfg.min_workers;
         let buffer = cfg.min_buffer;
         CongestionTuner {
             window: SlidingWindow::new(cfg.window),
+            wait_window: SlidingWindow::new(cfg.window),
             cfg,
             baseline: None,
+            wait_baseline: None,
             workers,
             buffer,
             since_action: 0,
@@ -126,6 +137,44 @@ impl CongestionTuner {
             self.buffer = (self.buffer / 2).max(self.cfg.min_buffer);
             self.since_action = 0;
             self.shrinks += 1;
+            TunerAction::Scale { workers: self.workers, buffer: self.buffer }
+        } else {
+            TunerAction::Hold
+        }
+    }
+
+    /// Feed one consumer-side data-wait observation (seconds): the time the
+    /// training loop blocked in `next_batch` waiting for a batch, as measured
+    /// by the telemetry `data_wait` span.  Complements [`observe`], which only
+    /// sees producer-side fetch latency and so misses the case where workers
+    /// are individually fast but collectively too few.
+    ///
+    /// Grow-only: the p90 wait over the window exceeding the threshold grows
+    /// resources; release decisions stay with the producer-side monitor,
+    /// which sees every fetch rather than only consumer stalls.
+    ///
+    /// [`observe`]: CongestionTuner::observe
+    pub fn observe_data_wait(&mut self, wait: f64) -> TunerAction {
+        self.wait_window.push(wait);
+        self.since_action += 1;
+        if self.wait_baseline.is_none() {
+            if self.wait_window.is_full() {
+                self.wait_baseline = Some(self.wait_window.quantile(0.5));
+            }
+            return TunerAction::Hold;
+        }
+        if self.since_action < self.cfg.cooldown {
+            return TunerAction::Hold;
+        }
+        let baseline = self.wait_baseline.unwrap().max(WAIT_BASELINE_FLOOR);
+        // Quantile is O(window log window) with a scratch sort — only pay
+        // for it once the cooldown gate is open.
+        let p90 = self.wait_window.quantile(0.9);
+        if p90 > self.cfg.high_factor * baseline && self.workers < self.cfg.max_workers {
+            self.workers = (self.workers * 2).min(self.cfg.max_workers);
+            self.buffer = (self.buffer * 2).min(self.cfg.max_buffer);
+            self.since_action = 0;
+            self.grows += 1;
             TunerAction::Scale { workers: self.workers, buffer: self.buffer }
         } else {
             TunerAction::Hold
@@ -213,6 +262,62 @@ mod tests {
             }
             t.workers() == TunerConfig::default().min_workers
         });
+    }
+
+    #[test]
+    fn data_wait_congestion_grows_workers() {
+        let mut t = CongestionTuner::new(TunerConfig::default());
+        // Well-fed consumer: waits are ~0, baseline clamps to the floor.
+        for _ in 0..64 {
+            t.observe_data_wait(1e-6);
+        }
+        assert_eq!(t.workers(), 1);
+        // Consumer starts stalling: p90 wait far above threshold.
+        for _ in 0..200 {
+            t.observe_data_wait(5e-3);
+        }
+        assert!(t.workers() > 1, "data-wait stalls should grow: {}", t.workers());
+        assert!(t.grows() >= 1);
+    }
+
+    #[test]
+    fn data_wait_never_shrinks() {
+        let mut t = CongestionTuner::new(TunerConfig::default());
+        for _ in 0..64 {
+            t.observe_data_wait(5e-3); // high baseline
+        }
+        for _ in 0..200 {
+            t.observe_data_wait(5e-3);
+        }
+        let peak = t.workers();
+        for _ in 0..400 {
+            // Waits collapse to zero: the data-wait monitor must HOLD, not
+            // release — shrinking belongs to the producer-side monitor.
+            assert_eq!(t.observe_data_wait(0.0), TunerAction::Hold);
+        }
+        assert_eq!(t.workers(), peak);
+        assert_eq!(t.shrinks(), 0);
+    }
+
+    #[test]
+    fn data_wait_respects_bounds_and_cooldown() {
+        let cfg = TunerConfig { cooldown: 50, ..Default::default() };
+        let mut t = CongestionTuner::new(cfg.clone());
+        for _ in 0..32 {
+            t.observe_data_wait(2e-3);
+        }
+        let mut scales = 0;
+        for _ in 0..60 {
+            if t.observe_data_wait(50e-3) != TunerAction::Hold {
+                scales += 1;
+            }
+        }
+        assert!(scales <= 2, "{scales} scale actions in 60 obs with cooldown 50");
+        for _ in 0..5000 {
+            t.observe_data_wait(1.0);
+            assert!(t.workers() <= cfg.max_workers);
+            assert!(t.buffer() <= cfg.max_buffer);
+        }
     }
 
     #[test]

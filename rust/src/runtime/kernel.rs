@@ -131,9 +131,25 @@ pub fn simd_available() -> bool {
     })
 }
 
+/// SIMD-request degradations to the exact lane, process-wide.  A plain
+/// counter lives HERE (not a `telemetry::` call — this module is purity-
+/// scoped, see `xtask lint`'s telemetry-purity rule); `telemetry::report`
+/// mirrors it at read time, and CI/benches assert on the accessor instead
+/// of scraping stderr.
+static SIMD_DEGRADED: AtomicUsize = AtomicUsize::new(0);
+
+/// How many SIMD lane requests degraded to the exact lane so far.
+pub fn simd_degradations() -> u64 {
+    SIMD_DEGRADED.load(Ordering::Relaxed) as u64
+}
+
 fn note_simd_fallback_once(reason: &str) {
+    SIMD_DEGRADED.fetch_add(1, Ordering::Relaxed);
     static WARNED: OnceLock<()> = OnceLock::new();
     WARNED.get_or_init(|| {
+        // One structured event (machine-parseable key=value) + the human
+        // stderr note; repeats only bump the counter.
+        log::warn!(target: "paragan::telemetry", "event=lane_degraded reason=\"{reason}\"");
         eprintln!("paragan: SIMD fast lane requested but {reason}; using the exact lane");
     });
 }

@@ -12,6 +12,7 @@ use anyhow::{anyhow, Context, Result};
 use super::artifact::{ArtifactSpec, Role};
 use super::client::Runtime;
 use super::params::{HostTensor, ParamStore};
+use crate::telemetry;
 
 /// Extra outputs of a step (loss, logits, generated images, features).
 pub type StepOutputs = BTreeMap<String, HostTensor>;
@@ -54,6 +55,9 @@ pub fn run_step_into(
     data: &BTreeMap<String, HostTensor>,
     outs: &mut StepOutputs,
 ) -> Result<()> {
+    // Fused steps (grads + update) span the whole artifact under the grads
+    // phase of their key — this is THE boundary where step time is measured.
+    let _span = telemetry::span(telemetry::phase_for_step_key(&spec.key));
     if rt.step_in_place(spec, step, lr, params, slots, dparams, data, outs)? {
         return Ok(());
     }
@@ -181,6 +185,7 @@ pub fn run_step_grads_into(
     grads: &mut ParamStore,
     outs: &mut StepOutputs,
 ) -> Result<()> {
+    let _span = telemetry::span(telemetry::phase_for_step_key(&spec.key));
     if rt.grads_in_place(spec, params, dparams, data, grads, outs)? {
         return Ok(());
     }
@@ -213,6 +218,7 @@ pub fn apply_step(
     slots: &mut [ParamStore],
     grads: &ParamStore,
 ) -> Result<()> {
+    let _span = telemetry::span(telemetry::Phase::Apply);
     if rt.apply_in_place(spec, step, lr, params, slots, grads)? {
         return Ok(());
     }
@@ -277,6 +283,7 @@ pub fn run_inference_into(
     data: &BTreeMap<String, HostTensor>,
     outs: &mut StepOutputs,
 ) -> Result<()> {
+    let _span = telemetry::span(telemetry::Phase::Generate);
     if rt.infer_in_place(spec, params, data, outs)? {
         return Ok(());
     }

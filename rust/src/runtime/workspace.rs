@@ -55,6 +55,18 @@ use super::ref_conv::{ConvNet, Layer, LayerOp};
 /// 0 = unset (follow `PARAGAN_ARENA`), 1 = forced on, 2 = forced off.
 static ARENA_MODE: AtomicUsize = AtomicUsize::new(0);
 
+/// Process-wide overflow-fallback count across every workspace instance.
+/// A plain counter lives HERE (this module is purity-scoped — no
+/// `telemetry::` calls allowed, see `xtask lint`'s telemetry-purity rule);
+/// `telemetry::report` mirrors it at read time.
+static TOTAL_OVERFLOW_TAKES: AtomicUsize = AtomicUsize::new(0);
+
+/// Slab-overflow heap fallbacks taken by ALL workspaces this process (the
+/// per-instance count is [`Workspace::overflow_takes`]).
+pub fn total_overflow_takes() -> u64 {
+    TOTAL_OVERFLOW_TAKES.load(Ordering::Relaxed) as u64
+}
+
 fn env_arena() -> bool {
     static ON: OnceLock<bool> = OnceLock::new();
     *ON.get_or_init(|| {
@@ -312,6 +324,7 @@ impl Workspace {
             let shortfall = self.in_use.saturating_sub(self.slab.len()).max(len);
             self.pending_grow = self.pending_grow.max(shortfall);
             self.overflow_takes += 1;
+            TOTAL_OVERFLOW_TAKES.fetch_add(1, Ordering::Relaxed);
             let mut owned = vec![0f32; len].into_boxed_slice();
             // SAFETY: a freshly allocated non-empty box is non-null.
             let ptr = unsafe { NonNull::new_unchecked(owned.as_mut_ptr()) };

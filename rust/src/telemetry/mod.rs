@@ -1,0 +1,956 @@
+//! Always-on, zero-steady-state-alloc observability: phase spans, counters
+//! and gauges recorded into per-thread pre-sized ring buffers, exported as
+//! a Chrome trace-event JSON (`paragan train --trace out.json`), an
+//! aggregate [`TelemetryReport`] (per-phase Streaming stats + p50/p95/p99
+//! via `util::stats`, rendered through `util::table`), and phase-breakdown
+//! fields in `BENCH_dist.json` / `BENCH_step_alloc.json`.
+//!
+//! **Hot-path contract.**  After a thread's first span (which registers its
+//! lane — one `Arc` + one pre-sized slot array, warmup territory),
+//! recording allocates NOTHING and takes no lock: a span is two
+//! `Instant` reads, one thread-local access, one slot write and one
+//! `Release` store ([`Ring::record`] is single-writer wait-free; readers
+//! never block the writer).  `tests/step_alloc.rs` pins the zero-alloc
+//! claim with the counting allocator and recording enabled; the ring's
+//! publish protocol is loom-model-checked in `tests/loom_models.rs`.
+//!
+//! **Boundary discipline (PR-9 decision).**  Instrumentation lives ONLY at
+//! the boundary layers — `runtime/step.rs`, `coordinator/*`, `dist/*`,
+//! `pipeline/*` — never inside the pure compute modules
+//! (kernel/ref_conv/workspace/plan).  `cargo xtask lint`'s
+//! `telemetry-purity` rule rejects any `telemetry::` reference in those
+//! files; state the pure modules already own (the kernel's SIMD degrade
+//! count, the workspace's overflow-fallback count) is MIRRORED into the
+//! report at read time instead.
+//!
+//! **On/off.**  Enabled by default; `PARAGAN_TELEMETRY=off` (or
+//! [`set_enabled`]`(Some(false))` — a tri-state like the workspace arena's)
+//! reduces every record site to one relaxed atomic load, which is what
+//! `benches/bench_telemetry.rs` measures the ≤ 2% overhead gate against.
+//! Ring capacity is [`DEFAULT_RING_CAP`] events per lane, overridable via
+//! `PARAGAN_TELEMETRY_CAP`; a full ring DROPS new events (counted) rather
+//! than wrapping, so published slots are immutable and concurrent readers
+//! are safe by construction.
+
+use std::cell::{Cell, OnceCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::stats::{Sample, Streaming};
+use crate::util::sync::Mutex;
+use crate::util::table::Table;
+
+// The ring itself is built on the `util::sync` shim so the loom lane can
+// model-check the publish protocol with the exact production code.
+use crate::util::sync::atomic as shim_atomic;
+use crate::util::sync::UnsafeCell;
+
+// ---------------------------------------------------------------------------
+// Phases, counters, gauges
+// ---------------------------------------------------------------------------
+
+/// The span taxonomy.  One phase per boundary the step pipeline crosses;
+/// trainers never invent ad-hoc names, so traces and reports are
+/// comparable across modes and PRs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Phase {
+    /// Waiting on the data pipeline for a real batch (`next_batch`).
+    DataWait = 0,
+    /// Inference-only artifact execution (generate / fid_features).
+    Generate = 1,
+    /// Discriminator forward+backward (fused or grads-only).
+    DGrads = 2,
+    /// Generator forward+backward (fused or grads-only).
+    GGrads = 3,
+    /// All-reduce / exchange wait (sync dist mode).
+    Exchange = 4,
+    /// Optimizer update from externally reduced gradients.
+    Apply = 5,
+    /// Publishing a parameter snapshot for the peer side.
+    SnapshotPublish = 6,
+    /// Recycled-shell turnaround: refill + hand-off of a reused batch.
+    Recycle = 7,
+    /// Waiting on the fake-batch exchange (async D side `pop_batch`).
+    FakeWait = 8,
+}
+
+pub const PHASE_COUNT: usize = 9;
+
+impl Phase {
+    pub const ALL: [Phase; PHASE_COUNT] = [
+        Phase::DataWait,
+        Phase::Generate,
+        Phase::DGrads,
+        Phase::GGrads,
+        Phase::Exchange,
+        Phase::Apply,
+        Phase::SnapshotPublish,
+        Phase::Recycle,
+        Phase::FakeWait,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::DataWait => "data_wait",
+            Phase::Generate => "generate",
+            Phase::DGrads => "d_grads",
+            Phase::GGrads => "g_grads",
+            Phase::Exchange => "exchange_wait",
+            Phase::Apply => "apply",
+            Phase::SnapshotPublish => "snapshot_publish",
+            Phase::Recycle => "recycle",
+            Phase::FakeWait => "fake_wait",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Phase> {
+        Phase::ALL.get(v as usize).copied()
+    }
+}
+
+/// Map a step artifact key to its span phase — the ONE place the
+/// `d_step_*` / `g_step_*` / `generate*` naming convention is interpreted,
+/// so `runtime/step.rs` stays free of per-trainer knowledge.
+pub fn phase_for_step_key(key: &str) -> Phase {
+    if key.starts_with("d_step") {
+        Phase::DGrads
+    } else if key.starts_with("g_step") {
+        Phase::GGrads
+    } else {
+        Phase::Generate
+    }
+}
+
+/// Monotonic event counters (wait-free `fetch_add`).  The report also
+/// mirrors two counts owned by the pure modules (never instrumented
+/// directly — see the module docs): the kernel's SIMD lane degradations
+/// and the workspace's overflow-fallback takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Parameter-server pushes admitted within the staleness bound.
+    StaleAdmit = 0,
+    /// Parameter-server pushes dropped as too stale.
+    StaleDrop = 1,
+    /// Recycled-shell reuse: a free-list pop served the request.
+    FreeListHit = 2,
+    /// Free list empty: a fresh allocation was taken instead.
+    FreeListMiss = 3,
+    /// Consumed batches handed back through a recycle channel.
+    BatchRecycled = 4,
+}
+
+pub const COUNTER_COUNT: usize = 5;
+
+impl Counter {
+    pub const ALL: [Counter; COUNTER_COUNT] = [
+        Counter::StaleAdmit,
+        Counter::StaleDrop,
+        Counter::FreeListHit,
+        Counter::FreeListMiss,
+        Counter::BatchRecycled,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::StaleAdmit => "staleness_admits",
+            Counter::StaleDrop => "staleness_drops",
+            Counter::FreeListHit => "free_list_hits",
+            Counter::FreeListMiss => "free_list_fresh_allocs",
+            Counter::BatchRecycled => "batches_recycled",
+        }
+    }
+}
+
+/// Last-value gauges (with a high-water mark) for queue depths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Gauge {
+    /// Prefetcher ready-queue depth observed at `next_batch`.
+    QueueDepth = 0,
+    /// Fake-batch exchange (`ImgBuff`) depth observed at the hand-off.
+    FakeBuffDepth = 1,
+}
+
+pub const GAUGE_COUNT: usize = 2;
+
+impl Gauge {
+    pub const ALL: [Gauge; GAUGE_COUNT] = [Gauge::QueueDepth, Gauge::FakeBuffDepth];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "pipeline_queue_depth",
+            Gauge::FakeBuffDepth => "fake_buff_depth",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The ring: single-writer pre-sized event log
+// ---------------------------------------------------------------------------
+
+/// One recorded span.  24 bytes, `Copy`, so slots publish by value.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Event {
+    /// Nanoseconds since the process-wide trace epoch.
+    pub start_ns: u64,
+    /// Span duration in nanoseconds.
+    pub dur_ns: u64,
+    /// `Phase` discriminant.
+    pub phase: u8,
+    /// Nesting depth at span open (0 = top level).
+    pub depth: u8,
+}
+
+/// Pre-sized single-writer event log with lock-free publication.
+///
+/// Protocol (loom-checked in `tests/loom_models.rs`):
+/// * ONE owning thread calls [`Ring::record`]: write slot `head`, then
+///   store `head + 1` with `Release`.  A full ring drops (counted).
+/// * Any thread may read: `Acquire`-load `head`, then read only slots
+///   below it — published slots are never rewritten (no wrap), so reads
+///   race nothing.
+/// * [`Ring::reset`] is quiescent-only (callers hold no concurrent
+///   writer — benches reset between runs after joining workers).
+#[derive(Debug)]
+pub struct Ring {
+    slots: Box<[UnsafeCell<Event>]>,
+    head: shim_atomic::AtomicUsize,
+    dropped: shim_atomic::AtomicU64,
+}
+
+// SAFETY: `slots[i]` is written only by the single owning writer thread and
+// only while `i >= head`; the `Release` store of `head + 1` in `record`
+// publishes the write, and readers touch a slot only after an `Acquire`
+// load of `head` shows it published — after which it is immutable (the
+// ring never wraps).  `reset` is documented quiescent-only.
+unsafe impl Sync for Ring {}
+// SAFETY: moving a `Ring` between threads transfers plain owned data; the
+// slot cells carry no thread affinity of their own (the single-writer
+// discipline above is what guards access, not the owning thread identity).
+unsafe impl Send for Ring {}
+
+impl Ring {
+    pub fn new(cap: usize) -> Ring {
+        let slots: Vec<UnsafeCell<Event>> =
+            (0..cap.max(1)).map(|_| UnsafeCell::new(Event::default())).collect();
+        Ring {
+            slots: slots.into_boxed_slice(),
+            head: shim_atomic::AtomicUsize::new(0),
+            dropped: shim_atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Append one event.  Single-writer: only the lane's owning thread may
+    /// call this.  Wait-free, allocation-free; a full ring drops.
+    pub fn record(&self, ev: Event) {
+        // Relaxed is enough for the writer's own read of head — it is the
+        // only thread that ever stores it.
+        let h = self.head.load(Ordering::Relaxed);
+        if h >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.slots[h].with_mut(|p| {
+            // SAFETY: single-writer protocol — slot `h` is unpublished
+            // (`h >= head`), so no reader touches it, and no other writer
+            // exists.  See the `Sync` impl note above.
+            unsafe { *p = ev }
+        });
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy every published event into `out` (append).  Safe concurrently
+    /// with the writer: only slots below the `Acquire`-loaded head are
+    /// read, and those are immutable.
+    pub fn snapshot(&self, out: &mut Vec<Event>) {
+        let h = self.head.load(Ordering::Acquire);
+        for slot in self.slots.iter().take(h) {
+            out.push(slot.with(|p| {
+                // SAFETY: `slot` is below the published head, hence
+                // initialized and never written again.
+                unsafe { *p }
+            }));
+        }
+    }
+
+    /// Published event count.
+    pub fn len(&self) -> usize {
+        self.head.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events lost to a full ring.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Forget all published events.  QUIESCENT-ONLY: the caller must
+    /// guarantee no concurrent `record`/`snapshot` (benches call this
+    /// between runs, after every worker has joined).
+    pub fn reset(&self) {
+        self.head.store(0, Ordering::SeqCst);
+        self.dropped.store(0, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global state: enable switch, epoch, counters, lane registry
+// ---------------------------------------------------------------------------
+
+/// Default per-lane ring capacity (events).  ~16k spans ≈ 3k+ steps of the
+/// densest lane; 16 bytes each keeps a lane under 256 KiB.
+pub const DEFAULT_RING_CAP: usize = 1 << 14;
+
+/// Tri-state like the workspace arena's: 0 = follow `PARAGAN_TELEMETRY`,
+/// 1 = forced off, 2 = forced on.  Plain std atomic (const-initializable;
+/// this switch is config, not modeled concurrency).
+static MODE: AtomicUsize = AtomicUsize::new(0);
+
+#[allow(clippy::declare_interior_mutable_const)]
+const COUNTER_ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; COUNTER_COUNT] = [COUNTER_ZERO; COUNTER_COUNT];
+static GAUGE_LAST: [AtomicU64; GAUGE_COUNT] = [COUNTER_ZERO; GAUGE_COUNT];
+static GAUGE_MAX: [AtomicU64; GAUGE_COUNT] = [COUNTER_ZERO; GAUGE_COUNT];
+
+struct Lane {
+    /// Chrome trace `tid` (registration ordinal — unique per lane).
+    tid: usize,
+    /// Display name: `replica{k}` when the thread is replica-bound at
+    /// registration, else `main`.
+    name: String,
+    ring: Ring,
+}
+
+static REGISTRY: OnceLock<Mutex<Vec<Arc<Lane>>>> = OnceLock::new();
+
+thread_local! {
+    static TL_LANE: OnceCell<Arc<Lane>> = const { OnceCell::new() };
+    static TL_DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+fn env_default_on() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !std::env::var("PARAGAN_TELEMETRY")
+            .map(|v| matches!(v.trim(), "off" | "0" | "false"))
+            .unwrap_or(false)
+    })
+}
+
+fn env_ring_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("PARAGAN_TELEMETRY_CAP")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(DEFAULT_RING_CAP)
+    })
+}
+
+/// Is recording on right now?  One relaxed load — this is the entire cost
+/// of every record site when telemetry is disabled.
+#[inline]
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => env_default_on(),
+    }
+}
+
+/// Set the process-wide recording mode (`None` restores the
+/// `PARAGAN_TELEMETRY` env default).  Same tri-state shape as
+/// `workspace::set_arena_mode`, and used the same way by the A/B overhead
+/// bench.
+pub fn set_enabled(on: Option<bool>) {
+    let v = match on {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    MODE.store(v, Ordering::SeqCst);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Lane>>> {
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register the calling thread's lane (cold: once per thread, allocates
+/// the ring — warmup territory by the zero-steady-state contract).
+fn register_lane() -> Arc<Lane> {
+    let name = match crate::runtime::workspace::bound_replica() {
+        Some(k) => format!("replica{k}"),
+        None => "main".to_string(),
+    };
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let lane = Arc::new(Lane { tid: reg.len(), name, ring: Ring::new(env_ring_cap()) });
+    reg.push(lane.clone());
+    lane
+}
+
+#[inline]
+fn with_lane<R>(f: impl FnOnce(&Lane) -> R) -> R {
+    TL_LANE.with(|cell| f(cell.get_or_init(register_lane)))
+}
+
+// ---------------------------------------------------------------------------
+// Recording API
+// ---------------------------------------------------------------------------
+
+/// An open phase span; records on drop.  Inert (two field writes, no
+/// timestamp) when telemetry is disabled.
+#[must_use = "a span records when dropped — bind it to a guard variable"]
+pub struct SpanGuard {
+    start_ns: u64,
+    phase: Phase,
+    depth: u32,
+    armed: bool,
+}
+
+/// Open a span for `phase` on the calling thread.  Nested spans record
+/// their depth, and the Chrome export nests them by time containment.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { start_ns: 0, phase, depth: 0, armed: false };
+    }
+    let depth = TL_DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    SpanGuard { start_ns: now_ns(), phase, depth, armed: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur_ns = now_ns().saturating_sub(self.start_ns);
+        TL_DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        with_lane(|lane| {
+            lane.ring.record(Event {
+                start_ns: self.start_ns,
+                dur_ns,
+                phase: self.phase as u8,
+                depth: self.depth.min(u8::MAX as u32) as u8,
+            });
+        });
+    }
+}
+
+/// Bump a counter by `n`.  Wait-free; no-op when disabled.
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Set a gauge's current value (also tracks the high-water mark).
+#[inline]
+pub fn gauge(g: Gauge, v: u64) {
+    if enabled() {
+        GAUGE_LAST[g as usize].store(v, Ordering::Relaxed);
+        GAUGE_MAX[g as usize].fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+/// Total events published across every lane (tests assert recording
+/// actually happened inside measured sections).
+pub fn events_recorded() -> u64 {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|l| l.ring.len() as u64).sum()
+}
+
+/// Current value of a counter.
+pub fn counter_value(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Forget all recorded events, counters and gauges.  QUIESCENT-ONLY (see
+/// [`Ring::reset`]); lanes of finished threads stay registered but empty.
+pub fn reset() {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    for lane in reg.iter() {
+        lane.ring.reset();
+    }
+    for c in &COUNTERS {
+        c.store(0, Ordering::SeqCst);
+    }
+    for g in &GAUGE_LAST {
+        g.store(0, Ordering::SeqCst);
+    }
+    for g in &GAUGE_MAX {
+        g.store(0, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation: TelemetryReport
+// ---------------------------------------------------------------------------
+
+/// Aggregate stats for one phase across all lanes.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_secs: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// One gauge's last value and high-water mark.
+#[derive(Debug, Clone, Copy)]
+pub struct GaugeStat {
+    pub gauge: Gauge,
+    pub last: u64,
+    pub max: u64,
+}
+
+/// The per-run aggregate summary: phase quantiles, counters (including the
+/// mirrored pure-module counts), gauges, and recording health.
+#[derive(Debug, Clone)]
+pub struct TelemetryReport {
+    /// Phases with at least one span, in `Phase::ALL` order.
+    pub phases: Vec<PhaseStat>,
+    /// `(name, value)` — the `Counter` set plus mirrored counts
+    /// (`simd_lane_degradations` from the kernel, `workspace_overflow_takes`
+    /// from the workspace arena).
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<GaugeStat>,
+    /// Lanes that recorded at least one event.
+    pub active_lanes: usize,
+    pub events: u64,
+    /// Events lost to full rings.
+    pub dropped: u64,
+}
+
+/// Build the aggregate report from everything recorded so far.
+pub fn report() -> TelemetryReport {
+    let mut events: Vec<Event> = Vec::new();
+    let mut active_lanes = 0usize;
+    let mut dropped = 0u64;
+    {
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        for lane in reg.iter() {
+            let before = events.len();
+            lane.ring.snapshot(&mut events);
+            if events.len() > before {
+                active_lanes += 1;
+            }
+            dropped += lane.ring.dropped();
+        }
+    }
+
+    let mut samples: Vec<Sample> = (0..PHASE_COUNT).map(|_| Sample::new()).collect();
+    let mut totals: Vec<Streaming> = (0..PHASE_COUNT).map(|_| Streaming::new()).collect();
+    for ev in &events {
+        let i = ev.phase as usize;
+        if i < PHASE_COUNT {
+            samples[i].push(ev.dur_ns as f64 / 1e3); // µs
+            totals[i].push(ev.dur_ns as f64 / 1e9); // s
+        }
+    }
+    let mut phases = Vec::new();
+    for phase in Phase::ALL {
+        let i = phase as usize;
+        if samples[i].is_empty() {
+            continue;
+        }
+        let s = &mut samples[i];
+        phases.push(PhaseStat {
+            phase,
+            count: s.len() as u64,
+            total_secs: totals[i].mean() * totals[i].count() as f64,
+            mean_us: s.mean(),
+            p50_us: s.quantile(0.50),
+            p95_us: s.quantile(0.95),
+            p99_us: s.quantile(0.99),
+            max_us: s.quantile(1.0),
+        });
+    }
+
+    let mut counters: Vec<(&'static str, u64)> =
+        Counter::ALL.iter().map(|&c| (c.name(), counter_value(c))).collect();
+    // Mirrored pure-module counts (the modules themselves are never
+    // instrumented — PR-9 boundary discipline).
+    counters.push((
+        "simd_lane_degradations",
+        crate::runtime::kernel::simd_degradations(),
+    ));
+    counters.push((
+        "workspace_overflow_takes",
+        crate::runtime::workspace::total_overflow_takes(),
+    ));
+
+    let gauges = Gauge::ALL
+        .iter()
+        .map(|&g| GaugeStat {
+            gauge: g,
+            last: GAUGE_LAST[g as usize].load(Ordering::Relaxed),
+            max: GAUGE_MAX[g as usize].load(Ordering::Relaxed),
+        })
+        .collect();
+
+    TelemetryReport {
+        phases,
+        counters,
+        gauges,
+        active_lanes,
+        events: events.len() as u64,
+        dropped,
+    }
+}
+
+impl TelemetryReport {
+    /// Render the report as `util::table` markdown (phases + counters).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "telemetry — phase spans",
+            &["phase", "count", "total s", "mean µs", "p50 µs", "p95 µs", "p99 µs", "max µs"],
+        );
+        for p in &self.phases {
+            t.row(vec![
+                p.phase.name().to_string(),
+                p.count.to_string(),
+                format!("{:.3}", p.total_secs),
+                format!("{:.1}", p.mean_us),
+                format!("{:.1}", p.p50_us),
+                format!("{:.1}", p.p95_us),
+                format!("{:.1}", p.p99_us),
+                format!("{:.1}", p.max_us),
+            ]);
+        }
+        let mut c = Table::new("telemetry — counters & gauges", &["name", "value", "max"]);
+        for (name, v) in &self.counters {
+            c.row(vec![name.to_string(), v.to_string(), String::new()]);
+        }
+        for g in &self.gauges {
+            c.row(vec![g.gauge.name().to_string(), g.last.to_string(), g.max.to_string()]);
+        }
+        c.row(vec![
+            "trace_events".to_string(),
+            self.events.to_string(),
+            format!("dropped {}", self.dropped),
+        ]);
+        format!("{}\n{}", t.render(), c.render())
+    }
+
+    /// The phase-breakdown object benches embed per run:
+    /// `{ "<phase>": {count, total_secs, mean_us, p50_us, p95_us, p99_us}, ... }`.
+    pub fn phases_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for p in &self.phases {
+            m.insert(
+                p.phase.name().to_string(),
+                json::obj(vec![
+                    ("count", json::num(p.count as f64)),
+                    ("total_secs", json::num(p.total_secs)),
+                    ("mean_us", json::num(p.mean_us)),
+                    ("p50_us", json::num(p.p50_us)),
+                    ("p95_us", json::num(p.p95_us)),
+                    ("p99_us", json::num(p.p99_us)),
+                ]),
+            );
+        }
+        Json::Obj(m)
+    }
+
+    /// Full report as JSON (phases + counters + gauges + health).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, v) in &self.counters {
+            counters.insert(name.to_string(), json::num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for g in &self.gauges {
+            gauges.insert(
+                g.gauge.name().to_string(),
+                json::obj(vec![
+                    ("last", json::num(g.last as f64)),
+                    ("max", json::num(g.max as f64)),
+                ]),
+            );
+        }
+        json::obj(vec![
+            ("phases", self.phases_json()),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("active_lanes", json::num(self.active_lanes as f64)),
+            ("events", json::num(self.events as f64)),
+            ("dropped_events", json::num(self.dropped as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Everything recorded so far as a Chrome trace-event JSON value
+/// (object form: `{"traceEvents": [...], "counters": {...}}`) — load it at
+/// `chrome://tracing` or <https://ui.perfetto.dev>.  One lane (`tid`) per
+/// recording thread, complete (`"ph":"X"`) events whose nesting follows
+/// time containment, thread-name metadata per lane, and final counter
+/// values both as `"ph":"C"` samples and a top-level `counters` object.
+pub fn chrome_trace_json() -> Json {
+    let mut trace_events: Vec<Json> = Vec::new();
+    let mut end_ts_us = 0.0f64;
+    let mut scratch: Vec<Event> = Vec::new();
+    {
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        for lane in reg.iter() {
+            scratch.clear();
+            lane.ring.snapshot(&mut scratch);
+            if scratch.is_empty() {
+                continue;
+            }
+            trace_events.push(json::obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(lane.tid as f64)),
+                ("args", json::obj(vec![("name", json::s(&lane.name))])),
+            ]));
+            // Spans record on drop, so lane order is END order (an inner
+            // span lands before its enclosing parent); trace viewers sort
+            // by ts themselves, so events go out in record order.
+            for ev in &scratch {
+                let ts = ev.start_ns as f64 / 1e3;
+                let dur = ev.dur_ns as f64 / 1e3;
+                end_ts_us = end_ts_us.max(ts + dur);
+                let name = Phase::from_u8(ev.phase).map(Phase::name).unwrap_or("unknown");
+                trace_events.push(json::obj(vec![
+                    ("name", json::s(name)),
+                    ("ph", json::s("X")),
+                    ("ts", json::num(ts)),
+                    ("dur", json::num(dur)),
+                    ("pid", json::num(1.0)),
+                    ("tid", json::num(lane.tid as f64)),
+                    ("args", json::obj(vec![("depth", json::num(ev.depth as f64))])),
+                ]));
+            }
+        }
+    }
+    let rep = report();
+    let mut counters = BTreeMap::new();
+    for (name, v) in &rep.counters {
+        counters.insert(name.to_string(), json::num(*v as f64));
+        trace_events.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("ph", json::s("C")),
+            ("ts", json::num(end_ts_us)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(0.0)),
+            ("args", json::obj(vec![("value", json::num(*v as f64))])),
+        ]));
+    }
+    json::obj(vec![
+        ("traceEvents", json::arr(trace_events)),
+        ("displayTimeUnit", json::s("ms")),
+        ("counters", Json::Obj(counters)),
+    ])
+}
+
+/// Write the Chrome trace to `path` (the `paragan train --trace FILE`
+/// export).
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    let mut out = String::new();
+    json::write_json(&chrome_trace_json(), &mut out);
+    out.push('\n');
+    std::fs::write(path, out).with_context(|| format!("writing chrome trace to {path:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests that flip the global MODE run under this lock so they cannot
+    // interleave their tri-state with each other.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn ev(start_ns: u64, dur_ns: u64, phase: Phase, depth: u8) -> Event {
+        Event { start_ns, dur_ns, phase: phase as u8, depth }
+    }
+
+    #[test]
+    fn ring_records_in_order_and_snapshots() {
+        let r = Ring::new(8);
+        r.record(ev(10, 5, Phase::DataWait, 0));
+        r.record(ev(20, 7, Phase::DGrads, 1));
+        let mut out = Vec::new();
+        r.snapshot(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].start_ns, 10);
+        assert_eq!(out[1].phase, Phase::DGrads as u8);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_instead_of_wrapping() {
+        let r = Ring::new(2);
+        r.record(ev(1, 1, Phase::Apply, 0));
+        r.record(ev(2, 1, Phase::Apply, 0));
+        r.record(ev(3, 1, Phase::Apply, 0));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 1);
+        let mut out = Vec::new();
+        r.snapshot(&mut out);
+        // The published prefix is intact — the overflow never rewrote it.
+        assert_eq!(out[0].start_ns, 1);
+        assert_eq!(out[1].start_ns, 2);
+        r.reset();
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn step_key_phase_mapping() {
+        assert_eq!(phase_for_step_key("d_step_adam_fp32"), Phase::DGrads);
+        assert_eq!(phase_for_step_key("g_step_adabelief_fp32"), Phase::GGrads);
+        assert_eq!(phase_for_step_key("generate_fp32"), Phase::Generate);
+        assert_eq!(phase_for_step_key("fid_features"), Phase::Generate);
+    }
+
+    #[test]
+    fn phase_roundtrips_through_u8() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_u8(p as u8), Some(p));
+        }
+        assert_eq!(Phase::from_u8(PHASE_COUNT as u8), None);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(Some(false));
+        let before = events_recorded();
+        {
+            let _s = span(Phase::Apply);
+        }
+        assert_eq!(events_recorded(), before, "disabled span must not record");
+        set_enabled(None);
+    }
+
+    #[test]
+    fn spans_nest_and_aggregate_into_report() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(Some(true));
+        // Fresh thread -> fresh lane, so counts below are exact.
+        let handle = std::thread::spawn(|| {
+            for _ in 0..4 {
+                let _outer = span(Phase::DGrads);
+                let _inner = span(Phase::Generate);
+            }
+        });
+        handle.join().unwrap();
+        set_enabled(None);
+        let rep = report();
+        let d = rep.phases.iter().find(|p| p.phase == Phase::DGrads).expect("d_grads present");
+        assert!(d.count >= 4);
+        let g = rep.phases.iter().find(|p| p.phase == Phase::Generate).expect("generate present");
+        assert!(g.count >= 4);
+        assert!(d.p50_us <= d.p99_us + 1e-9);
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_nests() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(Some(true));
+        let handle = std::thread::spawn(|| {
+            let _outer = span(Phase::GGrads);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            let _inner = span(Phase::SnapshotPublish);
+        });
+        handle.join().unwrap();
+        set_enabled(None);
+        let mut text = String::new();
+        json::write_json(&chrome_trace_json(), &mut text);
+        let root = json::parse(&text).expect("trace JSON parses");
+        let evs = root.get("traceEvents").as_arr().expect("traceEvents array");
+        assert!(!evs.is_empty());
+        // Every X event is well-formed; nested spans are time-contained in
+        // their enclosing span on the same tid.
+        for e in evs {
+            match e.get("ph").as_str() {
+                Some("X") => {
+                    assert!(e.get("ts").as_f64().is_some());
+                    assert!(e.get("dur").as_f64().unwrap_or(-1.0) >= 0.0);
+                    assert!(e.get("tid").as_f64().is_some());
+                }
+                Some("M") | Some("C") => {}
+                other => panic!("unexpected event kind {other:?}"),
+            }
+        }
+        assert!(root.get("counters").as_obj().is_some());
+    }
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(Some(true));
+        let before = counter_value(Counter::FreeListHit);
+        count(Counter::FreeListHit, 3);
+        assert_eq!(counter_value(Counter::FreeListHit), before + 3);
+        gauge(Gauge::QueueDepth, 5);
+        gauge(Gauge::QueueDepth, 2);
+        let rep = report();
+        let g = rep
+            .gauges
+            .iter()
+            .find(|g| g.gauge == Gauge::QueueDepth)
+            .expect("queue depth gauge");
+        assert_eq!(g.last, 2);
+        assert!(g.max >= 5);
+        set_enabled(None);
+    }
+
+    #[test]
+    fn report_json_has_schema_fields() {
+        let rep = report();
+        let j = rep.to_json();
+        assert!(j.get("phases").as_obj().is_some());
+        assert!(j.get("counters").as_obj().is_some());
+        assert!(j.get("counters").get("staleness_admits").as_f64().is_some());
+        assert!(j.get("counters").get("simd_lane_degradations").as_f64().is_some());
+        assert!(j.get("counters").get("workspace_overflow_takes").as_f64().is_some());
+        assert!(j.get("gauges").get("pipeline_queue_depth").as_obj().is_some());
+    }
+}

@@ -40,3 +40,32 @@ pub use loom::sync::atomic;
 pub use loom::sync::{Condvar, Mutex, MutexGuard};
 #[cfg(loom)]
 pub use loom::thread;
+
+/// Loom-shaped `UnsafeCell`: the closure-based `with`/`with_mut` access
+/// protocol loom uses to track every raw read/write of shared interior
+/// state.  `telemetry::Ring`'s single-writer slot array is built on this
+/// so its publish protocol (slot write, then `Release` head bump) can be
+/// model-checked by `tests/loom_models.rs` without a test-only fork.
+#[cfg(not(loom))]
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub fn new(v: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(v))
+    }
+    /// Immutable access to the cell's contents.  Caller must uphold the
+    /// aliasing discipline (no concurrent `with_mut` on the same cell).
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+    /// Mutable access to the cell's contents.  Caller must be the cell's
+    /// unique accessor for the duration of the closure.
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}
+
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;

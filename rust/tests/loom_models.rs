@@ -37,6 +37,7 @@ use paragan::dist::staleness::Versioned;
 use paragan::dist::{Exchange, InProcAllReduce, Topology};
 use paragan::exec::GemmPool;
 use paragan::runtime::HostTensor;
+use paragan::telemetry::{Event, Ring};
 
 /// Run `f` over every interleaving with a small preemption bound (loom's
 /// recommended way to keep condvar-heavy models tractable; bugs of the
@@ -280,6 +281,65 @@ fn img_buff_close_unblocks_producer_and_consumer() {
         let second_landed = prod.join().unwrap();
         let drained = cons.join().unwrap();
         assert_eq!(drained, 1 + second_landed as u64);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// telemetry::Ring: the single-writer span log (PR-9)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn telemetry_ring_readers_see_only_published_prefixes() {
+    model(|| {
+        let r = Arc::new(Ring::new(2));
+        let r1 = r.clone();
+        // The single writer publishes two distinguishable events...
+        let t = loom::thread::spawn(move || {
+            r1.record(Event { start_ns: 1, dur_ns: 10, phase: 0, depth: 0 });
+            r1.record(Event { start_ns: 2, dur_ns: 20, phase: 1, depth: 1 });
+        });
+        // ...while a concurrent reader snapshots mid-flight.  In EVERY
+        // interleaving the reader sees a PREFIX of record order, each event
+        // fully formed — the Release store of head must make the slot write
+        // visible before the slot counts as published.
+        let mut out = Vec::new();
+        r.snapshot(&mut out);
+        assert!(out.len() <= 2);
+        for (i, ev) in out.iter().enumerate() {
+            let want = (i + 1) as u64;
+            assert_eq!(ev.start_ns, want, "torn or reordered slot read");
+            assert_eq!(ev.dur_ns, want * 10);
+            assert_eq!(ev.phase, i as u8);
+        }
+        t.join().unwrap();
+        // After the writer retires, the full log is visible and in order.
+        out.clear();
+        r.snapshot(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 0);
+    });
+}
+
+#[test]
+fn telemetry_ring_overflow_drops_without_unpublishing() {
+    model(|| {
+        let r = Arc::new(Ring::new(1));
+        let r1 = r.clone();
+        let t = loom::thread::spawn(move || {
+            r1.record(Event { start_ns: 5, dur_ns: 1, phase: 2, depth: 0 });
+            // Full ring: this one must be counted dropped, NOT wrapped over
+            // the published slot a reader may be holding.
+            r1.record(Event { start_ns: 6, dur_ns: 1, phase: 3, depth: 0 });
+        });
+        let mut out = Vec::new();
+        r.snapshot(&mut out);
+        for ev in &out {
+            assert_eq!(ev.start_ns, 5, "dropped event leaked into the log");
+        }
+        t.join().unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
     });
 }
 

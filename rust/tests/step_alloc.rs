@@ -16,6 +16,14 @@
 //!
 //! Counting is process-global, so every measuring test serializes on one
 //! mutex; non-measuring tests (plan determinism) don't care.
+//!
+//! Telemetry recording is forced ON for the fused / 2-replica sync / async
+//! exchange lanes (PR-9): the spans and counters the boundary layers emit
+//! must themselves be part of the zero-allocation steady state — a lane's
+//! ring is pre-sized at registration (warmup territory), after which
+//! `Ring::record` is wait-free and allocation-free.  Each lane asserts
+//! events were actually recorded inside the measured window, so "zero
+//! allocs" can never silently mean "telemetry was off".
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
@@ -33,6 +41,7 @@ use paragan::runtime::{
     apply_step, refgen, run_inference_into, run_step_grads_into, run_step_into, ArtifactSpec,
     HostTensor, Manifest, ParamStore, Runtime, StepOutputs, Workspace,
 };
+use paragan::telemetry;
 use paragan::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -205,18 +214,29 @@ impl StepRig {
 
 fn assert_fused_zero_alloc(model_name: &str) {
     let _serial = SERIAL.lock().unwrap();
+    // Recording ON is part of the contract under test (PR-9): spans from
+    // the step boundary must not cost steady-state allocations.
+    telemetry::set_enabled(Some(true));
     let mut rig = step_rig(model_name, 4, "fused");
     for s in 1..=2u64 {
-        rig.fused_step(s); // warmup: plans, slab growth, pool spawn, maps
+        rig.fused_step(s); // warmup: plans, slab growth, pool spawn, maps, lane
     }
+    let ev_before = telemetry::events_recorded();
     let (_, allocs) = measured(|| {
         for s in 3..=5u64 {
             rig.fused_step(s);
         }
     });
+    telemetry::set_enabled(None);
     assert_eq!(
         allocs, 0,
-        "{model_name}: fused steady-state step path allocated {allocs} times"
+        "{model_name}: fused steady-state step path allocated {allocs} times \
+         (with telemetry recording enabled)"
+    );
+    assert!(
+        telemetry::events_recorded() > ev_before,
+        "{model_name}: measured steps recorded no telemetry spans — the \
+         zero-alloc claim would not be covering recording"
     );
     assert!(rig.d_params.all_finite() && rig.g_params.all_finite());
 }
@@ -320,6 +340,7 @@ fn grad_split_path_is_allocation_free_dcgan32() {
 #[test]
 fn two_replica_sync_path_is_allocation_free() {
     let _serial = SERIAL.lock().unwrap();
+    telemetry::set_enabled(Some(true));
     let n = 2usize;
     let (dir, _) = fixture("dcgan32", 4, "sync2");
     let ex_d = InProcAllReduce::new(n, Topology::Tree);
@@ -458,14 +479,23 @@ fn two_replica_sync_path_is_allocation_free() {
             });
         }
         warm.wait();
+        let ev_before = telemetry::events_recorded();
         ALLOCS.store(0, Ordering::SeqCst);
         COUNTING.store(true, Ordering::SeqCst);
         start.wait();
         done.wait();
         COUNTING.store(false, Ordering::SeqCst);
+        assert!(
+            telemetry::events_recorded() > ev_before,
+            "2-replica sync measured steps recorded no telemetry spans"
+        );
     });
+    telemetry::set_enabled(None);
     let allocs = ALLOCS.load(Ordering::SeqCst);
-    assert_eq!(allocs, 0, "2-replica sync steady state allocated {allocs} times");
+    assert_eq!(
+        allocs, 0,
+        "2-replica sync steady state allocated {allocs} times (telemetry on)"
+    );
 }
 
 /// Deposit grads + exchange the mean through the buffer-reusing round —
@@ -509,6 +539,7 @@ fn reduce_scratch(
 #[test]
 fn async_exchange_path_is_allocation_free() {
     let _serial = SERIAL.lock().unwrap();
+    telemetry::set_enabled(Some(true));
     let (dir, _) = fixture("dcgan32", 4, "async");
     let buff = ImgBuff::new(2);
     // Initial snapshot with D's layout, like the trainer's published init.
@@ -641,14 +672,23 @@ fn async_exchange_path_is_allocation_free() {
             });
         }
         warm.wait();
+        let ev_before = telemetry::events_recorded();
         ALLOCS.store(0, Ordering::SeqCst);
         COUNTING.store(true, Ordering::SeqCst);
         start.wait();
         done.wait();
         COUNTING.store(false, Ordering::SeqCst);
+        assert!(
+            telemetry::events_recorded() > ev_before,
+            "async exchange measured rounds recorded no telemetry spans"
+        );
     });
+    telemetry::set_enabled(None);
     let allocs = ALLOCS.load(Ordering::SeqCst);
-    assert_eq!(allocs, 0, "async exchange steady state allocated {allocs} times");
+    assert_eq!(
+        allocs, 0,
+        "async exchange steady state allocated {allocs} times (telemetry on)"
+    );
 }
 
 /// The MD-GAN lane on two REAL threads: G computes per-D gradients against

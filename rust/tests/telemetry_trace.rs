@@ -1,0 +1,180 @@
+//! End-to-end trace export check (the PR-9 acceptance path): a REAL
+//! 2-replica async dcgan32 run must come out the other side as a valid
+//! Chrome trace-event JSON — one lane per replica thread, well-formed
+//! complete events carrying the span taxonomy's names, nested spans
+//! time-contained in their parents, and the staleness/recycle counters
+//! present — exactly what `paragan train --trace out.json` writes.
+//!
+//! Telemetry state is process-global, so this file keeps ONE test; the
+//! fine-grained unit coverage lives in `src/telemetry/mod.rs`.
+
+use std::collections::BTreeMap;
+
+use paragan::coordinator::TrainConfig;
+use paragan::dist::{train_dist, DistConfig, DistMode};
+use paragan::telemetry::{self, Phase};
+use paragan::util::json;
+
+const KNOWN_PHASES: [&str; 9] = [
+    "data_wait",
+    "generate",
+    "d_grads",
+    "g_grads",
+    "exchange_wait",
+    "apply",
+    "snapshot_publish",
+    "recycle",
+    "fake_wait",
+];
+
+#[test]
+fn traced_async_dist_run_exports_a_valid_chrome_trace() {
+    telemetry::set_enabled(Some(true));
+
+    // A nested pair on a dedicated thread makes the containment check below
+    // provably non-vacuous even if every trainer span happens to be flat.
+    std::thread::spawn(|| {
+        let _outer = telemetry::span(Phase::Recycle);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let _inner = telemetry::span(Phase::SnapshotPublish);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    })
+    .join()
+    .unwrap();
+
+    // The real thing: 2 replicas, parameter-server async, tiny step budget.
+    let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        model,
+        steps: 4,
+        seed: 42,
+        eval_batches: 2,
+        log_every: 0,
+        threads: Some(1),
+        replicas: 2,
+        dist: DistConfig { mode: DistMode::Async, staleness_bound: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let r = train_dist(&cfg).expect("2-replica async dcgan32 run");
+    assert!(r.replica_steps > 0);
+
+    let path = std::env::temp_dir()
+        .join(format!("paragan-telemetry-trace-{}.json", std::process::id()));
+    telemetry::write_chrome_trace(&path).expect("trace export");
+    let text = std::fs::read_to_string(&path).expect("trace readback");
+    std::fs::remove_file(&path).ok();
+    telemetry::set_enabled(None);
+
+    let root = json::parse(&text).expect("trace must be valid JSON");
+    let evs = root.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!evs.is_empty(), "trace has no events");
+
+    // Walk the events: every X well-formed with a known span name, lanes
+    // named through M metadata, counters through C samples.
+    let mut lane_names: Vec<String> = Vec::new();
+    let mut by_tid: BTreeMap<u64, Vec<(f64, f64, u64)>> = BTreeMap::new(); // (ts, dur, depth)
+    let mut counter_names: Vec<String> = Vec::new();
+    for e in evs {
+        match e.get("ph").as_str() {
+            Some("M") => {
+                assert_eq!(e.get("name").as_str(), Some("thread_name"));
+                lane_names.push(e.get("args").get("name").as_str().unwrap().to_string());
+            }
+            Some("X") => {
+                let name = e.get("name").as_str().expect("span name");
+                assert!(KNOWN_PHASES.contains(&name), "unknown span name {name:?}");
+                let ts = e.get("ts").as_f64().expect("ts");
+                let dur = e.get("dur").as_f64().expect("dur");
+                assert!(ts >= 0.0 && dur >= 0.0, "negative ts/dur on {name}");
+                let tid = e.get("tid").as_f64().expect("tid") as u64;
+                let depth = e.get("args").get("depth").as_f64().unwrap_or(0.0) as u64;
+                by_tid.entry(tid).or_default().push((ts, dur, depth));
+            }
+            Some("C") => {
+                counter_names.push(e.get("name").as_str().expect("counter name").to_string());
+                assert!(e.get("args").get("value").as_f64().is_some());
+            }
+            other => panic!("unexpected event kind {other:?}"),
+        }
+    }
+
+    // Per-replica lanes: the async engine binds its G/D workers to
+    // replicas, and each must have recorded spans in its own lane.
+    let replica_lanes = lane_names.iter().filter(|n| n.starts_with("replica")).count();
+    assert!(
+        replica_lanes >= 2,
+        "expected >= 2 replica-bound lanes, got {lane_names:?}"
+    );
+    assert!(by_tid.len() >= 2, "spans landed in fewer than 2 lanes");
+
+    // Nesting: spans record on drop, so within a lane record order is END
+    // order — among spans of one depth (which cannot overlap) that is also
+    // start order — and every depth-d>0 span is time-contained in an
+    // enclosing span of smaller depth.  Epsilon covers the ns ->
+    // fractional-µs conversion.
+    const EPS: f64 = 1e-2;
+    let mut nested_spans = 0usize;
+    for (tid, spans) in &by_tid {
+        let mut last_at_depth: BTreeMap<u64, f64> = BTreeMap::new();
+        for &(ts, _, depth) in spans {
+            if let Some(prev) = last_at_depth.insert(depth, ts) {
+                assert!(
+                    ts + EPS >= prev,
+                    "lane {tid}: depth-{depth} spans out of time order"
+                );
+            }
+        }
+        for &(ts, dur, depth) in spans {
+            if depth == 0 {
+                continue;
+            }
+            nested_spans += 1;
+            let contained = spans.iter().any(|&(ots, odur, odepth)| {
+                odepth < depth && ots <= ts + EPS && ts + dur <= ots + odur + EPS
+            });
+            assert!(
+                contained,
+                "lane {tid}: depth-{depth} span at {ts}µs not contained in any parent"
+            );
+        }
+    }
+    assert!(nested_spans >= 1, "no nested span made it into the trace");
+
+    // The taxonomy showed up: data waits, step grads, staleness-bearing
+    // publishes and recycle turnarounds are all part of an async run.
+    let span_names: Vec<&str> = {
+        let mut v = Vec::new();
+        for e in evs {
+            if e.get("ph").as_str() == Some("X") {
+                v.push(e.get("name").as_str().unwrap());
+            }
+        }
+        v
+    };
+    for want in ["d_grads", "g_grads", "recycle"] {
+        assert!(span_names.contains(&want), "async trace missing {want} spans");
+    }
+
+    // Counters ride along both as C samples and the top-level object.
+    let counters = root.get("counters").as_obj().expect("counters object");
+    for want in [
+        "staleness_admits",
+        "staleness_drops",
+        "free_list_hits",
+        "batches_recycled",
+        "simd_lane_degradations",
+        "workspace_overflow_takes",
+    ] {
+        assert!(counters.contains_key(want), "counters missing {want}");
+        assert!(counter_names.iter().any(|n| n == want), "no C sample for {want}");
+    }
+    assert!(
+        counters["staleness_admits"].as_f64().unwrap() >= 1.0,
+        "async run applied no pushes"
+    );
+    assert!(
+        counters["batches_recycled"].as_f64().unwrap() >= 1.0,
+        "async run recycled no batches"
+    );
+}

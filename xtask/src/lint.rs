@@ -25,6 +25,12 @@
 //!   timing or thread-management calls (`Instant::now`, `SystemTime::now`,
 //!   `thread::spawn`, `thread::sleep`): kernels compute, the exec layer
 //!   schedules, benches time.
+//! * **telemetry-purity** — the same kernel / workspace / planner modules
+//!   contain no `telemetry::` references either: instrumentation lives at
+//!   the boundary layers (`runtime/step.rs`, `coordinator/*`, `dist/*`,
+//!   `pipeline/*`).  Pure modules expose plain atomic counters (the
+//!   kernel's SIMD degrade count, the workspace's overflow takes) that the
+//!   telemetry report MIRRORS at read time — the PR-9 boundary discipline.
 //! * **exchange-combine** — in any file implementing `Exchange`, the
 //!   `all_reduce_mean` / `all_reduce_mean_into` bodies must route through
 //!   the fixed-order `combine` helpers (or forward to
@@ -61,6 +67,9 @@ const PURITY_FILES: [&str; 4] =
     ["runtime/kernel.rs", "runtime/ref_conv.rs", "runtime/workspace.rs", "layout/plan.rs"];
 const PURITY_TOKENS: [&str; 4] =
     ["Instant::now", "SystemTime::now", "thread::spawn", "thread::sleep"];
+/// Telemetry is a boundary-layer concern: recording this token in a purity
+/// file means a pure module grew an observability dependency (PR-9).
+const TELEMETRY_TOKEN: &str = "telemetry::";
 /// The one module allowed to name `std::sync` lock primitives: the shim
 /// that swaps them for loom's under `--cfg loom`.
 const SYNC_HOME: &str = "util/sync.rs";
@@ -343,6 +352,20 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
         }
     }
 
+    // --- telemetry-purity --------------------------------------------------
+    if PURITY_FILES.iter().any(|p| rel.ends_with(p)) {
+        for (i, code) in codes.iter().enumerate() {
+            if code.contains(TELEMETRY_TOKEN) {
+                flag(&mut v, i, "telemetry-purity", format!(
+                    "`{TELEMETRY_TOKEN}` in a kernel/planner module — instrumentation \
+                     lives at the boundary layers (step/coordinator/dist/pipeline); \
+                     pure modules expose plain counters the telemetry report \
+                     mirrors at read time (PR-9 convention)"
+                ));
+            }
+        }
+    }
+
     // --- exchange-combine --------------------------------------------------
     if codes.iter().any(|c| c.contains("impl Exchange for")) {
         let mut i = 0;
@@ -546,6 +569,25 @@ mod tests {
         assert_eq!(rules_of("runtime/workspace.rs", bad), vec!["kernel-purity"]);
         // Outside the kernel/planner modules, timing is fine (benches).
         assert!(rules_of("bench/harness.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn telemetry_stays_out_of_pure_modules() {
+        let bad = "fn f() { crate::telemetry::count(telemetry::Counter::FreeListHit, 1); }\n";
+        assert_eq!(rules_of("runtime/kernel.rs", bad), vec!["telemetry-purity"]);
+        assert_eq!(rules_of("runtime/workspace.rs", bad), vec!["telemetry-purity"]);
+        assert_eq!(rules_of("layout/plan.rs", bad), vec!["telemetry-purity"]);
+        let spanned = "fn f() { let _s = telemetry::span(telemetry::Phase::Apply); }\n";
+        assert_eq!(rules_of("runtime/ref_conv.rs", spanned), vec!["telemetry-purity"]);
+        // Boundary layers are exactly where instrumentation belongs.
+        assert!(rules_of("runtime/step.rs", bad).is_empty());
+        assert!(rules_of("pipeline/prefetcher.rs", bad).is_empty());
+        assert!(rules_of("dist/async_ps.rs", spanned).is_empty());
+        // Mentions in comments or string literals are not code.
+        let comment = "fn f() {} // telemetry:: stays out of this module\n";
+        assert!(rules_of("runtime/kernel.rs", comment).is_empty());
+        let in_str = "fn f() { let t = \"paragan::telemetry::x\"; }\n";
+        assert!(rules_of("runtime/kernel.rs", in_str).is_empty());
     }
 
     #[test]
