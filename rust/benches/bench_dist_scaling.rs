@@ -24,6 +24,16 @@
 //! per-phase telemetry breakdown (count / total / mean / p50 / p95 / p99)
 //! recorded during THAT run; telemetry is reset between runs (quiescent:
 //! `train_dist` joins every replica thread before returning).
+//!
+//! Schema v3 (PR-10): the sync sweep runs each replica count TWICE — serial
+//! oracle (`overlap = off`) and the bucketized overlap lane — and every run
+//! row gains an `overlap` object: `enabled`, total + p95 EXPOSED exchange
+//! wait (`exchange_wait`, the worker parked at the barrier / finish tail),
+//! total communicator BUSY time (`bucket_exchange`), and `hidden_pct` =
+//! the share of communicator busy time hidden under backward compute.
+//! Gate: at every multi-replica sync count the overlapped lane's aggregate
+//! steps/sec must stay within jitter (≥ 95%) of the serial lane — overlap
+//! must never cost throughput.
 
 use paragan::coordinator::TrainConfig;
 use paragan::dist::{train_dist, DistMode, DistResult};
@@ -33,8 +43,15 @@ use paragan::util::table::{f2, pct, Table};
 
 const STALENESS_BOUND: u64 = 2;
 
-/// One measured run, plus the per-phase telemetry breakdown it recorded.
-fn run(mode: DistMode, replicas: usize, steps: u64) -> (DistResult, Json) {
+/// One measured run, plus the per-phase telemetry breakdown and the v3
+/// overlap block it recorded.  `overlap = None` leaves the lane at the
+/// run-level default (the `PARAGAN_OVERLAP` env rule).
+fn run(
+    mode: DistMode,
+    replicas: usize,
+    steps: u64,
+    overlap: Option<bool>,
+) -> (DistResult, Json, Json, f64) {
     let (dir, model) = paragan::testkit::artifacts_for("dcgan32").expect("dcgan32 artifacts");
     let cfg = TrainConfig {
         artifact_dir: dir,
@@ -48,6 +65,7 @@ fn run(mode: DistMode, replicas: usize, steps: u64) -> (DistResult, Json) {
         dist: paragan::dist::DistConfig {
             mode,
             staleness_bound: STALENESS_BOUND,
+            overlap,
             ..Default::default()
         },
         ..Default::default()
@@ -56,8 +74,28 @@ fn run(mode: DistMode, replicas: usize, steps: u64) -> (DistResult, Json) {
     // before returning, so the reset never races a recorder.
     paragan::telemetry::reset();
     let r = train_dist(&cfg).unwrap_or_else(|e| panic!("{} x{replicas}: {e:?}", mode.as_str()));
-    let phases = paragan::telemetry::report().phases_json();
-    (r, phases)
+    let rep = paragan::telemetry::report();
+    let stat = |name: &str| rep.phases.iter().find(|p| p.phase.name() == name);
+    // EXPOSED wait: the worker parked at the serial barrier, or at the
+    // overlapped finish tail.  BUSY: communicator time inside bucket
+    // rounds (and async push calls).  hidden = busy the worker never saw.
+    let (wait_secs, wait_p95) =
+        stat("exchange_wait").map(|p| (p.total_secs, p.p95_us)).unwrap_or((0.0, 0.0));
+    let busy_secs = stat("bucket_exchange").map(|p| p.total_secs).unwrap_or(0.0);
+    let hidden_pct = if busy_secs > 0.0 {
+        100.0 * (busy_secs - wait_secs).max(0.0) / busy_secs
+    } else {
+        0.0
+    };
+    let enabled = cfg.dist.overlap_enabled() && mode != DistMode::MdGan;
+    let ov = obj(vec![
+        ("enabled", js(if enabled { "true" } else { "false" })),
+        ("exchange_wait_secs", num(wait_secs)),
+        ("exchange_wait_p95_us", num(wait_p95)),
+        ("bucket_exchange_secs", num(busy_secs)),
+        ("hidden_pct", num(hidden_pct)),
+    ]);
+    (r, rep.phases_json(), ov, hidden_pct)
 }
 
 /// Weak-scaling efficiency vs the 1-replica sync baseline: per-replica
@@ -80,13 +118,29 @@ fn main() {
         } else {
             "dist scaling — dcgan32, ref backend"
         },
-        &["mode", "replicas", "agg steps/s", "efficiency", "sim eff", "staleness", "drops"],
+        &[
+            "mode",
+            "replicas",
+            "overlap",
+            "hidden%",
+            "agg steps/s",
+            "efficiency",
+            "sim eff",
+            "staleness",
+            "drops",
+        ],
     );
     let mut rows: Vec<Json> = Vec::new();
     let mut base: Option<DistResult> = None;
     let mut gate_failures: Vec<String> = Vec::new();
 
-    let mut record = |mode: DistMode, r: DistResult, phases: Json, base: &Option<DistResult>| {
+    let mut record = |mode: DistMode,
+                      ov_label: &str,
+                      r: DistResult,
+                      phases: Json,
+                      ov: Json,
+                      hidden_pct: f64,
+                      base: &Option<DistResult>| {
         let eff = base.as_ref().map(|b| efficiency(b, &r)).unwrap_or(1.0);
         let sim_eff = if r.replicas >= 2 && mode == DistMode::Sync {
             simulated_dcgan32_efficiency(r.replicas, 8, if smoke { 80 } else { 150 })
@@ -96,6 +150,8 @@ fn main() {
         t.row(vec![
             mode.as_str().into(),
             r.replicas.to_string(),
+            ov_label.to_string(),
+            if ov_label == "off" { "-".into() } else { format!("{hidden_pct:.0}%") },
             f2(r.aggregate_steps_per_sec),
             pct(eff),
             if sim_eff.is_nan() { "-".into() } else { pct(sim_eff) },
@@ -105,6 +161,7 @@ fn main() {
         rows.push(obj(vec![
             ("mode", js(mode.as_str())),
             ("replicas", num(r.replicas as f64)),
+            ("overlap", ov),
             ("steps", num(r.train.steps as f64)),
             ("wall_secs", num(r.train.wall_secs)),
             ("steps_per_sec", num(r.train.steps_per_sec())),
@@ -123,10 +180,12 @@ fn main() {
         r
     };
 
-    // --- sync sweep (the weak-scaling curve; n=1 is the baseline) ---
+    // --- sync sweep (the weak-scaling curve; n=1 serial is the baseline;
+    // every multi-replica count runs serial AND overlapped, v3 gate) ---
     for &n in sync_counts {
-        let (r, phases) = run(DistMode::Sync, n, steps);
-        let r = record(DistMode::Sync, r, phases, &base);
+        let (r, phases, ov, hp) = run(DistMode::Sync, n, steps, Some(false));
+        let serial_agg = r.aggregate_steps_per_sec;
+        let r = record(DistMode::Sync, "off", r, phases, ov, hp, &base);
         if base.is_none() {
             base = Some(r);
         } else if n > 1 {
@@ -139,13 +198,31 @@ fn main() {
                 ));
             }
         }
+        if n > 1 {
+            let (r, phases, ov, hp) = run(DistMode::Sync, n, steps, Some(true));
+            // Overlap may hide exchange wait but must never COST
+            // throughput; 5% grace absorbs shared-host timing jitter.
+            if r.aggregate_steps_per_sec < 0.95 * serial_agg {
+                gate_failures.push(format!(
+                    "sync {n}-replica overlapped aggregate {:.2} steps/s fell below \
+                     the serial lane's {serial_agg:.2} (jitter grace 5%)",
+                    r.aggregate_steps_per_sec
+                ));
+            }
+            record(DistMode::Sync, "on", r, phases, ov, hp, &base);
+        }
     }
 
     // --- async (parameter server) and mdgan sweeps ---
     let queue_cap = TrainConfig::default().img_buff_cap as f64;
     for mode in [DistMode::Async, DistMode::MdGan] {
         for &n in par_counts {
-            let (r, phases) = run(mode, n, steps);
+            // Async G workers use the overlapped push lane (pinned on so the
+            // row is env-independent); mdgan has no exchange lane to overlap
+            // — see the ROADMAP PR-10 decision.
+            let overlap = if mode == DistMode::Async { Some(true) } else { None };
+            let label = if mode == DistMode::Async { "on" } else { "off" };
+            let (r, phases, ov, hp) = run(mode, n, steps, overlap);
             if mode == DistMode::Async && r.train.mean_staleness > STALENESS_BOUND as f64 {
                 gate_failures.push(format!(
                     "async {n}-replica mean staleness {:.2} exceeds bound {STALENESS_BOUND}",
@@ -160,7 +237,7 @@ fn main() {
                     r.mean_fake_staleness
                 ));
             }
-            record(mode, r, phases, &base);
+            record(mode, label, r, phases, ov, hp, &base);
         }
     }
     drop(record);
@@ -169,7 +246,7 @@ fn main() {
 
     let json = obj(vec![
         ("format", js("paragan-bench-dist")),
-        ("version", num(2.0)),
+        ("version", num(3.0)),
         ("smoke", js(if smoke { "true" } else { "false" })),
         ("model", js("dcgan32")),
         ("batch", num(paragan::runtime::refgen::REF_BATCH as f64)),

@@ -22,6 +22,12 @@
 //! * The run ends when the G server's version reaches `cfg.steps`: the
 //!   TOTAL number of G updates is the same as a single-replica run — more
 //!   workers buy wall-clock, not extra steps.
+//! * With the overlap lane on (default — see [`super::overlap`]), G workers
+//!   hand their push to a communicator thread and ship fakes concurrently.
+//!   The D side stays serial ON PURPOSE: a D worker's next iteration pulls
+//!   the d_step basis it just pushed against, so there is no independent
+//!   work to hide a push behind — overlapping it would only add a thread
+//!   hop to the critical path (see the ROADMAP PR-10 decision).
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
@@ -29,13 +35,16 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::overlap::AsyncPushLane;
 use super::param_server::{ParamServer, Push};
 use super::{bound_scaling, DistMode, DistResult};
 use crate::coordinator::buffers::{ImgBuff, TaggedBatch};
 use crate::coordinator::trainer::{d_step_inputs_into, upsert_y, upsert_z, Prologue, TrainConfig};
 use crate::coordinator::TrainResult;
 use crate::metrics::tracker::Series;
-use crate::runtime::{run_step_grads_into, HostTensor, ParamStore, Runtime, StepOutputs};
+use crate::runtime::{
+    run_step_grads_into, run_step_grads_streamed_into, HostTensor, ParamStore, Runtime, StepOutputs,
+};
 use crate::telemetry;
 use crate::util::rng::Rng;
 
@@ -83,6 +92,21 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
     let mut grads = ParamStore::new();
     let mut outs = StepOutputs::new();
 
+    // Overlapped push (`dist::overlap`): gradients stream into the lane's
+    // staging buffers during backward, and a communicator thread (its own
+    // `Runtime` — backends are thread-local) performs the server push while
+    // this worker ships its fake batch.  The push stays ONE atomic
+    // `ParamServer::push` per step, so the bounded-staleness admission is
+    // unchanged; only its timing overlaps the batch hand-off.
+    let mut lane = cfg.dist.overlap_enabled().then(|| {
+        AsyncPushLane::new(
+            cfg.artifact_dir.clone(),
+            g_spec.clone(),
+            ctx.g_srv.clone(),
+            replica,
+        )
+    });
+
     loop {
         let g_ver = ctx.g_srv.pull_into(&mut g_params)?;
         if g_ver >= cfg.steps {
@@ -95,16 +119,41 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
         if model.n_classes > 0 {
             upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
         }
-        run_step_grads_into(
-            &rt,
-            &g_spec,
-            &g_params,
-            &slots,
-            Some(&d_params),
-            &g_in,
-            &mut grads,
-            &mut outs,
-        )?;
+        match lane.as_mut() {
+            Some(l) => {
+                run_step_grads_streamed_into(
+                    &rt,
+                    &g_spec,
+                    &g_params,
+                    &slots,
+                    Some(&d_params),
+                    &g_in,
+                    &mut grads,
+                    &mut outs,
+                    l,
+                )?;
+                // First step primes the staging layout from the full store
+                // (streamed deposits no-op until then); every later step's
+                // deposits already happened inside backward.
+                if !l.primed() {
+                    l.prime(&grads);
+                }
+                // Hand the push to the communicator NOW — it runs while we
+                // ship the fake batch below, and `join_push` after the
+                // hand-off collects the verdict.
+                l.feed_finish(g_ver);
+            }
+            None => run_step_grads_into(
+                &rt,
+                &g_spec,
+                &g_params,
+                &slots,
+                Some(&d_params),
+                &g_in,
+                &mut grads,
+                &mut outs,
+            )?,
+        }
         let loss = outs["loss"].data[0] as f64;
         // Ship the batch in a recycled shell: swap the output tensor's
         // storage into a free-listed batch (the exchange hands our own
@@ -138,8 +187,14 @@ fn g_worker(ctx: &WorkerCtx, replica: usize) -> Result<u64> {
         }
         telemetry::gauge(telemetry::Gauge::FakeBuffDepth, ctx.buff.len() as u64);
         // …then offer the gradient; a drop just means faster peers already
-        // moved the server past our basis.
-        match ctx.g_srv.push(&rt, &grads, g_ver)? {
+        // moved the server past our basis.  (Overlapped: the communicator
+        // has been pushing since `feed_finish` — collect its verdict, the
+        // same three-way outcome the serial call returns.)
+        let push = match lane.as_mut() {
+            Some(l) => l.join_push()?,
+            None => ctx.g_srv.push(&rt, &grads, g_ver)?,
+        };
+        match push {
             Push::Applied { step, .. } => {
                 telemetry::count(telemetry::Counter::StaleAdmit, 1);
                 let _ = ctx.reports.send(Report::G { step, loss });

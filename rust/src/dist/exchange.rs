@@ -207,17 +207,24 @@ impl InProcAllReduce {
         }
     }
 
-    /// Reshape the persistent mean scratch to the deposited layout (no-op —
-    /// and no allocation — when the layout is unchanged, i.e. every round
-    /// after the first for a given exchange).
+    /// Reshape the persistent mean scratch to the deposited layout, reusing
+    /// buffer capacity: resizes in place instead of rebuilding, so a caller
+    /// cycling through a FIXED SET of layouts (the bucket rounds of
+    /// `dist::overlap`) allocates only until every layout's high-water mark
+    /// has been seen once — zero allocations in steady state, same as the
+    /// single-layout case.  The spine only ever GROWS: shrinking it for a
+    /// narrower layout would drop warm buffers the next wider layout has to
+    /// re-create, which means an allocation every round when layouts cycle.
+    /// Trailing entries past `layout.len()` are simply unused — the combine
+    /// indexes `0..n_tensors` and the collection zips by the deposit.
+    /// Contents are unspecified after the call; every combine below fully
+    /// overwrites (or zero-fills) each live element.
     fn shape_mean(mean: &mut Vec<Vec<f32>>, layout: &[Vec<f32>]) {
-        let matches = mean.len() == layout.len()
-            && mean.iter().zip(layout).all(|(m, t)| m.len() == t.len());
-        if !matches {
-            mean.clear();
-            for t in layout {
-                mean.push(vec![0f32; t.len()]);
-            }
+        if mean.len() < layout.len() {
+            mean.resize_with(layout.len(), Vec::new);
+        }
+        for (m, t) in mean.iter_mut().zip(layout) {
+            m.resize(t.len(), 0f32);
         }
     }
 

@@ -32,6 +32,7 @@
 pub mod async_ps;
 pub mod exchange;
 pub mod mdgan;
+pub mod overlap;
 pub mod param_server;
 pub mod staleness;
 pub mod sync;
@@ -94,6 +95,11 @@ pub struct DistConfig {
     /// MD-GAN: swap D parameters between workers every N G-steps
     /// (0 = never swap).
     pub swap_every: u64,
+    /// Bucketized communication/computation overlap (`dist::overlap`):
+    /// `Some(b)` forces the lane on/off, `None` defers to the
+    /// `PARAGAN_OVERLAP` env var (default ON; `off`/`0` keeps the serial
+    /// monolithic exchange as the oracle lane).
+    pub overlap: Option<bool>,
 }
 
 impl Default for DistConfig {
@@ -103,6 +109,24 @@ impl Default for DistConfig {
             topology: Topology::Tree,
             staleness_bound: 2,
             swap_every: 8,
+            overlap: None,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Resolve the overlap toggle: explicit config wins, then
+    /// `PARAGAN_OVERLAP` (`off`/`0` disables), default on.  Both values are
+    /// honest lanes — overlapped sync exchange is bitwise identical to the
+    /// serial exchange (pinned by `tests/dist_parity.rs`), so the toggle is
+    /// a perf/debug escape hatch, never a semantics switch.
+    pub fn overlap_enabled(&self) -> bool {
+        if let Some(b) = self.overlap {
+            return b;
+        }
+        match std::env::var("PARAGAN_OVERLAP") {
+            Ok(v) => !matches!(v.as_str(), "off" | "0"),
+            Err(_) => true,
         }
     }
 }

@@ -1,0 +1,878 @@
+//! Communication/computation overlap: bucketized, layer-streamed gradient
+//! exchange (the PR-10 lane).
+//!
+//! The serial sync lane computes the FULL gradient, then parks at the
+//! all-reduce barrier (`sync::reduce_with_loss_into`) — backward compute
+//! and exchange wait are strictly sequential.  This module splits the
+//! exchange into BUCKET rounds and runs them on a dedicated communicator
+//! thread while the worker is still inside backward: the ref backend
+//! streams each parameter gradient the moment its layer finishes
+//! (`runtime::GradStream`, layers in reverse), the worker deposits it into
+//! the lane, and as soon as a planned bucket's tensors are all present the
+//! communicator exchanges that bucket through the SAME fixed-order
+//! [`Exchange::all_reduce_mean_into`] the serial lane uses.  By the time
+//! backward returns, most rounds are already done — only the tail is
+//! exposed wait.
+//!
+//! **Bitwise parity with the serial lane, by construction** (pinned in
+//! `tests/dist_parity.rs`): the exchange reduces every tensor
+//! independently in a fixed combine order, so partitioning the tensor list
+//! into bucket rounds cannot change any tensor's mean — as long as every
+//! replica runs the identical round structure.  Two things guarantee that:
+//! the bucket plan is a pure function of the recorded per-tensor sizes
+//! (`layout::cost::bucket_plan`, constants in `layout/plan.rs`), and
+//! deposits are CURSOR-GATED — a bucket is handed to the communicator only
+//! when the backend has streamed exactly the tensors the plan says it
+//! holds, in the warmup-recorded completion order.  A replica whose stream
+//! diverges fails loudly instead of deadlocking its peers (see the abort
+//! notes on [`OverlapLane`]).
+//!
+//! Step 1 is the RECORDING step: the lane observes the completion order
+//! and tensor sizes, runs one monolithic exchange on the worker thread
+//! (bit-identical to the serial lane), builds the bucket plan, and spawns
+//! its communicator.  Every later step is zero-allocation: deposit buffers
+//! and the communicator's round vector persist and round-trip through the
+//! exchange's buffer-reusing protocol.
+//!
+//! [`AsyncPushLane`] is the async-PS counterpart: the G worker streams
+//! gradient buckets into a staging store during backward (copies hidden
+//! under compute) and a communicator thread — with its OWN `Runtime`,
+//! backends are thread-local — performs the server push while the worker
+//! ships its fake batch.  The push stays ONE atomic `ParamServer::push`
+//! per step: applying buckets individually would let a concurrent version
+//! bump land between partial applies and change the bounded-staleness
+//! semantics (see the ROADMAP PR-10 decision).
+
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::exchange::Exchange;
+use super::param_server::{ParamServer, Push};
+use crate::layout::cost::bucket_plan;
+use crate::runtime::{ArtifactSpec, GradStream, ParamStore, Runtime};
+// Lock + condvar + thread through the `util::sync` shim: the bucket
+// hand-off below is model-checked by `rust/tests/loom_models.rs` under
+// `--cfg loom` (ROADMAP PR-6 convention).
+use crate::util::sync::{thread, Condvar, Mutex};
+
+/// Shared worker↔communicator state of one [`OverlapLane`].
+struct LaneState {
+    /// Per-POSITION deposit buffers (completion order, loss scalar last).
+    /// A buffer is `mem::take`n while its bucket is in flight and restored
+    /// holding the mean — persistent across steps, zero-alloc steady state.
+    bufs: Vec<Vec<f32>>,
+    /// The communicator's working vector for the in-flight bucket
+    /// (capacity = widest bucket, reserved once at promotion).
+    round: Vec<Vec<f32>>,
+    /// Tensors deposited so far this step (== positions `0..cursor` full).
+    cursor: usize,
+    /// Buckets whose tensors are all deposited (plan prefix length).
+    enqueued: usize,
+    /// Buckets exchanged and restored.
+    done: usize,
+    /// First failure (stream divergence or exchange error); sticky —
+    /// `finish` surfaces it and the run tears down.
+    err: Option<String>,
+    shutdown: bool,
+    /// Communicator busy time this step (exchange calls), for the
+    /// hidden-vs-exposed overlap gauge.
+    #[cfg(not(loom))]
+    busy_ns: u64,
+}
+
+struct Shared {
+    m: Mutex<LaneState>,
+    cv: Condvar,
+    /// Bucket boundaries over deposit POSITIONS — identical on every
+    /// replica (pure function of the recorded sizes), which is what keeps
+    /// the collective's round structure in lockstep.
+    plan: Vec<Range<usize>>,
+}
+
+enum Mode {
+    /// Step 1: record completion order + sizes, exchange monolithically.
+    Recording,
+    /// Steady state: cursor-gated bucket streaming to the communicator.
+    Streaming,
+}
+
+/// One worker's overlapped exchange lane (one per collective — D and G
+/// keep separate lanes, mirroring `sync::SyncExchanges`).
+///
+/// Shutdown/abort notes: `Drop` signals the communicator and joins it.
+/// The communicator drains every ENQUEUED bucket before exiting, and
+/// bucket rounds proceed in lockstep across replicas (a round completes
+/// for all replicas or none — the barrier admits no stragglers), so the
+/// join cannot deadlock: either the communicator's current round completes
+/// normally, or a failing peer poisons the exchange (its trainer's
+/// abort-on-drop guard) and the communicator unblocks with `Err`.
+pub struct OverlapLane {
+    ex: Arc<dyn Exchange>,
+    replica: usize,
+    mode: Mode,
+    /// position → tensor idx (spec param order), recorded at warmup.
+    order: Vec<usize>,
+    /// tensor idx → position (inverse of `order`, plus loss at the end).
+    slot_of: Vec<usize>,
+    /// Warmup-only recording buffers; moved into `Shared::bufs` on
+    /// promotion.
+    rec_bufs: Vec<Vec<f32>>,
+    /// Test/model hook: overrides the planner's bucket boundaries.
+    plan_override: Option<Vec<Range<usize>>>,
+    shared: Option<Arc<Shared>>,
+    comm: Option<thread::JoinHandle<()>>,
+}
+
+/// Extend the enqueued-bucket watermark to match `cursor`; returns whether
+/// it moved (the caller notifies the communicator if so).
+fn advance(plan: &[Range<usize>], st: &mut LaneState) -> bool {
+    let before = st.enqueued;
+    while st.enqueued < plan.len() && plan[st.enqueued].end <= st.cursor {
+        st.enqueued += 1;
+    }
+    st.enqueued != before
+}
+
+/// The communicator thread: pull the next enqueued bucket's deposit
+/// buffers, run the fixed-order collective on them, restore them holding
+/// the mean.  Exits when shut down with nothing pending (it drains first)
+/// or on the first error.
+fn comm_loop(shared: Arc<Shared>, ex: Arc<dyn Exchange>, replica: usize) {
+    // Name this thread's telemetry lane after the replica it serves, and
+    // register the lane eagerly (at spawn = warmup time) so the first
+    // steady-state bucket doesn't pay the one-time ring allocation.
+    #[cfg(not(loom))]
+    let _bind = crate::runtime::workspace::bind_replica(replica);
+    #[cfg(not(loom))]
+    drop(crate::telemetry::span(crate::telemetry::Phase::BucketExchange));
+    let mut st = shared.m.lock().unwrap();
+    loop {
+        while st.done == st.enqueued && !st.shutdown && st.err.is_none() {
+            st = shared.cv.wait(st).unwrap();
+        }
+        if st.err.is_some() || (st.shutdown && st.done == st.enqueued) {
+            return;
+        }
+        let range = shared.plan[st.done].clone();
+        st.round.clear();
+        for i in range.clone() {
+            let t = std::mem::take(&mut st.bufs[i]);
+            st.round.push(t);
+        }
+        let mut round = std::mem::take(&mut st.round);
+        drop(st);
+        #[cfg(not(loom))]
+        let t0 = std::time::Instant::now();
+        let res = {
+            // Communicator BUSY time; the worker's EXPOSED wait stays on
+            // `Phase::Exchange` — the two together yield the overlap ratio.
+            #[cfg(not(loom))]
+            let _span = crate::telemetry::span(crate::telemetry::Phase::BucketExchange);
+            ex.all_reduce_mean_into(replica, &mut round)
+        };
+        st = shared.m.lock().unwrap();
+        #[cfg(not(loom))]
+        {
+            st.busy_ns += t0.elapsed().as_nanos() as u64;
+        }
+        for (j, i) in range.enumerate() {
+            st.bufs[i] = std::mem::take(&mut round[j]);
+        }
+        st.round = round;
+        match res {
+            Ok(()) => {
+                st.done += 1;
+                drop(st);
+                shared.cv.notify_all();
+                st = shared.m.lock().unwrap();
+            }
+            Err(e) => {
+                st.err = Some(format!("bucket exchange failed: {e:#}"));
+                drop(st);
+                shared.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+impl OverlapLane {
+    /// A lane over one collective.  The first `finish` promotes the lane
+    /// from recording to streaming (spawning the communicator).
+    pub fn new(ex: Arc<dyn Exchange>, replica: usize) -> OverlapLane {
+        OverlapLane {
+            ex,
+            replica,
+            mode: Mode::Recording,
+            order: Vec::new(),
+            slot_of: Vec::new(),
+            rec_bufs: Vec::new(),
+            plan_override: None,
+            shared: None,
+            comm: None,
+        }
+    }
+
+    /// Testing/model hook: force the bucket boundaries instead of asking
+    /// `layout::cost::bucket_plan`.  Must be set before the first step and
+    /// IDENTICALLY on every replica — a divergent plan desynchronizes the
+    /// collective's round structure, which the exchange surfaces as a
+    /// poisoned barrier.  Ranges are over deposit positions (params in
+    /// completion order, then the loss scalar) and must tile
+    /// `0..n_params+1` contiguously.
+    pub fn force_plan(&mut self, plan: Vec<Range<usize>>) {
+        self.plan_override = Some(plan);
+    }
+
+    /// Record a failure into the shared state and wake everyone.
+    fn poison(&self, msg: String) {
+        if let Some(sh) = &self.shared {
+            let mut st = sh.m.lock().unwrap();
+            if st.err.is_none() {
+                st.err = Some(msg);
+            }
+            drop(st);
+            sh.cv.notify_all();
+        }
+    }
+
+    /// Complete the step: deposit the loss scalar (closing the final
+    /// bucket), wait for the communicator to finish every round, copy the
+    /// means back into `grads`, and return the cross-replica mean loss.
+    /// On the recording step this instead runs one monolithic exchange and
+    /// promotes the lane to streaming.
+    pub fn finish(&mut self, grads: &mut ParamStore, loss: f64) -> Result<f64> {
+        match self.mode {
+            Mode::Recording => self.finish_recording(grads, loss),
+            Mode::Streaming => self.finish_streaming(grads, loss),
+        }
+    }
+
+    fn finish_recording(&mut self, grads: &mut ParamStore, loss: f64) -> Result<f64> {
+        let n = grads.len();
+        anyhow::ensure!(
+            self.order.len() == n,
+            "overlap lane recorded {} gradient completions for {} parameters — \
+             the backend's stream must cover every tensor exactly once",
+            self.order.len(),
+            n
+        );
+        self.slot_of = vec![usize::MAX; n];
+        for (pos, &idx) in self.order.iter().enumerate() {
+            anyhow::ensure!(
+                idx < n && self.slot_of[idx] == usize::MAX,
+                "overlap lane: duplicate or out-of-range completion idx {idx}"
+            );
+            self.slot_of[idx] = pos;
+        }
+        for (idx, t) in grads.iter().enumerate() {
+            anyhow::ensure!(
+                self.rec_bufs[self.slot_of[idx]].len() == t.data.len(),
+                "overlap lane: streamed size differs from grad store for tensor {idx}"
+            );
+        }
+        // The loss scalar rides as the final tensor, same as the serial
+        // lane's `reduce_with_loss_into`.
+        self.rec_bufs.push(vec![loss as f32]);
+        {
+            // Warmup exchanges monolithically on the worker thread —
+            // identical accounting (and bits) to the serial lane.
+            #[cfg(not(loom))]
+            let _span = crate::telemetry::span(crate::telemetry::Phase::Exchange);
+            self.ex.all_reduce_mean_into(self.replica, &mut self.rec_bufs)?;
+        }
+        for (idx, t) in grads.iter_mut().enumerate() {
+            t.data.copy_from_slice(&self.rec_bufs[self.slot_of[idx]]);
+        }
+        let mean_loss = self.rec_bufs[n][0] as f64;
+
+        let total = n + 1;
+        let plan = match self.plan_override.take() {
+            Some(p) => p,
+            None => {
+                let sizes: Vec<usize> =
+                    self.rec_bufs.iter().map(|b| b.len() * std::mem::size_of::<f32>()).collect();
+                bucket_plan(&sizes)
+            }
+        };
+        let mut at = 0usize;
+        for r in &plan {
+            anyhow::ensure!(
+                r.start == at && r.end > r.start,
+                "overlap lane: bucket plan must tile 0..{total} contiguously"
+            );
+            at = r.end;
+        }
+        anyhow::ensure!(at == total, "overlap lane: bucket plan must cover all {total} tensors");
+        let widest = plan.iter().map(|r| r.len()).max().unwrap_or(1);
+
+        let shared = Arc::new(Shared {
+            m: Mutex::new(LaneState {
+                bufs: std::mem::take(&mut self.rec_bufs),
+                round: Vec::with_capacity(widest),
+                cursor: 0,
+                enqueued: 0,
+                done: 0,
+                err: None,
+                shutdown: false,
+                #[cfg(not(loom))]
+                busy_ns: 0,
+            }),
+            cv: Condvar::new(),
+            plan,
+        });
+        let (sh, ex, replica) = (shared.clone(), self.ex.clone(), self.replica);
+        self.comm = Some(thread::spawn(move || comm_loop(sh, ex, replica)));
+        self.shared = Some(shared);
+        self.mode = Mode::Streaming;
+        Ok(mean_loss)
+    }
+
+    fn finish_streaming(&mut self, grads: &mut ParamStore, loss: f64) -> Result<f64> {
+        let sh = self.shared.clone().expect("streaming lane has shared state");
+        let total = self.order.len() + 1;
+        if grads.len() != self.order.len() {
+            self.poison(format!(
+                "overlap lane: grad store grew from {} to {} tensors mid-run",
+                self.order.len(),
+                grads.len()
+            ));
+        }
+        let mut st = sh.m.lock().unwrap();
+        if st.err.is_none() {
+            if st.cursor == total - 1 && st.bufs[total - 1].len() == 1 {
+                st.bufs[total - 1][0] = loss as f32;
+                st.cursor += 1;
+                if advance(&sh.plan, &mut st) {
+                    sh.cv.notify_all();
+                }
+            } else {
+                st.err = Some(format!(
+                    "overlap lane: {} of {} tensors streamed before finish",
+                    st.cursor,
+                    total - 1
+                ));
+                sh.cv.notify_all();
+            }
+        }
+        // The EXPOSED exchange wait — the serial lane's whole barrier park,
+        // here only the tail the communicator hasn't hidden yet.
+        #[cfg(not(loom))]
+        let t0 = std::time::Instant::now();
+        {
+            #[cfg(not(loom))]
+            let _span = crate::telemetry::span(crate::telemetry::Phase::Exchange);
+            while st.done < sh.plan.len() && st.err.is_none() {
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+        if let Some(e) = &st.err {
+            bail!("{e}");
+        }
+        #[cfg(not(loom))]
+        {
+            let exposed = t0.elapsed().as_nanos() as u64;
+            let busy = st.busy_ns;
+            st.busy_ns = 0;
+            if busy > 0 {
+                crate::telemetry::gauge(
+                    crate::telemetry::Gauge::OverlapHiddenPct,
+                    100 * busy.saturating_sub(exposed) / busy,
+                );
+            }
+        }
+        for (idx, t) in grads.iter_mut().enumerate() {
+            t.data.copy_from_slice(&st.bufs[self.slot_of[idx]]);
+        }
+        let mean_loss = st.bufs[total - 1][0] as f64;
+        st.cursor = 0;
+        st.enqueued = 0;
+        st.done = 0;
+        Ok(mean_loss)
+    }
+}
+
+impl GradStream for OverlapLane {
+    fn grad_ready(&mut self, idx: usize, grad: &[f32]) {
+        match self.mode {
+            Mode::Recording => {
+                self.order.push(idx);
+                // alloc-ok: warmup-only recording of the completion layout.
+                self.rec_bufs.push(grad.to_vec());
+            }
+            Mode::Streaming => {
+                let sh = self.shared.clone().expect("streaming lane has shared state");
+                let mut st = sh.m.lock().unwrap();
+                if st.err.is_some() {
+                    return;
+                }
+                let pos = st.cursor;
+                let expected = self.order.get(pos).copied();
+                if expected != Some(idx) || st.bufs[pos].len() != grad.len() {
+                    // A divergent stream would desynchronize the bucket
+                    // rounds across replicas — fail THIS replica loudly
+                    // (finish surfaces the error and the trainer's abort
+                    // guard poisons the collective for the peers).
+                    st.err = Some(format!(
+                        "overlap lane: completion {pos} was tensor {idx} \
+                         (len {}), expected tensor {expected:?} (len {})",
+                        grad.len(),
+                        st.bufs[pos].len(),
+                    ));
+                    drop(st);
+                    sh.cv.notify_all();
+                    return;
+                }
+                st.bufs[pos].copy_from_slice(grad);
+                st.cursor += 1;
+                if advance(&sh.plan, &mut st) {
+                    drop(st);
+                    sh.cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for OverlapLane {
+    fn drop(&mut self) {
+        if let Some(sh) = &self.shared {
+            let mut st = sh.m.lock().unwrap();
+            st.shutdown = true;
+            // A lane dropped after a clean `finish` is pristine (counters
+            // reset, communicator idle) — the join below returns at once.
+            // Dropped MID-STEP (worker error between deposits and finish),
+            // the communicator may be parked inside a bucket round whose
+            // peers will never arrive — and the trainer's abort-on-drop
+            // guard only fires AFTER this drop, so poison the collective
+            // here or the join deadlocks.
+            let in_flight = st.done != st.enqueued || st.err.is_some();
+            drop(st);
+            if in_flight {
+                self.ex.abort();
+            }
+            sh.cv.notify_all();
+        }
+        if let Some(h) = self.comm.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Async-PS: overlapped single-push lane
+// ---------------------------------------------------------------------------
+
+/// Shared state of one [`AsyncPushLane`].
+struct PushState {
+    /// Per-tensor staging buffers (spec param order), deposited by the
+    /// worker during backward; the communicator copies them out under the
+    /// lock before pushing.
+    staged: Vec<Vec<f32>>,
+    /// One-time template for the communicator's push store (names/shapes).
+    template: Option<ParamStore>,
+    /// Version the staged gradient was computed against; `Some` hands the
+    /// push to the communicator.
+    basis: Option<u64>,
+    /// The push outcome, taken by `join_push`.
+    result: Option<Result<Push>>,
+    /// Lane-fatal failure (runtime setup) — sticky.
+    err: Option<String>,
+    shutdown: bool,
+    #[cfg(not(loom))]
+    busy_ns: u64,
+}
+
+struct PushShared {
+    m: Mutex<PushState>,
+    cv: Condvar,
+}
+
+/// The async G worker's overlap lane: gradients stream into staging
+/// buffers during backward, and a dedicated thread (own `Runtime` — PJRT
+/// handles are not `Send`) performs the ONE atomic `ParamServer::push`
+/// while the worker ships its fake batch.  Per-step protocol:
+/// `run_step_grads_streamed_into(.., lane)` → `prime` (first step only) →
+/// `feed_finish(basis)` → overlapped work → `join_push()` → handle
+/// `Applied`/`Stale`/`Done` exactly as the serial loop does.
+pub struct AsyncPushLane {
+    shared: Arc<PushShared>,
+    comm: Option<thread::JoinHandle<()>>,
+    primed: bool,
+}
+
+fn push_loop(
+    shared: Arc<PushShared>,
+    dir: PathBuf,
+    spec: ArtifactSpec,
+    srv: Arc<ParamServer>,
+    replica: usize,
+) {
+    #[cfg(not(loom))]
+    let _bind = crate::runtime::workspace::bind_replica(replica);
+    #[cfg(loom)]
+    let _ = replica;
+    let rt = match Runtime::new(&dir).and_then(|rt| {
+        rt.prepare(&spec)?;
+        Ok(rt)
+    }) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let mut st = shared.m.lock().unwrap();
+            st.err = Some(format!("push lane runtime setup failed: {e:#}"));
+            drop(st);
+            shared.cv.notify_all();
+            return;
+        }
+    };
+    // The communicator's private push store, cloned from the template on
+    // the first round and value-copied afterwards.
+    let mut mine = ParamStore::new();
+    let mut st = shared.m.lock().unwrap();
+    loop {
+        while st.basis.is_none() && !st.shutdown {
+            st = shared.cv.wait(st).unwrap();
+        }
+        if st.shutdown {
+            return;
+        }
+        let basis = st.basis.take().expect("checked above");
+        if mine.is_empty() {
+            match st.template.take() {
+                Some(t) => mine = t,
+                None => {
+                    st.err = Some("push lane fed before prime".into());
+                    drop(st);
+                    shared.cv.notify_all();
+                    return;
+                }
+            }
+        }
+        let mut ok = true;
+        for (t, b) in mine.iter_mut().zip(st.staged.iter()) {
+            if t.data.len() != b.len() {
+                ok = false;
+                break;
+            }
+            t.data.copy_from_slice(b);
+        }
+        if !ok {
+            st.err = Some("push lane: staged gradient layout changed mid-run".into());
+            drop(st);
+            shared.cv.notify_all();
+            return;
+        }
+        drop(st);
+        #[cfg(not(loom))]
+        let t0 = std::time::Instant::now();
+        let res = {
+            #[cfg(not(loom))]
+            let _span = crate::telemetry::span(crate::telemetry::Phase::BucketExchange);
+            srv.push(&rt, &mine, basis)
+        };
+        st = shared.m.lock().unwrap();
+        #[cfg(not(loom))]
+        {
+            st.busy_ns += t0.elapsed().as_nanos() as u64;
+        }
+        st.result = Some(res);
+        drop(st);
+        shared.cv.notify_all();
+        st = shared.m.lock().unwrap();
+    }
+}
+
+impl AsyncPushLane {
+    /// Spawn the push communicator for `srv`.  `dir` is the artifact dir
+    /// (the thread opens its own `Runtime` on it); `spec` the step
+    /// artifact whose optimizer the server applies.
+    pub fn new(
+        dir: PathBuf,
+        spec: ArtifactSpec,
+        srv: Arc<ParamServer>,
+        replica: usize,
+    ) -> AsyncPushLane {
+        let shared = Arc::new(PushShared {
+            m: Mutex::new(PushState {
+                staged: Vec::new(),
+                template: None,
+                basis: None,
+                result: None,
+                err: None,
+                shutdown: false,
+                #[cfg(not(loom))]
+                busy_ns: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        let sh = shared.clone();
+        let comm = thread::spawn(move || push_loop(sh, dir, spec, srv, replica));
+        AsyncPushLane { shared, comm: Some(comm), primed: false }
+    }
+
+    pub fn primed(&self) -> bool {
+        self.primed
+    }
+
+    /// One-time staging setup from the first step's full gradient store
+    /// (the streamed deposits are no-ops until this ran).
+    pub fn prime(&mut self, grads: &ParamStore) {
+        let mut st = self.shared.m.lock().unwrap();
+        st.staged = grads.iter().map(|t| t.data.clone()).collect();
+        st.template = Some(grads.clone());
+        self.primed = true;
+    }
+
+    /// Hand the staged gradient to the communicator: push it against
+    /// `basis` while the worker overlaps other work, then `join_push`.
+    pub fn feed_finish(&mut self, basis: u64) {
+        let mut st = self.shared.m.lock().unwrap();
+        st.basis = Some(basis);
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    /// Collect the in-flight push's outcome (blocking on the tail the
+    /// overlapped work didn't hide).
+    pub fn join_push(&mut self) -> Result<Push> {
+        let sh = &self.shared;
+        let mut st = sh.m.lock().unwrap();
+        #[cfg(not(loom))]
+        let t0 = std::time::Instant::now();
+        {
+            #[cfg(not(loom))]
+            let _span = crate::telemetry::span(crate::telemetry::Phase::Exchange);
+            while st.result.is_none() && st.err.is_none() {
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+        if let Some(e) = &st.err {
+            bail!("{e}");
+        }
+        #[cfg(not(loom))]
+        {
+            let exposed = t0.elapsed().as_nanos() as u64;
+            let busy = st.busy_ns;
+            st.busy_ns = 0;
+            if busy > 0 {
+                crate::telemetry::gauge(
+                    crate::telemetry::Gauge::OverlapHiddenPct,
+                    100 * busy.saturating_sub(exposed) / busy,
+                );
+            }
+        }
+        st.result.take().expect("checked above")
+    }
+}
+
+impl GradStream for AsyncPushLane {
+    fn grad_ready(&mut self, idx: usize, grad: &[f32]) {
+        if !self.primed {
+            return; // the first step primes from the full store instead
+        }
+        let mut st = self.shared.m.lock().unwrap();
+        if let Some(b) = st.staged.get_mut(idx) {
+            if b.len() == grad.len() {
+                b.copy_from_slice(grad);
+            }
+        }
+        // Size/index surprises are caught by the communicator's layout
+        // check at push time — no silent partial pushes.
+    }
+}
+
+impl Drop for AsyncPushLane {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.comm.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::dist::exchange::{InProcAllReduce, Topology};
+    use crate::runtime::HostTensor;
+    use crate::util::rng::Rng;
+
+    /// Per-replica gradient set: 3 tensors of distinct sizes + distinct
+    /// per-replica values, deterministic per (seed, replica, step).
+    fn mk_grads(seed: u64, replica: usize, step: u64) -> ParamStore {
+        let mut rng = Rng::replica_stream(seed ^ step, replica as u64);
+        let mut store = ParamStore::new();
+        for (i, len) in [7usize, 33, 12].into_iter().enumerate() {
+            let mut v = vec![0f32; len];
+            rng.fill_gaussian(&mut v, 0.0, 1.0);
+            store.insert(HostTensor::new(&format!("p{i}"), vec![len], v));
+        }
+        store
+    }
+
+    /// Stream a store through a lane in an arbitrary-but-fixed completion
+    /// order (reverse, like the ref backend), then finish.
+    fn run_step(lane: &mut OverlapLane, grads: &mut ParamStore, loss: f64) -> Result<f64> {
+        let order: Vec<usize> = (0..grads.len()).rev().collect();
+        for &idx in &order {
+            let data = grads.by_index(idx).data.clone();
+            lane.grad_ready(idx, &data);
+        }
+        lane.finish(grads, loss)
+    }
+
+    #[test]
+    fn overlapped_buckets_match_monolithic_exchange_bitwise() {
+        for topo in [Topology::Tree, Topology::Ring] {
+            let n = 2;
+            let steps = 4u64;
+            // Oracle: serial monolithic rounds over the same deposits, in
+            // the lane's completion order (reverse) with loss last.
+            let oracle = InProcAllReduce::new(n, topo);
+            let want: Vec<Vec<Vec<Vec<f32>>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..n)
+                    .map(|r| {
+                        let ex = oracle.clone();
+                        s.spawn(move || {
+                            let mut out = Vec::new();
+                            for step in 1..=steps {
+                                let g = mk_grads(3, r, step);
+                                let mut bufs: Vec<Vec<f32>> = (0..g.len())
+                                    .rev()
+                                    .map(|i| g.by_index(i).data.clone())
+                                    .collect();
+                                bufs.push(vec![(r as f32) + step as f32]);
+                                ex.all_reduce_mean_into(r, &mut bufs).unwrap();
+                                out.push(bufs);
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            // Overlapped lane with a forced MULTI-bucket plan (the test
+            // tensors are far below the planner's byte target).
+            let ex = InProcAllReduce::new(n, topo);
+            let got: Vec<Vec<(ParamStore, f64)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..n)
+                    .map(|r| {
+                        let ex = ex.clone();
+                        s.spawn(move || {
+                            let mut lane = OverlapLane::new(ex, r);
+                            lane.force_plan(vec![0..1, 1..3, 3..4]);
+                            let mut out = Vec::new();
+                            for step in 1..=steps {
+                                let mut g = mk_grads(3, r, step);
+                                let loss =
+                                    run_step(&mut lane, &mut g, (r as f32 + step as f32) as f64)
+                                        .unwrap();
+                                out.push((g, loss));
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            for (r, per_step) in got.iter().enumerate() {
+                for (si, (g, loss)) in per_step.iter().enumerate() {
+                    let w = &want[r][si];
+                    // Completion order was reverse: oracle position p holds
+                    // tensor idx (n_tensors - 1 - p); loss is last.
+                    let k = g.len();
+                    for idx in 0..k {
+                        let a = &g.by_index(idx).data;
+                        let b = &w[k - 1 - idx];
+                        assert_eq!(a.len(), b.len());
+                        for (x, y) in a.iter().zip(b) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "{topo:?} r{r} step{si}");
+                        }
+                    }
+                    assert_eq!((*loss as f32).to_bits(), w[k][0].to_bits(), "{topo:?} loss");
+                }
+            }
+            assert_eq!(ex.rounds(), 1 + (steps - 1) * 3, "{topo:?}: 1 warmup + 3/step");
+        }
+    }
+
+    #[test]
+    fn single_replica_lane_is_identity_across_steps() {
+        let ex = InProcAllReduce::new(1, Topology::Tree);
+        let mut lane = OverlapLane::new(ex, 0);
+        for step in 1..=3u64 {
+            let mut g = mk_grads(11, 0, step);
+            let expect = mk_grads(11, 0, step);
+            let loss = run_step(&mut lane, &mut g, 0.5 + step as f64).unwrap();
+            assert_eq!(loss, (0.5 + step as f64) as f32 as f64);
+            for i in 0..g.len() {
+                assert_eq!(g.by_index(i).data, expect.by_index(i).data, "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn divergent_stream_order_fails_this_replica_and_poisons_peers() {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|r| {
+                    let ex = ex.clone();
+                    s.spawn(move || -> Result<()> {
+                        let mut lane = OverlapLane::new(ex.clone(), r);
+                        lane.force_plan(vec![0..2, 2..4]);
+                        let mut g = mk_grads(7, r, 1);
+                        run_step(&mut lane, &mut g, 1.0)?;
+                        // Step 2: replica 1 streams a WRONG order.
+                        let out = (|| -> Result<f64> {
+                            let order: Vec<usize> = if r == 1 {
+                                (0..g.len()).collect() // forward ≠ recorded reverse
+                            } else {
+                                (0..g.len()).rev().collect()
+                            };
+                            for &idx in &order {
+                                let data = g.by_index(idx).data.clone();
+                                lane.grad_ready(idx, &data);
+                            }
+                            lane.finish(&mut g, 1.0)
+                        })();
+                        match out {
+                            Ok(_) => Ok(()),
+                            Err(e) => {
+                                // What the trainer's abort-on-drop guard
+                                // does: poison the collective so peers
+                                // unwind instead of parking forever.
+                                ex.abort();
+                                Err(e)
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(results.iter().any(|r| r.is_err()), "divergence must surface");
+        assert!(
+            results[1].is_err(),
+            "the replica with the divergent stream must fail loudly"
+        );
+    }
+
+    #[test]
+    fn forced_plan_must_tile_the_tensor_list() {
+        let ex = InProcAllReduce::new(1, Topology::Tree);
+        let mut lane = OverlapLane::new(ex, 0);
+        lane.force_plan(vec![0..2, 3..4]); // hole at position 2
+        let mut g = mk_grads(5, 0, 1);
+        assert!(run_step(&mut lane, &mut g, 0.0).is_err());
+    }
+}

@@ -19,6 +19,13 @@
 //! (Conv models with BatchNorm use per-replica batch statistics, like
 //! unsynced BatchNorm in real data-parallel training, so the contract is
 //! exact only for BN-free nets.)
+//!
+//! By default the exchange is OVERLAPPED with backward compute through
+//! [`super::overlap::OverlapLane`] — bucketized rounds on a communicator
+//! thread, bitwise identical to the serial barrier (also pinned in
+//! `tests/dist_parity.rs`).  `PARAGAN_OVERLAP=off` (or
+//! `DistConfig::overlap = Some(false)`) keeps the serial
+//! `reduce_with_loss_into` path as the oracle lane.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -26,13 +33,14 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::exchange::{Exchange, InProcAllReduce};
+use super::overlap::OverlapLane;
 use super::{bound_scaling, DistResult};
 use crate::coordinator::trainer::{upsert_batch_y, upsert_y, upsert_z, Prologue, TrainConfig};
 use crate::coordinator::TrainResult;
 use crate::metrics::tracker::Series;
 use crate::runtime::{
-    apply_step, run_inference_into, run_step_grads_into, HostTensor, ParamStore, Runtime,
-    StepOutputs,
+    apply_step, run_inference_into, run_step_grads_into, run_step_grads_streamed_into, HostTensor,
+    ParamStore, Runtime, StepOutputs,
 };
 use crate::util::rng::Rng;
 
@@ -151,6 +159,17 @@ fn sync_worker(
     let mut d_scratch: Vec<Vec<f32>> = Vec::new();
     let mut g_scratch: Vec<Vec<f32>> = Vec::new();
 
+    // Overlapped exchange (`dist::overlap`): one lane per collective.  The
+    // backend streams each layer's finished gradients into the lane during
+    // backward and a communicator thread exchanges them in planned buckets
+    // — bitwise identical to the serial `reduce_with_loss_into` below,
+    // which stays as the oracle lane (`PARAGAN_OVERLAP=off`).  The toggle
+    // is per-RUN: every replica reads the same config, so a run never
+    // mixes overlapped and serial deposit orders.
+    let overlap = cfg.dist.overlap_enabled();
+    let mut d_lane = overlap.then(|| OverlapLane::new(ex.d.clone(), replica));
+    let mut g_lane = overlap.then(|| OverlapLane::new(ex.g.clone(), replica));
+
     for step in 1..=cfg.steps {
         let lr = scaling.lr_at(step);
 
@@ -184,19 +203,43 @@ fn sync_worker(
                     );
                 }
             }
-            run_step_grads_into(
-                &rt,
-                &d_spec,
-                &d_params,
-                &d_slots,
-                None,
-                &d_in,
-                &mut d_grads,
-                &mut d_outs,
-            )?;
-            let local_loss = d_outs["loss"].data[0] as f64;
-            let mean_loss =
-                reduce_with_loss_into(ex.d.as_ref(), replica, &mut d_grads, local_loss, &mut d_scratch)?;
+            let mean_loss = match d_lane.as_mut() {
+                Some(lane) => {
+                    run_step_grads_streamed_into(
+                        &rt,
+                        &d_spec,
+                        &d_params,
+                        &d_slots,
+                        None,
+                        &d_in,
+                        &mut d_grads,
+                        &mut d_outs,
+                        lane,
+                    )?;
+                    let local_loss = d_outs["loss"].data[0] as f64;
+                    lane.finish(&mut d_grads, local_loss)?
+                }
+                None => {
+                    run_step_grads_into(
+                        &rt,
+                        &d_spec,
+                        &d_params,
+                        &d_slots,
+                        None,
+                        &d_in,
+                        &mut d_grads,
+                        &mut d_outs,
+                    )?;
+                    let local_loss = d_outs["loss"].data[0] as f64;
+                    reduce_with_loss_into(
+                        ex.d.as_ref(),
+                        replica,
+                        &mut d_grads,
+                        local_loss,
+                        &mut d_scratch,
+                    )?
+                }
+            };
             apply_step(
                 &rt,
                 &d_spec,
@@ -215,19 +258,43 @@ fn sync_worker(
         if model.n_classes > 0 {
             upsert_y(&mut g_in, &mut z_rng, model.batch, model.n_classes);
         }
-        run_step_grads_into(
-            &rt,
-            &g_spec,
-            &g_params,
-            &g_slots,
-            Some(&d_params),
-            &g_in,
-            &mut g_grads,
-            &mut g_outs,
-        )?;
-        let local_loss = g_outs["loss"].data[0] as f64;
-        let mean_loss =
-            reduce_with_loss_into(ex.g.as_ref(), replica, &mut g_grads, local_loss, &mut g_scratch)?;
+        let mean_loss = match g_lane.as_mut() {
+            Some(lane) => {
+                run_step_grads_streamed_into(
+                    &rt,
+                    &g_spec,
+                    &g_params,
+                    &g_slots,
+                    Some(&d_params),
+                    &g_in,
+                    &mut g_grads,
+                    &mut g_outs,
+                    lane,
+                )?;
+                let local_loss = g_outs["loss"].data[0] as f64;
+                lane.finish(&mut g_grads, local_loss)?
+            }
+            None => {
+                run_step_grads_into(
+                    &rt,
+                    &g_spec,
+                    &g_params,
+                    &g_slots,
+                    Some(&d_params),
+                    &g_in,
+                    &mut g_grads,
+                    &mut g_outs,
+                )?;
+                let local_loss = g_outs["loss"].data[0] as f64;
+                reduce_with_loss_into(
+                    ex.g.as_ref(),
+                    replica,
+                    &mut g_grads,
+                    local_loss,
+                    &mut g_scratch,
+                )?
+            }
+        };
         apply_step(
             &rt,
             &g_spec,

@@ -17,7 +17,12 @@
 //! Both estimates run through the SAME `MatmulPlan` code — the deltas are
 //! produced by the planner, not scripted.
 
-use super::plan::{host_peak_flops, Accelerator, KernelLane, MatmulPlan};
+use std::ops::Range;
+
+use super::plan::{
+    host_peak_flops, Accelerator, KernelLane, MatmulPlan, EXCHANGE_BUCKET_MIN_BYTES,
+    EXCHANGE_BUCKET_TARGET_NS,
+};
 
 /// One layer of a model, described as its im2col matmul per sample.
 #[derive(Debug, Clone)]
@@ -173,6 +178,51 @@ pub fn preferred_host_lane(m: usize, k: usize, n: usize) -> KernelLane {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Gradient-exchange bucket planning — the overlap lane's sizing policy
+// ---------------------------------------------------------------------------
+
+/// Bytes one gradient-exchange bucket should carry: the bucket wall-time
+/// target ([`EXCHANGE_BUCKET_TARGET_NS`]) at the modeled stream bandwidth
+/// ([`HOST_STREAM_BYTES_PER_SEC`]), floored at
+/// [`EXCHANGE_BUCKET_MIN_BYTES`].  Like every number in this module it is a
+/// *relative* sizing verdict, not a measurement — what matters is that the
+/// same policy yields the same plan on every replica.
+pub fn exchange_bucket_bytes() -> usize {
+    let wire = EXCHANGE_BUCKET_TARGET_NS as f64 * 1e-9 * HOST_STREAM_BYTES_PER_SEC;
+    (wire as usize).max(EXCHANGE_BUCKET_MIN_BYTES)
+}
+
+/// Partition gradient tensors (given in COMPLETION order, sizes in bytes)
+/// into consecutive exchange buckets: greedy accumulation until a bucket
+/// reaches [`exchange_bucket_bytes`], never splitting a tensor.  The plan
+/// is a pure function of the sizes, so replicas that observe the same
+/// completion order (they do — it is the model's backward order) compute
+/// identical plans and meet on the exchange barrier bucket for bucket.
+///
+/// Every tensor lands in exactly one bucket, buckets are non-empty and
+/// cover `0..sizes.len()` in order; an empty input yields an empty plan.
+pub fn bucket_plan(sizes_bytes: &[usize]) -> Vec<Range<usize>> {
+    let target = exchange_bucket_bytes();
+    let mut plan = Vec::new();
+    let mut start = 0usize;
+    let mut filled = 0usize;
+    for (i, &sz) in sizes_bytes.iter().enumerate() {
+        // Close the open bucket BEFORE an add that already met the target:
+        // oversized single tensors get a bucket of their own.
+        if filled >= target && i > start {
+            plan.push(start..i);
+            start = i;
+            filled = 0;
+        }
+        filled += sz;
+    }
+    if start < sizes_bytes.len() {
+        plan.push(start..sizes_bytes.len());
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +340,53 @@ mod tests {
         let s = host_gemm_estimate(KernelLane::Simd, 4, 17, 1);
         assert!(s.pack_bytes > e.pack_bytes, "wider nr packs more: {} vs {}", s.pack_bytes, e.pack_bytes);
         assert!(e.est_ns <= s.est_ns, "exact {} simd {}", e.est_ns, s.est_ns);
+    }
+
+    /// The bucket target derives from the SAME bandwidth model as the GEMM
+    /// packing estimate, and never dips below the rendezvous floor.
+    #[test]
+    fn exchange_bucket_bytes_matches_the_bandwidth_model() {
+        let b = exchange_bucket_bytes();
+        assert!(b >= crate::layout::plan::EXCHANGE_BUCKET_MIN_BYTES);
+        let wire = crate::layout::plan::EXCHANGE_BUCKET_TARGET_NS as f64 * 1e-9
+            * HOST_STREAM_BYTES_PER_SEC;
+        assert_eq!(b, (wire as usize).max(crate::layout::plan::EXCHANGE_BUCKET_MIN_BYTES));
+    }
+
+    /// bucket_plan covers the input exactly once, in order, with non-empty
+    /// consecutive buckets; every bucket except the last meets the target
+    /// unless a single oversized tensor owns it.
+    #[test]
+    fn prop_bucket_plan_covers_in_order() {
+        forall_cases(gens::usize_in(0..40), 64, |&n| {
+            let sizes: Vec<usize> =
+                (0..n).map(|i| (i * 7919 + 13) % (3 * exchange_bucket_bytes() / 2)).collect();
+            let plan = bucket_plan(&sizes);
+            let mut next = 0usize;
+            for r in &plan {
+                if r.start != next || r.is_empty() {
+                    return false;
+                }
+                next = r.end;
+            }
+            next == n && (n > 0) == !plan.is_empty()
+        });
+    }
+
+    /// The greedy close point: a bucket closes only once it has met the
+    /// target, so oversized tensors travel alone and small tails merge.
+    #[test]
+    fn bucket_plan_groups_to_target_and_isolates_oversized_tensors() {
+        let t = exchange_bucket_bytes();
+        assert_eq!(bucket_plan(&[]), Vec::<Range<usize>>::new());
+        assert_eq!(bucket_plan(&[1]), vec![0..1]);
+        // Three tensors of 0.6*target: first two share, tail is its own.
+        let s = 3 * t / 5;
+        assert_eq!(bucket_plan(&[s, s, s]), vec![0..2, 2..3]);
+        // An oversized tensor closes its bucket before the next tensor.
+        assert_eq!(bucket_plan(&[5 * t, 1, 1]), vec![0..1, 1..3]);
+        // Everything under target collapses into one bucket.
+        assert_eq!(bucket_plan(&[1, 2, 3]), vec![0..3]);
     }
 
     /// Estimates stay positive and finite across a shape sweep, and the

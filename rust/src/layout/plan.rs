@@ -108,6 +108,25 @@ pub const CPU_CACHE_BUDGET_BYTES: usize = 192 * 1024;
 /// L2 slice alongside [`CPU_CACHE_BUDGET_BYTES`]).
 pub const CPU_A_BLOCK_BUDGET_BYTES: usize = 96 * 1024;
 
+/// Target wall time ONE gradient bucket should occupy on the exchange wire
+/// (nanoseconds).  The overlapped dist lane (`dist::overlap`) streams
+/// finished per-layer gradients into `Exchange::all_reduce_mean_into` in
+/// consecutive completion-order buckets; this constant times the modeled
+/// stream bandwidth (`layout::cost::HOST_STREAM_BYTES_PER_SEC`) yields the
+/// bytes-per-bucket target (`layout::cost::exchange_bucket_bytes`).  Sized
+/// so one bucket amortizes the exchange's rendezvous overhead (~µs of
+/// barrier wake-ups) by an order of magnitude while staying small enough
+/// that several buckets fit inside one backward pass — the overlap window.
+pub const EXCHANGE_BUCKET_TARGET_NS: usize = 50_000;
+
+/// Floor on the bytes-per-bucket target: below this, rendezvous overhead
+/// dominates the wire time and splitting buys nothing — tiny models
+/// collapse to a single bucket (which degrades gracefully to the serial
+/// exchange, just on the communicator thread).
+pub const EXCHANGE_BUCKET_MIN_BYTES: usize = 16 * 1024;
+
+const _: () = assert!(EXCHANGE_BUCKET_TARGET_NS > 0 && EXCHANGE_BUCKET_MIN_BYTES > 0);
+
 /// The HostCpu tiling decision for one (M,K)x(K,N) GEMM — the CPU
 /// counterpart of [`MatmulPlan`], except these tiles are not a cost model:
 /// `runtime::kernel::Gemm` runs exactly what this rule chooses.

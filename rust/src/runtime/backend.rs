@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 
 use super::artifact::ArtifactSpec;
 use super::params::{HostTensor, ParamStore};
-use super::step::StepOutputs;
+use super::step::{GradStream, StepOutputs};
 
 /// Compile/execute counters for perf accounting (shared by all backends).
 #[derive(Debug, Default, Clone)]
@@ -146,6 +146,27 @@ pub trait Backend {
         _data: &BTreeMap<String, HostTensor>,
         _grads: &mut ParamStore,
         _outs: &mut StepOutputs,
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// [`Backend::grads_in_place`] with per-tensor completion streaming:
+    /// the backend calls `stream.grad_ready(idx, grad)` the moment each
+    /// parameter tensor's gradient is final (ref backend: during backward,
+    /// layers in reverse) and ALSO fills `grads`/`outs` exactly as the
+    /// plain lane does.  `Ok(false)` means no streamed lane here — the
+    /// step plumbing falls back to [`Backend::grads_in_place`] (or the
+    /// HostTensor protocol) and replays completions afterwards.
+    #[allow(clippy::too_many_arguments)]
+    fn grads_in_place_streamed(
+        &self,
+        _spec: &ArtifactSpec,
+        _params: &ParamStore,
+        _dparams: Option<&ParamStore>,
+        _data: &BTreeMap<String, HostTensor>,
+        _grads: &mut ParamStore,
+        _outs: &mut StepOutputs,
+        _stream: &mut dyn GradStream,
     ) -> Result<bool> {
         Ok(false)
     }

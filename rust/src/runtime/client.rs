@@ -20,7 +20,7 @@ use anyhow::Result;
 use super::artifact::ArtifactSpec;
 use super::backend::{Backend, RuntimeStats};
 use super::params::{HostTensor, ParamStore};
-use super::step::StepOutputs;
+use super::step::{GradStream, StepOutputs};
 
 pub struct Runtime {
     backend: Box<dyn Backend>,
@@ -120,6 +120,20 @@ impl Runtime {
         outs: &mut StepOutputs,
     ) -> Result<bool> {
         self.backend.grads_in_place(spec, params, dparams, data, grads, outs)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn grads_in_place_streamed(
+        &self,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        grads: &mut ParamStore,
+        outs: &mut StepOutputs,
+        stream: &mut dyn GradStream,
+    ) -> Result<bool> {
+        self.backend.grads_in_place_streamed(spec, params, dparams, data, grads, outs, stream)
     }
 
     pub fn apply_in_place(

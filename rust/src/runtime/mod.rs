@@ -32,7 +32,7 @@ pub use ref_cpu::RefCpuBackend;
 pub use refgen::{write_ref_artifacts, write_ref_artifacts_for, RefBackbone, RefModelSpec};
 pub use step::{
     apply_step, run_inference, run_inference_into, run_step, run_step_grads,
-    run_step_grads_into, run_step_into, StepOutputs,
+    run_step_grads_into, run_step_grads_streamed_into, run_step_into, GradStream, StepOutputs,
 };
 pub use workspace::{
     arena_enabled, bind_replica, bound_replica, set_arena_mode, step_memory_plan, ReplicaBinding,

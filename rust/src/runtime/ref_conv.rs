@@ -235,6 +235,50 @@ fn im2col_rows(x: &[f32], s: &Conv2dShape, r0: usize, r1: usize, mut put: impl F
     }
 }
 
+/// The same padded gather as [`im2col_rows`], emitted as CONTIGUOUS spans:
+/// `put_span(row, ki0, src)` where `src` is the valid horizontal slice of
+/// one input row and `ki0` the column index of its first element.  Exactly
+/// the elements [`im2col_rows`] visits, in the same ascending order —
+/// layouts whose destination is unit-stride in `ki` (row-major columns,
+/// packed-B panels within an `nr` group) turn each span into a
+/// `copy_from_slice` the SIMD lane's memcpy vectorizes, instead of a
+/// scalar per-element store.  (The packed-A layout interleaves `ki` at
+/// stride `mr` and keeps the scalar gather.)
+#[inline]
+fn im2col_rows_spans(
+    x: &[f32],
+    s: &Conv2dShape,
+    r0: usize,
+    r1: usize,
+    mut put_span: impl FnMut(usize, usize, &[f32]),
+) {
+    debug_assert_eq!(x.len(), s.batch * s.cin * s.ih * s.iw);
+    let (oh, ow) = s.out_hw();
+    for row in r0..r1 {
+        let n = row / (oh * ow);
+        let rem = row % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
+        for ci in 0..s.cin {
+            let xbase = (n * s.cin + ci) * s.ih * s.iw;
+            for r in 0..s.kh {
+                let iy = (oy * s.stride + r) as isize - s.pad_h as isize;
+                if iy < 0 || iy >= s.ih as isize {
+                    continue;
+                }
+                let xrow = xbase + iy as usize * s.iw;
+                let crow = (ci * s.kh + r) * s.kw;
+                let x0 = ox * s.stride;
+                let c_lo = s.pad_w.saturating_sub(x0);
+                let c_hi = (s.pad_w + s.iw).saturating_sub(x0).min(s.kw);
+                if c_lo < c_hi {
+                    let a = xrow + x0 + c_lo - s.pad_w;
+                    put_span(row, crow + c_lo, &x[a..a + (c_hi - c_lo)]);
+                }
+            }
+        }
+    }
+}
+
 /// im2col columns packed as the GEMM engine's *B* operand (contraction over
 /// the B*OH*OW rows): the weight-gradient GEMM `dW = doutT x cols` consumes
 /// this directly, again without a row-major intermediate.  Serial: the dW
@@ -252,13 +296,53 @@ pub fn im2col_packed_b(x: &[f32], s: &Conv2dShape, nr: usize) -> PackedB {
 /// `packed_b_len(B*OH*OW, K, nr)`, pre-zeroed.  `nr` is the consuming
 /// GEMM's planned panel width (`rule.nr` — lane-dependent, so the packer
 /// takes it as an argument instead of hardcoding the exact lane's).
+///
+/// Under the process-wide SIMD fast lane the fill runs the spanned copy
+/// path ([`im2col_rows_spans`]); the exact lane keeps the scalar gather as
+/// the oracle.  The two are bit-identical by construction (copies, no
+/// arithmetic) and pinned so by `spanned_packed_b_matches_scalar_bitwise`.
 pub fn im2col_packed_b_into(x: &[f32], s: &Conv2dShape, nr: usize, dst: &mut [f32]) {
+    if KernelConfig::current().lane == crate::layout::plan::KernelLane::Simd {
+        im2col_packed_b_spans_into(x, s, nr, dst);
+    } else {
+        im2col_packed_b_scalar_into(x, s, nr, dst);
+    }
+}
+
+/// Scalar-gather packed-B fill — the exact lane's path and the bit-oracle
+/// for the spanned variant.
+fn im2col_packed_b_scalar_into(x: &[f32], s: &Conv2dShape, nr: usize, dst: &mut [f32]) {
     let (oh, ow) = s.out_hw();
     let kk = s.k();
     let m = s.batch * oh * ow;
     debug_assert_eq!(dst.len(), super::kernel::packed_b_len(m, kk, nr));
     im2col_rows(x, s, 0, m, |row, ki, v| {
         dst[(ki / nr) * (m * nr) + row * nr + ki % nr] = v;
+    });
+}
+
+/// Spanned packed-B fill: within one `nr`-wide K group a fixed `row` is
+/// unit-stride in `ki`, so each valid input span splits into at most
+/// `span_len / nr + 1` straight `copy_from_slice`es — the vectorizable
+/// edge-span copy the SIMD lane runs (`pad > 0` shapes produce a distinct
+/// span per output column near the border, where the scalar gather's
+/// per-element stores hurt most).
+fn im2col_packed_b_spans_into(x: &[f32], s: &Conv2dShape, nr: usize, dst: &mut [f32]) {
+    let (oh, ow) = s.out_hw();
+    let kk = s.k();
+    let m = s.batch * oh * ow;
+    debug_assert_eq!(dst.len(), super::kernel::packed_b_len(m, kk, nr));
+    im2col_rows_spans(x, s, 0, m, |row, ki0, src| {
+        let mut ki = ki0;
+        let mut rem = src;
+        while !rem.is_empty() {
+            let o = ki % nr;
+            let take = (nr - o).min(rem.len());
+            let at = (ki / nr) * (m * nr) + row * nr + o;
+            dst[at..at + take].copy_from_slice(&rem[..take]);
+            ki += take;
+            rem = &rem[take..];
+        }
     });
 }
 
@@ -1941,6 +2025,15 @@ impl ConvForwardWs {
 pub struct GradSink<'a> {
     pub bufs: &'a mut [Vec<f32>],
     pub acc: bool,
+    /// Completion hook: [`ConvNet::backward_ws`] calls it with
+    /// `(tensor_index, grad)` the moment a parameter tensor's gradient is
+    /// fully written for THIS sink pass, in completion order (layers in
+    /// reverse, tensors within a layer ascending).  Attach it only on the
+    /// pass whose values are final — a two-pass accumulating step hooks the
+    /// `acc` pass, never the first.  A plain callback by design: overlap
+    /// streaming (`dist::overlap`) plugs in here without this file knowing
+    /// about exchanges or telemetry.
+    pub on_ready: Option<&'a mut dyn FnMut(usize, &[f32])>,
 }
 
 impl ConvNet {
@@ -2233,6 +2326,15 @@ impl ConvNet {
                     }
                 }
             }
+            // This layer's parameter gradients are final for this pass:
+            // stream them out before backward moves on to earlier layers.
+            if let Some(sk) = sink.as_deref_mut() {
+                if let Some(hook) = sk.on_ready.as_deref_mut() {
+                    for j in pstart..pstart + l.n_params() {
+                        hook(j, sk.bufs[j].as_slice());
+                    }
+                }
+            }
             let next = match dx.take() {
                 Some(b) => b,
                 None => ws.take(0),
@@ -2388,6 +2490,54 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    /// The SIMD lane's spanned packed-B fill is bit-identical to the
+    /// scalar gather, span emission reconstructs the scalar gather's exact
+    /// element stream, and zero-initialized padding slots stay untouched —
+    /// across pad>0 strided edges, non-square kernels, kernels wider than
+    /// the input, and both lanes' `nr` (plus a deliberately misaligned
+    /// width that forces spans to straddle `nr`-group boundaries).
+    #[test]
+    fn spanned_packed_b_matches_scalar_bitwise() {
+        let mut rng = Rng::new(7);
+        for s in [
+            Conv2dShape { batch: 2, cin: 3, ih: 8, iw: 8, cout: 4, kh: 4, kw: 4, stride: 2, pad_h: 1, pad_w: 1 },
+            Conv2dShape { batch: 1, cin: 2, ih: 5, iw: 7, cout: 3, kh: 3, kw: 3, stride: 1, pad_h: 2, pad_w: 2 },
+            Conv2dShape { batch: 2, cin: 1, ih: 4, iw: 4, cout: 2, kh: 2, kw: 3, stride: 2, pad_h: 0, pad_w: 1 },
+            // kw > iw: every span is an edge span.
+            Conv2dShape { batch: 1, cin: 2, ih: 3, iw: 2, cout: 2, kh: 2, kw: 4, stride: 1, pad_h: 1, pad_w: 2 },
+        ] {
+            let x = randn(&mut rng, s.batch * s.cin * s.ih * s.iw, 1.0);
+            let (oh, ow) = s.out_hw();
+            let (m, kk) = (s.batch * oh * ow, s.k());
+
+            // Span emission == scalar emission, element for element.
+            let mut scalar = vec![0f32; m * kk];
+            im2col_rows(&x, &s, 0, m, |row, ki, v| scalar[row * kk + ki] = v);
+            let mut spanned = vec![0f32; m * kk];
+            im2col_rows_spans(&x, &s, 0, m, |row, ki0, src| {
+                spanned[row * kk + ki0..row * kk + ki0 + src.len()].copy_from_slice(src);
+            });
+            assert_eq!(
+                scalar.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                spanned.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "span reconstruction differs for {s:?}"
+            );
+
+            for nr in [crate::layout::plan::CPU_NR, crate::layout::plan::CPU_SIMD_NR, 5] {
+                let len = crate::runtime::kernel::packed_b_len(m, kk, nr);
+                let mut a = vec![0f32; len];
+                im2col_packed_b_scalar_into(&x, &s, nr, &mut a);
+                let mut b = vec![0f32; len];
+                im2col_packed_b_spans_into(&x, &s, nr, &mut b);
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "packed-B span path differs for {s:?} nr={nr}"
+                );
             }
         }
     }
@@ -2911,7 +3061,7 @@ mod tests {
         }
         let mut gbufs: Vec<Vec<f32>> = grads_want.iter().map(|g| vec![0f32; g.len()]).collect();
         let dout = ws.take_copy(&dvec);
-        let mut sink = GradSink { bufs: &mut gbufs, acc: false };
+        let mut sink = GradSink { bufs: &mut gbufs, acc: false, on_ready: None };
         let dx = net
             .backward_ws(&pv, &fw, dout, true, Some(&mut sink), "t", &mut ws)
             .unwrap()
@@ -2931,7 +3081,7 @@ mod tests {
         {
             net.forward_ws(&pv, &x0, batch, false, "t", &mut ws, &mut fw).unwrap();
             let dout = ws.take_copy(&dvec);
-            let mut sink = GradSink { bufs: &mut gbufs, acc: false };
+            let mut sink = GradSink { bufs: &mut gbufs, acc: false, on_ready: None };
             let dx = net
                 .backward_ws(&pv, &fw, dout, true, Some(&mut sink), "t", &mut ws)
                 .unwrap()
@@ -2945,7 +3095,7 @@ mod tests {
         let before = ws.overflow_takes();
         net.forward_ws(&pv, &x0, batch, false, "t", &mut ws, &mut fw).unwrap();
         let dout = ws.take_copy(&dvec);
-        let mut sink = GradSink { bufs: &mut gbufs, acc: false };
+        let mut sink = GradSink { bufs: &mut gbufs, acc: false, on_ready: None };
         let dx = net
             .backward_ws(&pv, &fw, dout, true, Some(&mut sink), "t", &mut ws)
             .unwrap()

@@ -32,7 +32,7 @@ use super::backend::{Backend, RuntimeStats};
 use super::kernel::KernelConfig;
 use super::params::{HostTensor, ParamStore, ParamView};
 use super::ref_conv::{Act, ConvForwardWs, ConvNet, GradSink, Layer, LayerOp};
-use super::step::StepOutputs;
+use super::step::{GradStream, StepOutputs};
 use super::workspace::{self, StepShape, Workspace};
 use crate::util::json;
 
@@ -1201,7 +1201,10 @@ impl RefCpuBackend {
 
     /// d_step forward+backward over the workspace: gradients land in
     /// `st.grads` (real pass overwrites, fake pass accumulates — the
-    /// legacy `gr + gf` merge order), extras land in `outs`.
+    /// legacy `gr + gf` merge order), extras land in `outs`.  `stream`
+    /// (when present) observes each parameter gradient the moment it is
+    /// FINAL — i.e. during the second (accumulating) backward pass only.
+    #[allow(clippy::too_many_arguments)]
     fn d_step_eval_ws(
         prog: &RefProgram,
         spec: &ArtifactSpec,
@@ -1210,6 +1213,7 @@ impl RefCpuBackend {
         params: &ParamStore,
         data: &BTreeMap<String, HostTensor>,
         outs: &mut StepOutputs,
+        stream: Option<&mut dyn GradStream>,
     ) -> Result<()> {
         let key = &spec.key;
         let real = data
@@ -1256,12 +1260,15 @@ impl RefCpuBackend {
         Self::set_out(st, outs, "fake_logits", st.f_b.output())?;
         {
             let pv = ParamView { store: params, order: &st.order };
-            let mut sink = GradSink { bufs: &mut st.grads, acc: false };
+            let mut sink = GradSink { bufs: &mut st.grads, acc: false, on_ready: None };
             st.net.backward_ws(&pv, &st.f_a, drl, false, Some(&mut sink), key, ws)?;
         }
         {
             let pv = ParamView { store: params, order: &st.order };
-            let mut sink = GradSink { bufs: &mut st.grads, acc: true };
+            let mut hook = stream.map(|s| move |j: usize, g: &[f32]| s.grad_ready(j, g));
+            let on_ready: Option<&mut dyn FnMut(usize, &[f32])> =
+                hook.as_mut().map(|h| h as &mut dyn FnMut(usize, &[f32]));
+            let mut sink = GradSink { bufs: &mut st.grads, acc: true, on_ready };
             st.net.backward_ws(&pv, &st.f_b, dfl, false, Some(&mut sink), key, ws)?;
         }
         st.f_a.release_into(ws);
@@ -1272,6 +1279,8 @@ impl RefCpuBackend {
     /// g_step forward+backward over the workspace.  The frozen-D backward
     /// runs with NO gradient sink, skipping its dW/db/dgamma/dbeta work
     /// entirely (the allocating path computed and discarded them).
+    /// `stream` (when present) observes each G parameter gradient as its
+    /// layer finishes in the single G backward pass.
     #[allow(clippy::too_many_arguments)]
     fn g_step_eval_ws(
         prog: &RefProgram,
@@ -1282,6 +1291,7 @@ impl RefCpuBackend {
         dparams: Option<&ParamStore>,
         data: &BTreeMap<String, HostTensor>,
         outs: &mut StepOutputs,
+        stream: Option<&mut dyn GradStream>,
     ) -> Result<()> {
         let key = &spec.key;
         let z = data
@@ -1330,7 +1340,10 @@ impl RefCpuBackend {
         st.f_b.release_into(ws);
         {
             let pv = ParamView { store: params, order: &st.order };
-            let mut sink = GradSink { bufs: &mut st.grads, acc: false };
+            let mut hook = stream.map(|s| move |j: usize, g: &[f32]| s.grad_ready(j, g));
+            let on_ready: Option<&mut dyn FnMut(usize, &[f32])> =
+                hook.as_mut().map(|h| h as &mut dyn FnMut(usize, &[f32]));
+            let mut sink = GradSink { bufs: &mut st.grads, acc: false, on_ready };
             st.net.backward_ws(&pv, &st.f_a, dimg, false, Some(&mut sink), key, ws)?;
         }
         st.f_a.release_into(ws);
@@ -1593,7 +1606,7 @@ impl Backend for RefCpuBackend {
                 Self::ensure_spec(state, &prog, spec, params, None, batch, &cfg)?;
                 let ExecState { ws, specs } = state;
                 let st = specs.get_mut(&spec.key).expect("just ensured");
-                Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs)?;
+                Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs, None)?;
                 Self::optimize_in_place(
                     &prog,
                     &st.param_names,
@@ -1609,7 +1622,7 @@ impl Backend for RefCpuBackend {
                 Self::ensure_spec(state, &prog, spec, params, dparams, batch, &cfg)?;
                 let ExecState { ws, specs } = state;
                 let st = specs.get_mut(&spec.key).expect("just ensured");
-                Self::g_step_eval_ws(&prog, spec, st, ws, params, dparams, data, outs)?;
+                Self::g_step_eval_ws(&prog, spec, st, ws, params, dparams, data, outs, None)?;
                 Self::optimize_in_place(
                     &prog,
                     &st.param_names,
@@ -1662,10 +1675,87 @@ impl Backend for RefCpuBackend {
         let ExecState { ws, specs } = state;
         let st = specs.get_mut(&spec.key).expect("just ensured");
         match prog.kind {
-            Kind::DStep => Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs)?,
+            Kind::DStep => Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs, None)?,
             Kind::GStep => {
-                Self::g_step_eval_ws(&prog, spec, st, ws, params, dparams, data, outs)?
+                Self::g_step_eval_ws(&prog, spec, st, ws, params, dparams, data, outs, None)?
             }
+            _ => unreachable!(),
+        }
+        for (j, name) in st.param_names.iter().enumerate() {
+            match grads.get_mut(name) {
+                Ok(t) => {
+                    anyhow::ensure!(
+                        t.data.len() == st.grads[j].len(),
+                        "reused grad store tensor '{name}' has the wrong size"
+                    );
+                    t.data.copy_from_slice(&st.grads[j]);
+                }
+                Err(_) => {
+                    // alloc-ok: first use of a reusable grad store (warmup);
+                    // every later step hits the copy_from_slice arm above.
+                    let p = params.get(name)?;
+                    grads.insert(HostTensor::new(name, p.shape.clone(), st.grads[j].clone()));
+                }
+            }
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(true)
+    }
+
+    fn grads_in_place_streamed(
+        &self,
+        spec: &ArtifactSpec,
+        params: &ParamStore,
+        dparams: Option<&ParamStore>,
+        data: &BTreeMap<String, HostTensor>,
+        grads: &mut ParamStore,
+        outs: &mut StepOutputs,
+        stream: &mut dyn GradStream,
+    ) -> Result<bool> {
+        if !workspace::arena_enabled() {
+            return Ok(false);
+        }
+        let cfg = KernelConfig::current();
+        if cfg.naive {
+            return Ok(false);
+        }
+        let prog = self.program(spec)?;
+        if !matches!(prog.kind, Kind::DStep | Kind::GStep) {
+            return Ok(false); // the generic path raises the structured error
+        }
+        let t0 = Instant::now();
+        let mut exec_guard = self.exec.borrow_mut();
+        let state = &mut *exec_guard;
+        state.ws.reset();
+        let batch = match prog.kind {
+            Kind::DStep => data.get("real").and_then(|r| r.shape.first().copied()),
+            _ => data.get("z").and_then(|z| z.shape.first().copied()),
+        };
+        Self::ensure_spec(state, &prog, spec, params, dparams, batch, &cfg)?;
+        let ExecState { ws, specs } = state;
+        let st = specs.get_mut(&spec.key).expect("just ensured");
+        // Streamed completions index into st.param_names order — the same
+        // order the copy-back below writes, so `grad_ready(j, ..)` and
+        // `grads` agree on which tensor `j` names.
+        match prog.kind {
+            Kind::DStep => {
+                Self::d_step_eval_ws(&prog, spec, st, ws, params, data, outs, Some(stream))?
+            }
+            Kind::GStep => Self::g_step_eval_ws(
+                &prog,
+                spec,
+                st,
+                ws,
+                params,
+                dparams,
+                data,
+                outs,
+                Some(stream),
+            )?,
             _ => unreachable!(),
         }
         for (j, name) in st.param_names.iter().enumerate() {

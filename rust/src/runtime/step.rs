@@ -205,6 +205,67 @@ pub fn run_step_grads_into(
     Ok(())
 }
 
+/// Consumer of per-tensor gradient completions — the seam between backward
+/// and the overlapped exchange (`dist::overlap`).  `grad_ready(idx, grad)`
+/// is called once per parameter tensor per step with its FINAL gradient,
+/// where `idx` is the tensor's position in the spec's param order (== its
+/// position in the grads `ParamStore`).  The completion ORDER is backend-
+/// defined but deterministic per (backend, artifact): the ref backend
+/// streams layers in reverse with tensors ascending inside a layer; the
+/// emulated fallback replays store order.  Consumers must key on `idx`,
+/// never on arrival rank — and may record the order they observe, which is
+/// then stable for the run.
+pub trait GradStream {
+    fn grad_ready(&mut self, idx: usize, grad: &[f32]);
+}
+
+/// [`run_step_grads_into`] with per-tensor completion streaming: the
+/// backend calls `stream.grad_ready` as backward finishes each parameter
+/// tensor, so a consumer can overlap downstream work (bucketized exchange)
+/// with the rest of backward.  `grads`/`outs` are filled exactly as in the
+/// plain path — the stream is a tap, not a replacement.  Backends without
+/// the streamed lane fall back to the plain path and then replay every
+/// tensor through the stream (correct, just without overlap).
+#[allow(clippy::too_many_arguments)]
+pub fn run_step_grads_streamed_into(
+    rt: &Runtime,
+    spec: &ArtifactSpec,
+    params: &ParamStore,
+    slots: &[ParamStore],
+    dparams: Option<&ParamStore>,
+    data: &BTreeMap<String, HostTensor>,
+    grads: &mut ParamStore,
+    outs: &mut StepOutputs,
+    stream: &mut dyn GradStream,
+) -> Result<()> {
+    let _span = telemetry::span(telemetry::phase_for_step_key(&spec.key));
+    if rt.grads_in_place_streamed(spec, params, dparams, data, grads, outs, stream)? {
+        return Ok(());
+    }
+    // Emulated streaming: compute the full gradient first, then replay the
+    // completions in store (spec) order — no overlap won, but consumers
+    // observe the identical per-tensor protocol on every backend.
+    if !rt.grads_in_place(spec, params, dparams, data, grads, outs)? {
+        // alloc-ok: non-arena fallback lane (backend without grads_in_place).
+        let step_t = HostTensor::new("step", vec![], vec![0.0]);
+        let lr_t = HostTensor::new("lr", vec![], vec![0.0]);
+        let inputs = stage_inputs(spec, &step_t, &lr_t, params, slots, dparams, data)?;
+        let (ret, extras) = rt.execute_grads(spec, &inputs)?;
+        drop(inputs);
+        for g in ret {
+            grads.insert(g);
+        }
+        for t in extras {
+            // alloc-ok: fallback lane metadata clone (tensor data is moved).
+            outs.insert(t.name.clone(), t);
+        }
+    }
+    for (idx, t) in grads.iter().enumerate() {
+        stream.grad_ready(idx, &t.data);
+    }
+    Ok(())
+}
+
 /// Apply a step artifact's optimizer update with externally supplied
 /// (already reduced) gradients: the counterpart of [`run_step_grads`].
 /// `params`/`slots` are updated in place; `grads` is looked up by parameter

@@ -79,9 +79,14 @@ pub enum Phase {
     Recycle = 7,
     /// Waiting on the fake-batch exchange (async D side `pop_batch`).
     FakeWait = 8,
+    /// One gradient bucket's exchange round on the overlap lane's
+    /// communicator thread (`dist::overlap`) — runs concurrently with the
+    /// producing replica's backward, so its total is comm BUSY time;
+    /// [`Phase::Exchange`] on the worker lane keeps meaning EXPOSED wait.
+    BucketExchange = 9,
 }
 
-pub const PHASE_COUNT: usize = 9;
+pub const PHASE_COUNT: usize = 10;
 
 impl Phase {
     pub const ALL: [Phase; PHASE_COUNT] = [
@@ -94,6 +99,7 @@ impl Phase {
         Phase::SnapshotPublish,
         Phase::Recycle,
         Phase::FakeWait,
+        Phase::BucketExchange,
     ];
 
     pub fn name(self) -> &'static str {
@@ -107,6 +113,7 @@ impl Phase {
             Phase::SnapshotPublish => "snapshot_publish",
             Phase::Recycle => "recycle",
             Phase::FakeWait => "fake_wait",
+            Phase::BucketExchange => "bucket_exchange",
         }
     }
 
@@ -177,17 +184,24 @@ pub enum Gauge {
     QueueDepth = 0,
     /// Fake-batch exchange (`ImgBuff`) depth observed at the hand-off.
     FakeBuffDepth = 1,
+    /// Percent (0–100) of the last step's exchange busy time the overlap
+    /// lane hid under backward compute: `100 * (busy - exposed) / busy`,
+    /// set once per `dist::overlap` step from the communicator's bucket
+    /// busy time vs. the worker's exposed `exchange_wait`.
+    OverlapHiddenPct = 2,
 }
 
-pub const GAUGE_COUNT: usize = 2;
+pub const GAUGE_COUNT: usize = 3;
 
 impl Gauge {
-    pub const ALL: [Gauge; GAUGE_COUNT] = [Gauge::QueueDepth, Gauge::FakeBuffDepth];
+    pub const ALL: [Gauge; GAUGE_COUNT] =
+        [Gauge::QueueDepth, Gauge::FakeBuffDepth, Gauge::OverlapHiddenPct];
 
     pub fn name(self) -> &'static str {
         match self {
             Gauge::QueueDepth => "pipeline_queue_depth",
             Gauge::FakeBuffDepth => "fake_buff_depth",
+            Gauge::OverlapHiddenPct => "overlap_hidden_pct",
         }
     }
 }

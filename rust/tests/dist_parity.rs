@@ -298,6 +298,45 @@ fn ring_topology_matches_tree_within_summation_tolerance() {
     assert!(drift < 1e-2, "tree/ring drift {drift} beyond summation tolerance");
 }
 
+/// The overlap contract (see `dist::overlap`): the bucketized,
+/// communicator-threaded exchange is BITWISE identical to the serial
+/// monolithic barrier — the all-reduce combines every tensor independently
+/// in a fixed order, so splitting the list into bucket rounds cannot change
+/// any mean, and the cursor gate keeps every replica's round structure in
+/// lockstep.  Both topologies, loss curves included.
+#[test]
+fn overlapped_exchange_matches_serial_bitwise() {
+    for topo in [Topology::Tree, Topology::Ring] {
+        let mut cfg = dist_cfg("refmlp", 4, 2, DistMode::Sync);
+        cfg.dist.topology = topo;
+        cfg.dist.overlap = Some(false);
+        let serial = train_dist(&cfg).unwrap();
+        cfg.dist.overlap = Some(true);
+        let overlapped = train_dist(&cfg).unwrap();
+        assert_eq!(
+            serial.final_g.l2_distance(&overlapped.final_g),
+            0.0,
+            "{topo:?}: overlapped sync diverged from the serial oracle"
+        );
+        for (a, b) in serial
+            .train
+            .g_loss
+            .points
+            .iter()
+            .chain(&serial.train.d_loss.points)
+            .zip(overlapped.train.g_loss.points.iter().chain(&overlapped.train.d_loss.points))
+        {
+            assert_eq!(a.step, b.step, "{topo:?}: loss series shape");
+            assert_eq!(
+                a.value.to_bits(),
+                b.value.to_bits(),
+                "{topo:?}: mean loss diverged at step {}",
+                a.step
+            );
+        }
+    }
+}
+
 /// The ScalingManager drives the real 4-replica run: the lr recorded at
 /// every applied step equals the bound manager's schedule, warmup included.
 #[test]

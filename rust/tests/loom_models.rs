@@ -4,7 +4,10 @@
 //! mode's bounded-staleness gate (`dist::staleness::Versioned`), and the
 //! PR-7 recycling exchanges (`coordinator::buffers::{ImgBuff,
 //! SnapshotCell}`: free-list conservation, close-unblocks, and the
-//! double-buffered publish that must never refill a reader-pinned `Arc`).
+//! double-buffered publish that must never refill a reader-pinned `Arc`),
+//! and the PR-10 overlap lane's bucket hand-off
+//! (`dist::overlap::OverlapLane`: no lost or reordered buckets across
+//! rounds, and mid-step teardown that poisons instead of hanging).
 //!
 //! Everything here runs ONLY under `RUSTFLAGS="--cfg loom"` (the CI loom
 //! lane, which `cargo add`s loom first — the offline vendor set does not
@@ -33,10 +36,11 @@ use std::sync::Arc;
 use loom::sync::atomic::{AtomicUsize, Ordering};
 
 use paragan::coordinator::buffers::{ImgBuff, SnapshotCell, TaggedBatch};
+use paragan::dist::overlap::OverlapLane;
 use paragan::dist::staleness::Versioned;
 use paragan::dist::{Exchange, InProcAllReduce, Topology};
 use paragan::exec::GemmPool;
-use paragan::runtime::HostTensor;
+use paragan::runtime::{GradStream, HostTensor, ParamStore};
 use paragan::telemetry::{Event, Ring};
 
 /// Run `f` over every interleaving with a small preemption bound (loom's
@@ -340,6 +344,92 @@ fn telemetry_ring_overflow_drops_without_unpublishing() {
         t.join().unwrap();
         assert_eq!(r.len(), 1);
         assert_eq!(r.dropped(), 1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// dist::overlap::OverlapLane: the bucket hand-off (PR-10)
+// ---------------------------------------------------------------------------
+
+/// Two tiny gradient tensors with replica/step-stamped values.
+fn grad_pair(r: usize, step: u32) -> ParamStore {
+    let mut g = ParamStore::new();
+    g.insert(HostTensor::new("a", vec![1], vec![r as f32 + step as f32]));
+    g.insert(HostTensor::new("b", vec![2], vec![1.0 + r as f32, 2.0]));
+    g
+}
+
+/// Stream the pair in the backend's (reverse) completion order.
+fn stream_pair(lane: &mut OverlapLane, g: &ParamStore) {
+    let b = g.by_index(1).data.clone();
+    lane.grad_ready(1, &b);
+    let a = g.by_index(0).data.clone();
+    lane.grad_ready(0, &a);
+}
+
+#[test]
+fn overlap_lane_buckets_stream_without_loss_or_reorder() {
+    model(|| {
+        // 2 replicas, each with its own communicator thread (4 threads
+        // total, loom's budget) and a forced 2-bucket plan over 3
+        // positions (two tensors + the loss scalar).  Round 0 is the
+        // recording/monolithic step, round 1 streams through the
+        // communicators — REUSING the warmup's deposit buffers, which is
+        // where lost-wakeup/lost-bucket bugs would live.  In every
+        // interleaving no bucket may be lost, combined out of order, or
+        // double-applied: the means say so.
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let worker = |ex: Arc<InProcAllReduce>, r: usize| {
+            let mut lane = OverlapLane::new(ex, r);
+            lane.force_plan(vec![0..1, 1..3]);
+            for step in 0..2u32 {
+                let mut g = grad_pair(r, step);
+                stream_pair(&mut lane, &g);
+                let loss = lane.finish(&mut g, (r as u32 + step) as f64).unwrap();
+                assert_eq!(loss, 0.5 + step as f64, "loss mean, step {step}");
+                assert_eq!(g.by_index(0).data, vec![0.5 + step as f32]);
+                assert_eq!(g.by_index(1).data, vec![1.5, 2.0]);
+            }
+            // Clean drop: counters are pristine, the join must return.
+        };
+        let ex1 = ex.clone();
+        let t = loom::thread::spawn(move || worker(ex1, 1));
+        worker(ex, 0);
+        t.join().unwrap();
+    });
+}
+
+#[test]
+fn overlap_lane_drop_mid_step_poisons_not_hangs() {
+    model(|| {
+        let ex = InProcAllReduce::new(2, Topology::Tree);
+        let ex1 = ex.clone();
+        let t = loom::thread::spawn(move || {
+            let mut lane = OverlapLane::new(ex1.clone(), 1);
+            lane.force_plan(vec![0..1, 1..3]);
+            let mut g = grad_pair(1, 0);
+            stream_pair(&mut lane, &g);
+            lane.finish(&mut g, 1.0).unwrap();
+            // The next step dies after ONE bucket's deposits.  The lane
+            // drop must join its communicator in EVERY interleaving —
+            // idle, mid-round, or not yet woken — and the trainer's
+            // abort-on-drop guard (mimicked here) unblocks the peer.
+            let b = g.by_index(1).data.clone();
+            lane.grad_ready(1, &b);
+            drop(lane);
+            ex1.abort();
+        });
+        let mut lane = OverlapLane::new(ex.clone(), 0);
+        lane.force_plan(vec![0..1, 1..3]);
+        let mut g = grad_pair(0, 0);
+        stream_pair(&mut lane, &g);
+        lane.finish(&mut g, 0.0).unwrap();
+        // Replica 0 streams its FULL step; with the peer gone mid-step the
+        // second bucket round can never complete, so finish must surface
+        // the poisoned barrier as Err — never hang, never Ok.
+        stream_pair(&mut lane, &g);
+        assert!(lane.finish(&mut g, 0.0).is_err(), "poisoned exchange must surface");
+        t.join().unwrap();
     });
 }
 

@@ -9,6 +9,10 @@
 //! * the grad-split path (`run_step_grads_into` + `apply_step`);
 //! * the 2-replica sync path (grads → `all_reduce_mean_into` → apply on two
 //!   real threads);
+//! * the OVERLAPPED 2-replica sync path (PR-10): gradients streamed into
+//!   `dist::overlap::OverlapLane` during backward, bucket rounds exchanged
+//!   on per-replica communicator threads — four threads total, all of them
+//!   inside the counted window;
 //! * the async G/D exchange (recycling `ImgBuff` + double-buffered
 //!   `SnapshotCell`) on two real threads (PR-7);
 //! * the MD-GAN lane: bounded task/return queues + snapshot publish +
@@ -35,11 +39,13 @@ use paragan::coordinator::trainer::{d_step_inputs_into, upsert_z};
 use paragan::pipeline::Batch;
 // Locks through the shim (the repo-wide bare-sync lint convention).
 use paragan::util::sync::Mutex;
+use paragan::dist::overlap::OverlapLane;
 use paragan::dist::{Exchange, InProcAllReduce, Topology};
 use paragan::layout::plan::{BufReq, MemoryPlan};
 use paragan::runtime::{
-    apply_step, refgen, run_inference_into, run_step_grads_into, run_step_into, ArtifactSpec,
-    HostTensor, Manifest, ParamStore, Runtime, StepOutputs, Workspace,
+    apply_step, refgen, run_inference_into, run_step_grads_into, run_step_grads_streamed_into,
+    run_step_into, ArtifactSpec, HostTensor, Manifest, ParamStore, Runtime, StepOutputs,
+    Workspace,
 };
 use paragan::telemetry;
 use paragan::util::rng::Rng;
@@ -495,6 +501,175 @@ fn two_replica_sync_path_is_allocation_free() {
     assert_eq!(
         allocs, 0,
         "2-replica sync steady state allocated {allocs} times (telemetry on)"
+    );
+}
+
+/// The OVERLAPPED 2-replica sync path (PR-10): each replica thread streams
+/// its gradients into an `OverlapLane` during backward and a per-replica
+/// communicator thread runs the bucket rounds — so the counted window spans
+/// FOUR threads.  Warmup covers the recording step (monolithic exchange,
+/// plan build, communicator spawn + telemetry lane registration) and one
+/// streaming step (deposit-buffer and exchange mean-buffer high-water marks
+/// for every bucket layout); after that, deposits, bucket rounds, waits and
+/// copy-backs must allocate NOTHING on any thread.
+#[test]
+fn two_replica_overlapped_sync_path_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
+    telemetry::set_enabled(Some(true));
+    let n = 2usize;
+    let (dir, _) = fixture("dcgan32", 4, "osync2");
+    let ex_d = InProcAllReduce::new(n, Topology::Tree);
+    let ex_g = InProcAllReduce::new(n, Topology::Tree);
+    let warm = Barrier::new(n + 1);
+    let start = Barrier::new(n + 1);
+    let done = Barrier::new(n + 1);
+
+    std::thread::scope(|s| {
+        for r in 0..n {
+            let dir = dir.clone();
+            let (ex_d, ex_g) = (ex_d.clone(), ex_g.clone());
+            let (warm, start, done) = (&warm, &start, &done);
+            s.spawn(move || {
+                let _bind = paragan::runtime::bind_replica(r);
+                let m = Manifest::load(&dir).unwrap();
+                let model = m.model("dcgan32").unwrap();
+                let rt = Runtime::new(&dir).unwrap();
+                let d_spec = model.artifact("d_step_adam_fp32").unwrap().clone();
+                let g_spec = model.artifact("g_step_adam_fp32").unwrap().clone();
+                let mut rng = Rng::new(0xD158);
+                let mut d_params = ParamStore::init(&model.params_d, &mut rng);
+                let mut d_slots = ParamStore::init_slots(
+                    &model.params_d,
+                    &d_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut g_params = ParamStore::init(&model.params_g, &mut rng);
+                let mut g_slots = ParamStore::init_slots(
+                    &model.params_g,
+                    &g_params,
+                    &model.optimizers["adam"].slot_init,
+                );
+                let mut shard_rng = Rng::replica_stream(10, r as u64);
+                let batch = model.batch;
+                let mut shape = vec![batch];
+                shape.extend_from_slice(&model.img_shape);
+                let numel: usize = shape.iter().product();
+                let mut d_in = BTreeMap::new();
+                d_in.insert(
+                    "real".to_string(),
+                    HostTensor::new("real", shape.clone(), vec![0f32; numel]),
+                );
+                d_in.insert(
+                    "fake".to_string(),
+                    HostTensor::new("fake", shape, vec![0f32; numel]),
+                );
+                let mut g_in = BTreeMap::new();
+                let mut d_grads = ParamStore::new();
+                let mut g_grads = ParamStore::new();
+                let mut d_outs = StepOutputs::new();
+                let mut g_outs = StepOutputs::new();
+                let mut d_lane = OverlapLane::new(ex_d, r);
+                let mut g_lane = OverlapLane::new(ex_g, r);
+
+                let mut one_step = |step: u64,
+                                    d_params: &mut ParamStore,
+                                    d_slots: &mut Vec<ParamStore>,
+                                    g_params: &mut ParamStore,
+                                    g_slots: &mut Vec<ParamStore>,
+                                    d_in: &mut BTreeMap<String, HostTensor>,
+                                    g_in: &mut BTreeMap<String, HostTensor>,
+                                    d_grads: &mut ParamStore,
+                                    g_grads: &mut ParamStore,
+                                    d_outs: &mut StepOutputs,
+                                    g_outs: &mut StepOutputs,
+                                    d_lane: &mut OverlapLane,
+                                    g_lane: &mut OverlapLane,
+                                    shard_rng: &mut Rng| {
+                    shard_rng.fill_gaussian(&mut d_in.get_mut("real").unwrap().data, 0.0, 0.5);
+                    shard_rng.fill_gaussian(&mut d_in.get_mut("fake").unwrap().data, 0.0, 0.5);
+                    run_step_grads_streamed_into(
+                        &rt, &d_spec, d_params, d_slots, None, d_in, d_grads, d_outs, d_lane,
+                    )
+                    .unwrap();
+                    d_lane.finish(d_grads, d_outs["loss"].data[0] as f64).unwrap();
+                    apply_step(&rt, &d_spec, step as f32, 2e-4, d_params, d_slots, d_grads)
+                        .unwrap();
+                    upsert_z(g_in, shard_rng, batch, model.z_dim);
+                    run_step_grads_streamed_into(
+                        &rt,
+                        &g_spec,
+                        g_params,
+                        g_slots,
+                        Some(d_params),
+                        g_in,
+                        g_grads,
+                        g_outs,
+                        g_lane,
+                    )
+                    .unwrap();
+                    g_lane.finish(g_grads, g_outs["loss"].data[0] as f64).unwrap();
+                    apply_step(&rt, &g_spec, step as f32, 2e-4, g_params, g_slots, g_grads)
+                        .unwrap();
+                };
+                for s in 1..=2u64 {
+                    one_step(
+                        s,
+                        &mut d_params,
+                        &mut d_slots,
+                        &mut g_params,
+                        &mut g_slots,
+                        &mut d_in,
+                        &mut g_in,
+                        &mut d_grads,
+                        &mut g_grads,
+                        &mut d_outs,
+                        &mut g_outs,
+                        &mut d_lane,
+                        &mut g_lane,
+                        &mut shard_rng,
+                    );
+                }
+                warm.wait();
+                start.wait();
+                for s in 3..=5u64 {
+                    one_step(
+                        s,
+                        &mut d_params,
+                        &mut d_slots,
+                        &mut g_params,
+                        &mut g_slots,
+                        &mut d_in,
+                        &mut g_in,
+                        &mut d_grads,
+                        &mut g_grads,
+                        &mut d_outs,
+                        &mut g_outs,
+                        &mut d_lane,
+                        &mut g_lane,
+                        &mut shard_rng,
+                    );
+                }
+                done.wait();
+                assert!(d_params.all_finite() && g_params.all_finite());
+            });
+        }
+        warm.wait();
+        let ev_before = telemetry::events_recorded();
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        start.wait();
+        done.wait();
+        COUNTING.store(false, Ordering::SeqCst);
+        assert!(
+            telemetry::events_recorded() > ev_before,
+            "overlapped sync measured steps recorded no telemetry spans"
+        );
+    });
+    telemetry::set_enabled(None);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        allocs, 0,
+        "overlapped 2-replica sync steady state allocated {allocs} times (telemetry on)"
     );
 }
 

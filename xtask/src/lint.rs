@@ -18,9 +18,10 @@
 //!   tears the run down, so its allocations never recur in steady state.
 //! * **tile-const** — tile/blocking and lane-selection constants (`MR`,
 //!   `NR`, `MC`, `NC`, `KC`, `KU` (K-chain depth), `LANES` (vector width),
-//!   `TILE[S]`, `BLOCK[S]` name segments) may only be declared in
-//!   `layout/plan.rs`: kernels receive sizes from the layout planner, they
-//!   never compute them (ROADMAP PR-3/PR-5/PR-8 decisions).
+//!   `TILE[S]`, `BLOCK[S]`, `BUCKET[S]` (gradient-exchange bucket sizing)
+//!   name segments) may only be declared in `layout/plan.rs`: kernels and
+//!   exchange lanes receive sizes from the layout planner, they never
+//!   compute them (ROADMAP PR-3/PR-5/PR-8/PR-10 decisions).
 //! * **kernel-purity** — kernel / workspace / planner modules contain no
 //!   timing or thread-management calls (`Instant::now`, `SystemTime::now`,
 //!   `thread::spawn`, `thread::sleep`): kernels compute, the exec layer
@@ -59,8 +60,10 @@ const HOT_NAMES: [&str; 4] =
     ["micro_tile", "micro_tile_fast", "micro_tile_fast_body", "micro_tile_fast_x86"];
 const ALLOC_TOKENS: [&str; 6] =
     ["vec!", "Vec::with_capacity", ".to_vec()", ".to_owned()", "Box::new(", ".clone("];
-const TILE_SEGMENTS: [&str; 11] =
-    ["MR", "NR", "MC", "NC", "KC", "KU", "LANES", "TILE", "TILES", "BLOCK", "BLOCKS"];
+const TILE_SEGMENTS: [&str; 13] = [
+    "MR", "NR", "MC", "NC", "KC", "KU", "LANES", "TILE", "TILES", "BLOCK", "BLOCKS", "BUCKET",
+    "BUCKETS",
+];
 /// The one file allowed to define tile/blocking constants.
 const TILE_HOME: &str = "layout/plan.rs";
 const PURITY_FILES: [&str; 4] =
@@ -560,6 +563,13 @@ mod tests {
         assert!(rules_of("layout/plan.rs", "pub const CPU_SIMD_KU: usize = 2;\n").is_empty());
         // "KURTOSIS_WINDOW" has no KU *segment* — substring matches stay out.
         assert!(rules_of("metrics/x.rs", "const KURTOSIS_WINDOW: usize = 9;\n").is_empty());
+        // Gradient-exchange bucket sizing is blocking policy too (PR-10):
+        // only the planner declares it; exchange lanes consume the plan.
+        let bucket = "const EXCHANGE_BUCKET_BYTES: usize = 1 << 16;\n";
+        assert_eq!(rules_of("dist/overlap.rs", bucket), vec!["tile-const"]);
+        assert!(rules_of("layout/plan.rs", bucket).is_empty());
+        // "BUCKETING_NOTE" has no BUCKET *segment* — substring stays out.
+        assert!(rules_of("dist/x.rs", "const BUCKETING_LOG: usize = 1;\n").is_empty());
     }
 
     #[test]
